@@ -1,0 +1,100 @@
+//! Inference-mode scheduling (§9 Discussion): latency-sensitive MoE
+//! serving, where per-request scheduling time matters more than steady
+//! state. Simulates a bursty request stream (variable batch sizes, shifting
+//! expert popularity) and compares three per-batch solvers on the same
+//! placement:
+//!
+//! * warm LP  — the training-path scheduler (carries basis state),
+//! * cold LP  — a fresh simplex per batch (no cross-request state),
+//! * max-flow — the paper's proposed LP replacement (stateless, integral).
+//!
+//! Run: `cargo run --release --example inference_router [-- --requests 200]`
+
+use micromoe::bench_harness::{fmt_time, Table};
+use micromoe::cli::Args;
+use micromoe::placement::cayley::symmetric_placement;
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::flow::flow_schedule;
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use micromoe::stats::Summary;
+use micromoe::topology::Topology;
+
+fn main() {
+    let args = Args::from_env();
+    let requests = args.usize_or("requests", 200);
+    let topo = Topology::new(8, 4, 2, 8);
+    let e = 32;
+    let placement = symmetric_placement(&topo, e);
+
+    // bursty request stream: batch sizes 16..2048 tokens/GPU, popularity
+    // ranking rotates every ~25 requests (session locality)
+    let mut rng = Rng::new(17);
+    let mut rank: Vec<usize> = (0..e).collect();
+    let zipf = Zipf::new(e, 1.1);
+    let mut batches = Vec::with_capacity(requests);
+    for r in 0..requests {
+        if r % 25 == 0 {
+            rng.shuffle(&mut rank);
+        }
+        let per_gpu = 16 << rng.below(8); // 16..2048
+        let mut lm = LoadMatrix::zeros(e, 8);
+        for g in 0..8 {
+            for _ in 0..per_gpu {
+                lm.add(rank[zipf.sample(&mut rng)], g, 1);
+            }
+        }
+        batches.push(lm);
+    }
+
+    let mut warm = MicroEpScheduler::new(
+        placement.clone(),
+        Some(topo.clone()),
+        SchedulerOptions::default(),
+    );
+    let mut cold_opts = SchedulerOptions::default();
+    cold_opts.warm_start = false;
+    let mut cold = MicroEpScheduler::new(placement.clone(), Some(topo), cold_opts);
+
+    let mut t_warm = Vec::new();
+    let mut t_cold = Vec::new();
+    let mut t_flow = Vec::new();
+    let mut agree = 0usize;
+    for lm in &batches {
+        let t0 = std::time::Instant::now();
+        let sw = warm.schedule(lm);
+        t_warm.push(t0.elapsed().as_secs_f64());
+
+        let t0 = std::time::Instant::now();
+        let _sc = cold.schedule(lm);
+        t_cold.push(t0.elapsed().as_secs_f64());
+
+        let t0 = std::time::Instant::now();
+        let sf = flow_schedule(&placement, lm);
+        t_flow.push(t0.elapsed().as_secs_f64());
+
+        if (sw.stats.lp_objective.ceil() as i64 - sf.max_load as i64).abs() <= 1 {
+            agree += 1;
+        }
+    }
+
+    let mut table = Table::new(
+        &format!("inference scheduling latency over {requests} bursty requests"),
+        &["solver", "p50", "p95", "max"],
+    );
+    for (name, ts) in [("warm LP", &t_warm), ("cold LP", &t_cold), ("max-flow", &t_flow)] {
+        let s = Summary::of(ts);
+        table.row(vec![
+            name.to_string(),
+            fmt_time(s.p50),
+            fmt_time(s.p95),
+            fmt_time(s.max),
+        ]);
+    }
+    table.print();
+    println!(
+        "\noptima agreement (flow == ⌈LP⌉): {agree}/{requests}\n\
+         §9: for inference, tail latency matters — compare p95/max, not p50; \
+         the stateless flow solver has no warm-state dependence on the \
+         previous request's shape."
+    );
+}

@@ -1,0 +1,6 @@
+"""MicroMoE build-time compile path (Layer 1 kernels + Layer 2 model + AOT).
+
+Nothing in this package runs on the request path: ``aot.py`` lowers the jax
+computations once to HLO text under ``artifacts/`` and the rust coordinator
+loads them via PJRT.
+"""

@@ -1,0 +1,165 @@
+"""AOT lowering: jax (L2 + L1) -> HLO text artifacts for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage (from ``python/``):
+    python -m compile.aot --out ../artifacts [--preset e2e-10m]
+
+Emits one ``<name>.hlo.txt`` per entry point plus ``manifest.json`` recording
+shapes/dtypes and the model config, which the rust side parses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import expert_ffn, topk_gate
+
+
+PRESETS = {
+    # ~9.7M params: the default end-to-end training config (a few hundred
+    # steps on CPU PJRT in minutes).
+    "e2e-10m": M.ModelConfig(),
+    # ~104M params: proves the packing/AOT path scales to the paper-prompt
+    # size; the e2e example runs a handful of steps of it.
+    "e2e-100m": M.ModelConfig(
+        vocab=512, seq=128, hidden=640, heads=10, ffn=1280, layers=8,
+        experts=16, topk=2, micro_batch=2,
+    ),
+    # tiny smoke config for tests
+    "smoke": M.ModelConfig(
+        vocab=64, seq=16, hidden=32, heads=4, ffn=64, layers=2, experts=4,
+        topk=2, micro_batch=2,
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": str(dtype)}
+
+
+def emit(out_dir: str, name: str, fn, in_specs, in_names, out_names) -> dict:
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    out_avals = lowered.out_info
+    flat_out, _ = jax.tree_util.tree_flatten(out_avals)
+    inputs = [
+        _io_entry(n, s.shape, jnp.dtype(s.dtype).name) for n, s in zip(in_names, in_specs)
+    ]
+    outputs = [
+        _io_entry(n, o.shape, jnp.dtype(o.dtype).name) for n, o in zip(out_names, flat_out)
+    ]
+    print(f"  {name}: {len(text)} chars, {len(inputs)} in -> {len(outputs)} out")
+    return {"name": name, "file": f"{name}.hlo.txt", "inputs": inputs, "outputs": outputs}
+
+
+def emit_all(out_dir: str, preset: str) -> None:
+    cfg = PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    p = M.num_params(cfg)
+    b, s = cfg.micro_batch, cfg.seq
+    l, e, c, h, f = cfg.layers, cfg.experts, cfg.capacity, cfg.hidden, cfg.ffn
+    t = cfg.tokens_per_mb
+    arts = []
+
+    print(f"preset={preset}: P={p} params, B={b} S={s} L={l} E={e} C={c} H={h} F={f}")
+
+    # --- model entry points (Layer 2) ---
+    arts.append(emit(
+        out_dir, "init_params",
+        lambda seed: (M.init_params(seed, cfg),),
+        [_spec((), jnp.int32)], ["seed"], ["params"],
+    ))
+    arts.append(emit(
+        out_dir, "train_step",
+        lambda fp, m, v, st, tok: M.train_step(fp, m, v, st, tok, cfg),
+        [_spec((p,)), _spec((p,)), _spec((p,)), _spec(()), _spec((b, s + 1), jnp.int32)],
+        ["params", "m", "v", "step", "tokens"],
+        ["params", "m", "v", "step", "loss", "counts"],
+    ))
+    arts.append(emit(
+        out_dir, "eval_loss",
+        lambda fp, tok: M.eval_loss(fp, tok, cfg),
+        [_spec((p,)), _spec((b, s + 1), jnp.int32)],
+        ["params", "tokens"], ["loss", "counts"],
+    ))
+
+    # --- standalone kernel artifacts (Layer 1) ---
+    arts.append(emit(
+        out_dir, "gate",
+        lambda logits: topk_gate(logits, k=cfg.topk),
+        [_spec((t, e))], ["logits"], ["weights", "indices"],
+    ))
+    arts.append(emit(
+        out_dir, "expert_ffn",
+        lambda x, w1, w2: (expert_ffn(x, w1, w2),),
+        [_spec((e, c, h)), _spec((e, h, f)), _spec((e, f, h))],
+        ["x", "w1", "w2"], ["y"],
+    ))
+    # calibration shapes for the cluster simulator's compute model: same
+    # kernel, three capacities, so the rust side can fit t_ffn = a + b*tokens
+    for tag, cap in [("small", 64), ("large", 512)]:
+        arts.append(emit(
+            out_dir, f"expert_ffn_{tag}",
+            lambda x, w1, w2: (expert_ffn(x, w1, w2),),
+            [_spec((e, cap, h)), _spec((e, h, f)), _spec((e, f, h))],
+            ["x", "w1", "w2"], ["y"],
+        ))
+
+    # --- one-layer MoE block forward (integration test target) ---
+    arts.append(emit(
+        out_dir, "moe_block",
+        lambda x, wg, w1, w2: M.moe_block_fwd(x, wg, w1, w2, cfg),
+        [_spec((t, h)), _spec((h, e)), _spec((e, h, f)), _spec((e, f, h))],
+        ["x", "wg", "w1", "w2"], ["y", "counts"],
+    ))
+
+    manifest = {
+        "preset": preset,
+        "config": dataclasses.asdict(cfg),
+        "num_params": p,
+        "capacity": c,
+        "artifacts": arts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {len(arts)} artifacts + manifest.json to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="e2e-10m", choices=sorted(PRESETS))
+    args = ap.parse_args()
+    emit_all(args.out, args.preset)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for MicroMoE.
+
+All kernels are authored with ``interpret=True`` so they lower to plain HLO
+ops executable on the CPU PJRT client (real-TPU lowering emits Mosaic
+custom-calls the CPU plugin cannot run). Tiling is still chosen for TPU
+realism: token tiles sized for the MXU (multiples of 128 where shapes allow)
+and per-step VMEM footprints documented in DESIGN.md §Perf.
+"""
+
+from .moe_ffn import expert_ffn, expert_ffn_tiled_f
+from .topk_gate import topk_gate
+
+__all__ = ["expert_ffn", "expert_ffn_tiled_f", "topk_gate"]

@@ -1,0 +1,229 @@
+"""Grouped expert-FFN Pallas kernel — the MoE compute hot-spot.
+
+The capacity layout mirrors what the rust coordinator dispatches: tokens are
+grouped per expert into fixed-size slots ``x[E, C, H]`` (C = per-expert
+capacity in this micro-batch; unused slots are zero-padded and masked by the
+combine weights downstream). Each expert ``e`` applies a two-layer FFN:
+
+    out[e] = gelu(x[e] @ w1[e]) @ w2[e]
+
+Two variants are provided:
+
+* :func:`expert_ffn` — grid ``(E, C // tm)``; one grid step holds a
+  ``(tm, H)`` token tile plus expert ``e``'s full ``(H, F)`` and ``(F, H)``
+  weight slabs. This is the VMEM-greedy schedule: footprint per step is
+  ``tm*H + H*F + F*H + tm*F + tm*H`` elements. For the e2e configs used here
+  (H<=512, F<=2048, tm<=128, f32) that is < 4 MiB, comfortably inside a
+  TPU core's ~16 MiB VMEM, and it maximizes MXU-feeding contraction sizes.
+
+* :func:`expert_ffn_tiled_f` — grid ``(E, C // tm, F // tf)``; additionally
+  tiles the FFN-hidden dimension with an output accumulator revisited across
+  the ``tf`` axis. This is the schedule for large F where full weight slabs
+  exceed VMEM; it trades one extra pass over ``out`` for an ``F/tf``-fold
+  smaller weight slab, the Pallas analogue of the threadblock K-loop a CUDA
+  kernel would use (DESIGN.md §Hardware-Adaptation).
+
+Hardware adaptation note: the paper's hot spot runs on H100s via cuBLAS
+grouped GEMM. On TPU the same insight ("FFN time is proportional to the
+number of tokens, so balance tokens") holds as long as the kernel's runtime
+is linear in the number of occupied token tiles — both schedules satisfy
+that, since the grid is linear in C.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One (expert, token-tile) step: full FFN for a tile of tokens.
+
+    Block shapes carry a leading singleton expert axis; index it away so the
+    contractions are plain 2-D matmuls (what the MXU consumes).
+    """
+    x = x_ref[0]  # (tm, H)
+    h = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32)
+    h = jax.nn.gelu(h)
+    o_ref[0] = jnp.dot(h, w2_ref[0], preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _pick_tile(c: int, want: int = 128) -> int:
+    """Largest divisor of ``c`` that is <= ``want`` (token-tile size)."""
+    tm = min(want, c)
+    while c % tm != 0:
+        tm -= 1
+    return max(tm, 1)
+
+
+def _ffn_fwd_impl(tm, x, w1, w2):
+    e, c, h = x.shape
+    f = w1.shape[2]
+    assert w1.shape == (e, h, f) and w2.shape == (e, f, h)
+    assert c % tm == 0, f"tile_m={tm} must divide capacity C={c}"
+
+    grid = (e, c // tm)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tm, h), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((1, h, f), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, f, h), lambda ei, ti: (ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tm, h), lambda ei, ti: (ei, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, h), x.dtype),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def _ffn_bwd_kernel(x_ref, w1_ref, w2_ref, dy_ref, dx_ref, dw1_ref, dw2_ref):
+    """Backward step for one (expert, token-tile).
+
+    Rematerializes the forward activations (h, a) in-tile — the standard
+    memory/compute trade for MoE FFN backward — then produces dx for the
+    tile and *accumulates* dw1/dw2 across token tiles (the weight-grad
+    blocks are revisited for every ti with the same index, so init on
+    ti == 0 and add afterwards).
+    """
+    ti = pl.program_id(1)
+    x = x_ref[0]          # (tm, H)
+    w1 = w1_ref[0]        # (H, F)
+    w2 = w2_ref[0]        # (F, H)
+    dy = dy_ref[0]        # (tm, H)
+
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32)
+    a, gelu_vjp = jax.vjp(jax.nn.gelu, h)
+    da = jnp.dot(dy, w2.T, preferred_element_type=jnp.float32)
+    dh = gelu_vjp(da)[0]
+
+    dx_ref[0] = jnp.dot(dh, w1.T, preferred_element_type=jnp.float32).astype(dx_ref.dtype)
+    dw1_t = jnp.dot(x.T, dh, preferred_element_type=jnp.float32)
+    dw2_t = jnp.dot(a.T, dy, preferred_element_type=jnp.float32)
+
+    @pl.when(ti == 0)
+    def _init():
+        dw1_ref[0] = dw1_t.astype(dw1_ref.dtype)
+        dw2_ref[0] = dw2_t.astype(dw2_ref.dtype)
+
+    @pl.when(ti != 0)
+    def _acc():
+        dw1_ref[0] = (dw1_ref[0] + dw1_t).astype(dw1_ref.dtype)
+        dw2_ref[0] = (dw2_ref[0] + dw2_t).astype(dw2_ref.dtype)
+
+
+def _ffn_bwd_impl(tm, x, w1, w2, dy):
+    e, c, h = x.shape
+    f = w1.shape[2]
+    grid = (e, c // tm)
+    return pl.pallas_call(
+        _ffn_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tm, h), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((1, h, f), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, f, h), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, tm, h), lambda ei, ti: (ei, ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tm, h), lambda ei, ti: (ei, ti, 0)),
+            pl.BlockSpec((1, h, f), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, f, h), lambda ei, ti: (ei, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, c, h), x.dtype),
+            jax.ShapeDtypeStruct((e, h, f), w1.dtype),
+            jax.ShapeDtypeStruct((e, f, h), w2.dtype),
+        ],
+        interpret=True,
+    )(x, w1, w2, dy)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ffn_vjp(tm, x, w1, w2):
+    return _ffn_fwd_impl(tm, x, w1, w2)
+
+
+def _ffn_vjp_fwd(tm, x, w1, w2):
+    return _ffn_fwd_impl(tm, x, w1, w2), (x, w1, w2)
+
+
+def _ffn_vjp_bwd(tm, res, dy):
+    x, w1, w2 = res
+    return _ffn_bwd_impl(tm, x, w1, w2, dy)
+
+
+_ffn_vjp.defvjp(_ffn_vjp_fwd, _ffn_vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def expert_ffn(x, w1, w2, tile_m: int | None = None):
+    """Grouped FFN over capacity layout (differentiable).
+
+    Args:
+      x:  (E, C, H) tokens grouped per expert (zero-padded slots allowed).
+      w1: (E, H, F) first projection per expert.
+      w2: (E, F, H) second projection per expert.
+      tile_m: token-tile size; must divide C. Default: largest divisor <=128.
+
+    Returns:
+      (E, C, H) FFN outputs. The backward pass is itself a Pallas kernel
+      (:func:`_ffn_bwd_kernel`) with in-tile activation rematerialization.
+    """
+    c = x.shape[1]
+    tm = tile_m or _pick_tile(c)
+    return _ffn_vjp(tm, x, w1, w2)
+
+
+def _ffn_kernel_tiled_f(x_ref, w1_ref, w2_ref, o_ref, *, nf: int):
+    """F-tiled step: accumulate partial second-projection products.
+
+    Grid order is (e, token-tile, f-tile) with the f-tile innermost, so the
+    output block stays resident while partial products accumulate — the
+    double-buffer-friendly ordering on real hardware.
+    """
+    fi = pl.program_id(2)
+    x = x_ref[0]
+    h = jnp.dot(x, w1_ref[0], preferred_element_type=jnp.float32)
+    h = jax.nn.gelu(h)
+    part = jnp.dot(h, w2_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(fi == 0)
+    def _init():
+        o_ref[0] = part.astype(o_ref.dtype)
+
+    @pl.when(fi != 0)
+    def _acc():
+        o_ref[0] = (o_ref[0] + part).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_f"))
+def expert_ffn_tiled_f(x, w1, w2, tile_m: int | None = None, tile_f: int | None = None):
+    """Grouped FFN with the FFN-hidden dimension tiled (large-F schedule).
+
+    Same contract as :func:`expert_ffn`; additionally ``tile_f`` must divide
+    F. GeLU is applied per F-tile, which is exact because GeLU acts
+    elementwise on ``x @ w1`` *columns* and each column lives in exactly one
+    F-tile.
+    """
+    e, c, h = x.shape
+    f = w1.shape[2]
+    tm = tile_m or _pick_tile(c)
+    tf = tile_f or _pick_tile(f, want=256)
+    assert c % tm == 0 and f % tf == 0
+
+    grid = (e, c // tm, f // tf)
+    kernel = functools.partial(_ffn_kernel_tiled_f, nf=f // tf)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tm, h), lambda ei, ti, fi: (ei, ti, 0)),
+            pl.BlockSpec((1, h, tf), lambda ei, ti, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, tf, h), lambda ei, ti, fi: (ei, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tm, h), lambda ei, ti, fi: (ei, ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, h), x.dtype),
+        interpret=True,
+    )(x, w1, w2)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These are deliberately written in the most obvious way possible — no tiling,
+no tricks — so that a mismatch against the kernels localizes the bug to the
+kernel schedule, not the math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, w2):
+    """(E, C, H), (E, H, F), (E, F, H) -> (E, C, H)."""
+    h = jnp.einsum("ech,ehf->ecf", x, w1)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efh->ech", h, w2).astype(x.dtype)
+
+
+def topk_gate_ref(logits, k: int = 2):
+    """(T, E) -> (weights (T, K), indices (T, K) int32), renormalized."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w.astype(logits.dtype), idx.astype(jnp.int32)

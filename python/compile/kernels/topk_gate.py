@@ -1,0 +1,87 @@
+"""Top-K gating Pallas kernel.
+
+Computes, for a tile of tokens, the softmax router probabilities and the
+top-K expert indices/weights. K is a compile-time constant (the paper and
+all Table-2 configs use K=2, but the kernel supports any K < E via iterated
+masked argmax — the TPU-friendly formulation, since sorting networks map
+poorly onto the VPU while max-reductions are native).
+
+Layout: logits (T, E) -> (weights (T, K), indices (T, K) int32).
+Weights are the softmax probabilities of the selected experts renormalized
+to sum to 1 across K (Switch/Mixtral convention).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30  # python float: jnp scalars would be captured consts in pallas
+
+
+def _gate_kernel(logits_ref, w_ref, idx_ref, *, k: int):
+    logits = logits_ref[...].astype(jnp.float32)  # (tm, E)
+    tm, e = logits.shape
+    # numerically stable softmax over experts
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = jnp.exp(logits - m)
+    probs = z / jnp.sum(z, axis=-1, keepdims=True)
+
+    masked = probs
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tm, e), 1)
+    ws, ids = [], []
+    for _ in range(k):
+        best = jnp.argmax(masked, axis=-1)  # (tm,)
+        best_w = jnp.max(masked, axis=-1)
+        ws.append(best_w)
+        ids.append(best.astype(jnp.int32))
+        # mask out the chosen column for the next round
+        hit = cols == best[:, None]
+        masked = jnp.where(hit, _NEG, masked)
+    w = jnp.stack(ws, axis=-1)  # (tm, K)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    idx = jnp.stack(ids, axis=-1)  # (tm, K)
+    w_ref[...] = w.astype(w_ref.dtype)
+    idx_ref[...] = idx
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_m"))
+def topk_gate(logits, k: int = 2, tile_m: int | None = None):
+    """Top-K gate over router logits.
+
+    Args:
+      logits: (T, E) router logits.
+      k: number of experts per token.
+      tile_m: token-tile size; must divide T.
+
+    Returns:
+      (weights (T, K) same dtype as logits, indices (T, K) int32).
+    """
+    t, e = logits.shape
+    assert 0 < k <= e
+    tm = tile_m or _default_tile(t)
+    assert t % tm == 0
+
+    kernel = functools.partial(_gate_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(t // tm,),
+        in_specs=[pl.BlockSpec((tm, e), lambda ti: (ti, 0))],
+        out_specs=[
+            pl.BlockSpec((tm, k), lambda ti: (ti, 0)),
+            pl.BlockSpec((tm, k), lambda ti: (ti, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, k), logits.dtype),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ],
+        interpret=True,
+    )(logits)
+
+
+def _default_tile(t: int, want: int = 128) -> int:
+    tm = min(want, t)
+    while t % tm != 0:
+        tm -= 1
+    return max(tm, 1)

@@ -1,0 +1,288 @@
+"""Layer-2: JAX GPT-MoE model (fwd/bwd/optimizer), calling the L1 kernels.
+
+The whole train step is a single jitted function over *packed* parameter
+vectors so the rust runtime only shuttles five literals per step:
+
+    train_step(params f32[P], m f32[P], v f32[P], step f32[], tokens i32[B,S+1])
+      -> (params' f32[P], m' f32[P], v' f32[P], loss f32[], counts i32[L,E])
+
+``counts`` is the per-layer, per-expert token count produced by the gate —
+the real expert-load trace that the rust coordinator feeds into MicroEP's
+LP scheduler (Fig. 2 / Fig. 7 inputs come from here in the e2e example).
+
+MoE dispatch inside the model uses the standard dense capacity layout
+(GShard-style one-hot dispatch/combine) so all shapes are static for AOT;
+the grouped expert FFN itself is the Pallas kernel from Layer 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import expert_ffn
+from .kernels.ref import expert_ffn_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    seq: int = 128
+    hidden: int = 256
+    heads: int = 8
+    ffn: int = 512
+    layers: int = 4
+    experts: int = 8
+    topk: int = 2
+    capacity_factor: float = 2.0
+    micro_batch: int = 4
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    use_pallas: bool = True  # False -> pure-jnp reference FFN (oracle path)
+
+    @property
+    def tokens_per_mb(self) -> int:
+        return self.micro_batch * self.seq
+
+    @property
+    def capacity(self) -> int:
+        cap = int(self.tokens_per_mb * self.topk * self.capacity_factor / self.experts)
+        # round up to a multiple of 8 so token tiles divide evenly
+        return max(8, (cap + 7) // 8 * 8)
+
+
+# ---------------------------------------------------------------------------
+# Parameter packing
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat (name, shape) list defining the packed parameter layout."""
+    h, f, e = cfg.hidden, cfg.ffn, cfg.experts
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, h)),
+        ("pos_embed", (cfg.seq, h)),
+    ]
+    for l in range(cfg.layers):
+        spec += [
+            (f"l{l}.ln1_scale", (h,)),
+            (f"l{l}.ln1_bias", (h,)),
+            (f"l{l}.wqkv", (h, 3 * h)),
+            (f"l{l}.wo", (h, h)),
+            (f"l{l}.ln2_scale", (h,)),
+            (f"l{l}.ln2_bias", (h,)),
+            (f"l{l}.wg", (h, e)),
+            (f"l{l}.w1", (e, h, f)),
+            (f"l{l}.w2", (e, f, h)),
+        ]
+    spec += [
+        ("lnf_scale", (h,)),
+        ("lnf_bias", (h,)),
+        ("head", (h, cfg.vocab)),
+    ]
+    return spec
+
+
+def num_params(cfg: ModelConfig) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_spec(cfg))
+
+
+def unpack(flat, cfg: ModelConfig):
+    """Slice the packed f32[P] vector into the named parameter dict."""
+    out = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = jax.lax.slice(flat, (off,), (off + n,)).reshape(shape)
+        off += n
+    return out
+
+
+def init_params(seed, cfg: ModelConfig):
+    """seed i32[] -> packed params f32[P]. Lowered to its own artifact."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32) if hasattr(seed, "astype") else seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        n = 1
+        for d in shape:
+            n *= d
+        if name.endswith("_scale"):
+            chunks.append(jnp.ones((n,), jnp.float32))
+        elif name.endswith("_bias"):
+            chunks.append(jnp.zeros((n,), jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 0.02 if "embed" in name else (1.0 / jnp.sqrt(fan_in))
+            chunks.append(jax.random.normal(sub, (n,), jnp.float32) * std)
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Model blocks
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def attention(x, p, l: int, cfg: ModelConfig):
+    """Causal MHA. x: (B, S, H)."""
+    b, s, h = x.shape
+    nh = cfg.heads
+    dh = h // nh
+    qkv = x @ p[f"l{l}.wqkv"]  # (B, S, 3H)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)  # (B, nh, S, dh)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = jnp.einsum("bnqd,bnkd->bnqk", q, k) / jnp.sqrt(dh).astype(x.dtype)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask, att, jnp.float32(-1e30))
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bnqk,bnkd->bnqd", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h)
+    return o @ p[f"l{l}.wo"]
+
+
+def topk_iterative(probs, k: int):
+    """Top-K via iterated masked argmax.
+
+    Functionally identical to ``jax.lax.top_k`` for distinct values, but
+    lowers to reduce/select HLO only — jax ≥0.7 lowers ``lax.top_k`` to the
+    dedicated ``topk(..., largest=true)`` HLO instruction, which the
+    xla_extension 0.5.1 text parser (behind the rust ``xla`` crate) rejects.
+    Gradients flow through the gathered probabilities exactly as with
+    ``top_k`` (argmax indices are non-differentiable in both).
+    """
+    t, e = probs.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, e), 1)
+    masked = probs
+    ws, ids = [], []
+    for _ in range(k):
+        best = jnp.argmax(masked, axis=-1)
+        ws.append(jnp.max(masked, axis=-1))
+        ids.append(best.astype(jnp.int32))
+        masked = jnp.where(cols == best[:, None], -jnp.inf, masked)
+    return jnp.stack(ws, axis=-1), jnp.stack(ids, axis=-1)
+
+
+def gate_fn(x2d, wg, cfg: ModelConfig):
+    """Router: logits, softmax probabilities, top-K weights and indices.
+
+    The top-K here is pure jnp: the router participates in the backward
+    pass, and interpret-mode pallas inside grad is unnecessary overhead.
+    The standalone pallas gate kernel is validated against this exact math
+    in python/tests and exported as its own artifact.
+    """
+    logits = x2d @ wg  # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = topk_iterative(probs, cfg.topk)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return probs, w, idx
+
+
+def moe_ffn_layer(x, p, l: int, cfg: ModelConfig):
+    """MoE FFN with dense capacity dispatch. x: (B, S, H) -> (B, S, H, counts)."""
+    b, s, h = x.shape
+    t = b * s
+    e, c, k = cfg.experts, cfg.capacity, cfg.topk
+    x2d = x.reshape(t, h)
+
+    probs, w, idx = gate_fn(x2d, p[f"l{l}.wg"], cfg)
+    counts = jnp.sum(
+        jax.nn.one_hot(idx, e, dtype=jnp.int32), axis=(0, 1)
+    )  # (E,) pre-capacity loads — the trace MicroEP schedules on
+
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)  # (T, K, E)
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat  # (T*K, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(t, k)  # (T, K)
+    keep = pos < c
+    wk = w * keep.astype(w.dtype)
+
+    # dispatch tensor (T, E, C): token t -> slot (e, pos)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), c, dtype=jnp.float32)  # (T, K, C)
+    disp = jnp.einsum("tke,tkc->tec", onehot * keep[..., None].astype(jnp.float32), pos_oh)
+    xe = jnp.einsum("tec,th->ech", disp, x2d)  # (E, C, H)
+
+    ffn = expert_ffn if cfg.use_pallas else expert_ffn_ref
+    ye = ffn(xe, p[f"l{l}.w1"], p[f"l{l}.w2"])  # (E, C, H)
+
+    # combine tensor: gate weight at each dispatched (token -> slot) pair,
+    # zero elsewhere (dropped tokens contribute nothing)
+    comb = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh, wk)
+    y2d = jnp.einsum("tec,ech->th", comb, ye)
+    # aux load-balancing loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(onehot[:, 0, :], axis=0)  # fraction routed (top-1 share)
+    pe = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(me * pe)
+    return y2d.reshape(b, s, h), counts, aux
+
+
+def forward(flat_params, tokens, cfg: ModelConfig):
+    """tokens i32 (B, S) -> (logits (B, S, V), counts (L, E), aux)."""
+    p = unpack(flat_params, cfg)
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos_embed"][None, :s, :]
+    all_counts = []
+    aux_total = 0.0
+    for l in range(cfg.layers):
+        x = x + attention(_layer_norm(x, p[f"l{l}.ln1_scale"], p[f"l{l}.ln1_bias"]), p, l, cfg)
+        y, counts, aux = moe_ffn_layer(
+            _layer_norm(x, p[f"l{l}.ln2_scale"], p[f"l{l}.ln2_bias"]), p, l, cfg
+        )
+        x = x + y
+        all_counts.append(counts)
+        aux_total = aux_total + aux
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["head"]
+    return logits, jnp.stack(all_counts), aux_total / cfg.layers
+
+
+def loss_fn(flat_params, tokens_io, cfg: ModelConfig, aux_coeff: float = 1e-2):
+    """tokens_io i32 (B, S+1): inputs tokens[:, :-1], targets tokens[:, 1:]."""
+    inp, tgt = tokens_io[:, :-1], tokens_io[:, 1:]
+    logits, counts, aux = forward(flat_params, inp, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll) + aux_coeff * aux, counts
+
+
+def train_step(flat_params, m, v, step, tokens_io, cfg: ModelConfig):
+    """One Adam step. All I/O packed (see module docstring)."""
+    (loss, counts), grads = jax.value_and_grad(
+        lambda fp: loss_fn(fp, tokens_io, cfg), has_aux=True
+    )(flat_params)
+    step = step + 1.0
+    m = cfg.beta1 * m + (1 - cfg.beta1) * grads
+    v = cfg.beta2 * v + (1 - cfg.beta2) * grads * grads
+    mhat = m / (1 - cfg.beta1**step)
+    vhat = v / (1 - cfg.beta2**step)
+    new_params = flat_params - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+    return new_params, m, v, step, loss, counts
+
+
+def eval_loss(flat_params, tokens_io, cfg: ModelConfig):
+    loss, counts = loss_fn(flat_params, tokens_io, cfg)
+    return loss, counts
+
+
+# Standalone MoE block forward (one layer) — used by the rust integration
+# test and simulator calibration. x: (T, H) activations entering the block.
+def moe_block_fwd(x2d, wg, w1, w2, cfg: ModelConfig):
+    t, h = x2d.shape
+    p = {"l0.wg": wg, "l0.w1": w1, "l0.w2": w2}
+    y, counts, _aux = moe_ffn_layer(x2d.reshape(1, t, h), p, 0, cfg)
+    return y.reshape(t, h), counts

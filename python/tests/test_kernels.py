@@ -1,0 +1,154 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes/dtypes/seeds; every property failing here indicates
+a kernel-schedule bug (BlockSpec/index-map/accumulation), not model math.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import expert_ffn, expert_ffn_tiled_f, topk_gate
+from compile.kernels.ref import expert_ffn_ref, topk_gate_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _ffn_inputs(seed, e, c, h, f):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return _rand(k[0], e, c, h), _rand(k[1], e, h, f) * 0.1, _rand(k[2], e, f, h) * 0.1
+
+
+# ---------------------------------------------------------------------------
+# expert_ffn
+# ---------------------------------------------------------------------------
+
+class TestExpertFfn:
+    def test_matches_ref_basic(self):
+        x, w1, w2 = _ffn_inputs(0, e=4, c=32, h=16, f=64)
+        np.testing.assert_allclose(
+            expert_ffn(x, w1, w2), expert_ffn_ref(x, w1, w2), rtol=1e-5, atol=1e-5
+        )
+
+    def test_zero_padding_slots_stay_zero(self):
+        x, w1, w2 = _ffn_inputs(1, e=2, c=16, h=8, f=16)
+        x = x.at[:, 8:, :].set(0.0)
+        y = expert_ffn(x, w1, w2)
+        # gelu(0 @ w1) @ w2 == 0
+        np.testing.assert_allclose(y[:, 8:, :], 0.0, atol=1e-6)
+
+    def test_experts_are_independent(self):
+        x, w1, w2 = _ffn_inputs(2, e=3, c=8, h=8, f=16)
+        y = expert_ffn(x, w1, w2)
+        # perturbing expert 1's input must not change expert 0/2 outputs
+        x2 = x.at[1].add(1.0)
+        y2 = expert_ffn(x2, w1, w2)
+        np.testing.assert_allclose(y2[0], y[0], atol=1e-6)
+        np.testing.assert_allclose(y2[2], y[2], atol=1e-6)
+        assert not np.allclose(y2[1], y[1])
+
+    @pytest.mark.parametrize("tile_m", [1, 2, 4, 8, 16])
+    def test_tile_m_invariance(self, tile_m):
+        x, w1, w2 = _ffn_inputs(3, e=2, c=16, h=8, f=16)
+        ref = expert_ffn_ref(x, w1, w2)
+        np.testing.assert_allclose(
+            expert_ffn(x, w1, w2, tile_m=tile_m), ref, rtol=1e-5, atol=1e-5
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        e=st.integers(1, 6),
+        c=st.sampled_from([8, 16, 24, 32]),
+        h=st.sampled_from([4, 8, 16]),
+        f=st.sampled_from([8, 16, 32]),
+    )
+    def test_matches_ref_hypothesis(self, seed, e, c, h, f):
+        x, w1, w2 = _ffn_inputs(seed, e, c, h, f)
+        np.testing.assert_allclose(
+            expert_ffn(x, w1, w2), expert_ffn_ref(x, w1, w2), rtol=2e-5, atol=2e-5
+        )
+
+
+class TestExpertFfnTiledF:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        e=st.integers(1, 4),
+        c=st.sampled_from([8, 16]),
+        h=st.sampled_from([8, 16]),
+        f=st.sampled_from([16, 32, 64]),
+        tf=st.sampled_from([4, 8, 16]),
+    )
+    def test_matches_ref_hypothesis(self, seed, e, c, h, f, tf):
+        x, w1, w2 = _ffn_inputs(seed, e, c, h, f)
+        np.testing.assert_allclose(
+            expert_ffn_tiled_f(x, w1, w2, tile_f=tf),
+            expert_ffn_ref(x, w1, w2),
+            rtol=2e-5, atol=2e-5,
+        )
+
+    def test_accumulation_matches_untiled(self):
+        x, w1, w2 = _ffn_inputs(7, e=2, c=16, h=8, f=32)
+        np.testing.assert_allclose(
+            expert_ffn_tiled_f(x, w1, w2, tile_f=8),
+            expert_ffn(x, w1, w2),
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+# ---------------------------------------------------------------------------
+# topk_gate
+# ---------------------------------------------------------------------------
+
+class TestTopkGate:
+    def test_matches_ref_basic(self):
+        logits = _rand(jax.random.PRNGKey(0), 64, 8)
+        w, idx = topk_gate(logits, k=2)
+        wr, idxr = topk_gate_ref(logits, k=2)
+        np.testing.assert_array_equal(np.sort(idx, -1), np.sort(idxr, -1))
+        np.testing.assert_allclose(w, wr, rtol=1e-5, atol=1e-6)
+
+    def test_weights_sum_to_one(self):
+        logits = _rand(jax.random.PRNGKey(1), 32, 16)
+        w, _ = topk_gate(logits, k=4)
+        np.testing.assert_allclose(np.sum(np.asarray(w), -1), 1.0, rtol=1e-5)
+
+    def test_indices_distinct_per_token(self):
+        logits = _rand(jax.random.PRNGKey(2), 128, 8)
+        _, idx = topk_gate(logits, k=3)
+        idx = np.asarray(idx)
+        for row in idx:
+            assert len(set(row.tolist())) == 3
+
+    def test_k_equals_e_selects_all(self):
+        logits = _rand(jax.random.PRNGKey(3), 16, 4)
+        _, idx = topk_gate(logits, k=4)
+        for row in np.asarray(idx):
+            assert sorted(row.tolist()) == [0, 1, 2, 3]
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        t=st.sampled_from([8, 32, 96]),
+        e=st.sampled_from([4, 8, 32]),
+        k=st.integers(1, 4),
+    )
+    def test_matches_ref_hypothesis(self, seed, t, e, k):
+        logits = _rand(jax.random.PRNGKey(seed), t, e)
+        w, idx = topk_gate(logits, k=k)
+        wr, idxr = topk_gate_ref(logits, k=k)
+        # expert sets must agree (ties can permute order within equal probs)
+        np.testing.assert_array_equal(np.sort(idx, -1), np.sort(idxr, -1))
+        np.testing.assert_allclose(np.sort(w, -1), np.sort(wr, -1), rtol=1e-4, atol=1e-5)
+
+    def test_skewed_logits_pick_hot_expert(self):
+        logits = jnp.zeros((16, 8)).at[:, 3].set(10.0)
+        _, idx = topk_gate(logits, k=1)
+        assert np.all(np.asarray(idx) == 3)

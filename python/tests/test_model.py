@@ -1,0 +1,146 @@
+"""Layer-2 model tests: shapes, packing, dispatch math, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(
+    vocab=64, seq=16, hidden=32, heads=4, ffn=64, layers=2, experts=4,
+    topk=2, micro_batch=2,
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jnp.int32(0), CFG)
+
+
+def _tokens(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (CFG.micro_batch, CFG.seq + 1), 0, CFG.vocab)
+
+
+class TestPacking:
+    def test_num_params_matches_spec(self, params):
+        assert params.shape == (M.num_params(CFG),)
+
+    def test_unpack_shapes(self, params):
+        p = M.unpack(params, CFG)
+        assert p["embed"].shape == (CFG.vocab, CFG.hidden)
+        assert p["l0.w1"].shape == (CFG.experts, CFG.hidden, CFG.ffn)
+        assert p["l1.w2"].shape == (CFG.experts, CFG.ffn, CFG.hidden)
+        assert p["head"].shape == (CFG.hidden, CFG.vocab)
+
+    def test_unpack_is_partition(self, params):
+        # every packed element lands in exactly one unpacked tensor
+        total = sum(int(np.prod(v.shape)) for v in M.unpack(params, CFG).values())
+        assert total == params.shape[0]
+
+    def test_scales_init_to_one(self, params):
+        p = M.unpack(params, CFG)
+        np.testing.assert_allclose(p["l0.ln1_scale"], 1.0)
+        np.testing.assert_allclose(p["lnf_bias"], 0.0)
+
+    def test_init_deterministic_in_seed(self):
+        a = M.init_params(jnp.int32(7), CFG)
+        b = M.init_params(jnp.int32(7), CFG)
+        c = M.init_params(jnp.int32(8), CFG)
+        np.testing.assert_array_equal(a, b)
+        assert not np.array_equal(a, c)
+
+
+class TestForward:
+    def test_logits_shape_and_finite(self, params):
+        logits, counts, aux = M.forward(params, _tokens()[:, :-1], CFG)
+        assert logits.shape == (CFG.micro_batch, CFG.seq, CFG.vocab)
+        assert counts.shape == (CFG.layers, CFG.experts)
+        assert np.isfinite(np.asarray(logits)).all()
+        assert float(aux) > 0.0
+
+    def test_counts_sum_to_topk_tokens(self, params):
+        _, counts, _ = M.forward(params, _tokens()[:, :-1], CFG)
+        t = CFG.tokens_per_mb
+        np.testing.assert_array_equal(
+            np.asarray(counts).sum(axis=1), [t * CFG.topk] * CFG.layers
+        )
+
+    def test_causality(self, params):
+        """Changing a late token must not affect earlier logits."""
+        tok = _tokens()[:, :-1]
+        l1, _, _ = M.forward(params, tok, CFG)
+        tok2 = tok.at[:, -1].set((tok[:, -1] + 1) % CFG.vocab)
+        l2, _, _ = M.forward(params, tok2, CFG)
+        np.testing.assert_allclose(
+            np.asarray(l1)[:, : CFG.seq - 1], np.asarray(l2)[:, : CFG.seq - 1],
+            rtol=1e-4, atol=1e-5,
+        )
+
+    def test_pallas_and_ref_paths_agree(self, params):
+        tok = _tokens()[:, :-1]
+        ref_cfg = M.ModelConfig(**{**CFG.__dict__, "use_pallas": False})
+        l1, c1, _ = M.forward(params, tok, CFG)
+        l2, c2, _ = M.forward(params, tok, ref_cfg)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-4)
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, params):
+        """A few Adam steps on one repeated batch must reduce loss."""
+        m = jnp.zeros_like(params)
+        v = jnp.zeros_like(params)
+        step = jnp.float32(0)
+        tok = _tokens()
+        fp = params
+        losses = []
+        for _ in range(5):
+            fp, m, v, step, loss, _counts = M.train_step(fp, m, v, step, tok, CFG)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+
+    def test_initial_loss_near_uniform(self, params):
+        loss, _ = M.eval_loss(params, _tokens(), CFG)
+        # aux coefficient is small; CE should sit near ln(vocab)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+    def test_step_counter_increments(self, params):
+        z = jnp.zeros_like(params)
+        _, _, _, step, _, _ = M.train_step(params, z, z, jnp.float32(3), _tokens(), CFG)
+        assert float(step) == 4.0
+
+    def test_counts_dtype_and_bounds(self, params):
+        z = jnp.zeros_like(params)
+        *_, counts = M.train_step(params, z, z, jnp.float32(0), _tokens(), CFG)
+        counts = np.asarray(counts)
+        assert counts.dtype == np.int32
+        assert (counts >= 0).all()
+        assert (counts <= CFG.tokens_per_mb * CFG.topk).all()
+
+
+class TestMoeBlock:
+    def test_moe_block_fwd_shapes(self):
+        key = jax.random.split(jax.random.PRNGKey(0), 4)
+        t, h, e, f = CFG.tokens_per_mb, CFG.hidden, CFG.experts, CFG.ffn
+        x = jax.random.normal(key[0], (t, h))
+        wg = jax.random.normal(key[1], (h, e)) * 0.1
+        w1 = jax.random.normal(key[2], (e, h, f)) * 0.1
+        w2 = jax.random.normal(key[3], (e, f, h)) * 0.1
+        y, counts = M.moe_block_fwd(x, wg, w1, w2, CFG)
+        assert y.shape == (t, h)
+        assert int(np.asarray(counts).sum()) == t * CFG.topk
+
+    def test_uniform_gate_spreads_load(self):
+        """Zero gate weights -> uniform probs -> top-k ties; loads bounded."""
+        key = jax.random.split(jax.random.PRNGKey(1), 3)
+        t, h, e, f = CFG.tokens_per_mb, CFG.hidden, CFG.experts, CFG.ffn
+        x = jax.random.normal(key[0], (t, h))
+        wg = jnp.zeros((h, e))
+        w1 = jax.random.normal(key[1], (e, h, f)) * 0.1
+        w2 = jax.random.normal(key[2], (e, f, h)) * 0.1
+        _, counts = M.moe_block_fwd(x, wg, w1, w2, CFG)
+        assert int(np.asarray(counts).sum()) == t * CFG.topk

@@ -1,0 +1,91 @@
+"""Generate golden LP fixtures with scipy's HiGHS solver.
+
+The paper solves LPP 1 with HiGHS; our rust simplex must agree. This tool
+builds random LPP-1 instances (and a few comm-aware LPP-4 instances),
+solves them with scipy.optimize.linprog (method="highs" — the same HiGHS),
+and writes objective values to ``rust/tests/golden_lp.json``. The rust
+test re-solves each instance and compares objectives to 1e-6.
+
+Run from python/: python tools/gen_lp_golden.py
+(committed fixture; regenerate only when the format changes)
+"""
+
+import json
+import os
+import random
+
+import numpy as np
+from scipy.optimize import linprog
+
+
+def lpp1_instance(rng, num_gpus, num_experts, d):
+    """Random LPP-1: EDP groups of size d, integer loads."""
+    edp = []
+    for _ in range(num_experts):
+        edp.append(sorted(rng.sample(range(num_gpus), d)))
+    loads = [rng.randint(0, 500) for _ in range(num_experts)]
+
+    # vars: x[e][r] .. then t
+    nx = num_experts * d
+    c = np.zeros(nx + 1)
+    c[nx] = 1.0
+    # A_ub x <= b_ub : per gpu sum x - t <= 0
+    a_ub = np.zeros((num_gpus, nx + 1))
+    for e, grp in enumerate(edp):
+        for r, g in enumerate(grp):
+            a_ub[g, e * d + r] = 1.0
+    a_ub[:, nx] = -1.0
+    b_ub = np.zeros(num_gpus)
+    # A_eq: per expert sum x = load
+    a_eq = np.zeros((num_experts, nx + 1))
+    for e in range(num_experts):
+        for r in range(d):
+            a_eq[e, e * d + r] = 1.0
+    b_eq = np.array(loads, dtype=float)
+
+    res = linprog(c, A_ub=a_ub, b_ub=b_ub, A_eq=a_eq, b_eq=b_eq, method="highs")
+    assert res.status == 0, res.message
+    return {
+        "kind": "lpp1",
+        "num_gpus": num_gpus,
+        "d": d,
+        "edp": edp,
+        "loads": loads,
+        "objective": float(res.fun),
+    }
+
+
+def generic_instance(rng, n, m):
+    """Random bounded min-LP: c >= 0ish, A x <= b with b > 0 (x=0 feasible)."""
+    c = [round(rng.uniform(-0.2, 1.0), 4) for _ in range(n)]
+    rows = []
+    for _ in range(m):
+        rows.append([round(rng.uniform(0.05, 1.0), 4) for _ in range(n)])
+    b = [round(rng.uniform(1.0, 8.0), 4) for _ in range(m)]
+    res = linprog(c, A_ub=np.array(rows), b_ub=np.array(b), method="highs")
+    if res.status != 0:
+        return None
+    return {"kind": "generic", "c": c, "a_ub": rows, "b_ub": b, "objective": float(res.fun)}
+
+
+def main():
+    rng = random.Random(20250710)
+    cases = []
+    for num_gpus, num_experts, d in [
+        (4, 8, 2), (8, 16, 2), (8, 32, 2), (16, 32, 2), (6, 8, 3), (8, 16, 4),
+    ]:
+        for _ in range(4):
+            cases.append(lpp1_instance(rng, num_gpus, num_experts, d))
+    for n, m in [(3, 2), (5, 4), (8, 6), (12, 10)]:
+        for _ in range(4):
+            inst = generic_instance(rng, n, m)
+            if inst:
+                cases.append(inst)
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "golden_lp.json")
+    with open(out, "w") as fh:
+        json.dump({"cases": cases}, fh)
+    print(f"wrote {len(cases)} cases to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+//! Solver ablation (§9 Discussion): the per-micro-batch scheduling solve
+//! implemented three ways — cold simplex, warm-started simplex (the
+//! training path), and binary-search max-flow (the proposed inference
+//! path) — measured for identical optima across scales.
+
+use micromoe::bench_harness::{bench, fmt_time, save_json, Table};
+use micromoe::placement::cayley::cayley_graph_placement;
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::flow::flow_schedule;
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use micromoe::ser::Json;
+
+fn main() {
+    let mut table = Table::new(
+        "Solver ablation: cold LP vs warm LP vs max-flow (same optima)",
+        &["GPUs", "experts", "cold LP", "warm LP", "max-flow", "optima agree"],
+    );
+    let mut json = Vec::new();
+    for &(g, e) in &[(8usize, 32usize), (16, 64), (32, 128), (64, 256)] {
+        let p = cayley_graph_placement(g, e);
+        let mut rng = Rng::new(3);
+        let zipf = Zipf::new(e, 0.8);
+        let mk = |rng: &mut Rng| {
+            let mut lm = LoadMatrix::zeros(e, g);
+            for gi in 0..g {
+                for _ in 0..2048 {
+                    lm.add(zipf.sample(rng), gi, 1);
+                }
+            }
+            lm
+        };
+        let batches: Vec<LoadMatrix> = (0..8).map(|_| mk(&mut rng)).collect();
+
+        // agreement check on every batch
+        let mut agree = true;
+        {
+            let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+            for lm in &batches {
+                let lp = s.schedule(lm).stats.lp_objective;
+                let fl = flow_schedule(&p, lm).max_load;
+                if (lp.ceil() as i64 - fl as i64).abs() > 1 {
+                    agree = false;
+                }
+            }
+        }
+
+        let mut cold =
+            MicroEpScheduler::new(p.clone(), None, SchedulerOptions { warm_start: false, ..Default::default() });
+        let mut i = 0usize;
+        let r_cold = bench("cold", 1, 12, || {
+            std::hint::black_box(cold.schedule(&batches[i % 8]));
+            i += 1;
+        });
+        let mut warm =
+            MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        warm.schedule(&batches[0]);
+        let mut i = 0usize;
+        let r_warm = bench("warm", 1, 12, || {
+            std::hint::black_box(warm.schedule(&batches[i % 8]));
+            i += 1;
+        });
+        let mut i = 0usize;
+        let r_flow = bench("flow", 1, 12, || {
+            std::hint::black_box(flow_schedule(&p, &batches[i % 8]));
+            i += 1;
+        });
+        table.row(vec![
+            g.to_string(),
+            e.to_string(),
+            fmt_time(r_cold.summary.p50),
+            fmt_time(r_warm.summary.p50),
+            fmt_time(r_flow.summary.p50),
+            agree.to_string(),
+        ]);
+        json.push(Json::obj(vec![
+            ("gpus", Json::Num(g as f64)),
+            ("experts", Json::Num(e as f64)),
+            ("cold_s", Json::Num(r_cold.summary.p50)),
+            ("warm_s", Json::Num(r_warm.summary.p50)),
+            ("flow_s", Json::Num(r_flow.summary.p50)),
+        ]));
+    }
+    table.print();
+    println!(
+        "\n§9 Discussion: 'we can replace the linear programming optimization \
+         with … algorithms for reduced computational complexity' — the flow \
+         solver needs no warm state, suiting latency-sensitive inference."
+    );
+    let _ = save_json("ablation_solvers", &Json::Arr(json));
+}

@@ -1,0 +1,97 @@
+//! Fig. 11 regenerator: ablation of MicroMoE's three dispatch
+//! optimizations — warm solving (§5.1), locality-aware routing (§5.2),
+//! overlap (§5.4) — on dispatch time at the Fig.-8 setting.
+//!
+//! Scheduling times are *measured* on our LP; A2A volumes feed the
+//! calibrated comm model.
+
+use micromoe::bench_harness::{fmt_time, save_json, Table};
+use micromoe::cluster::CostModel;
+use micromoe::placement::cayley::symmetric_placement;
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use micromoe::ser::Json;
+use micromoe::topology::Topology;
+
+struct Arm {
+    name: &'static str,
+    warm: bool,
+    locality: bool,
+    overlap: bool,
+}
+
+fn main() {
+    let topo = Topology::new(8, 4, 2, 8);
+    let model = CostModel::h100_testbed();
+    let per_gpu = 8u64 * 2048 * 2;
+    let arms = [
+        Arm { name: "none", warm: false, locality: false, overlap: false },
+        Arm { name: "+warm solving", warm: true, locality: false, overlap: false },
+        Arm { name: "+locality routing", warm: true, locality: true, overlap: false },
+        Arm { name: "+overlap (full MicroMoE)", warm: true, locality: true, overlap: true },
+        Arm { name: "vanilla Megatron-LM", warm: false, locality: false, overlap: true },
+    ];
+
+    let mut table = Table::new(
+        "Fig 11: dispatch-time ablation (Fig-8 setting)",
+        &["configuration", "gather+sched", "A2A (dispatch)", "dispatch total"],
+    );
+    let mut json = Vec::new();
+    for arm in &arms {
+        let vanilla = arm.name.starts_with("vanilla");
+        let mut sched = MicroEpScheduler::new(
+            symmetric_placement(&topo, 32),
+            Some(topo.clone()),
+            SchedulerOptions {
+                warm_start: arm.warm,
+                locality_aware: arm.locality,
+                ..Default::default()
+            },
+        );
+        let mut vanilla_sys =
+            micromoe::baselines::VanillaEp::new(topo.clone(), 32);
+        let mut rng = Rng::new(5);
+        let zipf = Zipf::new(32, 1.0);
+        let rounds = 12;
+        let mut sched_t = 0.0;
+        let mut a2a_t = 0.0;
+        for _ in 0..rounds {
+            let mut lm = LoadMatrix::zeros(32, 8);
+            for g in 0..8 {
+                for _ in 0..per_gpu {
+                    lm.add(zipf.sample(&mut rng), g, 1);
+                }
+            }
+            if vanilla {
+                use micromoe::baselines::MoeSystem;
+                let plan = vanilla_sys.plan(&lm);
+                a2a_t += model.a2a_time_from_routes(&plan.routes, 8, &topo);
+            } else {
+                let s = sched.schedule(&lm);
+                let gather = model.allgather_time(4.0 * 64.0, 8, false);
+                let solve = s.stats.solve_ns as f64 * 1e-9;
+                sched_t += gather + if arm.overlap { 0.0 } else { solve };
+                a2a_t += model.a2a_time_from_routes(&s.routes, 8, &topo);
+            }
+        }
+        let n = rounds as f64;
+        let (s_us, a_us) = (sched_t / n, a2a_t / n);
+        table.row(vec![
+            arm.name.to_string(),
+            fmt_time(s_us),
+            fmt_time(a_us),
+            fmt_time(s_us + a_us),
+        ]);
+        json.push(Json::obj(vec![
+            ("arm", Json::Str(arm.name.into())),
+            ("sched_s", Json::Num(s_us)),
+            ("a2a_s", Json::Num(a_us)),
+        ]));
+    }
+    table.print();
+    println!(
+        "\npaper Fig 11: warm solving + overlap shrink scheduling; locality \
+         routing shrinks A2A; full MicroMoE adds only ~0.4 ms vs Megatron."
+    );
+    let _ = save_json("fig11", &Json::Arr(json));
+}

@@ -1,0 +1,215 @@
+//! Adaptive replacement (§6.4): the long-term complement to per-micro-batch
+//! token scheduling.
+//!
+//! The placement manager monitors per-micro-batch expert loads, predicts the
+//! near-future distribution with a windowed moving average (the paper cites
+//! time-series techniques; moving averages are its named example), evaluates
+//! the *current* placement on the prediction via Eq. 3 (max induced subgraph
+//! density — no LP solve needed), and triggers a new asymmetric placement
+//! when predicted balance degrades past a threshold.
+
+use crate::placement::asymmetric::asymmetric_placement;
+use crate::placement::graph::{max_induced_density, perfect_balance_bound};
+use crate::placement::Placement;
+use crate::rng::Rng;
+use crate::stats::VecWindow;
+
+/// Tuning knobs for the placement manager.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    /// moving-average window (micro-batches)
+    pub window: usize,
+    /// evaluate the trigger every this many micro-batches
+    pub check_every: usize,
+    /// replace when predicted density exceeds `threshold ×` perfect balance
+    pub threshold: f64,
+    /// Monte-Carlo samples for the new placement search
+    pub mc_samples: usize,
+    /// replica slots per GPU the new placement may use
+    pub slots_per_gpu: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            window: 16,
+            check_every: 8,
+            threshold: 1.05,
+            mc_samples: 64,
+            slots_per_gpu: 4,
+        }
+    }
+}
+
+/// Outcome of a replacement decision.
+#[derive(Clone, Debug)]
+pub struct ReplacementDecision {
+    pub placement: Placement,
+    /// predicted density of the *old* placement that triggered this
+    pub old_density: f64,
+    /// density of the new placement on the same prediction
+    pub new_density: f64,
+}
+
+/// The placement manager (Fig. 4, device-0 resident in MicroMoE; here a
+/// plain struct the coordinator owns).
+pub struct ReplacementManager {
+    cfg: AdaptiveConfig,
+    history: VecWindow,
+    batch: usize,
+    rng: Rng,
+    /// number of replacements performed (exposed for tests/metrics)
+    pub replacements: usize,
+}
+
+impl ReplacementManager {
+    pub fn new(cfg: AdaptiveConfig, seed: u64) -> Self {
+        let window = cfg.window;
+        ReplacementManager {
+            cfg,
+            history: VecWindow::new(window),
+            batch: 0,
+            rng: Rng::new(seed),
+            replacements: 0,
+        }
+    }
+
+    /// Record one micro-batch's expert loads.
+    pub fn observe(&mut self, expert_loads: &[u64]) {
+        self.history
+            .push(expert_loads.iter().map(|&l| l as f64).collect());
+        self.batch += 1;
+    }
+
+    /// Predicted near-future expert loads (windowed moving average).
+    pub fn predict(&self) -> Option<Vec<f64>> {
+        self.history.mean()
+    }
+
+    /// Check the trigger; return a new placement when warranted.
+    pub fn maybe_replace(&mut self, current: &Placement) -> Option<ReplacementDecision> {
+        if self.batch == 0 || self.batch % self.cfg.check_every != 0 {
+            return None;
+        }
+        if self.history.len() < self.cfg.window.min(4) {
+            return None; // not enough signal yet
+        }
+        let predicted = self.predict()?;
+        let ideal = perfect_balance_bound(&predicted, current.num_gpus);
+        if ideal <= 0.0 {
+            return None;
+        }
+        let old_density = max_induced_density(current, &predicted, &mut self.rng).density;
+        if old_density <= self.cfg.threshold * ideal {
+            return None; // current placement still schedulable to balance
+        }
+        let candidate = asymmetric_placement(
+            current.num_gpus,
+            &predicted,
+            self.cfg.slots_per_gpu,
+            self.cfg.mc_samples,
+            &mut self.rng,
+        );
+        let new_density = max_induced_density(&candidate, &predicted, &mut self.rng).density;
+        if new_density >= old_density * 0.999 {
+            return None; // no improvement worth a migration
+        }
+        self.replacements += 1;
+        Some(ReplacementDecision { placement: candidate, old_density, new_density })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::cayley::cayley_graph_placement;
+    use crate::rng::Zipf;
+
+    fn skewed_loads(rng: &mut Rng, experts: usize, s: f64, tokens: u64) -> Vec<u64> {
+        let z = Zipf::new(experts, s);
+        let mut loads = vec![0u64; experts];
+        for _ in 0..tokens {
+            loads[z.sample(rng)] += 1;
+        }
+        loads
+    }
+
+    #[test]
+    fn no_replacement_on_balanced_loads() {
+        let p = cayley_graph_placement(8, 16);
+        let mut mgr = ReplacementManager::new(AdaptiveConfig::default(), 1);
+        let mut rng = Rng::new(2);
+        for _ in 0..64 {
+            mgr.observe(&skewed_loads(&mut rng, 16, 0.0, 2000));
+            assert!(
+                mgr.maybe_replace(&p).is_none(),
+                "replaced under uniform loads"
+            );
+        }
+        assert_eq!(mgr.replacements, 0);
+    }
+
+    #[test]
+    fn replaces_under_heavy_skew() {
+        let p = cayley_graph_placement(8, 16); // uniform 2 replicas each
+        let mut mgr = ReplacementManager::new(
+            AdaptiveConfig { slots_per_gpu: 4, ..Default::default() },
+            1,
+        );
+        let mut rng = Rng::new(3);
+        let mut decided = None;
+        for _ in 0..64 {
+            mgr.observe(&skewed_loads(&mut rng, 16, 1.8, 4000));
+            if let Some(d) = mgr.maybe_replace(&p) {
+                decided = Some(d);
+                break;
+            }
+        }
+        let d = decided.expect("never replaced under s=1.8 skew");
+        assert!(d.new_density < d.old_density);
+        d.placement.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn replacement_improves_eq3_density() {
+        let p = cayley_graph_placement(4, 8);
+        let mut mgr = ReplacementManager::new(
+            AdaptiveConfig { check_every: 4, window: 8, slots_per_gpu: 4, ..Default::default() },
+            9,
+        );
+        let mut rng = Rng::new(4);
+        for _ in 0..32 {
+            mgr.observe(&skewed_loads(&mut rng, 8, 2.0, 3000));
+            if let Some(d) = mgr.maybe_replace(&p) {
+                assert!(d.new_density <= d.old_density);
+                return;
+            }
+        }
+        panic!("trigger never fired");
+    }
+
+    #[test]
+    fn respects_check_period() {
+        let p = cayley_graph_placement(4, 8);
+        let mut mgr = ReplacementManager::new(
+            AdaptiveConfig { check_every: 100, ..Default::default() },
+            5,
+        );
+        let mut rng = Rng::new(6);
+        for _ in 0..50 {
+            mgr.observe(&skewed_loads(&mut rng, 8, 2.0, 1000));
+            assert!(mgr.maybe_replace(&p).is_none());
+        }
+    }
+
+    #[test]
+    fn prediction_is_window_mean() {
+        let mut mgr = ReplacementManager::new(
+            AdaptiveConfig { window: 2, ..Default::default() },
+            7,
+        );
+        mgr.observe(&[10, 0]);
+        mgr.observe(&[0, 10]);
+        assert_eq!(mgr.predict().unwrap(), vec![5.0, 5.0]);
+    }
+}

@@ -1,0 +1,141 @@
+//! DeepSpeed-style capacity padding (§7.2's analysis of DeepSpeed).
+//!
+//! GShard-lineage implementations pad every expert's batch to the *maximum*
+//! expert load so tensor shapes are static: with skewed loads each GPU
+//! computes `experts_per_gpu × max_e load_e` rows regardless of its real
+//! load, wasting compute and memory — which is why DeepSpeed collapses at
+//! 16/32 experts in Fig. 6 and is omitted from Fig. 8.
+
+use super::MoeSystem;
+use crate::cluster::sim::MoeLayerPlan;
+use crate::scheduler::{LoadMatrix, Route};
+use crate::topology::Topology;
+
+pub struct DeepSpeedPad {
+    inner: super::vanilla_ep::VanillaEp,
+    topo: Topology,
+    num_experts: usize,
+}
+
+impl DeepSpeedPad {
+    pub fn new(topo: Topology, num_experts: usize) -> Self {
+        DeepSpeedPad {
+            inner: super::vanilla_ep::VanillaEp::new(topo.clone(), num_experts),
+            topo,
+            num_experts,
+        }
+    }
+}
+
+impl MoeSystem for DeepSpeedPad {
+    fn name(&self) -> &'static str {
+        "DeepSpeed (capacity padding)"
+    }
+
+    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
+        let mut plan = self.inner.plan(loads);
+        // per EP group: pad every expert to the group's max expert load
+        let experts_per_gpu = self.num_experts / self.topo.ep_degree;
+        for grp in 0..self.topo.num_ep_groups() {
+            let gpus = self.topo.ep_gpus(grp);
+            // max over experts of tokens arriving from this EP group
+            let mut max_load = 0u64;
+            for e in 0..self.num_experts {
+                let l: u64 = gpus.clone().map(|g| loads.get(e, g)).sum();
+                max_load = max_load.max(l);
+            }
+            let padded = max_load * experts_per_gpu as u64;
+            for g in gpus {
+                plan.gpu_compute[g] = padded;
+            }
+        }
+        // padding also inflates the all-to-all: slots are exchanged at
+        // capacity, not at actual counts
+        let mut pad_routes: Vec<Route> = Vec::with_capacity(plan.routes.len());
+        for grp in 0..self.topo.num_ep_groups() {
+            let gpus: Vec<usize> = self.topo.ep_gpus(grp).collect();
+            let mut max_load = 0u64;
+            for e in 0..self.num_experts {
+                let l: u64 = gpus.iter().map(|&g| loads.get(e, g)).sum();
+                max_load = max_load.max(l);
+            }
+            // each src sends capacity/|group| slots per expert to its home
+            let per_src = max_load.div_ceil(gpus.len() as u64);
+            for e in 0..self.num_experts {
+                for &src in &gpus {
+                    let dst = self.inner.home_gpu(e, src);
+                    pad_routes.push(Route { expert: e, src, dst, tokens: per_src });
+                }
+            }
+        }
+        plan.routes = pad_routes;
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::zipf_loads;
+    use super::*;
+
+    fn sys() -> DeepSpeedPad {
+        DeepSpeedPad::new(Topology::new(8, 4, 2, 8), 16)
+    }
+
+    #[test]
+    fn all_gpus_compute_padded_amount() {
+        let mut s = sys();
+        let lm = zipf_loads(16, 8, 500, 1.5, 3);
+        let plan = s.plan(&lm);
+        // within each EP group, all GPUs equal
+        for grp in [0usize, 1] {
+            let gpus: Vec<usize> = (grp * 4..(grp + 1) * 4).collect();
+            let first = plan.gpu_compute[gpus[0]];
+            for &g in &gpus {
+                assert_eq!(plan.gpu_compute[g], first);
+            }
+        }
+    }
+
+    #[test]
+    fn padding_never_below_actual() {
+        let mut pad = sys();
+        let mut van = super::super::vanilla_ep::VanillaEp::new(
+            Topology::new(8, 4, 2, 8),
+            16,
+        );
+        let lm = zipf_loads(16, 8, 500, 1.0, 4);
+        let p = pad.plan(&lm);
+        let v = van.plan(&lm);
+        for g in 0..8 {
+            assert!(p.gpu_compute[g] >= v.gpu_compute[g], "gpu {g}");
+        }
+    }
+
+    #[test]
+    fn uniform_loads_minimal_waste() {
+        let mut s = sys();
+        let lm = zipf_loads(16, 8, 4000, 0.0, 5);
+        let plan = s.plan(&lm);
+        let padded: u64 = plan.gpu_compute.iter().sum();
+        // waste < 35% under uniform loads (statistical max ≈ mean)
+        assert!(
+            (padded as f64) < 1.35 * lm.total() as f64,
+            "padded {padded} vs actual {}",
+            lm.total()
+        );
+    }
+
+    #[test]
+    fn skew_explodes_padding() {
+        let mut s = sys();
+        let lm = zipf_loads(16, 8, 1000, 2.0, 6);
+        let plan = s.plan(&lm);
+        let padded: u64 = plan.gpu_compute.iter().sum();
+        assert!(
+            (padded as f64) > 3.0 * lm.total() as f64,
+            "padding should blow up under skew: {padded} vs {}",
+            lm.total()
+        );
+    }
+}

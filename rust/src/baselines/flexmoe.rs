@@ -1,0 +1,252 @@
+//! FlexMoE baseline (§7.1): popularity-proportional replica counts with
+//! *even* load split across replicas.
+//!
+//! The key contrast with MicroEP (§6.4 "Algorithms"): FlexMoE computes a
+//! replica's load as `load_e / count_e` — all replicas of an expert are
+//! equal — whereas MicroEP's LP may assign uneven loads. FlexMoE adapts
+//! counts when the popularity EMA drifts, paying migration, and places
+//! replicas across the whole DP group like MicroMoE's asymmetric mode.
+
+use super::MoeSystem;
+use crate::cluster::sim::MoeLayerPlan;
+use crate::cluster::{migration, CostModel};
+use crate::placement::asymmetric::greedy_replica_counts;
+use crate::placement::{random::random_placement, Placement};
+use crate::rng::Rng;
+use crate::scheduler::rounding::round_preserving_sum;
+use crate::scheduler::routing::route_tokens;
+use crate::scheduler::LoadMatrix;
+use crate::stats::Ema;
+use crate::topology::Topology;
+
+pub struct FlexMoe {
+    topo: Topology,
+    num_experts: usize,
+    slots_per_gpu: usize,
+    placement: Placement,
+    ema: Vec<Ema>,
+    batch: usize,
+    pub adjust_every: usize,
+    /// relative EMA change that triggers re-planning
+    pub drift_threshold: f64,
+    last_counts: Vec<usize>,
+    rng: Rng,
+    cost: Option<(CostModel, u64)>,
+    pub adjustments: usize,
+}
+
+impl FlexMoe {
+    pub fn new(topo: Topology, num_experts: usize, seed: u64) -> Self {
+        let slots_per_gpu = topo.slots_per_gpu(num_experts);
+        let g = topo.microep_group_size();
+        let mut rng = Rng::new(seed);
+        // start from uniform replica counts (d replicas each)
+        let placement = random_placement(g, num_experts, topo.d, &mut rng);
+        let last_counts = vec![topo.d; num_experts];
+        FlexMoe {
+            topo,
+            num_experts,
+            slots_per_gpu,
+            placement,
+            ema: (0..num_experts).map(|_| Ema::new(0.1)).collect(),
+            batch: 0,
+            adjust_every: 16,
+            drift_threshold: 0.25,
+            last_counts,
+            rng,
+            cost: None,
+            adjustments: 0,
+        }
+    }
+
+    pub fn with_migration_cost(mut self, model: CostModel, bytes_per_expert: u64) -> Self {
+        self.cost = Some((model, bytes_per_expert));
+        self
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    fn maybe_adjust(&mut self, num_gpus: usize) -> f64 {
+        let loads: Vec<f64> = self.ema.iter().map(|e| e.get().unwrap_or(1.0).max(0.0)).collect();
+        let counts =
+            greedy_replica_counts(&loads, num_gpus * self.slots_per_gpu, num_gpus);
+        // only pay migration when counts actually drifted
+        let drift: f64 = counts
+            .iter()
+            .zip(&self.last_counts)
+            .map(|(&a, &b)| (a as f64 - b as f64).abs())
+            .sum::<f64>()
+            / self.num_experts as f64;
+        if drift < self.drift_threshold {
+            return 0.0;
+        }
+        // place counts: heaviest experts spread first, fill GPU slots evenly
+        let new_placement = place_counts(num_gpus, &counts, self.slots_per_gpu, &mut self.rng);
+        let mut prep = 0.0;
+        if let Some((model, bytes)) = &self.cost {
+            let moves = migration::placement_diff(&self.placement, &new_placement, &self.topo);
+            prep = migration::migration_time(&moves, *bytes, model, &self.topo, num_gpus);
+        }
+        self.placement = new_placement;
+        self.last_counts = counts;
+        self.adjustments += 1;
+        prep
+    }
+}
+
+/// Deterministic slot-balanced placement of given replica counts.
+fn place_counts(
+    num_gpus: usize,
+    counts: &[usize],
+    slots_per_gpu: usize,
+    rng: &mut Rng,
+) -> Placement {
+    let mut remaining = vec![slots_per_gpu; num_gpus];
+    let mut order: Vec<usize> = (0..counts.len()).collect();
+    order.sort_by_key(|&e| std::cmp::Reverse(counts[e]));
+    let mut replicas = vec![Vec::new(); counts.len()];
+    for &e in &order {
+        let mut chosen: Vec<usize> = Vec::with_capacity(counts[e]);
+        for _ in 0..counts[e] {
+            // most-free GPU not already chosen; random tie-break
+            let best = (0..num_gpus)
+                .filter(|g| !chosen.contains(g) && remaining[*g] > 0)
+                .max_by_key(|&g| (remaining[g], rng.below(1024)));
+            let g = best.expect("ran out of slots placing replica counts");
+            chosen.push(g);
+            remaining[g] -= 1;
+        }
+        chosen.sort_unstable();
+        replicas[e] = chosen;
+    }
+    Placement::from_replicas(num_gpus, replicas)
+}
+
+impl MoeSystem for FlexMoe {
+    fn name(&self) -> &'static str {
+        "FlexMoE (adaptive replicas)"
+    }
+
+    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
+        for e in 0..self.num_experts {
+            self.ema[e].update(loads.expert_load(e) as f64);
+        }
+        self.batch += 1;
+        let mut prep_extra = 0.0;
+        if self.batch % self.adjust_every == 0 {
+            prep_extra = self.maybe_adjust(loads.num_gpus);
+        }
+
+        // FlexMoE's defining rule: replica load = load_e / count_e (even)
+        let budgets: Vec<Vec<u64>> = (0..self.num_experts)
+            .map(|e| {
+                let total = loads.expert_load(e);
+                let k = self.placement.replica_count(e);
+                round_preserving_sum(&vec![total as f64 / k as f64; k], total)
+            })
+            .collect();
+        let routes = route_tokens(&self.placement, loads, &budgets, true, None);
+        let mut gpu_compute = vec![0u64; loads.num_gpus];
+        for (e, grp) in self.placement.replicas.iter().enumerate() {
+            for (r, &g) in grp.iter().enumerate() {
+                gpu_compute[g] += budgets[e][r];
+            }
+        }
+        MoeLayerPlan {
+            gpu_compute,
+            routes,
+            sched_time: 0.0,
+            sched_overlapped: true,
+            prep_extra,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::zipf_loads;
+    use super::*;
+    use crate::stats::imbalance_ratio;
+
+    fn topo() -> Topology {
+        Topology::new(8, 4, 2, 8)
+    }
+
+    #[test]
+    fn even_split_across_replicas() {
+        let mut s = FlexMoe::new(topo(), 16, 1);
+        let lm = zipf_loads(16, 8, 500, 1.0, 2);
+        let plan = s.plan(&lm);
+        assert_eq!(plan.gpu_compute.iter().sum::<u64>(), lm.total());
+        // per-expert inbound volumes differ by at most 1 across replicas
+        for e in 0..16 {
+            let grp = s.placement.replicas[e].clone();
+            let mut per_replica = vec![0u64; grp.len()];
+            for r in &plan.routes {
+                if r.expert == e {
+                    let idx = grp.iter().position(|&g| g == r.dst).unwrap();
+                    per_replica[idx] += r.tokens;
+                }
+            }
+            let max = *per_replica.iter().max().unwrap();
+            let min = *per_replica.iter().min().unwrap();
+            assert!(max - min <= 1, "expert {e}: {per_replica:?}");
+        }
+    }
+
+    #[test]
+    fn adapts_replica_counts_to_skew() {
+        let mut s = FlexMoe::new(topo(), 16, 3);
+        s.adjust_every = 4;
+        for seed in 0..32 {
+            s.plan(&zipf_loads(16, 8, 2000, 1.8, 100 + seed));
+        }
+        // the hottest expert should have gained replicas
+        let max_count = (0..16).map(|e| s.placement.replica_count(e)).max().unwrap();
+        assert!(max_count > 2, "counts never adapted");
+        assert!(s.adjustments > 0);
+    }
+
+    #[test]
+    fn balances_better_than_vanilla_under_skew() {
+        let t = topo();
+        let mut flex = FlexMoe::new(t.clone(), 16, 4);
+        flex.adjust_every = 2;
+        let mut van = super::super::vanilla_ep::VanillaEp::new(t, 16);
+        let mut flex_imb = 0.0;
+        let mut van_imb = 0.0;
+        for seed in 0..24 {
+            let lm = zipf_loads(16, 8, 2000, 1.2, 500 + seed);
+            let fp = flex.plan(&lm);
+            let vp = van.plan(&lm);
+            if seed >= 8 {
+                // after counts settle
+                flex_imb += imbalance_ratio(
+                    &fp.gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                );
+                van_imb += imbalance_ratio(
+                    &vp.gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                );
+            }
+        }
+        assert!(
+            flex_imb < van_imb,
+            "FlexMoE {flex_imb} should beat vanilla {van_imb}"
+        );
+    }
+
+    #[test]
+    fn slot_budget_respected_after_adjustments() {
+        let mut s = FlexMoe::new(topo(), 16, 5);
+        s.adjust_every = 2;
+        for seed in 0..20 {
+            s.plan(&zipf_loads(16, 8, 1000, 1.5, 900 + seed));
+            for g in 0..8 {
+                assert!(s.placement.slots_used(g) <= s.slots_per_gpu + 1);
+            }
+            s.placement.check_consistency().unwrap();
+        }
+    }
+}

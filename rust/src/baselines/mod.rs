@@ -1,0 +1,67 @@
+//! Load-balancing systems under one interface: the paper's baselines
+//! (§7.1) plus MicroMoE itself, all planning against the same cluster
+//! model so Fig. 6/7/8 comparisons are apples-to-apples.
+//!
+//! * [`vanilla_ep::VanillaEp`] — Megatron-LM: fixed placement, tokens go to
+//!   their expert's replica inside the source GPU's EP group.
+//! * [`deepspeed::DeepSpeedPad`] — DeepSpeed/GShard capacity padding: every
+//!   expert padded to the max expert load.
+//! * [`smartmoe::SmartMoe`] — periodic expert-placement re-optimization
+//!   from long-term load statistics (within EP groups).
+//! * [`flexmoe::FlexMoe`] — popularity-proportional replica counts with
+//!   even load split across replicas, DP-group-wide.
+//! * [`micromoe::MicroMoe`] — MicroEP token scheduling (± adaptive
+//!   replacement), the paper's system.
+
+pub mod deepspeed;
+pub mod flexmoe;
+pub mod micromoe;
+pub mod smartmoe;
+pub mod vanilla_ep;
+
+use crate::cluster::sim::MoeLayerPlan;
+use crate::scheduler::LoadMatrix;
+
+/// A load-balancing system planning one MoE layer per micro-batch.
+pub trait MoeSystem {
+    fn name(&self) -> &'static str;
+    /// Decide token→GPU assignment (and implied communication) for one
+    /// micro-batch of gate outputs.
+    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan;
+}
+
+pub use deepspeed::DeepSpeedPad;
+pub use flexmoe::FlexMoe;
+pub use micromoe::MicroMoe;
+pub use smartmoe::SmartMoe;
+pub use vanilla_ep::VanillaEp;
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::rng::{Rng, Zipf};
+    use crate::scheduler::LoadMatrix;
+
+    /// Zipf loads with per-GPU sources, for baseline tests.
+    pub fn zipf_loads(
+        experts: usize,
+        gpus: usize,
+        tokens_per_gpu: u64,
+        s: f64,
+        seed: u64,
+    ) -> LoadMatrix {
+        let mut rng = Rng::new(seed);
+        let z = Zipf::new(experts, s);
+        let mut lm = LoadMatrix::zeros(experts, gpus);
+        for g in 0..gpus {
+            for _ in 0..tokens_per_gpu {
+                lm.add(z.sample(&mut rng), g, 1);
+            }
+        }
+        lm
+    }
+
+    /// Σ tokens crossing GPUs in a plan.
+    pub fn cross_traffic(plan: &crate::cluster::sim::MoeLayerPlan) -> u64 {
+        plan.routes.iter().filter(|r| r.src != r.dst).map(|r| r.tokens).sum()
+    }
+}

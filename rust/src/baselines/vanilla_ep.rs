@@ -1,0 +1,128 @@
+//! Vanilla expert parallelism (Megatron-LM baseline, Fig. 3a).
+//!
+//! Each EP group holds one replica of every expert at a fixed rank; a token
+//! on GPU `g` assigned to expert `e` must go to `e`'s replica inside
+//! `g`'s own EP group. GPU load is therefore fully determined by the gate —
+//! no scheduling space, and the straggler bounds the layer (§2.3).
+
+use super::MoeSystem;
+use crate::cluster::sim::MoeLayerPlan;
+use crate::scheduler::{LoadMatrix, Route};
+use crate::topology::Topology;
+
+pub struct VanillaEp {
+    topo: Topology,
+    num_experts: usize,
+    experts_per_gpu: usize,
+}
+
+impl VanillaEp {
+    pub fn new(topo: Topology, num_experts: usize) -> Self {
+        let experts_per_gpu = topo.experts_per_gpu(num_experts);
+        VanillaEp { topo, num_experts, experts_per_gpu }
+    }
+
+    /// Home GPU of expert `e` for a token originating on `src`.
+    pub fn home_gpu(&self, e: usize, src: usize) -> usize {
+        let rank = e / self.experts_per_gpu;
+        self.topo.ep_group_of(src) * self.topo.ep_degree + rank
+    }
+}
+
+impl MoeSystem for VanillaEp {
+    fn name(&self) -> &'static str {
+        "Megatron-LM (vanilla EP)"
+    }
+
+    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
+        let g_count = loads.num_gpus;
+        let mut gpu_compute = vec![0u64; g_count];
+        let mut routes = Vec::new();
+        for e in 0..self.num_experts {
+            for src in 0..g_count {
+                let n = loads.get(e, src);
+                if n == 0 {
+                    continue;
+                }
+                let dst = self.home_gpu(e, src);
+                gpu_compute[dst] += n;
+                routes.push(Route { expert: e, src, dst, tokens: n });
+            }
+        }
+        MoeLayerPlan {
+            gpu_compute,
+            routes,
+            sched_time: 0.0,
+            sched_overlapped: true,
+            prep_extra: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::zipf_loads;
+    use super::*;
+
+    fn sys() -> VanillaEp {
+        // DP=8, EP=4, d=2: one MicroEP scope of 8 GPUs, 2 EP groups
+        VanillaEp::new(Topology::new(8, 4, 2, 8), 16)
+    }
+
+    #[test]
+    fn tokens_stay_in_their_ep_group() {
+        let mut s = sys();
+        let lm = zipf_loads(16, 8, 500, 1.0, 1);
+        let plan = s.plan(&lm);
+        for r in &plan.routes {
+            assert_eq!(
+                s.topo.ep_group_of(r.src),
+                s.topo.ep_group_of(r.dst),
+                "route escaped its EP group: {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn compute_conserves_tokens() {
+        let mut s = sys();
+        let lm = zipf_loads(16, 8, 500, 1.2, 2);
+        let plan = s.plan(&lm);
+        assert_eq!(plan.gpu_compute.iter().sum::<u64>(), lm.total());
+    }
+
+    #[test]
+    fn expert_rank_mapping() {
+        let s = sys(); // 16 experts / EP degree 4 = 4 per GPU
+        assert_eq!(s.home_gpu(0, 0), 0);
+        assert_eq!(s.home_gpu(5, 0), 1);
+        assert_eq!(s.home_gpu(15, 2), 3);
+        // from the second EP group (GPUs 4..8)
+        assert_eq!(s.home_gpu(0, 5), 4);
+        assert_eq!(s.home_gpu(15, 7), 7);
+    }
+
+    #[test]
+    fn skew_creates_straggler() {
+        let mut s = sys();
+        // all tokens to expert 0 -> GPUs 0 and 4 take everything
+        let mut lm = LoadMatrix::zeros(16, 8);
+        for g in 0..8 {
+            lm.set(0, g, 100);
+        }
+        let plan = s.plan(&lm);
+        assert_eq!(plan.gpu_compute[0], 400);
+        assert_eq!(plan.gpu_compute[4], 400);
+        assert_eq!(plan.gpu_compute[1], 0);
+    }
+
+    #[test]
+    fn local_tokens_do_not_travel() {
+        let mut s = sys();
+        let mut lm = LoadMatrix::zeros(16, 8);
+        lm.set(0, 0, 50); // expert 0 lives on GPU 0 of EP group 0
+        let plan = s.plan(&lm);
+        assert_eq!(plan.routes.len(), 1);
+        assert_eq!(plan.routes[0].src, plan.routes[0].dst);
+    }
+}

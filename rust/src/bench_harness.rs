@@ -1,0 +1,196 @@
+//! Mini-criterion: warmup + timed iterations + robust summary, and an
+//! aligned table printer for regenerating the paper's figures as text.
+//! (criterion is unavailable offline; `cargo bench` targets use
+//! `harness = false` and drive this module from `main`.)
+
+use std::time::Instant;
+
+use crate::ser::Json;
+use crate::stats::Summary;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// per-iteration wall time in seconds
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn median_us(&self) -> f64 {
+        self.summary.p50 * 1e6
+    }
+}
+
+/// Time `f` with warmup; `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples) }
+}
+
+/// Auto-scaling: pick an iteration count so the case runs ~`budget` seconds.
+pub fn bench_auto<F: FnMut()>(name: &str, budget: f64, mut f: F) -> BenchResult {
+    let t0 = Instant::now();
+    f(); // warmup + probe
+    let probe = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget / probe) as usize).clamp(5, 10_000);
+    bench(name, 1, iters, f)
+}
+
+/// Aligned text table (the figures-as-text output of every bench target).
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// JSON form for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+/// Write a bench artifact (JSON) under `target/bench-results/`.
+pub fn save_json(name: &str, j: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("target/bench-results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, j.to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 20, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.summary.p50 > 0.0);
+        assert!(r.summary.min <= r.summary.max);
+        assert_eq!(r.summary.n, 20);
+    }
+
+    #[test]
+    fn auto_scales_iterations() {
+        let r = bench_auto("fast", 0.01, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.summary.n >= 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Fig X", &["system", "speedup"]);
+        t.row(vec!["Megatron-LM".into(), "1.00".into()]);
+        t.row(vec!["MicroMoE".into(), "1.42".into()]);
+        let s = t.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("MicroMoE"));
+        // headers and rows aligned to same width
+        let lines: Vec<&str> = s.lines().filter(|l| !l.is_empty()).collect();
+        assert!(lines[1].len() == lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-6).contains("us"));
+        assert!(fmt_time(5e-3).contains("ms"));
+        assert!(fmt_time(2.0).contains("s"));
+    }
+}

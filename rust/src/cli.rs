@@ -1,0 +1,113 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
+//! positional args, with typed accessors and usage errors.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.str(key) == Some("true")
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let a = parse("--steps 100 --skew 1.5 --name fig7");
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.f64_or("skew", 0.0), 1.5);
+        assert_eq!(a.str("name"), Some("fig7"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--steps=42 --mode=comm");
+        assert_eq!(a.usize_or("steps", 0), 42);
+        assert_eq!(a.str("mode"), Some("comm"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse("--verbose --steps 5 --dry-run");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.usize_or("steps", 0), 5);
+    }
+
+    #[test]
+    fn positionals_and_defaults() {
+        let a = parse("run fig7 --out x.json");
+        assert_eq!(a.positional(), &["run".to_string(), "fig7".to_string()]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b value");
+        assert!(a.flag("a"));
+        assert_eq!(a.str("b"), Some("value"));
+    }
+}

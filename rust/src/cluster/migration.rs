@@ -1,0 +1,164 @@
+//! Expert-parameter migration cost model (§7.5 Fig. 10).
+//!
+//! Adaptive replacement re-initializes expert placements; the cost is
+//! moving expert parameters *and optimizer states* between GPUs. With
+//! BF16 params, FP32 Adam moments and an FP32 master copy (Megatron's
+//! distributed-optimizer layout), each expert parameter costs
+//! 2 + 4 + 4 + 4 = 14 bytes to relocate.
+
+use super::CostModel;
+use crate::placement::Placement;
+use crate::topology::Topology;
+
+/// Bytes per expert for a two-matrix FFN expert (h×f and f×h).
+pub fn expert_bytes(hidden: usize, ffn: usize, with_optimizer: bool) -> u64 {
+    let params = 2 * hidden as u64 * ffn as u64;
+    let per_param = if with_optimizer { 14 } else { 2 };
+    params * per_param
+}
+
+/// A replica movement: expert `e` appears on `dst` where it wasn't before.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Move {
+    pub expert: usize,
+    pub dst: usize,
+    /// chosen source replica (nearest surviving one)
+    pub src: usize,
+}
+
+/// Diff two placements into the replica copies required.
+pub fn placement_diff(old: &Placement, new: &Placement, topo: &Topology) -> Vec<Move> {
+    assert_eq!(old.num_experts, new.num_experts);
+    let mut moves = Vec::new();
+    for e in 0..new.num_experts {
+        for &dst in &new.replicas[e] {
+            if !old.hosts(dst, e) {
+                // prefer an intra-node source if one exists
+                let src = old.replicas[e]
+                    .iter()
+                    .copied()
+                    .min_by_key(|&s| (!topo.same_node(s, dst) as usize, s))
+                    .expect("expert had no replica in old placement");
+                moves.push(Move { expert: e, dst, src });
+            }
+        }
+    }
+    moves
+}
+
+/// Total migration time: per-GPU send/recv volumes over the right link
+/// tiers, bottlenecked by the busiest GPU (copies proceed in parallel).
+pub fn migration_time(
+    moves: &[Move],
+    bytes_per_expert: u64,
+    model: &CostModel,
+    topo: &Topology,
+    num_gpus: usize,
+) -> f64 {
+    if moves.is_empty() {
+        return 0.0;
+    }
+    let mut si = vec![0u64; num_gpus];
+    let mut ri = vec![0u64; num_gpus];
+    let mut sj = vec![0u64; num_gpus];
+    let mut rj = vec![0u64; num_gpus];
+    for m in moves {
+        if topo.same_node(m.src, m.dst) {
+            si[m.src] += bytes_per_expert;
+            ri[m.dst] += bytes_per_expert;
+        } else {
+            sj[m.src] += bytes_per_expert;
+            rj[m.dst] += bytes_per_expert;
+        }
+    }
+    // Migration runs through the framework's re-init path (broadcast +
+    // optimizer-state reshuffle), not a raw memcpy: the paper's Fig. 10
+    // shows hundreds of ms for Table-2 models, implying ~10% of line rate.
+    const MIGRATION_EFF: f64 = 0.10;
+    // training suspension + process-group re-initialization
+    const REINIT_OVERHEAD: f64 = 50e-3;
+    let mut worst: f64 = 0.0;
+    for g in 0..num_gpus {
+        let t = si[g].max(ri[g]) as f64 / (model.nvlink_bw * MIGRATION_EFF)
+            + sj[g].max(rj[g]) as f64 / (model.ib_bw * MIGRATION_EFF);
+        worst = worst.max(t);
+    }
+    worst + model.inter_lat + REINIT_OVERHEAD
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::Placement;
+
+    fn topo4() -> Topology {
+        Topology::new(4, 2, 2, 2)
+    }
+
+    #[test]
+    fn expert_bytes_gpt13b_scale() {
+        // GPT 32×1.3B: h=2048, f=8192 -> 2·h·f = 33.5M params
+        let b = expert_bytes(2048, 8192, true);
+        assert_eq!(b, 2 * 2048 * 8192 * 14);
+    }
+
+    #[test]
+    fn no_moves_for_identical_placements() {
+        let p = Placement::from_replicas(4, vec![vec![0, 1], vec![2, 3]]);
+        assert!(placement_diff(&p, &p, &topo4()).is_empty());
+        assert_eq!(migration_time(&[], 1, &CostModel::h100_testbed(), &topo4(), 4), 0.0);
+    }
+
+    #[test]
+    fn diff_finds_new_replicas() {
+        let old = Placement::from_replicas(4, vec![vec![0, 1], vec![2, 3]]);
+        let new = Placement::from_replicas(4, vec![vec![0, 2], vec![2, 3]]);
+        let moves = placement_diff(&old, &new, &topo4());
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].expert, 0);
+        assert_eq!(moves[0].dst, 2);
+    }
+
+    #[test]
+    fn prefers_intra_node_source() {
+        // expert replicas on {0, 2}; new replica on 3. node(3) = {2,3},
+        // so src must be 2.
+        let old = Placement::from_replicas(4, vec![vec![0, 2]]);
+        let new = Placement::from_replicas(4, vec![vec![0, 2, 3]]);
+        let moves = placement_diff(&old, &new, &topo4());
+        assert_eq!(moves[0].src, 2);
+    }
+
+    #[test]
+    fn migration_magnitude_matches_fig10() {
+        // Fig. 10: hundreds of ms for Table-2 models. Take GPT 16×3.2B
+        // (h=4096, f=16384) and move half of 16 experts across nodes.
+        let model = CostModel::h100_testbed();
+        let topo = Topology::new(8, 4, 2, 4);
+        let old = Placement::from_replicas(
+            8,
+            (0..16).map(|e| vec![e % 8, (e + 4) % 8]).collect(),
+        );
+        let new = Placement::from_replicas(
+            8,
+            (0..16).map(|e| vec![(e + 1) % 8, (e + 5) % 8]).collect(),
+        );
+        let moves = placement_diff(&old, &new, &topo);
+        let t = migration_time(&moves, expert_bytes(4096, 16384, true), &model, &topo, 8);
+        assert!((0.05..2.0).contains(&t), "migration {t}s out of Fig-10 range");
+    }
+
+    #[test]
+    fn more_moves_cost_more() {
+        let model = CostModel::h100_testbed();
+        let topo = topo4();
+        let b = expert_bytes(1024, 4096, true);
+        let one = vec![Move { expert: 0, dst: 3, src: 0 }];
+        let many: Vec<Move> =
+            (0..8).map(|e| Move { expert: e, dst: 3, src: 0 }).collect();
+        assert!(
+            migration_time(&many, b, &model, &topo, 4)
+                > migration_time(&one, b, &model, &topo, 4)
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! Simulated GPU cluster — the substitute for the paper's 4×8 H100 testbed
+//! (DESIGN.md §Offline-environment substitutions).
+//!
+//! The model encodes exactly the two behaviours the paper's evaluation
+//! depends on:
+//!
+//! 1. **Compute ∝ tokens** (§2.3): per-GPU FFN time is affine in the token
+//!    count assigned to that GPU, `t = t_fixed + tokens · t_token`, and an
+//!    MoE layer waits for the slowest GPU (all-to-all synchronization).
+//! 2. **α-β communication** with link tiers: NVLink intra-node, InfiniBand
+//!    inter-node, and a backend efficiency/latency profile for NCCL vs
+//!    DeepEP (App. C.2).
+//!
+//! Constants default to H100-testbed values fitted to the paper's reported
+//! numbers (≈1.3 ms per all-to-all in the Fig. 8 setting) and can be
+//! re-calibrated from real PJRT CPU timings via
+//! [`CostModel::calibrate_compute`] (used by the e2e example).
+
+pub mod migration;
+pub mod sim;
+
+use crate::topology::Topology;
+
+/// All-to-all backend profiles (App. C.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommBackend {
+    /// Default Megatron path: higher software latency, lower achieved bw.
+    Nccl,
+    /// DeepEP: near-line-rate with small fixed cost.
+    DeepEp,
+}
+
+impl CommBackend {
+    /// (per-op software latency seconds, achieved-bandwidth efficiency)
+    fn profile(self) -> (f64, f64) {
+        match self {
+            CommBackend::Nccl => (60e-6, 0.30),
+            CommBackend::DeepEp => (15e-6, 0.75),
+        }
+    }
+}
+
+/// Cluster cost model.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// fixed per-layer FFN launch overhead (s)
+    pub t_fixed: f64,
+    /// per-token FFN compute time (s/token) — both matmuls, fwd only
+    pub t_token: f64,
+    /// bytes moved per token in an all-to-all (hidden · dtype width)
+    pub bytes_per_token: f64,
+    /// NVLink per-GPU bandwidth (B/s)
+    pub nvlink_bw: f64,
+    /// InfiniBand per-GPU bandwidth (B/s)
+    pub ib_bw: f64,
+    /// per-hop latency within a node (s)
+    pub intra_lat: f64,
+    /// per-hop latency across nodes (s)
+    pub inter_lat: f64,
+    pub backend: CommBackend,
+}
+
+impl CostModel {
+    /// H100 testbed defaults for the Fig.-8 model shape
+    /// (hidden=4096, bf16, top-2): calibrated so one all-to-all in the
+    /// Fig. 8 setting costs ≈1.3 ms under NCCL, as the paper reports.
+    pub fn h100_testbed() -> Self {
+        CostModel {
+            // 16k tokens/GPU × top2 ≈ 4096 assignments/GPU/expert-layer at
+            // DP=8; H100 bf16 ~1 PFLOP/s peak, MoE FFN ≈ 16·h² flops/token
+            // at 40% MXU efficiency.
+            t_fixed: 30e-6,
+            t_token: 16.0 * 4096.0 * 4096.0 / (1e15 * 0.40),
+            bytes_per_token: 4096.0 * 2.0,
+            nvlink_bw: 900e9,
+            ib_bw: 100e9, // 2×400 Gbps shared by 8 GPUs
+            intra_lat: 8e-6,
+            inter_lat: 25e-6,
+            backend: CommBackend::Nccl,
+        }
+    }
+
+    /// Scale compute constants for a model's hidden size (t_token ∝ h²)
+    /// and bytes/token (∝ h).
+    pub fn for_hidden_size(mut self, hidden: usize) -> Self {
+        let h = hidden as f64;
+        self.t_token = 16.0 * h * h / (1e15 * 0.40);
+        self.bytes_per_token = h * 2.0;
+        self
+    }
+
+    pub fn with_backend(mut self, backend: CommBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Re-fit (t_fixed, t_token) from two measured (tokens, seconds) points
+    /// — used with real PJRT timings of the expert-FFN artifact.
+    pub fn calibrate_compute(&mut self, small: (u64, f64), large: (u64, f64)) {
+        assert!(large.0 > small.0);
+        let slope = (large.1 - small.1) / (large.0 - small.0) as f64;
+        self.t_token = slope.max(1e-12);
+        self.t_fixed = (small.1 - slope * small.0 as f64).max(0.0);
+    }
+
+    /// FFN compute time for `tokens` on one GPU.
+    pub fn ffn_time(&self, tokens: u64) -> f64 {
+        if tokens == 0 {
+            return 0.0;
+        }
+        self.t_fixed + tokens as f64 * self.t_token
+    }
+
+    /// One all-to-all phase (dispatch or combine) given per-GPU send/recv
+    /// token volumes split by link tier. The phase completes when the
+    /// busiest GPU finishes moving `max(send, recv)` bytes on each tier.
+    pub fn a2a_time(
+        &self,
+        send_intra: &[u64],
+        recv_intra: &[u64],
+        send_inter: &[u64],
+        recv_inter: &[u64],
+    ) -> f64 {
+        let (sw_lat, eff) = self.backend.profile();
+        let g = send_intra.len();
+        // an all-to-all with nothing to move is skipped entirely
+        let total: u64 = send_intra.iter().chain(send_inter).chain(recv_intra).chain(recv_inter).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut worst: f64 = 0.0;
+        let mut any_inter = false;
+        for i in 0..g {
+            let intra_bytes = send_intra[i].max(recv_intra[i]) as f64 * self.bytes_per_token;
+            let inter_bytes = send_inter[i].max(recv_inter[i]) as f64 * self.bytes_per_token;
+            if send_inter[i] > 0 || recv_inter[i] > 0 {
+                any_inter = true;
+            }
+            let t = intra_bytes / (self.nvlink_bw * eff) + inter_bytes / (self.ib_bw * eff);
+            worst = worst.max(t);
+        }
+        let lat = sw_lat + if any_inter { self.inter_lat } else { self.intra_lat };
+        lat + worst
+    }
+
+    /// All-to-all with volumes already split by tier from routes.
+    pub fn a2a_time_from_routes(
+        &self,
+        routes: &[crate::scheduler::Route],
+        num_gpus: usize,
+        topo: &Topology,
+    ) -> f64 {
+        let mut si = vec![0u64; num_gpus];
+        let mut ri = vec![0u64; num_gpus];
+        let mut sj = vec![0u64; num_gpus];
+        let mut rj = vec![0u64; num_gpus];
+        for r in routes {
+            if r.src == r.dst {
+                continue;
+            }
+            if topo.same_node(r.src, r.dst) {
+                si[r.src] += r.tokens;
+                ri[r.dst] += r.tokens;
+            } else {
+                sj[r.src] += r.tokens;
+                rj[r.dst] += r.tokens;
+            }
+        }
+        self.a2a_time(&si, &ri, &sj, &rj)
+    }
+
+    /// All-gather of `bytes` per rank over `group` ranks (ring model) —
+    /// the scheduler's load-information collection step (§5.3).
+    pub fn allgather_time(&self, bytes_per_rank: f64, group: usize, crosses_nodes: bool) -> f64 {
+        let (sw_lat, eff) = self.backend.profile();
+        let bw = if crosses_nodes { self.ib_bw } else { self.nvlink_bw } * eff;
+        let hop = if crosses_nodes { self.inter_lat } else { self.intra_lat };
+        let steps = group.saturating_sub(1) as f64;
+        sw_lat + steps * (hop + bytes_per_rank / bw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ffn_time_affine_in_tokens() {
+        let m = CostModel::h100_testbed();
+        let t1 = m.ffn_time(1000);
+        let t2 = m.ffn_time(2000);
+        let t3 = m.ffn_time(3000);
+        assert!((t3 - t2 - (t2 - t1)).abs() < 1e-12, "not affine");
+        assert_eq!(m.ffn_time(0), 0.0);
+    }
+
+    #[test]
+    fn a2a_matches_paper_magnitude() {
+        // Fig. 8 setting: DP=8, mbs=8, seq=2048, top2, h=4096 -> each GPU
+        // sends ~(7/8)·32768 assignments. Paper: ~1.3 ms per A2A (NCCL).
+        let m = CostModel::h100_testbed();
+        let per_gpu = 8 * 2048 * 2; // assignments per source GPU
+        let cross = (per_gpu as f64 * 7.0 / 8.0) as u64;
+        let t = m.a2a_time(&[cross; 8], &[cross; 8], &[0; 8], &[0; 8]);
+        assert!(
+            (0.5e-3..3e-3).contains(&t),
+            "A2A {t} s out of paper's magnitude (~1.3ms)"
+        );
+    }
+
+    #[test]
+    fn deepep_faster_than_nccl() {
+        let nccl = CostModel::h100_testbed();
+        let deep = CostModel::h100_testbed().with_backend(CommBackend::DeepEp);
+        let v = [4096u64; 8];
+        let z = [0u64; 8];
+        assert!(deep.a2a_time(&v, &v, &z, &z) < nccl.a2a_time(&v, &v, &z, &z));
+    }
+
+    #[test]
+    fn inter_node_slower_than_intra() {
+        let m = CostModel::h100_testbed();
+        let v = [4096u64; 8];
+        let z = [0u64; 8];
+        let intra = m.a2a_time(&v, &v, &z, &z);
+        let inter = m.a2a_time(&z, &z, &v, &v);
+        assert!(inter > intra * 2.0, "intra {intra} inter {inter}");
+    }
+
+    #[test]
+    fn calibration_fits_line() {
+        let mut m = CostModel::h100_testbed();
+        // synthetic measurements: t = 1ms + tokens * 2us
+        m.calibrate_compute((100, 1e-3 + 100.0 * 2e-6), (1000, 1e-3 + 1000.0 * 2e-6));
+        assert!((m.t_token - 2e-6).abs() < 1e-12);
+        assert!((m.t_fixed - 1e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a2a_bottleneck_is_max_gpu() {
+        let m = CostModel::h100_testbed();
+        let balanced = m.a2a_time(&[100, 100], &[100, 100], &[0, 0], &[0, 0]);
+        let skewed = m.a2a_time(&[200, 0], &[0, 200], &[0, 0], &[0, 0]);
+        assert!(skewed > balanced);
+    }
+
+    #[test]
+    fn allgather_scales_with_group() {
+        let m = CostModel::h100_testbed();
+        let t8 = m.allgather_time(1024.0, 8, false);
+        let t16 = m.allgather_time(1024.0, 16, false);
+        assert!(t16 > t8);
+    }
+
+    #[test]
+    fn routes_split_by_tier() {
+        let topo = Topology::new(4, 2, 2, 2); // nodes {0,1}, {2,3}
+        let m = CostModel::h100_testbed();
+        use crate::scheduler::Route;
+        let routes = vec![
+            Route { expert: 0, src: 0, dst: 1, tokens: 1000 }, // intra
+            Route { expert: 0, src: 0, dst: 2, tokens: 1000 }, // inter
+            Route { expert: 1, src: 3, dst: 3, tokens: 999 },  // local, free
+        ];
+        let t = m.a2a_time_from_routes(&routes, 4, &topo);
+        let only_intra =
+            m.a2a_time(&[1000, 0, 0, 0], &[0, 1000, 0, 0], &[0; 4], &[0; 4]);
+        assert!(t > only_intra);
+    }
+}

@@ -1,0 +1,202 @@
+//! MoE-layer and training-iteration timing simulation.
+//!
+//! [`moe_layer_time`] produces the Fig.-8 breakdown (prep / dispatch A2A /
+//! expert compute / combine A2A) for one micro-batch given a system's plan;
+//! [`TrainIterationModel`] composes layer times into end-to-end iteration
+//! time with pipeline-parallel bubbles and gradient sync (Fig. 6).
+
+use super::CostModel;
+use crate::scheduler::Route;
+use crate::topology::Topology;
+
+/// What a load-balancing system decided for one MoE layer of one
+/// micro-batch (produced by [`crate::baselines::MoeSystem::plan`]).
+#[derive(Clone, Debug)]
+pub struct MoeLayerPlan {
+    /// tokens to compute per GPU (FFN input rows, already top-K expanded)
+    pub gpu_compute: Vec<u64>,
+    /// token movements (src != dst entries cost communication)
+    pub routes: Vec<Route>,
+    /// CPU scheduling time for this micro-batch (s); 0 for static systems
+    pub sched_time: f64,
+    /// whether scheduling hides under the permute op (§5.4)
+    pub sched_overlapped: bool,
+    /// extra prep charged to this layer (backend pre-processing,
+    /// amortized migration, padding setup …)
+    pub prep_extra: f64,
+}
+
+/// Fig.-8 execution-time breakdown of one MoE layer (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MoeLayerBreakdown {
+    /// all-gather of load info + (non-overlapped) scheduling + extras
+    pub prep: f64,
+    pub dispatch: f64,
+    pub compute: f64,
+    pub combine: f64,
+}
+
+impl MoeLayerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.prep + self.dispatch + self.compute + self.combine
+    }
+}
+
+/// Time one MoE layer under the cost model.
+pub fn moe_layer_time(
+    model: &CostModel,
+    topo: &Topology,
+    plan: &MoeLayerPlan,
+) -> MoeLayerBreakdown {
+    let g = plan.gpu_compute.len();
+    // load-info all-gather: E×G u32 counts ≈ tiny; dominated by latency
+    let crosses = g > topo.gpus_per_node;
+    let info_bytes = 4.0 * 64.0; // per-rank expert-count vector (capped)
+    let gather = if plan.sched_time > 0.0 {
+        model.allgather_time(info_bytes, g, crosses)
+    } else {
+        0.0
+    };
+    let sched = if plan.sched_overlapped { 0.0 } else { plan.sched_time };
+    let prep = gather + sched + plan.prep_extra;
+
+    let dispatch = model.a2a_time_from_routes(&plan.routes, g, topo);
+    // combine moves the same volumes in reverse; max(send,recv) symmetric
+    let combine = dispatch;
+
+    let compute = plan
+        .gpu_compute
+        .iter()
+        .map(|&t| model.ffn_time(t))
+        .fold(0.0, f64::max);
+
+    MoeLayerBreakdown { prep, dispatch, compute, combine }
+}
+
+/// End-to-end iteration model (Fig. 6): GPipe-style schedule.
+#[derive(Clone, Debug)]
+pub struct TrainIterationModel {
+    pub pp_degree: usize,
+    pub layers_per_stage: usize,
+    pub num_microbatches: usize,
+    /// per-micro-batch attention + dense time per layer (s)
+    pub attn_time: f64,
+    /// per-iteration gradient sync (s)
+    pub grad_sync: f64,
+    /// backward/forward compute ratio (≈2 for matmul-dominated layers)
+    pub bwd_factor: f64,
+}
+
+impl TrainIterationModel {
+    /// Paper testbed defaults: PP = nodes, DP = 8 (§7.1).
+    pub fn paper_default(pp: usize, layers: usize, num_microbatches: usize) -> Self {
+        TrainIterationModel {
+            pp_degree: pp,
+            layers_per_stage: layers / pp.max(1),
+            num_microbatches,
+            attn_time: 0.8e-3,
+            grad_sync: 5e-3,
+            bwd_factor: 2.0,
+        }
+    }
+
+    /// Iteration time from the mean per-micro-batch MoE-layer breakdown.
+    ///
+    /// fwd stage time = layers·(attn + moe_total); bwd multiplies compute
+    /// by `bwd_factor` and repeats both all-to-alls. GPipe bubble:
+    /// (m + p − 1)/m scaling of the per-micro-batch pipeline.
+    pub fn iteration_time(&self, moe: &MoeLayerBreakdown) -> f64 {
+        let fwd_stage =
+            self.layers_per_stage as f64 * (self.attn_time + moe.total());
+        let bwd_stage = self.layers_per_stage as f64
+            * (self.attn_time * self.bwd_factor
+                + moe.prep
+                + self.bwd_factor * moe.compute
+                + moe.dispatch
+                + moe.combine);
+        let per_mb = fwd_stage + bwd_stage;
+        let m = self.num_microbatches as f64;
+        let p = self.pp_degree as f64;
+        per_mb * (m + p - 1.0) + self.grad_sync
+    }
+
+    /// Throughput in tokens/s given tokens per micro-batch (per DP group).
+    pub fn throughput(&self, moe: &MoeLayerBreakdown, tokens_per_mb: u64) -> f64 {
+        let t = self.iteration_time(moe);
+        (tokens_per_mb * self.num_microbatches as u64) as f64 / t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_plan(per_gpu: u64, g: usize) -> MoeLayerPlan {
+        MoeLayerPlan {
+            gpu_compute: vec![per_gpu; g],
+            routes: Vec::new(),
+            sched_time: 0.0,
+            sched_overlapped: false,
+            prep_extra: 0.0,
+        }
+    }
+
+    #[test]
+    fn compute_dominated_by_straggler() {
+        let m = CostModel::h100_testbed();
+        let topo = Topology::new(8, 4, 2, 8);
+        let mut plan = flat_plan(1000, 8);
+        let balanced = moe_layer_time(&m, &topo, &plan);
+        plan.gpu_compute[3] = 8000; // straggler
+        let skewed = moe_layer_time(&m, &topo, &plan);
+        assert!(skewed.compute > balanced.compute * 4.0);
+    }
+
+    #[test]
+    fn overlap_hides_scheduling() {
+        let m = CostModel::h100_testbed();
+        let topo = Topology::new(8, 4, 2, 8);
+        let mut plan = flat_plan(1000, 8);
+        plan.sched_time = 500e-6;
+        let visible = moe_layer_time(&m, &topo, &plan);
+        plan.sched_overlapped = true;
+        let hidden = moe_layer_time(&m, &topo, &plan);
+        assert!(visible.prep > hidden.prep + 400e-6);
+        assert_eq!(visible.compute, hidden.compute);
+    }
+
+    #[test]
+    fn combine_mirrors_dispatch() {
+        let m = CostModel::h100_testbed();
+        let topo = Topology::new(4, 2, 2, 8);
+        let plan = MoeLayerPlan {
+            gpu_compute: vec![100; 4],
+            routes: vec![Route { expert: 0, src: 0, dst: 1, tokens: 5000 }],
+            sched_time: 0.0,
+            sched_overlapped: false,
+            prep_extra: 0.0,
+        };
+        let b = moe_layer_time(&m, &topo, &plan);
+        assert_eq!(b.dispatch, b.combine);
+        assert!(b.dispatch > 0.0);
+    }
+
+    #[test]
+    fn iteration_time_has_pipeline_bubble() {
+        let moe = MoeLayerBreakdown { prep: 0.0, dispatch: 1e-3, compute: 2e-3, combine: 1e-3 };
+        let flat = TrainIterationModel::paper_default(1, 8, 8).iteration_time(&moe);
+        let piped = TrainIterationModel::paper_default(4, 8, 8).iteration_time(&moe);
+        // 4 stages: fewer layers per stage but (m+p-1) bubble
+        let per_stage_ratio = (8.0 + 4.0 - 1.0) / (8.0 + 1.0 - 1.0) / 4.0;
+        let expected = flat * per_stage_ratio;
+        assert!((piped - expected).abs() / expected < 0.2, "{piped} vs {expected}");
+    }
+
+    #[test]
+    fn throughput_decreases_with_straggler() {
+        let model = TrainIterationModel::paper_default(2, 8, 8);
+        let good = MoeLayerBreakdown { prep: 0.0, dispatch: 1e-3, compute: 2e-3, combine: 1e-3 };
+        let bad = MoeLayerBreakdown { compute: 6e-3, ..good };
+        assert!(model.throughput(&good, 8192) > 1.5 * model.throughput(&bad, 8192));
+    }
+}

@@ -1,0 +1,209 @@
+//! Model/experiment configuration: Table-2 presets and a small
+//! `key = value` config-file parser (no serde/toml crates offline).
+
+use std::collections::HashMap;
+
+use crate::topology::Topology;
+
+/// One row of Table 2 (model hyperparameters used in §7.2 / Fig. 6/10).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    pub layers: usize,
+    pub heads: usize,
+    pub hidden: usize,
+    pub ffn_hidden: usize,
+    pub seq: usize,
+    pub experts: usize,
+    pub topk: usize,
+    pub micro_batch: usize,
+    pub global_batch: usize,
+    pub num_gpus: usize,
+    pub pp_degree: usize,
+    pub ep_degree: usize,
+}
+
+impl ModelPreset {
+    /// Tokens per GPU per micro-batch (gate inputs).
+    pub fn tokens_per_gpu(&self) -> u64 {
+        (self.micro_batch * self.seq) as u64
+    }
+
+    /// Gate assignments per GPU per micro-batch (top-K expanded).
+    pub fn assignments_per_gpu(&self) -> u64 {
+        self.tokens_per_gpu() * self.topk as u64
+    }
+
+    /// DP degree on this preset's GPU count.
+    pub fn dp_degree(&self) -> usize {
+        self.num_gpus / self.pp_degree
+    }
+
+    /// Number of micro-batches per iteration (per DP group).
+    pub fn num_microbatches(&self) -> usize {
+        self.global_batch / (self.micro_batch * self.dp_degree())
+    }
+
+    /// Paper-§7.1 topology: DP = 8, EP = 4, d = 2, 8 GPUs/node.
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.dp_degree(), self.ep_degree, 2, 8)
+    }
+
+    /// Per-expert parameter count (two FFN matrices).
+    pub fn expert_params(&self) -> u64 {
+        2 * self.hidden as u64 * self.ffn_hidden as u64
+    }
+}
+
+/// The five Table-2 models.
+pub fn table2() -> Vec<ModelPreset> {
+    vec![
+        ModelPreset {
+            name: "GPT 32x1.3B",
+            layers: 24, heads: 16, hidden: 2048, ffn_hidden: 8192, seq: 2048,
+            experts: 32, topk: 2, micro_batch: 4, global_batch: 512,
+            num_gpus: 16, pp_degree: 2, ep_degree: 4,
+        },
+        ModelPreset {
+            name: "GPT 16x3.2B",
+            layers: 16, heads: 32, hidden: 4096, ffn_hidden: 16384, seq: 2048,
+            experts: 16, topk: 2, micro_batch: 2, global_batch: 512,
+            num_gpus: 16, pp_degree: 2, ep_degree: 4,
+        },
+        ModelPreset {
+            name: "GPT 8x6.7B",
+            layers: 32, heads: 32, hidden: 4096, ffn_hidden: 16384, seq: 2048,
+            experts: 8, topk: 2, micro_batch: 2, global_batch: 512,
+            num_gpus: 32, pp_degree: 4, ep_degree: 4,
+        },
+        ModelPreset {
+            name: "Mixtral 16x2B",
+            layers: 32, heads: 32, hidden: 2048, ffn_hidden: 8192, seq: 4096,
+            experts: 16, topk: 2, micro_batch: 2, global_batch: 256,
+            num_gpus: 16, pp_degree: 2, ep_degree: 4,
+        },
+        ModelPreset {
+            name: "Mixtral 8x7B",
+            layers: 32, heads: 32, hidden: 4096, ffn_hidden: 14336, seq: 4096,
+            experts: 8, topk: 2, micro_batch: 1, global_batch: 256,
+            num_gpus: 32, pp_degree: 4, ep_degree: 4,
+        },
+    ]
+}
+
+pub fn preset(name: &str) -> Option<ModelPreset> {
+    table2().into_iter().find(|p| p.name.eq_ignore_ascii_case(name))
+}
+
+/// Minimal `key = value` config file: `#` comments, blank lines, string /
+/// number / bool values. Flat namespace (sections become `section.key`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigFile {
+    values: HashMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile, String> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected key = value", lineno + 1));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(ConfigFile { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigFile, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        ConfigFile::parse(&text)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        self.str(key)?.parse().ok()
+    }
+
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        self.str(key)?.parse().ok()
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.str(key)? {
+            "true" | "1" | "yes" => Some(true),
+            "false" | "0" | "no" => Some(false),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_matches_paper() {
+        let t = table2();
+        assert_eq!(t.len(), 5);
+        let gpt13 = &t[0];
+        assert_eq!(gpt13.experts, 32);
+        assert_eq!(gpt13.hidden, 2048);
+        assert_eq!(gpt13.dp_degree(), 8);
+        assert_eq!(gpt13.num_microbatches(), 16); // 512 / (4·8)
+        let mix7 = &t[4];
+        assert_eq!(mix7.ffn_hidden, 14336);
+        assert_eq!(mix7.dp_degree(), 8);
+    }
+
+    #[test]
+    fn topology_matches_section71() {
+        for p in table2() {
+            let topo = p.topology();
+            assert_eq!(topo.dp_degree, 8);
+            assert_eq!(topo.ep_degree, 4);
+            assert_eq!(topo.num_ep_groups(), 2);
+            assert_eq!(topo.num_microep_groups(), 1); // d = 2
+        }
+    }
+
+    #[test]
+    fn preset_lookup_case_insensitive() {
+        assert!(preset("gpt 32x1.3b").is_some());
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn config_file_parsing() {
+        let cfg = ConfigFile::parse(
+            "# comment\nseed = 42\n[sim]\nskew = 1.5  # inline\nname = \"fig7\"\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.usize("seed"), Some(42));
+        assert_eq!(cfg.f64("sim.skew"), Some(1.5));
+        assert_eq!(cfg.str("sim.name"), Some("fig7"));
+        assert_eq!(cfg.bool("sim.flag"), Some(true));
+        assert_eq!(cfg.str("missing"), None);
+    }
+
+    #[test]
+    fn config_rejects_garbage() {
+        assert!(ConfigFile::parse("not a kv line").is_err());
+    }
+}

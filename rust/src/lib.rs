@@ -1,0 +1,40 @@
+//! # MicroMoE — fine-grained MoE load balancing with LP token scheduling
+//!
+//! Reproduction of *"MicroMoE: Fine-grained Load Balancing for
+//! Mixture-of-Experts with Token Scheduling"* (a.k.a. *"Fine-grained MoE
+//! Load Balancing with Linear Programming"*, CS.DC 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: per-micro-batch
+//!   token scheduling via linear programming ([`scheduler`]), expert
+//!   placement theory ([`placement`]), adaptive replacement ([`adaptive`]),
+//!   plus every substrate the paper depends on (LP solver [`lp`], cluster
+//!   model [`cluster`], baselines [`baselines`], workloads [`workload`]).
+//! * **Layer 2/1 (python/, build-time only)** — JAX GPT-MoE train step and
+//!   Pallas grouped-FFN kernels, AOT-lowered to `artifacts/*.hlo.txt` and
+//!   executed from rust through PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the full inventory and the per-figure experiment index.
+
+pub mod adaptive;
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod lp;
+pub mod moe;
+pub mod placement;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod ser;
+pub mod stats;
+pub mod topology;
+pub mod train;
+pub mod workload;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,29 @@
+//! Linear-programming substrate.
+//!
+//! The paper solves its per-micro-batch scheduling LP (LPP 1 / LPP 4) with
+//! HiGHS on a single CPU thread, warm-starting each micro-batch from the
+//! previous solution because only the constraint *bounds* (`load_e`) change
+//! while the constraint matrix (expert placement) is fixed (§5.1).
+//!
+//! No LP-solver crate is reachable offline, so this module implements the
+//! solver from scratch:
+//!
+//! * [`problem`] — model: variables, `≤ / = / ≥` rows, objective sense.
+//! * [`simplex`] — dense two-phase primal simplex (Dantzig pricing with a
+//!   Bland fallback for anti-cycling) producing a [`simplex::Solution`]
+//!   that carries its optimal basis.
+//! * [`warm`] — dual-simplex re-solve for a changed rhs starting from a
+//!   previous optimal basis: exactly the HiGHS warm-start pattern the paper
+//!   relies on, typically finishing in a handful of pivots.
+//!
+//! Scale sanity: LPP 1 has `O(|E|·d)` variables and `O(|E| + |G|)` rows —
+//! a few hundred of each at the paper's largest configuration (64 GPUs,
+//! 256 experts), well inside dense-tableau territory.
+
+pub mod problem;
+pub mod simplex;
+pub mod warm;
+
+pub use problem::{Constraint, LpProblem, Relation};
+pub use simplex::{SimplexError, Solution, Solver};
+pub use warm::WarmSolver;

@@ -1,0 +1,101 @@
+//! LP problem model: `min c'x  s.t.  row_i · x {≤,=,≥} b_i,  x ≥ 0`.
+
+/// Row relation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Relation {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// One constraint row, sparse.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    /// (variable index, coefficient) pairs; indices must be unique.
+    pub terms: Vec<(usize, f64)>,
+    pub rel: Relation,
+    pub rhs: f64,
+}
+
+/// Minimization LP with non-negative variables.
+#[derive(Clone, Debug, Default)]
+pub struct LpProblem {
+    pub num_vars: usize,
+    /// Objective coefficients (len == num_vars); minimized.
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl LpProblem {
+    pub fn new(num_vars: usize) -> Self {
+        LpProblem { num_vars, objective: vec![0.0; num_vars], constraints: Vec::new() }
+    }
+
+    pub fn set_objective(&mut self, var: usize, coeff: f64) {
+        self.objective[var] = coeff;
+    }
+
+    pub fn add(&mut self, terms: Vec<(usize, f64)>, rel: Relation, rhs: f64) -> usize {
+        debug_assert!(terms.iter().all(|&(v, _)| v < self.num_vars));
+        self.constraints.push(Constraint { terms, rel, rhs });
+        self.constraints.len() - 1
+    }
+
+    /// Replace the rhs of a row (the warm-start update path: placement fixes
+    /// the matrix, per-micro-batch loads change only `b`).
+    pub fn set_rhs(&mut self, row: usize, rhs: f64) {
+        self.constraints[row].rhs = rhs;
+    }
+
+    /// Evaluate `row · x`.
+    pub fn row_dot(&self, row: usize, x: &[f64]) -> f64 {
+        self.constraints[row].terms.iter().map(|&(v, c)| c * x[v]).sum()
+    }
+
+    /// Check feasibility of a candidate point within tolerance.
+    pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
+        if x.iter().any(|&v| v < -tol) {
+            return false;
+        }
+        self.constraints.iter().enumerate().all(|(i, c)| {
+            let lhs = self.row_dot(i, x);
+            match c.rel {
+                Relation::Le => lhs <= c.rhs + tol,
+                Relation::Ge => lhs >= c.rhs - tol,
+                Relation::Eq => (lhs - c.rhs).abs() <= tol,
+            }
+        })
+    }
+
+    /// Objective value at a point.
+    pub fn objective_at(&self, x: &[f64]) -> f64 {
+        self.objective.iter().zip(x).map(|(c, v)| c * v).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasibility_check() {
+        // min x0 s.t. x0 + x1 = 2, x0 <= 1.5
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, 1.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Relation::Eq, 2.0);
+        p.add(vec![(0, 1.0)], Relation::Le, 1.5);
+        assert!(p.is_feasible(&[1.0, 1.0], 1e-9));
+        assert!(p.is_feasible(&[0.0, 2.0], 1e-9));
+        assert!(!p.is_feasible(&[2.0, 0.0], 1e-9)); // violates <=
+        assert!(!p.is_feasible(&[1.0, 0.5], 1e-9)); // violates =
+        assert!(!p.is_feasible(&[-0.1, 2.1], 1e-9)); // negative var
+    }
+
+    #[test]
+    fn objective_eval() {
+        let mut p = LpProblem::new(3);
+        p.set_objective(1, 2.0);
+        p.set_objective(2, -1.0);
+        assert_eq!(p.objective_at(&[5.0, 3.0, 4.0]), 2.0);
+    }
+}

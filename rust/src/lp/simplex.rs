@@ -1,0 +1,565 @@
+//! Dense two-phase primal simplex with an embedded dual-simplex step,
+//! full-tableau representation.
+//!
+//! Built for the paper's LP scale (hundreds of variables/rows) where a
+//! dense tableau beats sparse machinery. The tableau keeps *all* columns —
+//! including artificials — because the columns that formed the initial
+//! identity are exactly `B⁻¹`, which the warm-start path uses to refresh
+//! the rhs when only `b` changes between micro-batches (§5.1).
+
+use super::problem::{LpProblem, Relation};
+
+const TOL: f64 = 1e-9;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SimplexError {
+    #[error("LP infeasible (phase-1 objective {0} > 0)")]
+    Infeasible(f64),
+    #[error("LP unbounded below")]
+    Unbounded,
+    #[error("iteration limit {0} exceeded (cycling?)")]
+    IterLimit(usize),
+}
+
+/// Optimal solution to an [`LpProblem`].
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// Values of the original (pre-standard-form) variables.
+    pub x: Vec<f64>,
+    pub objective: f64,
+    /// Total simplex pivots across phases (the Fig-11 warm-solve metric).
+    pub iterations: usize,
+}
+
+/// Tableau simplex solver. Retains its final state so a [`super::warm::WarmSolver`]
+/// can re-solve with a changed rhs via dual simplex.
+pub struct Solver {
+    pub(crate) n_orig: usize,
+    pub(crate) ncols: usize,
+    pub(crate) m: usize,
+    /// Standard-form cost vector (len ncols; artificials get 0 here but are
+    /// blocked from entering after phase 1).
+    pub(crate) cost: Vec<f64>,
+    /// Row-major tableau, stride `ncols + 1`; last column is rhs.
+    pub(crate) tab: Vec<f64>,
+    /// Reduced-cost row (len ncols), plus blocked flags for artificials.
+    pub(crate) red: Vec<f64>,
+    pub(crate) blocked: Vec<bool>,
+    pub(crate) basis: Vec<usize>,
+    /// Column that held row i's +1 in the *initial* identity (slack or
+    /// artificial): current tableau column `idcol[i]` is the i-th column
+    /// of B⁻¹.
+    pub(crate) idcol: Vec<usize>,
+    /// Sign applied to each original row to make b >= 0 at build time.
+    pub(crate) row_sign: Vec<f64>,
+    pub(crate) iterations: usize,
+    /// scratch: pivot-row snapshot + its nonzero column indices (reused
+    /// across pivots — §Perf: avoids a Vec allocation per pivot and lets
+    /// row updates touch only the pivot row's nonzero columns, which stays
+    /// small for LPP-1's sparse constraint structure)
+    scratch_row: Vec<f64>,
+    scratch_nz: Vec<usize>,
+}
+
+impl Solver {
+    /// Build the standard-form tableau from a problem.
+    pub fn new(p: &LpProblem) -> Self {
+        let m = p.constraints.len();
+        let n = p.num_vars;
+
+        // column layout: [orig | slacks/surplus | artificials]
+        let mut n_slack = 0usize;
+        for c in &p.constraints {
+            if c.rel != Relation::Eq {
+                n_slack += 1;
+            }
+        }
+        // worst case one artificial per row; allocate lazily below
+        let mut cols_slack = Vec::with_capacity(m); // per-row slack col or usize::MAX
+        let mut next_slack = n;
+        let art_base = n + n_slack;
+        let mut next_art = art_base;
+
+        let mut row_sign = vec![1.0; m];
+        let mut rows: Vec<(Vec<(usize, f64)>, f64)> = Vec::with_capacity(m);
+        let mut idcol = vec![usize::MAX; m];
+        let mut basis = vec![usize::MAX; m];
+
+        for (i, c) in p.constraints.iter().enumerate() {
+            let mut rel = c.rel;
+            let mut rhs = c.rhs;
+            let mut sign = 1.0;
+            if rhs < 0.0 {
+                sign = -1.0;
+                rhs = -rhs;
+                rel = match rel {
+                    Relation::Le => Relation::Ge,
+                    Relation::Ge => Relation::Le,
+                    Relation::Eq => Relation::Eq,
+                };
+            }
+            row_sign[i] = sign;
+            let mut terms: Vec<(usize, f64)> =
+                c.terms.iter().map(|&(v, co)| (v, sign * co)).collect();
+            match rel {
+                Relation::Le => {
+                    let s = next_slack;
+                    next_slack += 1;
+                    terms.push((s, 1.0));
+                    cols_slack.push(s);
+                    basis[i] = s;
+                    idcol[i] = s;
+                }
+                Relation::Ge => {
+                    let s = next_slack;
+                    next_slack += 1;
+                    terms.push((s, -1.0));
+                    cols_slack.push(s);
+                    let a = next_art;
+                    next_art += 1;
+                    terms.push((a, 1.0));
+                    basis[i] = a;
+                    idcol[i] = a;
+                }
+                Relation::Eq => {
+                    cols_slack.push(usize::MAX);
+                    let a = next_art;
+                    next_art += 1;
+                    terms.push((a, 1.0));
+                    basis[i] = a;
+                    idcol[i] = a;
+                }
+            }
+            rows.push((terms, rhs));
+        }
+
+        let ncols = next_art;
+        let stride = ncols + 1;
+        let mut tab = vec![0.0; m * stride];
+        for (i, (terms, rhs)) in rows.iter().enumerate() {
+            for &(v, co) in terms {
+                tab[i * stride + v] = co;
+            }
+            tab[i * stride + ncols] = *rhs;
+        }
+
+        let mut cost = vec![0.0; ncols];
+        cost[..n].copy_from_slice(&p.objective);
+        let mut blocked = vec![false; ncols];
+        for b in blocked.iter_mut().take(ncols).skip(art_base) {
+            *b = true; // artificials never re-enter after phase 1
+        }
+
+        Solver {
+            n_orig: n,
+            ncols,
+            m,
+            cost,
+            tab,
+            red: vec![0.0; ncols],
+            blocked,
+            basis,
+            idcol,
+            row_sign,
+            iterations: 0,
+            scratch_row: vec![0.0; stride],
+            scratch_nz: Vec::with_capacity(stride),
+        }
+    }
+
+    #[inline]
+    fn stride(&self) -> usize {
+        self.ncols + 1
+    }
+
+    #[inline]
+    pub(crate) fn rhs(&self, i: usize) -> f64 {
+        self.tab[i * self.stride() + self.ncols]
+    }
+
+    /// Gaussian pivot on (row, col), updating the reduced-cost row too.
+    ///
+    /// Row updates iterate only the pivot row's *nonzero* columns (collected
+    /// once per pivot into reusable scratch buffers): for the scheduling
+    /// LPs, constraint rows keep most entries zero even after fill-in, so
+    /// this turns the O(m·n) pivot into O(m·nnz) — the dominant §Perf win
+    /// on the per-micro-batch path.
+    pub(crate) fn pivot(&mut self, row: usize, col: usize) {
+        let stride = self.stride();
+        let piv = self.tab[row * stride + col];
+        debug_assert!(piv.abs() > TOL, "pivot on ~0");
+        let inv = 1.0 / piv;
+        let (r0, r1) = (row * stride, row * stride + stride);
+        // snapshot pivot row (scaled) + nonzero structure into scratch
+        self.scratch_nz.clear();
+        for (j, v) in self.tab[r0..r1].iter_mut().enumerate() {
+            *v *= inv;
+            let x = *v;
+            self.scratch_row[j] = x;
+            if x != 0.0 {
+                self.scratch_nz.push(j);
+            }
+        }
+        for i in 0..self.m {
+            if i == row {
+                continue;
+            }
+            let f = self.tab[i * stride + col];
+            if f.abs() <= TOL {
+                self.tab[i * stride + col] = 0.0;
+                continue;
+            }
+            let base = i * stride;
+            for &j in &self.scratch_nz {
+                self.tab[base + j] -= f * self.scratch_row[j];
+            }
+            self.tab[base + col] = 0.0; // exact zero for numerical hygiene
+        }
+        let f = self.red[col];
+        if f.abs() > TOL {
+            for &j in &self.scratch_nz {
+                if j < self.ncols {
+                    self.red[j] -= f * self.scratch_row[j];
+                }
+            }
+        }
+        self.red[col] = 0.0;
+        self.basis[row] = col;
+        self.iterations += 1;
+    }
+
+    /// Recompute reduced costs `r_j = c_j - c_B' B⁻¹ A_j` for a cost vector.
+    fn reset_reduced(&mut self, cost: &[f64]) {
+        let stride = self.stride();
+        self.red.copy_from_slice(cost);
+        for i in 0..self.m {
+            let cb = cost[self.basis[i]];
+            if cb.abs() <= TOL {
+                continue;
+            }
+            let base = i * stride;
+            for j in 0..self.ncols {
+                self.red[j] -= cb * self.tab[base + j];
+            }
+        }
+        // basic columns have exactly zero reduced cost
+        for i in 0..self.m {
+            self.red[self.basis[i]] = 0.0;
+        }
+    }
+
+    /// Primal simplex iterations until optimality for the current `red` row.
+    fn primal_iterate(&mut self, respect_blocked: bool) -> Result<(), SimplexError> {
+        let limit = 200 * (self.m + self.ncols) + 1000;
+        let mut steps = 0usize;
+        loop {
+            steps += 1;
+            if steps > limit {
+                return Err(SimplexError::IterLimit(limit));
+            }
+            let use_bland = steps > 2 * (self.m + self.ncols);
+            // entering column
+            let mut enter = usize::MAX;
+            let mut best = -TOL;
+            for j in 0..self.ncols {
+                if respect_blocked && self.blocked[j] {
+                    continue;
+                }
+                let r = self.red[j];
+                if r < best {
+                    enter = j;
+                    if use_bland {
+                        break; // Bland: first improving index
+                    }
+                    best = r;
+                }
+            }
+            if enter == usize::MAX {
+                return Ok(()); // optimal
+            }
+            // ratio test
+            let stride = self.stride();
+            let mut leave = usize::MAX;
+            let mut best_ratio = f64::INFINITY;
+            for i in 0..self.m {
+                let a = self.tab[i * stride + enter];
+                if a > TOL {
+                    let ratio = self.rhs(i) / a;
+                    if ratio < best_ratio - TOL
+                        || (ratio < best_ratio + TOL
+                            && leave != usize::MAX
+                            && self.basis[i] < self.basis[leave])
+                    {
+                        best_ratio = ratio;
+                        leave = i;
+                    }
+                }
+            }
+            if leave == usize::MAX {
+                return Err(SimplexError::Unbounded);
+            }
+            self.pivot(leave, enter);
+        }
+    }
+
+    /// Dual simplex iterations: restore primal feasibility (rhs >= 0) while
+    /// keeping dual feasibility (red >= 0). Used by the warm-start path.
+    pub(crate) fn dual_iterate(&mut self) -> Result<(), SimplexError> {
+        let limit = 200 * (self.m + self.ncols) + 1000;
+        let mut steps = 0usize;
+        loop {
+            steps += 1;
+            if steps > limit {
+                return Err(SimplexError::IterLimit(limit));
+            }
+            // leaving row: most negative rhs
+            let mut leave = usize::MAX;
+            let mut most_neg = -TOL;
+            for i in 0..self.m {
+                let b = self.rhs(i);
+                if b < most_neg {
+                    most_neg = b;
+                    leave = i;
+                }
+            }
+            if leave == usize::MAX {
+                return Ok(()); // primal feasible again
+            }
+            // entering column: min red_j / -a_ij over a_ij < 0, j not blocked
+            let stride = self.stride();
+            let mut enter = usize::MAX;
+            let mut best = f64::INFINITY;
+            for j in 0..self.ncols {
+                if self.blocked[j] {
+                    continue;
+                }
+                let a = self.tab[leave * stride + j];
+                if a < -TOL {
+                    let ratio = self.red[j] / -a;
+                    if ratio < best - TOL || (ratio < best + TOL && enter != usize::MAX && j < enter)
+                    {
+                        best = ratio;
+                        enter = j;
+                    }
+                }
+            }
+            if enter == usize::MAX {
+                // no entering column: primal infeasible for this rhs
+                return Err(SimplexError::Infeasible(-most_neg));
+            }
+            self.pivot(leave, enter);
+        }
+    }
+
+    /// Two-phase solve.
+    pub fn solve(&mut self) -> Result<Solution, SimplexError> {
+        // ---- phase 1: drive artificials to zero ----
+        let art_cost: Vec<f64> = (0..self.ncols).map(|j| if self.blocked[j] { 1.0 } else { 0.0 }).collect();
+        let any_artificial_basic = self.basis.iter().any(|&b| self.blocked[b]);
+        if any_artificial_basic {
+            self.reset_reduced(&art_cost);
+            self.primal_iterate(false)?; // artificials may move during phase 1
+            let p1: f64 = (0..self.m)
+                .filter(|&i| self.blocked[self.basis[i]])
+                .map(|i| self.rhs(i))
+                .sum();
+            if p1 > 1e-7 {
+                return Err(SimplexError::Infeasible(p1));
+            }
+            // pivot out any artificial stuck basic at zero level
+            let stride = self.stride();
+            for i in 0..self.m {
+                if self.blocked[self.basis[i]] {
+                    let mut found = usize::MAX;
+                    for j in 0..self.ncols {
+                        if !self.blocked[j] && self.tab[i * stride + j].abs() > 1e-7 {
+                            found = j;
+                            break;
+                        }
+                    }
+                    if found != usize::MAX {
+                        self.pivot(i, found);
+                    }
+                    // else: redundant row; harmless (rhs ~ 0)
+                }
+            }
+        }
+        // ---- phase 2 ----
+        let cost = self.cost.clone();
+        self.reset_reduced(&cost);
+        self.primal_iterate(true)?;
+        Ok(self.extract())
+    }
+
+    /// Current basic solution restricted to the original variables.
+    pub(crate) fn extract(&self) -> Solution {
+        let mut x = vec![0.0; self.n_orig];
+        for i in 0..self.m {
+            let b = self.basis[i];
+            if b < self.n_orig {
+                x[b] = self.rhs(i).max(0.0);
+            }
+        }
+        let objective = self.cost[..self.n_orig]
+            .iter()
+            .zip(&x)
+            .map(|(c, v)| c * v)
+            .sum();
+        Solution { x, objective, iterations: self.iterations }
+    }
+}
+
+/// One-shot convenience: build + solve.
+pub fn solve(p: &LpProblem) -> Result<Solution, SimplexError> {
+    Solver::new(p).solve()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::problem::Relation::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn trivial_bounded_min() {
+        // min -x0 s.t. x0 <= 4  -> x0 = 4, obj -4
+        let mut p = LpProblem::new(1);
+        p.set_objective(0, -1.0);
+        p.add(vec![(0, 1.0)], Le, 4.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 4.0);
+        assert_close(s.objective, -4.0);
+    }
+
+    #[test]
+    fn classic_two_var() {
+        // max 3x + 5y (min -3x -5y) s.t. x<=4, 2y<=12, 3x+2y<=18 -> (2,6), 36
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, -3.0);
+        p.set_objective(1, -5.0);
+        p.add(vec![(0, 1.0)], Le, 4.0);
+        p.add(vec![(1, 2.0)], Le, 12.0);
+        p.add(vec![(0, 3.0), (1, 2.0)], Le, 18.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 2.0);
+        assert_close(s.x[1], 6.0);
+        assert_close(s.objective, -36.0);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x+2y s.t. x + y = 10, x - y = 2 -> x=6, y=4, obj 14
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, 1.0);
+        p.set_objective(1, 2.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Eq, 10.0);
+        p.add(vec![(0, 1.0), (1, -1.0)], Eq, 2.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 6.0);
+        assert_close(s.x[1], 4.0);
+        assert_close(s.objective, 14.0);
+    }
+
+    #[test]
+    fn ge_constraints_and_negative_rhs() {
+        // min x s.t. x >= 3 (written two ways)
+        let mut p = LpProblem::new(1);
+        p.set_objective(0, 1.0);
+        p.add(vec![(0, 1.0)], Ge, 3.0);
+        p.add(vec![(0, -1.0)], Le, -3.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 3.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut p = LpProblem::new(1);
+        p.add(vec![(0, 1.0)], Le, 1.0);
+        p.add(vec![(0, 1.0)], Ge, 2.0);
+        assert!(matches!(solve(&p), Err(SimplexError::Infeasible(_))));
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut p = LpProblem::new(1);
+        p.set_objective(0, -1.0);
+        p.add(vec![(0, -1.0)], Le, 0.0); // -x <= 0 always true
+        assert_eq!(solve(&p).unwrap_err(), SimplexError::Unbounded);
+    }
+
+    #[test]
+    fn minimax_structure_like_lpp1() {
+        // The paper's LPP-1 shape on a toy: 2 experts, 2 gpus,
+        // EDP(e0)={0,1}, EDP(e1)={0,1}; loads 10, 2.
+        // vars: x00 x01 x10 x11 t ; min t
+        // x00+x10 <= t ; x01+x11 <= t ; x00+x01 = 10 ; x10+x11 = 2
+        // optimum t = 6 (perfect split)
+        let mut p = LpProblem::new(5);
+        p.set_objective(4, 1.0);
+        p.add(vec![(0, 1.0), (2, 1.0), (4, -1.0)], Le, 0.0);
+        p.add(vec![(1, 1.0), (3, 1.0), (4, -1.0)], Le, 0.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Eq, 10.0);
+        p.add(vec![(2, 1.0), (3, 1.0)], Eq, 2.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.objective, 6.0);
+        assert!(p.is_feasible(&s.x, 1e-7));
+    }
+
+    #[test]
+    fn degenerate_problem_terminates() {
+        // many redundant constraints through the same vertex
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, -1.0);
+        p.set_objective(1, -1.0);
+        for k in 1..=8 {
+            p.add(vec![(0, k as f64), (1, k as f64)], Le, 2.0 * k as f64);
+        }
+        let s = solve(&p).unwrap();
+        assert_close(s.objective, -2.0);
+    }
+
+    #[test]
+    fn solution_is_feasible_random_problems() {
+        // fuzz small random LPs; solution must be feasible and no better
+        // than any feasible random candidate
+        use crate::rng::Rng;
+        let mut rng = Rng::new(123);
+        for case in 0..60 {
+            let n = 2 + (case % 4);
+            let m = 1 + (case % 5);
+            let mut p = LpProblem::new(n);
+            for j in 0..n {
+                p.set_objective(j, rng.f64() * 2.0 - 0.5);
+            }
+            for _ in 0..m {
+                let terms: Vec<(usize, f64)> =
+                    (0..n).map(|j| (j, rng.f64())).collect();
+                p.add(terms, Le, 1.0 + rng.f64() * 5.0);
+            }
+            // x = 0 is feasible (rhs > 0), so never infeasible; may be
+            // unbounded if some objective coeff < 0 escapes constraints.
+            match solve(&p) {
+                Ok(s) => {
+                    assert!(p.is_feasible(&s.x, 1e-6), "case {case}");
+                    // compare against random feasible points
+                    for _ in 0..20 {
+                        let cand: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0).collect();
+                        if p.is_feasible(&cand, 0.0) {
+                            assert!(
+                                s.objective <= p.objective_at(&cand) + 1e-6,
+                                "case {case}: {} > {}",
+                                s.objective,
+                                p.objective_at(&cand)
+                            );
+                        }
+                    }
+                }
+                Err(SimplexError::Unbounded) => {}
+                Err(e) => panic!("case {case}: {e}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Warm-started LP re-solve (the paper's §5.1 optimization).
+//!
+//! Across micro-batches the LPP-1 constraint *matrix* is fixed by the expert
+//! placement; only the rhs (`load_e`, and trivially the `≤ t` rows' zeros)
+//! changes. The optimal basis of micro-batch *k* therefore stays
+//! dual-feasible for micro-batch *k+1*, and a handful of dual-simplex pivots
+//! restore primal feasibility — orders of magnitude cheaper than a cold
+//! two-phase solve (measured in Fig. 11's "warm solving" ablation).
+
+use super::problem::LpProblem;
+use super::simplex::{SimplexError, Solution, Solver};
+
+/// A solver that remembers its optimal basis between solves.
+pub struct WarmSolver {
+    solver: Option<Solver>,
+    problem: LpProblem,
+    /// Pivots spent on the most recent solve (cold or warm).
+    pub last_iterations: usize,
+    /// Whether the most recent solve used the warm path.
+    pub last_was_warm: bool,
+}
+
+impl WarmSolver {
+    pub fn new(problem: LpProblem) -> Self {
+        WarmSolver { solver: None, problem, last_iterations: 0, last_was_warm: false }
+    }
+
+    pub fn problem(&self) -> &LpProblem {
+        &self.problem
+    }
+
+    /// Solve from scratch (two-phase primal).
+    pub fn solve_cold(&mut self) -> Result<Solution, SimplexError> {
+        let mut s = Solver::new(&self.problem);
+        let sol = s.solve()?;
+        self.last_iterations = s.iterations;
+        self.last_was_warm = false;
+        self.solver = Some(s);
+        Ok(sol)
+    }
+
+    /// Apply rhs updates then solve, warm when allowed and possible.
+    pub fn solve_with(
+        &mut self,
+        updates: &[(usize, f64)],
+        use_warm: bool,
+    ) -> Result<Solution, SimplexError> {
+        if use_warm {
+            self.resolve(updates)
+        } else {
+            for &(row, rhs) in updates {
+                self.problem.set_rhs(row, rhs);
+            }
+            self.solve_cold()
+        }
+    }
+
+    /// Re-solve after changing some rhs values. `updates` are
+    /// (constraint row index, new rhs) pairs in the original row order.
+    /// Falls back to a cold solve if no prior basis exists or the dual
+    /// simplex stalls.
+    pub fn resolve(&mut self, updates: &[(usize, f64)]) -> Result<Solution, SimplexError> {
+        for &(row, rhs) in updates {
+            self.problem.set_rhs(row, rhs);
+        }
+        let Some(mut s) = self.solver.take() else {
+            return self.solve_cold();
+        };
+        let before = s.iterations;
+
+        // Refresh rhs column: new_rhs = B^-1 b_new, where column k of B^-1
+        // is the current tableau column that initially held row k's identity.
+        let m = s.m;
+        let ncols = s.ncols;
+        let stride = ncols + 1;
+        let b_new: Vec<f64> = (0..m)
+            .map(|k| s.row_sign[k] * self.problem.constraints[k].rhs)
+            .collect();
+        let mut fresh = vec![0.0; m];
+        for k in 0..m {
+            let bk = b_new[k];
+            if bk == 0.0 {
+                continue;
+            }
+            let col = s.idcol[k];
+            for (i, f) in fresh.iter_mut().enumerate() {
+                *f += s.tab[i * stride + col] * bk;
+            }
+        }
+        for (i, f) in fresh.iter().enumerate() {
+            s.tab[i * stride + ncols] = *f;
+        }
+
+        match s.dual_iterate() {
+            Ok(()) => {
+                let sol = s.extract();
+                self.last_iterations = s.iterations - before;
+                self.last_was_warm = true;
+                self.solver = Some(s);
+                Ok(sol)
+            }
+            Err(SimplexError::Infeasible(v)) => {
+                self.last_was_warm = true;
+                Err(SimplexError::Infeasible(v))
+            }
+            Err(_) => {
+                // numerical trouble: rebuild cold
+                self.solve_cold()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::problem::{LpProblem, Relation::*};
+    use crate::rng::Rng;
+
+    fn lpp1_toy(load0: f64, load1: f64) -> LpProblem {
+        // 2 experts × 2 gpus, both EDP groups = {0,1}; vars x00 x01 x10 x11 t
+        let mut p = LpProblem::new(5);
+        p.set_objective(4, 1.0);
+        p.add(vec![(0, 1.0), (2, 1.0), (4, -1.0)], Le, 0.0);
+        p.add(vec![(1, 1.0), (3, 1.0), (4, -1.0)], Le, 0.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Eq, load0);
+        p.add(vec![(2, 1.0), (3, 1.0)], Eq, load1);
+        p
+    }
+
+    #[test]
+    fn warm_matches_cold_across_rhs_changes() {
+        let mut warm = WarmSolver::new(lpp1_toy(10.0, 2.0));
+        let s0 = warm.solve_cold().unwrap();
+        assert!((s0.objective - 6.0).abs() < 1e-7);
+
+        for (l0, l1) in [(4.0, 4.0), (20.0, 0.0), (1.0, 7.0), (100.0, 50.0)] {
+            let sw = warm.resolve(&[(2, l0), (3, l1)]).unwrap();
+            let sc = crate::lp::simplex::solve(&lpp1_toy(l0, l1)).unwrap();
+            assert!(
+                (sw.objective - sc.objective).abs() < 1e-6,
+                "loads ({l0},{l1}): warm {} cold {}",
+                sw.objective,
+                sc.objective
+            );
+            assert!(warm.problem().is_feasible(&sw.x, 1e-6));
+        }
+    }
+
+    #[test]
+    fn warm_uses_fewer_pivots() {
+        let mut warm = WarmSolver::new(lpp1_toy(10.0, 2.0));
+        warm.solve_cold().unwrap();
+        let cold_iters = warm.last_iterations;
+        warm.resolve(&[(2, 11.0), (3, 3.0)]).unwrap();
+        assert!(warm.last_was_warm);
+        assert!(
+            warm.last_iterations <= cold_iters,
+            "warm {} > cold {}",
+            warm.last_iterations,
+            cold_iters
+        );
+    }
+
+    #[test]
+    fn warm_random_stress_matches_cold() {
+        // bigger minimax LP: 4 gpus, 6 experts, random EDP groups of size 2
+        let g = 4usize;
+        let e = 6usize;
+        let mut rng = Rng::new(7);
+        let edp: Vec<[usize; 2]> = (0..e)
+            .map(|_| {
+                let a = rng.below(g as u64) as usize;
+                let mut b = rng.below(g as u64) as usize;
+                if b == a {
+                    b = (a + 1) % g;
+                }
+                [a, b]
+            })
+            .collect();
+        // vars: x[e][0..2] then t
+        let nv = e * 2 + 1;
+        let t = nv - 1;
+        let build = |loads: &[f64]| {
+            let mut p = LpProblem::new(nv);
+            p.set_objective(t, 1.0);
+            for gi in 0..g {
+                let mut terms = vec![(t, -1.0)];
+                for (ei, grp) in edp.iter().enumerate() {
+                    for (r, &gg) in grp.iter().enumerate() {
+                        if gg == gi {
+                            terms.push((ei * 2 + r, 1.0));
+                        }
+                    }
+                }
+                p.add(terms, Le, 0.0);
+            }
+            for (ei, _) in edp.iter().enumerate() {
+                p.add(vec![(ei * 2, 1.0), (ei * 2 + 1, 1.0)], Eq, loads[ei]);
+            }
+            p
+        };
+        let loads0: Vec<f64> = (0..e).map(|_| rng.below(100) as f64).collect();
+        let mut warm = WarmSolver::new(build(&loads0));
+        warm.solve_cold().unwrap();
+        for round in 0..30 {
+            let loads: Vec<f64> = (0..e).map(|_| rng.below(100) as f64).collect();
+            let updates: Vec<(usize, f64)> =
+                loads.iter().enumerate().map(|(ei, &l)| (g + ei, l)).collect();
+            let sw = warm.resolve(&updates).unwrap();
+            let sc = crate::lp::simplex::solve(&build(&loads)).unwrap();
+            assert!(
+                (sw.objective - sc.objective).abs() < 1e-5,
+                "round {round}: warm {} cold {}",
+                sw.objective,
+                sc.objective
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_without_prior_solve_falls_back_to_cold() {
+        let mut warm = WarmSolver::new(lpp1_toy(10.0, 2.0));
+        let s = warm.resolve(&[(2, 8.0)]).unwrap();
+        assert!((s.objective - 5.0).abs() < 1e-7);
+        assert!(!warm.last_was_warm);
+    }
+}

@@ -1,0 +1,66 @@
+//! `micromoe` CLI: inspect artifacts, run the e2e trainer, calibrate the
+//! cluster model, or demo the scheduler. The figure regenerators live in
+//! `cargo bench` targets; the runnable scenarios in `examples/`.
+
+use anyhow::Result;
+use micromoe::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional().first().map(String::as_str) {
+        Some("info") => info(&args),
+        Some("train") => train(&args),
+        Some("calibrate") => calibrate(&args),
+        _ => {
+            println!(
+                "micromoe {} — MicroMoE/MicroEP reproduction\n\n\
+                 usage: micromoe <command> [--opts]\n\
+                 commands:\n\
+                 \x20 info                     show artifact manifest + platform\n\
+                 \x20 train [--steps N]        run the e2e PJRT trainer\n\
+                 \x20 calibrate                fit cost-model constants from PJRT timings\n\
+                 figure regenerators: cargo bench (one target per paper figure)\n\
+                 examples: cargo run --release --example quickstart",
+                micromoe::version()
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let rt = micromoe::runtime::Runtime::load_default()?;
+    println!("platform: {}", rt.platform());
+    println!("preset:   {}", rt.manifest.preset);
+    println!("params:   {}", rt.manifest.num_params);
+    for a in &rt.manifest.artifacts {
+        println!("  {:<18} {} in -> {} out", a.name, a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let steps = args.usize_or("steps", 64);
+    let seed = args.u64_or("seed", 0);
+    let rt = micromoe::runtime::Runtime::load_default()?;
+    let mut trainer = micromoe::train::Trainer::new(rt, seed)?;
+    let log = trainer.run(steps, args.usize_or("log-every", 8))?;
+    let first = log.losses.first().copied().unwrap_or(f32::NAN);
+    let last = log.losses.last().copied().unwrap_or(f32::NAN);
+    println!("loss: {first:.4} -> {last:.4} over {steps} steps");
+    if let Some(out) = args.str("trace-out") {
+        micromoe::train::Trainer::save_trace(&log, &out.into())?;
+        println!("trace written to {out}");
+    }
+    Ok(())
+}
+
+fn calibrate(_args: &Args) -> Result<()> {
+    let mut rt = micromoe::runtime::Runtime::load_default()?;
+    let (small, large) = micromoe::train::Trainer::calibrate(&mut rt)?;
+    let mut model = micromoe::cluster::CostModel::h100_testbed();
+    model.calibrate_compute(small, large);
+    println!("measured: {small:?} {large:?}");
+    println!("fitted: t_fixed = {:.3e} s, t_token = {:.3e} s/token", model.t_fixed, model.t_token);
+    Ok(())
+}

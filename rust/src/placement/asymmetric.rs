@@ -1,0 +1,203 @@
+//! Asymmetric, load-aware placement (§6.3).
+//!
+//! Two stages, exactly as the paper describes:
+//!
+//! 1. **Replica counts** — greedy: keep a heap of experts keyed by
+//!    load-per-replica; give the next replica slot to the current maximum
+//!    until all `G · slots_per_gpu` slots are used (every expert gets at
+//!    least one).
+//! 2. **Replica locations** — Monte-Carlo: sample many random placements
+//!    honoring the counts and per-GPU slot budgets; keep the one whose
+//!    maximum induced subgraph density (Eq. 3) is minimal.
+
+use super::graph::max_induced_density;
+use super::Placement;
+use crate::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Greedy replica-count allocation: returns `counts[e] >= 1` summing to
+/// `total_slots`, with `counts[e] <= max_count` (an expert cannot have two
+/// replicas on one GPU, so `max_count` is the GPU count).
+pub fn greedy_replica_counts(loads: &[f64], total_slots: usize, max_count: usize) -> Vec<usize> {
+    let e = loads.len();
+    assert!(total_slots >= e, "need at least one slot per expert");
+    assert!(total_slots <= e * max_count, "more slots than placeable replicas");
+
+    #[derive(PartialEq)]
+    struct Item {
+        per_replica: f64,
+        expert: usize,
+    }
+    impl Eq for Item {}
+    impl PartialOrd for Item {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Item {
+        fn cmp(&self, o: &Self) -> Ordering {
+            self.per_replica
+                .partial_cmp(&o.per_replica)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| o.expert.cmp(&self.expert))
+        }
+    }
+
+    let mut counts = vec![1usize; e];
+    let mut heap: BinaryHeap<Item> = loads
+        .iter()
+        .enumerate()
+        .map(|(i, &l)| Item { per_replica: l, expert: i })
+        .collect();
+    for _ in e..total_slots {
+        let top = heap.pop().expect("slots exceed placeable replicas");
+        let ei = top.expert;
+        counts[ei] += 1;
+        if counts[ei] < max_count {
+            heap.push(Item { per_replica: loads[ei] / counts[ei] as f64, expert: ei });
+        }
+    }
+    counts
+}
+
+/// One random placement honoring `counts` and per-GPU slot budgets.
+fn sample_placement(
+    num_gpus: usize,
+    counts: &[usize],
+    slots_per_gpu: usize,
+    rng: &mut Rng,
+) -> Option<Placement> {
+    let mut remaining = vec![slots_per_gpu; num_gpus];
+    // place experts with most replicas first (hardest to fit)
+    let mut order: Vec<usize> = (0..counts.len()).collect();
+    order.sort_by_key(|&e| std::cmp::Reverse(counts[e]));
+
+    let mut replicas = vec![Vec::new(); counts.len()];
+    for &e in &order {
+        let need = counts[e];
+        // choose `need` distinct GPUs weighted by remaining capacity
+        let mut chosen: Vec<usize> = Vec::with_capacity(need);
+        for _ in 0..need {
+            let weights: Vec<f64> = (0..num_gpus)
+                .map(|g| {
+                    if chosen.contains(&g) {
+                        0.0
+                    } else {
+                        remaining[g] as f64
+                    }
+                })
+                .collect();
+            if weights.iter().sum::<f64>() <= 0.0 {
+                return None;
+            }
+            let g = rng.weighted_index(&weights);
+            chosen.push(g);
+            remaining[g] -= 1;
+        }
+        chosen.sort_unstable();
+        replicas[e] = chosen;
+    }
+    Some(Placement::from_replicas(num_gpus, replicas))
+}
+
+/// Full asymmetric placement: greedy counts + Monte-Carlo location search.
+///
+/// `samples` random placements are scored by Eq.-3 density under `loads`;
+/// the densest-subgraph-minimal one wins.
+pub fn asymmetric_placement(
+    num_gpus: usize,
+    loads: &[f64],
+    slots_per_gpu: usize,
+    samples: usize,
+    rng: &mut Rng,
+) -> Placement {
+    let counts = greedy_replica_counts(loads, num_gpus * slots_per_gpu, num_gpus);
+    let mut best: Option<(f64, Placement)> = None;
+    let mut tries = 0usize;
+    while tries < samples {
+        tries += 1;
+        let Some(p) = sample_placement(num_gpus, &counts, slots_per_gpu, rng) else {
+            continue;
+        };
+        let d = max_induced_density(&p, loads, rng).density;
+        if best.as_ref().map_or(true, |(bd, _)| d < *bd) {
+            best = Some((d, p));
+        }
+    }
+    best.expect("no feasible placement sampled").1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::graph::{max_induced_density_exact, perfect_balance_bound};
+
+    #[test]
+    fn greedy_counts_proportional_to_load() {
+        // loads 8:4:2:2 with 8 slots -> counts 4:2:1:1
+        let counts = greedy_replica_counts(&[8.0, 4.0, 2.0, 2.0], 8, 8);
+        assert_eq!(counts, vec![4, 2, 1, 1]);
+    }
+
+    #[test]
+    fn greedy_counts_minimum_one_each() {
+        let counts = greedy_replica_counts(&[100.0, 0.0, 0.0], 4, 8);
+        assert_eq!(counts.iter().sum::<usize>(), 4);
+        assert!(counts.iter().all(|&c| c >= 1));
+        assert_eq!(counts[0], 2);
+    }
+
+    #[test]
+    fn greedy_counts_equal_loads_equal_counts() {
+        let counts = greedy_replica_counts(&[5.0; 8], 16, 8);
+        assert_eq!(counts, vec![2; 8]);
+    }
+
+    #[test]
+    fn greedy_counts_capped_at_gpu_count() {
+        // a single dominating expert cannot exceed one replica per GPU
+        let counts = greedy_replica_counts(&[1e6, 1.0, 1.0, 1.0], 10, 4);
+        assert_eq!(counts[0], 4);
+        assert_eq!(counts.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn asymmetric_beats_symmetric_under_heavy_skew() {
+        // Zipf-like loads: symmetric uniform counts can't balance; the
+        // asymmetric placement gives the hot expert more replicas
+        let loads = vec![64.0, 8.0, 8.0, 8.0, 4.0, 4.0, 2.0, 2.0];
+        let mut rng = Rng::new(42);
+        let sym = crate::placement::cayley::cayley_graph_placement(4, 8);
+        let asym = asymmetric_placement(4, &loads, 4, 200, &mut rng);
+        let ds = max_induced_density_exact(&sym, &loads).density;
+        let da = max_induced_density_exact(&asym, &loads).density;
+        assert!(da <= ds + 1e-9, "asym {da} should be <= sym {ds}");
+        // should get close to perfect balance
+        let ideal = perfect_balance_bound(&loads, 4);
+        assert!(da <= 1.35 * ideal, "asym {da} vs ideal {ideal}");
+    }
+
+    #[test]
+    fn respects_slot_budget() {
+        let loads = vec![10.0, 5.0, 3.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let mut rng = Rng::new(7);
+        let p = asymmetric_placement(4, &loads, 4, 50, &mut rng);
+        for g in 0..4 {
+            assert!(p.slots_used(g) <= 4, "gpu {g} over budget");
+        }
+        let total: usize = (0..4).map(|g| p.slots_used(g)).sum();
+        assert_eq!(total, 16);
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn hot_expert_gets_replicas_everywhere() {
+        let loads = vec![1000.0, 1.0, 1.0, 1.0];
+        let counts = greedy_replica_counts(&loads, 8, 4);
+        assert_eq!(counts[0], 4); // capped at GPU count
+        let mut rng = Rng::new(3);
+        let p = asymmetric_placement(4, &loads, 2, 100, &mut rng);
+        assert_eq!(p.replica_count(0), 4, "hot expert spread: {:?}", p.replicas[0]);
+    }
+}

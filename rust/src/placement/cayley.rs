@@ -1,0 +1,279 @@
+//! Symmetric placements from Cayley graphs (§6.2, Appendix B).
+//!
+//! With no prior knowledge of expert loads, the best placement treats all
+//! experts identically; Cayley graphs give vertex-transitive layouts whose
+//! induced subgraphs cannot concentrate edges. We implement the paper's
+//! four worked examples plus the general constructions they generalize to:
+//!
+//! * d = 2, E = G          → cycle (Example 1, ℤ_G with {±1})
+//! * d = 2, 2E = G·deg     → circulant graphs ℤ_G with odd-offset
+//!   generating sets; torus grids for square G (Example 2); ℤ2×ℤ4-style
+//!   products (Example 3 falls out of the circulant family up to
+//!   isomorphism — K4,4);
+//! * deg ≥ G-1             → complete graph(s) + matchings (Example 4);
+//! * d > 2                 → hyper-circulant: hyperedge {g, g+1, …, g+d-1}
+//!   shifted around the ring (the natural hypergraph analogue).
+
+use super::Placement;
+use crate::topology::Topology;
+
+/// Symmetric placement for `num_experts` experts over the MicroEP group of
+/// `topo`, one replica set of `d` GPUs per expert, uniform replica counts.
+///
+/// Requires `num_experts * d == num_gpus * slots_per_gpu` slot conservation
+/// (which holds whenever experts divide over the EP group).
+pub fn symmetric_placement(topo: &Topology, num_experts: usize) -> Placement {
+    let g = topo.microep_group_size();
+    let d = topo.d;
+    assert!(d >= 2, "MicroEP needs d >= 2 for intersecting EDP groups");
+    if d == 2 {
+        cayley_graph_placement(g, num_experts)
+    } else {
+        hyper_circulant(g, num_experts, d)
+    }
+}
+
+/// d = 2 case: experts are edges of a degree-regular graph over GPUs.
+///
+/// degree k = 2·E / G must be integral. Construction:
+/// * k ≤ G-1: circulant with generators {±1, ±2(odd steps)…} — for k = 2 a
+///   cycle (Example 1); even k uses offsets 1..k/2; odd k additionally the
+///   antipode G/2 (an involution, giving a perfect matching).
+/// * k > G-1: stack ⌊k/(G-1)⌋ complete graphs then place the remaining
+///   edges as circulant layers (Example 4's "complete graphs + matchings").
+pub fn cayley_graph_placement(num_gpus: usize, num_experts: usize) -> Placement {
+    let g = num_gpus;
+    assert!(g >= 2);
+    assert!(
+        (2 * num_experts) % g == 0,
+        "2E = {num_experts}·2 must be divisible by G = {g} for a regular graph"
+    );
+    let mut edges: Vec<[usize; 2]> = Vec::with_capacity(num_experts);
+    let mut remaining = num_experts;
+
+    // complete-graph layers (Example 4 generalization)
+    let kg_edges = g * (g - 1) / 2;
+    while remaining >= kg_edges && kg_edges > 0 {
+        for a in 0..g {
+            for b in (a + 1)..g {
+                edges.push([a, b]);
+            }
+        }
+        remaining -= kg_edges;
+    }
+
+    // circulant layers: offset o connects i -- i+o (G edges per layer); the
+    // antipodal offset G/2 forms a perfect matching (G/2 edges). Offsets may
+    // repeat across layers: experts are *hyperedges*, so parallel edges are
+    // legal (two experts sharing an EDP group), exactly like Example 4's
+    // K8 + extra matching.
+    let mut offset = 1usize;
+    while remaining >= g {
+        // skip the antipode inside the cycling range for full layers
+        if g % 2 == 0 && offset == g / 2 {
+            offset = if g > 2 { offset % (g / 2 - 1) + 1 } else { 1 };
+        }
+        for i in 0..g {
+            let j = (i + offset) % g;
+            edges.push([i.min(j), i.max(j)]);
+        }
+        remaining -= g;
+        offset = if g >= 4 { offset % (g / 2 - 1) + 1 } else { 1 };
+    }
+    if remaining > 0 {
+        // 2E ≡ 0 (mod G) leaves exactly a half-layer: the antipodal matching
+        assert!(
+            g % 2 == 0 && remaining == g / 2,
+            "leftover {remaining} edges on G={g} cannot form a regular layer"
+        );
+        for i in 0..g / 2 {
+            edges.push([i, i + g / 2]);
+        }
+    }
+
+    let replicas = edges.into_iter().map(|[a, b]| vec![a, b]).collect();
+    Placement::from_replicas(g, replicas)
+}
+
+/// 2-D torus grid Cayley graph (Appendix B Example 2): G = side², degree 4,
+/// E = 2·G. Generators {(0,±1), (±1,0)} over ℤ_side × ℤ_side.
+pub fn torus_placement(side: usize) -> Placement {
+    assert!(side >= 3, "torus needs side >= 3 for a simple graph");
+    let g = side * side;
+    let idx = |r: usize, c: usize| r * side + c;
+    let mut replicas = Vec::with_capacity(2 * g);
+    for r in 0..side {
+        for c in 0..side {
+            let right = idx(r, (c + 1) % side);
+            let down = idx((r + 1) % side, c);
+            let me = idx(r, c);
+            replicas.push(vec![me.min(right), me.max(right)]);
+            replicas.push(vec![me.min(down), me.max(down)]);
+        }
+    }
+    Placement::from_replicas(g, replicas)
+}
+
+/// Appendix B Example 3: ℤ2 × ℤ4 with generators {(0,±1), (1,1), (1,-1)} —
+/// 8 vertices, 16 edges, isomorphic to K4,4. Vertex (a,b) ↦ 4a + b.
+pub fn z2xz4_placement() -> Placement {
+    let idx = |a: usize, b: usize| 4 * a + (b % 4);
+    let mut replicas = Vec::with_capacity(16);
+    for a in 0..2usize {
+        for b in 0..4usize {
+            let me = idx(a, b);
+            // (0,+1) and its inverse give the two 4-cycles; count each once
+            let e1 = idx(a, b + 1);
+            replicas.push(vec![me.min(e1), me.max(e1)]);
+            // (1,+1): cross edge; generator set is inverse-closed, count once
+            let e2 = idx(1 - a, b + 1);
+            if a == 0 {
+                replicas.push(vec![me.min(e2), me.max(e2)]);
+            }
+            let e3 = idx(1 - a, b + 3); // (1,-1)
+            if a == 0 {
+                replicas.push(vec![me.min(e3), me.max(e3)]);
+            }
+        }
+    }
+    Placement::from_replicas(8, replicas)
+}
+
+/// d > 2 hyper-circulant: expert i covers GPUs {s, s+1, …, s+d-1} (mod G)
+/// with starts s spread uniformly; slot-conserving whenever E·d ≡ 0 mod G.
+pub fn hyper_circulant(num_gpus: usize, num_experts: usize, d: usize) -> Placement {
+    assert!(d >= 2 && d <= num_gpus);
+    assert!(
+        (num_experts * d) % num_gpus == 0,
+        "replica slots E·d must divide over G GPUs"
+    );
+    let replicas = (0..num_experts)
+        .map(|e| {
+            // stride starts so edges wrap the ring multiple times at
+            // different phases (layered circulant)
+            let layer = e / num_gpus.min(num_experts);
+            let start = (e % num_gpus) + layer; // phase shift per layer
+            let mut grp: Vec<usize> =
+                (0..d).map(|k| (start + k * (layer + 1)) % num_gpus).collect();
+            grp.sort_unstable();
+            grp.dedup();
+            // if stride collided (rare), fall back to consecutive block
+            if grp.len() < d {
+                grp = (0..d).map(|k| (start + k) % num_gpus).collect();
+                grp.sort_unstable();
+            }
+            grp
+        })
+        .collect();
+    Placement::from_replicas(num_gpus, replicas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::graph::max_induced_density_exact;
+
+    #[test]
+    fn example1_cycle_8v_8e() {
+        // Appendix B Example 1: 8 vertices, 8 edges -> cycle
+        let p = cayley_graph_placement(8, 8);
+        assert_eq!(p.num_experts, 8);
+        for e in 0..8 {
+            assert_eq!(p.replica_count(e), 2);
+        }
+        // every GPU hosts exactly 2 replicas
+        for g in 0..8 {
+            assert_eq!(p.slots_used(g), 2);
+        }
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn example2_torus_16v_32e() {
+        let p = torus_placement(4);
+        assert_eq!(p.num_gpus, 16);
+        assert_eq!(p.num_experts, 32);
+        for g in 0..16 {
+            assert_eq!(p.slots_used(g), 4);
+        }
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn example3_z2z4_8v_16e() {
+        let p = z2xz4_placement();
+        assert_eq!(p.num_gpus, 8);
+        assert_eq!(p.num_experts, 16);
+        for g in 0..8 {
+            assert_eq!(p.slots_used(g), 4, "gpu {g}");
+        }
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn example4_complete_plus_matching_8v_32e() {
+        // 8 vertices, 32 edges = K8 (28) + 4 matching edges
+        let p = cayley_graph_placement(8, 32);
+        assert_eq!(p.num_experts, 32);
+        for g in 0..8 {
+            assert_eq!(p.slots_used(g), 8);
+        }
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn paper_testbed_32_experts_8_gpus() {
+        // §7: DP=8, EP=4, d=2 -> 8 GPUs; 32 experts -> degree 8 circulant
+        let topo = Topology::new(8, 4, 2, 8);
+        let p = symmetric_placement(&topo, 32);
+        assert_eq!(p.num_gpus, 8);
+        for g in 0..8 {
+            assert_eq!(p.slots_used(g), 8);
+        }
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn uniform_density_equals_average_on_cayley() {
+        // vertex-transitivity: under uniform loads the max-density subset is
+        // the whole group (no concentration)
+        for p in [cayley_graph_placement(8, 16), torus_placement(3), z2xz4_placement()] {
+            let loads = vec![6.0; p.num_experts];
+            let r = max_induced_density_exact(&p, &loads);
+            let avg = 6.0 * p.num_experts as f64 / p.num_gpus as f64;
+            assert!((r.density - avg).abs() < 1e-9, "{r:?} vs avg {avg}");
+            assert_eq!(r.subset.len(), p.num_gpus);
+        }
+    }
+
+    #[test]
+    fn cycle_beats_vanilla_under_skew() {
+        // one hot expert: cycle spreads it over a pair; vanilla EP stacks
+        // both replicas of every co-resident expert on the same EDP pair
+        let topo = Topology::new(4, 2, 2, 8);
+        let vanilla = Placement::vanilla_ep(&topo, 4);
+        let cayley = cayley_graph_placement(4, 4);
+        let loads = vec![40.0, 8.0, 8.0, 8.0];
+        let dv = max_induced_density_exact(&vanilla, &loads).density;
+        let dc = max_induced_density_exact(&cayley, &loads).density;
+        assert!(dc < dv, "cayley {dc} should beat vanilla {dv}");
+    }
+
+    #[test]
+    fn hyper_circulant_d3() {
+        let p = hyper_circulant(6, 8, 3);
+        assert_eq!(p.num_experts, 8);
+        let total_slots: usize = (0..6).map(|g| p.slots_used(g)).sum();
+        assert_eq!(total_slots, 24);
+        for e in 0..8 {
+            assert_eq!(p.replica_count(e), 3);
+        }
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible")]
+    fn odd_edge_count_rejected() {
+        cayley_graph_placement(8, 9); // 18 not divisible by 8... panics
+    }
+}

@@ -1,0 +1,252 @@
+//! Expert placement: the long-term half of MicroEP's load balancing (§6).
+//!
+//! A placement assigns every expert replica to a GPU inside a MicroEP group.
+//! Its quality is governed by the hypergraph abstraction of §6.1: vertices
+//! are GPUs, each expert is a hyperedge over its EDP group, and the optimal
+//! LPP-1 objective equals the **maximum induced subgraph density** (Eq. 3).
+//!
+//! * [`graph`] — density machinery: exact (subset enumeration) and
+//!   heuristic (local search) maximum-density evaluators.
+//! * [`cayley`] — symmetric placements from Cayley graphs (App. B),
+//!   including the four worked examples.
+//! * [`random`] — uniform random regular placements (the Fig. 7
+//!   "MicroMoE (random)" arm).
+//! * [`asymmetric`] — load-aware placements: greedy replica counts +
+//!   Monte-Carlo location search (§6.3).
+
+pub mod asymmetric;
+pub mod cayley;
+pub mod graph;
+pub mod random;
+pub mod sync;
+
+use crate::topology::Topology;
+
+/// An expert-replica placement inside one MicroEP group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    pub num_gpus: usize,
+    pub num_experts: usize,
+    /// `replicas[e]` — GPUs hosting a replica of expert `e` (the EDP group
+    /// of `e`), sorted, no duplicates.
+    pub replicas: Vec<Vec<usize>>,
+    /// `local_slots[g][s] = Some(e)` — expert occupying slot `s` on GPU `g`.
+    /// The B.3 consistency restriction requires every replica of an expert
+    /// to sit at the *same* slot index on all of its GPUs (deadlock-free
+    /// DDP synchronization order).
+    pub local_slots: Vec<Vec<Option<usize>>>,
+}
+
+impl Placement {
+    /// Build from replica lists, assigning consistent local slot indices.
+    ///
+    /// Slot assignment is graph edge-coloring in disguise: experts sharing a
+    /// GPU need different slots, and an expert needs one slot valid on all
+    /// its GPUs. Greedy first-fit over experts (heaviest-degree first)
+    /// extends the slot count past `slots_per_gpu` only when forced
+    /// (Vizing's theorem allows Δ+1 in the worst case).
+    pub fn from_replicas(num_gpus: usize, replicas: Vec<Vec<usize>>) -> Self {
+        let num_experts = replicas.len();
+        for (e, grp) in replicas.iter().enumerate() {
+            assert!(!grp.is_empty(), "expert {e} has no replicas");
+            let mut sorted = grp.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), grp.len(), "expert {e} has duplicate GPUs");
+            assert!(*sorted.last().unwrap() < num_gpus, "expert {e} GPU out of range");
+        }
+        // order experts by degree (large EDP groups are hardest to place)
+        let mut order: Vec<usize> = (0..num_experts).collect();
+        order.sort_by_key(|&e| std::cmp::Reverse(replicas[e].len()));
+
+        let mut local_slots: Vec<Vec<Option<usize>>> = vec![Vec::new(); num_gpus];
+        for &e in &order {
+            let grp = &replicas[e];
+            let mut slot = 0usize;
+            loop {
+                let free = grp
+                    .iter()
+                    .all(|&g| local_slots[g].get(slot).copied().flatten().is_none());
+                if free {
+                    for &g in grp {
+                        if local_slots[g].len() <= slot {
+                            local_slots[g].resize(slot + 1, None);
+                        }
+                        local_slots[g][slot] = Some(e);
+                    }
+                    break;
+                }
+                slot += 1;
+            }
+        }
+        let mut p = Placement { num_gpus, num_experts, replicas, local_slots };
+        p.normalize_replicas();
+        p
+    }
+
+    fn normalize_replicas(&mut self) {
+        for grp in &mut self.replicas {
+            grp.sort_unstable();
+        }
+    }
+
+    /// EDP group of an expert.
+    pub fn edp_group(&self, e: usize) -> &[usize] {
+        &self.replicas[e]
+    }
+
+    /// Number of replicas of expert `e`.
+    pub fn replica_count(&self, e: usize) -> usize {
+        self.replicas[e].len()
+    }
+
+    /// Total replica slots used on GPU `g`.
+    pub fn slots_used(&self, g: usize) -> usize {
+        self.local_slots[g].iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Maximum slot index in use plus one (the DDP sync depth).
+    pub fn slot_depth(&self) -> usize {
+        self.local_slots.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Whether GPU `g` hosts a replica of expert `e`.
+    pub fn hosts(&self, g: usize, e: usize) -> bool {
+        self.replicas[e].binary_search(&g).is_ok()
+    }
+
+    /// The slot index of expert `e` (identical on all its GPUs by B.3).
+    pub fn slot_of(&self, e: usize) -> Option<usize> {
+        let g = *self.replicas[e].first()?;
+        self.local_slots[g].iter().position(|&s| s == Some(e))
+    }
+
+    /// Verify the B.3 consistency restriction and structural invariants.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        for e in 0..self.num_experts {
+            let slot = self
+                .slot_of(e)
+                .ok_or_else(|| format!("expert {e} missing from its first GPU"))?;
+            for &g in &self.replicas[e] {
+                if self.local_slots[g].get(slot).copied().flatten() != Some(e) {
+                    return Err(format!(
+                        "expert {e} slot {slot} inconsistent on GPU {g} (B.3 violated)"
+                    ));
+                }
+            }
+        }
+        // every occupied slot belongs to an expert that lists that GPU
+        for (g, slots) in self.local_slots.iter().enumerate() {
+            for (s, &occ) in slots.iter().enumerate() {
+                if let Some(e) = occ {
+                    if !self.hosts(g, e) {
+                        return Err(format!("slot ({g},{s}) holds non-resident expert {e}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Vanilla-EP placement for reference/baselines: expert `e` lives on EP
+    /// rank `e / experts_per_gpu` of *every* EP group in the MicroEP scope —
+    /// identical placement per EP group, so EDP groups never intersect
+    /// (the Fig. 3b failure mode).
+    pub fn vanilla_ep(topo: &Topology, num_experts: usize) -> Self {
+        let num_gpus = topo.microep_group_size();
+        let per_gpu = topo.experts_per_gpu(num_experts);
+        let replicas = (0..num_experts)
+            .map(|e| {
+                let rank = e / per_gpu;
+                (0..topo.d).map(|k| k * topo.ep_degree + rank).collect()
+            })
+            .collect();
+        Placement::from_replicas(num_gpus, replicas)
+    }
+
+    /// Aggregate per-GPU load implied by replica loads `x[e][r]` (aligned
+    /// with `replicas[e]` order).
+    pub fn gpu_loads(&self, x: &[Vec<f64>]) -> Vec<f64> {
+        let mut loads = vec![0.0; self.num_gpus];
+        for (e, grp) in self.replicas.iter().enumerate() {
+            for (r, &g) in grp.iter().enumerate() {
+                loads[g] += x[e][r];
+            }
+        }
+        loads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure3c_placement() {
+        // Figure 3c: 4 GPUs, 4 experts, d=2; EDP groups {0,3},{0,1},{1,2},{2,3}
+        let p = Placement::from_replicas(
+            4,
+            vec![vec![0, 3], vec![0, 1], vec![1, 2], vec![2, 3]],
+        );
+        assert_eq!(p.edp_group(0), &[0, 3]);
+        assert!(p.hosts(0, 1));
+        assert!(!p.hosts(2, 0));
+        p.check_consistency().unwrap();
+        // ring: 2 slots per GPU suffice
+        assert_eq!(p.slot_depth(), 2);
+        for g in 0..4 {
+            assert_eq!(p.slots_used(g), 2);
+        }
+    }
+
+    #[test]
+    fn consistency_slot_identical_across_replicas() {
+        let p = Placement::from_replicas(
+            4,
+            vec![vec![0, 1], vec![1, 2], vec![2, 3], vec![3, 0]],
+        );
+        for e in 0..4 {
+            let slot = p.slot_of(e).unwrap();
+            for &g in p.edp_group(e) {
+                assert_eq!(p.local_slots[g][slot], Some(e));
+            }
+        }
+    }
+
+    #[test]
+    fn vanilla_ep_identical_groups() {
+        // DP=4, EP=2, d=2 -> 4 GPUs, 4 experts, 2 per GPU (Figure 3a/b)
+        let topo = Topology::new(4, 2, 2, 8);
+        let p = Placement::vanilla_ep(&topo, 4);
+        // experts 0,1 on EP rank 0 (GPUs 0,2); experts 2,3 on rank 1 (1,3)
+        assert_eq!(p.edp_group(0), &[0, 2]);
+        assert_eq!(p.edp_group(1), &[0, 2]);
+        assert_eq!(p.edp_group(2), &[1, 3]);
+        assert_eq!(p.edp_group(3), &[1, 3]);
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn gpu_loads_aggregation() {
+        let p = Placement::from_replicas(3, vec![vec![0, 1], vec![1, 2]]);
+        let loads = p.gpu_loads(&[vec![5.0, 3.0], vec![2.0, 4.0]]);
+        assert_eq!(loads, vec![5.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn duplicate_gpu_rejected() {
+        Placement::from_replicas(4, vec![vec![1, 1]]);
+    }
+
+    #[test]
+    fn greedy_slots_handle_overlap() {
+        // star-ish pattern forcing slot growth on GPU 0
+        let p = Placement::from_replicas(
+            4,
+            vec![vec![0, 1], vec![0, 2], vec![0, 3], vec![1, 2]],
+        );
+        p.check_consistency().unwrap();
+        assert_eq!(p.slots_used(0), 3);
+    }
+}

@@ -1,0 +1,130 @@
+//! Random regular placements — the "MicroMoE (random)" arm of Fig. 7.
+//!
+//! Each expert draws `d` distinct GPUs while keeping per-GPU replica counts
+//! balanced (configuration-model style): a slot pool with `slots_per_gpu`
+//! copies of each GPU is shuffled and consumed `d` at a time, resampling an
+//! edge when it would collide (duplicate GPU inside one EDP group).
+
+use super::Placement;
+use crate::rng::Rng;
+
+/// Random placement with uniform replica counts.
+///
+/// `num_experts * d` must equal `num_gpus * slots_per_gpu` for exact slot
+/// conservation; `slots_per_gpu` is derived.
+pub fn random_placement(num_gpus: usize, num_experts: usize, d: usize, rng: &mut Rng) -> Placement {
+    assert!(d >= 2 && d <= num_gpus);
+    assert!(
+        (num_experts * d) % num_gpus == 0,
+        "E·d = {} must divide over G = {num_gpus}",
+        num_experts * d
+    );
+    let slots_per_gpu = num_experts * d / num_gpus;
+
+    'outer: for _attempt in 0..200 {
+        let mut pool: Vec<usize> = Vec::with_capacity(num_gpus * slots_per_gpu);
+        for g in 0..num_gpus {
+            pool.extend(std::iter::repeat(g).take(slots_per_gpu));
+        }
+        rng.shuffle(&mut pool);
+
+        let mut replicas: Vec<Vec<usize>> = Vec::with_capacity(num_experts);
+        for e in 0..num_experts {
+            let start = e * d;
+            let mut grp: Vec<usize> = pool[start..start + d].to_vec();
+            grp.sort_unstable();
+            let mut ok = true;
+            for w in grp.windows(2) {
+                if w[0] == w[1] {
+                    ok = false;
+                    break;
+                }
+            }
+            if !ok {
+                // local repair: swap a colliding element with a random pool
+                // slot *at or after this edge* (earlier slots are already
+                // consumed); a few tries, else restart the whole attempt
+                let mut repaired = false;
+                for _ in 0..50 {
+                    let j = start + rng.below(d as u64) as usize;
+                    let k = start + rng.below((pool.len() - start) as u64) as usize;
+                    pool.swap(j, k);
+                    let mut g2: Vec<usize> = pool[start..start + d].to_vec();
+                    g2.sort_unstable();
+                    if g2.windows(2).all(|w| w[0] != w[1]) {
+                        grp = g2;
+                        repaired = true;
+                        break;
+                    }
+                }
+                if !repaired {
+                    continue 'outer;
+                }
+            }
+            replicas.push(grp);
+        }
+        return Placement::from_replicas(num_gpus, replicas);
+    }
+    panic!("random_placement failed to find a collision-free assignment");
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_replica_counts() {
+        let mut rng = Rng::new(1);
+        let p = random_placement(8, 32, 2, &mut rng);
+        for e in 0..32 {
+            assert_eq!(p.replica_count(e), 2);
+        }
+        for g in 0..8 {
+            assert_eq!(p.slots_used(g), 8, "gpu {g}");
+        }
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn no_duplicate_gpus_within_edp_group() {
+        let mut rng = Rng::new(2);
+        for seed in 0..20u64 {
+            let mut r = Rng::new(seed);
+            let p = random_placement(8, 16, 2, &mut r);
+            for e in 0..16 {
+                let grp = p.edp_group(e);
+                assert!(grp.windows(2).all(|w| w[0] != w[1]));
+            }
+            let _ = &mut rng;
+        }
+    }
+
+    #[test]
+    fn d3_hyperedges() {
+        let mut rng = Rng::new(3);
+        let p = random_placement(6, 8, 3, &mut rng);
+        for e in 0..8 {
+            assert_eq!(p.replica_count(e), 3);
+        }
+        let total: usize = (0..6).map(|g| p.slots_used(g)).sum();
+        assert_eq!(total, 24);
+        p.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn different_seeds_give_different_placements() {
+        let mut a = Rng::new(10);
+        let mut b = Rng::new(11);
+        let pa = random_placement(8, 16, 2, &mut a);
+        let pb = random_placement(8, 16, 2, &mut b);
+        assert_ne!(pa.replicas, pb.replicas);
+    }
+
+    #[test]
+    fn same_seed_reproducible() {
+        let pa = random_placement(8, 16, 2, &mut Rng::new(5));
+        let pb = random_placement(8, 16, 2, &mut Rng::new(5));
+        assert_eq!(pa.replicas, pb.replicas);
+    }
+}

@@ -1,0 +1,108 @@
+//! Property-testing helper (proptest is unavailable offline).
+//!
+//! [`forall`] runs a property over many seeded random cases and reports the
+//! failing case's seed so it can be replayed exactly:
+//!
+//! ```no_run
+//! use micromoe::prop::forall;
+//! forall("sum is commutative", 200, |rng, _case| {
+//!     let a = rng.below(1000) as i64;
+//!     let b = rng.below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Base seed: override with `MICROMOE_PROP_SEED` to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("MICROMOE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` on `cases` independent seeded RNGs; panics with the seed of
+/// the first failing case.
+pub fn forall<F: Fn(&mut Rng, usize) + std::panic::RefUnwindSafe>(
+    name: &str,
+    cases: usize,
+    prop: F,
+) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng, case);
+        });
+        if let Err(cause) = result {
+            let msg = cause
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| cause.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: MICROMOE_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+/// Shrinking-lite: run the property over an explicit size ladder, smallest
+/// first, so the smallest failing size is reported.
+pub fn forall_sizes<F>(name: &str, sizes: &[usize], cases_per_size: usize, prop: F)
+where
+    F: Fn(&mut Rng, usize) + std::panic::RefUnwindSafe,
+{
+    for &size in sizes {
+        forall(&format!("{name}[size={size}]"), cases_per_size, |rng, _| {
+            prop(rng, size)
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("addition commutes", 50, |rng, _| {
+            let a = rng.below(100);
+            let b = rng.below(100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case_and_seed() {
+        let err = std::panic::catch_unwind(|| {
+            forall("always fails", 3, |_rng, _| panic!("boom"));
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always fails"));
+        assert!(msg.contains("MICROMOE_PROP_SEED"));
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn sizes_run_smallest_first() {
+        let seen = std::sync::Mutex::new(Vec::new());
+        forall_sizes("sizes", &[2, 8], 1, |_rng, size| {
+            seen.lock().unwrap().push(size);
+        });
+        assert_eq!(*seen.lock().unwrap(), vec![2, 8]);
+    }
+
+    #[test]
+    fn cases_get_distinct_rngs() {
+        let seen = std::sync::Mutex::new(std::collections::HashSet::new());
+        forall("distinct", 20, |rng, _| {
+            seen.lock().unwrap().insert(rng.next_u64());
+        });
+        assert_eq!(seen.lock().unwrap().len(), 20);
+    }
+}

@@ -1,0 +1,310 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python never runs on this path — the HLO text is the entire interface.
+//! HLO *text* (not serialized proto) is mandatory with this image's
+//! xla_extension 0.5.1 (jax ≥0.5 emits 64-bit instruction ids the proto
+//! path rejects; the text parser reassigns them).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ser::Json;
+
+/// Parsed `manifest.json`: artifact I/O specs plus the model config.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub num_params: usize,
+    pub capacity: usize,
+    /// model config fields (vocab, seq, hidden, layers, experts, topk, …)
+    pub config: HashMap<String, f64>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string(),
+        })
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut config = HashMap::new();
+        if let Some(Json::Obj(cfg)) = j.get("config") {
+            for (k, v) in cfg {
+                if let Some(x) = v.as_f64() {
+                    config.insert(k.clone(), x);
+                }
+            }
+        }
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact missing name"))?
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact missing file"))?
+                        .to_string(),
+                    inputs: a
+                        .get("inputs")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .get("outputs")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            preset: j.get("preset").and_then(Json::as_str).unwrap_or("?").to_string(),
+            num_params: j.get("num_params").and_then(Json::as_usize).unwrap_or(0),
+            capacity: j.get("capacity").and_then(Json::as_usize).unwrap_or(0),
+            config,
+            artifacts,
+        })
+    }
+
+    pub fn cfg(&self, key: &str) -> Option<f64> {
+        self.config.get(key).copied()
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// The PJRT runtime: one CPU client, lazily compiled executables.
+pub struct Runtime {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Default artifacts directory (env `MICROMOE_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MICROMOE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { dir: dir.to_path_buf(), manifest, client, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn exe(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.compile(name)?;
+        Ok(&self.exes[name])
+    }
+
+    /// Execute with literal inputs; returns one literal per declared output
+    /// (tuple-wrapped results are decomposed).
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let n_out = self
+            .manifest
+            .artifact(name)
+            .map(|a| a.outputs.len())
+            .unwrap_or(1);
+        let exe = self.exe(name)?;
+        let out = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let bufs = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{name}: no replica output"))?;
+        let mut lits = Vec::with_capacity(bufs.len());
+        for b in bufs {
+            lits.push(b.to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?);
+        }
+        // AOT lowers with return_tuple=True: one buffer holding an n-tuple
+        if lits.len() == 1 && n_out > 1 {
+            let only = lits.pop().unwrap();
+            let parts = only.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            if parts.len() != n_out {
+                bail!("{name}: {} tuple elements, manifest says {n_out}", parts.len());
+            }
+            return Ok(parts);
+        }
+        if lits.len() == 1 && n_out == 1 {
+            // may still be a 1-tuple
+            let only = lits.pop().unwrap();
+            return match only.shape() {
+                Ok(xla::Shape::Tuple(_)) => {
+                    Ok(only.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?)
+                }
+                _ => Ok(vec![only]),
+            };
+        }
+        Ok(lits)
+    }
+
+    /// f32 helper: run and pull each output as Vec<f32>.
+    pub fn execute_f32(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.execute(name, inputs)?
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Literal constructors for the shapes this system moves around.
+pub mod lit {
+    use anyhow::{anyhow, Result};
+
+    pub fn f32_vec(data: &[f32]) -> xla::Literal {
+        xla::Literal::vec1(data)
+    }
+
+    pub fn f32_matrix(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn f32_tensor3(data: &[f32], d0: usize, d1: usize, d2: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), d0 * d1 * d2);
+        xla::Literal::vec1(data)
+            .reshape(&[d0 as i64, d1 as i64, d2 as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn i32_matrix(data: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        assert_eq!(data.len(), rows * cols);
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    pub fn f32_scalar(x: f32) -> xla::Literal {
+        xla::Literal::scalar(x)
+    }
+
+    pub fn i32_scalar(x: i32) -> xla::Literal {
+        xla::Literal::scalar(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_spec_fields() {
+        let text = r#"{
+          "preset": "smoke", "num_params": 123, "capacity": 8,
+          "config": {"hidden": 32, "experts": 4, "use_pallas": true},
+          "artifacts": [
+            {"name": "gate", "file": "gate.hlo.txt",
+             "inputs": [{"name": "logits", "shape": [64, 4], "dtype": "float32"}],
+             "outputs": [{"name": "w", "shape": [64, 2], "dtype": "float32"},
+                          {"name": "i", "shape": [64, 2], "dtype": "int32"}]}
+          ]
+        }"#;
+        let dir = std::env::temp_dir().join(format!("mm_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.preset, "smoke");
+        assert_eq!(m.num_params, 123);
+        assert_eq!(m.cfg("hidden"), Some(32.0));
+        let a = m.artifact("gate").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![64, 4]);
+        assert_eq!(a.outputs[1].dtype, "int32");
+        assert_eq!(a.inputs[0].element_count(), 256);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

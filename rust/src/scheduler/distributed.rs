@@ -1,0 +1,143 @@
+//! Distributed scheduling across devices (§5.3).
+//!
+//! MicroMoE places an identical scheduler on every device: one all-gather
+//! collects `input_e^g`, then each device runs the deterministic algorithm
+//! independently — no scatter needed, and consistency holds because inputs,
+//! algorithm, and tie-breaking are identical everywhere.
+//!
+//! This module simulates that: N independent scheduler instances (one per
+//! device) fed through a modeled all-gather, with a checker asserting
+//! bit-identical schedules. It also exposes the centralized alternative the
+//! paper rejected, for the latency comparison (gather + scatter = two
+//! synchronization points vs one).
+
+use super::lpp::MicroEpScheduler;
+use super::{LoadMatrix, Schedule, SchedulerOptions};
+use crate::placement::Placement;
+use crate::topology::Topology;
+
+/// A fleet of per-device schedulers sharing one placement.
+pub struct DistributedSchedulers {
+    devices: Vec<MicroEpScheduler>,
+}
+
+/// Outcome of one distributed scheduling round.
+pub struct DistributedRound {
+    /// The (identical) schedule computed on every device.
+    pub schedule: Schedule,
+    /// Whether all devices agreed bit-for-bit (must be true; kept for
+    /// fault-injection tests).
+    pub consistent: bool,
+}
+
+impl DistributedSchedulers {
+    pub fn new(
+        placement: Placement,
+        topo: Option<Topology>,
+        opts: SchedulerOptions,
+        num_devices: usize,
+    ) -> Self {
+        assert!(num_devices > 0);
+        let devices = (0..num_devices)
+            .map(|_| MicroEpScheduler::new(placement.clone(), topo.clone(), opts.clone()))
+            .collect();
+        DistributedSchedulers { devices }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Run one round: every device schedules the all-gathered loads
+    /// independently; results are cross-checked.
+    pub fn round(&mut self, gathered: &LoadMatrix) -> DistributedRound {
+        let mut schedules: Vec<Schedule> =
+            self.devices.iter_mut().map(|d| d.schedule(gathered)).collect();
+        let first = schedules.remove(0);
+        let consistent = schedules.iter().all(|s| {
+            s.replica_loads == first.replica_loads && s.routes == first.routes
+        });
+        DistributedRound { schedule: first, consistent }
+    }
+}
+
+/// Communication-operation counts for scheduler placement strategies
+/// (§5.3's argument: distributed = 1 op, centralized = 2 ops).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedulerCommOps {
+    pub collective_ops: usize,
+}
+
+pub fn distributed_comm_ops() -> SchedulerCommOps {
+    SchedulerCommOps { collective_ops: 1 } // all-gather only
+}
+
+pub fn centralized_comm_ops() -> SchedulerCommOps {
+    SchedulerCommOps { collective_ops: 2 } // gather + scatter
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::cayley::cayley_graph_placement;
+    use crate::rng::Rng;
+    use crate::scheduler::ScheduleMode;
+
+    fn random_loads(seed: u64, e: usize, g: usize, n: u64) -> LoadMatrix {
+        let mut rng = Rng::new(seed);
+        let mut lm = LoadMatrix::zeros(e, g);
+        for _ in 0..n {
+            lm.add(rng.below(e as u64) as usize, rng.below(g as u64) as usize, 1);
+        }
+        lm
+    }
+
+    #[test]
+    fn all_devices_agree_over_many_batches() {
+        let p = cayley_graph_placement(8, 16);
+        let mut fleet =
+            DistributedSchedulers::new(p, None, SchedulerOptions::default(), 8);
+        for batch in 0..15 {
+            let lm = random_loads(batch, 16, 8, 1200);
+            let round = fleet.round(&lm);
+            assert!(round.consistent, "divergence at batch {batch}");
+        }
+    }
+
+    #[test]
+    fn agreement_holds_for_comm_aware_mode() {
+        let p = cayley_graph_placement(4, 8);
+        let opts = SchedulerOptions {
+            mode: ScheduleMode::CommAware { alpha: 0.5 },
+            ..Default::default()
+        };
+        let mut fleet = DistributedSchedulers::new(p, None, opts, 4);
+        for batch in 0..8 {
+            let lm = random_loads(100 + batch, 8, 4, 600);
+            assert!(fleet.round(&lm).consistent);
+        }
+    }
+
+    #[test]
+    fn warm_state_stays_in_sync() {
+        // warm-start state is per-device; determinism must survive it
+        let p = cayley_graph_placement(8, 32);
+        let mut fleet =
+            DistributedSchedulers::new(p, None, SchedulerOptions::default(), 3);
+        let mut lm = random_loads(7, 32, 8, 4000);
+        for step in 0..10 {
+            let round = fleet.round(&lm);
+            assert!(round.consistent, "divergence at step {step}");
+            // drift the loads slightly (correlated micro-batches)
+            let mut rng = Rng::new(1000 + step);
+            for _ in 0..50 {
+                lm.add(rng.below(32) as usize, rng.below(8) as usize, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn comm_op_counts_favor_distributed() {
+        assert!(distributed_comm_ops().collective_ops < centralized_comm_ops().collective_ops);
+    }
+}

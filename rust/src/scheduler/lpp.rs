@@ -1,0 +1,596 @@
+//! LP formulations of token scheduling: LPP 1 (§5.1), LPP 4 and its
+//! topology-aware refinement (Appendix A.1), plus [`MicroEpScheduler`],
+//! the stateful per-micro-batch solver with warm start.
+//!
+//! Variable/row layouts are fixed at construction (the placement determines
+//! the constraint matrix); each micro-batch only rewrites rhs entries —
+//! exactly the property that makes warm starting effective.
+//!
+//! One deliberate deviation from the paper's Appendix A.1 formulas: the
+//! paper's `send_g` sums only over experts *resident* on g; physically a
+//! GPU also sends every token destined to a non-resident expert, so we use
+//! `send_g = total_input_g − local_g` (total over all experts). The
+//! difference is a per-GPU constant inside the `max`, and the physical
+//! version is what our cluster model charges for, so we optimize that.
+
+use std::time::Instant;
+
+use super::rounding::round_replica_loads;
+use super::routing::route_tokens;
+use super::{LoadMatrix, Schedule, ScheduleMode, ScheduleStats, SchedulerOptions};
+use crate::lp::{LpProblem, Relation, WarmSolver};
+use crate::placement::Placement;
+use crate::topology::Topology;
+
+/// Stateful MicroEP scheduler for one MicroEP group.
+pub struct MicroEpScheduler {
+    pub placement: Placement,
+    topo: Option<Topology>,
+    opts: SchedulerOptions,
+    /// x-variable index per (expert, replica)
+    var_of: Vec<Vec<usize>>,
+    /// Eq-row index per expert (rhs = load_e)
+    eq_row: Vec<usize>,
+    /// rows whose rhs is `input_e^g` (CommAware/TopoAware): (row, e, g)
+    input_cap_rows: Vec<(usize, usize, usize)>,
+    /// rows whose rhs is `-total_input_g`: (row, g)
+    send_rows: Vec<(usize, usize)>,
+    /// rows whose rhs is node-aggregated input `node_input_e^n`: (row, e, node)
+    node_cap_rows: Vec<(usize, usize, usize)>,
+    /// rows whose rhs is `-total node input`: (row, node)
+    node_send_rows: Vec<(usize, usize)>,
+    /// per-GPU `Σx − t ≤ −base_g` rows (Compute mode): (row, gpu); rhs 0
+    /// normally, −base when pipelining adds a fixed EP load (App. A.2)
+    gpu_rows: Vec<(usize, usize)>,
+    /// transient rhs overrides installed by [`Self::schedule_with_base`]
+    base_updates: Vec<(usize, f64)>,
+    warm: WarmSolver,
+    solved_once: bool,
+}
+
+impl MicroEpScheduler {
+    pub fn new(placement: Placement, topo: Option<Topology>, opts: SchedulerOptions) -> Self {
+        if matches!(opts.mode, ScheduleMode::TopoAware { .. }) || opts.topo_aware_routing {
+            assert!(topo.is_some(), "topology-aware scheduling needs a Topology");
+        }
+        let mut b = Builder::new(&placement, topo.as_ref(), &opts.mode);
+        let problem = b.build();
+        MicroEpScheduler {
+            placement,
+            topo,
+            opts,
+            var_of: b.var_of,
+            eq_row: b.eq_row,
+            input_cap_rows: b.input_cap_rows,
+            send_rows: b.send_rows,
+            node_cap_rows: b.node_cap_rows,
+            node_send_rows: b.node_send_rows,
+            gpu_rows: b.gpu_rows,
+            base_updates: Vec::new(),
+            warm: WarmSolver::new(problem),
+            solved_once: false,
+        }
+    }
+
+    pub fn options(&self) -> &SchedulerOptions {
+        &self.opts
+    }
+
+    /// Schedule one micro-batch with pre-existing per-GPU base loads
+    /// (App. A.2 pipelining: the EP-routed share is already fixed, the LP
+    /// balances the MicroEP share around it). Compute mode only.
+    pub fn schedule_with_base(&mut self, loads: &LoadMatrix, base: &[u64]) -> Schedule {
+        assert!(
+            matches!(self.opts.mode, ScheduleMode::Compute),
+            "base loads are only supported in Compute mode"
+        );
+        assert_eq!(base.len(), self.placement.num_gpus);
+        self.base_updates = self
+            .gpu_rows
+            .iter()
+            .map(|&(row, g)| (row, -(base[g] as f64)))
+            .collect();
+        let sched = self.schedule(loads);
+        self.base_updates.clear();
+        sched
+    }
+
+    /// Schedule one micro-batch.
+    pub fn schedule(&mut self, loads: &LoadMatrix) -> Schedule {
+        assert_eq!(loads.num_experts, self.placement.num_experts);
+        assert_eq!(loads.num_gpus, self.placement.num_gpus);
+        let t0 = Instant::now();
+
+        // ---- rhs updates for this micro-batch ----
+        let mut updates: Vec<(usize, f64)> =
+            Vec::with_capacity(self.eq_row.len() + self.input_cap_rows.len() + self.send_rows.len());
+        // gpu rows: −base when pipelining, reset to 0 otherwise (the rhs
+        // persists inside the warm solver between calls)
+        if self.base_updates.is_empty() {
+            updates.extend(self.gpu_rows.iter().map(|&(row, _)| (row, 0.0)));
+        } else {
+            updates.extend(self.base_updates.iter().copied());
+        }
+        for e in 0..self.placement.num_experts {
+            updates.push((self.eq_row[e], loads.expert_load(e) as f64));
+        }
+        for &(row, e, g) in &self.input_cap_rows {
+            updates.push((row, loads.get(e, g) as f64));
+        }
+        for &(row, g) in &self.send_rows {
+            updates.push((row, -(loads.gpu_input(g) as f64)));
+        }
+        if !self.node_cap_rows.is_empty() || !self.node_send_rows.is_empty() {
+            let topo = self.topo.as_ref().unwrap();
+            let nodes = self.placement.num_gpus.div_ceil(topo.gpus_per_node);
+            // node-aggregated inputs per expert
+            let mut node_in = vec![vec![0u64; nodes]; self.placement.num_experts];
+            let mut node_total = vec![0u64; nodes];
+            for g in 0..self.placement.num_gpus {
+                let n = topo.node_of(g);
+                for e in 0..self.placement.num_experts {
+                    node_in[e][n] += loads.get(e, g);
+                }
+                node_total[n] += loads.gpu_input(g);
+            }
+            for &(row, e, n) in &self.node_cap_rows {
+                updates.push((row, node_in[e][n] as f64));
+            }
+            for &(row, n) in &self.node_send_rows {
+                updates.push((row, -(node_total[n] as f64)));
+            }
+        }
+
+        // ---- solve ----
+        let use_warm = self.opts.warm_start && self.solved_once;
+        let (frac, stats_lp) = match self.warm.solve_with(&updates, use_warm) {
+            Ok(sol) => {
+                self.solved_once = true;
+                let frac: Vec<Vec<f64>> = self
+                    .var_of
+                    .iter()
+                    .map(|vars| vars.iter().map(|&v| sol.x[v]).collect())
+                    .collect();
+                ((frac), (self.warm.last_iterations, self.warm.last_was_warm, sol.objective))
+            }
+            Err(e) => {
+                // Defensive fallback (should not happen: LPP 1/4 are always
+                // feasible): split each expert's load evenly over replicas.
+                log::warn!("LP solve failed ({e}); falling back to even split");
+                let frac: Vec<Vec<f64>> = (0..self.placement.num_experts)
+                    .map(|ei| {
+                        let k = self.placement.replica_count(ei);
+                        vec![loads.expert_load(ei) as f64 / k as f64; k]
+                    })
+                    .collect();
+                (frac, (0, false, f64::NAN))
+            }
+        };
+
+        // ---- integer rounding ----
+        let replica_loads = round_replica_loads(&frac, &loads.expert_loads());
+
+        // ---- token routing (Algorithm 1) ----
+        let routes = route_tokens(
+            &self.placement,
+            loads,
+            &replica_loads,
+            self.opts.locality_aware,
+            if self.opts.topo_aware_routing { self.topo.as_ref() } else { None },
+        );
+
+        let mut sched = Schedule {
+            replica_loads,
+            routes,
+            stats: ScheduleStats {
+                lp_iterations: stats_lp.0,
+                warm: stats_lp.1,
+                lp_objective: stats_lp.2,
+                max_gpu_load: 0,
+                solve_ns: 0,
+            },
+        };
+        sched.stats.max_gpu_load = sched.gpu_loads(&self.placement).into_iter().max().unwrap_or(0);
+        sched.stats.solve_ns = t0.elapsed().as_nanos() as u64;
+        sched
+    }
+}
+
+/// Constraint-matrix builder for the three LP modes.
+struct Builder {
+    var_of: Vec<Vec<usize>>,
+    eq_row: Vec<usize>,
+    input_cap_rows: Vec<(usize, usize, usize)>,
+    send_rows: Vec<(usize, usize)>,
+    node_cap_rows: Vec<(usize, usize, usize)>,
+    node_send_rows: Vec<(usize, usize)>,
+    gpu_rows: Vec<(usize, usize)>,
+    problem: Option<LpProblem>,
+}
+
+impl Builder {
+    fn new(p: &Placement, topo: Option<&Topology>, mode: &ScheduleMode) -> Self {
+        let g_count = p.num_gpus;
+        let e_count = p.num_experts;
+        let nx: usize = (0..e_count).map(|e| p.replica_count(e)).sum();
+        let mut var_of = Vec::with_capacity(e_count);
+        let mut next = 0usize;
+        for e in 0..e_count {
+            let vars: Vec<usize> = (0..p.replica_count(e)).map(|r| next + r).collect();
+            next += p.replica_count(e);
+            var_of.push(vars);
+        }
+        debug_assert_eq!(next, nx);
+
+        // per-GPU x-term lists: (gpu -> [(var)])
+        let mut on_gpu: Vec<Vec<usize>> = vec![Vec::new(); g_count];
+        for e in 0..e_count {
+            for (r, &g) in p.replicas[e].iter().enumerate() {
+                on_gpu[g].push(var_of[e][r]);
+            }
+        }
+
+        let mut me = Builder {
+            var_of,
+            eq_row: Vec::new(),
+            input_cap_rows: Vec::new(),
+            send_rows: Vec::new(),
+            node_cap_rows: Vec::new(),
+            node_send_rows: Vec::new(),
+            gpu_rows: Vec::new(),
+            problem: None,
+        };
+
+        let problem = match mode {
+            ScheduleMode::Compute => {
+                // vars: x.. , t
+                let t = nx;
+                let mut lp = LpProblem::new(nx + 1);
+                lp.set_objective(t, 1.0);
+                for g in 0..g_count {
+                    let mut terms: Vec<(usize, f64)> =
+                        on_gpu[g].iter().map(|&v| (v, 1.0)).collect();
+                    terms.push((t, -1.0));
+                    let row = lp.add(terms, Relation::Le, 0.0);
+                    me.gpu_rows.push((row, g));
+                }
+                for e in 0..e_count {
+                    let terms = me.var_of[e].iter().map(|&v| (v, 1.0)).collect();
+                    let row = lp.add(terms, Relation::Eq, 0.0);
+                    me.eq_row.push(row);
+                }
+                lp
+            }
+            ScheduleMode::CommAware { alpha } => {
+                // vars: x [0,nx), l [nx,2nx), comp, comm
+                let comp = 2 * nx;
+                let comm = 2 * nx + 1;
+                let mut lp = LpProblem::new(2 * nx + 2);
+                lp.set_objective(comp, 1.0);
+                lp.set_objective(comm, *alpha);
+                // comp >= gpu compute
+                for g in 0..g_count {
+                    let mut terms: Vec<(usize, f64)> =
+                        on_gpu[g].iter().map(|&v| (v, 1.0)).collect();
+                    terms.push((comp, -1.0));
+                    lp.add(terms, Relation::Le, 0.0);
+                }
+                // l <= x ; l <= input (rhs updated)
+                for e in 0..e_count {
+                    for (r, &g) in p.replicas[e].iter().enumerate() {
+                        let xv = me.var_of[e][r];
+                        let lv = nx + xv;
+                        lp.add(vec![(lv, 1.0), (xv, -1.0)], Relation::Le, 0.0);
+                        let row = lp.add(vec![(lv, 1.0)], Relation::Le, 0.0);
+                        me.input_cap_rows.push((row, e, g));
+                    }
+                }
+                // send: total_input_g - Σ l_g <= comm  ->  -Σl - comm <= -total_g
+                // recv: Σ x_g - Σ l_g - comm <= 0
+                for g in 0..g_count {
+                    let mut send_terms: Vec<(usize, f64)> =
+                        on_gpu[g].iter().map(|&v| (nx + v, -1.0)).collect();
+                    send_terms.push((comm, -1.0));
+                    let row = lp.add(send_terms, Relation::Le, 0.0);
+                    me.send_rows.push((row, g));
+
+                    let mut recv_terms: Vec<(usize, f64)> =
+                        on_gpu[g].iter().map(|&v| (v, 1.0)).collect();
+                    recv_terms.extend(on_gpu[g].iter().map(|&v| (nx + v, -1.0)));
+                    recv_terms.push((comm, -1.0));
+                    lp.add(recv_terms, Relation::Le, 0.0);
+                }
+                for e in 0..e_count {
+                    let terms = me.var_of[e].iter().map(|&v| (v, 1.0)).collect();
+                    let row = lp.add(terms, Relation::Eq, 0.0);
+                    me.eq_row.push(row);
+                }
+                lp
+            }
+            ScheduleMode::TopoAware { alpha1, alpha2 } => {
+                let topo = topo.expect("TopoAware needs topology");
+                let nodes = g_count.div_ceil(topo.gpus_per_node);
+                // vars: x [0,nx), l [nx,2nx), n [2nx,3nx), comp, ci, cj
+                let comp = 3 * nx;
+                let ci = 3 * nx + 1;
+                let cj = 3 * nx + 2;
+                let mut lp = LpProblem::new(3 * nx + 3);
+                lp.set_objective(comp, 1.0);
+                lp.set_objective(ci, *alpha1);
+                lp.set_objective(cj, *alpha2);
+                for g in 0..g_count {
+                    let mut terms: Vec<(usize, f64)> =
+                        on_gpu[g].iter().map(|&v| (v, 1.0)).collect();
+                    terms.push((comp, -1.0));
+                    lp.add(terms, Relation::Le, 0.0);
+                }
+                for e in 0..e_count {
+                    for (r, &g) in p.replicas[e].iter().enumerate() {
+                        let xv = me.var_of[e][r];
+                        let lv = nx + xv;
+                        let nv = 2 * nx + xv;
+                        lp.add(vec![(lv, 1.0), (xv, -1.0)], Relation::Le, 0.0);
+                        lp.add(vec![(lv, 1.0), (nv, -1.0)], Relation::Le, 0.0);
+                        lp.add(vec![(nv, 1.0), (xv, -1.0)], Relation::Le, 0.0);
+                        let row = lp.add(vec![(lv, 1.0)], Relation::Le, 0.0);
+                        me.input_cap_rows.push((row, e, g));
+                        let row = lp.add(vec![(nv, 1.0)], Relation::Le, 0.0);
+                        me.node_cap_rows.push((row, e, topo.node_of(g)));
+                    }
+                }
+                for g in 0..g_count {
+                    // intra recv: Σ(n-l) - ci <= 0
+                    let mut t1: Vec<(usize, f64)> =
+                        on_gpu[g].iter().map(|&v| (2 * nx + v, 1.0)).collect();
+                    t1.extend(on_gpu[g].iter().map(|&v| (nx + v, -1.0)));
+                    t1.push((ci, -1.0));
+                    lp.add(t1, Relation::Le, 0.0);
+                    // inter recv: Σ(x-n) - cj <= 0
+                    let mut t2: Vec<(usize, f64)> =
+                        on_gpu[g].iter().map(|&v| (v, 1.0)).collect();
+                    t2.extend(on_gpu[g].iter().map(|&v| (2 * nx + v, -1.0)));
+                    t2.push((cj, -1.0));
+                    lp.add(t2, Relation::Le, 0.0);
+                }
+                // inter send per node, normalized per GPU:
+                // (node_total - Σ_{replicas on node} n) / gpn <= cj
+                let gpn = topo.gpus_per_node as f64;
+                for node in 0..nodes {
+                    let mut terms: Vec<(usize, f64)> = Vec::new();
+                    for g in 0..g_count {
+                        if topo.node_of(g) == node {
+                            terms.extend(on_gpu[g].iter().map(|&v| (2 * nx + v, -1.0)));
+                        }
+                    }
+                    terms.push((cj, -gpn));
+                    let row = lp.add(terms, Relation::Le, 0.0);
+                    me.node_send_rows.push((row, node));
+                }
+                for e in 0..e_count {
+                    let terms = me.var_of[e].iter().map(|&v| (v, 1.0)).collect();
+                    let row = lp.add(terms, Relation::Eq, 0.0);
+                    me.eq_row.push(row);
+                }
+                lp
+            }
+        };
+        me.problem = Some(problem);
+        me
+    }
+
+    fn build(&mut self) -> LpProblem {
+        self.problem.take().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::cayley::cayley_graph_placement;
+    use crate::placement::graph::max_induced_density_exact;
+    use crate::rng::{Rng, Zipf};
+
+    fn ring4() -> Placement {
+        Placement::from_replicas(4, vec![vec![0, 3], vec![0, 1], vec![1, 2], vec![2, 3]])
+    }
+
+    fn uniform_inputs(loads: &[u64], num_gpus: usize) -> LoadMatrix {
+        // distribute each expert's load evenly over source GPUs
+        let mut m = LoadMatrix::zeros(loads.len(), num_gpus);
+        for (e, &l) in loads.iter().enumerate() {
+            for g in 0..num_gpus {
+                let share = l / num_gpus as u64
+                    + if (g as u64) < l % num_gpus as u64 { 1 } else { 0 };
+                m.set(e, g, share);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn figure3c_achieves_perfect_balance() {
+        // paper's worked example: loads 4,6,6,8 on the ring -> all GPUs at 6
+        let p = ring4();
+        let loads = uniform_inputs(&[4, 6, 6, 8], 4);
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let sched = s.schedule(&loads);
+        assert_eq!(sched.gpu_loads(&p), vec![6, 6, 6, 6]);
+        assert!((sched.stats.lp_objective - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lp_objective_equals_eq3_density() {
+        // Eq. 3 identity: LP optimum == max induced subgraph density
+        let mut rng = Rng::new(17);
+        for trial in 0..25 {
+            let p = cayley_graph_placement(8, 16);
+            let zipf = Zipf::new(16, 0.8);
+            let mut loads = vec![0u64; 16];
+            for _ in 0..2000 {
+                loads[zipf.sample(&mut rng)] += 1;
+            }
+            let lm = uniform_inputs(&loads, 8);
+            let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+            let sched = s.schedule(&lm);
+            let loads_f: Vec<f64> = loads.iter().map(|&l| l as f64).collect();
+            let density = max_induced_density_exact(&p, &loads_f).density;
+            assert!(
+                (sched.stats.lp_objective - density).abs() < 1e-5,
+                "trial {trial}: LP {} != density {}",
+                sched.stats.lp_objective,
+                density
+            );
+        }
+    }
+
+    #[test]
+    fn replica_loads_conserve_expert_totals() {
+        let p = ring4();
+        let lm = uniform_inputs(&[13, 7, 22, 5], 4);
+        let sched = crate::scheduler::schedule_once(&p, &lm);
+        for e in 0..4 {
+            let sum: u64 = sched.replica_loads[e].iter().sum();
+            assert_eq!(sum, lm.expert_load(e), "expert {e}");
+        }
+    }
+
+    #[test]
+    fn warm_start_matches_cold_across_batches() {
+        let p = cayley_graph_placement(8, 16);
+        let mut warm_s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let mut cold_s = MicroEpScheduler::new(
+            p.clone(),
+            None,
+            SchedulerOptions { warm_start: false, ..Default::default() },
+        );
+        let mut rng = Rng::new(5);
+        for batch in 0..20 {
+            let mut lm = LoadMatrix::zeros(16, 8);
+            for _ in 0..1000 {
+                let e = rng.below(16) as usize;
+                let g = rng.below(8) as usize;
+                lm.add(e, g, 1);
+            }
+            let a = warm_s.schedule(&lm);
+            let b = cold_s.schedule(&lm);
+            assert!(
+                (a.stats.lp_objective - b.stats.lp_objective).abs() < 1e-5,
+                "batch {batch}: warm {} cold {}",
+                a.stats.lp_objective,
+                b.stats.lp_objective
+            );
+            if batch > 0 {
+                assert!(a.stats.warm, "warm path not taken at batch {batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_uses_fewer_pivots_on_similar_loads() {
+        let p = cayley_graph_placement(8, 32);
+        let mut s = MicroEpScheduler::new(p, None, SchedulerOptions::default());
+        let mut rng = Rng::new(9);
+        let mut lm = LoadMatrix::zeros(32, 8);
+        for _ in 0..4000 {
+            lm.add(rng.below(32) as usize, rng.below(8) as usize, 1);
+        }
+        let first = s.schedule(&lm);
+        // small perturbation
+        lm.add(3, 2, 5);
+        lm.add(7, 1, 3);
+        let second = s.schedule(&lm);
+        assert!(second.stats.warm);
+        assert!(
+            second.stats.lp_iterations <= first.stats.lp_iterations / 2 + 2,
+            "warm {} vs cold {}",
+            second.stats.lp_iterations,
+            first.stats.lp_iterations
+        );
+    }
+
+    #[test]
+    fn comm_aware_reduces_traffic() {
+        // CommAware with large alpha should keep more tokens local than
+        // pure Compute mode, at equal-or-worse compute balance.
+        let p = ring4();
+        // tokens already sit on GPUs hosting their experts
+        let mut lm = LoadMatrix::zeros(4, 4);
+        for e in 0..4 {
+            let home = p.replicas[e][0];
+            lm.set(e, home, 40);
+        }
+        let mut s_comp = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let mut s_comm = MicroEpScheduler::new(
+            p.clone(),
+            None,
+            SchedulerOptions {
+                mode: ScheduleMode::CommAware { alpha: 5.0 },
+                ..Default::default()
+            },
+        );
+        let a = s_comp.schedule(&lm);
+        let b = s_comm.schedule(&lm);
+        let vol = |s: &Schedule| s.comm_volumes(4).0.iter().sum::<u64>();
+        assert!(
+            vol(&b) <= vol(&a),
+            "comm-aware traffic {} > compute-only {}",
+            vol(&b),
+            vol(&a)
+        );
+    }
+
+    #[test]
+    fn comm_aware_still_balances_when_alpha_small() {
+        let p = ring4();
+        let lm = uniform_inputs(&[4, 6, 6, 8], 4);
+        let mut s = MicroEpScheduler::new(
+            p.clone(),
+            None,
+            SchedulerOptions {
+                mode: ScheduleMode::CommAware { alpha: 0.01 },
+                ..Default::default()
+            },
+        );
+        let sched = s.schedule(&lm);
+        let max = *sched.gpu_loads(&p).iter().max().unwrap();
+        assert!(max <= 7, "loads {:?}", sched.gpu_loads(&p));
+    }
+
+    #[test]
+    fn topo_aware_solves_and_balances() {
+        let topo = Topology::new(8, 4, 2, 4); // 2 nodes of 4 GPUs
+        let p = cayley_graph_placement(8, 16);
+        let mut s = MicroEpScheduler::new(
+            p.clone(),
+            Some(topo),
+            SchedulerOptions {
+                mode: ScheduleMode::TopoAware { alpha1: 0.1, alpha2: 1.0 },
+                topo_aware_routing: true,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(3);
+        let mut lm = LoadMatrix::zeros(16, 8);
+        for _ in 0..1600 {
+            lm.add(rng.below(16) as usize, rng.below(8) as usize, 1);
+        }
+        let sched = s.schedule(&lm);
+        for e in 0..16 {
+            assert_eq!(
+                sched.replica_loads[e].iter().sum::<u64>(),
+                lm.expert_load(e)
+            );
+        }
+        let imb = sched.imbalance(&p);
+        assert!(imb < 1.2, "topo-aware imbalance {imb}");
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let p = ring4();
+        let lm = LoadMatrix::zeros(4, 4);
+        let sched = crate::scheduler::schedule_once(&p, &lm);
+        assert_eq!(sched.gpu_loads(&p), vec![0, 0, 0, 0]);
+        assert!(sched.routes.is_empty());
+    }
+}

@@ -1,0 +1,207 @@
+//! Token scheduling (§5): the short-term half of MicroEP.
+//!
+//! Per micro-batch, given `input_e^g` (tokens on GPU g routed to expert e by
+//! the gate), the scheduler:
+//!
+//! 1. distributes each expert's load over its replicas by solving LPP 1
+//!    (or the communication-aware LPP 4 / its topology-aware refinement),
+//!    warm-starting from the previous micro-batch ([`lpp`]);
+//! 2. rounds the fractional replica loads to integers without changing any
+//!    expert's total ([`rounding`]);
+//! 3. routes concrete token ranges to replicas with Algorithm 1, local
+//!    tokens first ([`routing`]).
+//!
+//! [`distributed`] models §5.3's distributed deterministic execution: every
+//! device runs the same algorithm on all-gathered inputs and must produce
+//! bit-identical schedules.
+
+pub mod distributed;
+pub mod flow;
+pub mod lpp;
+pub mod rounding;
+pub mod routing;
+
+use crate::placement::Placement;
+use crate::topology::Topology;
+
+/// `input_e^g` — token counts per (expert, source GPU), expert-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadMatrix {
+    pub num_experts: usize,
+    pub num_gpus: usize,
+    data: Vec<u64>,
+}
+
+impl LoadMatrix {
+    pub fn zeros(num_experts: usize, num_gpus: usize) -> Self {
+        LoadMatrix { num_experts, num_gpus, data: vec![0; num_experts * num_gpus] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<u64>>) -> Self {
+        let num_experts = rows.len();
+        let num_gpus = rows.first().map_or(0, Vec::len);
+        assert!(rows.iter().all(|r| r.len() == num_gpus));
+        LoadMatrix { num_experts, num_gpus, data: rows.into_iter().flatten().collect() }
+    }
+
+    #[inline]
+    pub fn get(&self, e: usize, g: usize) -> u64 {
+        self.data[e * self.num_gpus + g]
+    }
+
+    #[inline]
+    pub fn set(&mut self, e: usize, g: usize, v: u64) {
+        self.data[e * self.num_gpus + g] = v;
+    }
+
+    #[inline]
+    pub fn add(&mut self, e: usize, g: usize, v: u64) {
+        self.data[e * self.num_gpus + g] += v;
+    }
+
+    /// Total load of expert e across the group (`load_e`).
+    pub fn expert_load(&self, e: usize) -> u64 {
+        let base = e * self.num_gpus;
+        self.data[base..base + self.num_gpus].iter().sum()
+    }
+
+    /// Total tokens originating on GPU g.
+    pub fn gpu_input(&self, g: usize) -> u64 {
+        (0..self.num_experts).map(|e| self.get(e, g)).sum()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.data.iter().sum()
+    }
+
+    pub fn expert_loads(&self) -> Vec<u64> {
+        (0..self.num_experts).map(|e| self.expert_load(e)).collect()
+    }
+}
+
+/// One routed token range: `tokens` tokens of `expert` moving from GPU
+/// `src`'s queue to the replica on GPU `dst`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Route {
+    pub expert: usize,
+    pub src: usize,
+    pub dst: usize,
+    pub tokens: u64,
+}
+
+/// Per-solve diagnostics (feeds Fig. 9 / Fig. 11).
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleStats {
+    /// simplex pivots spent
+    pub lp_iterations: usize,
+    /// whether the warm path was taken
+    pub warm: bool,
+    /// LP objective (fractional optimal max GPU load, or comp+α·comm)
+    pub lp_objective: f64,
+    /// max GPU load after integer rounding
+    pub max_gpu_load: u64,
+    /// wall time of the LP solve + routing, nanoseconds
+    pub solve_ns: u64,
+}
+
+/// A complete per-micro-batch schedule.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// `replica_loads[e][r]` — integer tokens for replica `r` of expert `e`
+    /// (aligned with `Placement::replicas[e]`).
+    pub replica_loads: Vec<Vec<u64>>,
+    pub routes: Vec<Route>,
+    pub stats: ScheduleStats,
+}
+
+impl Schedule {
+    /// Per-GPU compute loads implied by the replica assignment.
+    pub fn gpu_loads(&self, placement: &Placement) -> Vec<u64> {
+        let mut loads = vec![0u64; placement.num_gpus];
+        for (e, grp) in placement.replicas.iter().enumerate() {
+            for (r, &g) in grp.iter().enumerate() {
+                loads[g] += self.replica_loads[e][r];
+            }
+        }
+        loads
+    }
+
+    /// (send, recv) all-to-all volumes per GPU, in tokens (excludes
+    /// locally-kept ranges).
+    pub fn comm_volumes(&self, num_gpus: usize) -> (Vec<u64>, Vec<u64>) {
+        let mut send = vec![0u64; num_gpus];
+        let mut recv = vec![0u64; num_gpus];
+        for r in &self.routes {
+            if r.src != r.dst {
+                send[r.src] += r.tokens;
+                recv[r.dst] += r.tokens;
+            }
+        }
+        (send, recv)
+    }
+
+    /// max/avg GPU-load imbalance ratio (Fig. 7's metric).
+    pub fn imbalance(&self, placement: &Placement) -> f64 {
+        let loads = self.gpu_loads(placement);
+        let max = *loads.iter().max().unwrap() as f64;
+        let avg = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
+        if avg == 0.0 {
+            1.0
+        } else {
+            max / avg
+        }
+    }
+}
+
+/// Objective mode for the scheduling LP.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleMode {
+    /// LPP 1: minimize max GPU compute load.
+    Compute,
+    /// LPP 4: minimize `comp + alpha * comm` (Appendix A.1).
+    CommAware { alpha: f64 },
+    /// Topology-aware LPP (Appendix A.1): separate intra-node (alpha1) and
+    /// inter-node (alpha2) communication weights.
+    TopoAware { alpha1: f64, alpha2: f64 },
+}
+
+/// Scheduler options (each maps to a Fig. 11 ablation arm).
+#[derive(Clone, Debug)]
+pub struct SchedulerOptions {
+    pub mode: ScheduleMode,
+    /// reuse the previous basis when only loads changed (§5.1)
+    pub warm_start: bool,
+    /// route local tokens to local replicas first (§5.2)
+    pub locality_aware: bool,
+    /// prefer same-node replicas in the second routing pass (App. A.1);
+    /// requires a topology
+    pub topo_aware_routing: bool,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions {
+            mode: ScheduleMode::Compute,
+            warm_start: true,
+            locality_aware: true,
+            topo_aware_routing: false,
+        }
+    }
+}
+
+pub use lpp::MicroEpScheduler;
+
+/// Convenience: schedule one micro-batch with default options.
+pub fn schedule_once(placement: &Placement, loads: &LoadMatrix) -> Schedule {
+    let mut s = MicroEpScheduler::new(placement.clone(), None, SchedulerOptions::default());
+    s.schedule(loads)
+}
+
+/// Convenience: scheduler bound to a topology (for topo-aware modes).
+pub fn scheduler_with_topology(
+    placement: Placement,
+    topo: Topology,
+    opts: SchedulerOptions,
+) -> MicroEpScheduler {
+    MicroEpScheduler::new(placement, Some(topo), opts)
+}

@@ -1,0 +1,107 @@
+//! Fractional → integer replica loads, expert-total preserving.
+//!
+//! The LP yields fractional `x_e^g`; tokens are indivisible. Largest-
+//! remainder rounding per expert keeps `Σ_r x_e^r == load_e` exactly and
+//! perturbs any GPU's load by less than the number of its resident experts
+//! — negligible against micro-batch token counts (tested).
+
+/// Round each expert's fractional replica loads to integers summing to
+/// `totals[e]`.
+pub fn round_replica_loads(frac: &[Vec<f64>], totals: &[u64]) -> Vec<Vec<u64>> {
+    assert_eq!(frac.len(), totals.len());
+    frac.iter()
+        .zip(totals)
+        .map(|(xs, &total)| round_preserving_sum(xs, total))
+        .collect()
+}
+
+/// Largest-remainder rounding of `xs` to integers summing to `total`.
+pub fn round_preserving_sum(xs: &[f64], total: u64) -> Vec<u64> {
+    if xs.is_empty() {
+        assert_eq!(total, 0, "no replicas to hold {total} tokens");
+        return Vec::new();
+    }
+    let mut out: Vec<u64> = xs.iter().map(|&x| x.max(0.0).floor() as u64).collect();
+    let mut assigned: u64 = out.iter().sum();
+    // floor sum can exceed `total` only via fp noise on the LP solution;
+    // shave from the largest entries
+    while assigned > total {
+        let i = out
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap();
+        out[i] -= 1;
+        assigned -= 1;
+    }
+    // distribute the remainder by largest fractional part
+    let mut rem: Vec<(usize, f64)> = xs
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i, x.max(0.0) - x.max(0.0).floor()))
+        .collect();
+    rem.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut left = total - assigned;
+    let mut k = 0usize;
+    while left > 0 {
+        out[rem[k % rem.len()].0] += 1;
+        left -= 1;
+        k += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn exact_integers_pass_through() {
+        assert_eq!(round_preserving_sum(&[3.0, 5.0, 2.0], 10), vec![3, 5, 2]);
+    }
+
+    #[test]
+    fn remainder_goes_to_largest_fraction() {
+        assert_eq!(round_preserving_sum(&[2.7, 3.2, 4.1], 10), vec![3, 3, 4]);
+    }
+
+    #[test]
+    fn sum_always_preserved() {
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let n = 1 + rng.below(6) as usize;
+            let total = rng.below(1000);
+            // random fractional split of `total`
+            let mut parts: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let s: f64 = parts.iter().sum();
+            for p in &mut parts {
+                *p = *p / s * total as f64;
+            }
+            let out = round_preserving_sum(&parts, total);
+            assert_eq!(out.iter().sum::<u64>(), total);
+            // each entry within 1 of its fractional value
+            for (o, p) in out.iter().zip(&parts) {
+                assert!((*o as f64 - p).abs() < 1.0 + 1e-9, "{o} vs {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_total() {
+        assert_eq!(round_preserving_sum(&[0.0, 0.0], 0), vec![0, 0]);
+    }
+
+    #[test]
+    fn fp_noise_above_total_is_shaved() {
+        // floors sum to 11 > total 10 (simulated fp contamination)
+        assert_eq!(round_preserving_sum(&[6.0, 5.0], 10).iter().sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn negative_noise_clamped() {
+        let out = round_preserving_sum(&[-1e-9, 5.0], 5);
+        assert_eq!(out, vec![0, 5]);
+    }
+}

@@ -1,0 +1,248 @@
+//! Algorithm 1: routing tokens to expert replicas (§5.2, App. A.1).
+//!
+//! Token ranges (never individual tokens) are matched against replica
+//! budgets `x_e^g` in up to three passes:
+//!
+//! 1. **local** (locality-aware, §5.2): tokens on GPU g → g's own replica;
+//! 2. **node** (topology-aware, App. A.1): remaining tokens → replicas on
+//!    the same node;
+//! 3. **global**: sequential sweep over sources × replicas.
+//!
+//! The sweep order is deterministic, so every device in the MicroEP group
+//! computes the identical route set from the all-gathered `input_e^g`
+//! (§5.3 consistency).
+
+use super::{LoadMatrix, Route};
+use crate::placement::Placement;
+use crate::topology::Topology;
+
+/// Route all tokens given integer replica budgets. Returns ranges covering
+/// every input token exactly once (including src == dst "stay local" ranges,
+/// which cost no communication).
+pub fn route_tokens(
+    placement: &Placement,
+    input: &LoadMatrix,
+    replica_loads: &[Vec<u64>],
+    locality_aware: bool,
+    topo: Option<&Topology>,
+) -> Vec<Route> {
+    let e_count = placement.num_experts;
+    let g_count = placement.num_gpus;
+    let mut routes = Vec::new();
+
+    // remaining input per (e, g) and remaining budget per (e, replica idx)
+    let mut rem_in: Vec<Vec<u64>> = (0..e_count)
+        .map(|e| (0..g_count).map(|g| input.get(e, g)).collect())
+        .collect();
+    let mut rem_x: Vec<Vec<u64>> = replica_loads.to_vec();
+
+    for e in 0..e_count {
+        let grp = &placement.replicas[e];
+
+        // pass 1: local tokens to local replicas (Alg. 1 lines 4-9)
+        if locality_aware {
+            for (r, &g) in grp.iter().enumerate() {
+                let y = rem_in[e][g].min(rem_x[e][r]);
+                if y > 0 {
+                    routes.push(Route { expert: e, src: g, dst: g, tokens: y });
+                    rem_in[e][g] -= y;
+                    rem_x[e][r] -= y;
+                }
+            }
+        }
+
+        // pass 2: same-node replicas (App. A.1 topology-aware routing)
+        if let Some(topo) = topo {
+            for g in 0..g_count {
+                if rem_in[e][g] == 0 {
+                    continue;
+                }
+                for (r, &g2) in grp.iter().enumerate() {
+                    if g2 == g || !topo.same_node(g, g2) {
+                        continue;
+                    }
+                    let y = rem_in[e][g].min(rem_x[e][r]);
+                    if y > 0 {
+                        routes.push(Route { expert: e, src: g, dst: g2, tokens: y });
+                        rem_in[e][g] -= y;
+                        rem_x[e][r] -= y;
+                    }
+                    if rem_in[e][g] == 0 {
+                        break;
+                    }
+                }
+            }
+        }
+
+        // pass 3: global sequential sweep (Alg. 1 lines 10-16)
+        let mut r = 0usize;
+        for g in 0..g_count {
+            while rem_in[e][g] > 0 {
+                while r < grp.len() && rem_x[e][r] == 0 {
+                    r += 1;
+                }
+                assert!(
+                    r < grp.len(),
+                    "routing ran out of replica budget for expert {e} \
+                     (Σx < load_e — rounding bug?)"
+                );
+                let y = rem_in[e][g].min(rem_x[e][r]);
+                routes.push(Route { expert: e, src: g, dst: grp[r], tokens: y });
+                rem_in[e][g] -= y;
+                rem_x[e][r] -= y;
+            }
+        }
+        debug_assert!(rem_x[e].iter().all(|&v| v == 0), "unused budget for expert {e}");
+    }
+    routes
+}
+
+/// Verify a route set against inputs and budgets (test/diagnostic helper).
+pub fn check_routes(
+    placement: &Placement,
+    input: &LoadMatrix,
+    replica_loads: &[Vec<u64>],
+    routes: &[Route],
+) -> Result<(), String> {
+    let e_count = placement.num_experts;
+    let g_count = placement.num_gpus;
+    let mut from = vec![vec![0u64; g_count]; e_count];
+    let mut to = vec![std::collections::HashMap::<usize, u64>::new(); e_count];
+    for r in routes {
+        from[r.expert][r.src] += r.tokens;
+        *to[r.expert].entry(r.dst).or_default() += r.tokens;
+        if !placement.hosts(r.dst, r.expert) {
+            return Err(format!("route to non-resident replica: {r:?}"));
+        }
+    }
+    for e in 0..e_count {
+        for g in 0..g_count {
+            if from[e][g] != input.get(e, g) {
+                return Err(format!(
+                    "expert {e} gpu {g}: routed {} != input {}",
+                    from[e][g],
+                    input.get(e, g)
+                ));
+            }
+        }
+        for (r, &g) in placement.replicas[e].iter().enumerate() {
+            let got = to[e].get(&g).copied().unwrap_or(0);
+            if got != replica_loads[e][r] {
+                return Err(format!(
+                    "expert {e} replica on gpu {g}: received {got} != budget {}",
+                    replica_loads[e][r]
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::scheduler::rounding::round_preserving_sum;
+
+    fn ring4() -> Placement {
+        Placement::from_replicas(4, vec![vec![0, 3], vec![0, 1], vec![1, 2], vec![2, 3]])
+    }
+
+    fn random_case(seed: u64) -> (Placement, LoadMatrix, Vec<Vec<u64>>) {
+        let mut rng = Rng::new(seed);
+        let p = crate::placement::random::random_placement(6, 12, 2, &mut rng);
+        let mut lm = LoadMatrix::zeros(12, 6);
+        for _ in 0..800 {
+            lm.add(rng.below(12) as usize, rng.below(6) as usize, 1);
+        }
+        // random fractional budgets, then round
+        let budgets: Vec<Vec<u64>> = (0..12)
+            .map(|e| {
+                let total = lm.expert_load(e);
+                let k = p.replica_count(e);
+                let fr: Vec<f64> = (0..k).map(|_| rng.f64()).collect();
+                let s: f64 = fr.iter().sum();
+                let fr: Vec<f64> = fr.iter().map(|v| v / s * total as f64).collect();
+                round_preserving_sum(&fr, total)
+            })
+            .collect();
+        (p, lm, budgets)
+    }
+
+    #[test]
+    fn conservation_random_cases() {
+        for seed in 0..25 {
+            let (p, lm, budgets) = random_case(seed);
+            let routes = route_tokens(&p, &lm, &budgets, true, None);
+            check_routes(&p, &lm, &budgets, &routes).unwrap();
+        }
+    }
+
+    #[test]
+    fn conservation_without_locality() {
+        for seed in 0..10 {
+            let (p, lm, budgets) = random_case(seed + 100);
+            let routes = route_tokens(&p, &lm, &budgets, false, None);
+            check_routes(&p, &lm, &budgets, &routes).unwrap();
+        }
+    }
+
+    #[test]
+    fn locality_reduces_traffic() {
+        for seed in 0..10 {
+            let (p, lm, budgets) = random_case(seed + 200);
+            let with = route_tokens(&p, &lm, &budgets, true, None);
+            let without = route_tokens(&p, &lm, &budgets, false, None);
+            let vol = |rs: &[Route]| -> u64 {
+                rs.iter().filter(|r| r.src != r.dst).map(|r| r.tokens).sum()
+            };
+            assert!(
+                vol(&with) <= vol(&without),
+                "seed {seed}: locality increased traffic"
+            );
+        }
+    }
+
+    #[test]
+    fn local_tokens_stay_local_when_budget_allows() {
+        let p = ring4();
+        let mut lm = LoadMatrix::zeros(4, 4);
+        lm.set(0, 0, 10); // expert 0 replicas on {0,3}
+        let budgets = vec![vec![10, 0], vec![0, 0], vec![0, 0], vec![0, 0]];
+        let routes = route_tokens(&p, &lm, &budgets, true, None);
+        assert_eq!(routes, vec![Route { expert: 0, src: 0, dst: 0, tokens: 10 }]);
+    }
+
+    #[test]
+    fn topo_pass_prefers_same_node() {
+        // 4 GPUs, 2 nodes of 2; expert 0 replicas on {1, 2}; tokens on 0.
+        // node(0)={0,1}: topo pass should send to GPU 1 first.
+        let p = Placement::from_replicas(4, vec![vec![1, 2], vec![0, 3], vec![0, 1], vec![2, 3]]);
+        let topo = Topology::new(4, 2, 2, 2);
+        let mut lm = LoadMatrix::zeros(4, 4);
+        lm.set(0, 0, 8);
+        let budgets = vec![vec![5, 3], vec![0, 0], vec![0, 0], vec![0, 0]];
+        let routes = route_tokens(&p, &lm, &budgets, true, Some(&topo));
+        // first 5 tokens go to same-node GPU 1; remaining 3 cross nodes
+        assert!(routes.contains(&Route { expert: 0, src: 0, dst: 1, tokens: 5 }));
+        assert!(routes.contains(&Route { expert: 0, src: 0, dst: 2, tokens: 3 }));
+    }
+
+    #[test]
+    fn deterministic_output() {
+        let (p, lm, budgets) = random_case(7);
+        let a = route_tokens(&p, &lm, &budgets, true, None);
+        let b = route_tokens(&p, &lm, &budgets, true, None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "ran out of replica budget")]
+    fn underfunded_budget_panics() {
+        let p = ring4();
+        let mut lm = LoadMatrix::zeros(4, 4);
+        lm.set(0, 1, 5);
+        let budgets = vec![vec![2, 2], vec![0, 0], vec![0, 0], vec![0, 0]]; // 4 < 5
+        route_tokens(&p, &lm, &budgets, true, None);
+    }
+}

@@ -1,0 +1,241 @@
+//! Small statistics substrate: summaries, histograms, moving averages and
+//! time-series tooling shared by the adaptive-replacement predictor, the
+//! bench harness, and the experiment reports.
+
+/// Summary statistics over a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "summary of empty sample");
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: percentile(&sorted, 0.50),
+            p95: percentile(&sorted, 0.95),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Percentile of an already-sorted slice (nearest-rank with interpolation).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Exponential moving average (the paper's §6.4 "moving averages" predictor
+/// is realized as EMA + a windowed simple MA; both live here).
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Fixed-window moving average over vectors (per-expert load series).
+#[derive(Clone, Debug)]
+pub struct VecWindow {
+    window: usize,
+    buf: std::collections::VecDeque<Vec<f64>>,
+}
+
+impl VecWindow {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        VecWindow { window, buf: std::collections::VecDeque::new() }
+    }
+
+    pub fn push(&mut self, xs: Vec<f64>) {
+        if self.buf.len() == self.window {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(xs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Element-wise mean over the window.
+    pub fn mean(&self) -> Option<Vec<f64>> {
+        let first = self.buf.front()?;
+        let mut acc = vec![0.0; first.len()];
+        for xs in &self.buf {
+            for (a, x) in acc.iter_mut().zip(xs) {
+                *a += x;
+            }
+        }
+        let n = self.buf.len() as f64;
+        for a in &mut acc {
+            *a /= n;
+        }
+        Some(acc)
+    }
+}
+
+/// Simple linear-scale histogram for latency collections.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.counts.len();
+            let bin = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.counts[bin.min(n - 1)] += 1;
+        }
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+}
+
+/// max/avg imbalance of a load vector (Fig. 7's y-axis).
+pub fn imbalance_ratio(loads: &[f64]) -> f64 {
+    let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+    let avg = loads.iter().sum::<f64>() / loads.len() as f64;
+    if avg <= 0.0 {
+        1.0
+    } else {
+        max / avg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 10.0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..50 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_tracks_change() {
+        let mut e = Ema::new(0.3);
+        e.update(0.0);
+        let v = e.update(10.0);
+        assert!((v - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vec_window_mean() {
+        let mut w = VecWindow::new(2);
+        w.push(vec![1.0, 2.0]);
+        w.push(vec![3.0, 4.0]);
+        assert_eq!(w.mean().unwrap(), vec![2.0, 3.0]);
+        w.push(vec![5.0, 6.0]); // evicts first
+        assert_eq!(w.mean().unwrap(), vec![4.0, 5.0]);
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(11.0);
+        assert_eq!(h.counts(), &[1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn imbalance_of_uniform_is_one() {
+        assert!((imbalance_ratio(&[4.0, 4.0, 4.0]) - 1.0).abs() < 1e-12);
+        assert!((imbalance_ratio(&[8.0, 0.0]) - 2.0).abs() < 1e-12);
+    }
+}

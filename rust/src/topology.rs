@@ -1,0 +1,168 @@
+//! Parallelism topology algebra: DP / EP / PP / EDP / MicroEP groups.
+//!
+//! Rank conventions follow Megatron-LM's order (§2.2): within one PP stage,
+//! GPUs are numbered `0..dp_degree`; the DP group is partitioned into
+//! `dp_degree / ep_degree` EP groups of consecutive ranks; EDP groups link
+//! the same EP rank across EP groups. MicroEP merges `d` consecutive EP
+//! groups into one scheduling domain (§4).
+
+/// Static description of one PP stage's GPU pool and its grouping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    /// Number of GPUs in the DP group (== DP degree).
+    pub dp_degree: usize,
+    /// Experts-per-group parallelism degree; divides `dp_degree`.
+    pub ep_degree: usize,
+    /// MicroEP merge factor `d`, with `1 < d <= dp_degree / ep_degree`
+    /// (d == 1 degenerates to vanilla EP).
+    pub d: usize,
+    /// GPUs per node (NVLink island size) for topology-aware scheduling.
+    pub gpus_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(dp_degree: usize, ep_degree: usize, d: usize, gpus_per_node: usize) -> Self {
+        assert!(ep_degree > 0 && dp_degree % ep_degree == 0, "EP must divide DP");
+        let edp = dp_degree / ep_degree;
+        assert!(d >= 1 && edp % d == 0, "d={d} must divide EDP degree {edp}");
+        assert!(gpus_per_node > 0);
+        Topology { dp_degree, ep_degree, d, gpus_per_node }
+    }
+
+    /// Number of EP groups inside the DP group.
+    pub fn num_ep_groups(&self) -> usize {
+        self.dp_degree / self.ep_degree
+    }
+
+    /// Number of MicroEP groups (each merges `d` EP groups).
+    pub fn num_microep_groups(&self) -> usize {
+        self.num_ep_groups() / self.d
+    }
+
+    /// GPUs in one MicroEP group.
+    pub fn microep_group_size(&self) -> usize {
+        self.d * self.ep_degree
+    }
+
+    /// EP group index of a GPU.
+    pub fn ep_group_of(&self, gpu: usize) -> usize {
+        gpu / self.ep_degree
+    }
+
+    /// EP rank (position within its EP group) of a GPU.
+    pub fn ep_rank_of(&self, gpu: usize) -> usize {
+        gpu % self.ep_degree
+    }
+
+    /// MicroEP group index of a GPU.
+    pub fn microep_group_of(&self, gpu: usize) -> usize {
+        gpu / self.microep_group_size()
+    }
+
+    /// The GPUs of MicroEP group `m` (consecutive ranks).
+    pub fn microep_gpus(&self, m: usize) -> std::ops::Range<usize> {
+        let s = self.microep_group_size();
+        m * s..(m + 1) * s
+    }
+
+    /// The GPUs of EP group `k`.
+    pub fn ep_gpus(&self, k: usize) -> std::ops::Range<usize> {
+        k * self.ep_degree..(k + 1) * self.ep_degree
+    }
+
+    /// Vanilla-EP EDP group of EP rank `r` (same rank across EP groups).
+    pub fn edp_group_of_rank(&self, r: usize) -> Vec<usize> {
+        (0..self.num_ep_groups()).map(|k| k * self.ep_degree + r).collect()
+    }
+
+    /// Node index of a GPU.
+    pub fn node_of(&self, gpu: usize) -> usize {
+        gpu / self.gpus_per_node
+    }
+
+    /// Whether two GPUs share a node (NVLink vs IB path).
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Experts per GPU when `num_experts` are spread over an EP group.
+    pub fn experts_per_gpu(&self, num_experts: usize) -> usize {
+        assert!(num_experts % self.ep_degree == 0, "experts must divide over EP group");
+        num_experts / self.ep_degree
+    }
+
+    /// Replica slots per GPU inside a MicroEP group (uniform-count case):
+    /// each of the d merged EP groups contributes one full expert set.
+    pub fn slots_per_gpu(&self, num_experts: usize) -> usize {
+        self.experts_per_gpu(num_experts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_testbed() -> Topology {
+        // §7.1: DP=8, EP=4 -> 2 EP groups; d=2 -> 1 MicroEP group; 8 GPUs/node
+        Topology::new(8, 4, 2, 8)
+    }
+
+    #[test]
+    fn paper_config_groups() {
+        let t = paper_testbed();
+        assert_eq!(t.num_ep_groups(), 2);
+        assert_eq!(t.num_microep_groups(), 1);
+        assert_eq!(t.microep_group_size(), 8);
+        assert_eq!(t.microep_gpus(0), 0..8);
+    }
+
+    #[test]
+    fn ep_group_membership() {
+        let t = paper_testbed();
+        assert_eq!(t.ep_group_of(0), 0);
+        assert_eq!(t.ep_group_of(3), 0);
+        assert_eq!(t.ep_group_of(4), 1);
+        assert_eq!(t.ep_gpus(1), 4..8);
+        assert_eq!(t.ep_rank_of(5), 1);
+    }
+
+    #[test]
+    fn vanilla_edp_groups_link_same_rank() {
+        let t = paper_testbed();
+        assert_eq!(t.edp_group_of_rank(0), vec![0, 4]);
+        assert_eq!(t.edp_group_of_rank(3), vec![3, 7]);
+    }
+
+    #[test]
+    fn deepseek_like_config() {
+        // DeepSeek-V3 pretraining shape (§4): EP=64, DP=128 -> 2 EP groups
+        let t = Topology::new(128, 64, 2, 8);
+        assert_eq!(t.num_ep_groups(), 2);
+        assert_eq!(t.microep_group_size(), 128);
+        assert_eq!(t.slots_per_gpu(256), 4);
+    }
+
+    #[test]
+    fn multiple_microep_groups() {
+        // DP=16, EP=4 -> 4 EP groups; d=2 -> 2 MicroEP groups of 8 GPUs
+        let t = Topology::new(16, 4, 2, 8);
+        assert_eq!(t.num_microep_groups(), 2);
+        assert_eq!(t.microep_gpus(0), 0..8);
+        assert_eq!(t.microep_gpus(1), 8..16);
+        assert_eq!(t.microep_group_of(9), 1);
+    }
+
+    #[test]
+    fn node_locality() {
+        let t = Topology::new(16, 4, 2, 8);
+        assert!(t.same_node(0, 7));
+        assert!(!t.same_node(7, 8));
+        assert_eq!(t.node_of(15), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn invalid_d_rejected() {
+        Topology::new(8, 4, 3, 8); // edp=2, d=3 invalid
+    }
+}

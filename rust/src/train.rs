@@ -1,0 +1,285 @@
+//! End-to-end training driver: the real-numerics path that proves the three
+//! layers compose (Pallas kernel ∘ JAX train step ∘ AOT ∘ PJRT ∘ MicroEP).
+//!
+//! The AOT `train_step` artifact advances (params, m, v, step) with Adam on
+//! one micro-batch and reports the loss plus per-layer per-expert gate
+//! counts. The driver treats consecutive micro-batches as the micro-batches
+//! of `dp_virtual` data-parallel ranks, assembles real `input_e^g` matrices
+//! from the gate counts, and runs MicroEP scheduling on them — producing
+//! the Fig.-2-style trace and real-load balance numbers recorded in
+//! EXPERIMENTS.md.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::placement::cayley::symmetric_placement;
+use crate::rng::Rng;
+use crate::runtime::{lit, Runtime};
+use crate::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use crate::stats::imbalance_ratio;
+use crate::topology::Topology;
+use crate::workload::TraceWorkload;
+
+/// Synthetic corpus: a fixed pool of random sequences (the model memorizes
+/// the pool, so the loss curve must descend — the e2e success criterion).
+pub struct Corpus {
+    pool: Vec<Vec<i32>>,
+    rng: Rng,
+}
+
+impl Corpus {
+    pub fn new(vocab: usize, seq_plus_1: usize, pool_size: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        // Markov-flavored sequences: structured transitions + noise, so
+        // there is signal beyond memorization too.
+        let pool = (0..pool_size)
+            .map(|_| {
+                let mut s = Vec::with_capacity(seq_plus_1);
+                let mut cur = rng.below(vocab as u64) as i64;
+                let stride = 1 + rng.below(7) as i64;
+                for _ in 0..seq_plus_1 {
+                    s.push(cur as i32);
+                    cur = if rng.f64() < 0.9 {
+                        (cur + stride) % vocab as i64
+                    } else {
+                        rng.below(vocab as u64) as i64
+                    };
+                }
+                s
+            })
+            .collect();
+        Corpus { pool, rng }
+    }
+
+    /// One micro-batch: `batch` sequences of length `seq+1`, flattened.
+    pub fn batch(&mut self, batch: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(batch * self.pool[0].len());
+        for _ in 0..batch {
+            let i = self.rng.below(self.pool.len() as u64) as usize;
+            out.extend_from_slice(&self.pool[i]);
+        }
+        out
+    }
+}
+
+/// One training step's observables.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub loss: f32,
+    /// per-layer per-expert gate counts (layers × experts)
+    pub counts: Vec<Vec<u64>>,
+}
+
+/// Full run log (feeds EXPERIMENTS.md and the Fig-2 trace).
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+    /// per-DP-round max/avg imbalance: (vanilla EP, MicroEP)
+    pub imbalance: Vec<(f64, f64)>,
+    /// layer-0 load matrices per DP round (the Fig-2 trace)
+    pub trace: Vec<LoadMatrix>,
+    pub step_seconds: Vec<f64>,
+}
+
+pub struct Trainer {
+    rt: Runtime,
+    pub vocab: usize,
+    pub seq: usize,
+    pub micro_batch: usize,
+    pub layers: usize,
+    pub experts: usize,
+    params: xla::Literal,
+    m: xla::Literal,
+    v: xla::Literal,
+    step_ctr: xla::Literal,
+    corpus: Corpus,
+    pub dp_virtual: usize,
+}
+
+impl Trainer {
+    pub fn new(mut rt: Runtime, seed: u64) -> Result<Self> {
+        let cfg = |k: &str| -> Result<usize> {
+            rt.manifest
+                .cfg(k)
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow!("manifest missing config.{k}"))
+        };
+        let vocab = cfg("vocab")?;
+        let seq = cfg("seq")?;
+        let micro_batch = cfg("micro_batch")?;
+        let layers = cfg("layers")?;
+        let experts = cfg("experts")?;
+        let p = rt.manifest.num_params;
+
+        log::info!("initializing {p} params (preset {})", rt.manifest.preset);
+        let outs = rt
+            .execute("init_params", &[lit::i32_scalar(seed as i32)])
+            .context("init_params")?;
+        let params = outs.into_iter().next().ok_or_else(|| anyhow!("no params output"))?;
+        let zeros = vec![0f32; p];
+        let corpus = Corpus::new(vocab, seq + 1, 64, seed ^ 0xBEEF);
+        Ok(Trainer {
+            rt,
+            vocab,
+            seq,
+            micro_batch,
+            layers,
+            experts,
+            params,
+            m: lit::f32_vec(&zeros),
+            v: lit::f32_vec(&zeros),
+            step_ctr: lit::f32_scalar(0.0),
+            corpus,
+            dp_virtual: 8,
+        })
+    }
+
+    /// One optimizer step on one micro-batch.
+    pub fn step(&mut self) -> Result<StepResult> {
+        let tokens = self.corpus.batch(self.micro_batch);
+        let tok_lit = lit::i32_matrix(&tokens, self.micro_batch, self.seq + 1)?;
+        let outs = self.rt.execute(
+            "train_step",
+            &[
+                std::mem::replace(&mut self.params, lit::f32_scalar(0.0)),
+                std::mem::replace(&mut self.m, lit::f32_scalar(0.0)),
+                std::mem::replace(&mut self.v, lit::f32_scalar(0.0)),
+                std::mem::replace(&mut self.step_ctr, lit::f32_scalar(0.0)),
+                tok_lit,
+            ],
+        )?;
+        let mut it = outs.into_iter();
+        self.params = it.next().ok_or_else(|| anyhow!("missing params'"))?;
+        self.m = it.next().ok_or_else(|| anyhow!("missing m'"))?;
+        self.v = it.next().ok_or_else(|| anyhow!("missing v'"))?;
+        self.step_ctr = it.next().ok_or_else(|| anyhow!("missing step'"))?;
+        let loss = it
+            .next()
+            .ok_or_else(|| anyhow!("missing loss"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let counts_raw = it
+            .next()
+            .ok_or_else(|| anyhow!("missing counts"))?
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("counts: {e:?}"))?;
+        let counts = counts_raw
+            .chunks(self.experts)
+            .map(|c| c.iter().map(|&x| x as u64).collect())
+            .collect();
+        Ok(StepResult { loss, counts })
+    }
+
+    /// Train `steps` micro-batches; every `dp_virtual` steps, assemble the
+    /// real layer-0 load matrix and schedule it with MicroEP vs vanilla EP.
+    pub fn run(&mut self, steps: usize, log_every: usize) -> Result<TrainLog> {
+        let topo = Topology::new(self.dp_virtual, (self.dp_virtual / 2).max(1), 2, 8);
+        let placement = symmetric_placement(&topo, self.experts);
+        let mut sched =
+            MicroEpScheduler::new(placement.clone(), Some(topo.clone()), SchedulerOptions::default());
+        let vanilla = crate::baselines::VanillaEp::new(topo.clone(), self.experts);
+        let mut vanilla = vanilla;
+
+        let mut log_out = TrainLog::default();
+        let mut round = LoadMatrix::zeros(self.experts, self.dp_virtual);
+        for s in 0..steps {
+            let t0 = std::time::Instant::now();
+            let r = self.step()?;
+            log_out.step_seconds.push(t0.elapsed().as_secs_f64());
+            log_out.losses.push(r.loss);
+            let g = s % self.dp_virtual;
+            for (e, &c) in r.counts[0].iter().enumerate() {
+                round.set(e, g, c);
+            }
+            if g == self.dp_virtual - 1 {
+                // schedule the completed DP round on real loads
+                let micro = sched.schedule(&round);
+                let micro_imb = micro.imbalance(&placement);
+                use crate::baselines::MoeSystem;
+                let plan = vanilla.plan(&round);
+                let van_imb = imbalance_ratio(
+                    &plan.gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                );
+                log_out.imbalance.push((van_imb, micro_imb));
+                log_out.trace.push(round.clone());
+                round = LoadMatrix::zeros(self.experts, self.dp_virtual);
+            }
+            if log_every > 0 && s % log_every == 0 {
+                log::info!("step {s}: loss {:.4}", r.loss);
+                println!("step {s:>5}  loss {:.4}", r.loss);
+            }
+        }
+        Ok(log_out)
+    }
+
+    /// Persist the Fig-2 trace for replay by benches.
+    pub fn save_trace(log: &TrainLog, path: &PathBuf) -> Result<()> {
+        if log.trace.is_empty() {
+            return Ok(());
+        }
+        let t = TraceWorkload::new(log.trace.clone());
+        std::fs::write(path, t.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Measure the expert-FFN artifact at two capacities to calibrate the
+    /// cluster cost model from real PJRT compute timings.
+    pub fn calibrate(rt: &mut Runtime) -> Result<((u64, f64), (u64, f64))> {
+        let mut measure = |name: &str| -> Result<(u64, f64)> {
+            let spec = rt
+                .manifest
+                .artifact(name)
+                .ok_or_else(|| anyhow!("missing {name}"))?
+                .clone();
+            let (e, c, h) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1], spec.inputs[0].shape[2]);
+            let f = spec.inputs[1].shape[2];
+            let x = lit::f32_tensor3(&vec![0.1; e * c * h], e, c, h)?;
+            let w1 = lit::f32_tensor3(&vec![0.01; e * h * f], e, h, f)?;
+            let w2 = lit::f32_tensor3(&vec![0.01; e * f * h], e, f, h)?;
+            rt.execute(name, &[&x, &w1, &w2].map(|l| l.clone()))?; // warm
+            let t0 = std::time::Instant::now();
+            let reps = 3;
+            for _ in 0..reps {
+                rt.execute(name, &[&x, &w1, &w2].map(|l| l.clone()))?;
+            }
+            Ok(((e * c) as u64, t0.elapsed().as_secs_f64() / reps as f64))
+        };
+        let small = measure("expert_ffn_small")?;
+        let large = measure("expert_ffn_large")?;
+        Ok((small, large))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_batches_are_in_vocab() {
+        let mut c = Corpus::new(64, 17, 8, 1);
+        let b = c.batch(4);
+        assert_eq!(b.len(), 4 * 17);
+        assert!(b.iter().all(|&t| (0..64).contains(&t)));
+    }
+
+    #[test]
+    fn corpus_is_deterministic_per_seed() {
+        let mut a = Corpus::new(64, 17, 8, 5);
+        let mut b = Corpus::new(64, 17, 8, 5);
+        assert_eq!(a.batch(2), b.batch(2));
+    }
+
+    #[test]
+    fn corpus_reuses_pool() {
+        // with a tiny pool, repeated batches must repeat sequences
+        let mut c = Corpus::new(32, 9, 2, 3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..20 {
+            for chunk in c.batch(1).chunks(9) {
+                seen.insert(chunk.to_vec());
+            }
+        }
+        assert!(seen.len() <= 2);
+    }
+}

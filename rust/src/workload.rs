@@ -1,0 +1,277 @@
+//! Workload generators: synthetic gate outputs (`input_e^g` matrices) with
+//! controllable skew and dynamics, plus trace replay from real training.
+//!
+//! * [`ZipfWorkload`] — §7.3's evaluation workload: token→expert assignment
+//!   follows a Zipfian distribution with skewness `s` over a per-generator
+//!   expert popularity ranking.
+//! * [`DriftingWorkload`] — the Fig.-2 phenomenon: popularity ranks rotate
+//!   and per-micro-batch noise fluctuates, so the hot expert set changes
+//!   over time (what adaptive replacement reacts to).
+//! * [`TraceWorkload`] — replays `(micro_batch, expert, gpu) -> count`
+//!   traces recorded from the real e2e training run (Fig. 2's data).
+
+use crate::rng::{Rng, Zipf};
+use crate::scheduler::LoadMatrix;
+use crate::ser::Json;
+
+/// Common interface: produce the next micro-batch's load matrix.
+pub trait Workload {
+    fn next_batch(&mut self) -> LoadMatrix;
+    fn num_experts(&self) -> usize;
+    fn num_gpus(&self) -> usize;
+}
+
+/// Zipfian token→expert assignment, independent per source GPU.
+pub struct ZipfWorkload {
+    pub experts: usize,
+    pub gpus: usize,
+    pub tokens_per_gpu: u64,
+    zipf: Zipf,
+    /// rank→expert mapping (which expert is the i-th hottest)
+    rank_of: Vec<usize>,
+    rng: Rng,
+}
+
+impl ZipfWorkload {
+    pub fn new(experts: usize, gpus: usize, tokens_per_gpu: u64, s: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut rank_of: Vec<usize> = (0..experts).collect();
+        rng.shuffle(&mut rank_of);
+        ZipfWorkload { experts, gpus, tokens_per_gpu, zipf: Zipf::new(experts, s), rank_of, rng }
+    }
+}
+
+impl Workload for ZipfWorkload {
+    fn next_batch(&mut self) -> LoadMatrix {
+        let mut lm = LoadMatrix::zeros(self.experts, self.gpus);
+        for g in 0..self.gpus {
+            for _ in 0..self.tokens_per_gpu {
+                let rank = self.zipf.sample(&mut self.rng);
+                lm.add(self.rank_of[rank], g, 1);
+            }
+        }
+        lm
+    }
+
+    fn num_experts(&self) -> usize {
+        self.experts
+    }
+
+    fn num_gpus(&self) -> usize {
+        self.gpus
+    }
+}
+
+/// Zipf workload whose popularity ranking drifts: every `rotate_every`
+/// micro-batches the top ranks permute, modelling inter-iteration dynamics.
+pub struct DriftingWorkload {
+    inner: ZipfWorkload,
+    rotate_every: usize,
+    batch: usize,
+}
+
+impl DriftingWorkload {
+    pub fn new(
+        experts: usize,
+        gpus: usize,
+        tokens_per_gpu: u64,
+        s: f64,
+        rotate_every: usize,
+        seed: u64,
+    ) -> Self {
+        DriftingWorkload {
+            inner: ZipfWorkload::new(experts, gpus, tokens_per_gpu, s, seed),
+            rotate_every: rotate_every.max(1),
+            batch: 0,
+        }
+    }
+}
+
+impl Workload for DriftingWorkload {
+    fn next_batch(&mut self) -> LoadMatrix {
+        if self.batch > 0 && self.batch % self.rotate_every == 0 {
+            // rotate the hottest third of the ranking
+            let k = (self.inner.experts / 3).max(2).min(self.inner.experts);
+            self.inner.rank_of[..k].rotate_left(1);
+            // and occasionally swap a hot rank with a random cold one
+            let hot = self.inner.rng.below(k as u64) as usize;
+            let cold = k + self.inner.rng.below((self.inner.experts - k).max(1) as u64) as usize;
+            if cold < self.inner.experts {
+                self.inner.rank_of.swap(hot, cold);
+            }
+        }
+        self.batch += 1;
+        self.inner.next_batch()
+    }
+
+    fn num_experts(&self) -> usize {
+        self.inner.experts
+    }
+
+    fn num_gpus(&self) -> usize {
+        self.inner.gpus
+    }
+}
+
+/// Replays recorded load matrices (loops at the end).
+pub struct TraceWorkload {
+    batches: Vec<LoadMatrix>,
+    cursor: usize,
+}
+
+impl TraceWorkload {
+    pub fn new(batches: Vec<LoadMatrix>) -> Self {
+        assert!(!batches.is_empty());
+        TraceWorkload { batches, cursor: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batches.is_empty()
+    }
+
+    /// Parse from the JSON trace format written by the e2e trainer:
+    /// `{"experts": E, "gpus": G, "batches": [[[count; G]; E], ...]}`.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let e = j.get("experts").and_then(Json::as_usize).ok_or("missing experts")?;
+        let g = j.get("gpus").and_then(Json::as_usize).ok_or("missing gpus")?;
+        let batches = j.get("batches").and_then(Json::as_arr).ok_or("missing batches")?;
+        let mut out = Vec::with_capacity(batches.len());
+        for (bi, b) in batches.iter().enumerate() {
+            let rows = b.as_arr().ok_or(format!("batch {bi} not an array"))?;
+            if rows.len() != e {
+                return Err(format!("batch {bi}: {} rows != {e}", rows.len()));
+            }
+            let mut lm = LoadMatrix::zeros(e, g);
+            for (ei, row) in rows.iter().enumerate() {
+                let cells = row.as_arr().ok_or("row not an array")?;
+                if cells.len() != g {
+                    return Err(format!("batch {bi} row {ei}: width {} != {g}", cells.len()));
+                }
+                for (gi, c) in cells.iter().enumerate() {
+                    lm.set(ei, gi, c.as_f64().ok_or("non-numeric count")? as u64);
+                }
+            }
+            out.push(lm);
+        }
+        Ok(TraceWorkload::new(out))
+    }
+
+    /// Serialize back to the JSON trace format.
+    pub fn to_json(&self) -> Json {
+        let e = self.batches[0].num_experts;
+        let g = self.batches[0].num_gpus;
+        let batches: Vec<Json> = self
+            .batches
+            .iter()
+            .map(|lm| {
+                Json::Arr(
+                    (0..e)
+                        .map(|ei| Json::arr_u64(&(0..g).map(|gi| lm.get(ei, gi)).collect::<Vec<_>>()))
+                        .collect(),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("experts", Json::Num(e as f64)),
+            ("gpus", Json::Num(g as f64)),
+            ("batches", Json::Arr(batches)),
+        ])
+    }
+}
+
+impl Workload for TraceWorkload {
+    fn next_batch(&mut self) -> LoadMatrix {
+        let b = self.batches[self.cursor].clone();
+        self.cursor = (self.cursor + 1) % self.batches.len();
+        b
+    }
+
+    fn num_experts(&self) -> usize {
+        self.batches[0].num_experts
+    }
+
+    fn num_gpus(&self) -> usize {
+        self.batches[0].num_gpus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::imbalance_ratio;
+
+    #[test]
+    fn zipf_token_conservation() {
+        let mut w = ZipfWorkload::new(16, 8, 100, 1.0, 42);
+        let lm = w.next_batch();
+        assert_eq!(lm.total(), 800);
+        for g in 0..8 {
+            assert_eq!(lm.gpu_input(g), 100);
+        }
+    }
+
+    #[test]
+    fn zero_skew_is_roughly_uniform() {
+        let mut w = ZipfWorkload::new(8, 4, 10_000, 0.0, 1);
+        let lm = w.next_batch();
+        let loads: Vec<f64> = lm.expert_loads().iter().map(|&l| l as f64).collect();
+        assert!(imbalance_ratio(&loads) < 1.1, "{loads:?}");
+    }
+
+    #[test]
+    fn high_skew_concentrates() {
+        let mut w = ZipfWorkload::new(8, 4, 10_000, 2.0, 1);
+        let lm = w.next_batch();
+        let loads = lm.expert_loads();
+        let max = *loads.iter().max().unwrap();
+        assert!(max as f64 > 0.5 * lm.total() as f64);
+    }
+
+    #[test]
+    fn drifting_changes_hot_expert() {
+        let mut w = DriftingWorkload::new(8, 4, 5_000, 1.5, 1, 7);
+        let hot_of = |lm: &LoadMatrix| -> usize {
+            let loads = lm.expert_loads();
+            loads.iter().enumerate().max_by_key(|&(_, &l)| l).unwrap().0
+        };
+        let first = hot_of(&w.next_batch());
+        let mut changed = false;
+        for _ in 0..30 {
+            if hot_of(&w.next_batch()) != first {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed, "hot expert never drifted");
+    }
+
+    #[test]
+    fn trace_roundtrip_json() {
+        let mut w = ZipfWorkload::new(4, 2, 50, 1.0, 3);
+        let batches: Vec<LoadMatrix> = (0..3).map(|_| w.next_batch()).collect();
+        let t = TraceWorkload::new(batches.clone());
+        let j = t.to_json();
+        let mut t2 = TraceWorkload::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        for b in &batches {
+            assert_eq!(&t2.next_batch(), b);
+        }
+    }
+
+    #[test]
+    fn trace_loops() {
+        let lm = LoadMatrix::from_rows(vec![vec![1, 2], vec![3, 4]]);
+        let mut t = TraceWorkload::new(vec![lm.clone()]);
+        assert_eq!(t.next_batch(), lm);
+        assert_eq!(t.next_batch(), lm);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        let j = Json::parse(r#"{"experts": 2, "gpus": 2, "batches": [[[1,2]]]}"#).unwrap();
+        assert!(TraceWorkload::from_json(&j).is_err());
+    }
+}

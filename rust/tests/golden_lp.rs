@@ -1,0 +1,149 @@
+//! Golden test: our simplex vs HiGHS (the paper's solver).
+//!
+//! `python/tools/gen_lp_golden.py` solved these instances with
+//! scipy.optimize.linprog(method="highs") and recorded the optimal
+//! objectives; we must agree to 1e-6 on every one.
+
+use micromoe::lp::{LpProblem, Relation};
+use micromoe::ser::Json;
+
+fn fixture() -> Json {
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/golden_lp.json"
+    ))
+    .expect("golden_lp.json missing — run python/tools/gen_lp_golden.py");
+    Json::parse(&text).unwrap()
+}
+
+fn as_f64s(j: &Json) -> Vec<f64> {
+    j.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect()
+}
+
+#[test]
+fn matches_highs_on_all_cases() {
+    let fx = fixture();
+    let cases = fx.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 30, "suspiciously few golden cases");
+    let mut lpp1 = 0;
+    let mut generic = 0;
+    for (i, case) in cases.iter().enumerate() {
+        let expect = case.get("objective").unwrap().as_f64().unwrap();
+        let problem = match case.get("kind").unwrap().as_str().unwrap() {
+            "lpp1" => {
+                lpp1 += 1;
+                build_lpp1(case)
+            }
+            "generic" => {
+                generic += 1;
+                build_generic(case)
+            }
+            k => panic!("unknown kind {k}"),
+        };
+        let sol = micromoe::lp::simplex::solve(&problem)
+            .unwrap_or_else(|e| panic!("case {i}: {e}"));
+        assert!(
+            (sol.objective - expect).abs() < 1e-6 * (1.0 + expect.abs()),
+            "case {i}: ours {} vs HiGHS {}",
+            sol.objective,
+            expect
+        );
+        assert!(problem.is_feasible(&sol.x, 1e-6), "case {i}: infeasible solution");
+    }
+    assert!(lpp1 > 0 && generic > 0);
+}
+
+fn build_lpp1(case: &Json) -> LpProblem {
+    let num_gpus = case.get("num_gpus").unwrap().as_usize().unwrap();
+    let d = case.get("d").unwrap().as_usize().unwrap();
+    let edp: Vec<Vec<usize>> = case
+        .get("edp")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|g| g.as_arr().unwrap().iter().map(|v| v.as_usize().unwrap()).collect())
+        .collect();
+    let loads = as_f64s(case.get("loads").unwrap());
+    let e_count = edp.len();
+    let nx = e_count * d;
+    let t = nx;
+    let mut p = LpProblem::new(nx + 1);
+    p.set_objective(t, 1.0);
+    for g in 0..num_gpus {
+        let mut terms = vec![(t, -1.0)];
+        for (e, grp) in edp.iter().enumerate() {
+            for (r, &gg) in grp.iter().enumerate() {
+                if gg == g {
+                    terms.push((e * d + r, 1.0));
+                }
+            }
+        }
+        p.add(terms, Relation::Le, 0.0);
+    }
+    for (e, _) in edp.iter().enumerate() {
+        let terms = (0..d).map(|r| (e * d + r, 1.0)).collect();
+        p.add(terms, Relation::Eq, loads[e]);
+    }
+    p
+}
+
+fn build_generic(case: &Json) -> LpProblem {
+    let c = as_f64s(case.get("c").unwrap());
+    let b = as_f64s(case.get("b_ub").unwrap());
+    let rows: Vec<Vec<f64>> = case
+        .get("a_ub")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(as_f64s)
+        .collect();
+    let mut p = LpProblem::new(c.len());
+    for (j, &cj) in c.iter().enumerate() {
+        p.set_objective(j, cj);
+    }
+    for (row, &bi) in rows.iter().zip(&b) {
+        let terms = row.iter().enumerate().map(|(j, &a)| (j, a)).collect();
+        p.add(terms, Relation::Le, bi);
+    }
+    p
+}
+
+#[test]
+fn lpp1_warm_start_agrees_with_highs_objectives() {
+    // replay lpp1 cases through a warm solver, exercising the §5.1
+    // warm-start path against golden objectives
+    let fx = fixture();
+    let cases: Vec<&Json> = fx
+        .get("cases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|c| c.get("kind").unwrap().as_str() == Some("lpp1"))
+        .collect();
+    assert!(cases.len() >= 10);
+    for case in cases {
+        let expect = case.get("objective").unwrap().as_f64().unwrap();
+        let num_gpus = case.get("num_gpus").unwrap().as_usize().unwrap();
+        let p = build_lpp1(case);
+        let mut warm = micromoe::lp::WarmSolver::new(p);
+        let s0 = warm.solve_cold().unwrap();
+        assert!((s0.objective - expect).abs() < 1e-6 * (1.0 + expect.abs()));
+        // scale all loads by 2 via rhs updates: optimum must scale by 2
+        let loads = as_f64s(case.get("loads").unwrap());
+        let updates: Vec<(usize, f64)> = loads
+            .iter()
+            .enumerate()
+            .map(|(e, &l)| (num_gpus + e, 2.0 * l))
+            .collect();
+        let s1 = warm.resolve(&updates).unwrap();
+        assert!(
+            (s1.objective - 2.0 * expect).abs() < 1e-5 * (1.0 + expect.abs()),
+            "warm rescale: {} vs {}",
+            s1.objective,
+            2.0 * expect
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! Integration: all five systems run the same workload streams through the
+//! cluster model — the Fig. 6/7 relationships must hold qualitatively
+//! (who wins, in what order, and by roughly what kind of factor).
+
+use micromoe::adaptive::AdaptiveConfig;
+use micromoe::baselines::{DeepSpeedPad, FlexMoe, MicroMoe, MoeSystem, SmartMoe, VanillaEp};
+use micromoe::cluster::sim::{moe_layer_time, TrainIterationModel};
+use micromoe::cluster::CostModel;
+use micromoe::placement::cayley::symmetric_placement;
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::{LoadMatrix, SchedulerOptions};
+use micromoe::stats::imbalance_ratio;
+use micromoe::topology::Topology;
+
+fn topo() -> Topology {
+    Topology::new(8, 4, 2, 8)
+}
+
+fn workload(batches: usize, s: f64, seed: u64) -> Vec<LoadMatrix> {
+    let mut rng = Rng::new(seed);
+    let z = Zipf::new(32, s);
+    (0..batches)
+        .map(|_| {
+            let mut lm = LoadMatrix::zeros(32, 8);
+            for g in 0..8 {
+                for _ in 0..2000 {
+                    lm.add(z.sample(&mut rng), g, 1);
+                }
+            }
+            lm
+        })
+        .collect()
+}
+
+fn mean_imbalance(sys: &mut dyn MoeSystem, batches: &[LoadMatrix], skip: usize) -> f64 {
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (i, lm) in batches.iter().enumerate() {
+        let plan = sys.plan(lm);
+        if i >= skip {
+            acc += imbalance_ratio(&plan.gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>());
+            n += 1;
+        }
+    }
+    acc / n as f64
+}
+
+/// Fig. 7 ordering below the capacity edge (s = 0.8): MicroMoE (w/o AR) is
+/// near-perfect and at least matches FlexMoE; both beat SmartMoE/vanilla.
+/// (At s = 1.0 the hottest expert holds ~24.6% of tokens against a 25%
+/// two-replica ceiling, and FlexMoE's extra replicas can edge out the
+/// static symmetric placement — the crossover Fig. 7 shows past s ≈ 1,
+/// where the paper switches to asymmetric placements.)
+#[test]
+fn fig7_ordering_holds() {
+    let batches = workload(40, 0.8, 42);
+    let t = topo();
+    let mut vanilla = VanillaEp::new(t.clone(), 32);
+    let mut smart = SmartMoe::new(t.clone(), 32);
+    smart.replace_every = 8;
+    let mut flex = FlexMoe::new(t.clone(), 32, 1);
+    flex.adjust_every = 8;
+    let mut micro = MicroMoe::new(
+        t.clone(),
+        symmetric_placement(&t, 32),
+        SchedulerOptions::default(),
+    );
+    let iv = mean_imbalance(&mut vanilla, &batches, 16);
+    let is = mean_imbalance(&mut smart, &batches, 16);
+    let ifx = mean_imbalance(&mut flex, &batches, 16);
+    let im = mean_imbalance(&mut micro, &batches, 16);
+    assert!(im < 1.02, "MicroMoE imbalance {im}");
+    assert!(im <= ifx + 1e-9, "MicroMoE {im} vs FlexMoE {ifx}");
+    assert!(ifx <= iv * 1.05, "FlexMoE {ifx} vs vanilla {iv}");
+    assert!(im < is, "MicroMoE {im} vs SmartMoE {is}");
+}
+
+/// Past the edge (s = 1.4): the full MicroMoE (asymmetric via AR) restores
+/// balance and beats FlexMoE — Fig. 7's top line.
+#[test]
+fn fig7_heavy_skew_with_ar() {
+    let batches = workload(48, 1.4, 43);
+    let t = topo();
+    let mut flex = FlexMoe::new(t.clone(), 32, 1);
+    flex.adjust_every = 8;
+    let mut micro_ar = MicroMoe::new(
+        t.clone(),
+        symmetric_placement(&t, 32),
+        SchedulerOptions::default(),
+    )
+    .with_adaptive(
+        micromoe::adaptive::AdaptiveConfig {
+            check_every: 4,
+            window: 8,
+            slots_per_gpu: 8,
+            ..Default::default()
+        },
+        5,
+    );
+    let ifx = mean_imbalance(&mut flex, &batches, 24);
+    let im = mean_imbalance(&mut micro_ar, &batches, 24);
+    assert!(im <= ifx + 0.01, "MicroMoE+AR {im} vs FlexMoE {ifx} at s=1.4");
+    assert!(im < 1.1, "MicroMoE+AR imbalance {im} at s=1.4");
+}
+
+/// Fig. 6's headline: MicroMoE end-to-end throughput beats Megatron
+/// (vanilla EP) by a significant factor under skewed loads.
+#[test]
+fn fig6_throughput_relationship() {
+    let batches = workload(32, 1.0, 7);
+    let t = topo();
+    let model = CostModel::h100_testbed().for_hidden_size(2048);
+    let iter_model = TrainIterationModel::paper_default(2, 24, 16);
+
+    let bench = |sys: &mut dyn MoeSystem| -> f64 {
+        let mut total = 0.0;
+        for lm in &batches {
+            let plan = sys.plan(lm);
+            let bd = moe_layer_time(&model, &t, &plan);
+            total += iter_model.throughput(&bd, 8 * 8192);
+        }
+        total / batches.len() as f64
+    };
+
+    let mut vanilla = VanillaEp::new(t.clone(), 32);
+    let mut micro = MicroMoe::new(
+        t.clone(),
+        symmetric_placement(&t, 32),
+        SchedulerOptions::default(),
+    );
+    let tv = bench(&mut vanilla);
+    let tm = bench(&mut micro);
+    let speedup = tm / tv;
+    assert!(
+        speedup > 1.05 && speedup < 2.5,
+        "MicroMoE speedup {speedup} out of plausible Fig-6 band"
+    );
+}
+
+/// DeepSpeed's padding pathology: worse than vanilla under skew, and the
+/// gap shrinks with fewer experts (§7.2's explanation).
+#[test]
+fn deepspeed_padding_pathology() {
+    let t = topo();
+    let model = CostModel::h100_testbed();
+    let compute_total = |experts: usize, s: f64| -> (f64, f64) {
+        let mut rng = Rng::new(5);
+        let z = Zipf::new(experts, s);
+        let mut lm = LoadMatrix::zeros(experts, 8);
+        for g in 0..8 {
+            for _ in 0..2000 {
+                lm.add(z.sample(&mut rng), g, 1);
+            }
+        }
+        let mut pad = DeepSpeedPad::new(t.clone(), experts);
+        let mut van = VanillaEp::new(t.clone(), experts);
+        let bp = moe_layer_time(&model, &t, &pad.plan(&lm));
+        let bv = moe_layer_time(&model, &t, &van.plan(&lm));
+        (bp.compute, bv.compute)
+    };
+    let (pad32, van32) = compute_total(32, 1.2);
+    assert!(pad32 > van32, "padding should cost more at 32 experts");
+    let (pad8, van8) = compute_total(8, 1.2);
+    // fewer experts -> padding waste relatively smaller
+    assert!(pad8 / van8 < pad32 / van32, "padding gap must shrink with fewer experts");
+}
+
+/// Adaptive replacement on a *drifting* heavy-skew workload: the full
+/// MicroMoE (w/ AR) must beat the static symmetric arm (Fig. 7 s>1 story).
+#[test]
+fn adaptive_beats_static_on_drifting_skew() {
+    let t = topo();
+    // drifting: rotate the hot expert every 12 batches
+    let mut batches = Vec::new();
+    let mut rng = Rng::new(9);
+    for phase in 0..4u64 {
+        let z = Zipf::new(32, 1.8);
+        let mut perm: Vec<usize> = (0..32).collect();
+        let mut r2 = Rng::new(phase);
+        r2.shuffle(&mut perm);
+        for _ in 0..12 {
+            let mut lm = LoadMatrix::zeros(32, 8);
+            for g in 0..8 {
+                for _ in 0..3000 {
+                    lm.add(perm[z.sample(&mut rng)], g, 1);
+                }
+            }
+            batches.push(lm);
+        }
+    }
+    let placement = symmetric_placement(&t, 32);
+    let mut no_ar = MicroMoe::new(t.clone(), placement.clone(), SchedulerOptions::default());
+    let mut with_ar = MicroMoe::new(t.clone(), placement, SchedulerOptions::default())
+        .with_adaptive(
+            AdaptiveConfig { check_every: 4, window: 8, slots_per_gpu: 8, ..Default::default() },
+            3,
+        );
+    let ia = mean_imbalance(&mut no_ar, &batches, 12);
+    let ib = mean_imbalance(&mut with_ar, &batches, 12);
+    assert!(
+        ib <= ia + 0.02,
+        "AR ({ib}) should not lose to static ({ia}) under drifting heavy skew"
+    );
+}
+
+/// Every system conserves compute: Σ gpu_compute >= total tokens (padding
+/// may exceed; none may lose tokens).
+#[test]
+fn no_system_loses_tokens() {
+    let t = topo();
+    let batches = workload(6, 1.4, 11);
+    let mut systems: Vec<Box<dyn MoeSystem>> = vec![
+        Box::new(VanillaEp::new(t.clone(), 32)),
+        Box::new(SmartMoe::new(t.clone(), 32)),
+        Box::new(FlexMoe::new(t.clone(), 32, 2)),
+        Box::new(DeepSpeedPad::new(t.clone(), 32)),
+        Box::new(MicroMoe::new(
+            t.clone(),
+            symmetric_placement(&t, 32),
+            SchedulerOptions::default(),
+        )),
+    ];
+    for sys in &mut systems {
+        for lm in &batches {
+            let plan = sys.plan(lm);
+            assert!(
+                plan.gpu_compute.iter().sum::<u64>() >= lm.total(),
+                "{} lost tokens",
+                sys.name()
+            );
+        }
+    }
+}

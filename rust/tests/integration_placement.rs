@@ -1,0 +1,128 @@
+//! Integration: placement theory at paper scale — Cayley constructions vs
+//! random vs asymmetric under the §7.3 workloads, validated through the
+//! scheduler (not just the density evaluator).
+
+use micromoe::placement::asymmetric::asymmetric_placement;
+use micromoe::placement::cayley::{cayley_graph_placement, symmetric_placement};
+use micromoe::placement::random::random_placement;
+use micromoe::placement::Placement;
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use micromoe::topology::Topology;
+
+fn zipf_lm(e: usize, g: usize, per_gpu: u64, s: f64, rng: &mut Rng) -> LoadMatrix {
+    let z = Zipf::new(e, s);
+    let mut lm = LoadMatrix::zeros(e, g);
+    for gi in 0..g {
+        for _ in 0..per_gpu {
+            lm.add(z.sample(rng), gi, 1);
+        }
+    }
+    lm
+}
+
+fn mean_imbalance(p: &Placement, skew: f64, batches: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+    let mut acc = 0.0;
+    for _ in 0..batches {
+        let lm = zipf_lm(p.num_experts, p.num_gpus, 2000, skew, &mut rng);
+        acc += s.schedule(&lm).imbalance(p);
+    }
+    acc / batches as f64
+}
+
+/// §7.3: symmetric (Cayley) placement slightly beats pure random — the
+/// "MicroMoE (random)" vs "MicroMoE (w/o AR)" gap in Fig. 7.
+#[test]
+fn cayley_beats_or_matches_random() {
+    let topo = Topology::new(8, 4, 2, 8);
+    let sym = symmetric_placement(&topo, 32);
+    let mut rng = Rng::new(12);
+    // average several random placements to smooth sampling luck
+    let mut rnd_acc = 0.0;
+    for k in 0..5 {
+        let r = random_placement(8, 32, 2, &mut rng);
+        rnd_acc += mean_imbalance(&r, 1.2, 10, 100 + k);
+    }
+    let rnd = rnd_acc / 5.0;
+    let sym_imb = mean_imbalance(&sym, 1.2, 10, 55);
+    assert!(
+        sym_imb <= rnd * 1.02,
+        "symmetric {sym_imb} should be <= random {rnd} (within noise)"
+    );
+}
+
+/// §7.3 Fig. 7: at heavy skew, uniform replica counts saturate and the
+/// asymmetric placement restores (near-)perfect balance.
+#[test]
+fn asymmetric_restores_balance_at_heavy_skew() {
+    let topo = Topology::new(8, 4, 2, 8);
+    let sym = symmetric_placement(&topo, 32);
+    let s = 1.6f64;
+    let sym_imb = mean_imbalance(&sym, s, 8, 21);
+    assert!(sym_imb > 1.05, "symmetric should struggle at s={s}: {sym_imb}");
+
+    // build asymmetric from the observed long-run loads (as AR would)
+    let mut rng = Rng::new(23);
+    let probe = zipf_lm(32, 8, 20_000, s, &mut rng);
+    let loads: Vec<f64> = probe.expert_loads().iter().map(|&l| l as f64).collect();
+    let asym = asymmetric_placement(8, &loads, 8, 200, &mut rng);
+    let asym_imb = mean_imbalance(&asym, s, 8, 21);
+    assert!(
+        asym_imb < sym_imb,
+        "asymmetric {asym_imb} must beat symmetric {sym_imb} at s={s}"
+    );
+    assert!(asym_imb < 1.12, "asymmetric imbalance {asym_imb} too high");
+}
+
+/// Scheduling-space monotonicity across scales: at fixed GPU count, a
+/// denser placement graph (more experts per GPU) can only improve the
+/// achievable balance, and high expert-per-GPU ratios reach near-perfect
+/// balance at mild skew. (G=16 with only 32 experts — degree 4 — has a
+/// genuine capacity floor above 1.0 at s=0.6: the hot expert's mass
+/// exceeds its two replicas' 2/16 share; richer graphs dissolve it.)
+#[test]
+fn other_scales_balance_mild_skew() {
+    let s = 0.6;
+    let sparse = mean_imbalance(&cayley_graph_placement(16, 32), s, 6, 31);
+    let dense = mean_imbalance(&cayley_graph_placement(16, 64), s, 6, 31);
+    assert!(
+        dense <= sparse + 1e-9,
+        "denser graph regressed: E=64 {dense} vs E=32 {sparse}"
+    );
+    for (g, e) in [(8usize, 32usize), (4, 16)] {
+        let imb = mean_imbalance(&cayley_graph_placement(g, e), s, 6, 31);
+        assert!(imb < 1.06, "G={g} E={e}: imbalance {imb}");
+    }
+}
+
+/// Vanilla-EP placement through the *same* scheduler: disjoint EDP groups
+/// mean the LP has no room and imbalance stays high — the Fig. 3b lesson.
+#[test]
+fn vanilla_placement_gives_lp_no_room() {
+    let topo = Topology::new(8, 4, 2, 8);
+    let vanilla = Placement::vanilla_ep(&topo, 32);
+    let shuffled = symmetric_placement(&topo, 32);
+    let iv = mean_imbalance(&vanilla, 1.2, 8, 41);
+    let is = mean_imbalance(&shuffled, 1.2, 8, 41);
+    assert!(
+        iv > is + 0.05,
+        "identical-per-group placement ({iv}) should trail shuffled ({is})"
+    );
+}
+
+/// B.3 consistency restriction survives every generator at paper scale.
+#[test]
+fn consistency_at_scale() {
+    let mut rng = Rng::new(61);
+    let topo = Topology::new(8, 4, 2, 8);
+    symmetric_placement(&topo, 32).check_consistency().unwrap();
+    for _ in 0..10 {
+        random_placement(8, 32, 2, &mut rng).check_consistency().unwrap();
+    }
+    let loads: Vec<f64> = (0..32).map(|_| rng.below(500) as f64 + 1.0).collect();
+    asymmetric_placement(8, &loads, 8, 50, &mut rng)
+        .check_consistency()
+        .unwrap();
+}

@@ -1,0 +1,194 @@
+//! Integration: the AOT bridge — rust loads `artifacts/*.hlo.txt`, compiles
+//! on PJRT CPU, executes, and the numerics match what the Pallas kernels /
+//! JAX model computed at build time (cross-checked structurally here;
+//! value-level kernel-vs-ref checks live in python/tests).
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use micromoe::runtime::{lit, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: {e:#} — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn cfg(rt: &Runtime, key: &str) -> usize {
+    rt.manifest.cfg(key).unwrap() as usize
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in ["init_params", "train_step", "eval_loss", "gate", "expert_ffn", "moe_block"] {
+        assert!(rt.manifest.artifact(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn gate_kernel_topk_properties() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = rt.manifest.artifact("gate").unwrap().clone();
+    let (t, e) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let k = spec.outputs[0].shape[1];
+
+    // deterministic pseudo-logits
+    let logits: Vec<f32> =
+        (0..t * e).map(|i| ((i * 37 + 11) % 101) as f32 / 50.0 - 1.0).collect();
+    let outs = rt
+        .execute("gate", &[lit::f32_matrix(&logits, t, e).unwrap()])
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    let w = outs[0].to_vec::<f32>().unwrap();
+    let idx = outs[1].to_vec::<i32>().unwrap();
+    assert_eq!(w.len(), t * k);
+    assert_eq!(idx.len(), t * k);
+    for row in 0..t {
+        let ws = &w[row * k..(row + 1) * k];
+        let ids = &idx[row * k..(row + 1) * k];
+        // weights positive and normalized
+        let sum: f32 = ws.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "row {row}: weights sum {sum}");
+        assert!(ws.iter().all(|&x| x > 0.0));
+        // indices in range and distinct
+        let mut sorted: Vec<i32> = ids.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), k, "row {row}: duplicate experts {ids:?}");
+        assert!(ids.iter().all(|&i| (i as usize) < e));
+    }
+}
+
+#[test]
+fn expert_ffn_kernel_zero_in_zero_out_and_finite() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = rt.manifest.artifact("expert_ffn").unwrap().clone();
+    let (e, c, h) = (
+        spec.inputs[0].shape[0],
+        spec.inputs[0].shape[1],
+        spec.inputs[0].shape[2],
+    );
+    let f = spec.inputs[1].shape[2];
+
+    let x = lit::f32_tensor3(&vec![0.0; e * c * h], e, c, h).unwrap();
+    let w1v: Vec<f32> = (0..e * h * f).map(|i| ((i % 13) as f32 - 6.0) / 60.0).collect();
+    let w2v: Vec<f32> = (0..e * f * h).map(|i| ((i % 17) as f32 - 8.0) / 80.0).collect();
+    let w1 = lit::f32_tensor3(&w1v, e, h, f).unwrap();
+    let w2 = lit::f32_tensor3(&w2v, e, f, h).unwrap();
+
+    // zero input -> exactly zero output (gelu(0) = 0)
+    let outs = rt
+        .execute("expert_ffn", &[x, w1.clone(), w2.clone()])
+        .unwrap();
+    let y = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(y.len(), e * c * h);
+    assert!(y.iter().all(|&v| v.abs() < 1e-6), "zero input produced nonzero output");
+
+    // nonzero input -> finite, nonzero output
+    let xs: Vec<f32> = (0..e * c * h).map(|i| ((i % 7) as f32 - 3.0) / 10.0).collect();
+    let x2 = lit::f32_tensor3(&xs, e, c, h).unwrap();
+    let outs2 = rt.execute("expert_ffn", &[x2, w1, w2]).unwrap();
+    let y2 = outs2[0].to_vec::<f32>().unwrap();
+    assert!(y2.iter().all(|v| v.is_finite()));
+    assert!(y2.iter().any(|&v| v.abs() > 1e-6));
+}
+
+#[test]
+fn moe_block_counts_match_topk_budget() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = rt.manifest.artifact("moe_block").unwrap().clone();
+    let (t, h) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    let e = spec.inputs[1].shape[1];
+    let f = spec.inputs[2].shape[2];
+    let topk = cfg(&rt, "topk");
+
+    let x: Vec<f32> = (0..t * h).map(|i| (((i * 29) % 83) as f32 / 41.0) - 1.0).collect();
+    let wg: Vec<f32> = (0..h * e).map(|i| (((i * 31) % 67) as f32 / 33.0) - 1.0).collect();
+    let w1: Vec<f32> = (0..e * h * f).map(|i| ((i % 11) as f32 - 5.0) / 100.0).collect();
+    let w2: Vec<f32> = (0..e * f * h).map(|i| ((i % 19) as f32 - 9.0) / 100.0).collect();
+
+    let outs = rt
+        .execute(
+            "moe_block",
+            &[
+                lit::f32_matrix(&x, t, h).unwrap(),
+                lit::f32_matrix(&wg, h, e).unwrap(),
+                lit::f32_tensor3(&w1, e, h, f).unwrap(),
+                lit::f32_tensor3(&w2, e, f, h).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 2);
+    let y = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(y.len(), t * h);
+    assert!(y.iter().all(|v| v.is_finite()));
+    let counts = outs[1].to_vec::<i32>().unwrap();
+    assert_eq!(counts.len(), e);
+    let total: i64 = counts.iter().map(|&c| c as i64).sum();
+    assert_eq!(total, (t * topk) as i64, "gate counts must equal T·K");
+    assert!(counts.iter().all(|&c| c >= 0));
+}
+
+#[test]
+fn init_params_deterministic_and_scaled() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let p = rt.manifest.num_params;
+    let a = rt.execute("init_params", &[lit::i32_scalar(7)]).unwrap();
+    let b = rt.execute("init_params", &[lit::i32_scalar(7)]).unwrap();
+    let c = rt.execute("init_params", &[lit::i32_scalar(8)]).unwrap();
+    let av = a[0].to_vec::<f32>().unwrap();
+    let bv = b[0].to_vec::<f32>().unwrap();
+    let cv = c[0].to_vec::<f32>().unwrap();
+    assert_eq!(av.len(), p);
+    assert_eq!(av, bv, "same seed must give identical params");
+    assert_ne!(av, cv, "different seeds must differ");
+    // sane init scale
+    let rms = (av.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / p as f64).sqrt();
+    assert!(rms > 1e-4 && rms < 1.0, "init rms {rms}");
+    assert!(av.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_roundtrip_shapes() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let p = rt.manifest.num_params;
+    let b = cfg(&rt, "micro_batch");
+    let s = cfg(&rt, "seq");
+    let l = cfg(&rt, "layers");
+    let e = cfg(&rt, "experts");
+
+    let params = rt.execute("init_params", &[lit::i32_scalar(0)]).unwrap().remove(0);
+    let zeros = lit::f32_vec(&vec![0f32; p]);
+    let tokens: Vec<i32> =
+        (0..b * (s + 1)).map(|i| (i % cfg(&rt, "vocab")) as i32).collect();
+    let outs = rt
+        .execute(
+            "train_step",
+            &[
+                params,
+                zeros.clone(),
+                zeros,
+                lit::f32_scalar(0.0),
+                lit::i32_matrix(&tokens, b, s + 1).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 6, "train_step must emit params', m', v', step', loss, counts");
+    assert_eq!(outs[0].to_vec::<f32>().unwrap().len(), p);
+    let step = outs[3].to_vec::<f32>().unwrap()[0];
+    assert_eq!(step, 1.0);
+    let loss = outs[4].to_vec::<f32>().unwrap()[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    let counts = outs[5].to_vec::<i32>().unwrap();
+    assert_eq!(counts.len(), l * e);
+    let per_layer_budget = (b * s * cfg(&rt, "topk")) as i64;
+    for layer in 0..l {
+        let sum: i64 =
+            counts[layer * e..(layer + 1) * e].iter().map(|&c| c as i64).sum();
+        assert_eq!(sum, per_layer_budget, "layer {layer} counts");
+    }
+}

