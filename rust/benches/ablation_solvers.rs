@@ -1,90 +1,172 @@
-//! Solver ablation (§9 Discussion): the per-micro-batch scheduling solve
-//! implemented three ways — cold simplex, warm-started simplex (the
-//! training path), and binary-search max-flow (the proposed inference
-//! path) — measured for identical optima across scales.
+//! Solver ablation (§9 Discussion + the revised-simplex perf claim): the
+//! per-micro-batch scheduling solve implemented several ways —
+//!
+//! * dense full-tableau simplex (cold + warm), the original baseline;
+//! * bounded-variable revised simplex (cold + warm), the production path;
+//! * binary-search max-flow, the proposed inference path —
+//!
+//! measured for identical optima across scales. The headline number is the
+//! warm p50 ratio tableau/revised in CommAware (LPP-4) mode at 64 GPUs ×
+//! 256 experts, where the revised backend's implicit bounds remove ~nx
+//! rows and its eta-updated B⁻¹ avoids the O(m·ncols) tableau sweep; the
+//! JSON artifact also records warm pivot counts for both backends (the
+//! warm-start contract must not regress).
 
 use micromoe::bench_harness::{bench, fmt_time, save_json, Table};
+use micromoe::lp::SolverKind;
 use micromoe::placement::cayley::cayley_graph_placement;
 use micromoe::rng::{Rng, Zipf};
 use micromoe::scheduler::flow::flow_schedule;
-use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, ScheduleMode, SchedulerOptions};
 use micromoe::ser::Json;
 
-fn main() {
-    let mut table = Table::new(
-        "Solver ablation: cold LP vs warm LP vs max-flow (same optima)",
-        &["GPUs", "experts", "cold LP", "warm LP", "max-flow", "optima agree"],
-    );
-    let mut json = Vec::new();
-    for &(g, e) in &[(8usize, 32usize), (16, 64), (32, 128), (64, 256)] {
-        let p = cayley_graph_placement(g, e);
-        let mut rng = Rng::new(3);
-        let zipf = Zipf::new(e, 0.8);
-        let mk = |rng: &mut Rng| {
+fn make_batches(g: usize, e: usize, n: usize) -> Vec<LoadMatrix> {
+    let mut rng = Rng::new(3);
+    let zipf = Zipf::new(e, 0.8);
+    (0..n)
+        .map(|_| {
             let mut lm = LoadMatrix::zeros(e, g);
             for gi in 0..g {
                 for _ in 0..2048 {
-                    lm.add(zipf.sample(rng), gi, 1);
+                    lm.add(zipf.sample(&mut rng), gi, 1);
                 }
             }
             lm
-        };
-        let batches: Vec<LoadMatrix> = (0..8).map(|_| mk(&mut rng)).collect();
+        })
+        .collect()
+}
 
-        // agreement check on every batch
-        let mut agree = true;
-        {
-            let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
-            for lm in &batches {
-                let lp = s.schedule(lm).stats.lp_objective;
-                let fl = flow_schedule(&p, lm).max_load;
-                if (lp.ceil() as i64 - fl as i64).abs() > 1 {
-                    agree = false;
+struct Measured {
+    p50: f64,
+    /// mean warm pivots per solve (0 for cold configurations)
+    warm_pivots: f64,
+}
+
+fn measure(
+    g: usize,
+    e: usize,
+    mode: &ScheduleMode,
+    solver: SolverKind,
+    warm: bool,
+    batches: &[LoadMatrix],
+) -> Measured {
+    let p = cayley_graph_placement(g, e);
+    let mut s = MicroEpScheduler::new(
+        p,
+        None,
+        SchedulerOptions { mode: mode.clone(), solver, warm_start: warm, ..Default::default() },
+    );
+    s.schedule(&batches[0]); // prime warm state / first build
+    let mut pivots = 0usize;
+    let mut solves = 0usize;
+    let mut i = 0usize;
+    let r = bench(&format!("{solver:?}-{}", if warm { "warm" } else { "cold" }), 1, 12, || {
+        let sched = s.schedule(&batches[i % batches.len()]);
+        pivots += sched.stats.lp_iterations;
+        solves += 1;
+        std::hint::black_box(&sched);
+        i += 1;
+    });
+    Measured {
+        p50: r.summary.p50,
+        warm_pivots: if warm { pivots as f64 / solves as f64 } else { 0.0 },
+    }
+}
+
+fn main() {
+    let modes: [(&str, ScheduleMode); 2] = [
+        ("LPP-1", ScheduleMode::Compute),
+        ("LPP-4", ScheduleMode::CommAware { alpha: 0.7 }),
+    ];
+    let mut table = Table::new(
+        "Solver ablation: dense tableau vs revised simplex vs max-flow",
+        &[
+            "mode", "GPUs", "experts", "tab cold", "tab warm", "rev cold", "rev warm",
+            "warm speedup", "piv tab/rev", "flow", "optima agree",
+        ],
+    );
+    let mut json = Vec::new();
+    for (mode_name, mode) in &modes {
+        for &(g, e) in &[(8usize, 32usize), (16, 64), (32, 128), (64, 256)] {
+            let p = cayley_graph_placement(g, e);
+            let batches = make_batches(g, e, 8);
+
+            // optima agreement: revised vs tableau on every batch (and vs
+            // max-flow for the LPP-1 integer bound)
+            let mut agree = true;
+            {
+                let opts = |solver: SolverKind| SchedulerOptions {
+                    mode: mode.clone(),
+                    solver,
+                    ..Default::default()
+                };
+                let mut sr = MicroEpScheduler::new(p.clone(), None, opts(SolverKind::Revised));
+                let mut st = MicroEpScheduler::new(p.clone(), None, opts(SolverKind::DenseTableau));
+                for lm in &batches {
+                    let lr = sr.schedule(lm).stats.lp_objective;
+                    let lt = st.schedule(lm).stats.lp_objective;
+                    if (lr - lt).abs() > 1e-6 * (1.0 + lr.abs()) {
+                        agree = false;
+                    }
+                    if matches!(mode, ScheduleMode::Compute) {
+                        let fl = flow_schedule(&p, lm).max_load;
+                        if (lr.ceil() as i64 - fl as i64).abs() > 1 {
+                            agree = false;
+                        }
+                    }
                 }
             }
-        }
 
-        let mut cold =
-            MicroEpScheduler::new(p.clone(), None, SchedulerOptions { warm_start: false, ..Default::default() });
-        let mut i = 0usize;
-        let r_cold = bench("cold", 1, 12, || {
-            std::hint::black_box(cold.schedule(&batches[i % 8]));
-            i += 1;
-        });
-        let mut warm =
-            MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
-        warm.schedule(&batches[0]);
-        let mut i = 0usize;
-        let r_warm = bench("warm", 1, 12, || {
-            std::hint::black_box(warm.schedule(&batches[i % 8]));
-            i += 1;
-        });
-        let mut i = 0usize;
-        let r_flow = bench("flow", 1, 12, || {
-            std::hint::black_box(flow_schedule(&p, &batches[i % 8]));
-            i += 1;
-        });
-        table.row(vec![
-            g.to_string(),
-            e.to_string(),
-            fmt_time(r_cold.summary.p50),
-            fmt_time(r_warm.summary.p50),
-            fmt_time(r_flow.summary.p50),
-            agree.to_string(),
-        ]);
-        json.push(Json::obj(vec![
-            ("gpus", Json::Num(g as f64)),
-            ("experts", Json::Num(e as f64)),
-            ("cold_s", Json::Num(r_cold.summary.p50)),
-            ("warm_s", Json::Num(r_warm.summary.p50)),
-            ("flow_s", Json::Num(r_flow.summary.p50)),
-        ]));
+            let tab_cold = measure(g, e, mode, SolverKind::DenseTableau, false, &batches);
+            let tab_warm = measure(g, e, mode, SolverKind::DenseTableau, true, &batches);
+            let rev_cold = measure(g, e, mode, SolverKind::Revised, false, &batches);
+            let rev_warm = measure(g, e, mode, SolverKind::Revised, true, &batches);
+            let mut i = 0usize;
+            let r_flow = bench("flow", 1, 12, || {
+                std::hint::black_box(flow_schedule(&p, &batches[i % 8]));
+                i += 1;
+            });
+            let speedup = tab_warm.p50 / rev_warm.p50;
+            let pivot_ratio = if rev_warm.warm_pivots > 0.0 {
+                tab_warm.warm_pivots / rev_warm.warm_pivots
+            } else {
+                f64::INFINITY
+            };
+            table.row(vec![
+                mode_name.to_string(),
+                g.to_string(),
+                e.to_string(),
+                fmt_time(tab_cold.p50),
+                fmt_time(tab_warm.p50),
+                fmt_time(rev_cold.p50),
+                fmt_time(rev_warm.p50),
+                format!("{speedup:.2}x"),
+                format!("{pivot_ratio:.2}"),
+                fmt_time(r_flow.summary.p50),
+                agree.to_string(),
+            ]);
+            json.push(Json::obj(vec![
+                ("mode", Json::Str(mode_name.to_string())),
+                ("gpus", Json::Num(g as f64)),
+                ("experts", Json::Num(e as f64)),
+                ("tableau_cold_s", Json::Num(tab_cold.p50)),
+                ("tableau_warm_s", Json::Num(tab_warm.p50)),
+                ("revised_cold_s", Json::Num(rev_cold.p50)),
+                ("revised_warm_s", Json::Num(rev_warm.p50)),
+                ("warm_speedup", Json::Num(speedup)),
+                ("tableau_warm_pivots", Json::Num(tab_warm.warm_pivots)),
+                ("revised_warm_pivots", Json::Num(rev_warm.warm_pivots)),
+                ("flow_s", Json::Num(r_flow.summary.p50)),
+                ("optima_agree", Json::Bool(agree)),
+            ]));
+        }
     }
     table.print();
     println!(
-        "\n§9 Discussion: 'we can replace the linear programming optimization \
-         with … algorithms for reduced computational complexity' — the flow \
-         solver needs no warm state, suiting latency-sensitive inference."
+        "\nacceptance gate: LPP-4 (CommAware) @ 64 GPUs × 256 experts must show\n\
+         revised warm p50 ≥2× faster than the dense tableau, with warm pivot\n\
+         counts no worse. §9 Discussion: the flow solver needs no warm state,\n\
+         suiting latency-sensitive inference."
     );
     let _ = save_json("ablation_solvers", &Json::Arr(json));
 }

@@ -6,7 +6,10 @@
 //! time with pipeline-parallel bubbles and gradient sync (Fig. 6).
 
 use super::CostModel;
-use crate::scheduler::Route;
+use crate::placement::Placement;
+use crate::scheduler::{
+    schedule_layers_parallel, LoadMatrix, MicroEpScheduler, Route, SchedulerOptions,
+};
 use crate::topology::Topology;
 
 /// What a load-balancing system decided for one MoE layer of one
@@ -71,6 +74,63 @@ pub fn moe_layer_time(
         .fold(0.0, f64::max);
 
     MoeLayerBreakdown { prep, dispatch, compute, combine }
+}
+
+/// Multi-layer MoE timing: one independent [`MicroEpScheduler`] per layer
+/// (each owns its own warm-start basis, exactly like the per-layer solver
+/// replicas a real deployment keeps), with all layers' per-micro-batch LPs
+/// solved concurrently via [`schedule_layers_parallel`]. On a training
+/// pipeline every layer's gate output is available once the previous
+/// forward finishes, so the solves are embarrassingly parallel — this is
+/// the wall-clock win that keeps scheduling off the critical path even
+/// when a stage holds many MoE layers.
+pub struct MultiLayerSim {
+    pub model: CostModel,
+    pub topo: Topology,
+    placement: Placement,
+    schedulers: Vec<MicroEpScheduler>,
+    /// §5.4: scheduling overlaps the token-permute op
+    pub overlap: bool,
+}
+
+impl MultiLayerSim {
+    pub fn new(
+        model: CostModel,
+        topo: Topology,
+        placement: Placement,
+        opts: SchedulerOptions,
+        layers: usize,
+    ) -> Self {
+        assert!(layers > 0);
+        let schedulers = (0..layers)
+            .map(|_| MicroEpScheduler::new(placement.clone(), Some(topo.clone()), opts.clone()))
+            .collect();
+        MultiLayerSim { model, topo, placement, schedulers, overlap: true }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.schedulers.len()
+    }
+
+    /// Schedule one micro-batch for every layer (in parallel) and time each
+    /// layer under the cost model. `loads[l]` is layer `l`'s `input_e^g`.
+    pub fn step(&mut self, loads: &[LoadMatrix]) -> Vec<MoeLayerBreakdown> {
+        assert_eq!(loads.len(), self.schedulers.len(), "one load matrix per layer");
+        let schedules = schedule_layers_parallel(&mut self.schedulers, loads);
+        schedules
+            .into_iter()
+            .map(|s| {
+                let plan = MoeLayerPlan {
+                    gpu_compute: s.gpu_loads(&self.placement),
+                    routes: s.routes,
+                    sched_time: s.stats.solve_ns as f64 * 1e-9,
+                    sched_overlapped: self.overlap,
+                    prep_extra: 0.0,
+                };
+                moe_layer_time(&self.model, &self.topo, &plan)
+            })
+            .collect()
+    }
 }
 
 /// End-to-end iteration model (Fig. 6): GPipe-style schedule.
@@ -198,5 +258,77 @@ mod tests {
         let good = MoeLayerBreakdown { prep: 0.0, dispatch: 1e-3, compute: 2e-3, combine: 1e-3 };
         let bad = MoeLayerBreakdown { compute: 6e-3, ..good };
         assert!(model.throughput(&good, 8192) > 1.5 * model.throughput(&bad, 8192));
+    }
+
+    #[test]
+    fn multi_layer_sim_times_every_layer() {
+        use crate::placement::cayley::symmetric_placement;
+        use crate::rng::Rng;
+        let topo = Topology::new(8, 4, 2, 8);
+        let p = symmetric_placement(&topo, 16);
+        let mut sim = MultiLayerSim::new(
+            CostModel::h100_testbed(),
+            topo,
+            p,
+            SchedulerOptions::default(),
+            4,
+        );
+        let mut rng = Rng::new(11);
+        for _ in 0..3 {
+            let loads: Vec<LoadMatrix> = (0..4)
+                .map(|_| {
+                    let mut lm = LoadMatrix::zeros(16, 8);
+                    for _ in 0..1200 {
+                        lm.add(rng.below(16) as usize, rng.below(8) as usize, 1);
+                    }
+                    lm
+                })
+                .collect();
+            let breakdowns = sim.step(&loads);
+            assert_eq!(breakdowns.len(), 4);
+            for b in &breakdowns {
+                assert!(b.compute > 0.0);
+                assert!(b.total().is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn multi_layer_sim_matches_single_layer_plan() {
+        use crate::placement::cayley::symmetric_placement;
+        use crate::rng::Rng;
+        let topo = Topology::new(8, 4, 2, 8);
+        let p = symmetric_placement(&topo, 16);
+        let model = CostModel::h100_testbed();
+        let mut sim = MultiLayerSim::new(
+            model.clone(),
+            topo.clone(),
+            p.clone(),
+            SchedulerOptions::default(),
+            2,
+        );
+        let mut reference =
+            MicroEpScheduler::new(p.clone(), Some(topo.clone()), SchedulerOptions::default());
+        let mut rng = Rng::new(21);
+        let mut lm = LoadMatrix::zeros(16, 8);
+        for _ in 0..1000 {
+            lm.add(rng.below(16) as usize, rng.below(8) as usize, 1);
+        }
+        // identical loads on both layers: identical, deterministic plans
+        let loads = vec![lm.clone(), lm.clone()];
+        let breakdowns = sim.step(&loads);
+        let s = reference.schedule(&lm);
+        let plan = MoeLayerPlan {
+            gpu_compute: s.gpu_loads(&p),
+            routes: s.routes,
+            sched_time: 0.0,
+            sched_overlapped: true,
+            prep_extra: 0.0,
+        };
+        let expect = moe_layer_time(&model, &topo, &plan);
+        for b in &breakdowns {
+            assert_eq!(b.dispatch, expect.dispatch);
+            assert_eq!(b.compute, expect.compute);
+        }
     }
 }

@@ -27,11 +27,16 @@ pub mod moe;
 pub mod placement;
 pub mod prop;
 pub mod rng;
+/// PJRT/XLA-backed artifact execution — needs the image's `xla` bindings;
+/// gated so the default build stays dependency-light.
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod scheduler;
 pub mod ser;
 pub mod stats;
 pub mod topology;
+/// e2e PJRT trainer (drives [`runtime`]); gated with it.
+#[cfg(feature = "xla")]
 pub mod train;
 pub mod workload;
 

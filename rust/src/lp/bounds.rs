@@ -1,0 +1,124 @@
+//! Variable-bound utilities shared by the two solver backends.
+//!
+//! The revised simplex treats `0 ≤ x_j ≤ u_j` implicitly (no rows); the
+//! dense tableau cannot, so [`expand_to_rows`] lowers finite bounds into
+//! ordinary `x_j ≤ u_j` constraint rows appended after the real rows. The
+//! returned map lets a warm solver translate per-micro-batch *bound*
+//! updates into *rhs* updates on those synthetic rows, keeping the two
+//! backends behaviourally identical (the property the differential fuzz
+//! suite pins down).
+
+use super::problem::{LpProblem, Relation};
+
+/// Rewrite every finite upper bound of `p` as an explicit `≤` row.
+///
+/// Returns the expanded (bound-free) problem plus, per variable, the index
+/// of the row now carrying its bound (`None` for unbounded variables). The
+/// synthetic rows sit after all original rows, so original row indices are
+/// preserved — rhs-update paths keep working untranslated.
+pub fn expand_to_rows(p: &LpProblem) -> (LpProblem, Vec<Option<usize>>) {
+    let mut out = p.clone();
+    let mut bound_row = vec![None; p.num_vars];
+    for v in 0..p.num_vars {
+        let u = p.upper[v];
+        if u.is_finite() {
+            let row = out.add(vec![(v, 1.0)], Relation::Le, u);
+            bound_row[v] = Some(row);
+        }
+    }
+    for u in &mut out.upper {
+        *u = f64::INFINITY;
+    }
+    (out, bound_row)
+}
+
+/// Sparse matrix in compressed-sparse-column form — the standard-form
+/// constraint matrix of the revised simplex (structural + slack +
+/// artificial columns). Column access is what pricing, FTRAN, and
+/// refactorization need; rows are never traversed.
+#[derive(Clone, Debug)]
+pub struct Csc {
+    pub m: usize,
+    pub ncols: usize,
+    pub col_ptr: Vec<usize>,
+    pub row_idx: Vec<usize>,
+    pub val: Vec<f64>,
+}
+
+impl Csc {
+    /// Build from per-column (row, value) lists.
+    pub fn from_columns(m: usize, cols: Vec<Vec<(usize, f64)>>) -> Csc {
+        let ncols = cols.len();
+        let nnz: usize = cols.iter().map(Vec::len).sum();
+        let mut col_ptr = Vec::with_capacity(ncols + 1);
+        let mut row_idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        col_ptr.push(0);
+        for col in &cols {
+            for &(i, a) in col {
+                debug_assert!(i < m);
+                row_idx.push(i);
+                val.push(a);
+            }
+            col_ptr.push(row_idx.len());
+        }
+        Csc { m, ncols, col_ptr, row_idx, val }
+    }
+
+    /// The (rows, values) slices of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[a..b], &self.val[a..b])
+    }
+
+    /// Sparse dot of column `j` with a dense vector.
+    #[inline]
+    pub fn col_dot(&self, j: usize, dense: &[f64]) -> f64 {
+        let (rows, vals) = self.col(j);
+        rows.iter().zip(vals).map(|(&i, &a)| dense[i] * a).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_preserves_rows_and_maps_bounds() {
+        let mut p = LpProblem::new(3);
+        p.add(vec![(0, 1.0), (1, 1.0)], Relation::Le, 5.0);
+        p.set_upper(0, 2.0);
+        p.set_upper(2, 0.0);
+        let (exp, map) = expand_to_rows(&p);
+        assert_eq!(exp.constraints.len(), 3); // 1 real + 2 bound rows
+        assert!(!exp.has_finite_upper());
+        assert_eq!(map, vec![Some(1), None, Some(2)]);
+        assert_eq!(exp.constraints[1].terms, vec![(0, 1.0)]);
+        assert_eq!(exp.constraints[1].rhs, 2.0);
+        assert_eq!(exp.constraints[2].rhs, 0.0);
+        // original rows keep their indices
+        assert_eq!(exp.constraints[0].rhs, 5.0);
+    }
+
+    #[test]
+    fn expanded_feasibility_matches_bounded() {
+        let mut p = LpProblem::new(2);
+        p.add(vec![(0, 1.0), (1, 1.0)], Relation::Le, 10.0);
+        p.set_upper(1, 4.0);
+        let (exp, _) = expand_to_rows(&p);
+        for cand in [[1.0, 1.0], [1.0, 5.0], [11.0, 0.0]] {
+            assert_eq!(p.is_feasible(&cand, 1e-9), exp.is_feasible(&cand, 1e-9));
+        }
+    }
+
+    #[test]
+    fn csc_column_access() {
+        // A = [[1, 0], [2, 3]]
+        let csc = Csc::from_columns(2, vec![vec![(0, 1.0), (1, 2.0)], vec![(1, 3.0)]]);
+        assert_eq!(csc.col(0), (&[0usize, 1][..], &[1.0, 2.0][..]));
+        assert_eq!(csc.col(1), (&[1usize][..], &[3.0][..]));
+        assert_eq!(csc.col_dot(0, &[10.0, 1.0]), 12.0);
+        assert_eq!(csc.col_dot(1, &[10.0, 1.0]), 3.0);
+    }
+}

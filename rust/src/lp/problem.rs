@@ -1,4 +1,11 @@
-//! LP problem model: `min c'x  s.t.  row_i · x {≤,=,≥} b_i,  x ≥ 0`.
+//! LP problem model: `min c'x  s.t.  row_i · x {≤,=,≥} b_i,  0 ≤ x ≤ u`.
+//!
+//! Upper bounds are first-class (not rows): the bounded-variable revised
+//! simplex ([`super::revised`]) enforces them implicitly in its ratio tests,
+//! which keeps the row count `m` — the quantity every inner loop scales
+//! with — free of the ~`nx` cap rows that LPP-4 and the topology-aware
+//! refinement would otherwise need. The dense tableau path expands finite
+//! bounds back into `≤` rows via [`super::bounds::expand_to_rows`].
 
 /// Row relation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -17,18 +24,26 @@ pub struct Constraint {
     pub rhs: f64,
 }
 
-/// Minimization LP with non-negative variables.
+/// Minimization LP with non-negative, optionally upper-bounded variables.
 #[derive(Clone, Debug, Default)]
 pub struct LpProblem {
     pub num_vars: usize,
     /// Objective coefficients (len == num_vars); minimized.
     pub objective: Vec<f64>,
     pub constraints: Vec<Constraint>,
+    /// Per-variable upper bounds (len == num_vars); `f64::INFINITY` when
+    /// unbounded above. Lower bounds are always 0.
+    pub upper: Vec<f64>,
 }
 
 impl LpProblem {
     pub fn new(num_vars: usize) -> Self {
-        LpProblem { num_vars, objective: vec![0.0; num_vars], constraints: Vec::new() }
+        LpProblem {
+            num_vars,
+            objective: vec![0.0; num_vars],
+            constraints: Vec::new(),
+            upper: vec![f64::INFINITY; num_vars],
+        }
     }
 
     pub fn set_objective(&mut self, var: usize, coeff: f64) {
@@ -47,6 +62,24 @@ impl LpProblem {
         self.constraints[row].rhs = rhs;
     }
 
+    /// Set a variable's upper bound (`f64::INFINITY` removes it). Like rhs
+    /// edits, bound edits leave the constraint matrix untouched, so the
+    /// warm-start contract (§5.1) extends to them.
+    pub fn set_upper(&mut self, var: usize, ub: f64) {
+        debug_assert!(ub >= 0.0, "upper bound below the implicit lower bound 0");
+        self.upper[var] = ub;
+    }
+
+    /// A variable's upper bound (`f64::INFINITY` when absent).
+    pub fn upper_of(&self, var: usize) -> f64 {
+        self.upper[var]
+    }
+
+    /// Whether any variable carries a finite upper bound.
+    pub fn has_finite_upper(&self) -> bool {
+        self.upper.iter().any(|u| u.is_finite())
+    }
+
     /// Evaluate `row · x`.
     pub fn row_dot(&self, row: usize, x: &[f64]) -> f64 {
         self.constraints[row].terms.iter().map(|&(v, c)| c * x[v]).sum()
@@ -55,6 +88,9 @@ impl LpProblem {
     /// Check feasibility of a candidate point within tolerance.
     pub fn is_feasible(&self, x: &[f64], tol: f64) -> bool {
         if x.iter().any(|&v| v < -tol) {
+            return false;
+        }
+        if x.iter().zip(&self.upper).any(|(&v, &u)| v > u + tol) {
             return false;
         }
         self.constraints.iter().enumerate().all(|(i, c)| {
@@ -89,6 +125,20 @@ mod tests {
         assert!(!p.is_feasible(&[2.0, 0.0], 1e-9)); // violates <=
         assert!(!p.is_feasible(&[1.0, 0.5], 1e-9)); // violates =
         assert!(!p.is_feasible(&[-0.1, 2.1], 1e-9)); // negative var
+    }
+
+    #[test]
+    fn upper_bounds_enter_feasibility() {
+        let mut p = LpProblem::new(2);
+        p.add(vec![(0, 1.0), (1, 1.0)], Relation::Le, 10.0);
+        assert!(p.is_feasible(&[3.0, 3.0], 1e-9));
+        p.set_upper(0, 2.0);
+        assert!(p.has_finite_upper());
+        assert!(!p.is_feasible(&[3.0, 3.0], 1e-9));
+        assert!(p.is_feasible(&[2.0, 3.0], 1e-9));
+        p.set_upper(0, f64::INFINITY);
+        assert!(!p.has_finite_upper());
+        assert!(p.is_feasible(&[3.0, 3.0], 1e-9));
     }
 
     #[test]

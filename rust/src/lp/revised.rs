@@ -1,0 +1,846 @@
+//! Bounded-variable revised simplex — the per-micro-batch hot path.
+//!
+//! Where the dense tableau pays O(m · ncols) per pivot over a tableau that
+//! retains every slack and artificial column, this solver keeps the
+//! constraint matrix in CSC form ([`super::bounds::Csc`]), maintains an
+//! explicit m×m basis inverse updated by eta/product-form pivots with
+//! periodic refactorization ([`super::basis::BasisInverse`]), and prices
+//! columns lazily: per pivot it spends O(m²) on the eta update plus
+//! O(nnz(col)) per priced column. Simple upper bounds `0 ≤ x_j ≤ u_j` are
+//! enforced *implicitly* in the ratio tests — a bounded nonbasic variable
+//! rests at either bound and can "bound-flip" without a basis change — so
+//! LPP-4's `l ≤ input` cap rows and the topology-aware `n ≤ node_input`
+//! rows never enter `m`, the quantity every inner loop scales with.
+//!
+//! Warm start (§5.1): between micro-batches only `b` and the bounds move,
+//! so the previous optimal basis stays dual-feasible; [`RevisedSolver::warm_resolve`]
+//! refreshes `x_B = B⁻¹(b − A_U u)` and runs the bounded-variable dual
+//! simplex until primal feasibility returns — the same contract the dense
+//! path honours, typically a handful of pivots.
+
+use super::basis::BasisInverse;
+use super::bounds::Csc;
+use super::problem::{LpProblem, Relation};
+use super::simplex::{SimplexError, Solution};
+
+const TOL: f64 = 1e-9;
+
+/// Where a column currently lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum VarState {
+    Basic,
+    AtLower,
+    AtUpper,
+}
+
+/// Bounded-variable revised simplex solver. Retains its final basis so
+/// [`super::warm::WarmSolver`] can re-solve after rhs/bound updates.
+pub struct RevisedSolver {
+    n_orig: usize,
+    ncols: usize,
+    m: usize,
+    /// first artificial column (== ncols when the problem needed none)
+    art_base: usize,
+    csc: Csc,
+    /// phase-2 costs (structural entries only; slacks/artificials are 0)
+    cost: Vec<f64>,
+    /// per-column upper bound; lower bounds are all 0. Artificials are
+    /// clamped to `[0, 0]` after phase 1, which blocks them permanently.
+    upper: Vec<f64>,
+    /// sign-normalized rhs (`b ≥ 0` at build time)
+    b: Vec<f64>,
+    /// sign applied to each original row at build time
+    row_sign: Vec<f64>,
+    basis: Vec<usize>,
+    state: Vec<VarState>,
+    xb: Vec<f64>,
+    binv: BasisInverse,
+    pub(crate) iterations: usize,
+    phase1_done: bool,
+    // scratch buffers reused across pivots
+    w: Vec<f64>,
+    y: Vec<f64>,
+    rho: Vec<f64>,
+    rhs_buf: Vec<f64>,
+    cb_scratch: Vec<(usize, f64)>,
+}
+
+impl RevisedSolver {
+    /// Build standard form: one slack per `≤`/`≥` row, one artificial per
+    /// `≥`/`=` row, rows sign-flipped so `b ≥ 0`, initial basis = the
+    /// identity of slacks/artificials.
+    pub fn new(p: &LpProblem) -> Self {
+        let m = p.constraints.len();
+        let n = p.num_vars;
+
+        let mut n_slack = 0usize;
+        let mut n_art = 0usize;
+        for c in &p.constraints {
+            let mut rel = c.rel;
+            if c.rhs < 0.0 {
+                rel = match rel {
+                    Relation::Le => Relation::Ge,
+                    Relation::Ge => Relation::Le,
+                    Relation::Eq => Relation::Eq,
+                };
+            }
+            match rel {
+                Relation::Le => n_slack += 1,
+                Relation::Ge => {
+                    n_slack += 1;
+                    n_art += 1;
+                }
+                Relation::Eq => n_art += 1,
+            }
+        }
+        let art_base = n + n_slack;
+        let ncols = art_base + n_art;
+
+        let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); ncols];
+        let mut b = vec![0.0; m];
+        let mut row_sign = vec![1.0; m];
+        let mut basis = vec![usize::MAX; m];
+        let mut next_slack = n;
+        let mut next_art = art_base;
+
+        for (i, c) in p.constraints.iter().enumerate() {
+            let mut rel = c.rel;
+            let mut rhs = c.rhs;
+            let mut sign = 1.0;
+            if rhs < 0.0 {
+                sign = -1.0;
+                rhs = -rhs;
+                rel = match rel {
+                    Relation::Le => Relation::Ge,
+                    Relation::Ge => Relation::Le,
+                    Relation::Eq => Relation::Eq,
+                };
+            }
+            row_sign[i] = sign;
+            b[i] = rhs;
+            for &(v, co) in &c.terms {
+                cols[v].push((i, sign * co));
+            }
+            match rel {
+                Relation::Le => {
+                    cols[next_slack].push((i, 1.0));
+                    basis[i] = next_slack;
+                    next_slack += 1;
+                }
+                Relation::Ge => {
+                    cols[next_slack].push((i, -1.0));
+                    next_slack += 1;
+                    cols[next_art].push((i, 1.0));
+                    basis[i] = next_art;
+                    next_art += 1;
+                }
+                Relation::Eq => {
+                    cols[next_art].push((i, 1.0));
+                    basis[i] = next_art;
+                    next_art += 1;
+                }
+            }
+        }
+        debug_assert_eq!(next_slack, art_base);
+        debug_assert_eq!(next_art, ncols);
+
+        let csc = Csc::from_columns(m, cols);
+
+        let mut cost = vec![0.0; ncols];
+        cost[..n].copy_from_slice(&p.objective);
+        let mut upper = vec![f64::INFINITY; ncols];
+        upper[..n].copy_from_slice(&p.upper);
+
+        let mut state = vec![VarState::AtLower; ncols];
+        let mut xb = vec![0.0; m];
+        for (i, &bi) in basis.iter().enumerate() {
+            state[bi] = VarState::Basic;
+            xb[i] = b[i];
+        }
+
+        RevisedSolver {
+            n_orig: n,
+            ncols,
+            m,
+            art_base,
+            csc,
+            cost,
+            upper,
+            b,
+            row_sign,
+            basis,
+            state,
+            xb,
+            binv: BasisInverse::identity(m),
+            iterations: 0,
+            phase1_done: false,
+            w: vec![0.0; m],
+            y: vec![0.0; m],
+            rho: vec![0.0; m],
+            rhs_buf: vec![0.0; m],
+            cb_scratch: Vec::with_capacity(m),
+        }
+    }
+
+    /// Replace a row's rhs (original row order; sign normalization from
+    /// build time is reapplied).
+    pub fn update_rhs(&mut self, row: usize, rhs: f64) {
+        self.b[row] = self.row_sign[row] * rhs;
+    }
+
+    /// Replace a structural variable's upper bound. A nonbasic variable
+    /// resting on a bound that vanishes drops to its lower bound; a basic
+    /// variable pushed out of range is repaired by the next dual solve.
+    pub fn update_upper(&mut self, var: usize, ub: f64) {
+        debug_assert!(var < self.n_orig);
+        self.upper[var] = ub;
+        if self.state[var] == VarState::AtUpper && !ub.is_finite() {
+            self.state[var] = VarState::AtLower;
+        }
+    }
+
+    /// Whether column `j` is pinned (`u_j ≤ 0`, so it can never move off 0).
+    #[inline]
+    fn fixed(&self, j: usize) -> bool {
+        self.upper[j] <= 0.0
+    }
+
+    /// `x_B = B⁻¹ (b − Σ_{j at upper} u_j A_j)` — nonbasic-at-lower columns
+    /// contribute nothing because every lower bound is 0.
+    fn recompute_xb(&mut self) {
+        self.rhs_buf.copy_from_slice(&self.b);
+        for j in 0..self.ncols {
+            if self.state[j] == VarState::AtUpper {
+                let u = self.upper[j];
+                if u > 0.0 && u.is_finite() {
+                    let (rows, vals) = self.csc.col(j);
+                    for (&i, &a) in rows.iter().zip(vals) {
+                        self.rhs_buf[i] -= u * a;
+                    }
+                }
+            }
+        }
+        let mut xb = std::mem::take(&mut self.xb);
+        self.binv.ftran_dense(&self.rhs_buf, &mut xb);
+        self.xb = xb;
+    }
+
+    /// `y = c_B' B⁻¹` for the given cost vector.
+    fn compute_y(&mut self, cost: &[f64]) {
+        self.cb_scratch.clear();
+        for (k, &j) in self.basis.iter().enumerate() {
+            let c = cost[j];
+            if c != 0.0 {
+                self.cb_scratch.push((k, c));
+            }
+        }
+        let mut y = std::mem::take(&mut self.y);
+        self.binv.btran_costs(&self.cb_scratch, &mut y);
+        self.y = y;
+    }
+
+    /// FTRAN of column `j` into the scratch `w`.
+    fn ftran_col(&mut self, j: usize) {
+        let (rows, vals) = self.csc.col(j);
+        let mut w = std::mem::take(&mut self.w);
+        self.binv.ftran_sparse(rows, vals, &mut w);
+        self.w = w;
+    }
+
+    /// Refactorize and refresh `x_B`; called on drift or when the eta count
+    /// says so.
+    fn refactor(&mut self) -> Result<(), SimplexError> {
+        self.binv
+            .refactor(&self.csc, &self.basis)
+            .map_err(|_| SimplexError::Numerical("singular basis on refactor"))?;
+        self.recompute_xb();
+        Ok(())
+    }
+
+    /// Execute an accepted pivot: entering column `enter` moves by `t` from
+    /// the bound it rests on, row `leave` leaves to its lower/upper bound.
+    /// `self.w` must hold FTRAN(enter).
+    fn apply_pivot(
+        &mut self,
+        enter: usize,
+        enter_from_upper: bool,
+        leave: usize,
+        leave_to_upper: bool,
+        t: f64,
+    ) -> Result<(), SimplexError> {
+        let sigma = if enter_from_upper { -1.0 } else { 1.0 };
+        for i in 0..self.m {
+            self.xb[i] -= sigma * t * self.w[i];
+        }
+        let entering_val = if enter_from_upper { self.upper[enter] - t } else { t };
+        let old = self.basis[leave];
+        self.state[old] = if leave_to_upper { VarState::AtUpper } else { VarState::AtLower };
+        self.basis[leave] = enter;
+        self.state[enter] = VarState::Basic;
+        self.xb[leave] = entering_val;
+        if self.binv.update(&self.w, leave).is_err() {
+            // eta pivot numerically unusable: rebuild the inverse instead
+            self.refactor()?;
+        }
+        self.iterations += 1;
+        Ok(())
+    }
+
+    /// Primal simplex to optimality for `cost` (bounded Dantzig pricing
+    /// with a Bland fallback for anti-cycling).
+    fn primal_iterate(&mut self, cost: &[f64]) -> Result<(), SimplexError> {
+        let limit = 200 * (self.m + self.ncols) + 1000;
+        let mut steps = 0usize;
+        loop {
+            steps += 1;
+            if steps > limit {
+                return Err(SimplexError::IterLimit(limit));
+            }
+            if self.binv.due_for_refactor() {
+                self.refactor()?;
+            }
+            let use_bland = steps > 2 * (self.m + self.ncols);
+            self.compute_y(cost);
+            // ---- pricing ----
+            let mut enter = usize::MAX;
+            let mut enter_from_upper = false;
+            let mut best = TOL;
+            for j in 0..self.ncols {
+                if self.state[j] == VarState::Basic || self.fixed(j) {
+                    continue;
+                }
+                let d = cost[j] - self.csc.col_dot(j, &self.y);
+                let score = match self.state[j] {
+                    VarState::AtLower => -d,
+                    VarState::AtUpper => d,
+                    VarState::Basic => unreachable!(),
+                };
+                if score > best {
+                    enter = j;
+                    enter_from_upper = self.state[j] == VarState::AtUpper;
+                    best = score;
+                    if use_bland {
+                        break; // Bland: first improving index
+                    }
+                }
+            }
+            if enter == usize::MAX {
+                return Ok(()); // optimal
+            }
+            self.ftran_col(enter);
+            let sigma = if enter_from_upper { -1.0 } else { 1.0 };
+            // ---- bounded ratio test ----
+            // the entering variable can at most traverse its own range
+            let mut t_best = self.upper[enter];
+            let mut leave = usize::MAX;
+            let mut leave_to_upper = false;
+            for i in 0..self.m {
+                let delta = -sigma * self.w[i]; // d x_B[i] / dt
+                if delta < -TOL {
+                    let ratio = self.xb[i] / -delta; // hits lower bound 0
+                    if ratio < t_best - TOL
+                        || (ratio < t_best + TOL
+                            && leave != usize::MAX
+                            && self.basis[i] < self.basis[leave])
+                    {
+                        t_best = ratio;
+                        leave = i;
+                        leave_to_upper = false;
+                    }
+                } else if delta > TOL {
+                    let ub = self.upper[self.basis[i]];
+                    if ub.is_finite() {
+                        let ratio = (ub - self.xb[i]) / delta; // hits upper
+                        if ratio < t_best - TOL
+                            || (ratio < t_best + TOL
+                                && leave != usize::MAX
+                                && self.basis[i] < self.basis[leave])
+                        {
+                            t_best = ratio;
+                            leave = i;
+                            leave_to_upper = true;
+                        }
+                    }
+                }
+            }
+            if t_best.is_infinite() {
+                return Err(SimplexError::Unbounded);
+            }
+            let t = t_best.max(0.0);
+            if leave == usize::MAX {
+                // bound flip: the entering variable crosses to its other
+                // bound without any basis change — O(m) and pivot-free
+                for i in 0..self.m {
+                    self.xb[i] -= sigma * t * self.w[i];
+                }
+                self.state[enter] = if enter_from_upper {
+                    VarState::AtLower
+                } else {
+                    VarState::AtUpper
+                };
+                self.iterations += 1;
+                continue;
+            }
+            self.apply_pivot(enter, enter_from_upper, leave, leave_to_upper, t)?;
+        }
+    }
+
+    /// Bounded-variable dual simplex: restore `0 ≤ x_B ≤ u_B` while keeping
+    /// dual feasibility. The warm-start repair path.
+    pub(crate) fn dual_iterate(&mut self) -> Result<(), SimplexError> {
+        let cost = self.cost.clone();
+        let limit = 200 * (self.m + self.ncols) + 1000;
+        let mut steps = 0usize;
+        loop {
+            steps += 1;
+            if steps > limit {
+                return Err(SimplexError::IterLimit(limit));
+            }
+            if self.binv.due_for_refactor() {
+                self.refactor()?;
+            }
+            // ---- leaving row: largest bound violation ----
+            let mut leave = usize::MAX;
+            let mut worst = TOL;
+            let mut above = false;
+            for i in 0..self.m {
+                let viol_low = -self.xb[i];
+                if viol_low > worst {
+                    worst = viol_low;
+                    leave = i;
+                    above = false;
+                }
+                let ub = self.upper[self.basis[i]];
+                if ub.is_finite() {
+                    let viol_up = self.xb[i] - ub;
+                    if viol_up > worst {
+                        worst = viol_up;
+                        leave = i;
+                        above = true;
+                    }
+                }
+            }
+            if leave == usize::MAX {
+                return Ok(()); // primal feasible again
+            }
+            self.compute_y(&cost);
+            self.rho.copy_from_slice(self.binv.row(leave));
+            // `dir`: the sign x_B[leave] must move in (+1 = decrease needed
+            // is encoded through the eligibility signs below)
+            let dir = if above { 1.0 } else { -1.0 };
+            // ---- dual ratio test ----
+            let mut enter = usize::MAX;
+            let mut enter_from_upper = false;
+            let mut enter_alpha = 0.0;
+            let mut best_ratio = f64::INFINITY;
+            for j in 0..self.ncols {
+                if self.state[j] == VarState::Basic || self.fixed(j) {
+                    continue;
+                }
+                let alpha = self.csc.col_dot(j, &self.rho);
+                let abar = dir * alpha;
+                match self.state[j] {
+                    VarState::AtLower if abar > TOL => {
+                        let d = (cost[j] - self.csc.col_dot(j, &self.y)).max(0.0);
+                        let ratio = d / abar;
+                        // strict improvement only: within the tolerance
+                        // band the first (smallest) index wins, which is
+                        // the deterministic tie-break we want
+                        if ratio < best_ratio - TOL {
+                            best_ratio = ratio;
+                            enter = j;
+                            enter_from_upper = false;
+                            enter_alpha = alpha;
+                        }
+                    }
+                    VarState::AtUpper if abar < -TOL => {
+                        let d = (cost[j] - self.csc.col_dot(j, &self.y)).min(0.0);
+                        let ratio = d / abar; // ≤0 / <0 → ≥ 0
+                        if ratio < best_ratio - TOL {
+                            best_ratio = ratio;
+                            enter = j;
+                            enter_from_upper = true;
+                            enter_alpha = alpha;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if enter == usize::MAX {
+                // dual unbounded ⇒ primal infeasible for this rhs/bounds
+                return Err(SimplexError::Infeasible(worst));
+            }
+            // step length: x_B[leave] lands exactly on its violated bound
+            let target = if above { self.upper[self.basis[leave]] } else { 0.0 };
+            let t = if enter_from_upper {
+                (target - self.xb[leave]) / enter_alpha
+            } else {
+                (self.xb[leave] - target) / enter_alpha
+            };
+            let t = t.max(0.0);
+            self.ftran_col(enter);
+            self.apply_pivot(enter, enter_from_upper, leave, above, t)?;
+        }
+    }
+
+    /// Drive basic artificials out of the basis after phase 1 (degenerate
+    /// pivots); rows whose artificial cannot leave are redundant and the
+    /// artificial stays basic pinned at 0 by its `[0,0]` bounds.
+    fn expel_artificials(&mut self) -> Result<(), SimplexError> {
+        for r in 0..self.m {
+            if self.basis[r] < self.art_base {
+                continue;
+            }
+            self.rho.copy_from_slice(self.binv.row(r));
+            let mut found = usize::MAX;
+            for j in 0..self.art_base {
+                // prefer columns free to move later (skip pinned ones)
+                if self.state[j] == VarState::Basic || self.fixed(j) {
+                    continue;
+                }
+                if self.csc.col_dot(j, &self.rho).abs() > 1e-7 {
+                    found = j;
+                    break;
+                }
+            }
+            if found == usize::MAX {
+                continue; // redundant row
+            }
+            let from_upper = self.state[found] == VarState::AtUpper;
+            self.ftran_col(found);
+            // xb[r] ≈ 0 after a successful phase 1, so this is a degenerate
+            // (t = 0) basis change
+            self.apply_pivot(found, from_upper, r, false, 0.0)?;
+        }
+        Ok(())
+    }
+
+    /// Two-phase solve from the current (initial) basis.
+    pub fn solve(&mut self) -> Result<Solution, SimplexError> {
+        if !self.phase1_done {
+            let any_artificial_basic = self.basis.iter().any(|&j| j >= self.art_base);
+            if any_artificial_basic {
+                let p1_cost: Vec<f64> = (0..self.ncols)
+                    .map(|j| if j >= self.art_base { 1.0 } else { 0.0 })
+                    .collect();
+                self.primal_iterate(&p1_cost)?;
+                let infeas: f64 = (0..self.m)
+                    .filter(|&i| self.basis[i] >= self.art_base)
+                    .map(|i| self.xb[i].max(0.0))
+                    .sum();
+                if infeas > 1e-7 {
+                    return Err(SimplexError::Infeasible(infeas));
+                }
+                // block artificials permanently and snap stragglers to 0
+                for j in self.art_base..self.ncols {
+                    self.upper[j] = 0.0;
+                    if self.state[j] == VarState::AtUpper {
+                        self.state[j] = VarState::AtLower;
+                    }
+                }
+                for i in 0..self.m {
+                    if self.basis[i] >= self.art_base {
+                        self.xb[i] = 0.0;
+                    }
+                }
+                self.expel_artificials()?;
+            }
+            self.phase1_done = true;
+        }
+        let cost = self.cost.clone();
+        self.primal_iterate(&cost)?;
+        Ok(self.extract())
+    }
+
+    /// Warm re-solve after [`Self::update_rhs`] / [`Self::update_upper`]
+    /// edits: refresh `x_B` against the stored basis, dual-simplex the bound
+    /// violations away, then run a primal cleanup pass. The cleanup matters
+    /// because *bound* edits can silently break dual feasibility even
+    /// though reduced costs only depend on the basis: un-fixing a variable
+    /// whose `u = 0` previously excluded it from pricing (its reduced cost
+    /// carries no sign guarantee), or dropping an upper bound to infinity
+    /// (the variable falls to its lower bound where `d ≥ 0` is required).
+    /// The primal pass prices every column once and exits immediately when
+    /// the dual repair already reached the optimum — the common case.
+    /// Requires a completed prior [`Self::solve`].
+    pub fn warm_resolve(&mut self) -> Result<Solution, SimplexError> {
+        debug_assert!(self.phase1_done, "warm_resolve before any cold solve");
+        self.recompute_xb();
+        self.dual_iterate()?;
+        let cost = self.cost.clone();
+        self.primal_iterate(&cost)?;
+        Ok(self.extract())
+    }
+
+    /// Current solution restricted to the structural variables.
+    pub(crate) fn extract(&self) -> Solution {
+        let mut x = vec![0.0; self.n_orig];
+        for j in 0..self.n_orig {
+            if self.state[j] == VarState::AtUpper {
+                let u = self.upper[j];
+                if u.is_finite() {
+                    x[j] = u;
+                }
+            }
+        }
+        for i in 0..self.m {
+            let bj = self.basis[i];
+            if bj < self.n_orig {
+                x[bj] = self.xb[i].max(0.0);
+            }
+        }
+        let objective = self.cost[..self.n_orig].iter().zip(&x).map(|(c, v)| c * v).sum();
+        Solution { x, objective, iterations: self.iterations }
+    }
+}
+
+/// One-shot convenience: build + solve with the revised simplex.
+pub fn solve(p: &LpProblem) -> Result<Solution, SimplexError> {
+    RevisedSolver::new(p).solve()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::problem::Relation::*;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn trivial_bounded_min() {
+        // min -x0 s.t. x0 <= 4 (as a row) -> x0 = 4
+        let mut p = LpProblem::new(1);
+        p.set_objective(0, -1.0);
+        p.add(vec![(0, 1.0)], Le, 4.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 4.0);
+        assert_close(s.objective, -4.0);
+    }
+
+    #[test]
+    fn variable_bound_replaces_row() {
+        // same optimum expressed as a variable bound, zero constraint rows
+        // beyond a dummy (m = 0 LPs are legal but trivial): bound-tight optimum
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, -1.0);
+        p.set_objective(1, -1.0);
+        p.set_upper(0, 4.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Le, 6.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.objective, -6.0);
+        assert!(p.is_feasible(&s.x, 1e-7));
+    }
+
+    #[test]
+    fn classic_two_var() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 -> (2,6), 36
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, -3.0);
+        p.set_objective(1, -5.0);
+        p.add(vec![(0, 1.0)], Le, 4.0);
+        p.add(vec![(1, 2.0)], Le, 12.0);
+        p.add(vec![(0, 3.0), (1, 2.0)], Le, 18.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 2.0);
+        assert_close(s.x[1], 6.0);
+        assert_close(s.objective, -36.0);
+    }
+
+    #[test]
+    fn classic_two_var_with_bounds_instead_of_rows() {
+        // x<=4 and y<=6 as bounds; 3x+2y<=18 stays a row
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, -3.0);
+        p.set_objective(1, -5.0);
+        p.set_upper(0, 4.0);
+        p.set_upper(1, 6.0);
+        p.add(vec![(0, 3.0), (1, 2.0)], Le, 18.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 2.0);
+        assert_close(s.x[1], 6.0);
+        assert_close(s.objective, -36.0);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x+2y s.t. x + y = 10, x - y = 2 -> x=6, y=4, obj 14
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, 1.0);
+        p.set_objective(1, 2.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Eq, 10.0);
+        p.add(vec![(0, 1.0), (1, -1.0)], Eq, 2.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 6.0);
+        assert_close(s.x[1], 4.0);
+        assert_close(s.objective, 14.0);
+    }
+
+    #[test]
+    fn ge_constraints_and_negative_rhs() {
+        let mut p = LpProblem::new(1);
+        p.set_objective(0, 1.0);
+        p.add(vec![(0, 1.0)], Ge, 3.0);
+        p.add(vec![(0, -1.0)], Le, -3.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 3.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut p = LpProblem::new(1);
+        p.add(vec![(0, 1.0)], Le, 1.0);
+        p.add(vec![(0, 1.0)], Ge, 2.0);
+        assert!(matches!(solve(&p), Err(SimplexError::Infeasible(_))));
+    }
+
+    #[test]
+    fn bound_makes_row_infeasible() {
+        // x >= 2 but x <= 1 via bound
+        let mut p = LpProblem::new(1);
+        p.set_upper(0, 1.0);
+        p.add(vec![(0, 1.0)], Ge, 2.0);
+        assert!(matches!(solve(&p), Err(SimplexError::Infeasible(_))));
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        let mut p = LpProblem::new(1);
+        p.set_objective(0, -1.0);
+        p.add(vec![(0, -1.0)], Le, 0.0);
+        assert_eq!(solve(&p).unwrap_err(), SimplexError::Unbounded);
+    }
+
+    #[test]
+    fn bound_tames_unbounded_direction() {
+        // same ray, but a variable bound caps it
+        let mut p = LpProblem::new(1);
+        p.set_objective(0, -1.0);
+        p.set_upper(0, 7.5);
+        p.add(vec![(0, -1.0)], Le, 0.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 7.5);
+        assert_close(s.objective, -7.5);
+    }
+
+    #[test]
+    fn degenerate_zero_bound_fixes_variable() {
+        // u = 0 pins x0; optimum must route through x1
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, -5.0);
+        p.set_objective(1, -1.0);
+        p.set_upper(0, 0.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Le, 3.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.x[0], 0.0);
+        assert_close(s.x[1], 3.0);
+        assert_close(s.objective, -3.0);
+    }
+
+    #[test]
+    fn minimax_structure_like_lpp1() {
+        let mut p = LpProblem::new(5);
+        p.set_objective(4, 1.0);
+        p.add(vec![(0, 1.0), (2, 1.0), (4, -1.0)], Le, 0.0);
+        p.add(vec![(1, 1.0), (3, 1.0), (4, -1.0)], Le, 0.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Eq, 10.0);
+        p.add(vec![(2, 1.0), (3, 1.0)], Eq, 2.0);
+        let s = solve(&p).unwrap();
+        assert_close(s.objective, 6.0);
+        assert!(p.is_feasible(&s.x, 1e-7));
+    }
+
+    #[test]
+    fn warm_resolve_tracks_rhs_changes() {
+        let build = |l0: f64, l1: f64| {
+            let mut p = LpProblem::new(5);
+            p.set_objective(4, 1.0);
+            p.add(vec![(0, 1.0), (2, 1.0), (4, -1.0)], Le, 0.0);
+            p.add(vec![(1, 1.0), (3, 1.0), (4, -1.0)], Le, 0.0);
+            p.add(vec![(0, 1.0), (1, 1.0)], Eq, l0);
+            p.add(vec![(2, 1.0), (3, 1.0)], Eq, l1);
+            p
+        };
+        let mut s = RevisedSolver::new(&build(10.0, 2.0));
+        let s0 = s.solve().unwrap();
+        assert_close(s0.objective, 6.0);
+        for (l0, l1) in [(4.0, 4.0), (20.0, 0.0), (1.0, 7.0), (100.0, 50.0)] {
+            s.update_rhs(2, l0);
+            s.update_rhs(3, l1);
+            let sw = s.warm_resolve().unwrap();
+            let sc = solve(&build(l0, l1)).unwrap();
+            assert!(
+                (sw.objective - sc.objective).abs() < 1e-6,
+                "loads ({l0},{l1}): warm {} cold {}",
+                sw.objective,
+                sc.objective
+            );
+        }
+    }
+
+    #[test]
+    fn warm_resolve_tracks_bound_changes() {
+        // min -x0-x1 s.t. x0+x1 <= 10, x0 <= u (bound, updated warm)
+        let mut p = LpProblem::new(2);
+        p.set_objective(0, -2.0);
+        p.set_objective(1, -1.0);
+        p.set_upper(0, 3.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Le, 10.0);
+        let mut s = RevisedSolver::new(&p);
+        let s0 = s.solve().unwrap();
+        assert_close(s0.objective, -13.0); // x0=3, x1=7
+        for u in [0.0, 5.0, 8.0, 2.0, 10.0, 12.0] {
+            s.update_upper(0, u);
+            let sw = s.warm_resolve().unwrap();
+            let expect = -(u.min(10.0) * 2.0 + (10.0 - u.min(10.0)));
+            assert!(
+                (sw.objective - expect).abs() < 1e-6,
+                "u={u}: warm {} expect {expect}",
+                sw.objective
+            );
+        }
+    }
+
+    #[test]
+    fn solution_is_feasible_random_problems() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(123);
+        for case in 0..60 {
+            let n = 2 + (case % 4);
+            let m = 1 + (case % 5);
+            let mut p = LpProblem::new(n);
+            for j in 0..n {
+                p.set_objective(j, rng.f64() * 2.0 - 0.5);
+            }
+            // sprinkle finite bounds on some variables
+            for j in 0..n {
+                if rng.f64() < 0.4 {
+                    p.set_upper(j, rng.f64() * 3.0);
+                }
+            }
+            for _ in 0..m {
+                let terms: Vec<(usize, f64)> = (0..n).map(|j| (j, rng.f64())).collect();
+                p.add(terms, Le, 1.0 + rng.f64() * 5.0);
+            }
+            match solve(&p) {
+                Ok(s) => {
+                    assert!(p.is_feasible(&s.x, 1e-6), "case {case}: {:?}", s.x);
+                    for _ in 0..20 {
+                        let cand: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0).collect();
+                        if p.is_feasible(&cand, 0.0) {
+                            assert!(
+                                s.objective <= p.objective_at(&cand) + 1e-6,
+                                "case {case}: {} > {}",
+                                s.objective,
+                                p.objective_at(&cand)
+                            );
+                        }
+                    }
+                }
+                Err(SimplexError::Unbounded) => {}
+                Err(e) => panic!("case {case}: {e}"),
+            }
+        }
+    }
+}

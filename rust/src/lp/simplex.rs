@@ -19,6 +19,8 @@ pub enum SimplexError {
     Unbounded,
     #[error("iteration limit {0} exceeded (cycling?)")]
     IterLimit(usize),
+    #[error("numerical breakdown: {0}")]
+    Numerical(&'static str),
 }
 
 /// Optimal solution to an [`LpProblem`].
@@ -63,7 +65,17 @@ pub struct Solver {
 
 impl Solver {
     /// Build the standard-form tableau from a problem.
+    ///
+    /// The tableau has no native notion of variable bounds, so finite upper
+    /// bounds are first lowered into explicit `≤` rows (appended after the
+    /// real rows; see [`super::bounds::expand_to_rows`]). The revised
+    /// simplex handles the same bounds implicitly — the differential tests
+    /// pin the two backends to identical optima.
     pub fn new(p: &LpProblem) -> Self {
+        if p.has_finite_upper() {
+            let (expanded, _) = super::bounds::expand_to_rows(p);
+            return Self::new(&expanded);
+        }
         let m = p.constraints.len();
         let n = p.num_vars;
 

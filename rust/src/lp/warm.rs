@@ -1,18 +1,50 @@
 //! Warm-started LP re-solve (the paper's §5.1 optimization).
 //!
-//! Across micro-batches the LPP-1 constraint *matrix* is fixed by the expert
-//! placement; only the rhs (`load_e`, and trivially the `≤ t` rows' zeros)
-//! changes. The optimal basis of micro-batch *k* therefore stays
-//! dual-feasible for micro-batch *k+1*, and a handful of dual-simplex pivots
-//! restore primal feasibility — orders of magnitude cheaper than a cold
-//! two-phase solve (measured in Fig. 11's "warm solving" ablation).
+//! Across micro-batches the LPP-1/LPP-4 constraint *matrix* is fixed by the
+//! expert placement; only the rhs (`load_e`) and the variable bounds
+//! (`input_e^g` caps, which the revised backend keeps out of the rows
+//! entirely) change. The optimal basis of micro-batch *k* therefore stays
+//! dual-feasible for micro-batch *k+1*, and a handful of dual-simplex
+//! pivots restore primal feasibility — orders of magnitude cheaper than a
+//! cold two-phase solve (Fig. 11's "warm solving" ablation).
+//!
+//! [`WarmSolver`] hides the backend choice: [`SolverKind::Revised`] (the
+//! default hot path) or [`SolverKind::DenseTableau`] (kept for the
+//! `ablation_solvers` bench and differential testing). Any warm-path
+//! failure — including a dual-simplex `Infeasible`, which can be a
+//! numerical artifact of a stale basis — falls back to a cold re-solve
+//! rather than poisoning or dropping the retained state.
 
+use super::bounds;
 use super::problem::LpProblem;
+use super::revised::RevisedSolver;
 use super::simplex::{SimplexError, Solution, Solver};
+
+/// Which simplex implementation backs a [`WarmSolver`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Bounded-variable revised simplex (sparse columns, explicit B⁻¹,
+    /// implicit bounds) — the production path.
+    #[default]
+    Revised,
+    /// Dense full-tableau two-phase simplex; bounds are expanded into rows.
+    /// Retained as the ablation baseline.
+    DenseTableau,
+}
+
+enum Backend {
+    Revised(Option<RevisedSolver>),
+    Dense {
+        solver: Option<Solver>,
+        /// bound-expanded clone of the problem + per-variable bound-row map
+        expanded: LpProblem,
+        bound_row: Vec<Option<usize>>,
+    },
+}
 
 /// A solver that remembers its optimal basis between solves.
 pub struct WarmSolver {
-    solver: Option<Solver>,
+    backend: Backend,
     problem: LpProblem,
     /// Pivots spent on the most recent solve (cold or warm).
     pub last_iterations: usize,
@@ -22,21 +54,52 @@ pub struct WarmSolver {
 
 impl WarmSolver {
     pub fn new(problem: LpProblem) -> Self {
-        WarmSolver { solver: None, problem, last_iterations: 0, last_was_warm: false }
+        Self::with_kind(problem, SolverKind::Revised)
+    }
+
+    pub fn with_kind(problem: LpProblem, kind: SolverKind) -> Self {
+        let backend = match kind {
+            SolverKind::Revised => Backend::Revised(None),
+            SolverKind::DenseTableau => {
+                let (expanded, bound_row) = bounds::expand_to_rows(&problem);
+                Backend::Dense { solver: None, expanded, bound_row }
+            }
+        };
+        WarmSolver { backend, problem, last_iterations: 0, last_was_warm: false }
+    }
+
+    pub fn kind(&self) -> SolverKind {
+        match self.backend {
+            Backend::Revised(_) => SolverKind::Revised,
+            Backend::Dense { .. } => SolverKind::DenseTableau,
+        }
     }
 
     pub fn problem(&self) -> &LpProblem {
         &self.problem
     }
 
-    /// Solve from scratch (two-phase primal).
+    /// Solve from scratch (two-phase primal), replacing any retained basis.
     pub fn solve_cold(&mut self) -> Result<Solution, SimplexError> {
-        let mut s = Solver::new(&self.problem);
-        let sol = s.solve()?;
-        self.last_iterations = s.iterations;
         self.last_was_warm = false;
-        self.solver = Some(s);
-        Ok(sol)
+        match &mut self.backend {
+            Backend::Revised(slot) => {
+                *slot = None;
+                let mut s = RevisedSolver::new(&self.problem);
+                let sol = s.solve()?;
+                self.last_iterations = s.iterations;
+                *slot = Some(s);
+                Ok(sol)
+            }
+            Backend::Dense { solver, expanded, .. } => {
+                *solver = None;
+                let mut s = Solver::new(expanded);
+                let sol = s.solve()?;
+                self.last_iterations = s.iterations;
+                *solver = Some(s);
+                Ok(sol)
+            }
+        }
     }
 
     /// Apply rhs updates then solve, warm when allowed and possible.
@@ -45,69 +108,138 @@ impl WarmSolver {
         updates: &[(usize, f64)],
         use_warm: bool,
     ) -> Result<Solution, SimplexError> {
+        self.solve_with_bounds(updates, &[], use_warm)
+    }
+
+    /// Apply rhs *and* variable-bound updates then solve. Bound updates are
+    /// (variable index, new upper bound) pairs — the revised backend edits
+    /// the bound directly; the dense backend rewrites the rhs of the
+    /// synthetic bound row.
+    pub fn solve_with_bounds(
+        &mut self,
+        rhs_updates: &[(usize, f64)],
+        bound_updates: &[(usize, f64)],
+        use_warm: bool,
+    ) -> Result<Solution, SimplexError> {
         if use_warm {
-            self.resolve(updates)
+            self.resolve_with_bounds(rhs_updates, bound_updates)
         } else {
-            for &(row, rhs) in updates {
-                self.problem.set_rhs(row, rhs);
-            }
+            self.apply_updates(rhs_updates, bound_updates);
             self.solve_cold()
         }
     }
 
-    /// Re-solve after changing some rhs values. `updates` are
-    /// (constraint row index, new rhs) pairs in the original row order.
-    /// Falls back to a cold solve if no prior basis exists or the dual
-    /// simplex stalls.
+    /// Re-solve after changing some rhs values (original row order).
     pub fn resolve(&mut self, updates: &[(usize, f64)]) -> Result<Solution, SimplexError> {
-        for &(row, rhs) in updates {
+        self.resolve_with_bounds(updates, &[])
+    }
+
+    fn apply_updates(&mut self, rhs_updates: &[(usize, f64)], bound_updates: &[(usize, f64)]) {
+        for &(row, rhs) in rhs_updates {
             self.problem.set_rhs(row, rhs);
         }
-        let Some(mut s) = self.solver.take() else {
-            return self.solve_cold();
+        for &(var, ub) in bound_updates {
+            self.problem.set_upper(var, ub);
+        }
+        if let Backend::Dense { solver, expanded, bound_row } = &mut self.backend {
+            // The row expansion is shaped by which bounds were finite at
+            // build time. A bound appearing on a variable that had none (or
+            // one going infinite, which no `≤` row can express) changes
+            // that shape: rebuild the expansion from the updated problem
+            // and drop the retained basis so the next solve starts cold.
+            let reshaped = bound_updates.iter().any(|&(var, ub)| {
+                bound_row[var].is_none() || !ub.is_finite()
+            });
+            if reshaped {
+                let (e2, b2) = bounds::expand_to_rows(&self.problem);
+                *expanded = e2;
+                *bound_row = b2;
+                *solver = None;
+                return;
+            }
+            for &(row, rhs) in rhs_updates {
+                expanded.set_rhs(row, rhs);
+            }
+            for &(var, ub) in bound_updates {
+                let row = bound_row[var].expect("reshape handled above");
+                expanded.set_rhs(row, ub);
+            }
+        }
+    }
+
+    /// Re-solve after rhs/bound updates, reusing the retained basis when
+    /// one exists. Falls back to a cold solve when no basis is retained or
+    /// the dual simplex fails for any reason (including `Infeasible`, which
+    /// a stale basis can report spuriously — the cold solve is the
+    /// authority on true infeasibility).
+    pub fn resolve_with_bounds(
+        &mut self,
+        rhs_updates: &[(usize, f64)],
+        bound_updates: &[(usize, f64)],
+    ) -> Result<Solution, SimplexError> {
+        self.apply_updates(rhs_updates, bound_updates);
+        match self.try_warm(rhs_updates, bound_updates) {
+            Some(Ok(sol)) => Ok(sol),
+            // no retained basis, or the warm dual stalled/erred: cold
+            Some(Err(_)) | None => self.solve_cold(),
+        }
+    }
+
+    /// Attempt the warm dual re-solve; `None` when no basis is retained.
+    fn try_warm(
+        &mut self,
+        rhs_updates: &[(usize, f64)],
+        bound_updates: &[(usize, f64)],
+    ) -> Option<Result<Solution, SimplexError>> {
+        let (result, iterations) = match &mut self.backend {
+            Backend::Revised(slot) => {
+                let s = slot.as_mut()?;
+                let before = s.iterations;
+                for &(row, rhs) in rhs_updates {
+                    s.update_rhs(row, rhs);
+                }
+                for &(var, ub) in bound_updates {
+                    s.update_upper(var, ub);
+                }
+                let r = s.warm_resolve();
+                let spent = s.iterations - before;
+                (r, spent)
+            }
+            Backend::Dense { solver, expanded, .. } => {
+                let s = solver.as_mut()?;
+                let before = s.iterations;
+                // Refresh rhs column: new_rhs = B⁻¹ b_new, where column k of
+                // B⁻¹ is the tableau column that initially held row k's
+                // identity.
+                let m = s.m;
+                let ncols = s.ncols;
+                let stride = ncols + 1;
+                let b_new: Vec<f64> = (0..m)
+                    .map(|k| s.row_sign[k] * expanded.constraints[k].rhs)
+                    .collect();
+                let mut fresh = vec![0.0; m];
+                for (k, &bk) in b_new.iter().enumerate() {
+                    if bk == 0.0 {
+                        continue;
+                    }
+                    let col = s.idcol[k];
+                    for (i, f) in fresh.iter_mut().enumerate() {
+                        *f += s.tab[i * stride + col] * bk;
+                    }
+                }
+                for (i, f) in fresh.iter().enumerate() {
+                    s.tab[i * stride + ncols] = *f;
+                }
+                let r = s.dual_iterate().map(|()| s.extract());
+                let spent = s.iterations - before;
+                (r, spent)
+            }
         };
-        let before = s.iterations;
-
-        // Refresh rhs column: new_rhs = B^-1 b_new, where column k of B^-1
-        // is the current tableau column that initially held row k's identity.
-        let m = s.m;
-        let ncols = s.ncols;
-        let stride = ncols + 1;
-        let b_new: Vec<f64> = (0..m)
-            .map(|k| s.row_sign[k] * self.problem.constraints[k].rhs)
-            .collect();
-        let mut fresh = vec![0.0; m];
-        for k in 0..m {
-            let bk = b_new[k];
-            if bk == 0.0 {
-                continue;
-            }
-            let col = s.idcol[k];
-            for (i, f) in fresh.iter_mut().enumerate() {
-                *f += s.tab[i * stride + col] * bk;
-            }
+        if result.is_ok() {
+            self.last_iterations = iterations;
+            self.last_was_warm = true;
         }
-        for (i, f) in fresh.iter().enumerate() {
-            s.tab[i * stride + ncols] = *f;
-        }
-
-        match s.dual_iterate() {
-            Ok(()) => {
-                let sol = s.extract();
-                self.last_iterations = s.iterations - before;
-                self.last_was_warm = true;
-                self.solver = Some(s);
-                Ok(sol)
-            }
-            Err(SimplexError::Infeasible(v)) => {
-                self.last_was_warm = true;
-                Err(SimplexError::Infeasible(v))
-            }
-            Err(_) => {
-                // numerical trouble: rebuild cold
-                self.solve_cold()
-            }
-        }
+        Some(result)
     }
 }
 
@@ -128,38 +260,101 @@ mod tests {
         p
     }
 
+    fn both_kinds() -> [SolverKind; 2] {
+        [SolverKind::Revised, SolverKind::DenseTableau]
+    }
+
     #[test]
     fn warm_matches_cold_across_rhs_changes() {
-        let mut warm = WarmSolver::new(lpp1_toy(10.0, 2.0));
-        let s0 = warm.solve_cold().unwrap();
-        assert!((s0.objective - 6.0).abs() < 1e-7);
+        for kind in both_kinds() {
+            let mut warm = WarmSolver::with_kind(lpp1_toy(10.0, 2.0), kind);
+            let s0 = warm.solve_cold().unwrap();
+            assert!((s0.objective - 6.0).abs() < 1e-7, "{kind:?}");
 
-        for (l0, l1) in [(4.0, 4.0), (20.0, 0.0), (1.0, 7.0), (100.0, 50.0)] {
-            let sw = warm.resolve(&[(2, l0), (3, l1)]).unwrap();
-            let sc = crate::lp::simplex::solve(&lpp1_toy(l0, l1)).unwrap();
-            assert!(
-                (sw.objective - sc.objective).abs() < 1e-6,
-                "loads ({l0},{l1}): warm {} cold {}",
-                sw.objective,
-                sc.objective
-            );
-            assert!(warm.problem().is_feasible(&sw.x, 1e-6));
+            for (l0, l1) in [(4.0, 4.0), (20.0, 0.0), (1.0, 7.0), (100.0, 50.0)] {
+                let sw = warm.resolve(&[(2, l0), (3, l1)]).unwrap();
+                let sc = crate::lp::simplex::solve(&lpp1_toy(l0, l1)).unwrap();
+                assert!(
+                    (sw.objective - sc.objective).abs() < 1e-6,
+                    "{kind:?} loads ({l0},{l1}): warm {} cold {}",
+                    sw.objective,
+                    sc.objective
+                );
+                assert!(warm.problem().is_feasible(&sw.x, 1e-6));
+            }
         }
     }
 
     #[test]
     fn warm_uses_fewer_pivots() {
-        let mut warm = WarmSolver::new(lpp1_toy(10.0, 2.0));
-        warm.solve_cold().unwrap();
-        let cold_iters = warm.last_iterations;
-        warm.resolve(&[(2, 11.0), (3, 3.0)]).unwrap();
-        assert!(warm.last_was_warm);
-        assert!(
-            warm.last_iterations <= cold_iters,
-            "warm {} > cold {}",
-            warm.last_iterations,
-            cold_iters
-        );
+        for kind in both_kinds() {
+            let mut warm = WarmSolver::with_kind(lpp1_toy(10.0, 2.0), kind);
+            warm.solve_cold().unwrap();
+            let cold_iters = warm.last_iterations;
+            warm.resolve(&[(2, 11.0), (3, 3.0)]).unwrap();
+            assert!(warm.last_was_warm, "{kind:?}");
+            assert!(
+                warm.last_iterations <= cold_iters,
+                "{kind:?}: warm {} > cold {}",
+                warm.last_iterations,
+                cold_iters
+            );
+        }
+    }
+
+    #[test]
+    fn warm_bound_updates_match_cold() {
+        // LPP-4 shape in miniature: l-vars capped by per-batch inputs,
+        // expressed as variable bounds and updated warm.
+        let build = |cap0: f64, cap1: f64| {
+            // min -l0 - l1 s.t. l0 + l1 <= 8, l0 <= cap0, l1 <= cap1
+            let mut p = LpProblem::new(2);
+            p.set_objective(0, -1.0);
+            p.set_objective(1, -1.0);
+            p.set_upper(0, cap0);
+            p.set_upper(1, cap1);
+            p.add(vec![(0, 1.0), (1, 1.0)], Le, 8.0);
+            p
+        };
+        for kind in both_kinds() {
+            let mut warm = WarmSolver::with_kind(build(3.0, 3.0), kind);
+            let s0 = warm.solve_cold().unwrap();
+            assert!((s0.objective + 6.0).abs() < 1e-7, "{kind:?}");
+            for (c0, c1) in [(5.0, 5.0), (0.0, 2.0), (8.0, 8.0), (1.0, 0.0)] {
+                let sw = warm.resolve_with_bounds(&[], &[(0, c0), (1, c1)]).unwrap();
+                let sc_obj = -(c0 + c1).min(8.0);
+                assert!(
+                    (sw.objective - sc_obj).abs() < 1e-6,
+                    "{kind:?} caps ({c0},{c1}): warm {} expect {sc_obj}",
+                    sw.objective
+                );
+                assert!(warm.problem().is_feasible(&sw.x, 1e-6), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_resolve_recovers_to_cold_afterwards() {
+        // Satellite fix: an infeasible warm resolve must not poison the
+        // retained state — the next feasible resolve should still succeed
+        // (and warm solves must resume once state is rebuilt).
+        for kind in both_kinds() {
+            // x0 >= lo (Ge row), x0 <= 5 (bound). lo > 5 is infeasible.
+            let mut p = LpProblem::new(1);
+            p.set_objective(0, 1.0);
+            p.set_upper(0, 5.0);
+            p.add(vec![(0, 1.0)], Ge, 1.0);
+            let mut warm = WarmSolver::with_kind(p, kind);
+            warm.solve_cold().unwrap();
+            let err = warm.resolve(&[(0, 7.0)]).unwrap_err();
+            assert!(matches!(err, SimplexError::Infeasible(_)), "{kind:?}: {err}");
+            // back to feasible: must solve, then warm again on the next call
+            let s = warm.resolve(&[(0, 4.0)]).unwrap();
+            assert!((s.objective - 4.0).abs() < 1e-7, "{kind:?}");
+            let s2 = warm.resolve(&[(0, 2.0)]).unwrap();
+            assert!((s2.objective - 2.0).abs() < 1e-7, "{kind:?}");
+            assert!(warm.last_was_warm, "{kind:?}: warm path not restored");
+        }
     }
 
     #[test]
@@ -201,28 +396,33 @@ mod tests {
             p
         };
         let loads0: Vec<f64> = (0..e).map(|_| rng.below(100) as f64).collect();
-        let mut warm = WarmSolver::new(build(&loads0));
-        warm.solve_cold().unwrap();
-        for round in 0..30 {
-            let loads: Vec<f64> = (0..e).map(|_| rng.below(100) as f64).collect();
-            let updates: Vec<(usize, f64)> =
-                loads.iter().enumerate().map(|(ei, &l)| (g + ei, l)).collect();
-            let sw = warm.resolve(&updates).unwrap();
-            let sc = crate::lp::simplex::solve(&build(&loads)).unwrap();
-            assert!(
-                (sw.objective - sc.objective).abs() < 1e-5,
-                "round {round}: warm {} cold {}",
-                sw.objective,
-                sc.objective
-            );
+        for kind in both_kinds() {
+            let mut warm = WarmSolver::with_kind(build(&loads0), kind);
+            warm.solve_cold().unwrap();
+            let mut rng2 = rng.fork(kind as u64);
+            for round in 0..30 {
+                let loads: Vec<f64> = (0..e).map(|_| rng2.below(100) as f64).collect();
+                let updates: Vec<(usize, f64)> =
+                    loads.iter().enumerate().map(|(ei, &l)| (g + ei, l)).collect();
+                let sw = warm.resolve(&updates).unwrap();
+                let sc = crate::lp::simplex::solve(&build(&loads)).unwrap();
+                assert!(
+                    (sw.objective - sc.objective).abs() < 1e-5,
+                    "{kind:?} round {round}: warm {} cold {}",
+                    sw.objective,
+                    sc.objective
+                );
+            }
         }
     }
 
     #[test]
     fn resolve_without_prior_solve_falls_back_to_cold() {
-        let mut warm = WarmSolver::new(lpp1_toy(10.0, 2.0));
-        let s = warm.resolve(&[(2, 8.0)]).unwrap();
-        assert!((s.objective - 5.0).abs() < 1e-7);
-        assert!(!warm.last_was_warm);
+        for kind in both_kinds() {
+            let mut warm = WarmSolver::with_kind(lpp1_toy(10.0, 2.0), kind);
+            let s = warm.resolve(&[(2, 8.0)]).unwrap();
+            assert!((s.objective - 5.0).abs() < 1e-7, "{kind:?}");
+            assert!(!warm.last_was_warm, "{kind:?}");
+        }
     }
 }

@@ -1,6 +1,9 @@
 //! `micromoe` CLI: inspect artifacts, run the e2e trainer, calibrate the
 //! cluster model, or demo the scheduler. The figure regenerators live in
 //! `cargo bench` targets; the runnable scenarios in `examples/`.
+//!
+//! The `info` / `train` / `calibrate` commands execute AOT artifacts over
+//! PJRT and need the `xla` feature; without it they print how to enable it.
 
 use anyhow::Result;
 use micromoe::cli::Args;
@@ -28,6 +31,30 @@ fn main() -> Result<()> {
     }
 }
 
+#[cfg(not(feature = "xla"))]
+fn xla_required(cmd: &str) -> Result<()> {
+    anyhow::bail!(
+        "`{cmd}` executes AOT artifacts over PJRT and needs the `xla` feature: \
+         rebuild with `cargo build --features xla` (requires the image's xla bindings)"
+    )
+}
+
+#[cfg(not(feature = "xla"))]
+fn info(_args: &Args) -> Result<()> {
+    xla_required("info")
+}
+
+#[cfg(not(feature = "xla"))]
+fn train(_args: &Args) -> Result<()> {
+    xla_required("train")
+}
+
+#[cfg(not(feature = "xla"))]
+fn calibrate(_args: &Args) -> Result<()> {
+    xla_required("calibrate")
+}
+
+#[cfg(feature = "xla")]
 fn info(_args: &Args) -> Result<()> {
     let rt = micromoe::runtime::Runtime::load_default()?;
     println!("platform: {}", rt.platform());
@@ -39,6 +66,7 @@ fn info(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn train(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 64);
     let seed = args.u64_or("seed", 0);
@@ -55,6 +83,7 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn calibrate(_args: &Args) -> Result<()> {
     let mut rt = micromoe::runtime::Runtime::load_default()?;
     let (small, large) = micromoe::train::Trainer::calibrate(&mut rt)?;

@@ -3,8 +3,15 @@
 //! the stateful per-micro-batch solver with warm start.
 //!
 //! Variable/row layouts are fixed at construction (the placement determines
-//! the constraint matrix); each micro-batch only rewrites rhs entries —
-//! exactly the property that makes warm starting effective.
+//! the constraint matrix); each micro-batch only rewrites rhs entries and
+//! variable upper bounds — exactly the property that makes warm starting
+//! effective. The per-replica caps (`l_e^g ≤ input_e^g`, and the node
+//! aggregates `n_e^ν ≤ node_input_e^ν`) are emitted as *variable bounds*,
+//! not rows: the default revised-simplex backend enforces them implicitly,
+//! shrinking the row count `m` by ~`nx` (CommAware) / ~`2·nx` (TopoAware).
+//! The dense-tableau backend (kept for the `ablation_solvers` bench via
+//! [`crate::lp::SolverKind::DenseTableau`]) lowers the same bounds back
+//! into rows, so both backends solve identical problems.
 //!
 //! One deliberate deviation from the paper's Appendix A.1 formulas: the
 //! paper's `send_g` sums only over experts *resident* on g; physically a
@@ -31,12 +38,14 @@ pub struct MicroEpScheduler {
     var_of: Vec<Vec<usize>>,
     /// Eq-row index per expert (rhs = load_e)
     eq_row: Vec<usize>,
-    /// rows whose rhs is `input_e^g` (CommAware/TopoAware): (row, e, g)
-    input_cap_rows: Vec<(usize, usize, usize)>,
+    /// variables whose upper bound is `input_e^g` (CommAware/TopoAware):
+    /// (var, e, g)
+    input_cap_vars: Vec<(usize, usize, usize)>,
     /// rows whose rhs is `-total_input_g`: (row, g)
     send_rows: Vec<(usize, usize)>,
-    /// rows whose rhs is node-aggregated input `node_input_e^n`: (row, e, node)
-    node_cap_rows: Vec<(usize, usize, usize)>,
+    /// variables whose upper bound is node-aggregated input
+    /// `node_input_e^n`: (var, e, node)
+    node_cap_vars: Vec<(usize, usize, usize)>,
     /// rows whose rhs is `-total node input`: (row, node)
     node_send_rows: Vec<(usize, usize)>,
     /// per-GPU `Σx − t ≤ −base_g` rows (Compute mode): (row, gpu); rhs 0
@@ -44,6 +53,10 @@ pub struct MicroEpScheduler {
     gpu_rows: Vec<(usize, usize)>,
     /// transient rhs overrides installed by [`Self::schedule_with_base`]
     base_updates: Vec<(usize, f64)>,
+    /// whether a nonzero base rhs is (or may still be) installed in the
+    /// warm solver's `gpu_rows` — lets the common no-base path skip the
+    /// per-batch zero-reset of those rows entirely
+    gpu_rows_dirty: bool,
     warm: WarmSolver,
     solved_once: bool,
 }
@@ -58,17 +71,18 @@ impl MicroEpScheduler {
         MicroEpScheduler {
             placement,
             topo,
-            opts,
             var_of: b.var_of,
             eq_row: b.eq_row,
-            input_cap_rows: b.input_cap_rows,
+            input_cap_vars: b.input_cap_vars,
             send_rows: b.send_rows,
-            node_cap_rows: b.node_cap_rows,
+            node_cap_vars: b.node_cap_vars,
             node_send_rows: b.node_send_rows,
             gpu_rows: b.gpu_rows,
             base_updates: Vec::new(),
-            warm: WarmSolver::new(problem),
+            gpu_rows_dirty: false,
+            warm: WarmSolver::with_kind(problem, opts.solver),
             solved_once: false,
+            opts,
         }
     }
 
@@ -101,26 +115,35 @@ impl MicroEpScheduler {
         assert_eq!(loads.num_gpus, self.placement.num_gpus);
         let t0 = Instant::now();
 
-        // ---- rhs updates for this micro-batch ----
-        let mut updates: Vec<(usize, f64)> =
-            Vec::with_capacity(self.eq_row.len() + self.input_cap_rows.len() + self.send_rows.len());
-        // gpu rows: −base when pipelining, reset to 0 otherwise (the rhs
-        // persists inside the warm solver between calls)
-        if self.base_updates.is_empty() {
-            updates.extend(self.gpu_rows.iter().map(|&(row, _)| (row, 0.0)));
-        } else {
+        // ---- rhs + bound updates for this micro-batch ----
+        let mut updates: Vec<(usize, f64)> = Vec::with_capacity(
+            self.gpu_rows.len().max(self.base_updates.len())
+                + self.eq_row.len()
+                + self.send_rows.len()
+                + self.node_send_rows.len(),
+        );
+        let mut bound_updates: Vec<(usize, f64)> =
+            Vec::with_capacity(self.input_cap_vars.len() + self.node_cap_vars.len());
+        // gpu rows: −base when pipelining; reset to 0 only if a base was
+        // ever installed (the rhs persists inside the warm solver between
+        // calls, and starts at 0 — the common path skips the reset)
+        if !self.base_updates.is_empty() {
             updates.extend(self.base_updates.iter().copied());
+            self.gpu_rows_dirty = true;
+        } else if self.gpu_rows_dirty {
+            updates.extend(self.gpu_rows.iter().map(|&(row, _)| (row, 0.0)));
+            self.gpu_rows_dirty = false;
         }
         for e in 0..self.placement.num_experts {
             updates.push((self.eq_row[e], loads.expert_load(e) as f64));
         }
-        for &(row, e, g) in &self.input_cap_rows {
-            updates.push((row, loads.get(e, g) as f64));
+        for &(var, e, g) in &self.input_cap_vars {
+            bound_updates.push((var, loads.get(e, g) as f64));
         }
         for &(row, g) in &self.send_rows {
             updates.push((row, -(loads.gpu_input(g) as f64)));
         }
-        if !self.node_cap_rows.is_empty() || !self.node_send_rows.is_empty() {
+        if !self.node_cap_vars.is_empty() || !self.node_send_rows.is_empty() {
             let topo = self.topo.as_ref().unwrap();
             let nodes = self.placement.num_gpus.div_ceil(topo.gpus_per_node);
             // node-aggregated inputs per expert
@@ -133,8 +156,8 @@ impl MicroEpScheduler {
                 }
                 node_total[n] += loads.gpu_input(g);
             }
-            for &(row, e, n) in &self.node_cap_rows {
-                updates.push((row, node_in[e][n] as f64));
+            for &(var, e, n) in &self.node_cap_vars {
+                bound_updates.push((var, node_in[e][n] as f64));
             }
             for &(row, n) in &self.node_send_rows {
                 updates.push((row, -(node_total[n] as f64)));
@@ -143,7 +166,8 @@ impl MicroEpScheduler {
 
         // ---- solve ----
         let use_warm = self.opts.warm_start && self.solved_once;
-        let (frac, stats_lp) = match self.warm.solve_with(&updates, use_warm) {
+        let (frac, stats_lp) = match self.warm.solve_with_bounds(&updates, &bound_updates, use_warm)
+        {
             Ok(sol) => {
                 self.solved_once = true;
                 let frac: Vec<Vec<f64>> = self
@@ -151,7 +175,7 @@ impl MicroEpScheduler {
                     .iter()
                     .map(|vars| vars.iter().map(|&v| sol.x[v]).collect())
                     .collect();
-                ((frac), (self.warm.last_iterations, self.warm.last_was_warm, sol.objective))
+                (frac, (self.warm.last_iterations, self.warm.last_was_warm, sol.objective))
             }
             Err(e) => {
                 // Defensive fallback (should not happen: LPP 1/4 are always
@@ -200,9 +224,9 @@ impl MicroEpScheduler {
 struct Builder {
     var_of: Vec<Vec<usize>>,
     eq_row: Vec<usize>,
-    input_cap_rows: Vec<(usize, usize, usize)>,
+    input_cap_vars: Vec<(usize, usize, usize)>,
     send_rows: Vec<(usize, usize)>,
-    node_cap_rows: Vec<(usize, usize, usize)>,
+    node_cap_vars: Vec<(usize, usize, usize)>,
     node_send_rows: Vec<(usize, usize)>,
     gpu_rows: Vec<(usize, usize)>,
     problem: Option<LpProblem>,
@@ -233,9 +257,9 @@ impl Builder {
         let mut me = Builder {
             var_of,
             eq_row: Vec::new(),
-            input_cap_rows: Vec::new(),
+            input_cap_vars: Vec::new(),
             send_rows: Vec::new(),
-            node_cap_rows: Vec::new(),
+            node_cap_vars: Vec::new(),
             node_send_rows: Vec::new(),
             gpu_rows: Vec::new(),
             problem: None,
@@ -275,14 +299,15 @@ impl Builder {
                     terms.push((comp, -1.0));
                     lp.add(terms, Relation::Le, 0.0);
                 }
-                // l <= x ; l <= input (rhs updated)
+                // l <= x (row) ; l <= input (implicit variable bound,
+                // updated per micro-batch — never enters the row count)
                 for e in 0..e_count {
                     for (r, &g) in p.replicas[e].iter().enumerate() {
                         let xv = me.var_of[e][r];
                         let lv = nx + xv;
                         lp.add(vec![(lv, 1.0), (xv, -1.0)], Relation::Le, 0.0);
-                        let row = lp.add(vec![(lv, 1.0)], Relation::Le, 0.0);
-                        me.input_cap_rows.push((row, e, g));
+                        lp.set_upper(lv, 0.0);
+                        me.input_cap_vars.push((lv, e, g));
                     }
                 }
                 // send: total_input_g - Σ l_g <= comm  ->  -Σl - comm <= -total_g
@@ -332,10 +357,12 @@ impl Builder {
                         lp.add(vec![(lv, 1.0), (xv, -1.0)], Relation::Le, 0.0);
                         lp.add(vec![(lv, 1.0), (nv, -1.0)], Relation::Le, 0.0);
                         lp.add(vec![(nv, 1.0), (xv, -1.0)], Relation::Le, 0.0);
-                        let row = lp.add(vec![(lv, 1.0)], Relation::Le, 0.0);
-                        me.input_cap_rows.push((row, e, g));
-                        let row = lp.add(vec![(nv, 1.0)], Relation::Le, 0.0);
-                        me.node_cap_rows.push((row, e, topo.node_of(g)));
+                        // per-replica and node-aggregated input caps as
+                        // implicit variable bounds (~2·nx rows saved)
+                        lp.set_upper(lv, 0.0);
+                        me.input_cap_vars.push((lv, e, g));
+                        lp.set_upper(nv, 0.0);
+                        me.node_cap_vars.push((nv, e, topo.node_of(g)));
                     }
                 }
                 for g in 0..g_count {

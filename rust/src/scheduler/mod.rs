@@ -176,6 +176,9 @@ pub struct SchedulerOptions {
     /// prefer same-node replicas in the second routing pass (App. A.1);
     /// requires a topology
     pub topo_aware_routing: bool,
+    /// LP backend: bounded-variable revised simplex (default) or the dense
+    /// tableau (the `ablation_solvers` baseline)
+    pub solver: crate::lp::SolverKind,
 }
 
 impl Default for SchedulerOptions {
@@ -185,11 +188,48 @@ impl Default for SchedulerOptions {
             warm_start: true,
             locality_aware: true,
             topo_aware_routing: false,
+            solver: crate::lp::SolverKind::Revised,
         }
     }
 }
 
 pub use lpp::MicroEpScheduler;
+
+/// Schedule many *independent* micro-batch problems — one per MoE layer or
+/// per MicroEP group — concurrently with scoped threads.
+///
+/// Each [`MicroEpScheduler`] owns its warm-start state outright, so the
+/// solves share nothing and results are bit-identical to the serial loop
+/// (the §5.3 determinism requirement extends across layers). Work is split
+/// into contiguous chunks over at most `available_parallelism` threads;
+/// with one item (or one core) it degenerates to the serial path.
+pub fn schedule_layers_parallel(
+    scheds: &mut [MicroEpScheduler],
+    loads: &[LoadMatrix],
+) -> Vec<Schedule> {
+    assert_eq!(scheds.len(), loads.len(), "one load matrix per scheduler");
+    let n = scheds.len();
+    let workers = std::thread::available_parallelism().map_or(1, |p| p.get()).min(n);
+    if workers <= 1 {
+        return scheds.iter_mut().zip(loads).map(|(s, lm)| s.schedule(lm)).collect();
+    }
+    let mut out: Vec<Option<Schedule>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for ((s_chunk, l_chunk), o_chunk) in scheds
+            .chunks_mut(chunk)
+            .zip(loads.chunks(chunk))
+            .zip(out.chunks_mut(chunk))
+        {
+            scope.spawn(move || {
+                for ((s, lm), slot) in s_chunk.iter_mut().zip(l_chunk).zip(o_chunk.iter_mut()) {
+                    *slot = Some(s.schedule(lm));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|s| s.expect("scheduler thread completed")).collect()
+}
 
 /// Convenience: schedule one micro-batch with default options.
 pub fn schedule_once(placement: &Placement, loads: &LoadMatrix) -> Schedule {
@@ -204,4 +244,57 @@ pub fn scheduler_with_topology(
     opts: SchedulerOptions,
 ) -> MicroEpScheduler {
     MicroEpScheduler::new(placement, Some(topo), opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::cayley::cayley_graph_placement;
+    use crate::rng::Rng;
+
+    fn random_lm(seed: u64, e: usize, g: usize, n: u64) -> LoadMatrix {
+        let mut rng = Rng::new(seed);
+        let mut lm = LoadMatrix::zeros(e, g);
+        for _ in 0..n {
+            lm.add(rng.below(e as u64) as usize, rng.below(g as u64) as usize, 1);
+        }
+        lm
+    }
+
+    #[test]
+    fn parallel_layers_match_serial() {
+        let p = cayley_graph_placement(8, 16);
+        let layers = 6usize;
+        let mk = || {
+            (0..layers)
+                .map(|_| MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default()))
+                .collect::<Vec<_>>()
+        };
+        let mut par = mk();
+        let mut ser = mk();
+        for round in 0..4 {
+            let loads: Vec<LoadMatrix> =
+                (0..layers).map(|l| random_lm(round * 100 + l as u64, 16, 8, 1500)).collect();
+            let a = schedule_layers_parallel(&mut par, &loads);
+            let b: Vec<Schedule> =
+                ser.iter_mut().zip(&loads).map(|(s, lm)| s.schedule(lm)).collect();
+            for (l, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.replica_loads, y.replica_loads, "round {round} layer {l}");
+                assert_eq!(x.routes, y.routes, "round {round} layer {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_single_layer_degenerates_to_serial() {
+        let p = cayley_graph_placement(4, 8);
+        let mut scheds = vec![MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default())];
+        let loads = vec![random_lm(3, 8, 4, 400)];
+        let out = schedule_layers_parallel(&mut scheds, &loads);
+        assert_eq!(out.len(), 1);
+        assert_eq!(
+            out[0].replica_loads.iter().map(|r| r.iter().sum::<u64>()).sum::<u64>(),
+            loads[0].total()
+        );
+    }
 }

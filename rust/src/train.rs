@@ -16,7 +16,9 @@ use anyhow::{anyhow, Context, Result};
 use crate::placement::cayley::symmetric_placement;
 use crate::rng::Rng;
 use crate::runtime::{lit, Runtime};
-use crate::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use crate::scheduler::{
+    schedule_layers_parallel, LoadMatrix, MicroEpScheduler, SchedulerOptions,
+};
 use crate::stats::imbalance_ratio;
 use crate::topology::Topology;
 use crate::workload::TraceWorkload;
@@ -172,38 +174,68 @@ impl Trainer {
     }
 
     /// Train `steps` micro-batches; every `dp_virtual` steps, assemble the
-    /// real layer-0 load matrix and schedule it with MicroEP vs vanilla EP.
+    /// real per-layer load matrices and schedule *all* MoE layers — each
+    /// with its own warm-started scheduler — in parallel, comparing MicroEP
+    /// against vanilla EP on the same loads.
     pub fn run(&mut self, steps: usize, log_every: usize) -> Result<TrainLog> {
         let topo = Topology::new(self.dp_virtual, (self.dp_virtual / 2).max(1), 2, 8);
         let placement = symmetric_placement(&topo, self.experts);
-        let mut sched =
-            MicroEpScheduler::new(placement.clone(), Some(topo.clone()), SchedulerOptions::default());
-        let vanilla = crate::baselines::VanillaEp::new(topo.clone(), self.experts);
-        let mut vanilla = vanilla;
+        // one scheduler per MoE layer: warm-start state is per-layer (the
+        // gate distributions of different layers are unrelated), and the
+        // per-layer solves are independent, so a DP round schedules them
+        // concurrently via scoped threads
+        let mut scheds: Vec<MicroEpScheduler> = (0..self.layers)
+            .map(|_| {
+                MicroEpScheduler::new(
+                    placement.clone(),
+                    Some(topo.clone()),
+                    SchedulerOptions::default(),
+                )
+            })
+            .collect();
+        let mut vanilla = crate::baselines::VanillaEp::new(topo.clone(), self.experts);
 
         let mut log_out = TrainLog::default();
-        let mut round = LoadMatrix::zeros(self.experts, self.dp_virtual);
+        let mut rounds: Vec<LoadMatrix> =
+            (0..self.layers).map(|_| LoadMatrix::zeros(self.experts, self.dp_virtual)).collect();
         for s in 0..steps {
             let t0 = std::time::Instant::now();
             let r = self.step()?;
             log_out.step_seconds.push(t0.elapsed().as_secs_f64());
             log_out.losses.push(r.loss);
             let g = s % self.dp_virtual;
-            for (e, &c) in r.counts[0].iter().enumerate() {
-                round.set(e, g, c);
+            for (l, counts) in r.counts.iter().enumerate().take(self.layers) {
+                for (e, &c) in counts.iter().enumerate() {
+                    rounds[l].set(e, g, c);
+                }
             }
             if g == self.dp_virtual - 1 {
-                // schedule the completed DP round on real loads
-                let micro = sched.schedule(&round);
-                let micro_imb = micro.imbalance(&placement);
+                // schedule the completed DP round on real loads, all layers
+                // at once
+                let schedules = schedule_layers_parallel(&mut scheds, &rounds);
+                let micro_imb = schedules
+                    .iter()
+                    .map(|m| m.imbalance(&placement))
+                    .sum::<f64>()
+                    / schedules.len() as f64;
+                // baseline over the same per-layer workloads, so the
+                // (vanilla, MicroEP) pair measures identical loads
                 use crate::baselines::MoeSystem;
-                let plan = vanilla.plan(&round);
-                let van_imb = imbalance_ratio(
-                    &plan.gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>(),
-                );
+                let van_imb = rounds
+                    .iter()
+                    .map(|round| {
+                        let plan = vanilla.plan(round);
+                        imbalance_ratio(
+                            &plan.gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                        )
+                    })
+                    .sum::<f64>()
+                    / rounds.len() as f64;
                 log_out.imbalance.push((van_imb, micro_imb));
-                log_out.trace.push(round.clone());
-                round = LoadMatrix::zeros(self.experts, self.dp_virtual);
+                log_out.trace.push(rounds[0].clone());
+                for round in &mut rounds {
+                    *round = LoadMatrix::zeros(self.experts, self.dp_virtual);
+                }
             }
             if log_every > 0 && s % log_every == 0 {
                 log::info!("step {s}: loss {:.4}", r.loss);

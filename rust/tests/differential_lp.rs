@@ -1,0 +1,228 @@
+//! Differential testing: bounded-variable revised simplex vs dense
+//! full-tableau simplex.
+//!
+//! The two backends implement the same mathematical contract through very
+//! different machinery (implicit bounds + eta-updated B⁻¹ vs bound rows +
+//! full tableau), which makes them near-perfect oracles for each other:
+//! on every instance they must agree on feasibility classification and,
+//! when an optimum exists, on the optimal objective to 1e-6. The suite
+//! covers randomized LPP-1 / LPP-4 (CommAware) / TopoAware scheduling
+//! instances end-to-end through `MicroEpScheduler`, plus raw-LP fuzz with
+//! upper-bound edge cases (bound-tight optima, degenerate bounds at 0).
+
+use micromoe::lp::{LpProblem, Relation, SimplexError, SolverKind, WarmSolver};
+use micromoe::placement::cayley::cayley_graph_placement;
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, ScheduleMode, SchedulerOptions};
+use micromoe::topology::Topology;
+
+fn zipf_batch(rng: &mut Rng, zipf: &Zipf, experts: usize, gpus: usize, per_gpu: usize) -> LoadMatrix {
+    let mut lm = LoadMatrix::zeros(experts, gpus);
+    for g in 0..gpus {
+        for _ in 0..per_gpu {
+            lm.add(zipf.sample(rng), g, 1);
+        }
+    }
+    lm
+}
+
+/// Both backends, all three schedule modes, warm-started across batches:
+/// objectives agree to 1e-6 and replica loads conserve expert totals.
+#[test]
+fn schedulers_agree_across_modes_and_batches() {
+    let gpus = 8usize;
+    let experts = 16usize;
+    let placement = cayley_graph_placement(gpus, experts);
+    let topo = Topology::new(gpus, 4, 2, 4); // 2 nodes of 4 GPUs
+    let modes = [
+        ScheduleMode::Compute,
+        ScheduleMode::CommAware { alpha: 0.7 },
+        ScheduleMode::TopoAware { alpha1: 0.1, alpha2: 1.0 },
+    ];
+    for mode in modes {
+        let opts = |solver: SolverKind| SchedulerOptions {
+            mode: mode.clone(),
+            solver,
+            topo_aware_routing: matches!(mode, ScheduleMode::TopoAware { .. }),
+            ..Default::default()
+        };
+        let mut revised = MicroEpScheduler::new(
+            placement.clone(),
+            Some(topo.clone()),
+            opts(SolverKind::Revised),
+        );
+        let mut tableau = MicroEpScheduler::new(
+            placement.clone(),
+            Some(topo.clone()),
+            opts(SolverKind::DenseTableau),
+        );
+        let mut rng = Rng::new(42);
+        let zipf = Zipf::new(experts, 0.9);
+        for batch in 0..12 {
+            let lm = zipf_batch(&mut rng, &zipf, experts, gpus, 1024);
+            let a = revised.schedule(&lm);
+            let b = tableau.schedule(&lm);
+            assert!(
+                a.stats.lp_objective.is_finite() && b.stats.lp_objective.is_finite(),
+                "{mode:?} batch {batch}: LP fallback triggered (rev {}, tab {})",
+                a.stats.lp_objective,
+                b.stats.lp_objective
+            );
+            let scale = 1.0 + a.stats.lp_objective.abs();
+            assert!(
+                (a.stats.lp_objective - b.stats.lp_objective).abs() < 1e-6 * scale,
+                "{mode:?} batch {batch}: revised {} vs tableau {}",
+                a.stats.lp_objective,
+                b.stats.lp_objective
+            );
+            if batch > 0 {
+                assert!(a.stats.warm, "{mode:?} batch {batch}: revised warm path not taken");
+                assert!(b.stats.warm, "{mode:?} batch {batch}: tableau warm path not taken");
+            }
+            for e in 0..experts {
+                assert_eq!(
+                    a.replica_loads[e].iter().sum::<u64>(),
+                    lm.expert_load(e),
+                    "{mode:?} batch {batch}: revised expert {e} total"
+                );
+                assert_eq!(
+                    b.replica_loads[e].iter().sum::<u64>(),
+                    lm.expert_load(e),
+                    "{mode:?} batch {batch}: tableau expert {e} total"
+                );
+            }
+        }
+    }
+}
+
+/// Raw-LP fuzz: random rows of every relation plus random finite upper
+/// bounds. Backends must agree on the error class or on the objective.
+#[test]
+fn random_instances_agree() {
+    let mut rng = Rng::new(2024);
+    let mut optima = 0usize;
+    let mut infeasible = 0usize;
+    let mut unbounded = 0usize;
+    for case in 0..200 {
+        let n = 2 + (case % 5);
+        let m = 1 + (case % 6);
+        let mut p = LpProblem::new(n);
+        for j in 0..n {
+            p.set_objective(j, rng.f64() * 4.0 - 2.0);
+        }
+        for j in 0..n {
+            let r = rng.f64();
+            if r < 0.25 {
+                p.set_upper(j, rng.f64() * 4.0);
+            } else if r < 0.35 {
+                p.set_upper(j, 0.0); // degenerate bound at 0
+            }
+        }
+        for _ in 0..m {
+            let terms: Vec<(usize, f64)> = (0..n)
+                .filter(|_| rng.f64() < 0.8)
+                .map(|j| (j, rng.f64() * 2.0 - 0.5))
+                .collect();
+            if terms.is_empty() {
+                continue;
+            }
+            let rel = match rng.below(4) {
+                0 => Relation::Ge,
+                1 => Relation::Eq,
+                _ => Relation::Le,
+            };
+            p.add(terms, rel, rng.f64() * 6.0 - 1.0);
+        }
+        let a = micromoe::lp::revised::solve(&p);
+        let b = micromoe::lp::simplex::solve(&p);
+        match (a, b) {
+            (Ok(sa), Ok(sb)) => {
+                optima += 1;
+                let scale = 1.0 + sa.objective.abs();
+                assert!(
+                    (sa.objective - sb.objective).abs() < 1e-6 * scale,
+                    "case {case}: revised {} vs tableau {}",
+                    sa.objective,
+                    sb.objective
+                );
+                assert!(p.is_feasible(&sa.x, 1e-6), "case {case}: revised point infeasible");
+                assert!(p.is_feasible(&sb.x, 1e-6), "case {case}: tableau point infeasible");
+            }
+            (Err(SimplexError::Infeasible(_)), Err(SimplexError::Infeasible(_))) => {
+                infeasible += 1;
+            }
+            (Err(SimplexError::Unbounded), Err(SimplexError::Unbounded)) => {
+                unbounded += 1;
+            }
+            (a, b) => panic!("case {case}: revised {a:?} vs tableau {b:?}"),
+        }
+    }
+    // the generator must produce a healthy share of solvable instances;
+    // the error-class tallies are informational (they vary with the seed)
+    assert!(optima > 20, "only {optima} optima");
+    eprintln!("differential fuzz: {optima} optima, {infeasible} infeasible, {unbounded} unbounded");
+}
+
+/// Bound-tight optimum: the argmax sits exactly on variable bounds, with
+/// one variable pinned by a degenerate 0 bound.
+#[test]
+fn bound_tight_optimum_agrees() {
+    // max 3a + 2b + 5c (min negative) s.t. a+b+c <= 10, a <= 4, b <= 2, c <= 0
+    let mut p = LpProblem::new(3);
+    p.set_objective(0, -3.0);
+    p.set_objective(1, -2.0);
+    p.set_objective(2, -5.0);
+    p.set_upper(0, 4.0);
+    p.set_upper(1, 2.0);
+    p.set_upper(2, 0.0);
+    p.add(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Relation::Le, 10.0);
+    let a = micromoe::lp::revised::solve(&p).unwrap();
+    let b = micromoe::lp::simplex::solve(&p).unwrap();
+    assert!((a.objective - (-16.0)).abs() < 1e-9, "revised {}", a.objective);
+    assert!((b.objective - (-16.0)).abs() < 1e-9, "tableau {}", b.objective);
+    assert!((a.x[0] - 4.0).abs() < 1e-9 && (a.x[1] - 2.0).abs() < 1e-9);
+    assert!(a.x[2].abs() < 1e-9);
+}
+
+/// Warm bound updates through `WarmSolver` agree between backends over a
+/// trajectory of correlated cap changes (the LPP-4 micro-batch pattern).
+#[test]
+fn warm_bound_trajectories_agree() {
+    let build = || {
+        // min comp s.t. comp >= x0 + x1, x0 + x1 = 6, x0 <= c0, x1 <= c1
+        // (caps start permissive and move each "micro-batch")
+        let mut p = LpProblem::new(3);
+        p.set_objective(2, 1.0);
+        p.add(vec![(0, 1.0), (1, 1.0), (2, -1.0)], Relation::Le, 0.0);
+        p.add(vec![(0, 1.0), (1, 1.0)], Relation::Eq, 6.0);
+        p.set_upper(0, 6.0);
+        p.set_upper(1, 6.0);
+        p
+    };
+    let mut wa = WarmSolver::with_kind(build(), SolverKind::Revised);
+    let mut wb = WarmSolver::with_kind(build(), SolverKind::DenseTableau);
+    wa.solve_cold().unwrap();
+    wb.solve_cold().unwrap();
+    let mut rng = Rng::new(9);
+    for round in 0..25 {
+        let c0 = rng.f64() * 6.0;
+        let c1 = (6.0 - c0).max(0.0) + rng.f64() * 3.0;
+        let load = 2.0 + rng.f64() * (c0 + c1 - 2.0).max(0.1);
+        let rhs = [(1usize, load.min(c0 + c1))];
+        let caps = [(0usize, c0), (1usize, c1)];
+        let sa = wa.resolve_with_bounds(&rhs, &caps);
+        let sb = wb.resolve_with_bounds(&rhs, &caps);
+        match (sa, sb) {
+            (Ok(sa), Ok(sb)) => {
+                assert!(
+                    (sa.objective - sb.objective).abs() < 1e-6,
+                    "round {round}: revised {} vs tableau {}",
+                    sa.objective,
+                    sb.objective
+                );
+            }
+            (Err(SimplexError::Infeasible(_)), Err(SimplexError::Infeasible(_))) => {}
+            (sa, sb) => panic!("round {round}: revised {sa:?} vs tableau {sb:?}"),
+        }
+    }
+}

@@ -3,7 +3,9 @@
 //! JAX model computed at build time (cross-checked structurally here;
 //! value-level kernel-vs-ref checks live in python/tests).
 //!
-//! Requires `make artifacts` (skips with a message otherwise).
+//! Requires `make artifacts` (skips with a message otherwise) and the
+//! `xla` feature (the whole file is compiled out without it).
+#![cfg(feature = "xla")]
 
 use micromoe::runtime::{lit, Runtime};
 
