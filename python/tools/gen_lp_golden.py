@@ -1,13 +1,22 @@
 """Generate golden LP fixtures with scipy's HiGHS solver.
 
-The paper solves LPP 1 with HiGHS; our rust simplex must agree. This tool
-builds random LPP-1 instances (and a few comm-aware LPP-4 instances),
+The paper solves LPP 1 with HiGHS; our rust simplex backends must agree.
+This tool builds three instance families —
+
+* ``lpp1``    — random LPP-1 minimax instances (EDP groups, integer loads);
+* ``generic`` — random bounded-feasible min-LPs with ``A x <= b`` rows;
+* ``bounded`` — like ``generic`` but with finite per-variable upper bounds
+  (some degenerate at 0), the structure the revised simplex handles as
+  implicit bounds and the dense tableau expands into rows —
+
 solves them with scipy.optimize.linprog (method="highs" — the same HiGHS),
 and writes objective values to ``rust/tests/golden_lp.json``. The rust
-test re-solves each instance and compares objectives to 1e-6.
+test re-solves each instance with every backend and compares objectives
+to 1e-6.
 
-Run from python/: python tools/gen_lp_golden.py
-(committed fixture; regenerate only when the format changes)
+Run from the repo root or python/:  python3 python/tools/gen_lp_golden.py
+The fixture is committed; regenerate only when the format or the case set
+changes, and commit the result (tests/golden_lp.rs hard-fails without it).
 """
 
 import json
@@ -68,6 +77,43 @@ def generic_instance(rng, n, m):
     return {"kind": "generic", "c": c, "a_ub": rows, "b_ub": b, "objective": float(res.fun)}
 
 
+def bounded_instance(rng, n, m):
+    """Random min-LP with finite upper bounds on most variables.
+
+    Mixed-sign objective so optima land on bounds; a few bounds are
+    degenerate (0), pinning the variable exactly the way LPP-4's empty
+    per-replica input caps do.
+    """
+    c = [round(rng.uniform(-1.5, 1.0), 4) for _ in range(n)]
+    rows = []
+    for _ in range(m):
+        rows.append([round(rng.uniform(0.05, 1.0), 4) for _ in range(n)])
+    b = [round(rng.uniform(1.0, 8.0), 4) for _ in range(m)]
+    upper = []
+    for _ in range(n):
+        r = rng.random()
+        if r < 0.15:
+            upper.append(0.0)  # degenerate: variable pinned at 0
+        elif r < 0.85:
+            upper.append(round(rng.uniform(0.2, 5.0), 4))
+        else:
+            upper.append(None)  # unbounded above
+    bounds = [(0.0, u) for u in upper]
+    res = linprog(
+        c, A_ub=np.array(rows), b_ub=np.array(b), bounds=bounds, method="highs"
+    )
+    if res.status != 0:
+        return None
+    return {
+        "kind": "bounded",
+        "c": c,
+        "a_ub": rows,
+        "b_ub": b,
+        "upper": [u if u is not None else -1.0 for u in upper],
+        "objective": float(res.fun),
+    }
+
+
 def main():
     rng = random.Random(20250710)
     cases = []
@@ -79,6 +125,11 @@ def main():
     for n, m in [(3, 2), (5, 4), (8, 6), (12, 10)]:
         for _ in range(4):
             inst = generic_instance(rng, n, m)
+            if inst:
+                cases.append(inst)
+    for n, m in [(3, 2), (6, 4), (10, 7), (14, 10)]:
+        for _ in range(5):
+            inst = bounded_instance(rng, n, m)
             if inst:
                 cases.append(inst)
     out = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "golden_lp.json")

@@ -1,24 +1,40 @@
-//! Solver ablation (§9 Discussion + the revised-simplex perf claim): the
+//! Solver ablation (§9 Discussion + the revised-simplex perf claims): the
 //! per-micro-batch scheduling solve implemented several ways —
 //!
 //! * dense full-tableau simplex (cold + warm), the original baseline;
-//! * bounded-variable revised simplex (cold + warm), the production path;
+//! * bounded-variable revised simplex in every (pricing × factorization)
+//!   cell: {Dantzig, devex} × {dense explicit B⁻¹, sparse LU with
+//!   Forrest–Tomlin updates};
 //! * binary-search max-flow, the proposed inference path —
 //!
-//! measured for identical optima across scales. The headline number is the
-//! warm p50 ratio tableau/revised in CommAware (LPP-4) mode at 64 GPUs ×
-//! 256 experts, where the revised backend's implicit bounds remove ~nx
-//! rows and its eta-updated B⁻¹ avoids the O(m·ncols) tableau sweep; the
-//! JSON artifact also records warm pivot counts for both backends (the
-//! warm-start contract must not regress).
+//! measured for identical optima across scales. Two headline numbers on
+//! the CommAware (LPP-4) 64 GPU × 256 expert workload: the warm p50 ratio
+//! tableau/revised (implicit bounds remove ~nx rows; no O(m·ncols)
+//! tableau sweep), and the warm *pivot* ratio Dantzig/devex (devex's
+//! steepest-edge-like entering choices must cut pivots, its candidate
+//! list must cut pricing cost). The JSON artifact records warm p50 and
+//! pivot counts for every cell so regressions in any engine show up in CI
+//! history.
 
-use micromoe::bench_harness::{bench, fmt_time, save_json, Table};
-use micromoe::lp::SolverKind;
+use micromoe::bench_harness::{bench, fmt_ratio, fmt_time, save_json, Table};
+use micromoe::lp::{FactorKind, Pricing, SolverKind};
 use micromoe::placement::cayley::cayley_graph_placement;
 use micromoe::rng::{Rng, Zipf};
 use micromoe::scheduler::flow::flow_schedule;
 use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, ScheduleMode, SchedulerOptions};
 use micromoe::ser::Json;
+
+/// Every backend cell: the dense tableau plus the four revised
+/// (pricing × factorization) combinations.
+fn backends() -> [SolverKind; 5] {
+    [
+        SolverKind::DenseTableau,
+        SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::DenseInverse },
+        SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::SparseLu },
+        SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::DenseInverse },
+        SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::SparseLu },
+    ]
+}
 
 fn make_batches(g: usize, e: usize, n: usize) -> Vec<LoadMatrix> {
     let mut rng = Rng::new(3);
@@ -60,7 +76,8 @@ fn measure(
     let mut pivots = 0usize;
     let mut solves = 0usize;
     let mut i = 0usize;
-    let r = bench(&format!("{solver:?}-{}", if warm { "warm" } else { "cold" }), 1, 12, || {
+    let name = format!("{}-{}", solver.label(), if warm { "warm" } else { "cold" });
+    let r = bench(&name, 1, 12, || {
         let sched = s.schedule(&batches[i % batches.len()]);
         pivots += sched.stats.lp_iterations;
         solves += 1;
@@ -79,19 +96,21 @@ fn main() {
         ("LPP-4", ScheduleMode::CommAware { alpha: 0.7 }),
     ];
     let mut table = Table::new(
-        "Solver ablation: dense tableau vs revised simplex vs max-flow",
+        "Solver ablation: (pricing × factorization) cells vs dense tableau vs max-flow",
         &[
-            "mode", "GPUs", "experts", "tab cold", "tab warm", "rev cold", "rev warm",
-            "warm speedup", "piv tab/rev", "flow", "optima agree",
+            "mode", "GPUs", "experts", "backend", "cold p50", "warm p50", "warm piv",
+            "vs tab warm", "agree",
         ],
     );
     let mut json = Vec::new();
+    // the acceptance-gate cells, filled at 64×256 LPP-4
+    let mut gate: Vec<(String, f64, f64)> = Vec::new();
     for (mode_name, mode) in &modes {
         for &(g, e) in &[(8usize, 32usize), (16, 64), (32, 128), (64, 256)] {
             let p = cayley_graph_placement(g, e);
             let batches = make_batches(g, e, 8);
 
-            // optima agreement: revised vs tableau on every batch (and vs
+            // optima agreement: every backend pair on every batch (and vs
             // max-flow for the LPP-1 integer bound)
             let mut agree = true;
             {
@@ -100,73 +119,105 @@ fn main() {
                     solver,
                     ..Default::default()
                 };
-                let mut sr = MicroEpScheduler::new(p.clone(), None, opts(SolverKind::Revised));
-                let mut st = MicroEpScheduler::new(p.clone(), None, opts(SolverKind::DenseTableau));
+                let mut scheds: Vec<MicroEpScheduler> = backends()
+                    .into_iter()
+                    .map(|k| MicroEpScheduler::new(p.clone(), None, opts(k)))
+                    .collect();
                 for lm in &batches {
-                    let lr = sr.schedule(lm).stats.lp_objective;
-                    let lt = st.schedule(lm).stats.lp_objective;
-                    if (lr - lt).abs() > 1e-6 * (1.0 + lr.abs()) {
+                    let objs: Vec<f64> =
+                        scheds.iter_mut().map(|s| s.schedule(lm).stats.lp_objective).collect();
+                    let base = objs[0];
+                    if objs.iter().any(|&o| (o - base).abs() > 1e-6 * (1.0 + base.abs())) {
                         agree = false;
                     }
                     if matches!(mode, ScheduleMode::Compute) {
                         let fl = flow_schedule(&p, lm).max_load;
-                        if (lr.ceil() as i64 - fl as i64).abs() > 1 {
+                        if (base.ceil() as i64 - fl as i64).abs() > 1 {
                             agree = false;
                         }
                     }
                 }
             }
 
-            let tab_cold = measure(g, e, mode, SolverKind::DenseTableau, false, &batches);
-            let tab_warm = measure(g, e, mode, SolverKind::DenseTableau, true, &batches);
-            let rev_cold = measure(g, e, mode, SolverKind::Revised, false, &batches);
-            let rev_warm = measure(g, e, mode, SolverKind::Revised, true, &batches);
+            let tab_warm_p50 = {
+                let mut tab_warm = f64::NAN;
+                for solver in backends() {
+                    let cold = measure(g, e, mode, solver, false, &batches);
+                    let warm = measure(g, e, mode, solver, true, &batches);
+                    if solver == SolverKind::DenseTableau {
+                        tab_warm = warm.p50;
+                    }
+                    table.row(vec![
+                        mode_name.to_string(),
+                        g.to_string(),
+                        e.to_string(),
+                        solver.label().to_string(),
+                        fmt_time(cold.p50),
+                        fmt_time(warm.p50),
+                        format!("{:.1}", warm.warm_pivots),
+                        fmt_ratio(tab_warm, warm.p50), // tableau row: 1.00x
+                        agree.to_string(),
+                    ]);
+                    json.push(Json::obj(vec![
+                        ("mode", Json::Str(mode_name.to_string())),
+                        ("gpus", Json::Num(g as f64)),
+                        ("experts", Json::Num(e as f64)),
+                        ("backend", Json::Str(solver.label().to_string())),
+                        ("cold_s", Json::Num(cold.p50)),
+                        ("warm_s", Json::Num(warm.p50)),
+                        ("warm_pivots", Json::Num(warm.warm_pivots)),
+                        ("optima_agree", Json::Bool(agree)),
+                    ]));
+                    if *mode_name == "LPP-4" && g == 64 {
+                        gate.push((solver.label().to_string(), warm.p50, warm.warm_pivots));
+                    }
+                }
+                tab_warm
+            };
             let mut i = 0usize;
             let r_flow = bench("flow", 1, 12, || {
                 std::hint::black_box(flow_schedule(&p, &batches[i % 8]));
                 i += 1;
             });
-            let speedup = tab_warm.p50 / rev_warm.p50;
-            let pivot_ratio = if rev_warm.warm_pivots > 0.0 {
-                tab_warm.warm_pivots / rev_warm.warm_pivots
-            } else {
-                f64::INFINITY
-            };
-            table.row(vec![
-                mode_name.to_string(),
-                g.to_string(),
-                e.to_string(),
-                fmt_time(tab_cold.p50),
-                fmt_time(tab_warm.p50),
-                fmt_time(rev_cold.p50),
-                fmt_time(rev_warm.p50),
-                format!("{speedup:.2}x"),
-                format!("{pivot_ratio:.2}"),
-                fmt_time(r_flow.summary.p50),
-                agree.to_string(),
-            ]);
             json.push(Json::obj(vec![
                 ("mode", Json::Str(mode_name.to_string())),
                 ("gpus", Json::Num(g as f64)),
                 ("experts", Json::Num(e as f64)),
-                ("tableau_cold_s", Json::Num(tab_cold.p50)),
-                ("tableau_warm_s", Json::Num(tab_warm.p50)),
-                ("revised_cold_s", Json::Num(rev_cold.p50)),
-                ("revised_warm_s", Json::Num(rev_warm.p50)),
-                ("warm_speedup", Json::Num(speedup)),
-                ("tableau_warm_pivots", Json::Num(tab_warm.warm_pivots)),
-                ("revised_warm_pivots", Json::Num(rev_warm.warm_pivots)),
-                ("flow_s", Json::Num(r_flow.summary.p50)),
+                ("backend", Json::Str("max-flow".to_string())),
+                ("cold_s", Json::Num(r_flow.summary.p50)),
                 ("optima_agree", Json::Bool(agree)),
             ]));
+            table.row(vec![
+                mode_name.to_string(),
+                g.to_string(),
+                e.to_string(),
+                "max-flow".to_string(),
+                fmt_time(r_flow.summary.p50),
+                "-".to_string(),
+                "-".to_string(),
+                fmt_ratio(tab_warm_p50, r_flow.summary.p50),
+                agree.to_string(),
+            ]);
         }
     }
     table.print();
+    let cell = |label: &str| gate.iter().find(|(l, _, _)| l == label).cloned();
+    if let (Some(dx), Some(dv)) = (cell("dantzig+lu"), cell("devex+lu")) {
+        println!(
+            "\nacceptance gate (LPP-4 @ 64 GPUs × 256 experts, sparse-LU factors):\n\
+             devex warm pivots {:.1} vs Dantzig {:.1} ({:.2}x fewer); \
+             devex warm p50 {} vs Dantzig {}",
+            dv.2,
+            dx.2,
+            dx.2 / dv.2.max(1e-9),
+            fmt_time(dv.1),
+            fmt_time(dx.1),
+        );
+    }
     println!(
-        "\nacceptance gate: LPP-4 (CommAware) @ 64 GPUs × 256 experts must show\n\
-         revised warm p50 ≥2× faster than the dense tableau, with warm pivot\n\
-         counts no worse. §9 Discussion: the flow solver needs no warm state,\n\
-         suiting latency-sensitive inference."
+        "gate: revised warm p50 must beat the dense tableau ≥2× at 64×256 and devex\n\
+         must cut warm pivots vs Dantzig. §9 Discussion: the flow solver needs no\n\
+         warm state, suiting latency-sensitive inference."
     );
     let _ = save_json("ablation_solvers", &Json::Arr(json));
 }

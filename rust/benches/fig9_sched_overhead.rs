@@ -3,19 +3,44 @@
 //! timings, these are real wall-clock measurements of our rust scheduler —
 //! the direct analogue of the paper's HiGHS-based numbers (~100 µs small,
 //! <1 ms at 64 GPUs / 256 experts).
+//!
+//! Every (pricing × factorization) cell of the revised simplex is
+//! measured separately — warm p50/p95 *and* mean warm pivots — so the
+//! per-commit JSON artifact tracks both engines' trajectories: devex must
+//! keep the pivot counts down, sparse LU must keep the per-pivot cost down
+//! as `m` grows.
 
 use micromoe::bench_harness::{bench, fmt_time, save_json, Table};
+use micromoe::lp::{FactorKind, Pricing, SolverKind};
 use micromoe::placement::cayley::cayley_graph_placement;
 use micromoe::rng::{Rng, Zipf};
 use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
 use micromoe::ser::Json;
 
-fn sched_time_us(gpus: usize, experts: usize, warm: bool) -> (f64, f64) {
+/// The four revised-simplex cells (the tableau baseline lives in
+/// `ablation_solvers`; Fig. 9 tracks the production engines).
+fn cells() -> [SolverKind; 4] {
+    [
+        SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::DenseInverse },
+        SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::SparseLu },
+        SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::DenseInverse },
+        SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::SparseLu },
+    ]
+}
+
+struct Cell {
+    p50_us: f64,
+    p95_us: f64,
+    /// mean LP pivots per schedule() call over the measured iterations
+    pivots: f64,
+}
+
+fn sched_time(gpus: usize, experts: usize, solver: SolverKind, warm: bool) -> Cell {
     let p = cayley_graph_placement(gpus, experts);
     let mut s = MicroEpScheduler::new(
         p,
         None,
-        SchedulerOptions { warm_start: warm, ..Default::default() },
+        SchedulerOptions { warm_start: warm, solver, ..Default::default() },
     );
     let mut rng = Rng::new(7);
     let zipf = Zipf::new(experts, 0.8);
@@ -31,20 +56,28 @@ fn sched_time_us(gpus: usize, experts: usize, warm: bool) -> (f64, f64) {
     // prime the warm state
     let lm0 = mk(&mut rng);
     s.schedule(&lm0);
-    let mut batches: Vec<LoadMatrix> = (0..8).map(|_| mk(&mut rng)).collect();
+    let batches: Vec<LoadMatrix> = (0..8).map(|_| mk(&mut rng)).collect();
     let mut i = 0;
-    let r = bench(&format!("sched_{gpus}x{experts}"), 2, 24, || {
-        let lm = &mut batches[i % 8];
+    let mut pivots = 0usize;
+    let mut solves = 0usize;
+    let r = bench(&format!("sched_{gpus}x{experts}_{}", solver.label()), 2, 24, || {
+        let sched = s.schedule(&batches[i % 8]);
+        pivots += sched.stats.lp_iterations;
+        solves += 1;
         i += 1;
-        std::hint::black_box(s.schedule(lm));
+        std::hint::black_box(sched);
     });
-    (r.summary.p50 * 1e6, r.summary.p95 * 1e6)
+    Cell {
+        p50_us: r.summary.p50 * 1e6,
+        p95_us: r.summary.p95 * 1e6,
+        pivots: pivots as f64 / solves as f64,
+    }
 }
 
 fn main() {
     let mut table = Table::new(
-        "Fig 9: measured scheduling time (LP + routing), warm-started",
-        &["GPUs", "experts", "p50", "p95", "p50 cold"],
+        "Fig 9: measured scheduling time (LP + routing) per (pricing × factorization) cell",
+        &["GPUs", "experts", "backend", "warm p50", "warm p95", "warm piv", "cold p50"],
     );
     let mut json = Vec::new();
     for &gpus in &[8usize, 16, 32, 64] {
@@ -52,21 +85,28 @@ fn main() {
             if experts < gpus {
                 continue;
             }
-            let (warm_p50, warm_p95) = sched_time_us(gpus, experts, true);
-            let (cold_p50, _) = sched_time_us(gpus, experts, false);
-            table.row(vec![
-                gpus.to_string(),
-                experts.to_string(),
-                fmt_time(warm_p50 * 1e-6),
-                fmt_time(warm_p95 * 1e-6),
-                fmt_time(cold_p50 * 1e-6),
-            ]);
-            json.push(Json::obj(vec![
-                ("gpus", Json::Num(gpus as f64)),
-                ("experts", Json::Num(experts as f64)),
-                ("warm_p50_us", Json::Num(warm_p50)),
-                ("cold_p50_us", Json::Num(cold_p50)),
-            ]));
+            for solver in cells() {
+                let warm = sched_time(gpus, experts, solver, true);
+                let cold = sched_time(gpus, experts, solver, false);
+                table.row(vec![
+                    gpus.to_string(),
+                    experts.to_string(),
+                    solver.label().to_string(),
+                    fmt_time(warm.p50_us * 1e-6),
+                    fmt_time(warm.p95_us * 1e-6),
+                    format!("{:.1}", warm.pivots),
+                    fmt_time(cold.p50_us * 1e-6),
+                ]);
+                json.push(Json::obj(vec![
+                    ("gpus", Json::Num(gpus as f64)),
+                    ("experts", Json::Num(experts as f64)),
+                    ("backend", Json::Str(solver.label().to_string())),
+                    ("warm_p50_us", Json::Num(warm.p50_us)),
+                    ("warm_p95_us", Json::Num(warm.p95_us)),
+                    ("warm_pivots", Json::Num(warm.pivots)),
+                    ("cold_p50_us", Json::Num(cold.p50_us)),
+                ]));
+            }
         }
     }
     table.print();

@@ -44,6 +44,7 @@ impl Default for AdaptiveConfig {
 /// Outcome of a replacement decision.
 #[derive(Clone, Debug)]
 pub struct ReplacementDecision {
+    /// The placement to switch to.
     pub placement: Placement,
     /// predicted density of the *old* placement that triggered this
     pub old_density: f64,
@@ -63,6 +64,7 @@ pub struct ReplacementManager {
 }
 
 impl ReplacementManager {
+    /// Manager over a fresh history window.
     pub fn new(cfg: AdaptiveConfig, seed: u64) -> Self {
         let window = cfg.window;
         ReplacementManager {

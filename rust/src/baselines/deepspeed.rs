@@ -11,6 +11,8 @@ use crate::cluster::sim::MoeLayerPlan;
 use crate::scheduler::{LoadMatrix, Route};
 use crate::topology::Topology;
 
+/// DeepSpeed/GShard-style capacity padding: vanilla EP routing with
+/// every expert padded to the max expert load.
 pub struct DeepSpeedPad {
     inner: super::vanilla_ep::VanillaEp,
     topo: Topology,
@@ -18,6 +20,7 @@ pub struct DeepSpeedPad {
 }
 
 impl DeepSpeedPad {
+    /// Padding baseline over the vanilla-EP layout.
     pub fn new(topo: Topology, num_experts: usize) -> Self {
         DeepSpeedPad {
             inner: super::vanilla_ep::VanillaEp::new(topo.clone(), num_experts),

@@ -19,6 +19,8 @@ use crate::scheduler::LoadMatrix;
 use crate::stats::Ema;
 use crate::topology::Topology;
 
+/// FlexMoE-style baseline: popularity-proportional replica counts with
+/// even load split, re-planned when the EMA popularity drifts.
 pub struct FlexMoe {
     topo: Topology,
     num_experts: usize,
@@ -26,16 +28,19 @@ pub struct FlexMoe {
     placement: Placement,
     ema: Vec<Ema>,
     batch: usize,
+    /// Re-planning cadence in micro-batches.
     pub adjust_every: usize,
     /// relative EMA change that triggers re-planning
     pub drift_threshold: f64,
     last_counts: Vec<usize>,
     rng: Rng,
     cost: Option<(CostModel, u64)>,
+    /// Re-plans performed so far (for tests/metrics).
     pub adjustments: usize,
 }
 
 impl FlexMoe {
+    /// Baseline starting from uniform replica counts.
     pub fn new(topo: Topology, num_experts: usize, seed: u64) -> Self {
         let slots_per_gpu = topo.slots_per_gpu(num_experts);
         let g = topo.microep_group_size();
@@ -59,11 +64,13 @@ impl FlexMoe {
         }
     }
 
+    /// Charge replica movements against this cost model.
     pub fn with_migration_cost(mut self, model: CostModel, bytes_per_expert: u64) -> Self {
         self.cost = Some((model, bytes_per_expert));
         self
     }
 
+    /// Current replica placement.
     pub fn placement(&self) -> &Placement {
         &self.placement
     }

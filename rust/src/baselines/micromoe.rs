@@ -13,6 +13,8 @@ use crate::placement::Placement;
 use crate::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
 use crate::topology::Topology;
 
+/// The paper's system: MicroEP token scheduling, optionally with
+/// adaptive expert replacement.
 pub struct MicroMoe {
     topo: Topology,
     scheduler: MicroEpScheduler,
@@ -21,11 +23,14 @@ pub struct MicroMoe {
     pub overlap: bool,
     adaptive: Option<ReplacementManager>,
     cost: Option<(CostModel, u64)>,
+    /// Legend label override (e.g. for ablation arms).
     pub name_override: Option<&'static str>,
+    /// Adaptive replacements performed so far.
     pub replacements: usize,
 }
 
 impl MicroMoe {
+    /// MicroEP system over a fixed placement (no adaptive replacement).
     pub fn new(topo: Topology, placement: Placement, opts: SchedulerOptions) -> Self {
         let scheduler = MicroEpScheduler::new(placement, Some(topo.clone()), opts.clone());
         MicroMoe {
@@ -46,11 +51,13 @@ impl MicroMoe {
         self
     }
 
+    /// Charge replacement migrations against this cost model.
     pub fn with_migration_cost(mut self, model: CostModel, bytes_per_expert: u64) -> Self {
         self.cost = Some((model, bytes_per_expert));
         self
     }
 
+    /// Current replica placement.
     pub fn placement(&self) -> &Placement {
         &self.scheduler.placement
     }

@@ -24,6 +24,7 @@ use crate::scheduler::LoadMatrix;
 
 /// A load-balancing system planning one MoE layer per micro-batch.
 pub trait MoeSystem {
+    /// Display name for tables and legends.
     fn name(&self) -> &'static str;
     /// Decide token→GPU assignment (and implied communication) for one
     /// micro-batch of gate outputs.

@@ -15,6 +15,8 @@ use crate::scheduler::{LoadMatrix, Route};
 use crate::stats::Ema;
 use crate::topology::Topology;
 
+/// SmartMoE-style baseline: periodic expert→rank re-optimization from
+/// long-term (EMA) load statistics, within EP groups.
 pub struct SmartMoe {
     topo: Topology,
     num_experts: usize,
@@ -23,13 +25,16 @@ pub struct SmartMoe {
     rank_of: Vec<usize>,
     ema: Vec<Ema>,
     batch: usize,
+    /// Re-optimization cadence in micro-batches.
     pub replace_every: usize,
     /// charge migrations using this model (None = free migrations)
     cost: Option<(CostModel, u64)>, // (model, bytes per expert)
+    /// Expert migrations performed so far.
     pub migrations: usize,
 }
 
 impl SmartMoe {
+    /// Baseline starting from the contiguous vanilla-EP layout.
     pub fn new(topo: Topology, num_experts: usize) -> Self {
         let experts_per_gpu = topo.experts_per_gpu(num_experts);
         SmartMoe {
@@ -45,6 +50,7 @@ impl SmartMoe {
         }
     }
 
+    /// Charge migrations against this cost model.
     pub fn with_migration_cost(mut self, model: CostModel, bytes_per_expert: u64) -> Self {
         self.cost = Some((model, bytes_per_expert));
         self

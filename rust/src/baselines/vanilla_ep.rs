@@ -10,6 +10,8 @@ use crate::cluster::sim::MoeLayerPlan;
 use crate::scheduler::{LoadMatrix, Route};
 use crate::topology::Topology;
 
+/// Megatron-LM vanilla EP: fixed contiguous placement, tokens routed to
+/// the replica inside the source GPU's EP group.
 pub struct VanillaEp {
     topo: Topology,
     num_experts: usize,
@@ -17,6 +19,7 @@ pub struct VanillaEp {
 }
 
 impl VanillaEp {
+    /// Contiguous expert→rank layout over the topology.
     pub fn new(topo: Topology, num_experts: usize) -> Self {
         let experts_per_gpu = topo.experts_per_gpu(num_experts);
         VanillaEp { topo, num_experts, experts_per_gpu }

@@ -11,12 +11,14 @@ use crate::stats::Summary;
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name (table row / JSON key).
     pub name: String,
     /// per-iteration wall time in seconds
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// Median iteration time in microseconds.
     pub fn median_us(&self) -> f64 {
         self.summary.p50 * 1e6
     }
@@ -49,12 +51,16 @@ pub fn bench_auto<F: FnMut()>(name: &str, budget: f64, mut f: F) -> BenchResult 
 /// Aligned text table (the figures-as-text output of every bench target).
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Table caption (figure name).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Row cells (each row matches `headers` in width).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given caption and columns.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -63,11 +69,13 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Render with right-aligned, width-fitted columns.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
         for row in &self.rows {
@@ -96,6 +104,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }
@@ -118,6 +127,17 @@ impl Table {
                 ),
             ),
         ])
+    }
+}
+
+/// Format an a-vs-b ratio as a speedup cell (`"2.13x"`); `"-"` when the
+/// denominator is degenerate. Used by the per-(pricing × factorization)
+/// solver tables, where a missing baseline cell must not poison the row.
+pub fn fmt_ratio(num: f64, den: f64) -> String {
+    if den > 0.0 && num.is_finite() {
+        format!("{:.2}x", num / den)
+    } else {
+        "-".to_string()
     }
 }
 
@@ -192,5 +212,12 @@ mod tests {
         assert!(fmt_time(5e-6).contains("us"));
         assert!(fmt_time(5e-3).contains("ms"));
         assert!(fmt_time(2.0).contains("s"));
+    }
+
+    #[test]
+    fn fmt_ratio_handles_degenerate_baselines() {
+        assert_eq!(fmt_ratio(4.0, 2.0), "2.00x");
+        assert_eq!(fmt_ratio(1.0, 0.0), "-");
+        assert_eq!(fmt_ratio(f64::NAN, 2.0), "-");
     }
 }

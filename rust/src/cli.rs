@@ -3,6 +3,8 @@
 
 use std::collections::HashMap;
 
+/// Parsed command line: `--key value` / `--key=value` options, bare
+/// `--flag`s, and positional arguments.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     opts: HashMap<String, String>,
@@ -31,34 +33,42 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Option value for `--key`.
     pub fn str(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(String::as_str)
     }
 
+    /// Option value for `--key`, or `default`.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.str(key).unwrap_or(default)
     }
 
+    /// `--key` parsed as usize, or `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as u64, or `default`.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as f64, or `default`.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether `--key` was passed bare (or as `--key true`).
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key) || self.str(key) == Some("true")
     }
 
+    /// Positional (non-`--`) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

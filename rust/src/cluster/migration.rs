@@ -20,7 +20,9 @@ pub fn expert_bytes(hidden: usize, ffn: usize, with_optimizer: bool) -> u64 {
 /// A replica movement: expert `e` appears on `dst` where it wasn't before.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Move {
+    /// Expert being copied.
     pub expert: usize,
+    /// Destination GPU gaining the replica.
     pub dst: usize,
     /// chosen source replica (nearest surviving one)
     pub src: usize,

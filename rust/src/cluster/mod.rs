@@ -57,6 +57,7 @@ pub struct CostModel {
     pub intra_lat: f64,
     /// per-hop latency across nodes (s)
     pub inter_lat: f64,
+    /// All-to-all backend profile.
     pub backend: CommBackend,
 }
 
@@ -89,6 +90,7 @@ impl CostModel {
         self
     }
 
+    /// Same model with a different all-to-all backend.
     pub fn with_backend(mut self, backend: CommBackend) -> Self {
         self.backend = backend;
         self

@@ -34,12 +34,16 @@ pub struct MoeLayerPlan {
 pub struct MoeLayerBreakdown {
     /// all-gather of load info + (non-overlapped) scheduling + extras
     pub prep: f64,
+    /// Dispatch all-to-all.
     pub dispatch: f64,
+    /// Max per-GPU expert FFN time.
     pub compute: f64,
+    /// Combine all-to-all.
     pub combine: f64,
 }
 
 impl MoeLayerBreakdown {
+    /// Sum of all phases.
     pub fn total(&self) -> f64 {
         self.prep + self.dispatch + self.compute + self.combine
     }
@@ -85,7 +89,9 @@ pub fn moe_layer_time(
 /// the wall-clock win that keeps scheduling off the critical path even
 /// when a stage holds many MoE layers.
 pub struct MultiLayerSim {
+    /// Cluster cost model used to time each layer.
     pub model: CostModel,
+    /// Topology (node boundaries for the all-to-all model).
     pub topo: Topology,
     placement: Placement,
     schedulers: Vec<MicroEpScheduler>,
@@ -94,6 +100,7 @@ pub struct MultiLayerSim {
 }
 
 impl MultiLayerSim {
+    /// `layers` independent schedulers over one shared placement.
     pub fn new(
         model: CostModel,
         topo: Topology,
@@ -108,6 +115,7 @@ impl MultiLayerSim {
         MultiLayerSim { model, topo, placement, schedulers, overlap: true }
     }
 
+    /// Number of MoE layers simulated.
     pub fn layers(&self) -> usize {
         self.schedulers.len()
     }
@@ -136,8 +144,11 @@ impl MultiLayerSim {
 /// End-to-end iteration model (Fig. 6): GPipe-style schedule.
 #[derive(Clone, Debug)]
 pub struct TrainIterationModel {
+    /// Pipeline-parallel degree.
     pub pp_degree: usize,
+    /// MoE layers per pipeline stage.
     pub layers_per_stage: usize,
+    /// Micro-batches per iteration (per DP group).
     pub num_microbatches: usize,
     /// per-micro-batch attention + dense time per layer (s)
     pub attn_time: f64,

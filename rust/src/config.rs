@@ -8,18 +8,31 @@ use crate::topology::Topology;
 /// One row of Table 2 (model hyperparameters used in §7.2 / Fig. 6/10).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelPreset {
+    /// Preset display name (Table-2 row label).
     pub name: &'static str,
+    /// Transformer layer count.
     pub layers: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Model (hidden) dimension.
     pub hidden: usize,
+    /// Expert FFN inner dimension.
     pub ffn_hidden: usize,
+    /// Sequence length in tokens.
     pub seq: usize,
+    /// Experts per MoE layer.
     pub experts: usize,
+    /// Gate top-K.
     pub topk: usize,
+    /// Sequences per micro-batch.
     pub micro_batch: usize,
+    /// Sequences per global batch.
     pub global_batch: usize,
+    /// Total GPUs for this preset.
     pub num_gpus: usize,
+    /// Pipeline-parallel degree.
     pub pp_degree: usize,
+    /// Expert-parallel degree.
     pub ep_degree: usize,
 }
 
@@ -91,6 +104,7 @@ pub fn table2() -> Vec<ModelPreset> {
     ]
 }
 
+/// Look up a Table-2 preset by (case-insensitive) name.
 pub fn preset(name: &str) -> Option<ModelPreset> {
     table2().into_iter().find(|p| p.name.eq_ignore_ascii_case(name))
 }
@@ -103,6 +117,7 @@ pub struct ConfigFile {
 }
 
 impl ConfigFile {
+    /// Parse config text; `Err` carries the offending line number.
     pub fn parse(text: &str) -> Result<ConfigFile, String> {
         let mut values = HashMap::new();
         let mut section = String::new();
@@ -128,23 +143,28 @@ impl ConfigFile {
         Ok(ConfigFile { values })
     }
 
+    /// Read and parse a config file from disk.
     pub fn load(path: &std::path::Path) -> Result<ConfigFile, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         ConfigFile::parse(&text)
     }
 
+    /// String value at `key` (`section.key` for sectioned files).
     pub fn str(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(String::as_str)
     }
 
+    /// `key` parsed as f64.
     pub fn f64(&self, key: &str) -> Option<f64> {
         self.str(key)?.parse().ok()
     }
 
+    /// `key` parsed as usize.
     pub fn usize(&self, key: &str) -> Option<usize> {
         self.str(key)?.parse().ok()
     }
 
+    /// `key` parsed as bool (`true/1/yes` vs `false/0/no`).
     pub fn bool(&self, key: &str) -> Option<bool> {
         match self.str(key)? {
             "true" | "1" | "yes" => Some(true),

@@ -14,7 +14,9 @@
 //!   Pallas grouped-FFN kernels, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from rust through PJRT ([`runtime`]).
 //!
-//! See DESIGN.md for the full inventory and the per-figure experiment index.
+//! See README.md for the figure→bench mapping and docs/ARCHITECTURE.md for
+//! the token-flow walkthrough (workload → scheduler → lp → cluster).
+#![warn(missing_docs)]
 
 pub mod adaptive;
 pub mod baselines;
@@ -40,6 +42,7 @@ pub mod topology;
 pub mod train;
 pub mod workload;
 
+/// Crate version (from Cargo metadata).
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
 }

@@ -7,9 +7,14 @@
 //! flushes accumulated floating-point drift. At the paper's largest scale
 //! (64 GPUs / 256 experts) m is a few hundred, so the dense inverse is
 //! cheap to hold and the eta update — not the O(m·ncols) full-tableau
-//! sweep — dominates per-pivot cost.
+//! sweep — dominates per-pivot cost. Past that scale the O(m²) memory and
+//! sparsity-blind eta update lose to [`super::lu::SparseLu`]'s fill-aware
+//! factors; [`super::factor::FactorKind::Auto`] makes the cut at build
+//! time, keeping this engine as the small-`m` fast path and the ablation
+//! baseline.
 
 use super::bounds::Csc;
+use super::factor::Factorization;
 
 /// Floor on the eta-update count between refactorizations. The effective
 /// interval is `max(REFACTOR_EVERY, m)`: the rebuild is O(m³), so tying it
@@ -21,10 +26,15 @@ pub const REFACTOR_EVERY: usize = 64;
 /// Pivots smaller than this are numerically unusable.
 const PIVOT_TOL: f64 = 1e-10;
 
+/// Numerical failure inside a basis-factorization engine. Every variant
+/// means the caller should refactorize (and, failing that, treat the basis
+/// as unusable and fall back to a cold solve).
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum BasisError {
+    /// The basis columns are (numerically) linearly dependent.
     #[error("singular basis (pivot {0:.3e} at elimination step {1})")]
     Singular(f64, usize),
+    /// A pivot-update element was too small to divide by safely.
     #[error("eta pivot too small ({0:.3e})")]
     TinyPivot(f64),
 }
@@ -48,6 +58,7 @@ impl BasisInverse {
         BasisInverse { m, inv, updates: 0 }
     }
 
+    /// Row count of the (square) basis.
     pub fn m(&self) -> usize {
         self.m
     }
@@ -209,6 +220,46 @@ impl BasisInverse {
     }
 }
 
+impl Factorization for BasisInverse {
+    fn m(&self) -> usize {
+        BasisInverse::m(self)
+    }
+
+    fn due_for_refactor(&self) -> bool {
+        BasisInverse::due_for_refactor(self)
+    }
+
+    fn ftran_sparse(&mut self, rows: &[usize], vals: &[f64], out: &mut [f64]) {
+        BasisInverse::ftran_sparse(self, rows, vals, out);
+    }
+
+    fn ftran_dense(&mut self, v: &[f64], out: &mut [f64]) {
+        BasisInverse::ftran_dense(self, v, out);
+    }
+
+    fn btran_costs(&mut self, cb: &[(usize, f64)], out: &mut [f64]) {
+        BasisInverse::btran_costs(self, cb, out);
+    }
+
+    fn btran_unit(&mut self, r: usize, out: &mut [f64]) {
+        out.copy_from_slice(self.row(r));
+    }
+
+    fn pivot_update(
+        &mut self,
+        _col_rows: &[usize],
+        _col_vals: &[f64],
+        w: &[f64],
+        r: usize,
+    ) -> Result<(), BasisError> {
+        self.update(w, r)
+    }
+
+    fn refactor(&mut self, csc: &Csc, basis: &[usize]) -> Result<(), BasisError> {
+        BasisInverse::refactor(self, csc, basis)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -278,5 +329,35 @@ mod tests {
         let mut y = [0.0; 3];
         b.btran_costs(&[(0, 2.0), (2, -1.0)], &mut y);
         assert_eq!(y, [2.0, 0.0, -1.0]);
+    }
+
+    /// Pins the documented contract of [`REFACTOR_EVERY`]: the *effective*
+    /// refactorization interval is `max(REFACTOR_EVERY, m)`, so the O(m³)
+    /// rebuild stays amortized O(m²) per pivot at any scale.
+    #[test]
+    fn effective_refactor_interval_is_max_of_const_and_m() {
+        // small m: the constant floor governs
+        let m = 2;
+        assert!(REFACTOR_EVERY > m);
+        let mut b = BasisInverse::identity(m);
+        let w = [1.0, 0.0]; // pivot row 0, identity eta
+        for _ in 0..REFACTOR_EVERY - 1 {
+            b.update(&w, 0).unwrap();
+            assert!(!b.due_for_refactor());
+        }
+        b.update(&w, 0).unwrap();
+        assert!(b.due_for_refactor());
+
+        // large m: the row count governs
+        let m = REFACTOR_EVERY + 36;
+        let mut b = BasisInverse::identity(m);
+        let mut w = vec![0.0; m];
+        w[0] = 1.0;
+        for _ in 0..m - 1 {
+            b.update(&w, 0).unwrap();
+            assert!(!b.due_for_refactor());
+        }
+        b.update(&w, 0).unwrap();
+        assert!(b.due_for_refactor());
     }
 }

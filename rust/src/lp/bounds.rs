@@ -38,10 +38,15 @@ pub fn expand_to_rows(p: &LpProblem) -> (LpProblem, Vec<Option<usize>>) {
 /// refactorization need; rows are never traversed.
 #[derive(Clone, Debug)]
 pub struct Csc {
+    /// Row count.
     pub m: usize,
+    /// Column count.
     pub ncols: usize,
+    /// Per-column start offsets into `row_idx`/`val` (len `ncols + 1`).
     pub col_ptr: Vec<usize>,
+    /// Row index of each nonzero, column-major.
     pub row_idx: Vec<usize>,
+    /// Value of each nonzero, column-major.
     pub val: Vec<f64>,
 }
 

@@ -1,0 +1,150 @@
+//! Basis-factorization abstraction for the revised simplex.
+//!
+//! The solver's inner loops only ever need five linear-algebra operations
+//! against the current basis matrix `B` — FTRAN (`B⁻¹·v`), BTRAN
+//! (`v'·B⁻¹`), a one-row BTRAN (`e_r'·B⁻¹`), a rank-one pivot update, and
+//! a full refactorization. [`Factorization`] captures exactly that
+//! contract so the engine can be swapped per instance size:
+//!
+//! * [`super::basis::BasisInverse`] — explicit dense m×m inverse with
+//!   product-form (eta) updates. O(m²) memory and O(m²) per pivot
+//!   *regardless of sparsity*, but with tiny constants; the fast path for
+//!   small `m` and the ablation baseline.
+//! * [`super::lu::SparseLu`] — sparse LU factors with Forrest–Tomlin
+//!   updates. O(nnz + fill) memory and per-pivot cost proportional to the
+//!   factor sparsity, which is what keeps the per-micro-batch solve under
+//!   budget once configurations pass ~128 GPUs and `m` climbs past a few
+//!   hundred.
+//!
+//! [`FactorKind::Auto`] picks between them by row count at build time
+//! ([`AUTO_DENSE_MAX_M`]); the benches force each engine explicitly.
+
+use super::basis::{BasisError, BasisInverse};
+use super::bounds::Csc;
+use super::lu::SparseLu;
+
+/// Largest row count for which [`FactorKind::Auto`] still picks the dense
+/// explicit inverse. Below this, the dense engine's O(m²) eta update has
+/// better constants than sparse bookkeeping; above it, fill-aware LU wins
+/// on both memory (O(m²) vs O(nnz)) and per-pivot work.
+pub const AUTO_DENSE_MAX_M: usize = 192;
+
+/// Which basis-factorization engine backs a revised-simplex solve.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FactorKind {
+    /// Pick by row count: dense inverse for `m ≤` [`AUTO_DENSE_MAX_M`],
+    /// sparse LU beyond. The production default.
+    #[default]
+    Auto,
+    /// Dense explicit `B⁻¹` with eta updates ([`BasisInverse`]).
+    DenseInverse,
+    /// Sparse LU with Forrest–Tomlin updates ([`SparseLu`]).
+    SparseLu,
+}
+
+impl FactorKind {
+    /// Resolve [`FactorKind::Auto`] against a concrete row count.
+    pub fn resolve(self, m: usize) -> FactorKind {
+        match self {
+            FactorKind::Auto => {
+                if m <= AUTO_DENSE_MAX_M {
+                    FactorKind::DenseInverse
+                } else {
+                    FactorKind::SparseLu
+                }
+            }
+            k => k,
+        }
+    }
+
+    /// Build the engine in its initial (identity-basis) state.
+    pub(crate) fn build(self, m: usize) -> Box<dyn Factorization> {
+        match self.resolve(m) {
+            FactorKind::DenseInverse => Box::new(BasisInverse::identity(m)),
+            FactorKind::SparseLu => Box::new(SparseLu::identity(m)),
+            FactorKind::Auto => unreachable!("resolve() never returns Auto"),
+        }
+    }
+}
+
+/// The basis-linear-algebra contract of the revised simplex.
+///
+/// Vector spaces: FTRAN outputs and the `r` of [`Factorization::btran_unit`]
+/// are indexed by *basis position* (the order of the basis header);
+/// FTRAN inputs and BTRAN outputs are indexed by *constraint row*. The two
+/// coincide for the dense engine's explicit inverse but not for LU factors,
+/// which is why the trait spells them out.
+///
+/// Methods take `&mut self` so implementations may reuse internal scratch
+/// buffers across calls; none of them mutate the factorization itself
+/// except [`Factorization::pivot_update`] and [`Factorization::refactor`].
+///
+/// `Send` is required because schedulers owning a solver cross thread
+/// boundaries in [`crate::scheduler::schedule_layers_parallel`].
+pub trait Factorization: Send {
+    /// Row count `m` of the square basis.
+    fn m(&self) -> usize;
+
+    /// Whether enough update debt accumulated that the caller should
+    /// refactorize. The dense engine counts eta updates (effective interval
+    /// `max(REFACTOR_EVERY, m)`); the sparse engine triggers on *fill-in
+    /// growth* of its factors, falling back to the same pivot-count ceiling.
+    fn due_for_refactor(&self) -> bool;
+
+    /// FTRAN against a sparse column: `out = B⁻¹ a` with `a` given as
+    /// parallel (row, value) slices.
+    fn ftran_sparse(&mut self, rows: &[usize], vals: &[f64], out: &mut [f64]);
+
+    /// FTRAN against a dense vector: `out = B⁻¹ v`.
+    fn ftran_dense(&mut self, v: &[f64], out: &mut [f64]);
+
+    /// BTRAN of the basic cost vector: `out' = c_B' B⁻¹`, with `cb` given
+    /// as (basis position, cost) pairs for the nonzero basic costs only.
+    fn btran_costs(&mut self, cb: &[(usize, f64)], out: &mut [f64]);
+
+    /// One-row BTRAN: `out' = e_r' B⁻¹` for basis position `r` (the pivot
+    /// row needed by the dual ratio test and devex weight updates).
+    fn btran_unit(&mut self, r: usize, out: &mut [f64]);
+
+    /// Rank-one basis change: the column with sparse form (`col_rows`,
+    /// `col_vals`) enters at basis position `r`; `w` is its FTRAN image
+    /// `B⁻¹ a` (already computed by the simplex iteration). An `Err` means
+    /// the update is numerically unusable and the caller must refactorize.
+    fn pivot_update(
+        &mut self,
+        col_rows: &[usize],
+        col_vals: &[f64],
+        w: &[f64],
+        r: usize,
+    ) -> Result<(), BasisError>;
+
+    /// Rebuild the factorization from the basis columns of `csc`, flushing
+    /// accumulated update debt and floating-point drift.
+    fn refactor(&mut self, csc: &Csc, basis: &[usize]) -> Result<(), BasisError>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_resolves_by_row_count() {
+        assert_eq!(FactorKind::Auto.resolve(AUTO_DENSE_MAX_M), FactorKind::DenseInverse);
+        assert_eq!(FactorKind::Auto.resolve(AUTO_DENSE_MAX_M + 1), FactorKind::SparseLu);
+        assert_eq!(FactorKind::DenseInverse.resolve(10_000), FactorKind::DenseInverse);
+        assert_eq!(FactorKind::SparseLu.resolve(2), FactorKind::SparseLu);
+    }
+
+    #[test]
+    fn both_engines_start_as_identity() {
+        for kind in [FactorKind::DenseInverse, FactorKind::SparseLu] {
+            let mut f = kind.build(3);
+            assert_eq!(f.m(), 3);
+            let mut out = [0.0; 3];
+            f.ftran_dense(&[1.0, 2.0, 3.0], &mut out);
+            assert_eq!(out, [1.0, 2.0, 3.0], "{kind:?}");
+            f.btran_unit(1, &mut out);
+            assert_eq!(out, [0.0, 1.0, 0.0], "{kind:?}");
+        }
+    }
+}

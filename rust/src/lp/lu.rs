@@ -1,0 +1,584 @@
+//! Sparse LU basis factors with Forrest–Tomlin updates.
+//!
+//! The dense [`super::basis::BasisInverse`] holds `B⁻¹` explicitly — O(m²)
+//! memory and O(m²) per eta update no matter how sparse the basis is. For
+//! the scheduling LPs the basis *is* sparse (a handful of nonzeros per
+//! column at any GPU count), so past ~128 GPUs the right representation is
+//! the factorization itself:
+//!
+//! ```text
+//!   R · P · E · B  =  U        ⇔        B⁻¹ = U⁻¹ · R · P · E
+//! ```
+//!
+//! * `E` — row-elimination operations from Gaussian elimination with
+//!   partial pivoting, kept as a sparse op list in constraint-row space;
+//! * `P` — the row permutation (`pr`), mapping each U position ("slot") to
+//!   the constraint row that was pivotal for it;
+//! * `R` — Forrest–Tomlin update operations in slot space, appended by
+//!   [`Factorization::pivot_update`];
+//! * `U` — sparse upper triangular, stored *row-wise* with an explicit
+//!   logical column order (`lorder`), so both triangular solves and the
+//!   Forrest–Tomlin row elimination walk existing row lists.
+//!
+//! A Forrest–Tomlin update replaces basis column `p`: the entering
+//! column's partial FTRAN image (the *spike*) becomes a new last column of
+//! `U`, the stale row `p` of `U` is eliminated against the rows below it
+//! (each elimination appending one op to `R`), and the logical order
+//! cyclically shifts `p` to the end. Cost per update is proportional to
+//! the touched fill, not m².
+//!
+//! Unlike the dense engine's fixed `max(REFACTOR_EVERY, m)` eta interval,
+//! [`Factorization::due_for_refactor`] here triggers on **fill-in growth**: a
+//! refactorization is requested once the factors (U nonzeros plus the E/R
+//! op lists) grow past a constant multiple of their post-factorization
+//! size, with the dense engine's pivot-count ceiling kept only as a
+//! backstop. Fill, not pivot count, is what actually degrades FTRAN/BTRAN
+//! cost and numerical quality here.
+
+use super::basis::{BasisError, REFACTOR_EVERY};
+use super::bounds::Csc;
+use super::factor::Factorization;
+
+/// Pivots smaller than this are numerically unusable (matches the dense
+/// engine's threshold so the two report singularity consistently).
+const PIVOT_TOL: f64 = 1e-10;
+
+/// Entries below this magnitude are dropped when rows are combined —
+/// cancellation dust that would otherwise masquerade as fill.
+const DROP_TOL: f64 = 1e-14;
+
+/// One sparse row operation `x[target] -= mult * x[source]`, used both for
+/// the elimination file `E` (constraint-row space) and the Forrest–Tomlin
+/// file `R` (slot space).
+#[derive(Clone, Copy, Debug)]
+struct RowOp {
+    target: usize,
+    source: usize,
+    mult: f64,
+}
+
+/// Sparse LU factorization of the basis with Forrest–Tomlin updates.
+#[derive(Clone, Debug)]
+pub struct SparseLu {
+    m: usize,
+    /// Elimination ops (`E`), applied in order to row-space vectors.
+    lops: Vec<RowOp>,
+    /// `pr[slot]` — constraint row pivotal for U slot `slot` (the `P` map).
+    pr: Vec<usize>,
+    /// Row-wise U: `urows[slot]` holds (column slot, value) entries, all at
+    /// columns logically after `slot`; the diagonal lives in `udiag`.
+    urows: Vec<Vec<(usize, f64)>>,
+    /// U diagonal per slot.
+    udiag: Vec<f64>,
+    /// Logical column order: `lorder[l]` = slot at triangular position `l`.
+    lorder: Vec<usize>,
+    /// Inverse of `lorder`: `lpos[slot]` = logical position.
+    lpos: Vec<usize>,
+    /// Forrest–Tomlin ops (`R`), applied in order to slot-space vectors.
+    rops: Vec<RowOp>,
+    /// Factor size (U nnz + op-file lengths) right after refactorization —
+    /// the baseline for the fill-growth refactor trigger.
+    base_size: usize,
+    /// Pivot updates since the last refactorization.
+    updates: usize,
+    /// scratch, length m (row space / slot space).
+    work: Vec<f64>,
+    work2: Vec<f64>,
+}
+
+impl SparseLu {
+    /// Identity factorization (the initial slack/artificial basis).
+    pub fn identity(m: usize) -> Self {
+        SparseLu {
+            m,
+            lops: Vec::new(),
+            pr: (0..m).collect(),
+            urows: vec![Vec::new(); m],
+            udiag: vec![1.0; m],
+            lorder: (0..m).collect(),
+            lpos: (0..m).collect(),
+            rops: Vec::new(),
+            base_size: m,
+            updates: 0,
+            work: vec![0.0; m],
+            work2: vec![0.0; m],
+        }
+    }
+
+    /// Current factor size: U nonzeros (incl. diagonal) plus both op files.
+    fn size(&self) -> usize {
+        self.m + self.urows.iter().map(Vec::len).sum::<usize>() + self.lops.len() + self.rops.len()
+    }
+
+    /// Shared tail of both FTRAN entry points: `self.work` holds the dense
+    /// row-space input; result lands in `out` (basis-position space).
+    fn solve_from_work(&mut self, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.m);
+        // E: elimination ops in row space
+        for op in &self.lops {
+            let t = self.work[op.source];
+            if t != 0.0 {
+                self.work[op.target] -= op.mult * t;
+            }
+        }
+        // P: gather rows into slots
+        for s in 0..self.m {
+            self.work2[s] = self.work[self.pr[s]];
+        }
+        // R: Forrest–Tomlin ops in slot space
+        for op in &self.rops {
+            let t = self.work2[op.source];
+            if t != 0.0 {
+                self.work2[op.target] -= op.mult * t;
+            }
+        }
+        // U: back substitution, logically last column first. Row `s` holds
+        // entries only at logically later columns, whose solution values
+        // are already final when `s` is reached.
+        for &s in self.lorder.iter().rev() {
+            let mut v = self.work2[s];
+            for &(c, u) in &self.urows[s] {
+                v -= u * out[c];
+            }
+            out[s] = v / self.udiag[s];
+        }
+    }
+
+    /// Shared tail of both BTRAN entry points: `self.work2` holds the
+    /// slot-space input `c`; computes `out' = c' U⁻¹ R P E` (row space).
+    fn btran_from_slots(&mut self, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.m);
+        // U⁻ᵀ: forward substitution in logical order, scatter style — once
+        // z[s] is final, push its contribution into every later column.
+        for &s in &self.lorder {
+            let z = self.work2[s] / self.udiag[s];
+            self.work2[s] = z;
+            if z != 0.0 {
+                for &(c, u) in &self.urows[s] {
+                    self.work2[c] -= u * z;
+                }
+            }
+        }
+        // Rᵀ: transposed ops, reverse order
+        for op in self.rops.iter().rev() {
+            let t = self.work2[op.target];
+            if t != 0.0 {
+                self.work2[op.source] -= op.mult * t;
+            }
+        }
+        // Pᵀ: scatter slots back onto constraint rows
+        self.work.fill(0.0);
+        for s in 0..self.m {
+            self.work[self.pr[s]] = self.work2[s];
+        }
+        // Eᵀ: transposed ops, reverse order
+        for op in self.lops.iter().rev() {
+            let t = self.work[op.target];
+            if t != 0.0 {
+                self.work[op.source] -= op.mult * t;
+            }
+        }
+        out.copy_from_slice(&self.work);
+    }
+}
+
+impl Factorization for SparseLu {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn due_for_refactor(&self) -> bool {
+        if self.updates == 0 {
+            return false;
+        }
+        // Fill-growth trigger: refactor once the factors outgrow their
+        // post-factorization size by 2× (plus slack so tiny instances
+        // don't thrash); pivot count kept only as a drift backstop.
+        self.size() > 2 * self.base_size + 64 || self.updates >= REFACTOR_EVERY.max(self.m)
+    }
+
+    fn ftran_sparse(&mut self, rows: &[usize], vals: &[f64], out: &mut [f64]) {
+        self.work.fill(0.0);
+        for (&i, &a) in rows.iter().zip(vals) {
+            self.work[i] += a;
+        }
+        self.solve_from_work(out);
+    }
+
+    fn ftran_dense(&mut self, v: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(v.len(), self.m);
+        self.work.copy_from_slice(v);
+        self.solve_from_work(out);
+    }
+
+    fn btran_costs(&mut self, cb: &[(usize, f64)], out: &mut [f64]) {
+        self.work2.fill(0.0);
+        for &(k, c) in cb {
+            self.work2[k] += c;
+        }
+        self.btran_from_slots(out);
+    }
+
+    fn btran_unit(&mut self, r: usize, out: &mut [f64]) {
+        self.work2.fill(0.0);
+        self.work2[r] = 1.0;
+        self.btran_from_slots(out);
+    }
+
+    /// Forrest–Tomlin update: basis position `r` takes the column with
+    /// sparse form (`col_rows`, `col_vals`), whose FTRAN image is `w`.
+    fn pivot_update(
+        &mut self,
+        _col_rows: &[usize],
+        _col_vals: &[f64],
+        w: &[f64],
+        r: usize,
+    ) -> Result<(), BasisError> {
+        let m = self.m;
+        debug_assert_eq!(w.len(), m);
+        // The spike — the entering column pushed through E, P and R but not
+        // U — is recovered from the already-available FTRAN image as
+        // `spike = U·w`, O(nnz(U)) with no extra solves.
+        for s in 0..m {
+            let mut v = self.udiag[s] * w[s];
+            for &(c, u) in &self.urows[s] {
+                v += u * w[c];
+            }
+            self.work2[s] = if v.abs() <= DROP_TOL { 0.0 } else { v };
+        }
+        let lp = self.lpos[r];
+        // Drop the stale column `r` from all logically earlier rows (later
+        // rows cannot reference it — U is triangular).
+        for &t in &self.lorder[..lp] {
+            self.urows[t].retain(|&(c, _)| c != r);
+        }
+        // The stale row `r` becomes the spike row to eliminate; pull it out.
+        let stale = std::mem::take(&mut self.urows[r]);
+        self.work.fill(0.0);
+        for &(c, v) in &stale {
+            self.work[c] = v;
+        }
+        // Column `r` moves to the logical end; its new entries are the
+        // spike values of every other slot (all logically before it now).
+        for t in 0..m {
+            if t != r && self.work2[t] != 0.0 {
+                self.urows[t].push((r, self.work2[t]));
+            }
+        }
+        let mut dlast = self.work2[r];
+        // Eliminate the spike row against the rows logically after `lp`,
+        // ascending — each elimination appends one op to R and folds the
+        // row's last-column (spike) entry into the new diagonal.
+        for li in (lp + 1)..m {
+            let t = self.lorder[li];
+            let v = self.work[t];
+            if v.abs() <= DROP_TOL {
+                continue;
+            }
+            self.work[t] = 0.0;
+            let mult = v / self.udiag[t];
+            self.rops.push(RowOp { target: r, source: t, mult });
+            for &(c, u) in &self.urows[t] {
+                if c == r {
+                    dlast -= mult * u;
+                } else {
+                    self.work[c] -= mult * u;
+                }
+            }
+        }
+        if dlast.abs() < PIVOT_TOL {
+            // The caller refactorizes from the updated basis header.
+            return Err(BasisError::TinyPivot(dlast));
+        }
+        self.udiag[r] = dlast;
+        // urows[r] stays empty: the last logical row has no off-diagonals.
+        self.lorder.remove(lp);
+        self.lorder.push(r);
+        for (l, &s) in self.lorder.iter().enumerate() {
+            self.lpos[s] = l;
+        }
+        self.updates += 1;
+        Ok(())
+    }
+
+    /// Sparse Gaussian elimination with partial pivoting. Columns are
+    /// eliminated in ascending-nnz order (a static fill-reducing
+    /// heuristic); within a column the largest-magnitude entry among
+    /// unpivoted rows is chosen for stability.
+    fn refactor(&mut self, csc: &Csc, basis: &[usize]) -> Result<(), BasisError> {
+        let m = self.m;
+        debug_assert_eq!(basis.len(), m);
+        // Working rows of B in (column slot, value) form, plus a
+        // column→candidate-rows index maintained under fill-in.
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
+        let mut colrows: Vec<Vec<usize>> = vec![Vec::new(); m];
+        let mut col_nnz = vec![0usize; m];
+        for (slot, &j) in basis.iter().enumerate() {
+            let (ri, rv) = csc.col(j);
+            for (&i, &a) in ri.iter().zip(rv) {
+                if a != 0.0 {
+                    rows[i].push((slot, a));
+                    colrows[slot].push(i);
+                    col_nnz[slot] += 1;
+                }
+            }
+        }
+        let mut order: Vec<usize> = (0..m).collect();
+        order.sort_unstable_by_key(|&s| (col_nnz[s], s));
+
+        let mut lops: Vec<RowOp> = Vec::new();
+        let mut pr = vec![usize::MAX; m];
+        let mut urows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
+        let mut udiag = vec![0.0; m];
+        let mut row_done = vec![false; m];
+        let mut lorder = Vec::with_capacity(m);
+        let mut lpos = vec![usize::MAX; m];
+        // dense scratch for sparse row combines
+        let mut acc = vec![0.0; m];
+        let mut inpat = vec![false; m];
+        let mut pattern: Vec<usize> = Vec::new();
+
+        for (step, &s) in order.iter().enumerate() {
+            // pivot search: largest |value| in column s over unpivoted rows
+            let mut prow = usize::MAX;
+            let mut best = 0.0;
+            for &i in &colrows[s] {
+                if row_done[i] {
+                    continue;
+                }
+                for &(c, v) in &rows[i] {
+                    if c == s {
+                        if v.abs() > best {
+                            best = v.abs();
+                            prow = i;
+                        }
+                        break;
+                    }
+                }
+            }
+            if best < PIVOT_TOL {
+                return Err(BasisError::Singular(best, step));
+            }
+            let pivot_row = std::mem::take(&mut rows[prow]);
+            let piv = pivot_row
+                .iter()
+                .find(|&&(c, _)| c == s)
+                .map(|&(_, v)| v)
+                .expect("pivot entry located above");
+            // eliminate column s from every other unpivoted row holding it
+            let cands = std::mem::take(&mut colrows[s]);
+            for &i in &cands {
+                if row_done[i] || i == prow {
+                    continue;
+                }
+                let Some(&(_, a)) = rows[i].iter().find(|&&(c, _)| c == s) else {
+                    continue; // stale candidate (entry cancelled earlier)
+                };
+                let mult = a / piv;
+                lops.push(RowOp { target: i, source: prow, mult });
+                // rows[i] -= mult * pivot_row, dropping column s
+                pattern.clear();
+                for &(c, v) in &rows[i] {
+                    if c == s {
+                        continue;
+                    }
+                    acc[c] = v;
+                    inpat[c] = true;
+                    pattern.push(c);
+                }
+                for &(c, v) in &pivot_row {
+                    if c == s {
+                        continue;
+                    }
+                    if !inpat[c] {
+                        acc[c] = 0.0;
+                        inpat[c] = true;
+                        pattern.push(c);
+                        colrows[c].push(i); // fill-in: index the new entry
+                    }
+                    acc[c] -= mult * v;
+                }
+                let mut next = Vec::with_capacity(pattern.len());
+                for &c in &pattern {
+                    if acc[c].abs() > DROP_TOL {
+                        next.push((c, acc[c]));
+                    }
+                    inpat[c] = false;
+                }
+                rows[i] = next;
+            }
+            // pivot row becomes U row for slot s (minus the diagonal)
+            pr[s] = prow;
+            udiag[s] = piv;
+            urows[s] = pivot_row.into_iter().filter(|&(c, _)| c != s).collect();
+            row_done[prow] = true;
+            lpos[s] = lorder.len();
+            lorder.push(s);
+        }
+
+        self.lops = lops;
+        self.pr = pr;
+        self.urows = urows;
+        self.udiag = udiag;
+        self.lorder = lorder;
+        self.lpos = lpos;
+        self.rops.clear();
+        self.updates = 0;
+        self.base_size = self.size();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::basis::BasisInverse;
+    use crate::rng::Rng;
+
+    /// Random sparse nonsingular-ish CSC: `extra` columns beyond an m×m
+    /// identity block, with random sprinkled entries.
+    fn random_csc(rng: &mut Rng, m: usize, extra: usize) -> Csc {
+        let mut cols: Vec<Vec<(usize, f64)>> = Vec::new();
+        for i in 0..m {
+            cols.push(vec![(i, 1.0)]);
+        }
+        for _ in 0..extra {
+            let mut col = Vec::new();
+            for i in 0..m {
+                if rng.f64() < 0.3 {
+                    col.push((i, rng.f64() * 4.0 - 2.0));
+                }
+            }
+            if col.is_empty() {
+                col.push((rng.below(m as u64) as usize, 1.0 + rng.f64()));
+            }
+            cols.push(col);
+        }
+        Csc::from_columns(m, cols)
+    }
+
+    fn assert_vec_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// The LU engine must agree with the dense inverse on every trait
+    /// operation, across refactorizations and Forrest–Tomlin updates.
+    #[test]
+    fn lu_matches_dense_inverse_under_updates() {
+        let mut rng = Rng::new(77);
+        for trial in 0..20 {
+            let m = 3 + (trial % 6);
+            let csc = random_csc(&mut rng, m, 2 * m);
+            let mut basis: Vec<usize> = (0..m).collect(); // identity block
+            let mut lu = SparseLu::identity(m);
+            let mut dense = BasisInverse::identity(m);
+            lu.refactor(&csc, &basis).unwrap();
+            dense.refactor(&csc, &basis).unwrap();
+
+            let mut wl = vec![0.0; m];
+            let mut wd = vec![0.0; m];
+            for round in 0..3 * m {
+                // random replacement: some non-identity column into a slot
+                let j = m + rng.below((csc.ncols - m) as u64) as usize;
+                let r = rng.below(m as u64) as usize;
+                let (cr, cv) = csc.col(j);
+                lu.ftran_sparse(cr, cv, &mut wl);
+                dense.ftran_sparse(cr, cv, &mut wd);
+                assert_vec_close(&wl, &wd, 1e-6, "ftran");
+                if wl[r].abs() < 1e-6 {
+                    continue; // would be a terrible pivot for both engines
+                }
+                basis[r] = j;
+                let ok_lu = lu.pivot_update(cr, cv, &wl, r).is_ok();
+                let ok_dense = dense.update(&wd, r).is_ok();
+                assert!(ok_dense, "trial {trial} round {round}: dense eta refused");
+                if !ok_lu {
+                    lu.refactor(&csc, &basis).unwrap();
+                }
+
+                // compare all operations on fresh random vectors
+                let v: Vec<f64> = (0..m).map(|_| rng.f64() * 2.0 - 1.0).collect();
+                let mut ol = vec![0.0; m];
+                let mut od = vec![0.0; m];
+                lu.ftran_dense(&v, &mut ol);
+                dense.ftran_dense(&v, &mut od);
+                assert_vec_close(&ol, &od, 1e-6, "ftran_dense");
+                let cb: Vec<(usize, f64)> =
+                    (0..m).filter(|_| rng.f64() < 0.5).map(|k| (k, rng.f64())).collect();
+                lu.btran_costs(&cb, &mut ol);
+                dense.btran_costs(&cb, &mut od);
+                assert_vec_close(&ol, &od, 1e-6, "btran_costs");
+                let r2 = rng.below(m as u64) as usize;
+                lu.btran_unit(r2, &mut ol);
+                od.copy_from_slice(dense.row(r2));
+                assert_vec_close(&ol, &od, 1e-6, "btran_unit");
+
+                if lu.due_for_refactor() {
+                    lu.refactor(&csc, &basis).unwrap();
+                }
+                if dense.due_for_refactor() {
+                    dense.refactor(&csc, &basis).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn refactor_then_solve_roundtrips() {
+        // B = [[2,1],[0,3]] (csc cols), check B * ftran(b) == b
+        let csc = Csc::from_columns(2, vec![vec![(0, 2.0)], vec![(0, 1.0), (1, 3.0)]]);
+        let mut lu = SparseLu::identity(2);
+        lu.refactor(&csc, &[0, 1]).unwrap();
+        let mut x = [0.0; 2];
+        lu.ftran_dense(&[2.0, 3.0], &mut x);
+        // B x = [2x0 + x1, 3x1] must equal [2, 3]
+        assert!((2.0 * x[0] + x[1] - 2.0).abs() < 1e-12);
+        assert!((3.0 * x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_basis_detected() {
+        let csc = Csc::from_columns(2, vec![vec![(0, 1.0)], vec![(0, 2.0)]]);
+        let mut lu = SparseLu::identity(2);
+        assert!(matches!(lu.refactor(&csc, &[0, 1]), Err(BasisError::Singular(..))));
+    }
+
+    #[test]
+    fn fill_growth_triggers_refactor_request() {
+        // Dense replacement columns grow U fill and the R file; the
+        // fill-growth trigger must fire long before the dense engine's
+        // pivot-count ceiling of max(REFACTOR_EVERY, m) updates.
+        let m = 12;
+        // columns m+k are dense and diagonally dominant, so every prefix
+        // of replacements keeps the basis nonsingular with solid pivots
+        let cols: Vec<Vec<(usize, f64)>> = (0..m)
+            .map(|i| vec![(i, 1.0)])
+            .chain((0..m).map(|k| {
+                (0..m)
+                    .map(|i| (i, if i == k { 3.0 } else { 0.2 / (1.0 + (i + k) as f64) }))
+                    .collect()
+            }))
+            .collect();
+        let csc = Csc::from_columns(m, cols);
+        let mut lu = SparseLu::identity(m);
+        let mut w = vec![0.0; m];
+        let mut fired_after = None;
+        for r in 0..m {
+            let (cr, cv) = csc.col(m + r);
+            lu.ftran_sparse(cr, cv, &mut w);
+            assert!(w[r].abs() > 1e-9, "diagonally dominant pivot vanished");
+            lu.pivot_update(cr, cv, &w, r).unwrap();
+            if lu.due_for_refactor() {
+                fired_after = Some(r + 1);
+                break;
+            }
+        }
+        let fired = fired_after.expect("fill-growth trigger never fired");
+        assert!(
+            fired < REFACTOR_EVERY.max(m),
+            "trigger fired at {fired}, no earlier than the pivot-count ceiling"
+        );
+    }
+}

@@ -24,9 +24,10 @@
 //! 2. **The tableau wastes work on columns nobody asks about.** The dense
 //!    tableau updates all `ncols` columns every pivot (O(m·ncols)); the
 //!    revised method keeps the matrix in CSC form ([`bounds::Csc`]),
-//!    maintains an explicit `B⁻¹` ([`basis::BasisInverse`]) via
-//!    eta/product-form updates with periodic refactorization, and prices
-//!    columns lazily — O(m²) per pivot plus O(nnz) per priced column.
+//!    maintains the basis behind the [`Factorization`] trait — an explicit
+//!    `B⁻¹` ([`basis::BasisInverse`]) with eta updates for small `m`,
+//!    sparse LU with Forrest–Tomlin updates ([`lu::SparseLu`]) beyond —
+//!    and prices columns lazily, O(nnz) per priced column.
 //!
 //! # Warm-start invariants (§5.1)
 //!
@@ -41,15 +42,35 @@
 //! * [`Solution::iterations`] counts pivots identically on both paths, so
 //!   Fig. 11's warm-vs-cold pivot ablation is backend-independent.
 //!
+//! # Scaling knobs (past ~128 GPUs)
+//!
+//! Two further engine choices keep the per-pivot cost from growing with
+//! the configuration:
+//!
+//! * **Pricing** ([`Pricing`]): Dantzig pricing sweeps every nonbasic
+//!   column per pivot; devex reference-framework pricing with a partial
+//!   candidate-list sweep both cuts the pivot *count* (steepest-edge-like
+//!   entering choices) and makes most pricing passes touch only a short
+//!   list of columns.
+//! * **Factorization** ([`FactorKind`], behind the [`Factorization`]
+//!   trait): the dense explicit `B⁻¹` is O(m²) memory and O(m²) per eta
+//!   update regardless of sparsity — fine for small `m`, a wall past a
+//!   few hundred rows. Sparse LU factors with Forrest–Tomlin updates
+//!   ([`lu`]) scale with fill instead, and refactorize on fill *growth*
+//!   rather than a fixed pivot count.
+//!
 //! # Modules
 //!
 //! * [`problem`] — model: variables, `≤ / = / ≥` rows, upper bounds,
 //!   objective sense.
 //! * [`bounds`] — bound↔row lowering shared by the backends, plus the CSC
 //!   matrix type.
-//! * [`basis`] — explicit basis-inverse maintenance (eta updates,
-//!   Gauss–Jordan refactorization).
-//! * [`revised`] — bounded-variable revised simplex (the default backend).
+//! * [`factor`] — the [`Factorization`] trait + engine selection.
+//! * [`basis`] — dense explicit basis inverse (eta updates, Gauss–Jordan
+//!   refactorization); the small-`m` fast path.
+//! * [`lu`] — sparse LU with Forrest–Tomlin updates; the large-`m` path.
+//! * [`revised`] — bounded-variable revised simplex (the default backend),
+//!   including both pricing rules.
 //! * [`simplex`] — dense two-phase full-tableau primal simplex (ablation
 //!   baseline; bounds are expanded into rows).
 //! * [`warm`] — [`WarmSolver`]: backend selection + the warm-start state
@@ -57,12 +78,15 @@
 
 pub mod basis;
 pub mod bounds;
+pub mod factor;
+pub mod lu;
 pub mod problem;
 pub mod revised;
 pub mod simplex;
 pub mod warm;
 
+pub use factor::{FactorKind, Factorization};
 pub use problem::{Constraint, LpProblem, Relation};
-pub use revised::RevisedSolver;
+pub use revised::{Pricing, RevisedSolver};
 pub use simplex::{SimplexError, Solution, Solver};
 pub use warm::{SolverKind, WarmSolver};

@@ -10,8 +10,11 @@
 /// Row relation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Relation {
+    /// `row · x ≤ rhs`
     Le,
+    /// `row · x = rhs`
     Eq,
+    /// `row · x ≥ rhs`
     Ge,
 }
 
@@ -20,16 +23,40 @@ pub enum Relation {
 pub struct Constraint {
     /// (variable index, coefficient) pairs; indices must be unique.
     pub terms: Vec<(usize, f64)>,
+    /// Relation between `terms · x` and `rhs`.
     pub rel: Relation,
+    /// Right-hand-side constant.
     pub rhs: f64,
 }
 
 /// Minimization LP with non-negative, optionally upper-bounded variables.
+///
+/// # Example
+///
+/// Build a small bounded LP and solve it with the production backend
+/// (maximize `3x + 5y` by minimizing its negation):
+///
+/// ```
+/// use micromoe::lp::{LpProblem, Relation};
+///
+/// let mut p = LpProblem::new(2);
+/// p.set_objective(0, -3.0);
+/// p.set_objective(1, -5.0);
+/// p.set_upper(0, 4.0); // x ≤ 4 as an implicit variable bound, not a row
+/// p.set_upper(1, 6.0);
+/// p.add(vec![(0, 3.0), (1, 2.0)], Relation::Le, 18.0);
+///
+/// let s = micromoe::lp::revised::solve(&p).unwrap();
+/// assert!((s.objective - (-36.0)).abs() < 1e-6);
+/// assert!((s.x[0] - 2.0).abs() < 1e-6 && (s.x[1] - 6.0).abs() < 1e-6);
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct LpProblem {
+    /// Number of structural variables.
     pub num_vars: usize,
     /// Objective coefficients (len == num_vars); minimized.
     pub objective: Vec<f64>,
+    /// Constraint rows, in insertion order.
     pub constraints: Vec<Constraint>,
     /// Per-variable upper bounds (len == num_vars); `f64::INFINITY` when
     /// unbounded above. Lower bounds are always 0.
@@ -37,6 +64,7 @@ pub struct LpProblem {
 }
 
 impl LpProblem {
+    /// Empty problem over `num_vars` non-negative variables.
     pub fn new(num_vars: usize) -> Self {
         LpProblem {
             num_vars,
@@ -46,10 +74,12 @@ impl LpProblem {
         }
     }
 
+    /// Set one objective coefficient (minimized).
     pub fn set_objective(&mut self, var: usize, coeff: f64) {
         self.objective[var] = coeff;
     }
 
+    /// Append a constraint row, returning its row index.
     pub fn add(&mut self, terms: Vec<(usize, f64)>, rel: Relation, rhs: f64) -> usize {
         debug_assert!(terms.iter().all(|&(v, _)| v < self.num_vars));
         self.constraints.push(Constraint { terms, rel, rhs });

@@ -2,15 +2,34 @@
 //!
 //! Where the dense tableau pays O(m · ncols) per pivot over a tableau that
 //! retains every slack and artificial column, this solver keeps the
-//! constraint matrix in CSC form ([`super::bounds::Csc`]), maintains an
-//! explicit m×m basis inverse updated by eta/product-form pivots with
-//! periodic refactorization ([`super::basis::BasisInverse`]), and prices
-//! columns lazily: per pivot it spends O(m²) on the eta update plus
-//! O(nnz(col)) per priced column. Simple upper bounds `0 ≤ x_j ≤ u_j` are
-//! enforced *implicitly* in the ratio tests — a bounded nonbasic variable
-//! rests at either bound and can "bound-flip" without a basis change — so
-//! LPP-4's `l ≤ input` cap rows and the topology-aware `n ≤ node_input`
-//! rows never enter `m`, the quantity every inner loop scales with.
+//! constraint matrix in CSC form ([`super::bounds::Csc`]), maintains the
+//! basis behind the [`Factorization`] trait — a dense explicit `B⁻¹` for
+//! small `m`, sparse LU factors with Forrest–Tomlin updates beyond
+//! ([`super::factor::FactorKind`]) — and prices columns lazily. Simple
+//! upper bounds `0 ≤ x_j ≤ u_j` are enforced *implicitly* in the ratio
+//! tests — a bounded nonbasic variable rests at either bound and can
+//! "bound-flip" without a basis change — so LPP-4's `l ≤ input` cap rows
+//! and the topology-aware `n ≤ node_input` rows never enter `m`, the
+//! quantity every inner loop scales with.
+//!
+//! # Pricing ([`Pricing`])
+//!
+//! * [`Pricing::Dantzig`] — full nonbasic sweep per pivot, most attractive
+//!   reduced cost. O(nnz(A)) per pivot regardless of how many pivots the
+//!   chosen column saves; the PR-1 baseline, kept for ablations.
+//! * [`Pricing::Devex`] — reference-framework devex weights (Forrest &
+//!   Goldfarb's practical approximation of steepest edge) scored as
+//!   `d_j² / w_j`, over a **partial candidate-list sweep**: a short list of
+//!   attractive columns is retained between pivots and re-priced first; a
+//!   full sweep runs only when the list dries up. Weight updates are
+//!   applied to the candidate list only (partial devex) and the reference
+//!   framework resets when any weight outgrows `DEVEX_RESET`. The dual
+//!   iterations use the mirror-image device: leaving rows are selected by
+//!   `violation² / w_i` with dual-devex row weights that update in O(m)
+//!   from quantities the pivot already computed.
+//!
+//! Anti-cycling: after a stall both rules fall back to Bland's first-index
+//! sweep, exactly as before.
 //!
 //! Warm start (§5.1): between micro-batches only `b` and the bounds move,
 //! so the previous optimal basis stays dual-feasible; [`RevisedSolver::warm_resolve`]
@@ -18,12 +37,34 @@
 //! simplex until primal feasibility returns — the same contract the dense
 //! path honours, typically a handful of pivots.
 
-use super::basis::BasisInverse;
 use super::bounds::Csc;
+use super::factor::{FactorKind, Factorization};
 use super::problem::{LpProblem, Relation};
 use super::simplex::{SimplexError, Solution};
 
 const TOL: f64 = 1e-9;
+
+/// Upper bound on the devex candidate-list length. Long enough that the
+/// list survives several pivots between full sweeps, short enough that
+/// re-pricing it is much cheaper than a sweep.
+const CAND_MAX: usize = 48;
+
+/// Devex reference-framework reset threshold: once any weight outgrows
+/// this, the approximation has drifted too far from the reference frame —
+/// restart with all weights at 1.
+const DEVEX_RESET: f64 = 1e8;
+
+/// Column-pricing rule for the primal iterations (mirrored as the
+/// leaving-row rule in the dual iterations).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Pricing {
+    /// Full nonbasic sweep, most attractive reduced cost per pivot.
+    Dantzig,
+    /// Devex reference weights over a lazily refreshed candidate list —
+    /// fewer pivots *and* cheaper pricing per pivot; the production rule.
+    #[default]
+    Devex,
+}
 
 /// Where a column currently lives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,7 +95,16 @@ pub struct RevisedSolver {
     basis: Vec<usize>,
     state: Vec<VarState>,
     xb: Vec<f64>,
-    binv: BasisInverse,
+    factor: Box<dyn Factorization>,
+    /// the engine actually built (never [`FactorKind::Auto`])
+    factor_kind: FactorKind,
+    pricing: Pricing,
+    /// devex reference weights per column (primal pricing)
+    pweight: Vec<f64>,
+    /// devex reference weights per row (dual leaving-row selection)
+    dweight: Vec<f64>,
+    /// candidate list for partial primal pricing
+    cands: Vec<usize>,
     pub(crate) iterations: usize,
     phase1_done: bool,
     // scratch buffers reused across pivots
@@ -66,10 +116,17 @@ pub struct RevisedSolver {
 }
 
 impl RevisedSolver {
+    /// Build with the production configuration (devex pricing, automatic
+    /// factorization choice).
+    pub fn new(p: &LpProblem) -> Self {
+        Self::with_config(p, Pricing::default(), FactorKind::default())
+    }
+
     /// Build standard form: one slack per `≤`/`≥` row, one artificial per
     /// `≥`/`=` row, rows sign-flipped so `b ≥ 0`, initial basis = the
-    /// identity of slacks/artificials.
-    pub fn new(p: &LpProblem) -> Self {
+    /// identity of slacks/artificials. `pricing` and `factor` select the
+    /// inner engines ([`FactorKind::Auto`] resolves against `m` here).
+    pub fn with_config(p: &LpProblem, pricing: Pricing, factor: FactorKind) -> Self {
         let m = p.constraints.len();
         let n = p.num_vars;
 
@@ -158,6 +215,7 @@ impl RevisedSolver {
             xb[i] = b[i];
         }
 
+        let factor_kind = factor.resolve(m);
         RevisedSolver {
             n_orig: n,
             ncols,
@@ -171,7 +229,12 @@ impl RevisedSolver {
             basis,
             state,
             xb,
-            binv: BasisInverse::identity(m),
+            factor: factor_kind.build(m),
+            factor_kind,
+            pricing,
+            pweight: vec![1.0; ncols],
+            dweight: vec![1.0; m],
+            cands: Vec::new(),
             iterations: 0,
             phase1_done: false,
             w: vec![0.0; m],
@@ -180,6 +243,16 @@ impl RevisedSolver {
             rhs_buf: vec![0.0; m],
             cb_scratch: Vec::with_capacity(m),
         }
+    }
+
+    /// The pricing rule this solver was built with.
+    pub fn pricing(&self) -> Pricing {
+        self.pricing
+    }
+
+    /// The factorization engine actually in use (never [`FactorKind::Auto`]).
+    pub fn factor_kind(&self) -> FactorKind {
+        self.factor_kind
     }
 
     /// Replace a row's rhs (original row order; sign normalization from
@@ -221,7 +294,7 @@ impl RevisedSolver {
             }
         }
         let mut xb = std::mem::take(&mut self.xb);
-        self.binv.ftran_dense(&self.rhs_buf, &mut xb);
+        self.factor.ftran_dense(&self.rhs_buf, &mut xb);
         self.xb = xb;
     }
 
@@ -235,7 +308,7 @@ impl RevisedSolver {
             }
         }
         let mut y = std::mem::take(&mut self.y);
-        self.binv.btran_costs(&self.cb_scratch, &mut y);
+        self.factor.btran_costs(&self.cb_scratch, &mut y);
         self.y = y;
     }
 
@@ -243,18 +316,193 @@ impl RevisedSolver {
     fn ftran_col(&mut self, j: usize) {
         let (rows, vals) = self.csc.col(j);
         let mut w = std::mem::take(&mut self.w);
-        self.binv.ftran_sparse(rows, vals, &mut w);
+        self.factor.ftran_sparse(rows, vals, &mut w);
         self.w = w;
     }
 
-    /// Refactorize and refresh `x_B`; called on drift or when the eta count
-    /// says so.
+    /// `rho = e_r' B⁻¹` into the scratch `rho`.
+    fn btran_row(&mut self, r: usize) {
+        let mut rho = std::mem::take(&mut self.rho);
+        self.factor.btran_unit(r, &mut rho);
+        self.rho = rho;
+    }
+
+    /// Refactorize and refresh `x_B`; called on drift or when the engine
+    /// says so (eta count for the dense inverse, fill growth for LU).
     fn refactor(&mut self) -> Result<(), SimplexError> {
-        self.binv
+        self.factor
             .refactor(&self.csc, &self.basis)
             .map_err(|_| SimplexError::Numerical("singular basis on refactor"))?;
         self.recompute_xb();
         Ok(())
+    }
+
+    /// Dual-devex row-weight update — O(m) from the entering column's
+    /// FTRAN image alone, so (under devex pricing) it runs on *every*
+    /// pivot, primal or dual, and the weights stay usable across the
+    /// warm-start dual repairs. Dantzig-configured solves skip it: they
+    /// never read the weights, and the baseline ablation cells must not
+    /// carry devex bookkeeping inside the thing they isolate.
+    fn update_dual_weights(&mut self, leave: usize) {
+        let tau = self.w[leave];
+        if tau.abs() < TOL {
+            return; // degenerate pivot: keep the old (still valid) weights
+        }
+        let dr_old = self.dweight[leave].max(1.0);
+        let tau2 = tau * tau;
+        let mut maxw: f64 = 0.0;
+        for i in 0..self.m {
+            if i == leave {
+                continue;
+            }
+            let wi = self.w[i];
+            if wi != 0.0 {
+                let cand = (wi * wi / tau2) * dr_old;
+                if cand > self.dweight[i] {
+                    self.dweight[i] = cand;
+                }
+            }
+            maxw = maxw.max(self.dweight[i]);
+        }
+        self.dweight[leave] = (dr_old / tau2).max(1.0);
+        if maxw > DEVEX_RESET {
+            self.dweight.fill(1.0);
+        }
+    }
+
+    /// Primal-devex weight update, run *before* the pivot is applied
+    /// (needs `e_leave' B⁻¹` of the outgoing basis). Partial devex: only
+    /// the candidate list — the columns that will actually be priced next —
+    /// receives the exact `max(w_j, (α_rj/α_rq)²·w_q)` update; all other
+    /// weights stay stale-but-monotone until the next reference reset.
+    fn update_primal_weights(&mut self, enter: usize, leave: usize) {
+        let alpha_q = self.w[leave];
+        if alpha_q.abs() < TOL {
+            return;
+        }
+        let wq = self.pweight[enter].max(1.0);
+        let pivot2 = alpha_q * alpha_q;
+        self.btran_row(leave);
+        let mut maxw = wq;
+        for &j in &self.cands {
+            if j == enter || self.state[j] == VarState::Basic || self.fixed(j) {
+                continue;
+            }
+            let alpha = self.csc.col_dot(j, &self.rho);
+            if alpha != 0.0 {
+                let cand = (alpha * alpha / pivot2) * wq;
+                if cand > self.pweight[j] {
+                    self.pweight[j] = cand;
+                }
+            }
+            maxw = maxw.max(self.pweight[j]);
+        }
+        // the leaving variable re-enters the nonbasic pool carrying the
+        // devex estimate of its new norm
+        self.pweight[self.basis[leave]] = (wq / pivot2).max(1.0);
+        if maxw > DEVEX_RESET {
+            self.pweight.fill(1.0);
+        }
+    }
+
+    /// Infeasibility-signed reduced cost of nonbasic column `j`: positive
+    /// means moving `j` off its bound improves the objective.
+    #[inline]
+    fn attractiveness(&self, j: usize, cost: &[f64]) -> f64 {
+        let d = cost[j] - self.csc.col_dot(j, &self.y);
+        match self.state[j] {
+            VarState::AtLower => -d,
+            VarState::AtUpper => d,
+            VarState::Basic => 0.0,
+        }
+    }
+
+    /// Dantzig pricing: full sweep, most attractive reduced cost. With
+    /// `bland`, first attractive index (Bland's anti-cycling rule).
+    fn price_dantzig(&mut self, cost: &[f64], bland: bool) -> Option<(usize, bool)> {
+        let mut enter = usize::MAX;
+        let mut best = TOL;
+        for j in 0..self.ncols {
+            if self.state[j] == VarState::Basic || self.fixed(j) {
+                continue;
+            }
+            let score = self.attractiveness(j, cost);
+            if score > best {
+                enter = j;
+                best = score;
+                if bland {
+                    break;
+                }
+            }
+        }
+        if enter == usize::MAX {
+            None
+        } else {
+            Some((enter, self.state[enter] == VarState::AtUpper))
+        }
+    }
+
+    /// Re-price the candidate list, dropping entries that went basic,
+    /// fixed, or unattractive. Returns the best by devex score.
+    fn best_of_candidates(&mut self, cost: &[f64]) -> Option<(usize, bool)> {
+        let mut enter = usize::MAX;
+        let mut best_score = 0.0;
+        let mut i = 0;
+        while i < self.cands.len() {
+            let j = self.cands[i];
+            let mut drop = true;
+            if self.state[j] != VarState::Basic && !self.fixed(j) {
+                let a = self.attractiveness(j, cost);
+                if a > TOL {
+                    drop = false;
+                    let score = a * a / self.pweight[j].max(1.0);
+                    if score > best_score {
+                        best_score = score;
+                        enter = j;
+                    }
+                }
+            }
+            if drop {
+                self.cands.swap_remove(i);
+            } else {
+                i += 1;
+            }
+        }
+        if enter == usize::MAX {
+            None
+        } else {
+            Some((enter, self.state[enter] == VarState::AtUpper))
+        }
+    }
+
+    /// Full pricing sweep: keep the [`CAND_MAX`] best-scoring attractive
+    /// columns as the new candidate list.
+    fn rebuild_candidates(&mut self, cost: &[f64]) {
+        self.cands.clear();
+        let mut scored: Vec<(f64, usize)> = Vec::new();
+        for j in 0..self.ncols {
+            if self.state[j] == VarState::Basic || self.fixed(j) {
+                continue;
+            }
+            let a = self.attractiveness(j, cost);
+            if a > TOL {
+                scored.push((a * a / self.pweight[j].max(1.0), j));
+            }
+        }
+        // descending score, index as a deterministic tie-break
+        scored.sort_unstable_by(|x, y| y.0.partial_cmp(&x.0).unwrap().then(x.1.cmp(&y.1)));
+        scored.truncate(CAND_MAX);
+        self.cands.extend(scored.into_iter().map(|(_, j)| j));
+    }
+
+    /// Devex pricing: candidate list first, full-sweep refresh only when
+    /// the list runs dry. `None` means no attractive column — optimal.
+    fn price_devex(&mut self, cost: &[f64]) -> Option<(usize, bool)> {
+        if let Some(pick) = self.best_of_candidates(cost) {
+            return Some(pick);
+        }
+        self.rebuild_candidates(cost);
+        self.best_of_candidates(cost)
     }
 
     /// Execute an accepted pivot: entering column `enter` moves by `t` from
@@ -273,60 +521,51 @@ impl RevisedSolver {
             self.xb[i] -= sigma * t * self.w[i];
         }
         let entering_val = if enter_from_upper { self.upper[enter] - t } else { t };
+        if self.pricing == Pricing::Devex {
+            self.update_dual_weights(leave);
+        }
         let old = self.basis[leave];
         self.state[old] = if leave_to_upper { VarState::AtUpper } else { VarState::AtLower };
         self.basis[leave] = enter;
         self.state[enter] = VarState::Basic;
         self.xb[leave] = entering_val;
-        if self.binv.update(&self.w, leave).is_err() {
-            // eta pivot numerically unusable: rebuild the inverse instead
+        let (rows, vals) = self.csc.col(enter);
+        if self.factor.pivot_update(rows, vals, &self.w, leave).is_err() {
+            // pivot numerically unusable for the engine: rebuild instead
             self.refactor()?;
         }
         self.iterations += 1;
         Ok(())
     }
 
-    /// Primal simplex to optimality for `cost` (bounded Dantzig pricing
+    /// Primal simplex to optimality for `cost` (devex or Dantzig pricing
     /// with a Bland fallback for anti-cycling).
     fn primal_iterate(&mut self, cost: &[f64]) -> Result<(), SimplexError> {
         let limit = 200 * (self.m + self.ncols) + 1000;
         let mut steps = 0usize;
+        // a (possibly) new objective invalidates the devex state: start
+        // from a fresh reference framework and an empty candidate list
+        self.pweight.fill(1.0);
+        self.cands.clear();
         loop {
             steps += 1;
             if steps > limit {
                 return Err(SimplexError::IterLimit(limit));
             }
-            if self.binv.due_for_refactor() {
+            if self.factor.due_for_refactor() {
                 self.refactor()?;
             }
             let use_bland = steps > 2 * (self.m + self.ncols);
             self.compute_y(cost);
             // ---- pricing ----
-            let mut enter = usize::MAX;
-            let mut enter_from_upper = false;
-            let mut best = TOL;
-            for j in 0..self.ncols {
-                if self.state[j] == VarState::Basic || self.fixed(j) {
-                    continue;
-                }
-                let d = cost[j] - self.csc.col_dot(j, &self.y);
-                let score = match self.state[j] {
-                    VarState::AtLower => -d,
-                    VarState::AtUpper => d,
-                    VarState::Basic => unreachable!(),
-                };
-                if score > best {
-                    enter = j;
-                    enter_from_upper = self.state[j] == VarState::AtUpper;
-                    best = score;
-                    if use_bland {
-                        break; // Bland: first improving index
-                    }
-                }
-            }
-            if enter == usize::MAX {
+            let picked = if use_bland || self.pricing == Pricing::Dantzig {
+                self.price_dantzig(cost, use_bland)
+            } else {
+                self.price_devex(cost)
+            };
+            let Some((enter, enter_from_upper)) = picked else {
                 return Ok(()); // optimal
-            }
+            };
             self.ftran_col(enter);
             let sigma = if enter_from_upper { -1.0 } else { 1.0 };
             // ---- bounded ratio test ----
@@ -381,6 +620,9 @@ impl RevisedSolver {
                 self.iterations += 1;
                 continue;
             }
+            if !use_bland && self.pricing == Pricing::Devex {
+                self.update_primal_weights(enter, leave);
+            }
             self.apply_pivot(enter, enter_from_upper, leave, leave_to_upper, t)?;
         }
     }
@@ -396,35 +638,40 @@ impl RevisedSolver {
             if steps > limit {
                 return Err(SimplexError::IterLimit(limit));
             }
-            if self.binv.due_for_refactor() {
+            if self.factor.due_for_refactor() {
                 self.refactor()?;
             }
-            // ---- leaving row: largest bound violation ----
+            // ---- leaving row: devex-weighted (or plain largest) bound
+            // violation ----
             let mut leave = usize::MAX;
-            let mut worst = TOL;
+            let mut worst = 0.0; // violation magnitude of the chosen row
+            let mut best_score = 0.0;
             let mut above = false;
             for i in 0..self.m {
-                let viol_low = -self.xb[i];
-                if viol_low > worst {
-                    worst = viol_low;
-                    leave = i;
-                    above = false;
-                }
                 let ub = self.upper[self.basis[i]];
-                if ub.is_finite() {
-                    let viol_up = self.xb[i] - ub;
-                    if viol_up > worst {
-                        worst = viol_up;
-                        leave = i;
-                        above = true;
-                    }
+                let viol_low = -self.xb[i];
+                let viol_up = if ub.is_finite() { self.xb[i] - ub } else { f64::NEG_INFINITY };
+                let (viol, is_above) =
+                    if viol_up > viol_low { (viol_up, true) } else { (viol_low, false) };
+                if viol <= TOL {
+                    continue;
+                }
+                let score = match self.pricing {
+                    Pricing::Dantzig => viol,
+                    Pricing::Devex => viol * viol / self.dweight[i].max(1.0),
+                };
+                if score > best_score {
+                    best_score = score;
+                    worst = viol;
+                    leave = i;
+                    above = is_above;
                 }
             }
             if leave == usize::MAX {
                 return Ok(()); // primal feasible again
             }
             self.compute_y(&cost);
-            self.rho.copy_from_slice(self.binv.row(leave));
+            self.btran_row(leave);
             // `dir`: the sign x_B[leave] must move in (+1 = decrease needed
             // is encoded through the eligibility signs below)
             let dir = if above { 1.0 } else { -1.0 };
@@ -491,7 +738,7 @@ impl RevisedSolver {
             if self.basis[r] < self.art_base {
                 continue;
             }
-            self.rho.copy_from_slice(self.binv.row(r));
+            self.btran_row(r);
             let mut found = usize::MAX;
             for j in 0..self.art_base {
                 // prefer columns free to move later (skip pinned ones)
@@ -594,7 +841,8 @@ impl RevisedSolver {
     }
 }
 
-/// One-shot convenience: build + solve with the revised simplex.
+/// One-shot convenience: build + solve with the revised simplex in its
+/// production configuration.
 pub fn solve(p: &LpProblem) -> Result<Solution, SimplexError> {
     RevisedSolver::new(p).solve()
 }
@@ -606,6 +854,24 @@ mod tests {
 
     fn assert_close(a: f64, b: f64) {
         assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    /// Every (pricing × factorization) configuration worth differentiating.
+    fn all_configs() -> [(Pricing, FactorKind); 4] {
+        [
+            (Pricing::Dantzig, FactorKind::DenseInverse),
+            (Pricing::Dantzig, FactorKind::SparseLu),
+            (Pricing::Devex, FactorKind::DenseInverse),
+            (Pricing::Devex, FactorKind::SparseLu),
+        ]
+    }
+
+    fn solve_with(
+        p: &LpProblem,
+        pricing: Pricing,
+        factor: FactorKind,
+    ) -> Result<Solution, SimplexError> {
+        RevisedSolver::with_config(p, pricing, factor).solve()
     }
 
     #[test]
@@ -634,7 +900,7 @@ mod tests {
     }
 
     #[test]
-    fn classic_two_var() {
+    fn classic_two_var_all_configs() {
         // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 -> (2,6), 36
         let mut p = LpProblem::new(2);
         p.set_objective(0, -3.0);
@@ -642,10 +908,12 @@ mod tests {
         p.add(vec![(0, 1.0)], Le, 4.0);
         p.add(vec![(1, 2.0)], Le, 12.0);
         p.add(vec![(0, 3.0), (1, 2.0)], Le, 18.0);
-        let s = solve(&p).unwrap();
-        assert_close(s.x[0], 2.0);
-        assert_close(s.x[1], 6.0);
-        assert_close(s.objective, -36.0);
+        for (pricing, factor) in all_configs() {
+            let s = solve_with(&p, pricing, factor).unwrap();
+            assert_close(s.x[0], 2.0);
+            assert_close(s.x[1], 6.0);
+            assert_close(s.objective, -36.0);
+        }
     }
 
     #[test]
@@ -657,10 +925,12 @@ mod tests {
         p.set_upper(0, 4.0);
         p.set_upper(1, 6.0);
         p.add(vec![(0, 3.0), (1, 2.0)], Le, 18.0);
-        let s = solve(&p).unwrap();
-        assert_close(s.x[0], 2.0);
-        assert_close(s.x[1], 6.0);
-        assert_close(s.objective, -36.0);
+        for (pricing, factor) in all_configs() {
+            let s = solve_with(&p, pricing, factor).unwrap();
+            assert_close(s.x[0], 2.0);
+            assert_close(s.x[1], 6.0);
+            assert_close(s.objective, -36.0);
+        }
     }
 
     #[test]
@@ -671,10 +941,12 @@ mod tests {
         p.set_objective(1, 2.0);
         p.add(vec![(0, 1.0), (1, 1.0)], Eq, 10.0);
         p.add(vec![(0, 1.0), (1, -1.0)], Eq, 2.0);
-        let s = solve(&p).unwrap();
-        assert_close(s.x[0], 6.0);
-        assert_close(s.x[1], 4.0);
-        assert_close(s.objective, 14.0);
+        for (pricing, factor) in all_configs() {
+            let s = solve_with(&p, pricing, factor).unwrap();
+            assert_close(s.x[0], 6.0);
+            assert_close(s.x[1], 4.0);
+            assert_close(s.objective, 14.0);
+        }
     }
 
     #[test]
@@ -692,7 +964,12 @@ mod tests {
         let mut p = LpProblem::new(1);
         p.add(vec![(0, 1.0)], Le, 1.0);
         p.add(vec![(0, 1.0)], Ge, 2.0);
-        assert!(matches!(solve(&p), Err(SimplexError::Infeasible(_))));
+        for (pricing, factor) in all_configs() {
+            assert!(matches!(
+                solve_with(&p, pricing, factor),
+                Err(SimplexError::Infeasible(_))
+            ));
+        }
     }
 
     #[test]
@@ -709,7 +986,9 @@ mod tests {
         let mut p = LpProblem::new(1);
         p.set_objective(0, -1.0);
         p.add(vec![(0, -1.0)], Le, 0.0);
-        assert_eq!(solve(&p).unwrap_err(), SimplexError::Unbounded);
+        for (pricing, factor) in all_configs() {
+            assert_eq!(solve_with(&p, pricing, factor).unwrap_err(), SimplexError::Unbounded);
+        }
     }
 
     #[test]
@@ -746,9 +1025,11 @@ mod tests {
         p.add(vec![(1, 1.0), (3, 1.0), (4, -1.0)], Le, 0.0);
         p.add(vec![(0, 1.0), (1, 1.0)], Eq, 10.0);
         p.add(vec![(2, 1.0), (3, 1.0)], Eq, 2.0);
-        let s = solve(&p).unwrap();
-        assert_close(s.objective, 6.0);
-        assert!(p.is_feasible(&s.x, 1e-7));
+        for (pricing, factor) in all_configs() {
+            let s = solve_with(&p, pricing, factor).unwrap();
+            assert_close(s.objective, 6.0);
+            assert!(p.is_feasible(&s.x, 1e-7));
+        }
     }
 
     #[test]
@@ -762,84 +1043,142 @@ mod tests {
             p.add(vec![(2, 1.0), (3, 1.0)], Eq, l1);
             p
         };
-        let mut s = RevisedSolver::new(&build(10.0, 2.0));
-        let s0 = s.solve().unwrap();
-        assert_close(s0.objective, 6.0);
-        for (l0, l1) in [(4.0, 4.0), (20.0, 0.0), (1.0, 7.0), (100.0, 50.0)] {
-            s.update_rhs(2, l0);
-            s.update_rhs(3, l1);
-            let sw = s.warm_resolve().unwrap();
-            let sc = solve(&build(l0, l1)).unwrap();
-            assert!(
-                (sw.objective - sc.objective).abs() < 1e-6,
-                "loads ({l0},{l1}): warm {} cold {}",
-                sw.objective,
-                sc.objective
-            );
+        for (pricing, factor) in all_configs() {
+            let mut s = RevisedSolver::with_config(&build(10.0, 2.0), pricing, factor);
+            let s0 = s.solve().unwrap();
+            assert_close(s0.objective, 6.0);
+            for (l0, l1) in [(4.0, 4.0), (20.0, 0.0), (1.0, 7.0), (100.0, 50.0)] {
+                s.update_rhs(2, l0);
+                s.update_rhs(3, l1);
+                let sw = s.warm_resolve().unwrap();
+                let sc = solve(&build(l0, l1)).unwrap();
+                assert!(
+                    (sw.objective - sc.objective).abs() < 1e-6,
+                    "{pricing:?}/{factor:?} loads ({l0},{l1}): warm {} cold {}",
+                    sw.objective,
+                    sc.objective
+                );
+            }
         }
     }
 
     #[test]
     fn warm_resolve_tracks_bound_changes() {
         // min -x0-x1 s.t. x0+x1 <= 10, x0 <= u (bound, updated warm)
-        let mut p = LpProblem::new(2);
-        p.set_objective(0, -2.0);
-        p.set_objective(1, -1.0);
-        p.set_upper(0, 3.0);
-        p.add(vec![(0, 1.0), (1, 1.0)], Le, 10.0);
-        let mut s = RevisedSolver::new(&p);
-        let s0 = s.solve().unwrap();
-        assert_close(s0.objective, -13.0); // x0=3, x1=7
-        for u in [0.0, 5.0, 8.0, 2.0, 10.0, 12.0] {
-            s.update_upper(0, u);
-            let sw = s.warm_resolve().unwrap();
-            let expect = -(u.min(10.0) * 2.0 + (10.0 - u.min(10.0)));
-            assert!(
-                (sw.objective - expect).abs() < 1e-6,
-                "u={u}: warm {} expect {expect}",
-                sw.objective
-            );
+        for (pricing, factor) in all_configs() {
+            let mut p = LpProblem::new(2);
+            p.set_objective(0, -2.0);
+            p.set_objective(1, -1.0);
+            p.set_upper(0, 3.0);
+            p.add(vec![(0, 1.0), (1, 1.0)], Le, 10.0);
+            let mut s = RevisedSolver::with_config(&p, pricing, factor);
+            let s0 = s.solve().unwrap();
+            assert_close(s0.objective, -13.0); // x0=3, x1=7
+            for u in [0.0, 5.0, 8.0, 2.0, 10.0, 12.0] {
+                s.update_upper(0, u);
+                let sw = s.warm_resolve().unwrap();
+                let expect = -(u.min(10.0) * 2.0 + (10.0 - u.min(10.0)));
+                assert!(
+                    (sw.objective - expect).abs() < 1e-6,
+                    "{pricing:?}/{factor:?} u={u}: warm {} expect {expect}",
+                    sw.objective
+                );
+            }
         }
     }
 
     #[test]
     fn solution_is_feasible_random_problems() {
         use crate::rng::Rng;
-        let mut rng = Rng::new(123);
-        for case in 0..60 {
-            let n = 2 + (case % 4);
-            let m = 1 + (case % 5);
-            let mut p = LpProblem::new(n);
-            for j in 0..n {
-                p.set_objective(j, rng.f64() * 2.0 - 0.5);
-            }
-            // sprinkle finite bounds on some variables
-            for j in 0..n {
-                if rng.f64() < 0.4 {
-                    p.set_upper(j, rng.f64() * 3.0);
+        for (pricing, factor) in all_configs() {
+            let mut rng = Rng::new(123);
+            for case in 0..60 {
+                let n = 2 + (case % 4);
+                let m = 1 + (case % 5);
+                let mut p = LpProblem::new(n);
+                for j in 0..n {
+                    p.set_objective(j, rng.f64() * 2.0 - 0.5);
+                }
+                // sprinkle finite bounds on some variables
+                for j in 0..n {
+                    if rng.f64() < 0.4 {
+                        p.set_upper(j, rng.f64() * 3.0);
+                    }
+                }
+                for _ in 0..m {
+                    let terms: Vec<(usize, f64)> = (0..n).map(|j| (j, rng.f64())).collect();
+                    p.add(terms, Le, 1.0 + rng.f64() * 5.0);
+                }
+                match solve_with(&p, pricing, factor) {
+                    Ok(s) => {
+                        assert!(
+                            p.is_feasible(&s.x, 1e-6),
+                            "{pricing:?}/{factor:?} case {case}: {:?}",
+                            s.x
+                        );
+                        for _ in 0..20 {
+                            let cand: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0).collect();
+                            if p.is_feasible(&cand, 0.0) {
+                                assert!(
+                                    s.objective <= p.objective_at(&cand) + 1e-6,
+                                    "{pricing:?}/{factor:?} case {case}: {} > {}",
+                                    s.objective,
+                                    p.objective_at(&cand)
+                                );
+                            }
+                        }
+                    }
+                    Err(SimplexError::Unbounded) => {}
+                    Err(e) => panic!("{pricing:?}/{factor:?} case {case}: {e}"),
                 }
             }
-            for _ in 0..m {
-                let terms: Vec<(usize, f64)> = (0..n).map(|j| (j, rng.f64())).collect();
-                p.add(terms, Le, 1.0 + rng.f64() * 5.0);
-            }
-            match solve(&p) {
-                Ok(s) => {
-                    assert!(p.is_feasible(&s.x, 1e-6), "case {case}: {:?}", s.x);
-                    for _ in 0..20 {
-                        let cand: Vec<f64> = (0..n).map(|_| rng.f64() * 2.0).collect();
-                        if p.is_feasible(&cand, 0.0) {
-                            assert!(
-                                s.objective <= p.objective_at(&cand) + 1e-6,
-                                "case {case}: {} > {}",
-                                s.objective,
-                                p.objective_at(&cand)
-                            );
+        }
+    }
+
+    /// Devex must reach the same optima as Dantzig while its candidate
+    /// list keeps full pricing sweeps rare (indirectly: it must not blow
+    /// the pivot budget on a mid-sized minimax instance).
+    #[test]
+    fn devex_and_dantzig_agree_on_minimax_family() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(31);
+        for trial in 0..15 {
+            let g = 4 + (trial % 4); // gpus
+            let e = 2 * g; // experts, 2 replicas each
+            let nv = 2 * e + 1;
+            let t = nv - 1;
+            let mut p = LpProblem::new(nv);
+            p.set_objective(t, 1.0);
+            let homes: Vec<[usize; 2]> = (0..e)
+                .map(|_| {
+                    let a = rng.below(g as u64) as usize;
+                    let b = (a + 1 + rng.below((g - 1) as u64) as usize) % g;
+                    [a, b]
+                })
+                .collect();
+            for gi in 0..g {
+                let mut terms = vec![(t, -1.0)];
+                for (ei, h) in homes.iter().enumerate() {
+                    for (r, &hh) in h.iter().enumerate() {
+                        if hh == gi {
+                            terms.push((ei * 2 + r, 1.0));
                         }
                     }
                 }
-                Err(SimplexError::Unbounded) => {}
-                Err(e) => panic!("case {case}: {e}"),
+                p.add(terms, Relation::Le, 0.0);
+            }
+            for ei in 0..e {
+                p.add(vec![(ei * 2, 1.0), (ei * 2 + 1, 1.0)], Relation::Eq, rng.below(200) as f64);
+            }
+            let sx = solve_with(&p, Pricing::Dantzig, FactorKind::DenseInverse).unwrap();
+            for factor in [FactorKind::DenseInverse, FactorKind::SparseLu] {
+                let sd = solve_with(&p, Pricing::Devex, factor).unwrap();
+                assert!(
+                    (sd.objective - sx.objective).abs() < 1e-6 * (1.0 + sx.objective.abs()),
+                    "trial {trial} {factor:?}: devex {} dantzig {}",
+                    sd.objective,
+                    sx.objective
+                );
             }
         }
     }

@@ -11,14 +11,19 @@ use super::problem::{LpProblem, Relation};
 
 const TOL: f64 = 1e-9;
 
+/// Terminal outcome of a solve that did not produce an optimum.
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum SimplexError {
+    /// No feasible point exists (carries the residual phase-1 objective).
     #[error("LP infeasible (phase-1 objective {0} > 0)")]
     Infeasible(f64),
+    /// The objective decreases without bound along a feasible ray.
     #[error("LP unbounded below")]
     Unbounded,
+    /// Pivot budget exhausted — almost certainly numerical cycling.
     #[error("iteration limit {0} exceeded (cycling?)")]
     IterLimit(usize),
+    /// A basis operation broke down numerically.
     #[error("numerical breakdown: {0}")]
     Numerical(&'static str),
 }
@@ -28,6 +33,7 @@ pub enum SimplexError {
 pub struct Solution {
     /// Values of the original (pre-standard-form) variables.
     pub x: Vec<f64>,
+    /// Objective value at `x` (minimization sense).
     pub objective: f64,
     /// Total simplex pivots across phases (the Fig-11 warm-solve metric).
     pub iterations: usize,

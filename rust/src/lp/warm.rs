@@ -8,32 +8,74 @@
 //! pivots restore primal feasibility — orders of magnitude cheaper than a
 //! cold two-phase solve (Fig. 11's "warm solving" ablation).
 //!
-//! [`WarmSolver`] hides the backend choice: [`SolverKind::Revised`] (the
-//! default hot path) or [`SolverKind::DenseTableau`] (kept for the
-//! `ablation_solvers` bench and differential testing). Any warm-path
-//! failure — including a dual-simplex `Infeasible`, which can be a
-//! numerical artifact of a stale basis — falls back to a cold re-solve
-//! rather than poisoning or dropping the retained state.
+//! [`WarmSolver`] hides the backend choice behind [`SolverKind`]:
+//! [`SolverKind::Revised`] — the production path, itself parameterized by
+//! [`Pricing`] (Dantzig vs devex candidate-list) and [`FactorKind`] (dense
+//! explicit `B⁻¹` vs sparse LU with Forrest–Tomlin updates) so the
+//! `ablation_solvers` bench can measure every (pricing × factorization)
+//! cell — or [`SolverKind::DenseTableau`], the full-tableau baseline kept
+//! for ablations and differential testing. Any warm-path failure —
+//! including a dual-simplex `Infeasible`, which can be a numerical
+//! artifact of a stale basis — falls back to a cold re-solve rather than
+//! poisoning or dropping the retained state.
 
 use super::bounds;
+use super::factor::FactorKind;
 use super::problem::LpProblem;
-use super::revised::RevisedSolver;
+use super::revised::{Pricing, RevisedSolver};
 use super::simplex::{SimplexError, Solution, Solver};
 
 /// Which simplex implementation backs a [`WarmSolver`].
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SolverKind {
-    /// Bounded-variable revised simplex (sparse columns, explicit B⁻¹,
-    /// implicit bounds) — the production path.
-    #[default]
-    Revised,
+    /// Bounded-variable revised simplex (sparse columns, implicit bounds) —
+    /// the production path, with its two inner engines selectable.
+    Revised {
+        /// Column-pricing rule (devex candidate-list vs full Dantzig sweep).
+        pricing: Pricing,
+        /// Basis-factorization engine (dense inverse vs sparse LU).
+        factor: FactorKind,
+    },
     /// Dense full-tableau two-phase simplex; bounds are expanded into rows.
     /// Retained as the ablation baseline.
     DenseTableau,
 }
 
+impl Default for SolverKind {
+    fn default() -> Self {
+        SolverKind::Revised { pricing: Pricing::default(), factor: FactorKind::default() }
+    }
+}
+
+impl SolverKind {
+    /// The production configuration: revised simplex, devex pricing,
+    /// automatic factorization choice.
+    pub fn revised() -> Self {
+        Self::default()
+    }
+
+    /// Compact cell label for bench tables (`devex+lu`, `tableau`, …).
+    pub fn label(self) -> &'static str {
+        match self {
+            SolverKind::DenseTableau => "tableau",
+            SolverKind::Revised { pricing, factor } => match (pricing, factor) {
+                (Pricing::Dantzig, FactorKind::DenseInverse) => "dantzig+dense",
+                (Pricing::Dantzig, FactorKind::SparseLu) => "dantzig+lu",
+                (Pricing::Dantzig, FactorKind::Auto) => "dantzig+auto",
+                (Pricing::Devex, FactorKind::DenseInverse) => "devex+dense",
+                (Pricing::Devex, FactorKind::SparseLu) => "devex+lu",
+                (Pricing::Devex, FactorKind::Auto) => "devex+auto",
+            },
+        }
+    }
+}
+
 enum Backend {
-    Revised(Option<RevisedSolver>),
+    Revised {
+        slot: Option<RevisedSolver>,
+        pricing: Pricing,
+        factor: FactorKind,
+    },
     Dense {
         solver: Option<Solver>,
         /// bound-expanded clone of the problem + per-variable bound-row map
@@ -43,6 +85,32 @@ enum Backend {
 }
 
 /// A solver that remembers its optimal basis between solves.
+///
+/// # Example
+///
+/// Solve cold once, then warm re-solve after a variable-bound edit (the
+/// LPP-4 per-micro-batch pattern — only `input_e^g` caps move):
+///
+/// ```
+/// use micromoe::lp::{LpProblem, Relation, WarmSolver};
+///
+/// // min -l0 - l1  s.t.  l0 + l1 ≤ 8,  l0 ≤ 3,  l1 ≤ 3
+/// let mut p = LpProblem::new(2);
+/// p.set_objective(0, -1.0);
+/// p.set_objective(1, -1.0);
+/// p.set_upper(0, 3.0);
+/// p.set_upper(1, 3.0);
+/// p.add(vec![(0, 1.0), (1, 1.0)], Relation::Le, 8.0);
+///
+/// let mut warm = WarmSolver::new(p);
+/// let s0 = warm.solve_cold().unwrap();
+/// assert!((s0.objective - (-6.0)).abs() < 1e-9);
+///
+/// // next micro-batch: both caps rise to 5 — warm repair, no cold solve
+/// let s1 = warm.resolve_with_bounds(&[], &[(0, 5.0), (1, 5.0)]).unwrap();
+/// assert!((s1.objective - (-8.0)).abs() < 1e-9);
+/// assert!(warm.last_was_warm);
+/// ```
 pub struct WarmSolver {
     backend: Backend,
     problem: LpProblem,
@@ -53,13 +121,17 @@ pub struct WarmSolver {
 }
 
 impl WarmSolver {
+    /// Production-configuration warm solver (see [`SolverKind::revised`]).
     pub fn new(problem: LpProblem) -> Self {
-        Self::with_kind(problem, SolverKind::Revised)
+        Self::with_kind(problem, SolverKind::default())
     }
 
+    /// Warm solver with an explicit backend choice.
     pub fn with_kind(problem: LpProblem, kind: SolverKind) -> Self {
         let backend = match kind {
-            SolverKind::Revised => Backend::Revised(None),
+            SolverKind::Revised { pricing, factor } => {
+                Backend::Revised { slot: None, pricing, factor }
+            }
             SolverKind::DenseTableau => {
                 let (expanded, bound_row) = bounds::expand_to_rows(&problem);
                 Backend::Dense { solver: None, expanded, bound_row }
@@ -68,13 +140,17 @@ impl WarmSolver {
         WarmSolver { backend, problem, last_iterations: 0, last_was_warm: false }
     }
 
+    /// The backend this solver was built with.
     pub fn kind(&self) -> SolverKind {
-        match self.backend {
-            Backend::Revised(_) => SolverKind::Revised,
+        match &self.backend {
+            Backend::Revised { pricing, factor, .. } => {
+                SolverKind::Revised { pricing: *pricing, factor: *factor }
+            }
             Backend::Dense { .. } => SolverKind::DenseTableau,
         }
     }
 
+    /// The (bound-form) problem being solved, with all updates applied.
     pub fn problem(&self) -> &LpProblem {
         &self.problem
     }
@@ -83,9 +159,9 @@ impl WarmSolver {
     pub fn solve_cold(&mut self) -> Result<Solution, SimplexError> {
         self.last_was_warm = false;
         match &mut self.backend {
-            Backend::Revised(slot) => {
+            Backend::Revised { slot, pricing, factor } => {
                 *slot = None;
-                let mut s = RevisedSolver::new(&self.problem);
+                let mut s = RevisedSolver::with_config(&self.problem, *pricing, *factor);
                 let sol = s.solve()?;
                 self.last_iterations = s.iterations;
                 *slot = Some(s);
@@ -192,7 +268,7 @@ impl WarmSolver {
         bound_updates: &[(usize, f64)],
     ) -> Option<Result<Solution, SimplexError>> {
         let (result, iterations) = match &mut self.backend {
-            Backend::Revised(slot) => {
+            Backend::Revised { slot, .. } => {
                 let s = slot.as_mut()?;
                 let before = s.iterations;
                 for &(row, rhs) in rhs_updates {
@@ -260,13 +336,40 @@ mod tests {
         p
     }
 
-    fn both_kinds() -> [SolverKind; 2] {
-        [SolverKind::Revised, SolverKind::DenseTableau]
+    /// Every backend cell: four revised (pricing × factorization) combos
+    /// plus the dense tableau.
+    fn all_kinds() -> [SolverKind; 5] {
+        [
+            SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::DenseInverse },
+            SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::SparseLu },
+            SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::DenseInverse },
+            SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::SparseLu },
+            SolverKind::DenseTableau,
+        ]
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let mut labels: Vec<&str> = all_kinds().iter().map(|k| k.label()).collect();
+        labels.push(SolverKind::default().label());
+        let n = labels.len();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), n, "duplicate SolverKind labels");
+    }
+
+    #[test]
+    fn default_kind_is_devex_auto() {
+        assert_eq!(
+            SolverKind::default(),
+            SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::Auto }
+        );
+        assert_eq!(SolverKind::revised(), SolverKind::default());
     }
 
     #[test]
     fn warm_matches_cold_across_rhs_changes() {
-        for kind in both_kinds() {
+        for kind in all_kinds() {
             let mut warm = WarmSolver::with_kind(lpp1_toy(10.0, 2.0), kind);
             let s0 = warm.solve_cold().unwrap();
             assert!((s0.objective - 6.0).abs() < 1e-7, "{kind:?}");
@@ -287,7 +390,7 @@ mod tests {
 
     #[test]
     fn warm_uses_fewer_pivots() {
-        for kind in both_kinds() {
+        for kind in all_kinds() {
             let mut warm = WarmSolver::with_kind(lpp1_toy(10.0, 2.0), kind);
             warm.solve_cold().unwrap();
             let cold_iters = warm.last_iterations;
@@ -316,7 +419,7 @@ mod tests {
             p.add(vec![(0, 1.0), (1, 1.0)], Le, 8.0);
             p
         };
-        for kind in both_kinds() {
+        for kind in all_kinds() {
             let mut warm = WarmSolver::with_kind(build(3.0, 3.0), kind);
             let s0 = warm.solve_cold().unwrap();
             assert!((s0.objective + 6.0).abs() < 1e-7, "{kind:?}");
@@ -335,10 +438,10 @@ mod tests {
 
     #[test]
     fn infeasible_resolve_recovers_to_cold_afterwards() {
-        // Satellite fix: an infeasible warm resolve must not poison the
-        // retained state — the next feasible resolve should still succeed
-        // (and warm solves must resume once state is rebuilt).
-        for kind in both_kinds() {
+        // An infeasible warm resolve must not poison the retained state —
+        // the next feasible resolve should still succeed (and warm solves
+        // must resume once state is rebuilt).
+        for kind in all_kinds() {
             // x0 >= lo (Ge row), x0 <= 5 (bound). lo > 5 is infeasible.
             let mut p = LpProblem::new(1);
             p.set_objective(0, 1.0);
@@ -396,10 +499,10 @@ mod tests {
             p
         };
         let loads0: Vec<f64> = (0..e).map(|_| rng.below(100) as f64).collect();
-        for kind in both_kinds() {
+        for (ki, kind) in all_kinds().into_iter().enumerate() {
             let mut warm = WarmSolver::with_kind(build(&loads0), kind);
             warm.solve_cold().unwrap();
-            let mut rng2 = rng.fork(kind as u64);
+            let mut rng2 = rng.fork(ki as u64);
             for round in 0..30 {
                 let loads: Vec<f64> = (0..e).map(|_| rng2.below(100) as f64).collect();
                 let updates: Vec<(usize, f64)> =
@@ -418,7 +521,7 @@ mod tests {
 
     #[test]
     fn resolve_without_prior_solve_falls_back_to_cold() {
-        for kind in both_kinds() {
+        for kind in all_kinds() {
             let mut warm = WarmSolver::with_kind(lpp1_toy(10.0, 2.0), kind);
             let s = warm.resolve(&[(2, 8.0)]).unwrap();
             assert!((s.objective - 5.0).abs() < 1e-7, "{kind:?}");

@@ -40,6 +40,7 @@ impl PipelinedDispatch {
 
 /// A MicroEP scheduler wrapped with the App.-A.2 pipelining split.
 pub struct PipelinedMicroEp {
+    /// The LP scheduler handling the MicroEP token share.
     pub scheduler: MicroEpScheduler,
     placement: Placement,
     topo: Topology,
@@ -50,6 +51,7 @@ pub struct PipelinedMicroEp {
 }
 
 impl PipelinedMicroEp {
+    /// Wrap a scheduler; `microep_ratio` of each batch goes through the LP.
     pub fn new(
         placement: Placement,
         topo: Topology,

@@ -14,7 +14,9 @@ use crate::rng::Rng;
 /// Result of a density search: the density and the witnessing GPU subset.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DensityResult {
+    /// Load density of the best subset.
     pub density: f64,
+    /// The witnessing GPU subset.
     pub subset: Vec<usize>,
 }
 

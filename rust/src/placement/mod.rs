@@ -25,7 +25,9 @@ use crate::topology::Topology;
 /// An expert-replica placement inside one MicroEP group.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Placement {
+    /// GPUs in the MicroEP group.
     pub num_gpus: usize,
+    /// Experts placed over the group.
     pub num_experts: usize,
     /// `replicas[e]` — GPUs hosting a replica of expert `e` (the EDP group
     /// of `e`), sorted, no duplicates.

@@ -30,6 +30,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
@@ -116,6 +117,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Sampler over ranks `0..n` with skew `s`.
     pub fn new(n: usize, s: f64) -> Self {
         assert!(n > 0);
         let mut cdf = Vec::with_capacity(n);

@@ -31,6 +31,7 @@ pub struct DistributedRound {
 }
 
 impl DistributedSchedulers {
+    /// One identical scheduler per device (§5.3).
     pub fn new(
         placement: Placement,
         topo: Option<Topology>,
@@ -44,6 +45,7 @@ impl DistributedSchedulers {
         DistributedSchedulers { devices }
     }
 
+    /// Devices participating in the deterministic round.
     pub fn num_devices(&self) -> usize {
         self.devices.len()
     }
@@ -65,13 +67,16 @@ impl DistributedSchedulers {
 /// (§5.3's argument: distributed = 1 op, centralized = 2 ops).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SchedulerCommOps {
+    /// Collectives on the critical path per micro-batch.
     pub collective_ops: usize,
 }
 
+/// §5.3 distributed execution: one all-gather per micro-batch.
 pub fn distributed_comm_ops() -> SchedulerCommOps {
     SchedulerCommOps { collective_ops: 1 } // all-gather only
 }
 
+/// Centralized alternative: gather to device 0 plus a result scatter.
 pub fn centralized_comm_ops() -> SchedulerCommOps {
     SchedulerCommOps { collective_ops: 2 } // gather + scatter
 }

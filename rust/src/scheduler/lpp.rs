@@ -11,7 +11,12 @@
 //! shrinking the row count `m` by ~`nx` (CommAware) / ~`2·nx` (TopoAware).
 //! The dense-tableau backend (kept for the `ablation_solvers` bench via
 //! [`crate::lp::SolverKind::DenseTableau`]) lowers the same bounds back
-//! into rows, so both backends solve identical problems.
+//! into rows, so both backends solve identical problems. Within the
+//! revised backend, [`crate::scheduler::SchedulerOptions::solver`] further
+//! selects the pricing rule ([`crate::lp::Pricing`]) and the basis
+//! factorization ([`crate::lp::FactorKind`]); the default — devex with an
+//! automatic dense-inverse/sparse-LU cut — is what keeps the solve under
+//! the ~1 ms budget past 128 GPUs.
 //!
 //! One deliberate deviation from the paper's Appendix A.1 formulas: the
 //! paper's `send_g` sums only over experts *resident* on g; physically a
@@ -31,6 +36,8 @@ use crate::topology::Topology;
 
 /// Stateful MicroEP scheduler for one MicroEP group.
 pub struct MicroEpScheduler {
+    /// The expert placement this scheduler's constraint matrix was built
+    /// from (fixed for the scheduler's lifetime — §5.1).
     pub placement: Placement,
     topo: Option<Topology>,
     opts: SchedulerOptions,
@@ -62,6 +69,9 @@ pub struct MicroEpScheduler {
 }
 
 impl MicroEpScheduler {
+    /// Build the scheduler: lowers the placement into the LP constraint
+    /// matrix for `opts.mode` once; every later [`Self::schedule`] call
+    /// only rewrites rhs entries and variable bounds.
     pub fn new(placement: Placement, topo: Option<Topology>, opts: SchedulerOptions) -> Self {
         if matches!(opts.mode, ScheduleMode::TopoAware { .. }) || opts.topo_aware_routing {
             assert!(topo.is_some(), "topology-aware scheduling needs a Topology");
@@ -86,6 +96,7 @@ impl MicroEpScheduler {
         }
     }
 
+    /// The options this scheduler was built with.
     pub fn options(&self) -> &SchedulerOptions {
         &self.opts
     }

@@ -27,16 +27,20 @@ use crate::topology::Topology;
 /// `input_e^g` — token counts per (expert, source GPU), expert-major.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LoadMatrix {
+    /// Experts (rows).
     pub num_experts: usize,
+    /// Source GPUs (columns).
     pub num_gpus: usize,
     data: Vec<u64>,
 }
 
 impl LoadMatrix {
+    /// All-zero matrix of the given shape.
     pub fn zeros(num_experts: usize, num_gpus: usize) -> Self {
         LoadMatrix { num_experts, num_gpus, data: vec![0; num_experts * num_gpus] }
     }
 
+    /// Build from expert-major rows (all rows must share a length).
     pub fn from_rows(rows: Vec<Vec<u64>>) -> Self {
         let num_experts = rows.len();
         let num_gpus = rows.first().map_or(0, Vec::len);
@@ -45,16 +49,19 @@ impl LoadMatrix {
     }
 
     #[inline]
+    /// `input_e^g`.
     pub fn get(&self, e: usize, g: usize) -> u64 {
         self.data[e * self.num_gpus + g]
     }
 
     #[inline]
+    /// Overwrite `input_e^g`.
     pub fn set(&mut self, e: usize, g: usize, v: u64) {
         self.data[e * self.num_gpus + g] = v;
     }
 
     #[inline]
+    /// Accumulate into `input_e^g`.
     pub fn add(&mut self, e: usize, g: usize, v: u64) {
         self.data[e * self.num_gpus + g] += v;
     }
@@ -70,10 +77,12 @@ impl LoadMatrix {
         (0..self.num_experts).map(|e| self.get(e, g)).sum()
     }
 
+    /// Total tokens in the batch.
     pub fn total(&self) -> u64 {
         self.data.iter().sum()
     }
 
+    /// All per-expert totals.
     pub fn expert_loads(&self) -> Vec<u64> {
         (0..self.num_experts).map(|e| self.expert_load(e)).collect()
     }
@@ -83,9 +92,13 @@ impl LoadMatrix {
 /// `src`'s queue to the replica on GPU `dst`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Route {
+    /// Expert the tokens belong to.
     pub expert: usize,
+    /// Source GPU (where the gate emitted them).
     pub src: usize,
+    /// Destination GPU (hosting the chosen replica).
     pub dst: usize,
+    /// Number of tokens in the range.
     pub tokens: u64,
 }
 
@@ -110,7 +123,9 @@ pub struct Schedule {
     /// `replica_loads[e][r]` — integer tokens for replica `r` of expert `e`
     /// (aligned with `Placement::replicas[e]`).
     pub replica_loads: Vec<Vec<u64>>,
+    /// Concrete token ranges realizing those loads.
     pub routes: Vec<Route>,
+    /// Solve diagnostics.
     pub stats: ScheduleStats,
 }
 
@@ -168,6 +183,7 @@ pub enum ScheduleMode {
 /// Scheduler options (each maps to a Fig. 11 ablation arm).
 #[derive(Clone, Debug)]
 pub struct SchedulerOptions {
+    /// Objective (LPP-1 / LPP-4 / topology-aware).
     pub mode: ScheduleMode,
     /// reuse the previous basis when only loads changed (§5.1)
     pub warm_start: bool,
@@ -176,8 +192,11 @@ pub struct SchedulerOptions {
     /// prefer same-node replicas in the second routing pass (App. A.1);
     /// requires a topology
     pub topo_aware_routing: bool,
-    /// LP backend: bounded-variable revised simplex (default) or the dense
-    /// tableau (the `ablation_solvers` baseline)
+    /// LP backend: the bounded-variable revised simplex (default: devex
+    /// pricing, automatic factorization choice — see
+    /// [`crate::lp::SolverKind`]) with its (pricing × factorization)
+    /// engines selectable, or the dense tableau (`ablation_solvers`
+    /// baseline)
     pub solver: crate::lp::SolverKind,
 }
 
@@ -188,7 +207,7 @@ impl Default for SchedulerOptions {
             warm_start: true,
             locality_aware: true,
             topo_aware_routing: false,
-            solver: crate::lp::SolverKind::Revised,
+            solver: crate::lp::SolverKind::default(),
         }
     }
 }

@@ -11,40 +11,54 @@ use std::fmt;
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always carried as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted for stable output).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with the byte offset it occurred at.
 #[derive(Debug, thiserror::Error, PartialEq)]
 #[error("json error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset into the input.
     pub pos: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
 impl Json {
     // ---- constructors ----
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Array of numbers from f64s.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Array of numbers from u64s.
     pub fn arr_u64(xs: &[u64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// Array of numbers from usizes.
     pub fn arr_usize(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
     // ---- accessors ----
+    /// Object member lookup (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -52,6 +66,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -59,10 +74,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -70,6 +87,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -77,6 +95,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -94,6 +113,7 @@ impl Json {
     }
 
     // ---- parsing ----
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -106,6 +126,7 @@ impl Json {
     }
 
     // ---- writing ----
+    /// Serialize with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, Some(0));

@@ -5,16 +5,24 @@
 /// Summary statistics over a sample.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median (interpolated).
     pub p50: f64,
+    /// 95th percentile (interpolated).
     pub p95: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a non-empty sample.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "summary of empty sample");
         let n = xs.len();
@@ -57,11 +65,13 @@ pub struct Ema {
 }
 
 impl Ema {
+    /// EMA with smoothing factor `alpha` in [0, 1].
     pub fn new(alpha: f64) -> Self {
         assert!((0.0..=1.0).contains(&alpha));
         Ema { alpha, value: None }
     }
 
+    /// Fold in an observation, returning the updated average.
     pub fn update(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -71,6 +81,7 @@ impl Ema {
         v
     }
 
+    /// Current average (`None` before the first observation).
     pub fn get(&self) -> Option<f64> {
         self.value
     }
@@ -84,11 +95,13 @@ pub struct VecWindow {
 }
 
 impl VecWindow {
+    /// Window holding the `window` most recent vectors.
     pub fn new(window: usize) -> Self {
         assert!(window > 0);
         VecWindow { window, buf: std::collections::VecDeque::new() }
     }
 
+    /// Append a vector, evicting the oldest when full.
     pub fn push(&mut self, xs: Vec<f64>) {
         if self.buf.len() == self.window {
             self.buf.pop_front();
@@ -96,10 +109,12 @@ impl VecWindow {
         self.buf.push_back(xs);
     }
 
+    /// Vectors currently held.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// Whether nothing has been pushed yet.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
@@ -127,16 +142,20 @@ pub struct Histogram {
     lo: f64,
     hi: f64,
     counts: Vec<u64>,
+    /// Samples below the range.
     pub underflow: u64,
+    /// Samples at/above the range end.
     pub overflow: u64,
 }
 
 impl Histogram {
+    /// Histogram over `[lo, hi)` with `bins` equal-width bins.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
         Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0 }
     }
 
+    /// Count a sample (out-of-range goes to underflow/overflow).
     pub fn add(&mut self, x: f64) {
         if x < self.lo {
             self.underflow += 1;
@@ -149,10 +168,12 @@ impl Histogram {
         }
     }
 
+    /// Per-bin counts.
     pub fn counts(&self) -> &[u64] {
         &self.counts
     }
 
+    /// Total samples, including out-of-range.
     pub fn total(&self) -> u64 {
         self.counts.iter().sum::<u64>() + self.underflow + self.overflow
     }

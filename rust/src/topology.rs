@@ -21,6 +21,7 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Validated topology; asserts EP | DP and d | EDP-degree.
     pub fn new(dp_degree: usize, ep_degree: usize, d: usize, gpus_per_node: usize) -> Self {
         assert!(ep_degree > 0 && dp_degree % ep_degree == 0, "EP must divide DP");
         let edp = dp_degree / ep_degree;

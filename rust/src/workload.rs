@@ -16,15 +16,21 @@ use crate::ser::Json;
 
 /// Common interface: produce the next micro-batch's load matrix.
 pub trait Workload {
+    /// Generate the next micro-batch's `input_e^g` matrix.
     fn next_batch(&mut self) -> LoadMatrix;
+    /// Experts in every generated matrix.
     fn num_experts(&self) -> usize;
+    /// Source GPUs in every generated matrix.
     fn num_gpus(&self) -> usize;
 }
 
 /// Zipfian token→expert assignment, independent per source GPU.
 pub struct ZipfWorkload {
+    /// Experts in the popularity ranking.
     pub experts: usize,
+    /// Source GPUs per batch.
     pub gpus: usize,
+    /// Tokens emitted per GPU per batch.
     pub tokens_per_gpu: u64,
     zipf: Zipf,
     /// rank→expert mapping (which expert is the i-th hottest)
@@ -33,6 +39,7 @@ pub struct ZipfWorkload {
 }
 
 impl ZipfWorkload {
+    /// Workload with skew `s` and a seeded random popularity ranking.
     pub fn new(experts: usize, gpus: usize, tokens_per_gpu: u64, s: f64, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         let mut rank_of: Vec<usize> = (0..experts).collect();
@@ -71,6 +78,7 @@ pub struct DriftingWorkload {
 }
 
 impl DriftingWorkload {
+    /// Drifting workload rotating its hot set every `rotate_every` batches.
     pub fn new(
         experts: usize,
         gpus: usize,
@@ -120,15 +128,18 @@ pub struct TraceWorkload {
 }
 
 impl TraceWorkload {
+    /// Replay the given batches in order, looping at the end.
     pub fn new(batches: Vec<LoadMatrix>) -> Self {
         assert!(!batches.is_empty());
         TraceWorkload { batches, cursor: 0 }
     }
 
+    /// Number of recorded batches.
     pub fn len(&self) -> usize {
         self.batches.len()
     }
 
+    /// Whether the trace is empty (never true: construction asserts).
     pub fn is_empty(&self) -> bool {
         self.batches.is_empty()
     }

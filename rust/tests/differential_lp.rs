@@ -1,22 +1,49 @@
-//! Differential testing: bounded-variable revised simplex vs dense
-//! full-tableau simplex.
+//! Differential testing: every LP backend cell against every other.
 //!
-//! The two backends implement the same mathematical contract through very
-//! different machinery (implicit bounds + eta-updated B⁻¹ vs bound rows +
-//! full tableau), which makes them near-perfect oracles for each other:
-//! on every instance they must agree on feasibility classification and,
-//! when an optimum exists, on the optimal objective to 1e-6. The suite
-//! covers randomized LPP-1 / LPP-4 (CommAware) / TopoAware scheduling
-//! instances end-to-end through `MicroEpScheduler`, plus raw-LP fuzz with
-//! upper-bound edge cases (bound-tight optima, degenerate bounds at 0).
+//! The backends implement the same mathematical contract through very
+//! different machinery — implicit bounds + (dense-eta | sparse-LU
+//! Forrest–Tomlin) factors + (Dantzig | devex candidate-list) pricing on
+//! the revised side, bound rows + a full tableau on the dense side — which
+//! makes them near-perfect oracles for each other: on every instance they
+//! must agree on feasibility classification and, when an optimum exists,
+//! on the optimal objective to 1e-6. The suite covers randomized LPP-1 /
+//! LPP-4 (CommAware) / TopoAware scheduling instances end-to-end through
+//! `MicroEpScheduler`, raw-LP fuzz with upper-bound edge cases
+//! (bound-tight optima, degenerate bounds at 0), and 128–256-GPU-shaped
+//! instances where the sparse-LU engine is the one actually exercised in
+//! production (`FactorKind::Auto` cuts over at m > 192).
 
-use micromoe::lp::{LpProblem, Relation, SimplexError, SolverKind, WarmSolver};
+use micromoe::lp::{FactorKind, LpProblem, Pricing, Relation, SimplexError, SolverKind, WarmSolver};
 use micromoe::placement::cayley::cayley_graph_placement;
 use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::flow::flow_schedule;
 use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, ScheduleMode, SchedulerOptions};
 use micromoe::topology::Topology;
 
-fn zipf_batch(rng: &mut Rng, zipf: &Zipf, experts: usize, gpus: usize, per_gpu: usize) -> LoadMatrix {
+/// The four revised (pricing × factorization) cells.
+fn revised_kinds() -> [SolverKind; 4] {
+    [
+        SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::DenseInverse },
+        SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::SparseLu },
+        SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::DenseInverse },
+        SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::SparseLu },
+    ]
+}
+
+/// All five backends, dense tableau first (the oracle the others are
+/// compared against in the smaller suites).
+fn all_kinds() -> [SolverKind; 5] {
+    let r = revised_kinds();
+    [SolverKind::DenseTableau, r[0], r[1], r[2], r[3]]
+}
+
+fn zipf_batch(
+    rng: &mut Rng,
+    zipf: &Zipf,
+    experts: usize,
+    gpus: usize,
+    per_gpu: usize,
+) -> LoadMatrix {
     let mut lm = LoadMatrix::zeros(experts, gpus);
     for g in 0..gpus {
         for _ in 0..per_gpu {
@@ -26,8 +53,9 @@ fn zipf_batch(rng: &mut Rng, zipf: &Zipf, experts: usize, gpus: usize, per_gpu: 
     lm
 }
 
-/// Both backends, all three schedule modes, warm-started across batches:
-/// objectives agree to 1e-6 and replica loads conserve expert totals.
+/// Every backend cell, all three schedule modes, warm-started across
+/// batches: objectives agree to 1e-6 and replica loads conserve expert
+/// totals.
 #[test]
 fn schedulers_agree_across_modes_and_batches() {
     let gpus = 8usize;
@@ -46,57 +74,53 @@ fn schedulers_agree_across_modes_and_batches() {
             topo_aware_routing: matches!(mode, ScheduleMode::TopoAware { .. }),
             ..Default::default()
         };
-        let mut revised = MicroEpScheduler::new(
-            placement.clone(),
-            Some(topo.clone()),
-            opts(SolverKind::Revised),
-        );
-        let mut tableau = MicroEpScheduler::new(
-            placement.clone(),
-            Some(topo.clone()),
-            opts(SolverKind::DenseTableau),
-        );
+        let mut scheds: Vec<MicroEpScheduler> = all_kinds()
+            .into_iter()
+            .map(|k| MicroEpScheduler::new(placement.clone(), Some(topo.clone()), opts(k)))
+            .collect();
         let mut rng = Rng::new(42);
         let zipf = Zipf::new(experts, 0.9);
         for batch in 0..12 {
             let lm = zipf_batch(&mut rng, &zipf, experts, gpus, 1024);
-            let a = revised.schedule(&lm);
-            let b = tableau.schedule(&lm);
-            assert!(
-                a.stats.lp_objective.is_finite() && b.stats.lp_objective.is_finite(),
-                "{mode:?} batch {batch}: LP fallback triggered (rev {}, tab {})",
-                a.stats.lp_objective,
-                b.stats.lp_objective
-            );
-            let scale = 1.0 + a.stats.lp_objective.abs();
-            assert!(
-                (a.stats.lp_objective - b.stats.lp_objective).abs() < 1e-6 * scale,
-                "{mode:?} batch {batch}: revised {} vs tableau {}",
-                a.stats.lp_objective,
-                b.stats.lp_objective
-            );
-            if batch > 0 {
-                assert!(a.stats.warm, "{mode:?} batch {batch}: revised warm path not taken");
-                assert!(b.stats.warm, "{mode:?} batch {batch}: tableau warm path not taken");
-            }
-            for e in 0..experts {
-                assert_eq!(
-                    a.replica_loads[e].iter().sum::<u64>(),
-                    lm.expert_load(e),
-                    "{mode:?} batch {batch}: revised expert {e} total"
+            let outs: Vec<_> = scheds.iter_mut().map(|s| s.schedule(&lm)).collect();
+            let base = outs[0].stats.lp_objective;
+            assert!(base.is_finite(), "{mode:?} batch {batch}: tableau LP fallback triggered");
+            for (k, out) in all_kinds().into_iter().zip(&outs) {
+                assert!(
+                    out.stats.lp_objective.is_finite(),
+                    "{mode:?} batch {batch} {}: LP fallback triggered",
+                    k.label()
                 );
-                assert_eq!(
-                    b.replica_loads[e].iter().sum::<u64>(),
-                    lm.expert_load(e),
-                    "{mode:?} batch {batch}: tableau expert {e} total"
+                let scale = 1.0 + base.abs();
+                assert!(
+                    (out.stats.lp_objective - base).abs() < 1e-6 * scale,
+                    "{mode:?} batch {batch} {}: {} vs tableau {}",
+                    k.label(),
+                    out.stats.lp_objective,
+                    base
                 );
+                if batch > 0 {
+                    assert!(
+                        out.stats.warm,
+                        "{mode:?} batch {batch} {}: warm path not taken",
+                        k.label()
+                    );
+                }
+                for e in 0..experts {
+                    assert_eq!(
+                        out.replica_loads[e].iter().sum::<u64>(),
+                        lm.expert_load(e),
+                        "{mode:?} batch {batch} {}: expert {e} total",
+                        k.label()
+                    );
+                }
             }
         }
     }
 }
 
 /// Raw-LP fuzz: random rows of every relation plus random finite upper
-/// bounds. Backends must agree on the error class or on the objective.
+/// bounds. All backends must agree on the error class or on the objective.
 #[test]
 fn random_instances_agree() {
     let mut rng = Rng::new(2024);
@@ -133,28 +157,38 @@ fn random_instances_agree() {
             };
             p.add(terms, rel, rng.f64() * 6.0 - 1.0);
         }
-        let a = micromoe::lp::revised::solve(&p);
-        let b = micromoe::lp::simplex::solve(&p);
-        match (a, b) {
-            (Ok(sa), Ok(sb)) => {
-                optima += 1;
-                let scale = 1.0 + sa.objective.abs();
-                assert!(
-                    (sa.objective - sb.objective).abs() < 1e-6 * scale,
-                    "case {case}: revised {} vs tableau {}",
-                    sa.objective,
-                    sb.objective
-                );
-                assert!(p.is_feasible(&sa.x, 1e-6), "case {case}: revised point infeasible");
-                assert!(p.is_feasible(&sb.x, 1e-6), "case {case}: tableau point infeasible");
+        let oracle = micromoe::lp::simplex::solve(&p);
+        for kind in revised_kinds() {
+            let SolverKind::Revised { pricing, factor } = kind else { unreachable!() };
+            let got =
+                micromoe::lp::revised::RevisedSolver::with_config(&p, pricing, factor).solve();
+            match (&got, &oracle) {
+                (Ok(sa), Ok(sb)) => {
+                    let scale = 1.0 + sa.objective.abs();
+                    assert!(
+                        (sa.objective - sb.objective).abs() < 1e-6 * scale,
+                        "case {case} {}: revised {} vs tableau {}",
+                        kind.label(),
+                        sa.objective,
+                        sb.objective
+                    );
+                    assert!(
+                        p.is_feasible(&sa.x, 1e-6),
+                        "case {case} {}: revised point infeasible",
+                        kind.label()
+                    );
+                    assert!(p.is_feasible(&sb.x, 1e-6), "case {case}: tableau point infeasible");
+                }
+                (Err(SimplexError::Infeasible(_)), Err(SimplexError::Infeasible(_))) => {}
+                (Err(SimplexError::Unbounded), Err(SimplexError::Unbounded)) => {}
+                (a, b) => panic!("case {case} {}: revised {a:?} vs tableau {b:?}", kind.label()),
             }
-            (Err(SimplexError::Infeasible(_)), Err(SimplexError::Infeasible(_))) => {
-                infeasible += 1;
-            }
-            (Err(SimplexError::Unbounded), Err(SimplexError::Unbounded)) => {
-                unbounded += 1;
-            }
-            (a, b) => panic!("case {case}: revised {a:?} vs tableau {b:?}"),
+        }
+        match oracle {
+            Ok(_) => optima += 1,
+            Err(SimplexError::Infeasible(_)) => infeasible += 1,
+            Err(SimplexError::Unbounded) => unbounded += 1,
+            Err(e) => panic!("case {case}: tableau {e}"),
         }
     }
     // the generator must produce a healthy share of solvable instances;
@@ -176,16 +210,21 @@ fn bound_tight_optimum_agrees() {
     p.set_upper(1, 2.0);
     p.set_upper(2, 0.0);
     p.add(vec![(0, 1.0), (1, 1.0), (2, 1.0)], Relation::Le, 10.0);
-    let a = micromoe::lp::revised::solve(&p).unwrap();
     let b = micromoe::lp::simplex::solve(&p).unwrap();
-    assert!((a.objective - (-16.0)).abs() < 1e-9, "revised {}", a.objective);
     assert!((b.objective - (-16.0)).abs() < 1e-9, "tableau {}", b.objective);
-    assert!((a.x[0] - 4.0).abs() < 1e-9 && (a.x[1] - 2.0).abs() < 1e-9);
-    assert!(a.x[2].abs() < 1e-9);
+    for kind in revised_kinds() {
+        let SolverKind::Revised { pricing, factor } = kind else { unreachable!() };
+        let a = micromoe::lp::revised::RevisedSolver::with_config(&p, pricing, factor)
+            .solve()
+            .unwrap();
+        assert!((a.objective - (-16.0)).abs() < 1e-9, "{}: {}", kind.label(), a.objective);
+        assert!((a.x[0] - 4.0).abs() < 1e-9 && (a.x[1] - 2.0).abs() < 1e-9, "{}", kind.label());
+        assert!(a.x[2].abs() < 1e-9, "{}", kind.label());
+    }
 }
 
-/// Warm bound updates through `WarmSolver` agree between backends over a
-/// trajectory of correlated cap changes (the LPP-4 micro-batch pattern).
+/// Warm bound updates through `WarmSolver` agree between all backends over
+/// a trajectory of correlated cap changes (the LPP-4 micro-batch pattern).
 #[test]
 fn warm_bound_trajectories_agree() {
     let build = || {
@@ -199,10 +238,11 @@ fn warm_bound_trajectories_agree() {
         p.set_upper(1, 6.0);
         p
     };
-    let mut wa = WarmSolver::with_kind(build(), SolverKind::Revised);
-    let mut wb = WarmSolver::with_kind(build(), SolverKind::DenseTableau);
-    wa.solve_cold().unwrap();
-    wb.solve_cold().unwrap();
+    let mut solvers: Vec<WarmSolver> =
+        all_kinds().into_iter().map(|k| WarmSolver::with_kind(build(), k)).collect();
+    for s in &mut solvers {
+        s.solve_cold().unwrap();
+    }
     let mut rng = Rng::new(9);
     for round in 0..25 {
         let c0 = rng.f64() * 6.0;
@@ -210,19 +250,104 @@ fn warm_bound_trajectories_agree() {
         let load = 2.0 + rng.f64() * (c0 + c1 - 2.0).max(0.1);
         let rhs = [(1usize, load.min(c0 + c1))];
         let caps = [(0usize, c0), (1usize, c1)];
-        let sa = wa.resolve_with_bounds(&rhs, &caps);
-        let sb = wb.resolve_with_bounds(&rhs, &caps);
-        match (sa, sb) {
-            (Ok(sa), Ok(sb)) => {
+        let results: Vec<_> =
+            solvers.iter_mut().map(|s| s.resolve_with_bounds(&rhs, &caps)).collect();
+        let (first, rest) = results.split_first().unwrap();
+        for (k, r) in all_kinds().into_iter().skip(1).zip(rest) {
+            match (first, r) {
+                (Ok(sa), Ok(sb)) => {
+                    assert!(
+                        (sa.objective - sb.objective).abs() < 1e-6,
+                        "round {round} {}: tableau {} vs {}",
+                        k.label(),
+                        sa.objective,
+                        sb.objective
+                    );
+                }
+                (Err(SimplexError::Infeasible(_)), Err(SimplexError::Infeasible(_))) => {}
+                (sa, sb) => {
+                    panic!("round {round} {}: tableau {sa:?} vs {sb:?}", k.label())
+                }
+            }
+        }
+    }
+}
+
+/// 128–256-GPU-shaped instances — the regime the sparse-LU factors and
+/// devex candidate lists exist for (the dense tableau is too slow to be an
+/// oracle here, so the cells cross-check each other, with the max-flow
+/// solver as an independent integer-optimum oracle on LPP-1).
+#[test]
+fn large_scale_cells_agree() {
+    // (gpus, experts, which cells) — dense-inverse cells are included at
+    // 128 GPUs; at 256 GPUs (and for the 1152-row LPP-4) the LU cells
+    // cross-check each other, which is also what Auto would pick there.
+    let lu_only: Vec<SolverKind> = revised_kinds()
+        .into_iter()
+        .filter(|k| matches!(k, SolverKind::Revised { factor: FactorKind::SparseLu, .. }))
+        .collect();
+    let all: Vec<SolverKind> = revised_kinds().to_vec();
+    let cases: [(usize, usize, ScheduleMode, &Vec<SolverKind>); 3] = [
+        (128, 256, ScheduleMode::Compute, &all),
+        (256, 256, ScheduleMode::Compute, &lu_only),
+        (128, 256, ScheduleMode::CommAware { alpha: 0.7 }, &lu_only),
+    ];
+    for (gpus, experts, mode, kinds) in cases {
+        let placement = cayley_graph_placement(gpus, experts);
+        let opts = |solver: SolverKind| SchedulerOptions {
+            mode: mode.clone(),
+            solver,
+            ..Default::default()
+        };
+        let mut scheds: Vec<MicroEpScheduler> = kinds
+            .iter()
+            .map(|&k| MicroEpScheduler::new(placement.clone(), None, opts(k)))
+            .collect();
+        let mut rng = Rng::new(4096);
+        let zipf = Zipf::new(experts, 0.8);
+        for batch in 0..3 {
+            let lm = zipf_batch(&mut rng, &zipf, experts, gpus, 512);
+            let outs: Vec<_> = scheds.iter_mut().map(|s| s.schedule(&lm)).collect();
+            let base = outs[0].stats.lp_objective;
+            assert!(
+                base.is_finite(),
+                "{gpus}x{experts} {mode:?} batch {batch}: LP fallback triggered"
+            );
+            for (k, out) in kinds.iter().zip(&outs) {
                 assert!(
-                    (sa.objective - sb.objective).abs() < 1e-6,
-                    "round {round}: revised {} vs tableau {}",
-                    sa.objective,
-                    sb.objective
+                    (out.stats.lp_objective - base).abs() < 1e-6 * (1.0 + base.abs()),
+                    "{gpus}x{experts} {mode:?} batch {batch} {}: {} vs {}",
+                    k.label(),
+                    out.stats.lp_objective,
+                    base
+                );
+                if batch > 0 {
+                    assert!(
+                        out.stats.warm,
+                        "{gpus}x{experts} {mode:?} batch {batch} {}: warm path not taken",
+                        k.label()
+                    );
+                }
+                for e in 0..experts {
+                    assert_eq!(
+                        out.replica_loads[e].iter().sum::<u64>(),
+                        lm.expert_load(e),
+                        "{gpus}x{experts} {mode:?} batch {batch} {}: expert {e}",
+                        k.label()
+                    );
+                }
+            }
+            if matches!(mode, ScheduleMode::Compute) {
+                // independent oracle: the binary-search max-flow integer
+                // optimum brackets the fractional LP optimum
+                let fl = flow_schedule(&placement, &lm).max_load;
+                assert!(
+                    (base.ceil() as i64 - fl as i64).abs() <= 1,
+                    "{gpus}x{experts} batch {batch}: LP {} vs flow {}",
+                    base,
+                    fl
                 );
             }
-            (Err(SimplexError::Infeasible(_)), Err(SimplexError::Infeasible(_))) => {}
-            (sa, sb) => panic!("round {round}: revised {sa:?} vs tableau {sb:?}"),
         }
     }
 }

@@ -1,32 +1,51 @@
-//! Golden test: our simplex vs HiGHS (the paper's solver).
+//! Golden test: our simplex backends vs HiGHS (the paper's solver).
 //!
 //! `python/tools/gen_lp_golden.py` solved these instances with
 //! scipy.optimize.linprog(method="highs") and recorded the optimal
-//! objectives; we must agree to 1e-6 on every one.
+//! objectives; every backend — the dense tableau and all four revised
+//! (pricing × factorization) cells — must agree to 1e-6 on every one.
+//!
+//! The fixture `tests/golden_lp.json` is committed; a missing file is a
+//! hard failure (regenerate with the tool above and commit the result —
+//! see README.md § "Golden LP fixture").
 
-use micromoe::lp::{LpProblem, Relation};
+use micromoe::lp::{FactorKind, LpProblem, Pricing, Relation, SimplexError, Solution};
 use micromoe::ser::Json;
 
-fn fixture() -> Option<Json> {
+fn fixture() -> Json {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_lp.json");
-    let Ok(text) = std::fs::read_to_string(path) else {
-        eprintln!("SKIP: {path} missing — run python/tools/gen_lp_golden.py");
-        return None;
-    };
-    Some(Json::parse(&text).unwrap())
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!("{path} missing ({e}) — regenerate with python/tools/gen_lp_golden.py and commit")
+    });
+    Json::parse(&text).unwrap()
 }
 
 fn as_f64s(j: &Json) -> Vec<f64> {
     j.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect()
 }
 
+/// (label, solve fn) for every backend cell.
+fn backends() -> Vec<(&'static str, fn(&LpProblem) -> Result<Solution, SimplexError>)> {
+    fn rev(p: &LpProblem, pricing: Pricing, factor: FactorKind) -> Result<Solution, SimplexError> {
+        micromoe::lp::revised::RevisedSolver::with_config(p, pricing, factor).solve()
+    }
+    vec![
+        ("tableau", micromoe::lp::simplex::solve),
+        ("dantzig+dense", |p| rev(p, Pricing::Dantzig, FactorKind::DenseInverse)),
+        ("dantzig+lu", |p| rev(p, Pricing::Dantzig, FactorKind::SparseLu)),
+        ("devex+dense", |p| rev(p, Pricing::Devex, FactorKind::DenseInverse)),
+        ("devex+lu", |p| rev(p, Pricing::Devex, FactorKind::SparseLu)),
+    ]
+}
+
 #[test]
 fn matches_highs_on_all_cases() {
-    let Some(fx) = fixture() else { return };
+    let fx = fixture();
     let cases = fx.get("cases").unwrap().as_arr().unwrap();
     assert!(cases.len() >= 30, "suspiciously few golden cases");
     let mut lpp1 = 0;
     let mut generic = 0;
+    let mut bounded = 0;
     for (i, case) in cases.iter().enumerate() {
         let expect = case.get("objective").unwrap().as_f64().unwrap();
         let problem = match case.get("kind").unwrap().as_str().unwrap() {
@@ -38,14 +57,15 @@ fn matches_highs_on_all_cases() {
                 generic += 1;
                 build_generic(case)
             }
+            "bounded" => {
+                bounded += 1;
+                build_bounded(case)
+            }
             k => panic!("unknown kind {k}"),
         };
-        // both backends must agree with HiGHS
-        for (name, sol) in [
-            ("tableau", micromoe::lp::simplex::solve(&problem)),
-            ("revised", micromoe::lp::revised::solve(&problem)),
-        ] {
-            let sol = sol.unwrap_or_else(|e| panic!("case {i} ({name}): {e}"));
+        // every backend must agree with HiGHS
+        for (name, solve) in backends() {
+            let sol = solve(&problem).unwrap_or_else(|e| panic!("case {i} ({name}): {e}"));
             assert!(
                 (sol.objective - expect).abs() < 1e-6 * (1.0 + expect.abs()),
                 "case {i} ({name}): ours {} vs HiGHS {}",
@@ -58,7 +78,8 @@ fn matches_highs_on_all_cases() {
             );
         }
     }
-    assert!(lpp1 > 0 && generic > 0);
+    assert!(lpp1 > 0 && generic > 0, "fixture missing a family");
+    assert!(bounded > 0, "fixture predates bounded-variable cases — regenerate");
 }
 
 fn build_lpp1(case: &Json) -> LpProblem {
@@ -118,11 +139,25 @@ fn build_generic(case: &Json) -> LpProblem {
     p
 }
 
+/// `generic` plus per-variable upper bounds; `-1.0` in the fixture encodes
+/// "unbounded above" (JSON has no infinity).
+fn build_bounded(case: &Json) -> LpProblem {
+    let mut p = build_generic(case);
+    let upper = as_f64s(case.get("upper").unwrap());
+    assert_eq!(upper.len(), p.num_vars);
+    for (j, &u) in upper.iter().enumerate() {
+        if u >= 0.0 {
+            p.set_upper(j, u);
+        }
+    }
+    p
+}
+
 #[test]
 fn lpp1_warm_start_agrees_with_highs_objectives() {
     // replay lpp1 cases through a warm solver, exercising the §5.1
     // warm-start path against golden objectives
-    let Some(fx) = fixture() else { return };
+    let fx = fixture();
     let cases: Vec<&Json> = fx
         .get("cases")
         .unwrap()
