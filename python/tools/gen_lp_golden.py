@@ -1,18 +1,26 @@
 """Generate golden LP fixtures with scipy's HiGHS solver.
 
 The paper solves LPP 1 with HiGHS; our rust simplex backends must agree.
-This tool builds three instance families —
+This tool builds five instance families —
 
 * ``lpp1``    — random LPP-1 minimax instances (EDP groups, integer loads);
 * ``generic`` — random bounded-feasible min-LPs with ``A x <= b`` rows;
 * ``bounded`` — like ``generic`` but with finite per-variable upper bounds
   (some degenerate at 0), the structure the revised simplex handles as
-  implicit bounds and the dense tableau expands into rows —
+  implicit bounds and the dense tableau expands into rows;
+* ``boxed_degen``   — heavily-boxed instances with *duplicated* objective
+  coefficients, so the dual ratio test sees tied (degenerate) breakpoints;
+* ``boxed_resolve`` — a base problem plus a sequence of correlated
+  rhs/bound edit steps (each step's HiGHS optimum recorded). The capacity
+  swings are engineered so the warm dual repair must cross several
+  breakpoints at once — the long-step dual's bound-flipping ratio test
+  batches those as bound flips, which tests/golden_lp.rs asserts on —
 
 solves them with scipy.optimize.linprog (method="highs" — the same HiGHS),
 and writes objective values to ``rust/tests/golden_lp.json``. The rust
-test re-solves each instance with every backend and compares objectives
-to 1e-6.
+test re-solves each instance with every backend (replaying the
+``boxed_resolve`` steps through the warm-start path) and compares
+objectives to 1e-6.
 
 Run from the repo root or python/:  python3 python/tools/gen_lp_golden.py
 The fixture is committed; regenerate only when the format or the case set
@@ -114,6 +122,83 @@ def bounded_instance(rng, n, m):
     }
 
 
+def boxed_degen_instance(rng, n, m):
+    """Heavily boxed + dual-degenerate: every variable finitely bounded and
+    the objective built from a handful of *repeated* values, so many
+    reduced costs tie and the dual ratio test must break degenerate
+    breakpoint clusters deterministically."""
+    pool = [round(rng.uniform(-2.0, 1.0), 4) for _ in range(max(2, n // 3))]
+    c = [pool[rng.randrange(len(pool))] for _ in range(n)]
+    rows = []
+    for _ in range(m):
+        rows.append([round(rng.uniform(0.05, 1.0), 4) for _ in range(n)])
+    b = [round(rng.uniform(1.0, 6.0), 4) for _ in range(m)]
+    upper = [round(rng.uniform(0.1, 3.0), 4) for _ in range(n)]
+    bounds = [(0.0, u) for u in upper]
+    res = linprog(
+        c, A_ub=np.array(rows), b_ub=np.array(b), bounds=bounds, method="highs"
+    )
+    if res.status != 0:
+        return None
+    return {
+        "kind": "boxed_degen",
+        "c": c,
+        "a_ub": rows,
+        "b_ub": b,
+        "upper": upper,
+        "objective": float(res.fun),
+    }
+
+
+def boxed_resolve_instance(rng, n, num_steps):
+    """Warm-replay fixture for the long-step dual: a knapsack-shaped
+    max-profit LP over boxed variables whose capacity swings sharply
+    between steps. A capacity drop pushes many at-upper variables' worth of
+    load out in one dual repair, so the BFRT crosses several breakpoints —
+    visible to rust as ``bound_flips > 0`` on the warm re-solve."""
+    c = [round(-rng.uniform(0.5, 3.0), 4) for _ in range(n)]
+    if n >= 4:  # duplicated costs: tied (dual-degenerate) breakpoints
+        c[1] = c[0]
+        c[3] = c[2]
+    upper = [round(rng.uniform(0.5, 2.0), 4) for _ in range(n)]
+    total = sum(upper)
+    rows = [[1.0] * n, [1.0 if j % 2 == 0 else 0.0 for j in range(n)]]
+    b = [round(total * 0.9, 4), round(total * 0.9, 4)]
+
+    def solve(b_now, upper_now):
+        res = linprog(
+            c,
+            A_ub=np.array(rows),
+            b_ub=np.array(b_now),
+            bounds=[(0.0, u) for u in upper_now],
+            method="highs",
+        )
+        assert res.status == 0, res.message
+        return float(res.fun)
+
+    case = {
+        "kind": "boxed_resolve",
+        "c": c,
+        "a_ub": rows,
+        "b_ub": b,
+        "upper": list(upper),
+        "objective": solve(b, upper),
+        "steps": [],
+    }
+    for k in range(num_steps):
+        # alternate permissive/tight so each tightening forces a multi-flip
+        # dual repair from a mostly-at-upper optimal basis
+        frac = 0.95 if k % 2 == 0 else rng.uniform(0.1, 0.4)
+        b = [round(sum(upper) * frac, 4), round(sum(upper) * 0.9, 4)]
+        j = rng.randrange(n)
+        upper = list(upper)
+        upper[j] = round(rng.uniform(0.3, 2.5), 4)
+        case["steps"].append(
+            {"b_ub": b, "upper": list(upper), "objective": solve(b, upper)}
+        )
+    return case
+
+
 def main():
     rng = random.Random(20250710)
     cases = []
@@ -132,6 +217,14 @@ def main():
             inst = bounded_instance(rng, n, m)
             if inst:
                 cases.append(inst)
+    for n, m in [(6, 3), (10, 5), (16, 8), (24, 10)]:
+        for _ in range(3):
+            inst = boxed_degen_instance(rng, n, m)
+            if inst:
+                cases.append(inst)
+    for n, steps in [(8, 6), (12, 6), (20, 8), (30, 8)]:
+        for _ in range(2):
+            cases.append(boxed_resolve_instance(rng, n, steps))
     out = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "golden_lp.json")
     with open(out, "w") as fh:
         json.dump({"cases": cases}, fh)

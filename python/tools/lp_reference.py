@@ -1,0 +1,977 @@
+"""Python transliteration of the rust bounded-variable revised simplex.
+
+The repo's containers have no rust toolchain, so changes to the LP
+numerics are validated here first: this module mirrors
+``rust/src/lp/revised.rs`` (standard-form build, two-phase primal, warm
+dual repair) closely enough that pivot-level logic — in particular the
+**long-step dual simplex with the bound-flipping ratio test (BFRT)** and
+the **Markowitz-ordered sparse LU refactorization** — can be
+differential-tested against scipy's HiGHS and numpy before the rust port
+lands.  Run ``python3 python/tools/lp_reference.py`` to execute the full
+validation suite (it prints a summary and exits non-zero on failure).
+
+Scope notes:
+
+* The basis engine here is a dense explicit ``B^-1`` (numpy), mirroring
+  ``BasisInverse``; the sparse-LU *refactorization order* is validated
+  separately by ``MarkowitzLu`` below because the Forrest-Tomlin update
+  path is untouched by this PR.
+* Pricing is Dantzig plus the dual-side candidate list; devex weighting
+  only reorders heuristic choices and is not re-validated here.
+"""
+
+import math
+import random
+
+import numpy as np
+from scipy.optimize import linprog
+
+TOL = 1e-9
+
+
+class Infeasible(Exception):
+    pass
+
+
+class Unbounded(Exception):
+    pass
+
+
+class IterLimit(Exception):
+    pass
+
+
+LE, GE, EQ = "le", "ge", "eq"
+
+
+class RevisedRef:
+    """Mirror of rust RevisedSolver (dense B^-1 engine, Dantzig pricing)."""
+
+    def __init__(self, c, rows, upper, long_step=True, dual_cand_max=32):
+        # rows: list of (terms [(var, coeff)...], rel, rhs)
+        n = len(c)
+        m = len(rows)
+        n_slack = 0
+        n_art = 0
+        for terms, rel, rhs in rows:
+            if rhs < 0.0:
+                rel = {LE: GE, GE: LE, EQ: EQ}[rel]
+            if rel == LE:
+                n_slack += 1
+            elif rel == GE:
+                n_slack += 1
+                n_art += 1
+            else:
+                n_art += 1
+        art_base = n + n_slack
+        ncols = art_base + n_art
+        self.n_orig = n
+        self.ncols = ncols
+        self.m = m
+        self.art_base = art_base
+        self.cols = [[] for _ in range(ncols)]
+        self.b = np.zeros(m)
+        self.row_sign = np.ones(m)
+        self.basis = [0] * m
+        next_slack = n
+        next_art = art_base
+        for i, (terms, rel, rhs) in enumerate(rows):
+            sign = 1.0
+            if rhs < 0.0:
+                sign = -1.0
+                rhs = -rhs
+                rel = {LE: GE, GE: LE, EQ: EQ}[rel]
+            self.row_sign[i] = sign
+            self.b[i] = rhs
+            for v, co in terms:
+                self.cols[v].append((i, sign * co))
+            if rel == LE:
+                self.cols[next_slack].append((i, 1.0))
+                self.basis[i] = next_slack
+                next_slack += 1
+            elif rel == GE:
+                self.cols[next_slack].append((i, -1.0))
+                next_slack += 1
+                self.cols[next_art].append((i, 1.0))
+                self.basis[i] = next_art
+                next_art += 1
+            else:
+                self.cols[next_art].append((i, 1.0))
+                self.basis[i] = next_art
+                next_art += 1
+        assert next_slack == art_base and next_art == ncols
+        self.cost = np.zeros(ncols)
+        self.cost[:n] = c
+        self.upper = np.full(ncols, math.inf)
+        self.upper[:n] = [u if u is not None else math.inf for u in upper]
+        self.state = ["L"] * ncols  # L / U / B
+        for i, bi in enumerate(self.basis):
+            self.state[bi] = "B"
+        self.xb = self.b.copy()
+        self.binv = np.eye(m)
+        self.iterations = 0
+        self.dual_pivots = 0
+        self.bound_flips = 0
+        self.phase1_done = False
+        self.long_step = long_step
+        self.y = np.zeros(m)
+        # dual-side candidate list (leaving-row partial pricing)
+        self.dcands = []
+        self.dual_cand_max = dual_cand_max
+
+    # ---- linear algebra (dense explicit inverse, mirrors BasisInverse) ----
+
+    def col_vec(self, j):
+        v = np.zeros(self.m)
+        for i, a in self.cols[j]:
+            v[i] += a
+        return v
+
+    def col_dot(self, j, dense):
+        return sum(a * dense[i] for i, a in self.cols[j])
+
+    def ftran_col(self, j):
+        return self.binv @ self.col_vec(j)
+
+    def fixed(self, j):
+        return self.upper[j] <= 0.0
+
+    def recompute_xb(self):
+        rhs = self.b.copy()
+        for j in range(self.ncols):
+            if self.state[j] == "U":
+                u = self.upper[j]
+                if u > 0.0 and math.isfinite(u):
+                    for i, a in self.cols[j]:
+                        rhs[i] -= u * a
+        self.xb = self.binv @ rhs
+
+    def compute_y(self, cost):
+        cb = np.array([cost[j] for j in self.basis])
+        self.y = cb @ self.binv
+
+    def refactor(self):
+        bmat = np.zeros((self.m, self.m))
+        for k, j in enumerate(self.basis):
+            for i, a in self.cols[j]:
+                bmat[i, k] += a
+        self.binv = np.linalg.inv(bmat)
+        self.recompute_xb()
+
+    def apply_pivot(self, enter, enter_from_upper, leave, leave_to_upper, t, w):
+        sigma = -1.0 if enter_from_upper else 1.0
+        self.xb -= sigma * t * w
+        entering_val = self.upper[enter] - t if enter_from_upper else t
+        old = self.basis[leave]
+        self.state[old] = "U" if leave_to_upper else "L"
+        self.basis[leave] = enter
+        self.state[enter] = "B"
+        self.xb[leave] = entering_val
+        # eta update of binv
+        wr = w[leave]
+        if abs(wr) < 1e-10:
+            self.refactor()
+        else:
+            eta = np.eye(self.m)
+            eta[:, leave] = -w / wr
+            eta[leave, leave] = 1.0 / wr
+            self.binv = eta @ self.binv
+        self.iterations += 1
+
+    # ---- primal (Dantzig + Bland), straight port of rust ----
+
+    def attractiveness(self, j, cost):
+        d = cost[j] - self.col_dot(j, self.y)
+        if self.state[j] == "L":
+            return -d
+        if self.state[j] == "U":
+            return d
+        return 0.0
+
+    def primal_iterate(self, cost):
+        limit = 200 * (self.m + self.ncols) + 1000
+        steps = 0
+        while True:
+            steps += 1
+            if steps > limit:
+                raise IterLimit()
+            use_bland = steps > 2 * (self.m + self.ncols)
+            self.compute_y(cost)
+            enter = None
+            best = TOL
+            for j in range(self.ncols):
+                if self.state[j] == "B" or self.fixed(j):
+                    continue
+                score = self.attractiveness(j, cost)
+                if score > best:
+                    enter = j
+                    best = score
+                    if use_bland:
+                        break
+            if enter is None:
+                return
+            enter_from_upper = self.state[enter] == "U"
+            w = self.ftran_col(enter)
+            sigma = -1.0 if enter_from_upper else 1.0
+            t_best = self.upper[enter]
+            leave = None
+            leave_to_upper = False
+            for i in range(self.m):
+                delta = -sigma * w[i]
+                if delta < -TOL:
+                    ratio = self.xb[i] / -delta
+                    if ratio < t_best - TOL or (
+                        ratio < t_best + TOL
+                        and leave is not None
+                        and self.basis[i] < self.basis[leave]
+                    ):
+                        t_best = ratio
+                        leave = i
+                        leave_to_upper = False
+                elif delta > TOL:
+                    ub = self.upper[self.basis[i]]
+                    if math.isfinite(ub):
+                        ratio = (ub - self.xb[i]) / delta
+                        if ratio < t_best - TOL or (
+                            ratio < t_best + TOL
+                            and leave is not None
+                            and self.basis[i] < self.basis[leave]
+                        ):
+                            t_best = ratio
+                            leave = i
+                            leave_to_upper = True
+            if math.isinf(t_best):
+                raise Unbounded()
+            t = max(t_best, 0.0)
+            if leave is None:
+                self.xb -= sigma * t * w
+                self.state[enter] = "L" if enter_from_upper else "U"
+                self.iterations += 1
+                self.bound_flips += 1
+                continue
+            self.apply_pivot(enter, enter_from_upper, leave, leave_to_upper, t, w)
+
+    # ---- dual: leaving-row candidate list + BFRT long step ----
+
+    def row_violation(self, i):
+        ub = self.upper[self.basis[i]]
+        viol_low = -self.xb[i]
+        viol_up = self.xb[i] - ub if math.isfinite(ub) else -math.inf
+        if viol_up > viol_low:
+            return viol_up, True
+        return viol_low, False
+
+    def best_dual_candidate(self):
+        best = None
+        best_score = 0.0
+        kept = []
+        for i in self.dcands:
+            viol, above = self.row_violation(i)
+            if viol <= TOL:
+                continue
+            kept.append(i)
+            if viol > best_score:
+                best_score = viol
+                best = (i, viol, above)
+        self.dcands = kept
+        return best
+
+    def rebuild_dual_candidates(self):
+        scored = []
+        for i in range(self.m):
+            viol, _ = self.row_violation(i)
+            if viol > TOL:
+                scored.append((viol, i))
+        scored.sort(key=lambda t: (-t[0], t[1]))
+        self.dcands = [i for _, i in scored[: self.dual_cand_max]]
+
+    def pick_leaving(self):
+        pick = self.best_dual_candidate()
+        if pick is not None:
+            return pick
+        self.rebuild_dual_candidates()
+        return self.best_dual_candidate()
+
+    def dual_iterate(self):
+        limit = 200 * (self.m + self.ncols) + 1000
+        steps = 0
+        while True:
+            steps += 1
+            if steps > limit:
+                raise IterLimit()
+            pick = self.pick_leaving()
+            if pick is None:
+                return
+            leave, worst, above = pick
+            self.compute_y(self.cost)
+            rho = self.binv[leave, :].copy()
+            dir_ = 1.0 if above else -1.0
+            bps = []  # (ratio, j, alpha, from_upper)
+            for j in range(self.ncols):
+                if self.state[j] == "B" or self.fixed(j):
+                    continue
+                alpha = self.col_dot(j, rho)
+                abar = dir_ * alpha
+                if self.state[j] == "L" and abar > TOL:
+                    d = max(0.0, self.cost[j] - self.col_dot(j, self.y))
+                    bps.append((d / abar, j, alpha, False))
+                elif self.state[j] == "U" and abar < -TOL:
+                    d = min(0.0, self.cost[j] - self.col_dot(j, self.y))
+                    bps.append((d / abar, j, alpha, True))
+            if not bps:
+                raise Infeasible(worst)
+            flips = []
+            if not self.long_step:
+                best_ratio = math.inf
+                enter = None
+                for ratio, j, alpha, fu in bps:  # index order, like rust
+                    if ratio < best_ratio - TOL:
+                        best_ratio = ratio
+                        enter = (j, alpha, fu)
+            else:
+                bps.sort(key=lambda t: (t[0], t[1]))
+                slope = worst
+                enter = None
+                for ratio, j, alpha, fu in bps:
+                    u = self.upper[j]
+                    flip_cost = u * abs(dir_ * alpha) if math.isfinite(u) else math.inf
+                    if slope - flip_cost <= TOL:
+                        enter = (j, alpha, fu)
+                        break
+                    slope -= flip_cost
+                    flips.append((j, fu))
+                if enter is None:
+                    # slope positive past every breakpoint: dual unbounded
+                    raise Infeasible(worst)
+            if flips:
+                delta_rhs = np.zeros(self.m)
+                for j, fu in flips:
+                    u = self.upper[j]
+                    dx = -u if fu else u
+                    for i, a in self.cols[j]:
+                        delta_rhs[i] += a * dx
+                    self.state[j] = "L" if fu else "U"
+                    self.bound_flips += 1
+                self.xb -= self.binv @ delta_rhs
+            j, alpha, fu = enter
+            target = self.upper[self.basis[leave]] if above else 0.0
+            if fu:
+                t = (target - self.xb[leave]) / alpha
+            else:
+                t = (self.xb[leave] - target) / alpha
+            t = max(t, 0.0)
+            w = self.ftran_col(j)
+            self.apply_pivot(j, fu, leave, above, t, w)
+            self.dual_pivots += 1
+
+    # ---- driver, mirrors rust solve()/warm_resolve() ----
+
+    def expel_artificials(self):
+        for r in range(self.m):
+            if self.basis[r] < self.art_base:
+                continue
+            rho = self.binv[r, :]
+            found = None
+            for j in range(self.art_base):
+                if self.state[j] == "B" or self.fixed(j):
+                    continue
+                if abs(self.col_dot(j, rho)) > 1e-7:
+                    found = j
+                    break
+            if found is None:
+                continue
+            fu = self.state[found] == "U"
+            w = self.ftran_col(found)
+            self.apply_pivot(found, fu, r, False, 0.0, w)
+
+    def solve(self):
+        if not self.phase1_done:
+            if any(j >= self.art_base for j in self.basis):
+                p1 = np.zeros(self.ncols)
+                p1[self.art_base :] = 1.0
+                self.primal_iterate(p1)
+                infeas = sum(
+                    max(self.xb[i], 0.0)
+                    for i in range(self.m)
+                    if self.basis[i] >= self.art_base
+                )
+                if infeas > 1e-7:
+                    raise Infeasible(infeas)
+                for j in range(self.art_base, self.ncols):
+                    self.upper[j] = 0.0
+                    if self.state[j] == "U":
+                        self.state[j] = "L"
+                for i in range(self.m):
+                    if self.basis[i] >= self.art_base:
+                        self.xb[i] = 0.0
+                self.expel_artificials()
+            self.phase1_done = True
+        self.primal_iterate(self.cost)
+        return self.extract()
+
+    def warm_resolve(self):
+        self.recompute_xb()
+        self.dual_iterate()
+        self.primal_iterate(self.cost)
+        return self.extract()
+
+    def update_rhs(self, row, rhs):
+        self.b[row] = self.row_sign[row] * rhs
+
+    def update_upper(self, var, ub):
+        self.upper[var] = ub
+        if self.state[var] == "U" and not math.isfinite(ub):
+            self.state[var] = "L"
+
+    def extract(self):
+        x = np.zeros(self.n_orig)
+        for j in range(self.n_orig):
+            if self.state[j] == "U" and math.isfinite(self.upper[j]):
+                x[j] = self.upper[j]
+        for i in range(self.m):
+            if self.basis[i] < self.n_orig:
+                x[self.basis[i]] = max(self.xb[i], 0.0)
+        obj = float(self.cost[: self.n_orig] @ x)
+        duals = self.row_sign * self.y  # original-row duals
+        return x, obj, duals.copy()
+
+
+# ---------------------------------------------------------------------------
+# Optimality certificate (the contract prop_lp_certificates.rs will pin)
+# ---------------------------------------------------------------------------
+
+
+def check_certificate(c, rows, upper, x, duals, tol=1e-6):
+    """Full KKT certificate for min c'x s.t. rows, 0 <= x <= u.
+
+    Conventions (minimization): Le rows carry y <= 0, Ge rows y >= 0, Eq
+    free; reduced cost d = c - A'y obeys d >= 0 at lower bound, d <= 0 at
+    upper bound, d ~ 0 strictly between; complementary slackness on rows;
+    duality gap b'y + sum_{u finite} u_j * min(0, d_j) == c'x.
+    """
+    n = len(c)
+    scale = 1.0 + max(abs(float(v)) for v in list(x) + [0.0])
+    # primal feasibility
+    for j in range(n):
+        assert x[j] >= -tol * scale, f"x[{j}] negative: {x[j]}"
+        u = upper[j]
+        if u is not None and math.isfinite(u):
+            assert x[j] <= u + tol * scale, f"x[{j}]={x[j]} above u={u}"
+    for i, (terms, rel, rhs) in enumerate(rows):
+        lhs = sum(co * x[v] for v, co in terms)
+        rscale = 1.0 + abs(rhs)
+        if rel == LE:
+            assert lhs <= rhs + tol * rscale, f"row {i} Le violated: {lhs} > {rhs}"
+        elif rel == GE:
+            assert lhs >= rhs - tol * rscale, f"row {i} Ge violated: {lhs} < {rhs}"
+        else:
+            assert abs(lhs - rhs) <= tol * rscale, f"row {i} Eq violated: {lhs} != {rhs}"
+    # dual feasibility on rows + complementary slackness
+    dscale = 1.0 + max(abs(float(v)) for v in list(duals) + [0.0])
+    for i, (terms, rel, rhs) in enumerate(rows):
+        yi = duals[i]
+        lhs = sum(co * x[v] for v, co in terms)
+        slack = abs(lhs - rhs)
+        if rel == LE:
+            assert yi <= tol * dscale, f"row {i} Le dual sign: y={yi}"
+        elif rel == GE:
+            assert yi >= -tol * dscale, f"row {i} Ge dual sign: y={yi}"
+        if rel != EQ and slack > tol * (1.0 + abs(rhs)) * 10:
+            assert abs(yi) <= tol * dscale * 10, f"row {i} CS: slack={slack} y={yi}"
+    # reduced costs vs variable position
+    d = list(c)
+    for i, (terms, _, _) in enumerate(rows):
+        for v, co in terms:
+            d[v] -= duals[i] * co
+    gap_u = 0.0
+    for j in range(n):
+        u = upper[j] if upper[j] is not None else math.inf
+        at_lower = x[j] <= tol * scale
+        at_upper = math.isfinite(u) and x[j] >= u - tol * scale
+        if at_lower and at_upper:
+            pass  # fixed variable: any sign
+        elif at_lower:
+            assert d[j] >= -tol * dscale * 10, f"var {j} at lower, d={d[j]}"
+        elif at_upper:
+            assert d[j] <= tol * dscale * 10, f"var {j} at upper, d={d[j]}"
+        else:
+            assert abs(d[j]) <= tol * dscale * 10, f"var {j} interior, d={d[j]}"
+        if math.isfinite(u):
+            gap_u += u * min(0.0, d[j])
+    primal_obj = sum(c[j] * x[j] for j in range(n))
+    dual_obj = sum(duals[i] * rows[i][2] for i in range(len(rows))) + gap_u
+    gscale = 1.0 + abs(primal_obj)
+    assert abs(primal_obj - dual_obj) <= 10 * tol * gscale, (
+        f"duality gap: primal {primal_obj} dual {dual_obj}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Markowitz LU (mirror of the planned rust lu.rs refactor())
+# ---------------------------------------------------------------------------
+
+PIVOT_TOL = 1e-10
+DROP_TOL = 1e-14
+MARKOWITZ_U = 0.1
+MARKOWITZ_SEARCH = 8
+
+
+class MarkowitzLu:
+    """Port of SparseLu::refactor with Markowitz threshold pivoting, plus the
+    (unchanged) triangular solves, so fill and correctness can be compared
+    against the old ascending-nnz order and numpy."""
+
+    def __init__(self, m):
+        self.m = m
+        self.lops = []  # (target, source, mult)
+        self.pr = list(range(m))
+        self.urows = [[] for _ in range(m)]
+        self.udiag = [1.0] * m
+        self.lorder = list(range(m))
+
+    def size(self):
+        return self.m + sum(len(r) for r in self.urows) + len(self.lops)
+
+    def refactor(self, cols, basis, markowitz=True):
+        m = self.m
+        rows = [[] for _ in range(m)]
+        colrows = [[] for _ in range(m)]
+        cnt = [0] * m  # exact nnz per active column over unpivoted rows
+        for slot, j in enumerate(basis):
+            for i, a in cols[j]:
+                if a != 0.0:
+                    rows[i].append((slot, a))
+                    colrows[slot].append(i)
+                    cnt[slot] += 1
+        lops = []
+        pr = [None] * m
+        urows = [[] for _ in range(m)]
+        udiag = [0.0] * m
+        row_done = [False] * m
+        col_done = [False] * m
+        lorder = []
+        # bucket lists over current column counts (lazy, stale-tolerant);
+        # per-step visited stamp dedups columns pushed more than once
+        buckets = [[] for _ in range(m + 1)]
+        for s in range(m):
+            buckets[cnt[s]].append(s)
+        seen_step = [-1] * m
+
+        def column_entries(s):
+            """(row, value) pairs of active column s, deduped to live rows."""
+            out = []
+            seen = set()
+            for i in colrows[s]:
+                if row_done[i] or i in seen:
+                    continue
+                seen.add(i)
+                for col, v in rows[i]:
+                    if col == s:
+                        out.append((i, v))
+                        break
+            return out
+
+        for step in range(m):
+            prow = None
+            pcol = None
+            best_cost = None
+            best_val = 0.0
+            if markowitz:
+                searched = 0
+                for nnz in range(1, m + 1):
+                    # no count-based cutoff: a later bucket's column can
+                    # still meet a singleton row (cost 0); the search
+                    # budget + cost-0 exit bound the work instead
+                    bucket = buckets[nnz]
+                    keep = []
+                    done_searching = False
+                    for idx, s in enumerate(bucket):
+                        if col_done[s] or cnt[s] != nnz or seen_step[s] == step:
+                            continue  # stale or duplicate: drop this copy
+                        seen_step[s] = step
+                        keep.append(s)
+                        entries = column_entries(s)
+                        if not entries:
+                            continue
+                        colmax = max(abs(v) for _, v in entries)
+                        if colmax < PIVOT_TOL:
+                            continue
+                        searched += 1
+                        for i, v in entries:
+                            if abs(v) < MARKOWITZ_U * colmax or abs(v) < PIVOT_TOL:
+                                continue
+                            cost = (len(rows[i]) - 1) * (cnt[s] - 1)
+                            if (
+                                best_cost is None
+                                or cost < best_cost
+                                or (cost == best_cost and abs(v) > abs(best_val))
+                            ):
+                                best_cost = cost
+                                best_val = v
+                                prow, pcol = i, s
+                        if searched >= MARKOWITZ_SEARCH and best_cost is not None:
+                            keep.extend(
+                                s2
+                                for s2 in bucket[idx + 1 :]
+                                if not col_done[s2]
+                                and cnt[s2] == nnz
+                                and seen_step[s2] != step
+                            )
+                            done_searching = True
+                            break
+                    buckets[nnz] = keep
+                    if done_searching or best_cost == 0:
+                        break
+            else:
+                # old static ascending-nnz order with partial pivoting
+                order = sorted(
+                    (s for s in range(m) if not col_done[s]),
+                    key=lambda s: (cnt[s], s),
+                )
+                s = order[0]
+                best = 0.0
+                for i, v in column_entries(s):
+                    if abs(v) > best:
+                        best = abs(v)
+                        prow = i
+                pcol = s
+                best_val = best
+            if prow is None:
+                raise ValueError("singular basis")
+            s = pcol
+            pivot_row = rows[prow]
+            rows[prow] = []
+            piv = next(v for c2, v in pivot_row if c2 == s)
+            # the pivot row leaves the active set: its columns lose a member
+            for c2, _ in pivot_row:
+                if not col_done[c2]:
+                    cnt[c2] -= 1
+                    buckets[min(cnt[c2], m)].append(c2)
+            cands = colrows[s]
+            colrows[s] = []
+            for i in cands:
+                if row_done[i] or i == prow:
+                    continue
+                a = next((v for c2, v in rows[i] if c2 == s), None)
+                if a is None:
+                    continue
+                mult = a / piv
+                lops.append((i, prow, mult))
+                acc = {}
+                for c2, v in rows[i]:
+                    if c2 != s:
+                        acc[c2] = v
+                old_pattern = set(acc)
+                for c2, v in pivot_row:
+                    if c2 == s:
+                        continue
+                    if c2 not in acc:
+                        acc[c2] = 0.0
+                        colrows[c2].append(i)
+                    acc[c2] -= mult * v
+                new_row = [(c2, v) for c2, v in acc.items() if abs(v) > DROP_TOL]
+                # exact count maintenance for every touched column
+                new_pattern = {c2 for c2, _ in new_row}
+                for c2 in old_pattern | set(acc):
+                    if col_done[c2]:
+                        continue
+                    was = c2 in old_pattern
+                    now = c2 in new_pattern
+                    if was != now:
+                        cnt[c2] += 1 if now else -1
+                        buckets[min(cnt[c2], m)].append(c2)
+                rows[i] = sorted(new_row)
+            pr[s] = prow
+            udiag[s] = piv
+            urows[s] = [(c2, v) for c2, v in pivot_row if c2 != s]
+            row_done[prow] = True
+            col_done[s] = True
+            lorder.append(s)
+        self.lops = lops
+        self.pr = pr
+        self.urows = urows
+        self.udiag = udiag
+        self.lorder = lorder
+        return self
+
+    def ftran(self, v):
+        m = self.m
+        work = np.array(v, dtype=float)
+        for t, s, mult in self.lops:
+            if work[s] != 0.0:
+                work[t] -= mult * work[s]
+        work2 = np.zeros(m)
+        for s in range(m):
+            work2[s] = work[self.pr[s]]
+        out = np.zeros(m)
+        for s in reversed(self.lorder):
+            val = work2[s]
+            for c, u in self.urows[s]:
+                val -= u * out[c]
+            out[s] = val / self.udiag[s]
+        return out
+
+    def btran_unit(self, r):
+        m = self.m
+        work2 = np.zeros(m)
+        work2[r] = 1.0
+        for s in self.lorder:
+            z = work2[s] / self.udiag[s]
+            work2[s] = z
+            if z != 0.0:
+                for c, u in self.urows[s]:
+                    work2[c] -= u * z
+        work = np.zeros(m)
+        for s in range(m):
+            work[self.pr[s]] = work2[s]
+        for t, s, mult in reversed(self.lops):
+            if work[t] != 0.0:
+                work[s] -= mult * work[t]
+        return work
+
+
+# ---------------------------------------------------------------------------
+# Validation harness
+# ---------------------------------------------------------------------------
+
+
+def scipy_solve(c, rows, upper):
+    a_ub, b_ub, a_eq, b_eq = [], [], [], []
+    n = len(c)
+    for terms, rel, rhs in rows:
+        dense = [0.0] * n
+        for v, co in terms:
+            dense[v] += co
+        if rel == LE:
+            a_ub.append(dense)
+            b_ub.append(rhs)
+        elif rel == GE:
+            a_ub.append([-x for x in dense])
+            b_ub.append(-rhs)
+        else:
+            a_eq.append(dense)
+            b_eq.append(rhs)
+    bounds = [(0.0, u if u is not None and math.isfinite(u) else None) for u in upper]
+    return linprog(
+        c,
+        A_ub=np.array(a_ub) if a_ub else None,
+        b_ub=np.array(b_ub) if b_ub else None,
+        A_eq=np.array(a_eq) if a_eq else None,
+        b_eq=np.array(b_eq) if b_eq else None,
+        bounds=bounds,
+        method="highs",
+    )
+
+
+def random_instance(rng, n, m):
+    c = [rng.uniform(-1.5, 1.0) for _ in range(n)]
+    rows = []
+    for _ in range(m):
+        terms = [(j, rng.uniform(0.05, 1.0)) for j in range(n) if rng.random() < 0.8]
+        if not terms:
+            terms = [(rng.randrange(n), 1.0)]
+        rel = [LE, LE, GE, EQ][rng.randrange(4)]
+        rows.append((terms, rel, rng.uniform(0.5, 6.0)))
+    upper = []
+    for _ in range(n):
+        r = rng.random()
+        if r < 0.15:
+            upper.append(0.0)
+        elif r < 0.8:
+            upper.append(rng.uniform(0.2, 5.0))
+        else:
+            upper.append(None)
+    return c, rows, upper
+
+
+def lpp1_instance(rng, g, e, d=2):
+    edp = [sorted(rng.sample(range(g), d)) for _ in range(e)]
+    loads = [rng.randint(0, 300) for _ in range(e)]
+    nx = e * d
+    c = [0.0] * (nx + 1)
+    c[nx] = 1.0
+    rows = []
+    for gi in range(g):
+        terms = [(nx, -1.0)]
+        for ei, grp in enumerate(edp):
+            for r, gg in enumerate(grp):
+                if gg == gi:
+                    terms.append((ei * d + r, 1.0))
+        rows.append((terms, LE, 0.0))
+    for ei in range(e):
+        rows.append(([(ei * d + r, 1.0) for r in range(d)], EQ, float(loads[ei])))
+    upper = [None] * (nx + 1)
+    return c, rows, upper, edp, loads
+
+
+def boxed_family(rng, n):
+    """The BFRT showcase: max-profit knapsack-ish LP, many boxed variables,
+    one capacity row; shrinking the capacity warm forces multi-flip dual
+    repairs."""
+    c = [-rng.uniform(0.5, 3.0) for _ in range(n)]
+    # a couple of duplicated costs for dual-degenerate ties
+    if n >= 4:
+        c[1] = c[0]
+        c[3] = c[2]
+    upper = [rng.uniform(0.5, 2.0) for _ in range(n)]
+    cap = sum(upper) * 0.9
+    rows = [([(j, 1.0) for j in range(n)], LE, cap)]
+    rows.append(([(j, 1.0) for j in range(0, n, 2)], LE, cap))
+    return c, rows, upper
+
+
+def validate_cold(seed=1, cases=300):
+    rng = random.Random(seed)
+    solved = 0
+    for case in range(cases):
+        n = 2 + case % 6
+        m = 1 + case % 5
+        c, rows, upper = random_instance(rng, n, m)
+        ref = scipy_solve(c, rows, upper)
+        s = RevisedRef(c, rows, upper)
+        try:
+            x, obj, duals = s.solve()
+        except Infeasible:
+            assert ref.status == 2, f"case {case}: we infeasible, scipy {ref.status}"
+            continue
+        except Unbounded:
+            assert ref.status == 3, f"case {case}: we unbounded, scipy {ref.status}"
+            continue
+        assert ref.status == 0, f"case {case}: we solved, scipy {ref.status}"
+        assert abs(obj - ref.fun) < 1e-6 * (1 + abs(ref.fun)), (
+            f"case {case}: {obj} vs {ref.fun}"
+        )
+        check_certificate(c, rows, upper, x, duals)
+        solved += 1
+    print(f"cold: {solved}/{cases} optima agree with HiGHS, certificates pass")
+    assert solved > cases // 3
+
+
+def validate_warm(seed=2, cases=120):
+    rng = random.Random(seed)
+    flips_total = 0
+    long_pivots = 0
+    classic_pivots = 0
+    for case in range(cases):
+        n = 6 + case % 10
+        c, rows, upper = boxed_family(rng, n)
+        solvers = {
+            "long": RevisedRef(c, rows, upper, long_step=True),
+            "classic": RevisedRef(c, rows, upper, long_step=False),
+        }
+        for s in solvers.values():
+            s.solve()
+        for _round in range(6):
+            cap = sum(u for u in upper) * rng.uniform(0.1, 1.0)
+            objs = {}
+            for name, s in solvers.items():
+                s.update_rhs(0, cap)
+                p0, d0 = s.dual_pivots, s.bound_flips
+                x, obj, duals = s.warm_resolve()
+                objs[name] = obj
+                if name == "long":
+                    flips_total += s.bound_flips - d0
+                    long_pivots += s.dual_pivots - p0
+                    check_certificate(
+                        c, [(rows[0][0], LE, cap)] + rows[1:], upper, x, duals
+                    )
+                else:
+                    classic_pivots += s.dual_pivots - p0
+            ref = scipy_solve(c, [(rows[0][0], LE, cap)] + rows[1:], upper)
+            assert ref.status == 0
+            for name, obj in objs.items():
+                assert abs(obj - ref.fun) < 1e-6 * (1 + abs(ref.fun)), (
+                    f"case {case} {name}: {obj} vs scipy {ref.fun}"
+                )
+            # bound edits too
+            j = rng.randrange(n)
+            newu = rng.uniform(0.2, 2.5)
+            upper = upper[:j] + [newu] + upper[j + 1 :]
+            objs = {}
+            for name, s in solvers.items():
+                s.update_upper(j, newu)
+                _, obj, _ = s.warm_resolve()
+                objs[name] = obj
+            ref = scipy_solve(c, [(rows[0][0], LE, cap)] + rows[1:], upper)
+            assert ref.status == 0
+            for name, obj in objs.items():
+                assert abs(obj - ref.fun) < 1e-6 * (1 + abs(ref.fun)), (
+                    f"case {case} {name} after bound edit: {obj} vs {ref.fun}"
+                )
+    print(
+        f"warm: long-step flips={flips_total}, dual pivots long={long_pivots} "
+        f"vs classic={classic_pivots}"
+    )
+    assert flips_total > 0, "BFRT never flipped a bound on the engineered family"
+    assert long_pivots <= classic_pivots, "long step used MORE dual pivots"
+
+
+def validate_warm_lpp1(seed=3, cases=40):
+    rng = random.Random(seed)
+    for case in range(cases):
+        g = 4 + case % 4
+        e = 2 * g
+        c, rows, upper, edp, loads = lpp1_instance(rng, g, e)
+        s = RevisedRef(c, rows, upper, long_step=True)
+        s.solve()
+        for _round in range(4):
+            newloads = [rng.randint(0, 300) for _ in range(e)]
+            for ei, l in enumerate(newloads):
+                s.update_rhs(g + ei, float(l))
+            x, obj, duals = s.warm_resolve()
+            rows2 = rows[:g] + [
+                (rows[g + ei][0], EQ, float(l)) for ei, l in enumerate(newloads)
+            ]
+            ref = scipy_solve(c, rows2, upper)
+            assert ref.status == 0
+            assert abs(obj - ref.fun) < 1e-6 * (1 + abs(ref.fun)), (
+                f"case {case}: {obj} vs {ref.fun}"
+            )
+            check_certificate(c, rows2, upper, x, duals)
+            rows = rows2
+    print(f"warm lpp1: {cases} trajectories agree with HiGHS + certificates")
+
+
+def validate_markowitz(seed=4, trials=60):
+    rng = random.Random(seed)
+    fill_m = 0
+    fill_s = 0
+    for trial in range(trials):
+        m = 6 + trial % 30
+        cols = []
+        for j in range(m):
+            col = [(j, 2.0 + rng.random())]
+            for i in range(m):
+                if i != j and rng.random() < min(0.25, 4.0 / m):
+                    col.append((i, rng.uniform(-2.0, 2.0)))
+            cols.append(sorted(col))
+        basis = list(range(m))
+        bmat = np.zeros((m, m))
+        for k, j in enumerate(basis):
+            for i, a in cols[j]:
+                bmat[i, k] += a
+        if abs(np.linalg.det(bmat)) < 1e-8:
+            continue
+        lu = MarkowitzLu(m).refactor(cols, basis, markowitz=True)
+        lu_static = MarkowitzLu(m).refactor(cols, basis, markowitz=False)
+        fill_m += lu.size()
+        fill_s += lu_static.size()
+        for _ in range(4):
+            v = np.array([rng.uniform(-1, 1) for _ in range(m)])
+            x = lu.ftran(v)
+            assert np.allclose(bmat @ x, v, atol=1e-7), f"trial {trial}: ftran"
+            r = rng.randrange(m)
+            y = lu.btran_unit(r)
+            assert np.allclose(y @ bmat, np.eye(m)[r], atol=1e-7), (
+                f"trial {trial}: btran"
+            )
+    print(f"markowitz: fill {fill_m} vs static-order fill {fill_s}")
+    assert fill_m <= fill_s * 1.05, "markowitz order grew fill vs static order"
+
+
+if __name__ == "__main__":
+    validate_cold()
+    validate_warm()
+    validate_warm_lpp1()
+    validate_markowitz()
+    print("ALL LP REFERENCE VALIDATIONS PASSED")

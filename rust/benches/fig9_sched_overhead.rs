@@ -5,16 +5,21 @@
 //! <1 ms at 64 GPUs / 256 experts).
 //!
 //! Every (pricing × factorization) cell of the revised simplex is
-//! measured separately — warm p50/p95 *and* mean warm pivots — so the
-//! per-commit JSON artifact tracks both engines' trajectories: devex must
-//! keep the pivot counts down, sparse LU must keep the per-pivot cost down
-//! as `m` grows.
+//! measured separately — warm p50/p95, mean warm pivots, mean warm *dual*
+//! pivots, and mean bound flips — so the per-commit JSON artifact tracks
+//! all the engines' trajectories: devex must keep the pivot counts down,
+//! sparse LU must keep the per-pivot cost down as `m` grows, and the
+//! long-step dual's bound-flipping ratio test must keep the warm dual
+//! pivot count down (its flips show up in `warm_bound_flips`). Beyond the
+//! paper's 64-GPU grid, 128/256-GPU shapes are measured for both LPP-1
+//! and LPP-4 — the CommAware cells are the per-micro-batch bound-edit
+//! path the BFRT exists for.
 
 use micromoe::bench_harness::{bench, fmt_time, save_json, Table};
 use micromoe::lp::{FactorKind, Pricing, SolverKind};
 use micromoe::placement::cayley::cayley_graph_placement;
 use micromoe::rng::{Rng, Zipf};
-use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, ScheduleMode, SchedulerOptions};
 use micromoe::ser::Json;
 
 /// The four revised-simplex cells (the tableau baseline lives in
@@ -33,14 +38,24 @@ struct Cell {
     p95_us: f64,
     /// mean LP pivots per schedule() call over the measured iterations
     pivots: f64,
+    /// mean dual-simplex pivots per call (warm-repair work)
+    dual_pivots: f64,
+    /// mean nonbasic bound flips per call (BFRT batches + primal flips)
+    bound_flips: f64,
 }
 
-fn sched_time(gpus: usize, experts: usize, solver: SolverKind, warm: bool) -> Cell {
+fn sched_time(
+    gpus: usize,
+    experts: usize,
+    mode: &ScheduleMode,
+    solver: SolverKind,
+    warm: bool,
+) -> Cell {
     let p = cayley_graph_placement(gpus, experts);
     let mut s = MicroEpScheduler::new(
         p,
         None,
-        SchedulerOptions { warm_start: warm, solver, ..Default::default() },
+        SchedulerOptions { warm_start: warm, solver, mode: mode.clone(), ..Default::default() },
     );
     let mut rng = Rng::new(7);
     let zipf = Zipf::new(experts, 0.8);
@@ -59,60 +74,93 @@ fn sched_time(gpus: usize, experts: usize, solver: SolverKind, warm: bool) -> Ce
     let batches: Vec<LoadMatrix> = (0..8).map(|_| mk(&mut rng)).collect();
     let mut i = 0;
     let mut pivots = 0usize;
+    let mut dual_pivots = 0usize;
+    let mut bound_flips = 0usize;
     let mut solves = 0usize;
     let r = bench(&format!("sched_{gpus}x{experts}_{}", solver.label()), 2, 24, || {
         let sched = s.schedule(&batches[i % 8]);
         pivots += sched.stats.lp_iterations;
+        dual_pivots += sched.stats.lp_dual_pivots;
+        bound_flips += sched.stats.lp_bound_flips;
         solves += 1;
         i += 1;
         std::hint::black_box(sched);
     });
+    let per = |v: usize| v as f64 / solves as f64;
     Cell {
         p50_us: r.summary.p50 * 1e6,
         p95_us: r.summary.p95 * 1e6,
-        pivots: pivots as f64 / solves as f64,
+        pivots: per(pivots),
+        dual_pivots: per(dual_pivots),
+        bound_flips: per(bound_flips),
     }
 }
 
 fn main() {
-    let mut table = Table::new(
-        "Fig 9: measured scheduling time (LP + routing) per (pricing × factorization) cell",
-        &["GPUs", "experts", "backend", "warm p50", "warm p95", "warm piv", "cold p50"],
-    );
-    let mut json = Vec::new();
+    let lpp1 = ScheduleMode::Compute;
+    let lpp4 = ScheduleMode::CommAware { alpha: 0.7 };
+    // the paper's grid (LPP-1), then the scale the long-step dual and the
+    // Markowitz LU exist for: 128/256-GPU shapes under both objectives —
+    // LPP-4 is the per-micro-batch bound-edit path where BFRT batches flips
+    let mut cases: Vec<(usize, usize, &str, &ScheduleMode)> = Vec::new();
     for &gpus in &[8usize, 16, 32, 64] {
         for &experts in &[32usize, 64, 128, 256] {
-            if experts < gpus {
-                continue;
+            if experts >= gpus {
+                cases.push((gpus, experts, "LPP-1", &lpp1));
             }
-            for solver in cells() {
-                let warm = sched_time(gpus, experts, solver, true);
-                let cold = sched_time(gpus, experts, solver, false);
-                table.row(vec![
-                    gpus.to_string(),
-                    experts.to_string(),
-                    solver.label().to_string(),
-                    fmt_time(warm.p50_us * 1e-6),
-                    fmt_time(warm.p95_us * 1e-6),
-                    format!("{:.1}", warm.pivots),
-                    fmt_time(cold.p50_us * 1e-6),
-                ]);
-                json.push(Json::obj(vec![
-                    ("gpus", Json::Num(gpus as f64)),
-                    ("experts", Json::Num(experts as f64)),
-                    ("backend", Json::Str(solver.label().to_string())),
-                    ("warm_p50_us", Json::Num(warm.p50_us)),
-                    ("warm_p95_us", Json::Num(warm.p95_us)),
-                    ("warm_pivots", Json::Num(warm.pivots)),
-                    ("cold_p50_us", Json::Num(cold.p50_us)),
-                ]));
-            }
+        }
+    }
+    for &(gpus, experts) in &[(128usize, 256usize), (256, 256)] {
+        cases.push((gpus, experts, "LPP-1", &lpp1));
+    }
+    for &(gpus, experts) in &[(64usize, 256usize), (128, 256), (256, 256)] {
+        cases.push((gpus, experts, "LPP-4", &lpp4));
+    }
+
+    let mut table = Table::new(
+        "Fig 9: measured scheduling time (LP + routing) per (pricing × factorization) cell",
+        &[
+            "mode", "GPUs", "experts", "backend", "warm p50", "warm p95", "warm piv",
+            "warm dpiv", "flips", "cold p50",
+        ],
+    );
+    let mut json = Vec::new();
+    for (gpus, experts, mode_name, mode) in cases {
+        for solver in cells() {
+            let warm = sched_time(gpus, experts, mode, solver, true);
+            let cold = sched_time(gpus, experts, mode, solver, false);
+            table.row(vec![
+                mode_name.to_string(),
+                gpus.to_string(),
+                experts.to_string(),
+                solver.label().to_string(),
+                fmt_time(warm.p50_us * 1e-6),
+                fmt_time(warm.p95_us * 1e-6),
+                format!("{:.1}", warm.pivots),
+                format!("{:.1}", warm.dual_pivots),
+                format!("{:.1}", warm.bound_flips),
+                fmt_time(cold.p50_us * 1e-6),
+            ]);
+            json.push(Json::obj(vec![
+                ("mode", Json::Str(mode_name.to_string())),
+                ("gpus", Json::Num(gpus as f64)),
+                ("experts", Json::Num(experts as f64)),
+                ("backend", Json::Str(solver.label().to_string())),
+                ("warm_p50_us", Json::Num(warm.p50_us)),
+                ("warm_p95_us", Json::Num(warm.p95_us)),
+                ("warm_pivots", Json::Num(warm.pivots)),
+                ("warm_dual_pivots", Json::Num(warm.dual_pivots)),
+                ("warm_bound_flips", Json::Num(warm.bound_flips)),
+                ("cold_p50_us", Json::Num(cold.p50_us)),
+            ]));
         }
     }
     table.print();
     println!(
         "\npaper Fig 9: ~100 µs minimum, <1 ms at 64 GPUs / 256 experts \
-         (HiGHS, one CPU thread)."
+         (HiGHS, one CPU thread). The LPP-4 rows at 128/256 GPUs gate the \
+         long-step dual: warm_dual_pivots must sit below the PR-2 baseline \
+         with the batched flips showing up in warm_bound_flips."
     );
     let _ = save_json("fig9", &Json::Arr(json));
 }

@@ -26,8 +26,13 @@ use super::lu::SparseLu;
 /// Largest row count for which [`FactorKind::Auto`] still picks the dense
 /// explicit inverse. Below this, the dense engine's O(m²) eta update has
 /// better constants than sparse bookkeeping; above it, fill-aware LU wins
-/// on both memory (O(m²) vs O(nnz)) and per-pivot work.
-pub const AUTO_DENSE_MAX_M: usize = 192;
+/// on both memory (O(m²) vs O(nnz)) and per-pivot work. Revisited when the
+/// LU refactorization moved to Markowitz pivoting (tighter fill shifts the
+/// crossover toward smaller `m`): lowered from the PR-2 cut of 192 to one
+/// 128-GPU row block, handing 129–192-row instances to the LU engine too;
+/// `fig9_sched_overhead` tracks both engines per commit so the cut stays
+/// honest against measured warm p50s.
+pub const AUTO_DENSE_MAX_M: usize = 128;
 
 /// Which basis-factorization engine backs a revised-simplex solve.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

@@ -11,7 +11,9 @@
 //! ```
 //!
 //! * `E` — row-elimination operations from Gaussian elimination with
-//!   partial pivoting, kept as a sparse op list in constraint-row space;
+//!   Markowitz pivoting (threshold partial pivoting, `u ≈ 0.1`; see
+//!   [`SparseLu`]'s `refactor`), kept as a sparse op list in
+//!   constraint-row space;
 //! * `P` — the row permutation (`pr`), mapping each U position ("slot") to
 //!   the constraint row that was pivotal for it;
 //! * `R` — Forrest–Tomlin update operations in slot space, appended by
@@ -46,6 +48,18 @@ const PIVOT_TOL: f64 = 1e-10;
 /// Entries below this magnitude are dropped when rows are combined —
 /// cancellation dust that would otherwise masquerade as fill.
 const DROP_TOL: f64 = 1e-14;
+
+/// Threshold-partial-pivoting relaxation factor `u` for Markowitz
+/// pivoting: an entry is an acceptable pivot when `|a_ij| ≥ u · max_i
+/// |a_ij|` over its (active) column. The classic compromise value — small
+/// enough that the fill-minimizing Markowitz choice is rarely vetoed,
+/// large enough to bound element growth.
+const MARKOWITZ_U: f64 = 0.1;
+
+/// How many candidate columns (searched in ascending active-count order)
+/// the Markowitz pivot search examines before settling, Suhl-style; more
+/// search buys marginally less fill at linear search cost.
+const MARKOWITZ_SEARCH: usize = 8;
 
 /// One sparse row operation `x[target] -= mult * x[source]`, used both for
 /// the elimination file `E` (constraint-row space) and the Forrest–Tomlin
@@ -301,77 +315,154 @@ impl Factorization for SparseLu {
         Ok(())
     }
 
-    /// Sparse Gaussian elimination with partial pivoting. Columns are
-    /// eliminated in ascending-nnz order (a static fill-reducing
-    /// heuristic); within a column the largest-magnitude entry among
-    /// unpivoted rows is chosen for stability.
+    /// Sparse Gaussian elimination with **Markowitz pivoting**: each step
+    /// picks the entry minimizing the Markowitz count `(r_i − 1)(c_j − 1)`
+    /// (the worst-case fill that pivot can create) among entries passing
+    /// threshold partial pivoting (`|a_ij| ≥ u · max_i |a_ij|` over the
+    /// active column, `u` = `MARKOWITZ_U` = 0.1). Candidate columns are
+    /// visited in ascending active-count order via lazily maintained
+    /// count buckets, and the search stops Suhl-style after
+    /// `MARKOWITZ_SEARCH` eligible columns (immediately on a fill-free
+    /// cost-0 pivot). This replaces the PR-2 static ascending-nnz column
+    /// order, which fixed the order up front and so went fill-blind the
+    /// moment elimination changed the row/column counts it was sorted by.
     fn refactor(&mut self, csc: &Csc, basis: &[usize]) -> Result<(), BasisError> {
         let m = self.m;
         debug_assert_eq!(basis.len(), m);
         // Working rows of B in (column slot, value) form, plus a
-        // column→candidate-rows index maintained under fill-in.
+        // column→candidate-rows index (stale-tolerant) and *exact* active
+        // entry counts per column, maintained under fill-in/cancellation.
         let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
         let mut colrows: Vec<Vec<usize>> = vec![Vec::new(); m];
-        let mut col_nnz = vec![0usize; m];
+        let mut cnt = vec![0usize; m];
         for (slot, &j) in basis.iter().enumerate() {
             let (ri, rv) = csc.col(j);
             for (&i, &a) in ri.iter().zip(rv) {
                 if a != 0.0 {
                     rows[i].push((slot, a));
                     colrows[slot].push(i);
-                    col_nnz[slot] += 1;
+                    cnt[slot] += 1;
                 }
             }
         }
-        let mut order: Vec<usize> = (0..m).collect();
-        order.sort_unstable_by_key(|&s| (col_nnz[s], s));
+        // count buckets over columns; entries go stale when a count moves
+        // and are skipped (and dropped) when their bucket is next scanned.
+        // A column whose count oscillates gets pushed more than once, so a
+        // per-step visited stamp dedups scans (and drops the extra copies)
+        // — otherwise duplicates would eat the Suhl search budget.
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); m + 1];
+        for s in 0..m {
+            buckets[cnt[s]].push(s);
+        }
+        let mut seen_step = vec![usize::MAX; m];
 
         let mut lops: Vec<RowOp> = Vec::new();
         let mut pr = vec![usize::MAX; m];
         let mut urows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); m];
         let mut udiag = vec![0.0; m];
         let mut row_done = vec![false; m];
+        let mut col_done = vec![false; m];
         let mut lorder = Vec::with_capacity(m);
         let mut lpos = vec![usize::MAX; m];
         // dense scratch for sparse row combines
         let mut acc = vec![0.0; m];
         let mut inpat = vec![false; m];
+        let mut in_old = vec![false; m];
         let mut pattern: Vec<usize> = Vec::new();
+        // scratch: live (row, value) entries of the column under search
+        // (collected once per column, reused by the colmax and threshold
+        // passes; a cancel-then-refill column can list a row twice in
+        // `colrows`, which merely re-reads the same live entry)
+        let mut entries: Vec<(usize, f64)> = Vec::new();
 
-        for (step, &s) in order.iter().enumerate() {
-            // pivot search: largest |value| in column s over unpivoted rows
+        // live value of column `s` in row `i`, if any
+        let entry_in = |rows: &[Vec<(usize, f64)>], i: usize, s: usize| -> Option<f64> {
+            rows[i].iter().find(|&&(c, _)| c == s).map(|&(_, v)| v)
+        };
+
+        for step in 0..m {
+            // ---- Markowitz pivot search over the sparsest columns ----
             let mut prow = usize::MAX;
-            let mut best = 0.0;
-            for &i in &colrows[s] {
-                if row_done[i] {
-                    continue;
-                }
-                for &(c, v) in &rows[i] {
-                    if c == s {
-                        if v.abs() > best {
-                            best = v.abs();
-                            prow = i;
+            let mut pcol = usize::MAX;
+            let mut best_cost = usize::MAX;
+            let mut best_val = 0.0f64;
+            let mut max_rejected = 0.0f64;
+            let mut searched = 0usize;
+            'nnz: for nnz in 1..=m {
+                // Note: a later bucket can still hide a *better* pivot (a
+                // column of any count meeting a singleton row costs 0), so
+                // no count-based cutoff is sound when only columns are
+                // scanned in count order; the search budget below and the
+                // cost-0 early exit bound the work instead.
+                let bucket = std::mem::take(&mut buckets[nnz]);
+                let mut keep: Vec<usize> = Vec::with_capacity(bucket.len());
+                for (idx, &s) in bucket.iter().enumerate() {
+                    if col_done[s] || cnt[s] != nnz || seen_step[s] == step {
+                        continue; // stale or duplicate: drop this copy
+                    }
+                    seen_step[s] = step;
+                    keep.push(s);
+                    entries.clear();
+                    let mut colmax = 0.0f64;
+                    for &i in &colrows[s] {
+                        if !row_done[i] {
+                            if let Some(v) = entry_in(&rows, i, s) {
+                                entries.push((i, v));
+                                colmax = colmax.max(v.abs());
+                            }
                         }
-                        break;
+                    }
+                    if colmax < PIVOT_TOL {
+                        max_rejected = max_rejected.max(colmax);
+                        continue;
+                    }
+                    searched += 1;
+                    for &(i, v) in &entries {
+                        if v.abs() < MARKOWITZ_U * colmax || v.abs() < PIVOT_TOL {
+                            continue;
+                        }
+                        let cost = (rows[i].len() - 1) * (cnt[s] - 1);
+                        if cost < best_cost || (cost == best_cost && v.abs() > best_val.abs()) {
+                            best_cost = cost;
+                            best_val = v;
+                            prow = i;
+                            pcol = s;
+                        }
+                    }
+                    if searched >= MARKOWITZ_SEARCH && best_cost != usize::MAX {
+                        keep.extend(bucket[idx + 1..].iter().copied().filter(|&s2| {
+                            !col_done[s2] && cnt[s2] == nnz && seen_step[s2] != step
+                        }));
+                        buckets[nnz] = keep;
+                        break 'nnz;
                     }
                 }
+                buckets[nnz] = keep;
+                if best_cost == 0 {
+                    break; // a fill-free pivot cannot be beaten
+                }
             }
-            if best < PIVOT_TOL {
-                return Err(BasisError::Singular(best, step));
+            if prow == usize::MAX {
+                return Err(BasisError::Singular(max_rejected, step));
             }
+            let s = pcol;
+            col_done[s] = true;
             let pivot_row = std::mem::take(&mut rows[prow]);
-            let piv = pivot_row
-                .iter()
-                .find(|&&(c, _)| c == s)
-                .map(|&(_, v)| v)
-                .expect("pivot entry located above");
+            let piv = best_val;
+            // the pivot row leaves the active set: its columns lose a member
+            for &(c, _) in &pivot_row {
+                if !col_done[c] {
+                    cnt[c] -= 1;
+                    buckets[cnt[c]].push(c);
+                }
+            }
             // eliminate column s from every other unpivoted row holding it
             let cands = std::mem::take(&mut colrows[s]);
             for &i in &cands {
                 if row_done[i] || i == prow {
                     continue;
                 }
-                let Some(&(_, a)) = rows[i].iter().find(|&&(c, _)| c == s) else {
+                let Some(a) = entry_in(&rows, i, s) else {
                     continue; // stale candidate (entry cancelled earlier)
                 };
                 let mult = a / piv;
@@ -384,6 +475,7 @@ impl Factorization for SparseLu {
                     }
                     acc[c] = v;
                     inpat[c] = true;
+                    in_old[c] = true;
                     pattern.push(c);
                 }
                 for &(c, v) in &pivot_row {
@@ -400,10 +492,21 @@ impl Factorization for SparseLu {
                 }
                 let mut next = Vec::with_capacity(pattern.len());
                 for &c in &pattern {
-                    if acc[c].abs() > DROP_TOL {
+                    let live = acc[c].abs() > DROP_TOL;
+                    if live {
                         next.push((c, acc[c]));
                     }
+                    // exact count maintenance: fill-in vs cancellation
+                    if !col_done[c] && live != in_old[c] {
+                        if live {
+                            cnt[c] += 1;
+                        } else {
+                            cnt[c] -= 1;
+                        }
+                        buckets[cnt[c]].push(c);
+                    }
                     inpat[c] = false;
+                    in_old[c] = false;
                 }
                 rows[i] = next;
             }
@@ -543,6 +646,40 @@ mod tests {
         let csc = Csc::from_columns(2, vec![vec![(0, 1.0)], vec![(0, 2.0)]]);
         let mut lu = SparseLu::identity(2);
         assert!(matches!(lu.refactor(&csc, &[0, 1]), Err(BasisError::Singular(..))));
+    }
+
+    /// Markowitz ordering must keep an arrowhead matrix fill-free: pivoting
+    /// the dense row/column first (as any count-blind order risks) fills the
+    /// whole trailing block, O(m²) factor entries instead of O(m). Also
+    /// cross-checks the factors against the dense inverse.
+    #[test]
+    fn markowitz_keeps_arrowhead_fill_linear() {
+        let m = 24;
+        // column j < m-1: diagonal + a last-row entry; last column: dense
+        let mut cols: Vec<Vec<(usize, f64)>> = (0..m - 1)
+            .map(|j| vec![(j, 2.0 + j as f64 * 0.1), (m - 1, 0.5)])
+            .collect();
+        cols.push((0..m).map(|i| (i, if i == m - 1 { 4.0 } else { 0.7 })).collect());
+        let csc = Csc::from_columns(m, cols);
+        let basis: Vec<usize> = (0..m).collect();
+        let mut lu = SparseLu::identity(m);
+        lu.refactor(&csc, &basis).unwrap();
+        assert!(
+            lu.size() < 5 * m,
+            "arrowhead fill blew up: {} factor entries for m = {m}",
+            lu.size()
+        );
+        let mut dense = BasisInverse::identity(m);
+        dense.refactor(&csc, &basis).unwrap();
+        let v: Vec<f64> = (0..m).map(|i| (i as f64).sin()).collect();
+        let mut ol = vec![0.0; m];
+        let mut od = vec![0.0; m];
+        lu.ftran_dense(&v, &mut ol);
+        dense.ftran_dense(&v, &mut od);
+        assert_vec_close(&ol, &od, 1e-8, "arrowhead ftran");
+        lu.btran_unit(m - 1, &mut ol);
+        od.copy_from_slice(dense.row(m - 1));
+        assert_vec_close(&ol, &od, 1e-8, "arrowhead btran");
     }
 
     #[test]

@@ -35,12 +35,20 @@
 //! and variable bounds move. Both backends therefore guarantee:
 //!
 //! * the retained basis stays *dual-feasible* under rhs/bound edits, so a
-//!   re-solve is `x_B = B⁻¹(b − A_U u)` refresh + dual-simplex repair;
+//!   re-solve is `x_B = B⁻¹(b − A_U u)` refresh + dual-simplex repair —
+//!   run by the revised backend as a *long-step* dual with the
+//!   bound-flipping ratio test (every boxed column the dual step crosses
+//!   flips in one batched `x_B` update before the pivot; see [`revised`]);
 //! * a warm failure of any kind (including `Infeasible`, which a stale
 //!   basis can report spuriously) falls back to a cold solve without
 //!   losing the ability to warm-start later batches;
 //! * [`Solution::iterations`] counts pivots identically on both paths, so
-//!   Fig. 11's warm-vs-cold pivot ablation is backend-independent.
+//!   Fig. 11's warm-vs-cold pivot ablation is backend-independent; the
+//!   finer [`SolveStats`] counters (dual pivots, bound flips,
+//!   refactorizations) attribute the warm-repair work per engine;
+//! * every optimum carries its KKT certificate ([`Solution::duals`] plus
+//!   reduced costs derived from it), pinned for all backends by
+//!   `tests/prop_lp_certificates.rs`.
 //!
 //! # Scaling knobs (past ~128 GPUs)
 //!
@@ -56,8 +64,9 @@
 //!   trait): the dense explicit `B⁻¹` is O(m²) memory and O(m²) per eta
 //!   update regardless of sparsity — fine for small `m`, a wall past a
 //!   few hundred rows. Sparse LU factors with Forrest–Tomlin updates
-//!   ([`lu`]) scale with fill instead, and refactorize on fill *growth*
-//!   rather than a fixed pivot count.
+//!   ([`lu`]) scale with fill instead, refactorize on fill *growth*
+//!   rather than a fixed pivot count, and keep that fill low by
+//!   refactorizing with Markowitz threshold pivoting.
 //!
 //! # Modules
 //!
@@ -87,6 +96,6 @@ pub mod warm;
 
 pub use factor::{FactorKind, Factorization};
 pub use problem::{Constraint, LpProblem, Relation};
-pub use revised::{Pricing, RevisedSolver};
+pub use revised::{Pricing, RevisedSolver, SolveStats};
 pub use simplex::{SimplexError, Solution, Solver};
 pub use warm::{SolverKind, WarmSolver};

@@ -31,11 +31,34 @@
 //! Anti-cycling: after a stall both rules fall back to Bland's first-index
 //! sweep, exactly as before.
 //!
+//! # Long-step dual simplex (BFRT)
+//!
 //! Warm start (§5.1): between micro-batches only `b` and the bounds move,
 //! so the previous optimal basis stays dual-feasible; [`RevisedSolver::warm_resolve`]
 //! refreshes `x_B = B⁻¹(b − A_U u)` and runs the bounded-variable dual
 //! simplex until primal feasibility returns — the same contract the dense
-//! path honours, typically a handful of pivots.
+//! path honours.
+//!
+//! The dual iterations use the **bound-flipping ratio test** (Maros-style
+//! BFRT): the dual objective is piecewise linear in the dual step, with one
+//! breakpoint per eligible nonbasic column at `d_j / |ᾱ_j|`. Instead of
+//! pivoting at the *first* breakpoint, the ratio test sorts the breakpoints
+//! and walks them while the objective slope — the leaving row's primal
+//! infeasibility, which shrinks by `u_j·|ᾱ_j|` at every crossed *boxed*
+//! column — stays positive. Every boxed column crossed before the chosen
+//! breakpoint flips to its opposite bound in **one batched `x_B` update**
+//! (a single FTRAN of the accumulated `Σ A_j Δx_j`), and only then does the
+//! entering column pivot. One dual pivot can thus absorb an rhs shift that
+//! the classic one-flip-per-pivot test ([`RevisedSolver::set_long_step`]
+//! keeps it around for ablations) would spend many pivots on. Leaving-row
+//! selection mirrors the primal candidate-list machinery: a short list of
+//! the most violated rows (scored `violation² / w_i` with the dual-devex
+//! row weights) is re-checked first and a full row sweep runs only when the
+//! list dries up.
+//!
+//! Per-solve counters — pivots, dual pivots, bound flips, refactorizations
+//! — are exposed through [`SolveStats`] so the benches can attribute the
+//! warm-path win per (pricing × factorization) cell.
 
 use super::bounds::Csc;
 use super::factor::{FactorKind, Factorization};
@@ -53,6 +76,53 @@ const CAND_MAX: usize = 48;
 /// this, the approximation has drifted too far from the reference frame —
 /// restart with all weights at 1.
 const DEVEX_RESET: f64 = 1e8;
+
+/// Upper bound on the dual (leaving-row) candidate-list length. Shorter
+/// than [`CAND_MAX`]: row violations drift faster than reduced costs, so a
+/// long list would mostly hold stale rows.
+const DUAL_CAND_MAX: usize = 32;
+
+/// One breakpoint of the piecewise-linear dual objective in the
+/// bound-flipping ratio test: nonbasic column `j` whose reduced cost hits
+/// zero after a dual step of `ratio` along the leaving row.
+#[derive(Clone, Copy)]
+struct Breakpoint {
+    ratio: f64,
+    j: usize,
+    /// `e_leave' B⁻¹ A_j` — the pivot element if `j` enters.
+    alpha: f64,
+    from_upper: bool,
+}
+
+/// Work counters for a solve, cumulative over a solver's lifetime (take a
+/// snapshot before and [`SolveStats::since`] after to meter one re-solve).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SolveStats {
+    /// Simplex basis changes, primal and dual, plus primal bound-flip
+    /// steps — identical in meaning to [`super::simplex::Solution::iterations`].
+    pub pivots: usize,
+    /// Dual-simplex pivots alone — the §5.1 warm-repair work metric the
+    /// long-step ratio test exists to cut.
+    pub dual_pivots: usize,
+    /// Nonbasic bound flips: primal ratio-test flips plus every boxed
+    /// column batched by the dual BFRT.
+    pub bound_flips: usize,
+    /// Basis refactorizations (scheduled, drift-triggered, or after a
+    /// rejected pivot update).
+    pub refactorizations: usize,
+}
+
+impl SolveStats {
+    /// Counters accumulated since the `earlier` snapshot.
+    pub fn since(self, earlier: SolveStats) -> SolveStats {
+        SolveStats {
+            pivots: self.pivots.saturating_sub(earlier.pivots),
+            dual_pivots: self.dual_pivots.saturating_sub(earlier.dual_pivots),
+            bound_flips: self.bound_flips.saturating_sub(earlier.bound_flips),
+            refactorizations: self.refactorizations.saturating_sub(earlier.refactorizations),
+        }
+    }
+}
 
 /// Column-pricing rule for the primal iterations (mirrored as the
 /// leaving-row rule in the dual iterations).
@@ -105,13 +175,25 @@ pub struct RevisedSolver {
     dweight: Vec<f64>,
     /// candidate list for partial primal pricing
     cands: Vec<usize>,
+    /// candidate list for dual leaving-row partial pricing
+    dcands: Vec<usize>,
     pub(crate) iterations: usize,
+    /// dual-simplex pivots (subset of `iterations`)
+    dual_pivots: usize,
+    /// nonbasic bound flips (primal flip steps + dual BFRT batch members)
+    bound_flips: usize,
+    /// basis refactorizations performed
+    refactorizations: usize,
+    /// long-step (bound-flipping) dual ratio test; `false` restores the
+    /// classic one-flip-per-pivot test for ablations/differential tests
+    long_step: bool,
     phase1_done: bool,
     // scratch buffers reused across pivots
     w: Vec<f64>,
     y: Vec<f64>,
     rho: Vec<f64>,
     rhs_buf: Vec<f64>,
+    flip_buf: Vec<f64>,
     cb_scratch: Vec<(usize, f64)>,
 }
 
@@ -235,12 +317,18 @@ impl RevisedSolver {
             pweight: vec![1.0; ncols],
             dweight: vec![1.0; m],
             cands: Vec::new(),
+            dcands: Vec::new(),
             iterations: 0,
+            dual_pivots: 0,
+            bound_flips: 0,
+            refactorizations: 0,
+            long_step: true,
             phase1_done: false,
             w: vec![0.0; m],
             y: vec![0.0; m],
             rho: vec![0.0; m],
             rhs_buf: vec![0.0; m],
+            flip_buf: vec![0.0; m],
             cb_scratch: Vec::with_capacity(m),
         }
     }
@@ -253,6 +341,26 @@ impl RevisedSolver {
     /// The factorization engine actually in use (never [`FactorKind::Auto`]).
     pub fn factor_kind(&self) -> FactorKind {
         self.factor_kind
+    }
+
+    /// Cumulative work counters (pivots, dual pivots, bound flips,
+    /// refactorizations) since construction. Snapshot before a re-solve and
+    /// use [`SolveStats::since`] to meter that re-solve alone.
+    pub fn stats(&self) -> SolveStats {
+        SolveStats {
+            pivots: self.iterations,
+            dual_pivots: self.dual_pivots,
+            bound_flips: self.bound_flips,
+            refactorizations: self.refactorizations,
+        }
+    }
+
+    /// Toggle the long-step (bound-flipping) dual ratio test. On by
+    /// default; switching it off restores the classic one-flip-per-pivot
+    /// dual ratio test — kept so ablations and differential tests can pin
+    /// the two paths to identical optima.
+    pub fn set_long_step(&mut self, enabled: bool) {
+        self.long_step = enabled;
     }
 
     /// Replace a row's rhs (original row order; sign normalization from
@@ -333,6 +441,7 @@ impl RevisedSolver {
         self.factor
             .refactor(&self.csc, &self.basis)
             .map_err(|_| SimplexError::Numerical("singular basis on refactor"))?;
+        self.refactorizations += 1;
         self.recompute_xb();
         Ok(())
     }
@@ -618,6 +727,7 @@ impl RevisedSolver {
                     VarState::AtUpper
                 };
                 self.iterations += 1;
+                self.bound_flips += 1;
                 continue;
             }
             if !use_bland && self.pricing == Pricing::Devex {
@@ -627,12 +737,95 @@ impl RevisedSolver {
         }
     }
 
+    /// Signed bound violation of basis row `i`: magnitude plus which bound
+    /// is violated (`true` = above the upper bound).
+    #[inline]
+    fn row_violation(&self, i: usize) -> (f64, bool) {
+        let ub = self.upper[self.basis[i]];
+        let viol_low = -self.xb[i];
+        let viol_up = if ub.is_finite() { self.xb[i] - ub } else { f64::NEG_INFINITY };
+        if viol_up > viol_low {
+            (viol_up, true)
+        } else {
+            (viol_low, false)
+        }
+    }
+
+    /// Re-check the dual candidate list, dropping rows no longer violated;
+    /// returns the best remaining row by devex score `violation² / w_i`.
+    fn best_dual_candidate(&mut self) -> Option<(usize, f64, bool)> {
+        let mut best = None;
+        let mut best_score = 0.0;
+        let mut k = 0;
+        while k < self.dcands.len() {
+            let i = self.dcands[k];
+            let (viol, above) = self.row_violation(i);
+            if viol <= TOL {
+                self.dcands.swap_remove(k);
+                continue;
+            }
+            let score = viol * viol / self.dweight[i].max(1.0);
+            if score > best_score {
+                best_score = score;
+                best = Some((i, viol, above));
+            }
+            k += 1;
+        }
+        best
+    }
+
+    /// Full row sweep: keep the [`DUAL_CAND_MAX`] best-scoring violated
+    /// rows as the new dual candidate list.
+    fn rebuild_dual_candidates(&mut self) {
+        self.dcands.clear();
+        let mut scored: Vec<(f64, usize)> = Vec::new();
+        for i in 0..self.m {
+            let (viol, _) = self.row_violation(i);
+            if viol > TOL {
+                let score = viol * viol / self.dweight[i].max(1.0);
+                scored.push((score, i));
+            }
+        }
+        scored.sort_unstable_by(|x, y| y.0.partial_cmp(&x.0).unwrap().then(x.1.cmp(&y.1)));
+        scored.truncate(DUAL_CAND_MAX);
+        self.dcands.extend(scored.into_iter().map(|(_, i)| i));
+    }
+
+    /// Leaving-row selection: Dantzig keeps the full-sweep largest
+    /// violation (the ablation baseline); devex re-checks a short candidate
+    /// list of the most violated rows first and sweeps only when the list
+    /// dries up — declaring primal feasibility requires an empty sweep, so
+    /// the partial pass never affects correctness, only which row repairs
+    /// first.
+    fn pick_leaving(&mut self) -> Option<(usize, f64, bool)> {
+        if self.pricing == Pricing::Dantzig {
+            let mut best = None;
+            let mut best_viol = 0.0;
+            for i in 0..self.m {
+                let (viol, above) = self.row_violation(i);
+                if viol > TOL && viol > best_viol {
+                    best_viol = viol;
+                    best = Some((i, viol, above));
+                }
+            }
+            return best;
+        }
+        if let Some(pick) = self.best_dual_candidate() {
+            return Some(pick);
+        }
+        self.rebuild_dual_candidates();
+        self.best_dual_candidate()
+    }
+
     /// Bounded-variable dual simplex: restore `0 ≤ x_B ≤ u_B` while keeping
-    /// dual feasibility. The warm-start repair path.
+    /// dual feasibility. The warm-start repair path, with the long-step
+    /// bound-flipping ratio test (see the module docs).
     pub(crate) fn dual_iterate(&mut self) -> Result<(), SimplexError> {
         let cost = self.cost.clone();
         let limit = 200 * (self.m + self.ncols) + 1000;
         let mut steps = 0usize;
+        self.dcands.clear();
+        let mut bps: Vec<Breakpoint> = Vec::new();
         loop {
             steps += 1;
             if steps > limit {
@@ -641,45 +834,17 @@ impl RevisedSolver {
             if self.factor.due_for_refactor() {
                 self.refactor()?;
             }
-            // ---- leaving row: devex-weighted (or plain largest) bound
-            // violation ----
-            let mut leave = usize::MAX;
-            let mut worst = 0.0; // violation magnitude of the chosen row
-            let mut best_score = 0.0;
-            let mut above = false;
-            for i in 0..self.m {
-                let ub = self.upper[self.basis[i]];
-                let viol_low = -self.xb[i];
-                let viol_up = if ub.is_finite() { self.xb[i] - ub } else { f64::NEG_INFINITY };
-                let (viol, is_above) =
-                    if viol_up > viol_low { (viol_up, true) } else { (viol_low, false) };
-                if viol <= TOL {
-                    continue;
-                }
-                let score = match self.pricing {
-                    Pricing::Dantzig => viol,
-                    Pricing::Devex => viol * viol / self.dweight[i].max(1.0),
-                };
-                if score > best_score {
-                    best_score = score;
-                    worst = viol;
-                    leave = i;
-                    above = is_above;
-                }
-            }
-            if leave == usize::MAX {
+            // ---- leaving row (candidate list under devex) ----
+            let Some((leave, worst, above)) = self.pick_leaving() else {
                 return Ok(()); // primal feasible again
-            }
+            };
             self.compute_y(&cost);
             self.btran_row(leave);
             // `dir`: the sign x_B[leave] must move in (+1 = decrease needed
             // is encoded through the eligibility signs below)
             let dir = if above { 1.0 } else { -1.0 };
-            // ---- dual ratio test ----
-            let mut enter = usize::MAX;
-            let mut enter_from_upper = false;
-            let mut enter_alpha = 0.0;
-            let mut best_ratio = f64::INFINITY;
+            // ---- breakpoints of the piecewise-linear dual objective ----
+            bps.clear();
             for j in 0..self.ncols {
                 if self.state[j] == VarState::Basic || self.fixed(j) {
                     continue;
@@ -689,44 +854,93 @@ impl RevisedSolver {
                 match self.state[j] {
                     VarState::AtLower if abar > TOL => {
                         let d = (cost[j] - self.csc.col_dot(j, &self.y)).max(0.0);
-                        let ratio = d / abar;
-                        // strict improvement only: within the tolerance
-                        // band the first (smallest) index wins, which is
-                        // the deterministic tie-break we want
-                        if ratio < best_ratio - TOL {
-                            best_ratio = ratio;
-                            enter = j;
-                            enter_from_upper = false;
-                            enter_alpha = alpha;
-                        }
+                        bps.push(Breakpoint { ratio: d / abar, j, alpha, from_upper: false });
                     }
                     VarState::AtUpper if abar < -TOL => {
+                        // d ≤ 0 at an upper bound, so ratio = d / ᾱ ≥ 0
                         let d = (cost[j] - self.csc.col_dot(j, &self.y)).min(0.0);
-                        let ratio = d / abar; // ≤0 / <0 → ≥ 0
-                        if ratio < best_ratio - TOL {
-                            best_ratio = ratio;
-                            enter = j;
-                            enter_from_upper = true;
-                            enter_alpha = alpha;
-                        }
+                        bps.push(Breakpoint { ratio: d / abar, j, alpha, from_upper: true });
                     }
                     _ => {}
                 }
             }
-            if enter == usize::MAX {
+            if bps.is_empty() {
                 // dual unbounded ⇒ primal infeasible for this rhs/bounds
                 return Err(SimplexError::Infeasible(worst));
             }
-            // step length: x_B[leave] lands exactly on its violated bound
-            let target = if above { self.upper[self.basis[leave]] } else { 0.0 };
-            let t = if enter_from_upper {
-                (target - self.xb[leave]) / enter_alpha
+            // ---- ratio test: classic min-ratio, or the BFRT walk ----
+            let mut chosen: Option<Breakpoint> = None;
+            let mut flip_end = 0usize;
+            if !self.long_step {
+                // strict improvement only: within the tolerance band the
+                // first (smallest) index wins, which is the deterministic
+                // tie-break we want
+                let mut best_ratio = f64::INFINITY;
+                for bp in &bps {
+                    if bp.ratio < best_ratio - TOL {
+                        best_ratio = bp.ratio;
+                        chosen = Some(*bp);
+                    }
+                }
             } else {
-                (self.xb[leave] - target) / enter_alpha
+                bps.sort_unstable_by(|a, b| {
+                    a.ratio.partial_cmp(&b.ratio).unwrap().then(a.j.cmp(&b.j))
+                });
+                // walk the sorted breakpoints while the dual-objective
+                // slope — the leaving row's remaining infeasibility —
+                // stays positive; every boxed column crossed flips
+                let mut slope = worst;
+                for (k, bp) in bps.iter().enumerate() {
+                    let u = self.upper[bp.j];
+                    let flip_cost =
+                        if u.is_finite() { u * (dir * bp.alpha).abs() } else { f64::INFINITY };
+                    if slope - flip_cost <= TOL {
+                        chosen = Some(*bp);
+                        flip_end = k;
+                        break;
+                    }
+                    slope -= flip_cost;
+                }
+            }
+            let Some(bp) = chosen else {
+                // slope stayed positive past every breakpoint: the dual
+                // objective increases without bound ⇒ primal infeasible
+                return Err(SimplexError::Infeasible(worst));
+            };
+            // ---- batched bound flips for the crossed breakpoints ----
+            if flip_end > 0 {
+                self.rhs_buf.fill(0.0);
+                for fb in &bps[..flip_end] {
+                    let u = self.upper[fb.j];
+                    let dx = if fb.from_upper { -u } else { u };
+                    let (rows, vals) = self.csc.col(fb.j);
+                    for (&i, &a) in rows.iter().zip(vals) {
+                        self.rhs_buf[i] += a * dx;
+                    }
+                    self.state[fb.j] =
+                        if fb.from_upper { VarState::AtLower } else { VarState::AtUpper };
+                    self.bound_flips += 1;
+                }
+                // one FTRAN absorbs every flip: x_B -= B⁻¹ (Σ A_j Δx_j)
+                let mut flip = std::mem::take(&mut self.flip_buf);
+                self.factor.ftran_dense(&self.rhs_buf, &mut flip);
+                for i in 0..self.m {
+                    self.xb[i] -= flip[i];
+                }
+                self.flip_buf = flip;
+            }
+            // step length: x_B[leave] lands exactly on its violated bound
+            // (the flips above already moved it partway there)
+            let target = if above { self.upper[self.basis[leave]] } else { 0.0 };
+            let t = if bp.from_upper {
+                (target - self.xb[leave]) / bp.alpha
+            } else {
+                (self.xb[leave] - target) / bp.alpha
             };
             let t = t.max(0.0);
-            self.ftran_col(enter);
-            self.apply_pivot(enter, enter_from_upper, leave, above, t)?;
+            self.ftran_col(bp.j);
+            self.apply_pivot(bp.j, bp.from_upper, leave, above, t)?;
+            self.dual_pivots += 1;
         }
     }
 
@@ -820,6 +1034,11 @@ impl RevisedSolver {
     }
 
     /// Current solution restricted to the structural variables.
+    ///
+    /// Relies on `self.y` holding `c_B' B⁻¹` for the phase-2 costs of the
+    /// final basis — guaranteed because both [`Self::solve`] and
+    /// [`Self::warm_resolve`] end in a [`Self::primal_iterate`] pass whose
+    /// optimality exit prices against a freshly computed `y`.
     pub(crate) fn extract(&self) -> Solution {
         let mut x = vec![0.0; self.n_orig];
         for j in 0..self.n_orig {
@@ -837,7 +1056,9 @@ impl RevisedSolver {
             }
         }
         let objective = self.cost[..self.n_orig].iter().zip(&x).map(|(c, v)| c * v).sum();
-        Solution { x, objective, iterations: self.iterations }
+        // duals in original row order: undo the build-time sign flip
+        let duals = (0..self.m).map(|i| self.row_sign[i] * self.y[i]).collect();
+        Solution { x, objective, iterations: self.iterations, duals }
     }
 }
 

@@ -37,6 +37,14 @@ pub struct Solution {
     pub objective: f64,
     /// Total simplex pivots across phases (the Fig-11 warm-solve metric).
     pub iterations: usize,
+    /// Row duals `y = c_B' B⁻¹` in original row order (minimization
+    /// convention: `≤` rows carry `y ≤ 0`, `≥` rows `y ≥ 0`, `=` free), the
+    /// other half of the optimality certificate pinned by
+    /// `tests/prop_lp_certificates.rs`. When the solver expanded variable
+    /// bounds into rows ([`super::bounds::expand_to_rows`]) the synthetic
+    /// rows' duals trail the real ones; truncate to the original row count
+    /// before checking certificates against the bounded problem.
+    pub duals: Vec<f64>,
 }
 
 /// Tableau simplex solver. Retains its final state so a [`super::warm::WarmSolver`]
@@ -423,7 +431,24 @@ impl Solver {
             .zip(&x)
             .map(|(c, v)| c * v)
             .sum();
-        Solution { x, objective, iterations: self.iterations }
+        // Row duals y' = c_B' B⁻¹: tableau column `idcol[k]` (the column
+        // that held row k's +1 in the initial identity) is the k-th column
+        // of B⁻¹, so y_k falls out of a weighted column sum; the build-time
+        // row sign flip is undone to land in original row space.
+        let stride = self.stride();
+        let mut duals = vec![0.0; self.m];
+        for (k, d) in duals.iter_mut().enumerate() {
+            let col = self.idcol[k];
+            let mut yk = 0.0;
+            for i in 0..self.m {
+                let cb = self.cost[self.basis[i]];
+                if cb != 0.0 {
+                    yk += cb * self.tab[i * stride + col];
+                }
+            }
+            *d = self.row_sign[k] * yk;
+        }
+        Solution { x, objective, iterations: self.iterations, duals }
     }
 }
 

@@ -22,7 +22,7 @@
 use super::bounds;
 use super::factor::FactorKind;
 use super::problem::LpProblem;
-use super::revised::{Pricing, RevisedSolver};
+use super::revised::{Pricing, RevisedSolver, SolveStats};
 use super::simplex::{SimplexError, Solution, Solver};
 
 /// Which simplex implementation backs a [`WarmSolver`].
@@ -52,6 +52,22 @@ impl SolverKind {
     /// automatic factorization choice.
     pub fn revised() -> Self {
         Self::default()
+    }
+
+    /// Every distinguishable backend cell — the four concrete revised
+    /// (pricing × factorization) combinations, then the dense tableau.
+    /// The single source of truth for the test suites that must cover
+    /// every cell; a new pricing rule or factorization engine added here
+    /// propagates to the differential/certificate/golden coverage
+    /// automatically.
+    pub fn all_cells() -> [SolverKind; 5] {
+        [
+            SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::DenseInverse },
+            SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::SparseLu },
+            SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::DenseInverse },
+            SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::SparseLu },
+            SolverKind::DenseTableau,
+        ]
     }
 
     /// Compact cell label for bench tables (`devex+lu`, `tableau`, …).
@@ -118,6 +134,11 @@ pub struct WarmSolver {
     pub last_iterations: usize,
     /// Whether the most recent solve used the warm path.
     pub last_was_warm: bool,
+    /// Full work counters for the most recent solve — pivots, dual pivots,
+    /// bound flips, refactorizations ([`SolveStats`]). The dense tableau
+    /// backend reports pivots only (it has neither implicit bounds nor a
+    /// maintained factorization).
+    pub last_stats: SolveStats,
 }
 
 impl WarmSolver {
@@ -137,7 +158,13 @@ impl WarmSolver {
                 Backend::Dense { solver: None, expanded, bound_row }
             }
         };
-        WarmSolver { backend, problem, last_iterations: 0, last_was_warm: false }
+        WarmSolver {
+            backend,
+            problem,
+            last_iterations: 0,
+            last_was_warm: false,
+            last_stats: SolveStats::default(),
+        }
     }
 
     /// The backend this solver was built with.
@@ -164,6 +191,7 @@ impl WarmSolver {
                 let mut s = RevisedSolver::with_config(&self.problem, *pricing, *factor);
                 let sol = s.solve()?;
                 self.last_iterations = s.iterations;
+                self.last_stats = s.stats();
                 *slot = Some(s);
                 Ok(sol)
             }
@@ -172,6 +200,7 @@ impl WarmSolver {
                 let mut s = Solver::new(expanded);
                 let sol = s.solve()?;
                 self.last_iterations = s.iterations;
+                self.last_stats = SolveStats { pivots: s.iterations, ..SolveStats::default() };
                 *solver = Some(s);
                 Ok(sol)
             }
@@ -267,10 +296,10 @@ impl WarmSolver {
         rhs_updates: &[(usize, f64)],
         bound_updates: &[(usize, f64)],
     ) -> Option<Result<Solution, SimplexError>> {
-        let (result, iterations) = match &mut self.backend {
+        let (result, stats) = match &mut self.backend {
             Backend::Revised { slot, .. } => {
                 let s = slot.as_mut()?;
-                let before = s.iterations;
+                let before = s.stats();
                 for &(row, rhs) in rhs_updates {
                     s.update_rhs(row, rhs);
                 }
@@ -278,7 +307,7 @@ impl WarmSolver {
                     s.update_upper(var, ub);
                 }
                 let r = s.warm_resolve();
-                let spent = s.iterations - before;
+                let spent = s.stats().since(before);
                 (r, spent)
             }
             Backend::Dense { solver, expanded, .. } => {
@@ -308,12 +337,13 @@ impl WarmSolver {
                 }
                 let r = s.dual_iterate().map(|()| s.extract());
                 let spent = s.iterations - before;
-                (r, spent)
+                (r, SolveStats { pivots: spent, ..SolveStats::default() })
             }
         };
         if result.is_ok() {
-            self.last_iterations = iterations;
+            self.last_iterations = stats.pivots;
             self.last_was_warm = true;
+            self.last_stats = stats;
         }
         Some(result)
     }
@@ -339,13 +369,7 @@ mod tests {
     /// Every backend cell: four revised (pricing × factorization) combos
     /// plus the dense tableau.
     fn all_kinds() -> [SolverKind; 5] {
-        [
-            SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::DenseInverse },
-            SolverKind::Revised { pricing: Pricing::Dantzig, factor: FactorKind::SparseLu },
-            SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::DenseInverse },
-            SolverKind::Revised { pricing: Pricing::Devex, factor: FactorKind::SparseLu },
-            SolverKind::DenseTableau,
-        ]
+        SolverKind::all_cells()
     }
 
     #[test]

@@ -14,12 +14,28 @@
 
 use crate::rng::Rng;
 
+/// Read a seed override from environment variable `var`, falling back to
+/// `default` when unset or unparsable. The LP fuzz suites
+/// (`tests/differential_lp.rs`, `tests/prop_lp_certificates.rs`) read
+/// `LP_FUZZ_SEED` through this so a CI failure is replayable with
+/// `LP_FUZZ_SEED=<seed> cargo test`; each test prints the seed it ran
+/// with, which libtest surfaces exactly when the test fails.
+pub fn seed_from_env(var: &str, default: u64) -> u64 {
+    std::env::var(var).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// The LP fuzz suites' seed hook: `LP_FUZZ_SEED` wins over the test's
+/// default, and the value used is printed so a failing run names the seed
+/// that reproduces it.
+pub fn fuzz_seed(default: u64) -> u64 {
+    let seed = seed_from_env("LP_FUZZ_SEED", default);
+    eprintln!("replay with: LP_FUZZ_SEED={seed}");
+    seed
+}
+
 /// Base seed: override with `MICROMOE_PROP_SEED` to replay a failure.
 fn base_seed() -> u64 {
-    std::env::var("MICROMOE_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0xC0FFEE)
+    seed_from_env("MICROMOE_PROP_SEED", 0xC0FFEE)
 }
 
 /// Run `prop` on `cases` independent seeded RNGs; panics with the seed of

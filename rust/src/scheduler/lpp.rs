@@ -30,7 +30,7 @@ use std::time::Instant;
 use super::rounding::round_replica_loads;
 use super::routing::route_tokens;
 use super::{LoadMatrix, Schedule, ScheduleMode, ScheduleStats, SchedulerOptions};
-use crate::lp::{LpProblem, Relation, WarmSolver};
+use crate::lp::{LpProblem, Relation, SolveStats, WarmSolver};
 use crate::placement::Placement;
 use crate::topology::Topology;
 
@@ -186,7 +186,7 @@ impl MicroEpScheduler {
                     .iter()
                     .map(|vars| vars.iter().map(|&v| sol.x[v]).collect())
                     .collect();
-                (frac, (self.warm.last_iterations, self.warm.last_was_warm, sol.objective))
+                (frac, (self.warm.last_stats, self.warm.last_was_warm, sol.objective))
             }
             Err(e) => {
                 // Defensive fallback (should not happen: LPP 1/4 are always
@@ -198,7 +198,7 @@ impl MicroEpScheduler {
                         vec![loads.expert_load(ei) as f64 / k as f64; k]
                     })
                     .collect();
-                (frac, (0, false, f64::NAN))
+                (frac, (SolveStats::default(), false, f64::NAN))
             }
         };
 
@@ -218,7 +218,10 @@ impl MicroEpScheduler {
             replica_loads,
             routes,
             stats: ScheduleStats {
-                lp_iterations: stats_lp.0,
+                lp_iterations: stats_lp.0.pivots,
+                lp_dual_pivots: stats_lp.0.dual_pivots,
+                lp_bound_flips: stats_lp.0.bound_flips,
+                lp_refactors: stats_lp.0.refactorizations,
                 warm: stats_lp.1,
                 lp_objective: stats_lp.2,
                 max_gpu_load: 0,

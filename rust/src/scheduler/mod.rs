@@ -107,6 +107,13 @@ pub struct Route {
 pub struct ScheduleStats {
     /// simplex pivots spent
     pub lp_iterations: usize,
+    /// dual-simplex pivots alone (the warm-repair work the long-step
+    /// bound-flipping ratio test exists to cut)
+    pub lp_dual_pivots: usize,
+    /// nonbasic bound flips (primal flip steps + dual BFRT batch members)
+    pub lp_bound_flips: usize,
+    /// basis refactorizations inside the LP solve
+    pub lp_refactors: usize,
     /// whether the warm path was taken
     pub warm: bool,
     /// LP objective (fractional optimal max GPU load, or comp+α·comm)

@@ -11,10 +11,16 @@
 //! `MicroEpScheduler`, raw-LP fuzz with upper-bound edge cases
 //! (bound-tight optima, degenerate bounds at 0), and 128–256-GPU-shaped
 //! instances where the sparse-LU engine is the one actually exercised in
-//! production (`FactorKind::Auto` cuts over at m > 192).
+//! production (`FactorKind::Auto` cuts over at m > 128).
+//!
+//! Every randomized test derives its RNG from `LP_FUZZ_SEED` (default: the
+//! per-test constant below) and prints the seed it ran with — libtest
+//! shows that output exactly when the test fails, so a CI failure is
+//! replayable with `LP_FUZZ_SEED=<seed> cargo test --test differential_lp`.
 
 use micromoe::lp::{FactorKind, LpProblem, Pricing, Relation, SimplexError, SolverKind, WarmSolver};
 use micromoe::placement::cayley::cayley_graph_placement;
+use micromoe::prop::fuzz_seed;
 use micromoe::rng::{Rng, Zipf};
 use micromoe::scheduler::flow::flow_schedule;
 use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, ScheduleMode, SchedulerOptions};
@@ -78,7 +84,7 @@ fn schedulers_agree_across_modes_and_batches() {
             .into_iter()
             .map(|k| MicroEpScheduler::new(placement.clone(), Some(topo.clone()), opts(k)))
             .collect();
-        let mut rng = Rng::new(42);
+        let mut rng = Rng::new(fuzz_seed(42));
         let zipf = Zipf::new(experts, 0.9);
         for batch in 0..12 {
             let lm = zipf_batch(&mut rng, &zipf, experts, gpus, 1024);
@@ -123,7 +129,7 @@ fn schedulers_agree_across_modes_and_batches() {
 /// bounds. All backends must agree on the error class or on the objective.
 #[test]
 fn random_instances_agree() {
-    let mut rng = Rng::new(2024);
+    let mut rng = Rng::new(fuzz_seed(2024));
     let mut optima = 0usize;
     let mut infeasible = 0usize;
     let mut unbounded = 0usize;
@@ -243,7 +249,7 @@ fn warm_bound_trajectories_agree() {
     for s in &mut solvers {
         s.solve_cold().unwrap();
     }
-    let mut rng = Rng::new(9);
+    let mut rng = Rng::new(fuzz_seed(9));
     for round in 0..25 {
         let c0 = rng.f64() * 6.0;
         let c1 = (6.0 - c0).max(0.0) + rng.f64() * 3.0;
@@ -303,7 +309,7 @@ fn large_scale_cells_agree() {
             .iter()
             .map(|&k| MicroEpScheduler::new(placement.clone(), None, opts(k)))
             .collect();
-        let mut rng = Rng::new(4096);
+        let mut rng = Rng::new(fuzz_seed(4096));
         let zipf = Zipf::new(experts, 0.8);
         for batch in 0..3 {
             let lm = zipf_batch(&mut rng, &zipf, experts, gpus, 512);

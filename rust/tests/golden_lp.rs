@@ -4,12 +4,19 @@
 //! scipy.optimize.linprog(method="highs") and recorded the optimal
 //! objectives; every backend — the dense tableau and all four revised
 //! (pricing × factorization) cells — must agree to 1e-6 on every one.
+//! The `boxed_resolve` family additionally records warm *trajectories*
+//! (rhs/bound edit steps with per-step HiGHS optima) engineered so the
+//! long-step dual must batch multi-breakpoint bound flips; the replay
+//! asserts those flips actually happen (`bound_flips > 0` per revised
+//! cell).
 //!
 //! The fixture `tests/golden_lp.json` is committed; a missing file is a
 //! hard failure (regenerate with the tool above and commit the result —
 //! see README.md § "Golden LP fixture").
 
-use micromoe::lp::{FactorKind, LpProblem, Pricing, Relation, SimplexError, Solution};
+use micromoe::lp::{
+    FactorKind, LpProblem, Pricing, Relation, SimplexError, Solution, SolverKind, WarmSolver,
+};
 use micromoe::ser::Json;
 
 fn fixture() -> Json {
@@ -46,6 +53,8 @@ fn matches_highs_on_all_cases() {
     let mut lpp1 = 0;
     let mut generic = 0;
     let mut bounded = 0;
+    let mut boxed_degen = 0;
+    let mut boxed_resolve = 0;
     for (i, case) in cases.iter().enumerate() {
         let expect = case.get("objective").unwrap().as_f64().unwrap();
         let problem = match case.get("kind").unwrap().as_str().unwrap() {
@@ -59,6 +68,16 @@ fn matches_highs_on_all_cases() {
             }
             "bounded" => {
                 bounded += 1;
+                build_bounded(case)
+            }
+            // same shape as `bounded`; the duplicated costs / replay steps
+            // matter to the dedicated tests, the base case is checked here
+            "boxed_degen" => {
+                boxed_degen += 1;
+                build_bounded(case)
+            }
+            "boxed_resolve" => {
+                boxed_resolve += 1;
                 build_bounded(case)
             }
             k => panic!("unknown kind {k}"),
@@ -80,6 +99,10 @@ fn matches_highs_on_all_cases() {
     }
     assert!(lpp1 > 0 && generic > 0, "fixture missing a family");
     assert!(bounded > 0, "fixture predates bounded-variable cases — regenerate");
+    assert!(
+        boxed_degen > 0 && boxed_resolve > 0,
+        "fixture predates the dual-degenerate/boxed warm-replay families — regenerate"
+    );
 }
 
 fn build_lpp1(case: &Json) -> LpProblem {
@@ -151,6 +174,87 @@ fn build_bounded(case: &Json) -> LpProblem {
         }
     }
     p
+}
+
+/// Replay the `boxed_resolve` warm trajectories — correlated rhs *and*
+/// bound edits with per-step HiGHS optima — through every backend cell.
+/// The capacity swings are engineered to force multi-breakpoint dual
+/// repairs, so on top of objective agreement this asserts the §5.1 warm
+/// path is actually taken and that the long-step dual batches bound flips:
+/// every revised cell must report `bound_flips > 0` (and dual pivots spent)
+/// across its replay.
+#[test]
+fn boxed_resolve_warm_replay_matches_highs_and_flips_bounds() {
+    let fx = fixture();
+    let cases: Vec<&Json> = fx
+        .get("cases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|c| c.get("kind").unwrap().as_str() == Some("boxed_resolve"))
+        .collect();
+    assert!(cases.len() >= 4, "fixture predates boxed_resolve — regenerate");
+    for kind in SolverKind::all_cells() {
+        let revised = matches!(kind, SolverKind::Revised { .. });
+        let mut flips = 0usize;
+        let mut dual_pivots = 0usize;
+        for (ci, case) in cases.iter().enumerate() {
+            let p = build_bounded(case);
+            let expect = case.get("objective").unwrap().as_f64().unwrap();
+            let mut warm = WarmSolver::with_kind(p, kind);
+            let s0 = warm.solve_cold().unwrap();
+            assert!(
+                (s0.objective - expect).abs() < 1e-6 * (1.0 + expect.abs()),
+                "case {ci} ({}) cold: {} vs HiGHS {}",
+                kind.label(),
+                s0.objective,
+                expect
+            );
+            let steps = case.get("steps").unwrap().as_arr().unwrap();
+            for (si, step) in steps.iter().enumerate() {
+                let rhs: Vec<(usize, f64)> =
+                    as_f64s(step.get("b_ub").unwrap()).into_iter().enumerate().collect();
+                let bounds: Vec<(usize, f64)> = as_f64s(step.get("upper").unwrap())
+                    .into_iter()
+                    .map(|u| if u >= 0.0 { u } else { f64::INFINITY })
+                    .enumerate()
+                    .collect();
+                let expect = step.get("objective").unwrap().as_f64().unwrap();
+                let s = warm.resolve_with_bounds(&rhs, &bounds).unwrap();
+                assert!(
+                    (s.objective - expect).abs() < 1e-6 * (1.0 + expect.abs()),
+                    "case {ci} step {si} ({}): {} vs HiGHS {}",
+                    kind.label(),
+                    s.objective,
+                    expect
+                );
+                if revised {
+                    // the dense tableau may legitimately fall back to cold
+                    // on a stalled dual; the revised cells must not
+                    assert!(
+                        warm.last_was_warm,
+                        "case {ci} step {si} ({}): cold fallback on the warm path",
+                        kind.label()
+                    );
+                    flips += warm.last_stats.bound_flips;
+                    dual_pivots += warm.last_stats.dual_pivots;
+                }
+            }
+        }
+        if revised {
+            assert!(
+                flips > 0,
+                "{}: long-step dual never flipped a bound across the boxed_resolve replay",
+                kind.label()
+            );
+            assert!(
+                dual_pivots > 0,
+                "{}: replay exercised no dual pivots — fixture no longer stresses the dual path",
+                kind.label()
+            );
+        }
+    }
 }
 
 #[test]
