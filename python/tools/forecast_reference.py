@@ -1,0 +1,285 @@
+"""Python transliteration of the rust per-expert load forecaster.
+
+The repo's containers have no rust toolchain, so new numerics land here
+first: this module mirrors ``rust/src/engine/forecast.rs``
+(``LoadForecaster`` — per-cell EMA blended with a sliding-window mean,
+half-up integer rounding, normalized-L1 drift and the hit/miss threshold
+decision) operation for operation, in the same evaluation order, so the
+two implementations agree to float precision.
+
+Two roles:
+
+1. **Reference validation** — ``python3 python/tools/forecast_reference.py``
+   runs a numpy-checked self-test (EMA recurrence vs closed form, window
+   mean vs ``np.mean``, drift vs direct numpy L1) and exits non-zero on
+   failure.
+2. **Fixture generation** — it then regenerates
+   ``rust/tests/golden_forecast.json``: deterministic multinomial load
+   sequences (stationary, drifting, and jumping regimes) with the
+   reference forecaster's dense predictions, rounded predictions, drift
+   values, and hit/miss decisions recorded per step.
+   ``rust/tests/golden_forecast.rs`` replays the sequences through the
+   rust forecaster and must reproduce every recorded value.
+
+The generator asserts that no recorded drift sits within 1e-6 of its
+threshold and no unrounded prediction within 1e-9 of a .5 rounding
+boundary, so float noise between the two implementations can never flip a
+recorded decision. The fixture is committed; regenerate only when the
+forecaster or the case set changes, and commit the result.
+"""
+
+import json
+import math
+import os
+
+import numpy as np
+
+
+class ForecastRef:
+    """Mirror of rust ``LoadForecaster`` (keep in sync — see module docs)."""
+
+    def __init__(self, experts, gpus, ema_alpha, window, blend, drift_threshold,
+                 min_history):
+        assert experts > 0 and gpus > 0
+        assert 0.0 < ema_alpha <= 1.0
+        assert 0.0 <= blend <= 1.0
+        assert window > 0 and drift_threshold >= 0.0
+        self.experts = experts
+        self.gpus = gpus
+        self.ema_alpha = ema_alpha
+        self.window = window
+        self.blend = blend
+        self.drift_threshold = drift_threshold
+        self.min_history = min_history
+        self.ema = [0.0] * (experts * gpus)
+        self.buf = []  # sliding window, oldest first (mirrors VecWindow)
+        self.observed = 0
+
+    def observe(self, loads):
+        """loads: experts x gpus nested list of ints (expert-major)."""
+        row = [float(loads[e][g]) for e in range(self.experts)
+               for g in range(self.gpus)]
+        if self.observed == 0:
+            self.ema = list(row)
+        else:
+            a = self.ema_alpha
+            # exact mirror of the rust update: a*x + (1-a)*m per cell
+            self.ema = [a * x + (1.0 - a) * m for m, x in zip(self.ema, row)]
+        if len(self.buf) == self.window:
+            self.buf.pop(0)
+        self.buf.append(row)
+        self.observed += 1
+
+    def window_mean(self):
+        # mirror of stats::VecWindow::mean — sequential accumulate, then
+        # one divide (NOT np.mean, whose pairwise summation differs)
+        acc = [0.0] * len(self.buf[0])
+        for xs in self.buf:
+            for i, x in enumerate(xs):
+                acc[i] += x
+        n = float(len(self.buf))
+        return [a / n for a in acc]
+
+    def forecast_dense(self):
+        if self.observed < max(self.min_history, 1):
+            return None
+        wmean = self.window_mean()
+        b = self.blend
+        return [b * m + (1.0 - b) * w for m, w in zip(self.ema, wmean)]
+
+    def forecast(self):
+        dense = self.forecast_dense()
+        if dense is None:
+            return None
+        # round_half_up, mirroring rust: floor(v + 0.5), clamped at 0
+        return [[int(max(math.floor(dense[e * self.gpus + g] + 0.5), 0))
+                 for g in range(self.gpus)] for e in range(self.experts)]
+
+    @staticmethod
+    def drift(pred, actual):
+        num = 0
+        den = 0
+        for pr, ar in zip(pred, actual):
+            for p, a in zip(pr, ar):
+                num += abs(int(p) - int(a))
+                den += int(a)
+        return float(num) / float(max(den, 1))
+
+
+# ---------------------------------------------------------------------------
+# self-test against numpy
+# ---------------------------------------------------------------------------
+
+def self_test():
+    rng = np.random.default_rng(20260728)
+    failures = 0
+
+    # EMA recurrence vs numpy closed form
+    f = ForecastRef(2, 3, ema_alpha=0.4, window=3, blend=1.0,
+                    drift_threshold=0.5, min_history=1)
+    seq = [rng.integers(0, 100, size=(2, 3)) for _ in range(6)]
+    for lm in seq:
+        f.observe(lm.tolist())
+    a = 0.4
+    expect = seq[0].astype(float).ravel()
+    for lm in seq[1:]:
+        expect = a * lm.astype(float).ravel() + (1 - a) * expect
+    if not np.allclose(f.ema, expect, rtol=0, atol=1e-9):
+        print("FAIL ema recurrence")
+        failures += 1
+
+    # window mean vs np.mean over the retained suffix
+    f2 = ForecastRef(2, 3, ema_alpha=0.4, window=3, blend=0.0,
+                     drift_threshold=0.5, min_history=1)
+    for lm in seq:
+        f2.observe(lm.tolist())
+    expect_w = np.mean([s.astype(float).ravel() for s in seq[-3:]], axis=0)
+    if not np.allclose(f2.forecast_dense(), expect_w, rtol=0, atol=1e-9):
+        print("FAIL window mean")
+        failures += 1
+
+    # drift vs direct numpy L1
+    p = rng.integers(0, 50, size=(4, 2))
+    q = rng.integers(0, 50, size=(4, 2))
+    d = ForecastRef.drift(p.tolist(), q.tolist())
+    expect_d = np.abs(p - q).sum() / max(q.sum(), 1)
+    if abs(d - expect_d) > 1e-12:
+        print("FAIL drift")
+        failures += 1
+
+    # stationary loads forecast themselves exactly
+    f3 = ForecastRef(2, 2, ema_alpha=0.4, window=4, blend=0.5,
+                     drift_threshold=0.5, min_history=2)
+    lm = [[10, 20], [5, 7]]
+    for _ in range(5):
+        f3.observe(lm)
+    if f3.forecast() != lm or ForecastRef.drift(f3.forecast(), lm) != 0.0:
+        print("FAIL stationary fixed point")
+        failures += 1
+
+    return failures
+
+
+# ---------------------------------------------------------------------------
+# fixture generation
+# ---------------------------------------------------------------------------
+
+def multinomial_loads(rng, experts, gpus, tokens_per_gpu, probs):
+    """One input_e^g matrix: tokens_per_gpu tokens per GPU over `probs`."""
+    lm = np.zeros((experts, gpus), dtype=np.int64)
+    for g in range(gpus):
+        lm[:, g] = rng.multinomial(tokens_per_gpu, probs)
+    return lm
+
+
+def zipf_probs(experts, s, perm):
+    w = np.array([1.0 / (r + 1) ** s for r in range(experts)])
+    w = w / w.sum()
+    out = np.zeros(experts)
+    out[perm] = w
+    return out
+
+
+def make_sequence(rng, regime, experts, gpus, tokens_per_gpu, steps):
+    """Deterministic load sequences in three autocorrelation regimes."""
+    perm = rng.permutation(experts)
+    probs = zipf_probs(experts, 0.9, perm)
+    seq = []
+    for t in range(steps):
+        if regime == "drifting" and t > 0 and t % 3 == 0:
+            # rotate the hottest third of the ranking (Fig.-2 style drift)
+            k = max(experts // 3, 2)
+            perm[:k] = np.roll(perm[:k], -1)
+            probs = zipf_probs(experts, 0.9, perm)
+        elif regime == "jumping" and t > 0:
+            # fresh ranking every step: speculation should mostly miss
+            perm = rng.permutation(experts)
+            probs = zipf_probs(experts, 0.9, perm)
+        seq.append(multinomial_loads(rng, experts, gpus, tokens_per_gpu, probs))
+    return seq
+
+
+def build_case(rng, name, regime, experts, gpus, tokens_per_gpu, steps, cfg):
+    seq = make_sequence(rng, regime, experts, gpus, tokens_per_gpu, steps)
+    f = ForecastRef(experts, gpus, **cfg)
+    recorded = []
+    for t in range(steps - 1):
+        f.observe(seq[t].tolist())
+        dense = f.forecast_dense()
+        if dense is None:
+            continue
+        pred = f.forecast()
+        drift = ForecastRef.drift(pred, seq[t + 1].tolist())
+        hit = drift <= cfg["drift_threshold"]
+        # decision-stability guards: float noise between implementations
+        # must not be able to flip anything the fixture pins
+        assert abs(drift - cfg["drift_threshold"]) > 1e-6, \
+            f"{name} t={t}: drift {drift} too close to threshold"
+        for v in dense:
+            # exact boundary values (e.g. window means ending in .5) round
+            # identically in both implementations because every operation
+            # is mirrored bit for bit; only *near*-boundary values could be
+            # flipped by a last-ulp divergence
+            frac = (v + 0.5) - math.floor(v + 0.5)
+            assert frac == 0.0 or 1e-9 < frac < 1.0 - 1e-9, \
+                f"{name} t={t}: prediction {v} within 1e-9 of a boundary"
+        recorded.append({
+            "t": t,
+            "dense": dense,
+            "pred": [[int(x) for x in row] for row in pred],
+            "drift": drift,
+            "hit": bool(hit),
+        })
+    assert recorded, f"{name}: no forecasts recorded"
+    return {
+        "name": name,
+        "regime": regime,
+        "experts": experts,
+        "gpus": gpus,
+        "cfg": cfg,
+        "loads": [lm.tolist() for lm in seq],
+        "steps": recorded,
+    }
+
+
+def main():
+    failures = self_test()
+    if failures:
+        print(f"self-test FAILED ({failures})")
+        raise SystemExit(1)
+    print("self-test ok")
+
+    rng = np.random.default_rng(1164)
+    default_cfg = dict(ema_alpha=0.4, window=4, blend=0.5,
+                       drift_threshold=0.5, min_history=2)
+    cases = [
+        build_case(rng, "stationary_small", "stationary", 8, 4, 512, 8,
+                   dict(default_cfg)),
+        build_case(rng, "stationary_wide", "stationary", 16, 8, 2048, 7,
+                   dict(default_cfg)),
+        build_case(rng, "drifting_mid", "drifting", 16, 8, 1024, 9,
+                   dict(default_cfg)),
+        build_case(rng, "jumping_missy", "jumping", 8, 4, 1024, 7,
+                   dict(default_cfg)),
+        build_case(rng, "ema_heavy", "drifting", 8, 4, 768, 8,
+                   dict(ema_alpha=0.8, window=2, blend=0.9,
+                        drift_threshold=0.6, min_history=3)),
+        build_case(rng, "window_heavy", "stationary", 8, 4, 768, 8,
+                   dict(ema_alpha=0.2, window=6, blend=0.1,
+                        drift_threshold=0.4, min_history=2)),
+    ]
+    # the fixture must exercise both decisions somewhere
+    hits = sum(s["hit"] for c in cases for s in c["steps"])
+    total = sum(len(c["steps"]) for c in cases)
+    assert 0 < hits < total, f"degenerate fixture: {hits}/{total} hits"
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    out = os.path.join(here, "..", "..", "rust", "tests", "golden_forecast.json")
+    with open(out, "w") as fh:
+        json.dump({"cases": cases}, fh, indent=1)
+    print(f"wrote {os.path.normpath(out)}: {len(cases)} cases, "
+          f"{total} forecast steps, {hits} hits / {total - hits} misses")
+
+
+if __name__ == "__main__":
+    main()

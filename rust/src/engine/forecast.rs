@@ -1,0 +1,267 @@
+//! Per-expert load forecasting for speculative pre-solves.
+//!
+//! Pro-Prophet and "Prediction Is All MoE Needs" both observe that expert
+//! load is highly autocorrelated across training steps: the gate output of
+//! micro-batch *k+1* is usually a small perturbation of micro-batch *k*.
+//! [`LoadForecaster`] exploits that with a deliberately cheap predictor —
+//! a per-cell exponential moving average blended with a sliding-window
+//! mean over the recent `input_e^g` matrices — good enough to place the
+//! warm-start basis near the next optimum *before* the real gate counts
+//! land, and cheap enough to run per layer per step on the scheduling
+//! thread.
+//!
+//! The speculation contract (driven by
+//! [`super::ScheduleEngine`]): after observing step *k* the engine issues a
+//! speculative pre-solve on [`LoadForecaster::forecast`]; when step *k+1*'s
+//! actual loads arrive, [`LoadForecaster::drift`] — normalized L1 distance
+//! between forecast and actuals — decides whether the primed basis is
+//! trustworthy (a *hit*: warm-repair the bounds/rhs on the actuals) or not
+//! (a *miss*: fall back to a fresh solve). The drift threshold lives in
+//! [`ForecastConfig`].
+//!
+//! The arithmetic is pinned against a numpy transliteration
+//! (`python/tools/forecast_reference.py` → `tests/golden_forecast.json`):
+//! every operation here is written to match the reference evaluation order
+//! exactly, so keep the two in sync when editing.
+
+use crate::scheduler::LoadMatrix;
+use crate::stats::VecWindow;
+
+/// Tuning knobs for [`LoadForecaster`] and the speculation state machine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ForecastConfig {
+    /// EMA smoothing factor in (0, 1]: weight of the newest observation.
+    pub ema_alpha: f64,
+    /// Sliding-window length (most recent micro-batches averaged).
+    pub window: usize,
+    /// Weight of the EMA vs the window mean in the blended prediction
+    /// (`blend·ema + (1−blend)·window_mean`).
+    pub blend: f64,
+    /// Normalized-L1 drift (`Σ|forecast − actual| / Σ actual`) above which
+    /// a speculative pre-solve counts as a miss and the engine re-solves
+    /// from scratch instead of warm-repairing a badly primed basis.
+    pub drift_threshold: f64,
+    /// Observations required before the first forecast is issued.
+    pub min_history: usize,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        // The threshold must clear the multinomial sampling-noise floor:
+        // with mean per-cell counts around 8–32 tokens the L1 drift of a
+        // *perfect* mean predictor sits near 0.2–0.3 (≈ 0.8/√count), so
+        // 0.5 accepts stationary workloads and rejects hot-set rotations.
+        ForecastConfig {
+            ema_alpha: 0.4,
+            window: 4,
+            blend: 0.5,
+            drift_threshold: 0.5,
+            min_history: 2,
+        }
+    }
+}
+
+/// EMA + sliding-window forecaster over `input_e^g` matrices (one instance
+/// per MoE layer; layers' gate distributions are unrelated).
+#[derive(Clone, Debug)]
+pub struct LoadForecaster {
+    cfg: ForecastConfig,
+    experts: usize,
+    gpus: usize,
+    /// per-cell EMA, expert-major (matches [`LoadMatrix`] layout)
+    ema: Vec<f64>,
+    window: VecWindow,
+    observed: usize,
+}
+
+/// Round half up — `numpy.round` rounds half to even, so both this and the
+/// python reference use `floor(x + 0.5)` to keep integer forecasts
+/// bit-identical across the two implementations.
+fn round_half_up(v: f64) -> u64 {
+    (v + 0.5).floor().max(0.0) as u64
+}
+
+impl LoadForecaster {
+    /// Forecaster for `experts × gpus` load matrices.
+    pub fn new(experts: usize, gpus: usize, cfg: ForecastConfig) -> Self {
+        assert!(experts > 0 && gpus > 0);
+        assert!(cfg.ema_alpha > 0.0 && cfg.ema_alpha <= 1.0, "alpha in (0,1]");
+        assert!((0.0..=1.0).contains(&cfg.blend), "blend in [0,1]");
+        assert!(cfg.window > 0 && cfg.drift_threshold >= 0.0);
+        LoadForecaster {
+            cfg,
+            experts,
+            gpus,
+            ema: vec![0.0; experts * gpus],
+            window: VecWindow::new(cfg.window),
+            observed: 0,
+        }
+    }
+
+    /// The configuration this forecaster was built with.
+    pub fn config(&self) -> ForecastConfig {
+        self.cfg
+    }
+
+    /// Micro-batches observed so far.
+    pub fn observed(&self) -> usize {
+        self.observed
+    }
+
+    /// Fold in one micro-batch's actual gate counts.
+    pub fn observe(&mut self, loads: &LoadMatrix) {
+        assert_eq!(loads.num_experts, self.experts, "expert count changed");
+        assert_eq!(loads.num_gpus, self.gpus, "gpu count changed");
+        let mut row = Vec::with_capacity(self.ema.len());
+        for e in 0..self.experts {
+            for g in 0..self.gpus {
+                row.push(loads.get(e, g) as f64);
+            }
+        }
+        if self.observed == 0 {
+            self.ema.copy_from_slice(&row);
+        } else {
+            let a = self.cfg.ema_alpha;
+            for (m, &x) in self.ema.iter_mut().zip(&row) {
+                *m = a * x + (1.0 - a) * *m;
+            }
+        }
+        self.window.push(row);
+        self.observed += 1;
+    }
+
+    /// Unrounded per-cell prediction for the next micro-batch, expert-major
+    /// (`None` until `min_history` observations have been folded in).
+    pub fn forecast_dense(&self) -> Option<Vec<f64>> {
+        if self.observed < self.cfg.min_history.max(1) {
+            return None;
+        }
+        let wmean = self.window.mean()?;
+        let b = self.cfg.blend;
+        Some(
+            self.ema
+                .iter()
+                .zip(&wmean)
+                .map(|(&m, &w)| b * m + (1.0 - b) * w)
+                .collect(),
+        )
+    }
+
+    /// Integer forecast of the next `input_e^g` matrix (`None` until
+    /// `min_history`). This is what the engine pre-solves against.
+    pub fn forecast(&self) -> Option<LoadMatrix> {
+        let dense = self.forecast_dense()?;
+        let mut lm = LoadMatrix::zeros(self.experts, self.gpus);
+        for e in 0..self.experts {
+            for g in 0..self.gpus {
+                lm.set(e, g, round_half_up(dense[e * self.gpus + g]));
+            }
+        }
+        Some(lm)
+    }
+
+    /// Normalized L1 distance between a forecast and the actual loads:
+    /// `Σ_{e,g} |pred − actual| / max(1, Σ actual)`. 0 = perfect forecast;
+    /// 2.0 = completely disjoint load of equal volume.
+    pub fn drift(pred: &LoadMatrix, actual: &LoadMatrix) -> f64 {
+        assert_eq!(pred.num_experts, actual.num_experts);
+        assert_eq!(pred.num_gpus, actual.num_gpus);
+        let mut num = 0u64;
+        for e in 0..actual.num_experts {
+            for g in 0..actual.num_gpus {
+                num += pred.get(e, g).abs_diff(actual.get(e, g));
+            }
+        }
+        num as f64 / actual.total().max(1) as f64
+    }
+
+    /// Whether a forecast is close enough to the actuals to trust the
+    /// speculatively primed basis (a speculation *hit*).
+    pub fn is_hit(&self, pred: &LoadMatrix, actual: &LoadMatrix) -> bool {
+        Self::drift(pred, actual) <= self.cfg.drift_threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lm_of(rows: Vec<Vec<u64>>) -> LoadMatrix {
+        LoadMatrix::from_rows(rows)
+    }
+
+    #[test]
+    fn no_forecast_before_min_history() {
+        let mut f = LoadForecaster::new(2, 2, ForecastConfig::default());
+        assert!(f.forecast().is_none());
+        f.observe(&lm_of(vec![vec![1, 2], vec![3, 4]]));
+        assert!(f.forecast().is_none(), "min_history = 2");
+        f.observe(&lm_of(vec![vec![1, 2], vec![3, 4]]));
+        assert!(f.forecast().is_some());
+    }
+
+    #[test]
+    fn stationary_loads_forecast_exactly() {
+        let mut f = LoadForecaster::new(2, 3, ForecastConfig::default());
+        let lm = lm_of(vec![vec![10, 20, 30], vec![5, 0, 7]]);
+        for _ in 0..5 {
+            f.observe(&lm);
+        }
+        let pred = f.forecast().unwrap();
+        assert_eq!(pred, lm);
+        assert_eq!(LoadForecaster::drift(&pred, &lm), 0.0);
+        assert!(f.is_hit(&pred, &lm));
+    }
+
+    #[test]
+    fn drift_is_normalized_l1() {
+        let a = lm_of(vec![vec![10, 0], vec![0, 10]]);
+        let b = lm_of(vec![vec![0, 10], vec![10, 0]]);
+        // disjoint equal-volume loads: |10-0|·4 / 20 = 2.0
+        assert!((LoadForecaster::drift(&a, &b) - 2.0).abs() < 1e-12);
+        // empty actuals: denominator clamps to 1
+        let z = LoadMatrix::zeros(2, 2);
+        assert!((LoadForecaster::drift(&a, &z) - 20.0).abs() < 1e-12);
+        assert_eq!(LoadForecaster::drift(&z, &z), 0.0);
+    }
+
+    #[test]
+    fn ema_tracks_level_shift_faster_than_window_alone() {
+        let cfg = ForecastConfig { ema_alpha: 0.5, window: 4, blend: 1.0, ..Default::default() };
+        let mut f = LoadForecaster::new(1, 1, cfg);
+        for _ in 0..4 {
+            f.observe(&lm_of(vec![vec![100]]));
+        }
+        for _ in 0..3 {
+            f.observe(&lm_of(vec![vec![200]]));
+        }
+        // EMA after three 200s from 100: 100→150→175→187.5
+        let dense = f.forecast_dense().unwrap();
+        assert!((dense[0] - 187.5).abs() < 1e-9, "{}", dense[0]);
+    }
+
+    #[test]
+    fn blend_mixes_ema_and_window_mean() {
+        let cfg = ForecastConfig {
+            ema_alpha: 1.0, // EMA == latest observation
+            window: 2,
+            blend: 0.5,
+            ..Default::default()
+        };
+        let mut f = LoadForecaster::new(1, 1, cfg);
+        f.observe(&lm_of(vec![vec![10]]));
+        f.observe(&lm_of(vec![vec![30]]));
+        // ema = 30, window mean = 20 → 0.5·30 + 0.5·20 = 25
+        let dense = f.forecast_dense().unwrap();
+        assert!((dense[0] - 25.0).abs() < 1e-12);
+        assert_eq!(f.forecast().unwrap().get(0, 0), 25);
+    }
+
+    #[test]
+    fn rounding_is_half_up() {
+        assert_eq!(round_half_up(2.5), 3);
+        assert_eq!(round_half_up(2.49), 2);
+        assert_eq!(round_half_up(0.0), 0);
+        assert_eq!(round_half_up(-0.4), 0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Always-on scheduling engine: persistent worker pool, pipelined
+//! multi-layer scheduling, and forecast-driven speculative pre-solves.
+//!
+//! The paper's claim — optimal load balance *every micro-batch* — only
+//! pays off end-to-end if the per-layer LP solves stay off the training
+//! critical path. This module is the serving-engine answer to that:
+//!
+//! * [`pool`] — a persistent pool of solver workers. Each worker **owns**
+//!   the [`crate::scheduler::MicroEpScheduler`]s (and their warm-start
+//!   bases) of the layers pinned to it for the pool's lifetime; no
+//!   per-round thread spawns, no round barrier.
+//! * [`pipeline`] — [`ScheduleEngine`], which submits layer commits under
+//!   a bounded in-flight window and emits schedules strictly in layer
+//!   order as they finish, so layer ℓ−1's routing/dispatch overlaps layer
+//!   ℓ's LP solve ([`crate::cluster::sim::MultiLayerSim`] consumes this).
+//! * [`forecast`] — [`LoadForecaster`], an EMA + sliding-window predictor
+//!   of the next micro-batch's `input_e^g`. In speculative mode the engine
+//!   pre-solves each layer against the forecast between steps; when the
+//!   actual gate counts land it either warm-repairs the primed basis (a
+//!   *hit*, when forecast drift is under threshold) or re-solves from
+//!   scratch (a *miss*). Hit/miss/pivot counters surface in
+//!   [`crate::stats::EngineStats`].
+//!
+//! The round-barrier path
+//! ([`crate::scheduler::schedule_layers_parallel`]) remains selectable via
+//! [`EngineMode::Barrier`] for ablation — `benches/engine_pipeline.rs`
+//! measures barrier vs pipeline vs pipeline+speculation.
+
+pub mod forecast;
+pub mod pipeline;
+pub mod pool;
+
+pub use forecast::{ForecastConfig, LoadForecaster};
+pub use pipeline::ScheduleEngine;
+pub use pool::WorkerPool;
+
+/// How multi-layer scheduling executes
+/// ([`crate::scheduler::SchedulerOptions::engine`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum EngineMode {
+    /// Per-round scoped-thread fan-out with a round barrier
+    /// ([`crate::scheduler::schedule_layers_parallel`]) — the PR-1 path,
+    /// kept as the ablation baseline and the default.
+    #[default]
+    Barrier,
+    /// Persistent worker pool with pipelined in-order emission
+    /// ([`ScheduleEngine`]); bit-identical schedules to the serial loop.
+    Pipeline {
+        /// Worker threads (0 = one per core, capped at the layer count).
+        workers: usize,
+        /// Max layers submitted but not yet emitted (0 = 2 × workers).
+        inflight: usize,
+    },
+    /// [`EngineMode::Pipeline`] plus forecast-driven speculative
+    /// pre-solves between steps (hit: warm repair on actuals; miss past
+    /// the drift threshold: fresh solve).
+    Speculative {
+        /// Worker threads (0 = one per core, capped at the layer count).
+        workers: usize,
+        /// Max layers submitted but not yet emitted (0 = 2 × workers).
+        inflight: usize,
+        /// Forecaster tuning and the hit/miss drift threshold.
+        forecast: ForecastConfig,
+    },
+}
+
+impl EngineMode {
+    /// Pipelined engine with automatic sizing.
+    pub fn pipeline() -> Self {
+        EngineMode::Pipeline { workers: 0, inflight: 0 }
+    }
+
+    /// Speculative engine with automatic sizing and default forecasting.
+    pub fn speculative() -> Self {
+        EngineMode::Speculative { workers: 0, inflight: 0, forecast: ForecastConfig::default() }
+    }
+
+    /// Whether this is the round-barrier (non-engine) path.
+    pub fn is_barrier(self) -> bool {
+        matches!(self, EngineMode::Barrier)
+    }
+}

@@ -1,0 +1,327 @@
+//! The pipelined scheduling engine: stage overlap + speculation driver.
+//!
+//! [`ScheduleEngine`] replaces the round-barrier
+//! [`crate::scheduler::schedule_layers_parallel`] path for multi-layer
+//! scheduling. Per step it:
+//!
+//! 1. submits layer commits to the persistent [`super::WorkerPool`] under a
+//!    **bounded in-flight window** (at most `inflight` layers submitted but
+//!    not yet emitted — backpressure that keeps queue memory and staleness
+//!    bounded),
+//! 2. **emits schedules strictly in layer order** as they complete, so the
+//!    caller processes layer ℓ−1's routing/dispatch while layers ℓ… are
+//!    still solving in the pool (the stage overlap
+//!    [`crate::cluster::sim::MultiLayerSim`] exploits), and
+//! 3. in speculative mode, folds the step's actual loads into the
+//!    per-layer [`super::LoadForecaster`]s and issues **speculative
+//!    pre-solves** for the *next* step — the pool warms each layer's basis
+//!    against the forecast while the trainer is busy with compute, so the
+//!    next commit is a cheap warm repair (a *hit*) unless the forecast
+//!    drifted past the threshold (a *miss*, re-solved from scratch).
+//!
+//! Determinism: layer → worker pinning plus per-worker FIFO queues mean
+//! every layer's solver sees an identical job sequence regardless of
+//! worker count, and the in-order emission makes the output sequence
+//! identical to the serial loop. Speculation changes which basis a solve
+//! starts from (so it is *not* bit-identical to the non-speculative path)
+//! but remains deterministic for a fixed load history.
+
+use std::sync::Arc;
+
+use crate::placement::Placement;
+use crate::scheduler::{LoadMatrix, Schedule, SchedulerOptions};
+use crate::stats::EngineStats;
+use crate::topology::Topology;
+
+use super::forecast::LoadForecaster;
+use super::pool::WorkerPool;
+use super::EngineMode;
+
+/// Speculation verdict for one layer of one step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SpecDecision {
+    /// No pre-solve was issued for this layer (warmup, or pipeline mode).
+    None,
+    /// Forecast within the drift threshold: trust the primed basis and
+    /// warm-repair on the actuals.
+    Hit,
+    /// Forecast drifted: the primed basis is not worth repairing from —
+    /// solve the actuals from scratch.
+    Miss,
+}
+
+/// Always-on multi-layer scheduling engine (persistent pool + pipelined
+/// emission + optional forecast-driven speculation).
+pub struct ScheduleEngine {
+    pool: WorkerPool,
+    layers: usize,
+    inflight: usize,
+    /// per-layer forecasters; empty in pipeline mode (each carries the
+    /// forecast config, including the drift threshold)
+    forecasters: Vec<LoadForecaster>,
+    /// forecast a pre-solve was issued against, per layer (next step's);
+    /// shares the allocation the pool pre-solved
+    pending: Vec<Option<Arc<LoadMatrix>>>,
+    stats: EngineStats,
+}
+
+impl ScheduleEngine {
+    /// Build the engine for `layers` MoE layers over one shared placement.
+    /// `opts.engine` selects the mode and sizing; [`EngineMode::Barrier`]
+    /// is the one mode this engine does not implement (use
+    /// [`crate::scheduler::schedule_layers_parallel`] for that) and panics.
+    pub fn new(
+        placement: Placement,
+        topo: Option<Topology>,
+        opts: SchedulerOptions,
+        layers: usize,
+    ) -> Self {
+        assert!(layers > 0, "engine needs at least one layer");
+        let (workers, inflight, forecast_cfg) = match opts.engine {
+            EngineMode::Barrier => {
+                panic!("ScheduleEngine requires EngineMode::Pipeline or ::Speculative")
+            }
+            EngineMode::Pipeline { workers, inflight } => (workers, inflight, None),
+            EngineMode::Speculative { workers, inflight, forecast } => {
+                (workers, inflight, Some(forecast))
+            }
+        };
+        let experts = placement.num_experts;
+        let gpus = placement.num_gpus;
+        let pool = WorkerPool::new(placement, topo, opts, layers, workers);
+        let inflight = if inflight == 0 { 2 * pool.workers() } else { inflight }.clamp(1, layers);
+        let forecasters = match forecast_cfg {
+            Some(cfg) => (0..layers).map(|_| LoadForecaster::new(experts, gpus, cfg)).collect(),
+            None => Vec::new(),
+        };
+        ScheduleEngine {
+            pool,
+            layers,
+            inflight,
+            forecasters,
+            pending: (0..layers).map(|_| None).collect(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// MoE layers scheduled per step.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// In-flight window bound (max submitted-but-unemitted layers).
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// Whether speculative pre-solves are enabled.
+    pub fn speculative(&self) -> bool {
+        !self.forecasters.is_empty()
+    }
+
+    /// Cumulative engine counters (steps, hits/misses, pivot meters).
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// Schedule one micro-batch for every layer; `loads[l]` is layer `l`'s
+    /// `input_e^g`. Returns schedules in layer order.
+    pub fn schedule_step(&mut self, loads: &[LoadMatrix]) -> Vec<Schedule> {
+        let mut out: Vec<Option<Schedule>> = (0..self.layers).map(|_| None).collect();
+        self.schedule_step_with(loads, |layer, s| out[layer] = Some(s));
+        out.into_iter().map(|s| s.expect("every layer emitted")).collect()
+    }
+
+    /// Like [`Self::schedule_step`], but hands each schedule to `sink` in
+    /// layer order *as soon as it is available* — the caller's per-layer
+    /// stage (routing/dispatch timing, tensor permutation, …) overlaps the
+    /// remaining layers' LP solves.
+    pub fn schedule_step_with<F>(&mut self, loads: &[LoadMatrix], mut sink: F)
+    where
+        F: FnMut(usize, Schedule),
+    {
+        assert_eq!(loads.len(), self.layers, "one load matrix per layer");
+        self.stats.steps += 1;
+
+        // ---- speculation verdicts for this step's commits ----
+        let decisions: Vec<SpecDecision> = (0..self.layers)
+            .map(|l| match self.pending[l].take() {
+                Some(pred) => {
+                    if self.forecasters[l].is_hit(&pred, &loads[l]) {
+                        SpecDecision::Hit
+                    } else {
+                        SpecDecision::Miss
+                    }
+                }
+                None => SpecDecision::None,
+            })
+            .collect();
+
+        // ---- bounded-window submission, deterministic in-order emission ----
+        let mut stash: Vec<Option<Schedule>> = (0..self.layers).map(|_| None).collect();
+        let mut submitted = 0usize;
+        let mut emitted = 0usize;
+        while emitted < self.layers {
+            while submitted < self.layers && submitted - emitted < self.inflight {
+                let cold = decisions[submitted] == SpecDecision::Miss;
+                self.pool.submit_commit(submitted, Arc::new(loads[submitted].clone()), cold);
+                submitted += 1;
+            }
+            let r = self.pool.recv();
+            if r.speculative {
+                // a pre-solve issued at the end of the previous step; its
+                // work happened off the critical path — just meter it
+                self.stats.spec_presolve_pivots += r.schedule.stats.lp_iterations as u64;
+                continue;
+            }
+            stash[r.layer] = Some(r.schedule);
+            while emitted < self.layers {
+                let Some(s) = stash[emitted].take() else { break };
+                self.stats.schedules += 1;
+                match decisions[emitted] {
+                    SpecDecision::Hit => {
+                        self.stats.spec_hits += 1;
+                        self.stats.hit_repair_pivots += s.stats.lp_iterations as u64;
+                    }
+                    SpecDecision::Miss => {
+                        self.stats.spec_misses += 1;
+                        self.stats.miss_solve_pivots += s.stats.lp_iterations as u64;
+                    }
+                    SpecDecision::None => {}
+                }
+                sink(emitted, s);
+                emitted += 1;
+            }
+        }
+
+        // ---- learn this step's actuals, pre-solve the next step ----
+        if !self.forecasters.is_empty() {
+            for (l, lm) in loads.iter().enumerate() {
+                self.forecasters[l].observe(lm);
+                if let Some(pred) = self.forecasters[l].forecast() {
+                    let pred = Arc::new(pred);
+                    self.pool.submit_speculate(l, Arc::clone(&pred));
+                    self.pending[l] = Some(pred);
+                    self.stats.spec_issued += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::cayley::cayley_graph_placement;
+    use crate::rng::Rng;
+    use crate::scheduler::MicroEpScheduler;
+
+    fn random_lm(seed: u64, e: usize, g: usize, n: u64) -> LoadMatrix {
+        let mut rng = Rng::new(seed);
+        let mut lm = LoadMatrix::zeros(e, g);
+        for _ in 0..n {
+            lm.add(rng.below(e as u64) as usize, rng.below(g as u64) as usize, 1);
+        }
+        lm
+    }
+
+    fn pipeline_opts(workers: usize, inflight: usize) -> SchedulerOptions {
+        SchedulerOptions {
+            engine: EngineMode::Pipeline { workers, inflight },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_serial_schedulers() {
+        let p = cayley_graph_placement(8, 16);
+        let layers = 4;
+        let mut engine =
+            ScheduleEngine::new(p.clone(), None, pipeline_opts(2, 2), layers);
+        let mut serial: Vec<MicroEpScheduler> = (0..layers)
+            .map(|_| MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default()))
+            .collect();
+        for round in 0..3 {
+            let loads: Vec<LoadMatrix> =
+                (0..layers).map(|l| random_lm(round * 10 + l as u64, 16, 8, 1200)).collect();
+            let got = engine.schedule_step(&loads);
+            let want: Vec<Schedule> =
+                serial.iter_mut().zip(&loads).map(|(s, lm)| s.schedule(lm)).collect();
+            for (l, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.replica_loads, b.replica_loads, "round {round} layer {l}");
+                assert_eq!(a.routes, b.routes, "round {round} layer {l}");
+            }
+        }
+        let st = engine.stats();
+        assert_eq!(st.steps, 3);
+        assert_eq!(st.schedules, 3 * layers as u64);
+        assert_eq!(st.spec_issued, 0, "pipeline mode must not speculate");
+    }
+
+    #[test]
+    fn emission_is_in_layer_order() {
+        let p = cayley_graph_placement(4, 8);
+        let layers = 6;
+        let mut engine =
+            ScheduleEngine::new(p, None, pipeline_opts(3, 2), layers);
+        let loads: Vec<LoadMatrix> =
+            (0..layers).map(|l| random_lm(l as u64, 8, 4, 600)).collect();
+        let mut order = Vec::new();
+        engine.schedule_step_with(&loads, |l, _| order.push(l));
+        assert_eq!(order, (0..layers).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn speculation_hits_on_stationary_loads() {
+        let p = cayley_graph_placement(8, 16);
+        let layers = 2;
+        let opts = SchedulerOptions {
+            engine: EngineMode::speculative(),
+            ..Default::default()
+        };
+        let mut engine = ScheduleEngine::new(p, None, opts, layers);
+        let lm = random_lm(3, 16, 8, 2000);
+        let loads = vec![lm.clone(), lm.clone()];
+        for _ in 0..5 {
+            let scheds = engine.schedule_step(&loads);
+            for s in &scheds {
+                let total: u64 =
+                    s.replica_loads.iter().map(|v| v.iter().sum::<u64>()).sum();
+                assert_eq!(total, lm.total());
+            }
+        }
+        let st = engine.stats();
+        assert!(st.spec_issued > 0, "no speculations issued");
+        assert!(st.spec_hits > 0, "stationary loads must hit: {st:?}");
+        assert_eq!(st.spec_misses, 0, "stationary loads must never miss: {st:?}");
+        // a hit's warm repair on identical loads is (near-)free
+        assert!(
+            st.repair_pivots_per_hit() <= 2.0,
+            "stationary repairs should be trivial: {st:?}"
+        );
+    }
+
+    #[test]
+    fn speculation_misses_on_load_jumps() {
+        let p = cayley_graph_placement(4, 8);
+        let opts = SchedulerOptions {
+            engine: EngineMode::speculative(),
+            ..Default::default()
+        };
+        let mut engine = ScheduleEngine::new(p, None, opts, 1);
+        // concentrate all load on a rotating expert: every step is a jump
+        for step in 0..6 {
+            let mut lm = LoadMatrix::zeros(8, 4);
+            lm.set(step % 8, 0, 4000);
+            engine.schedule_step(&[lm]);
+        }
+        let st = engine.stats();
+        assert!(st.spec_issued > 0);
+        assert!(st.spec_misses > 0, "rotating hot expert must miss: {st:?}");
+    }
+}

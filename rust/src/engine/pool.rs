@@ -1,0 +1,231 @@
+//! Persistent scheduling worker pool.
+//!
+//! The PR-1 parallel path ([`crate::scheduler::schedule_layers_parallel`])
+//! re-spawns scoped threads every round — measurable overhead once
+//! per-layer solves drop under ~100 µs — and its round barrier couples
+//! every layer to the slowest one. This pool fixes the ownership story
+//! instead: each worker thread **owns** the [`MicroEpScheduler`]s (and
+//! therefore the warm-start bases) of the layers assigned to it, for the
+//! lifetime of the pool. Layer `l` is pinned to worker `l % workers`, and
+//! each worker drains its job queue in FIFO order, so a layer's solver
+//! sees exactly the same job sequence regardless of how many workers
+//! exist — the §5.3 determinism property extends to the pool for free,
+//! which `tests/integration_scheduler.rs` pins across 1/2/8 workers.
+//!
+//! Jobs are either *commits* (solve + route the actual micro-batch loads)
+//! or *speculative pre-solves* (prime the warm basis with forecast loads;
+//! the schedule itself is discarded by the engine). Results flow back over
+//! one shared channel and are re-ordered by the engine
+//! ([`super::ScheduleEngine`]), never here.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::placement::Placement;
+use crate::scheduler::{LoadMatrix, MicroEpScheduler, Schedule, SchedulerOptions};
+use crate::topology::Topology;
+
+/// One unit of work for a layer-owning worker. Loads travel as `Arc`s so
+/// the engine can share one allocation between the pool and its own
+/// bookkeeping (forecasts) instead of deep-copying per consumer.
+enum Job {
+    /// Solve + route actual loads; `cold` forces a from-scratch solve
+    /// (speculation miss: the primed basis is too far off to repair).
+    Commit {
+        layer: usize,
+        loads: Arc<LoadMatrix>,
+        cold: bool,
+    },
+    /// Speculative pre-solve on forecast loads: primes the layer's warm
+    /// basis; the engine meters the pivots and drops the schedule.
+    Speculate { layer: usize, loads: Arc<LoadMatrix> },
+}
+
+/// A completed job, tagged for re-ordering by the engine.
+pub(crate) struct JobResult {
+    /// Layer the schedule belongs to.
+    pub layer: usize,
+    /// Whether this was a speculative pre-solve (schedule is discarded).
+    pub speculative: bool,
+    /// The produced schedule.
+    pub schedule: Schedule,
+}
+
+/// Always-on pool of solver workers, each owning the warm-start state of
+/// its layers across steps (no per-round spawns).
+pub struct WorkerPool {
+    senders: Vec<Sender<Job>>,
+    results: Receiver<JobResult>,
+    handles: Vec<JoinHandle<()>>,
+    layers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (0 = one per core), each constructing and
+    /// owning one [`MicroEpScheduler`] per layer it is pinned to. Worker
+    /// count is capped at the layer count — extra threads could never
+    /// receive work.
+    pub fn new(
+        placement: Placement,
+        topo: Option<Topology>,
+        opts: SchedulerOptions,
+        layers: usize,
+        workers: usize,
+    ) -> Self {
+        assert!(layers > 0, "pool needs at least one layer");
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map_or(1, |p| p.get())
+        } else {
+            workers
+        }
+        .clamp(1, layers);
+        let (res_tx, results) = channel::<JobResult>();
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            senders.push(tx);
+            let res_tx = res_tx.clone();
+            let placement = placement.clone();
+            let topo = topo.clone();
+            let opts = opts.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("sched-worker-{w}"))
+                .spawn(move || {
+                    // One warm scheduler per owned layer, alive across steps
+                    // — the whole point of the persistent pool. Built inside
+                    // the thread so solver state never crosses threads.
+                    let mut scheds: Vec<Option<MicroEpScheduler>> = (0..layers)
+                        .map(|l| {
+                            (l % workers == w).then(|| {
+                                MicroEpScheduler::new(
+                                    placement.clone(),
+                                    topo.clone(),
+                                    opts.clone(),
+                                )
+                            })
+                        })
+                        .collect();
+                    while let Ok(job) = rx.recv() {
+                        let (layer, speculative, schedule) = match job {
+                            Job::Commit { layer, loads, cold } => {
+                                let s = scheds[layer].as_mut().expect("job routed to owner");
+                                let schedule =
+                                    if cold { s.schedule_cold(&loads) } else { s.schedule(&loads) };
+                                (layer, false, schedule)
+                            }
+                            Job::Speculate { layer, loads } => {
+                                let s = scheds[layer].as_mut().expect("job routed to owner");
+                                (layer, true, s.schedule(&loads))
+                            }
+                        };
+                        if res_tx.send(JobResult { layer, speculative, schedule }).is_err() {
+                            break; // engine gone: shut down
+                        }
+                    }
+                })
+                .expect("spawn scheduler worker");
+            handles.push(handle);
+        }
+        WorkerPool { senders, results, handles, layers }
+    }
+
+    /// Worker threads actually running (after the layer-count cap).
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Layers this pool schedules.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub(crate) fn submit_commit(&self, layer: usize, loads: Arc<LoadMatrix>, cold: bool) {
+        assert!(layer < self.layers);
+        self.senders[layer % self.senders.len()]
+            .send(Job::Commit { layer, loads, cold })
+            .expect("worker thread alive");
+    }
+
+    pub(crate) fn submit_speculate(&self, layer: usize, loads: Arc<LoadMatrix>) {
+        assert!(layer < self.layers);
+        self.senders[layer % self.senders.len()]
+            .send(Job::Speculate { layer, loads })
+            .expect("worker thread alive");
+    }
+
+    /// Blocking receive of the next finished job (any layer, any kind).
+    pub(crate) fn recv(&self) -> JobResult {
+        self.results.recv().expect("a worker owes a result")
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channels lets each worker drain what it has and
+        // exit; results they still send land in the buffered channel and
+        // are dropped with it.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::cayley::cayley_graph_placement;
+    use crate::rng::Rng;
+
+    fn random_lm(seed: u64, e: usize, g: usize, n: u64) -> LoadMatrix {
+        let mut rng = Rng::new(seed);
+        let mut lm = LoadMatrix::zeros(e, g);
+        for _ in 0..n {
+            lm.add(rng.below(e as u64) as usize, rng.below(g as u64) as usize, 1);
+        }
+        lm
+    }
+
+    #[test]
+    fn pool_caps_workers_at_layer_count() {
+        let p = cayley_graph_placement(4, 8);
+        let pool = WorkerPool::new(p, None, SchedulerOptions::default(), 2, 16);
+        assert_eq!(pool.workers(), 2);
+        assert_eq!(pool.layers(), 2);
+    }
+
+    #[test]
+    fn pool_solves_and_reports_every_layer() {
+        let p = cayley_graph_placement(4, 8);
+        let layers = 3;
+        let pool = WorkerPool::new(p, None, SchedulerOptions::default(), layers, 2);
+        let loads: Vec<LoadMatrix> =
+            (0..layers).map(|l| random_lm(l as u64, 8, 4, 500)).collect();
+        for (l, lm) in loads.iter().enumerate() {
+            pool.submit_commit(l, Arc::new(lm.clone()), false);
+        }
+        let mut seen = vec![false; layers];
+        for _ in 0..layers {
+            let r = pool.recv();
+            assert!(!r.speculative);
+            assert!(!seen[r.layer], "layer {} reported twice", r.layer);
+            seen[r.layer] = true;
+            let total: u64 =
+                r.schedule.replica_loads.iter().map(|v| v.iter().sum::<u64>()).sum();
+            assert_eq!(total, loads[r.layer].total(), "layer {}", r.layer);
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn dropping_pool_with_queued_work_does_not_hang() {
+        let p = cayley_graph_placement(4, 8);
+        let pool = WorkerPool::new(p, None, SchedulerOptions::default(), 2, 2);
+        for l in 0..2 {
+            pool.submit_speculate(l, Arc::new(random_lm(9 + l as u64, 8, 4, 300)));
+        }
+        drop(pool); // must join cleanly with results unread
+    }
+}

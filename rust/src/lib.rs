@@ -24,6 +24,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod cluster;
 pub mod config;
+pub mod engine;
 pub mod lp;
 pub mod moe;
 pub mod placement;

@@ -59,6 +59,14 @@
 //! Per-solve counters — pivots, dual pivots, bound flips, refactorizations
 //! — are exposed through [`SolveStats`] so the benches can attribute the
 //! warm-path win per (pricing × factorization) cell.
+//!
+//! The primal devex weights are **bound-flip aware** and survive warm
+//! repairs: the objective does not change across a warm re-solve, so the
+//! reference framework is reset only when the objective does (phase
+//! switches, cold solves). Dual pivots run the same pre-pivot weight
+//! update as primal pivots, and every boxed column crossed by the BFRT has
+//! its weight invalidated to the reference value at flip time — previously
+//! flipped columns kept stale weights until the next framework reset.
 
 use super::bounds::Csc;
 use super::factor::{FactorKind, Factorization};
@@ -648,14 +656,22 @@ impl RevisedSolver {
     }
 
     /// Primal simplex to optimality for `cost` (devex or Dantzig pricing
-    /// with a Bland fallback for anti-cycling).
-    fn primal_iterate(&mut self, cost: &[f64]) -> Result<(), SimplexError> {
+    /// with a Bland fallback for anti-cycling). `reset_devex` restarts the
+    /// devex reference framework and candidate list — required whenever the
+    /// objective changed since the last primal pass (phase switch, cold
+    /// solve). The warm path passes `false`: the objective is unchanged
+    /// across a warm repair, the dual iterations keep the weights live
+    /// (see [`Self::dual_iterate`]), and the cleanup pass prices better
+    /// with them than from a cold reference frame.
+    fn primal_iterate(&mut self, cost: &[f64], reset_devex: bool) -> Result<(), SimplexError> {
         let limit = 200 * (self.m + self.ncols) + 1000;
         let mut steps = 0usize;
-        // a (possibly) new objective invalidates the devex state: start
-        // from a fresh reference framework and an empty candidate list
-        self.pweight.fill(1.0);
-        self.cands.clear();
+        if reset_devex {
+            // a (possibly) new objective invalidates the devex state: start
+            // from a fresh reference framework and an empty candidate list
+            self.pweight.fill(1.0);
+            self.cands.clear();
+        }
         loop {
             steps += 1;
             if steps > limit {
@@ -920,6 +936,16 @@ impl RevisedSolver {
                     self.state[fb.j] =
                         if fb.from_upper { VarState::AtLower } else { VarState::AtUpper };
                     self.bound_flips += 1;
+                    if self.pricing == Pricing::Devex {
+                        // bound-flip-aware devex maintenance: the crossed
+                        // column changes sides without a basis change, and
+                        // its weight may date from an older reference
+                        // frame. Invalidate it to the reference value so
+                        // the post-repair primal cleanup (which now keeps
+                        // weights across the warm path) never prices it
+                        // with a stale norm estimate.
+                        self.pweight[fb.j] = 1.0;
+                    }
                 }
                 // one FTRAN absorbs every flip: x_B -= B⁻¹ (Σ A_j Δx_j)
                 let mut flip = std::mem::take(&mut self.flip_buf);
@@ -939,6 +965,14 @@ impl RevisedSolver {
             };
             let t = t.max(0.0);
             self.ftran_col(bp.j);
+            if self.pricing == Pricing::Devex {
+                // keep the primal weights live through the dual repair —
+                // the same pre-pivot update a primal step runs, driven by
+                // FTRAN(entering) already in `w` — so the warm path's
+                // primal cleanup can reuse them instead of resetting the
+                // reference framework every re-solve
+                self.update_primal_weights(bp.j, leave);
+            }
             self.apply_pivot(bp.j, bp.from_upper, leave, above, t)?;
             self.dual_pivots += 1;
         }
@@ -984,7 +1018,7 @@ impl RevisedSolver {
                 let p1_cost: Vec<f64> = (0..self.ncols)
                     .map(|j| if j >= self.art_base { 1.0 } else { 0.0 })
                     .collect();
-                self.primal_iterate(&p1_cost)?;
+                self.primal_iterate(&p1_cost, true)?;
                 let infeas: f64 = (0..self.m)
                     .filter(|&i| self.basis[i] >= self.art_base)
                     .map(|i| self.xb[i].max(0.0))
@@ -1009,7 +1043,7 @@ impl RevisedSolver {
             self.phase1_done = true;
         }
         let cost = self.cost.clone();
-        self.primal_iterate(&cost)?;
+        self.primal_iterate(&cost, true)?;
         Ok(self.extract())
     }
 
@@ -1029,7 +1063,10 @@ impl RevisedSolver {
         self.recompute_xb();
         self.dual_iterate()?;
         let cost = self.cost.clone();
-        self.primal_iterate(&cost)?;
+        // the objective is unchanged across a warm repair, so the devex
+        // reference framework survives: weights were maintained through the
+        // dual pivots and invalidated for BFRT-flipped columns
+        self.primal_iterate(&cost, false)?;
         Ok(self.extract())
     }
 

@@ -122,6 +122,20 @@ impl MicroEpScheduler {
 
     /// Schedule one micro-batch.
     pub fn schedule(&mut self, loads: &LoadMatrix) -> Schedule {
+        let use_warm = self.opts.warm_start && self.solved_once;
+        self.schedule_inner(loads, use_warm)
+    }
+
+    /// Schedule one micro-batch from scratch, ignoring (and replacing) any
+    /// retained warm-start basis. The engine's speculation path uses this
+    /// when a forecast missed: the speculatively primed basis is too far
+    /// from the actuals to be worth repairing, and a fresh solve both
+    /// bounds the commit latency and re-anchors the warm state.
+    pub fn schedule_cold(&mut self, loads: &LoadMatrix) -> Schedule {
+        self.schedule_inner(loads, false)
+    }
+
+    fn schedule_inner(&mut self, loads: &LoadMatrix, use_warm: bool) -> Schedule {
         assert_eq!(loads.num_experts, self.placement.num_experts);
         assert_eq!(loads.num_gpus, self.placement.num_gpus);
         let t0 = Instant::now();
@@ -176,7 +190,6 @@ impl MicroEpScheduler {
         }
 
         // ---- solve ----
-        let use_warm = self.opts.warm_start && self.solved_once;
         let (frac, stats_lp) = match self.warm.solve_with_bounds(&updates, &bound_updates, use_warm)
         {
             Ok(sol) => {

@@ -205,6 +205,14 @@ pub struct SchedulerOptions {
     /// engines selectable, or the dense tableau (`ablation_solvers`
     /// baseline)
     pub solver: crate::lp::SolverKind,
+    /// How *multi-layer* consumers ([`crate::cluster::sim::MultiLayerSim`],
+    /// the e2e trainer) execute the per-layer solves: the PR-1 round
+    /// barrier ([`schedule_layers_parallel`], the default and ablation
+    /// baseline), the persistent pipelined engine, or the engine with
+    /// forecast-driven speculative pre-solves
+    /// ([`crate::engine::EngineMode`]). Ignored by a single
+    /// [`MicroEpScheduler`].
+    pub engine: crate::engine::EngineMode,
 }
 
 impl Default for SchedulerOptions {
@@ -215,6 +223,7 @@ impl Default for SchedulerOptions {
             locality_aware: true,
             topo_aware_routing: false,
             solver: crate::lp::SolverKind::default(),
+            engine: crate::engine::EngineMode::Barrier,
         }
     }
 }

@@ -179,6 +179,59 @@ impl Histogram {
     }
 }
 
+/// Cumulative counters of the pipelined scheduling engine
+/// ([`crate::engine::ScheduleEngine`]): how many speculative pre-solves
+/// were issued, how often the forecast was close enough to trust (hits vs
+/// misses), and where the LP pivots went. `hit_repair_pivots` vs a cold
+/// solve's pivot count is the speculation win: the pre-solve already moved
+/// the basis next to the optimum off the critical path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Multi-layer steps executed.
+    pub steps: u64,
+    /// Per-layer schedules produced (`steps × layers`).
+    pub schedules: u64,
+    /// Speculative pre-solves issued.
+    pub spec_issued: u64,
+    /// Pre-solves whose forecast stayed under the drift threshold (the
+    /// commit warm-repaired the primed basis).
+    pub spec_hits: u64,
+    /// Pre-solves whose forecast drifted past the threshold (the commit
+    /// re-solved from scratch).
+    pub spec_misses: u64,
+    /// LP pivots spent committing hits (the on-critical-path repair work).
+    pub hit_repair_pivots: u64,
+    /// LP pivots spent committing misses (fresh solves).
+    pub miss_solve_pivots: u64,
+    /// LP pivots spent in speculative pre-solves (off the critical path).
+    /// Metered as pre-solve results drain during *later* steps, so
+    /// pre-solves still in flight when stats are read — e.g. the final
+    /// step's, which are issued but never judged — are not yet counted;
+    /// expect `spec_issued ≥ spec_hits + spec_misses`.
+    pub spec_presolve_pivots: u64,
+}
+
+impl EngineStats {
+    /// Hits over issued-and-judged speculations (0 when none were judged).
+    pub fn hit_rate(&self) -> f64 {
+        let judged = self.spec_hits + self.spec_misses;
+        if judged == 0 {
+            0.0
+        } else {
+            self.spec_hits as f64 / judged as f64
+        }
+    }
+
+    /// Mean LP pivots per speculation hit (0 when there were no hits).
+    pub fn repair_pivots_per_hit(&self) -> f64 {
+        if self.spec_hits == 0 {
+            0.0
+        } else {
+            self.hit_repair_pivots as f64 / self.spec_hits as f64
+        }
+    }
+}
+
 /// max/avg imbalance of a load vector (Fig. 7's y-axis).
 pub fn imbalance_ratio(loads: &[f64]) -> f64 {
     let max = loads.iter().cloned().fold(f64::MIN, f64::max);
@@ -252,6 +305,17 @@ mod tests {
         assert_eq!(h.underflow, 1);
         assert_eq!(h.overflow, 1);
         assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn engine_stats_rates() {
+        let mut s = EngineStats { spec_issued: 5, spec_hits: 3, spec_misses: 1, ..Default::default() };
+        s.hit_repair_pivots = 6;
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12, "judged = hits + misses");
+        assert!((s.repair_pivots_per_hit() - 2.0).abs() < 1e-12);
+        let empty = EngineStats::default();
+        assert_eq!(empty.hit_rate(), 0.0);
+        assert_eq!(empty.repair_pivots_per_hit(), 0.0);
     }
 
     #[test]

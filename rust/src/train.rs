@@ -13,12 +13,11 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::engine::{EngineMode, ScheduleEngine};
 use crate::placement::cayley::symmetric_placement;
 use crate::rng::Rng;
 use crate::runtime::{lit, Runtime};
-use crate::scheduler::{
-    schedule_layers_parallel, LoadMatrix, MicroEpScheduler, SchedulerOptions,
-};
+use crate::scheduler::{LoadMatrix, SchedulerOptions};
 use crate::stats::imbalance_ratio;
 use crate::topology::Topology;
 use crate::workload::TraceWorkload;
@@ -180,19 +179,18 @@ impl Trainer {
     pub fn run(&mut self, steps: usize, log_every: usize) -> Result<TrainLog> {
         let topo = Topology::new(self.dp_virtual, (self.dp_virtual / 2).max(1), 2, 8);
         let placement = symmetric_placement(&topo, self.experts);
-        // one scheduler per MoE layer: warm-start state is per-layer (the
-        // gate distributions of different layers are unrelated), and the
-        // per-layer solves are independent, so a DP round schedules them
-        // concurrently via scoped threads
-        let mut scheds: Vec<MicroEpScheduler> = (0..self.layers)
-            .map(|_| {
-                MicroEpScheduler::new(
-                    placement.clone(),
-                    Some(topo.clone()),
-                    SchedulerOptions::default(),
-                )
-            })
-            .collect();
+        // one scheduler per MoE layer, owned by the persistent engine pool:
+        // warm-start state is per-layer (the gate distributions of
+        // different layers are unrelated), the per-layer solves are
+        // independent, and the pipelined engine emits each layer's
+        // schedule while the remaining layers still solve — no per-round
+        // thread spawns
+        let mut engine = ScheduleEngine::new(
+            placement.clone(),
+            Some(topo.clone()),
+            SchedulerOptions { engine: EngineMode::pipeline(), ..Default::default() },
+            self.layers,
+        );
         let mut vanilla = crate::baselines::VanillaEp::new(topo.clone(), self.experts);
 
         let mut log_out = TrainLog::default();
@@ -211,8 +209,8 @@ impl Trainer {
             }
             if g == self.dp_virtual - 1 {
                 // schedule the completed DP round on real loads, all layers
-                // at once
-                let schedules = schedule_layers_parallel(&mut scheds, &rounds);
+                // at once (pipelined through the engine's worker pool)
+                let schedules = engine.schedule_step(&rounds);
                 let micro_imb = schedules
                     .iter()
                     .map(|m| m.imbalance(&placement))

@@ -1,0 +1,123 @@
+//! Golden test: the rust [`LoadForecaster`] vs its numpy reference.
+//!
+//! `python/tools/forecast_reference.py` transliterates the forecaster
+//! (EMA + sliding-window blend, half-up rounding, normalized-L1 drift and
+//! the hit/miss threshold decision), self-tests it against numpy, and
+//! records deterministic multinomial load sequences with the reference's
+//! predictions and decisions in `tests/golden_forecast.json`. Replaying
+//! the sequences here must reproduce every recorded value — the two
+//! implementations mirror each other operation for operation, so dense
+//! predictions agree to float precision and every rounded forecast,
+//! drift, and hit/miss decision matches exactly.
+//!
+//! The fixture is committed; a missing file is a hard failure (regenerate
+//! with the tool above and commit the result).
+
+use micromoe::engine::{ForecastConfig, LoadForecaster};
+use micromoe::scheduler::LoadMatrix;
+use micromoe::ser::Json;
+
+fn fixture() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_forecast.json");
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!(
+            "{path} missing ({e}) — regenerate with \
+             python/tools/forecast_reference.py and commit"
+        )
+    });
+    Json::parse(&text).unwrap()
+}
+
+fn lm_from_json(j: &Json, e: usize, g: usize) -> LoadMatrix {
+    let rows = j.as_arr().unwrap();
+    assert_eq!(rows.len(), e, "fixture row count");
+    let mut lm = LoadMatrix::zeros(e, g);
+    for (ei, row) in rows.iter().enumerate() {
+        let cells = row.as_arr().unwrap();
+        assert_eq!(cells.len(), g, "fixture column count");
+        for (gi, c) in cells.iter().enumerate() {
+            lm.set(ei, gi, c.as_f64().unwrap() as u64);
+        }
+    }
+    lm
+}
+
+#[test]
+fn forecaster_matches_numpy_reference() {
+    let fx = fixture();
+    let cases = fx.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 4, "suspiciously few forecast cases");
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for case in cases {
+        let name = case.get("name").unwrap().as_str().unwrap();
+        let e = case.get("experts").unwrap().as_usize().unwrap();
+        let g = case.get("gpus").unwrap().as_usize().unwrap();
+        let cfg_j = case.get("cfg").unwrap();
+        let cfg = ForecastConfig {
+            ema_alpha: cfg_j.get("ema_alpha").unwrap().as_f64().unwrap(),
+            window: cfg_j.get("window").unwrap().as_usize().unwrap(),
+            blend: cfg_j.get("blend").unwrap().as_f64().unwrap(),
+            drift_threshold: cfg_j.get("drift_threshold").unwrap().as_f64().unwrap(),
+            min_history: cfg_j.get("min_history").unwrap().as_usize().unwrap(),
+        };
+        let loads: Vec<LoadMatrix> = case
+            .get("loads")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| lm_from_json(b, e, g))
+            .collect();
+        let steps = case.get("steps").unwrap().as_arr().unwrap();
+        let mut f = LoadForecaster::new(e, g, cfg);
+        let mut si = 0usize;
+        for t in 0..loads.len() - 1 {
+            f.observe(&loads[t]);
+            let Some(dense) = f.forecast_dense() else {
+                continue; // warmup: the reference recorded nothing either
+            };
+            let step = &steps[si];
+            assert_eq!(
+                step.get("t").unwrap().as_usize().unwrap(),
+                t,
+                "{name}: forecast availability diverged from the reference"
+            );
+            let want_dense = step.get("dense").unwrap().as_arr().unwrap();
+            assert_eq!(dense.len(), want_dense.len(), "{name} t={t}");
+            for (i, (a, w)) in dense.iter().zip(want_dense).enumerate() {
+                let w = w.as_f64().unwrap();
+                assert!(
+                    (a - w).abs() <= 1e-9 * (1.0 + w.abs()),
+                    "{name} t={t} cell {i}: dense {a} vs reference {w}"
+                );
+            }
+            let pred = f.forecast().unwrap();
+            let want_pred = lm_from_json(step.get("pred").unwrap(), e, g);
+            assert_eq!(pred, want_pred, "{name} t={t}: rounded forecast diverged");
+            let drift = LoadForecaster::drift(&pred, &loads[t + 1]);
+            let want_drift = step.get("drift").unwrap().as_f64().unwrap();
+            assert!(
+                (drift - want_drift).abs() <= 1e-9 * (1.0 + want_drift),
+                "{name} t={t}: drift {drift} vs reference {want_drift}"
+            );
+            let hit = f.is_hit(&pred, &loads[t + 1]);
+            assert_eq!(
+                hit,
+                step.get("hit").unwrap().as_bool().unwrap(),
+                "{name} t={t}: hit/miss decision flipped (drift {drift})"
+            );
+            if hit {
+                hits += 1;
+            } else {
+                misses += 1;
+            }
+            si += 1;
+        }
+        assert_eq!(si, steps.len(), "{name}: fixture has unreplayed steps");
+    }
+    assert!(
+        hits > 0 && misses > 0,
+        "fixture no longer exercises both decisions (hits {hits}, misses {misses})"
+    );
+}

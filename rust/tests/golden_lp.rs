@@ -257,6 +257,60 @@ fn boxed_resolve_warm_replay_matches_highs_and_flips_bounds() {
     }
 }
 
+/// Pivot-count pin for the bound-flip-aware devex weight maintenance:
+/// across the `boxed_resolve` warm trajectories, the warm path (long-step
+/// dual + weight-preserving primal cleanup) must not spend more total
+/// pivots than solving every post-edit problem from scratch. A weight-
+/// maintenance regression (stale or wrongly invalidated weights) shows up
+/// here as warm pivot counts ballooning past the cold reference.
+#[test]
+fn boxed_resolve_warm_pivots_do_not_regress_cold() {
+    let fx = fixture();
+    let cases: Vec<&Json> = fx
+        .get("cases")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|c| c.get("kind").unwrap().as_str() == Some("boxed_resolve"))
+        .collect();
+    assert!(cases.len() >= 4, "fixture predates boxed_resolve — regenerate");
+    for kind in SolverKind::all_cells() {
+        if !matches!(kind, SolverKind::Revised { .. }) {
+            continue;
+        }
+        let mut warm_pivots = 0usize;
+        let mut cold_pivots = 0usize;
+        for case in &cases {
+            let p = build_bounded(case);
+            let mut warm = WarmSolver::with_kind(p, kind);
+            warm.solve_cold().unwrap();
+            let steps = case.get("steps").unwrap().as_arr().unwrap();
+            for step in steps {
+                let rhs: Vec<(usize, f64)> =
+                    as_f64s(step.get("b_ub").unwrap()).into_iter().enumerate().collect();
+                let bounds: Vec<(usize, f64)> = as_f64s(step.get("upper").unwrap())
+                    .into_iter()
+                    .map(|u| if u >= 0.0 { u } else { f64::INFINITY })
+                    .enumerate()
+                    .collect();
+                warm.resolve_with_bounds(&rhs, &bounds).unwrap();
+                warm_pivots += warm.last_stats.pivots;
+                // cold reference: the identical post-edit problem from scratch
+                let mut cold = WarmSolver::with_kind(warm.problem().clone(), kind);
+                cold.solve_cold().unwrap();
+                cold_pivots += cold.last_stats.pivots;
+            }
+        }
+        assert!(
+            warm_pivots <= cold_pivots,
+            "{}: warm path spent {warm_pivots} pivots vs {cold_pivots} cold across the \
+             boxed_resolve replay — devex weight maintenance regressed",
+            kind.label()
+        );
+    }
+}
+
 #[test]
 fn lpp1_warm_start_agrees_with_highs_objectives() {
     // replay lpp1 cases through a warm solver, exercising the §5.1

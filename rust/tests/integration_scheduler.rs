@@ -1,6 +1,7 @@
 //! Integration: scheduler end-to-end on paper-scale configurations —
 //! LP + rounding + routing against brute-force and analytic references.
 
+use micromoe::engine::{EngineMode, ScheduleEngine};
 use micromoe::placement::cayley::{symmetric_placement, torus_placement, z2xz4_placement};
 use micromoe::placement::graph::{max_induced_density_exact, perfect_balance_bound};
 use micromoe::placement::Placement;
@@ -162,6 +163,107 @@ fn warm_start_long_stream() {
         avg_warm < avg_cold * 0.6,
         "warm avg {avg_warm} pivots vs cold {avg_cold}: warm start not paying off"
     );
+}
+
+/// §5.3 determinism extended to the pipelined engine: for fixed seeds the
+/// engine must produce bit-identical `Schedule`s to the sequential
+/// per-layer loop, across 1/2/8 workers — layer→worker pinning plus
+/// per-worker FIFO queues make worker count irrelevant to the result.
+#[test]
+fn engine_pipeline_bit_identical_to_sequential_across_worker_counts() {
+    let topo = Topology::new(8, 4, 2, 8);
+    let p = symmetric_placement(&topo, 16);
+    let layers = 8usize;
+    let mut sequential: Vec<MicroEpScheduler> = (0..layers)
+        .map(|_| {
+            MicroEpScheduler::new(p.clone(), Some(topo.clone()), SchedulerOptions::default())
+        })
+        .collect();
+    let mut engines: Vec<ScheduleEngine> = [1usize, 2, 8]
+        .into_iter()
+        .map(|workers| {
+            ScheduleEngine::new(
+                p.clone(),
+                Some(topo.clone()),
+                SchedulerOptions {
+                    engine: EngineMode::Pipeline { workers, inflight: 3 },
+                    ..Default::default()
+                },
+                layers,
+            )
+        })
+        .collect();
+    for round in 0..4u64 {
+        let loads: Vec<LoadMatrix> = (0..layers)
+            .map(|l| zipf_lm(16, 8, 1500, 0.9, round * 100 + l as u64))
+            .collect();
+        let want: Vec<_> =
+            sequential.iter_mut().zip(&loads).map(|(s, lm)| s.schedule(lm)).collect();
+        for engine in &mut engines {
+            let got = engine.schedule_step(&loads);
+            for (l, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.replica_loads, b.replica_loads,
+                    "round {round} layer {l} workers {}",
+                    engine.workers()
+                );
+                assert_eq!(
+                    a.routes, b.routes,
+                    "round {round} layer {l} workers {}",
+                    engine.workers()
+                );
+            }
+        }
+    }
+}
+
+/// The speculative engine is not bit-identical to the sequential path (the
+/// pre-solve legitimately moves the warm basis), but it must still be
+/// deterministic: identical load histories give identical schedules *and*
+/// identical hit/miss/pivot counters regardless of worker count.
+#[test]
+fn engine_speculation_deterministic_across_worker_counts() {
+    let topo = Topology::new(8, 4, 2, 8);
+    let p = symmetric_placement(&topo, 16);
+    let layers = 4usize;
+    let mut engines: Vec<ScheduleEngine> = [1usize, 2, 8]
+        .into_iter()
+        .map(|workers| {
+            ScheduleEngine::new(
+                p.clone(),
+                Some(topo.clone()),
+                SchedulerOptions {
+                    engine: match EngineMode::speculative() {
+                        EngineMode::Speculative { forecast, .. } => {
+                            EngineMode::Speculative { workers, inflight: 2, forecast }
+                        }
+                        _ => unreachable!(),
+                    },
+                    ..Default::default()
+                },
+                layers,
+            )
+        })
+        .collect();
+    for round in 0..6u64 {
+        // mild drift: autocorrelated enough that speculation gets judged
+        let loads: Vec<LoadMatrix> = (0..layers)
+            .map(|l| zipf_lm(16, 8, 2000, 0.8, 7 + l as u64 + (round / 3)))
+            .collect();
+        let reference = engines[0].schedule_step(&loads);
+        for engine in &mut engines[1..] {
+            let got = engine.schedule_step(&loads);
+            for (l, (a, b)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(a.replica_loads, b.replica_loads, "round {round} layer {l}");
+                assert_eq!(a.routes, b.routes, "round {round} layer {l}");
+            }
+        }
+    }
+    let st0 = engines[0].stats();
+    assert!(st0.spec_issued > 0, "speculation never engaged: {st0:?}");
+    for engine in &engines[1..] {
+        assert_eq!(engine.stats(), st0, "engine counters diverged across worker counts");
+    }
 }
 
 /// d > 2 (hyper-edges): scheduling still optimal and conservative.
