@@ -1,20 +1,18 @@
 //! Full-cluster simulation of the paper's §7.2 end-to-end experiment:
 //! every Table-2 model, every system, iteration times and throughput
-//! speedups vs Megatron-LM under the calibrated H100 cost model.
+//! speedups vs Megatron-LM under the calibrated H100 cost model. Systems
+//! are policies selected by name through the `MoeSession` registry.
 //!
 //! Run: `cargo run --release --example cluster_sim [-- --batches 16 --skew 1.0]`
 
-use micromoe::adaptive::AdaptiveConfig;
-use micromoe::baselines::{DeepSpeedPad, FlexMoe, MicroMoe, MoeSystem, SmartMoe, VanillaEp};
-use micromoe::bench_harness::Table;
+use micromoe::bench_harness::{fig6_policy_arms, mean_layer_breakdown, Table};
 use micromoe::cli::Args;
 use micromoe::cluster::migration::expert_bytes;
-use micromoe::cluster::sim::{moe_layer_time, MoeLayerBreakdown, TrainIterationModel};
+use micromoe::cluster::sim::TrainIterationModel;
 use micromoe::cluster::CostModel;
 use micromoe::config::table2;
-use micromoe::placement::cayley::symmetric_placement;
 use micromoe::rng::{Rng, Zipf};
-use micromoe::scheduler::{LoadMatrix, SchedulerOptions};
+use micromoe::scheduler::LoadMatrix;
 
 fn main() {
     let args = Args::from_env();
@@ -30,36 +28,25 @@ fn main() {
             preset.num_microbatches(),
         );
         let e = preset.experts;
+        let g = topo.microep_group_size();
         let bytes = expert_bytes(preset.hidden, preset.ffn_hidden, true);
 
-        let mut systems: Vec<Box<dyn MoeSystem>> = vec![
-            Box::new(VanillaEp::new(topo.clone(), e)),
-            Box::new(DeepSpeedPad::new(topo.clone(), e)),
-            Box::new({ let mut sm = SmartMoe::new(topo.clone(), e).with_migration_cost(model.clone(), bytes); sm.replace_every = 4; sm }),
-            Box::new({ let mut fx = FlexMoe::new(topo.clone(), e, 1).with_migration_cost(model.clone(), bytes); fx.adjust_every = 4; fx }),
-            Box::new(MicroMoe::new(
-                topo.clone(),
-                symmetric_placement(&topo, e),
-                SchedulerOptions::default(),
-            )),
-            Box::new(
-                MicroMoe::new(
-                    topo.clone(),
-                    symmetric_placement(&topo, e),
-                    SchedulerOptions::default(),
-                )
-                .with_adaptive(
-                    AdaptiveConfig {
-                        check_every: 8,
-                        window: 8,
-                        slots_per_gpu: topo.slots_per_gpu(e).max(2),
-                        ..Default::default()
-                    },
-                    11,
-                )
-                .with_migration_cost(model.clone(), bytes),
-            ),
-        ];
+        // one shared stream so every policy sees identical loads
+        let mut rng = Rng::new(3);
+        let zipf = Zipf::new(e, skew);
+        let stream: Vec<LoadMatrix> = (0..batches)
+            .map(|_| {
+                let mut lm = LoadMatrix::zeros(e, g);
+                for gi in 0..g {
+                    for _ in 0..preset.assignments_per_gpu() / 4 {
+                        lm.add(zipf.sample(&mut rng), gi, 1);
+                    }
+                }
+                lm
+            })
+            .collect();
+
+        let mut systems = fig6_policy_arms(&topo, e, Some((&model, bytes)));
 
         let mut table = Table::new(
             &format!(
@@ -69,45 +56,19 @@ fn main() {
             &["system", "iter time", "tokens/s", "speedup"],
         );
         let mut base_tput = 0.0;
-        for sys in &mut systems {
-            let mut rng = Rng::new(3);
-            let zipf = Zipf::new(e, skew);
-            let mut acc = MoeLayerBreakdown::default();
-            let mut migration_total = 0.0;
-            for _ in 0..batches {
-                let mut lm = LoadMatrix::zeros(e, topo.microep_group_size());
-                for g in 0..topo.microep_group_size() {
-                    for _ in 0..preset.assignments_per_gpu() / 4 {
-                        lm.add(zipf.sample(&mut rng), g, 1);
-                    }
-                }
-                let mut plan = sys.plan(&lm);
-                // migration (prep_extra) is a one-off per replacement, not a
-                // per-layer recurring cost: account it per iteration below
-                migration_total += plan.prep_extra;
-                plan.prep_extra = 0.0;
-                let bd = moe_layer_time(&model, &topo, &plan);
-                acc.prep += bd.prep;
-                acc.dispatch += bd.dispatch;
-                acc.compute += bd.compute;
-                acc.combine += bd.combine;
-            }
-            let n = batches as f64;
-            let mean = MoeLayerBreakdown {
-                prep: acc.prep / n,
-                dispatch: acc.dispatch / n,
-                compute: acc.compute / n,
-                combine: acc.combine / n,
-            };
-            // each simulated batch stream stands for one training iteration
-            let iter_t = iter_model.iteration_time(&mean) + migration_total / n;
+        for session in &mut systems {
+            let (mean, migration_per_batch) =
+                mean_layer_breakdown(session, &stream, &model, &topo);
+            // migration (prep_extra) is a one-off per replacement, not a
+            // per-layer recurring cost: account it per iteration
+            let iter_t = iter_model.iteration_time(&mean) + migration_per_batch;
             let eff = iter_model.iteration_time(&mean) / iter_t;
             let tput = iter_model.throughput(&mean, preset.tokens_per_gpu() * 8) * eff;
             if base_tput == 0.0 {
                 base_tput = tput;
             }
             table.row(vec![
-                sys.name().to_string(),
+                session.name().to_string(),
                 micromoe::bench_harness::fmt_time(iter_t),
                 format!("{tput:.0}"),
                 format!("{:.2}x", tput / base_tput),

@@ -1,16 +1,16 @@
-//! Quickstart: MicroEP in ~60 lines.
+//! Quickstart: MicroEP through the unified session API in ~60 lines.
 //!
 //! Builds the paper's §7 testbed shape (DP=8, EP=4, d=2, 32 experts),
-//! generates one skewed micro-batch, and shows what each system does with
-//! it: vanilla EP suffers the straggler, MicroEP's LP schedule balances it.
+//! generates one skewed micro-batch, and steps two policies from the
+//! registry over it: vanilla EP suffers the straggler, MicroEP's LP
+//! schedule balances it.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use micromoe::baselines::{MoeSystem, VanillaEp};
+use micromoe::balancer::MoeSession;
 use micromoe::bench_harness::Table;
-use micromoe::placement::cayley::symmetric_placement;
 use micromoe::rng::{Rng, Zipf};
-use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use micromoe::scheduler::LoadMatrix;
 use micromoe::stats::imbalance_ratio;
 use micromoe::topology::Topology;
 
@@ -19,15 +19,13 @@ fn main() {
     let topo = Topology::new(8, 4, 2, 8);
     println!(
         "topology: DP={} EP={} d={} -> one MicroEP group of {} GPUs",
-        topo.dp_degree, topo.ep_degree, topo.d, topo.microep_group_size()
+        topo.dp_degree,
+        topo.ep_degree,
+        topo.d,
+        topo.microep_group_size()
     );
 
-    // 2. expert placement: symmetric Cayley graph (App. B)
-    let placement = symmetric_placement(&topo, 32);
-    println!("placement: 32 experts × {} replicas, consistent slots: {:?}", topo.d,
-             placement.check_consistency().is_ok());
-
-    // 3. one micro-batch of gate outputs with Zipf(1.0) skew
+    // 2. one micro-batch of gate outputs with Zipf(1.0) skew
     let mut rng = Rng::new(7);
     let zipf = Zipf::new(32, 1.0);
     let mut loads = LoadMatrix::zeros(32, 8);
@@ -39,34 +37,39 @@ fn main() {
     let hottest = loads.expert_loads().into_iter().max().unwrap();
     println!("micro-batch: {} tokens, hottest expert holds {hottest}", loads.total());
 
-    // 4. schedule it: LP (LPP 1) + Algorithm-1 routing
-    let mut sched = MicroEpScheduler::new(placement.clone(), Some(topo.clone()), SchedulerOptions::default());
-    let schedule = sched.schedule(&loads);
+    // 3. two policies from the registry, one step loop: the LP scheduler
+    //    (symmetric Cayley placement built for us) vs vanilla EP
+    let session = |policy: &str| {
+        MoeSession::builder()
+            .topology(topo.clone())
+            .experts(32)
+            .policy_name(policy)
+            .build()
+            .expect("registered policy")
+    };
+    let mut micro = session("micromoe");
+    let mut vanilla = session("vanilla-ep");
 
-    // 5. compare with vanilla EP
-    let mut vanilla = VanillaEp::new(topo, 32);
-    let plan = vanilla.plan(&loads);
-
+    // 4. step both on the same loads and compare per-GPU compute
     let as_f64 = |v: &[u64]| v.iter().map(|&x| x as f64).collect::<Vec<_>>();
     let mut table = Table::new(
         "per-GPU compute loads (tokens)",
         &["system", "g0", "g1", "g2", "g3", "g4", "g5", "g6", "g7", "max/avg"],
     );
-    for (name, loads_v) in [
-        ("Megatron-LM (EP)", plan.gpu_compute.clone()),
-        ("MicroEP (LP)", schedule.gpu_loads(&placement)),
-    ] {
-        let mut row = vec![name.to_string()];
-        row.extend(loads_v.iter().map(|l| l.to_string()));
-        row.push(format!("{:.3}", imbalance_ratio(&as_f64(&loads_v))));
+    for s in [&mut vanilla, &mut micro] {
+        let out = s.step(std::slice::from_ref(&loads));
+        let gpu = &out.layers[0].gpu_compute;
+        let mut row = vec![s.name().to_string()];
+        row.extend(gpu.iter().map(|l| l.to_string()));
+        row.push(format!("{:.3}", imbalance_ratio(&as_f64(gpu))));
         table.row(row);
     }
     table.print();
 
+    let st = micro.stats();
     println!(
-        "\nLP solved in {} pivots ({}), objective {:.0} tokens — the Eq.-3 optimum.",
-        schedule.stats.lp_iterations,
-        micromoe::bench_harness::fmt_time(schedule.stats.solve_ns as f64 * 1e-9),
-        schedule.stats.lp_objective,
+        "\nLP solved in {} pivots ({}) — every micro-batch gets the Eq.-3 optimum.",
+        st.lp_pivots,
+        micromoe::bench_harness::fmt_time(st.sched_seconds),
     );
 }

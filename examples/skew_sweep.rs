@@ -1,42 +1,15 @@
 //! Load-balance capability sweep (the Fig.-7 scenario as a runnable demo):
 //! all five systems across Zipf skew s ∈ {0, 0.25, …, 2.0}, reporting
-//! max/avg GPU load. Expect MicroMoE ≈ 1.0 everywhere with AR, symmetric
-//! MicroMoE perfect until s ≈ 1, FlexMoE flat-but-imperfect, SmartMoE and
-//! vanilla deteriorating with skew.
+//! max/avg GPU load. Every arm is a policy selected by name through the
+//! `MoeSession` registry. Expect MicroMoE ≈ 1.0 everywhere with AR,
+//! symmetric MicroMoE perfect until s ≈ 1, FlexMoE flat-but-imperfect,
+//! SmartMoE and vanilla deteriorating with skew.
 //!
 //! Run: `cargo run --release --example skew_sweep [-- --batches 24]`
 
-use micromoe::adaptive::AdaptiveConfig;
-use micromoe::baselines::{FlexMoe, MicroMoe, MoeSystem, SmartMoe, VanillaEp};
-use micromoe::bench_harness::Table;
+use micromoe::bench_harness::{fig7_policy_arms, fig7_zipf_stream, mean_imbalance, Table};
 use micromoe::cli::Args;
-use micromoe::placement::cayley::symmetric_placement;
-use micromoe::placement::random::random_placement;
-use micromoe::rng::{Rng, Zipf};
-use micromoe::scheduler::{LoadMatrix, SchedulerOptions};
-use micromoe::stats::imbalance_ratio;
 use micromoe::topology::Topology;
-
-fn mean_imbalance(sys: &mut dyn MoeSystem, s: f64, batches: usize, seed: u64) -> f64 {
-    let mut rng = Rng::new(seed);
-    let zipf = Zipf::new(32, s);
-    let mut acc = 0.0;
-    let mut n = 0;
-    for b in 0..batches {
-        let mut lm = LoadMatrix::zeros(32, 8);
-        for g in 0..8 {
-            for _ in 0..2000 {
-                lm.add(zipf.sample(&mut rng), g, 1);
-            }
-        }
-        let plan = sys.plan(&lm);
-        if b >= batches / 3 {
-            acc += imbalance_ratio(&plan.gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>());
-            n += 1;
-        }
-    }
-    acc / n as f64
-}
 
 fn main() {
     let args = Args::from_env();
@@ -50,42 +23,14 @@ fn main() {
 
     for si in 0..=8 {
         let s = si as f64 * 0.25;
-        let mut vanilla = VanillaEp::new(topo.clone(), 32);
-        let mut smart = SmartMoe::new(topo.clone(), 32);
-        smart.replace_every = 8;
-        let mut flex = FlexMoe::new(topo.clone(), 32, 1);
-        flex.adjust_every = 8;
-        let mut rng = Rng::new(99);
-        let mut mm_rand = MicroMoe::new(
-            topo.clone(),
-            random_placement(8, 32, 2, &mut rng),
-            SchedulerOptions::default(),
-        );
-        mm_rand.name_override = Some("MicroMoE (random)");
-        let mut mm_sym = MicroMoe::new(
-            topo.clone(),
-            symmetric_placement(&topo, 32),
-            SchedulerOptions::default(),
-        );
-        let mut mm_full = MicroMoe::new(
-            topo.clone(),
-            symmetric_placement(&topo, 32),
-            SchedulerOptions::default(),
-        )
-        .with_adaptive(
-            AdaptiveConfig { check_every: 4, window: 8, slots_per_gpu: 8, ..Default::default() },
-            5,
-        );
-
-        table.row(vec![
-            format!("{s:.2}"),
-            format!("{:.3}", mean_imbalance(&mut vanilla, s, batches, 1)),
-            format!("{:.3}", mean_imbalance(&mut smart, s, batches, 1)),
-            format!("{:.3}", mean_imbalance(&mut flex, s, batches, 1)),
-            format!("{:.3}", mean_imbalance(&mut mm_rand, s, batches, 1)),
-            format!("{:.3}", mean_imbalance(&mut mm_sym, s, batches, 1)),
-            format!("{:.3}", mean_imbalance(&mut mm_full, s, batches, 1)),
-        ]);
+        // one shared stream per skew so every policy sees identical loads
+        let stream = fig7_zipf_stream(s, batches);
+        let mut arms = fig7_policy_arms(&topo, 32);
+        let mut row = vec![format!("{s:.2}")];
+        for session in &mut arms {
+            row.push(format!("{:.3}", mean_imbalance(session, &stream, batches / 3)));
+        }
+        table.row(row);
     }
     table.print();
     println!("\n(1.000 = perfect balance; paper Fig. 7 shows the same ordering)");

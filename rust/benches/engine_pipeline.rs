@@ -20,13 +20,13 @@
 
 use std::time::{Duration, Instant};
 
+use micromoe::balancer::{MoeLayerPlan, MoeSession};
 use micromoe::bench_harness::{fmt_time, save_json, Table};
-use micromoe::engine::{EngineMode, ScheduleEngine};
+use micromoe::engine::EngineMode;
 use micromoe::placement::cayley::cayley_graph_placement;
-use micromoe::scheduler::{
-    schedule_layers_parallel, LoadMatrix, MicroEpScheduler, SchedulerOptions,
-};
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
 use micromoe::ser::Json;
+use micromoe::topology::Topology;
 use micromoe::workload::{DriftingWorkload, Workload};
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -56,18 +56,26 @@ struct ModeResult {
 }
 
 /// The per-layer dispatch stage a real consumer runs on every emitted
-/// schedule (what `MultiLayerSim::step` does with the cost model): derive
-/// per-GPU loads and all-to-all volumes. On the pipelined engine this
-/// overlaps the remaining layers' solves; after a barrier it serializes.
-fn dispatch_stage(s: &micromoe::scheduler::Schedule, placement: &micromoe::placement::Placement) {
-    let loads = s.gpu_loads(placement);
-    let vols = s.comm_volumes(placement.num_gpus);
-    std::hint::black_box((loads, vols));
+/// plan (what `MultiLayerSim::step` does with the cost model): derive the
+/// all-to-all volumes. On the pipelined engine this overlaps the
+/// remaining layers' solves; after a barrier it serializes.
+fn dispatch_stage(plan: &MoeLayerPlan) {
+    let gpus = plan.gpu_compute.len();
+    let mut send = vec![0u64; gpus];
+    let mut recv = vec![0u64; gpus];
+    for r in &plan.routes {
+        if r.src != r.dst {
+            send[r.src] += r.tokens;
+            recv[r.dst] += r.tokens;
+        }
+    }
+    std::hint::black_box((send, recv));
 }
 
-/// Run one mode over the shared rounds; round 0 is warmup, the rest are
-/// measured. `gap` models the trainer's compute between scheduling rounds
-/// (the window speculative pre-solves hide in).
+/// Run one mode over the shared rounds through the `MoeSession` facade;
+/// round 0 is warmup, the rest are measured. `gap` models the trainer's
+/// compute between scheduling rounds (the window speculative pre-solves
+/// hide in).
 fn run_mode(
     mode: EngineMode,
     gpus: usize,
@@ -76,31 +84,19 @@ fn run_mode(
     gap: Duration,
 ) -> ModeResult {
     let placement = cayley_graph_placement(gpus, EXPERTS);
-    let opts = SchedulerOptions { engine: mode, ..Default::default() };
-    let mut barrier_scheds: Vec<MicroEpScheduler> = Vec::new();
-    let mut engine: Option<ScheduleEngine> = None;
-    if mode.is_barrier() {
-        barrier_scheds = (0..layers)
-            .map(|_| MicroEpScheduler::new(placement.clone(), None, opts.clone()))
-            .collect();
-    } else {
-        engine = Some(ScheduleEngine::new(placement.clone(), None, opts, layers));
-    }
+    let mut session = MoeSession::builder()
+        .topology(Topology::new(gpus, gpus / 2, 2, 8))
+        .placement(placement)
+        .engine(mode)
+        .layers(layers)
+        .build()
+        .expect("engine bench session");
     let mut measured = 0.0f64;
     for (ri, loads) in rounds.iter().enumerate() {
         let t0 = Instant::now();
-        match engine.as_mut() {
-            Some(e) => {
-                // per-layer dispatch overlaps the later layers' solves
-                e.schedule_step_with(loads, |_, s| dispatch_stage(&s, &placement));
-            }
-            None => {
-                // barrier: every dispatch waits for the slowest solve
-                for s in schedule_layers_parallel(&mut barrier_scheds, loads) {
-                    dispatch_stage(&s, &placement);
-                }
-            }
-        }
+        // barrier: every dispatch waits for the slowest solve; engine
+        // modes: per-layer dispatch overlaps the later layers' solves
+        session.step_with(loads, &mut |_, plan| dispatch_stage(&plan));
         let dt = t0.elapsed().as_secs_f64();
         if ri > 0 {
             measured += dt;
@@ -108,11 +104,8 @@ fn run_mode(
         std::thread::sleep(gap);
     }
     let steps = (rounds.len() - 1) as f64;
-    let (hit_rate, rp) = match engine.as_ref() {
-        Some(e) if e.speculative() => {
-            let st = e.stats();
-            (st.hit_rate(), st.repair_pivots_per_hit())
-        }
+    let (hit_rate, rp) = match session.engine_stats() {
+        Some(st) if st.spec_issued > 0 => (st.hit_rate(), st.repair_pivots_per_hit()),
         _ => (0.0, 0.0),
     };
     ModeResult {

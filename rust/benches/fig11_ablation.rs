@@ -5,6 +5,7 @@
 //! Scheduling times are *measured* on our LP; A2A volumes feed the
 //! calibrated comm model.
 
+use micromoe::balancer::Balancer;
 use micromoe::bench_harness::{fmt_time, save_json, Table};
 use micromoe::cluster::CostModel;
 use micromoe::placement::cayley::symmetric_placement;
@@ -63,7 +64,6 @@ fn main() {
                 }
             }
             if vanilla {
-                use micromoe::baselines::MoeSystem;
                 let plan = vanilla_sys.plan(&lm);
                 a2a_t += model.a2a_time_from_routes(&plan.routes, 8, &topo);
             } else {

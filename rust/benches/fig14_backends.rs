@@ -3,7 +3,8 @@
 //! both systems (the appendix's communication-focused comparison), groups
 //! spanning nodes beyond 8 GPUs.
 
-use micromoe::baselines::{MoeSystem, VanillaEp};
+use micromoe::balancer::Balancer;
+use micromoe::baselines::VanillaEp;
 use micromoe::bench_harness::{fmt_time, save_json, Table};
 use micromoe::cluster::{CommBackend, CostModel};
 use micromoe::placement::cayley::symmetric_placement;

@@ -1,51 +1,33 @@
 //! Fig. 6 regenerator: end-to-end speedup over Megatron-LM for every
 //! Table-2 model × system, under drifting Zipf loads on the calibrated
-//! H100 cluster model.
+//! H100 cluster model. Systems are policies selected by name through the
+//! `MoeSession` registry.
 //!
 //! Expected shape (paper): MicroMoE best (up to ~1.48× there), FlexMoE
 //! second, SmartMoE mixed (sometimes below Megatron once migrations are
 //! charged), DeepSpeed collapsing at 16/32 experts and competitive at 8.
 
-use micromoe::adaptive::AdaptiveConfig;
-use micromoe::baselines::{DeepSpeedPad, FlexMoe, MicroMoe, MoeSystem, SmartMoe, VanillaEp};
-use micromoe::bench_harness::{save_json, Table};
+use micromoe::balancer::MoeSession;
+use micromoe::bench_harness::{fig6_policy_arms, mean_layer_breakdown, save_json, Table};
 use micromoe::cluster::migration::expert_bytes;
-use micromoe::cluster::sim::{moe_layer_time, MoeLayerBreakdown, TrainIterationModel};
+use micromoe::cluster::sim::TrainIterationModel;
 use micromoe::cluster::CostModel;
 use micromoe::config::table2;
-use micromoe::placement::cayley::symmetric_placement;
-use micromoe::scheduler::{LoadMatrix, SchedulerOptions};
+use micromoe::scheduler::LoadMatrix;
 use micromoe::ser::Json;
 use micromoe::workload::{DriftingWorkload, Workload};
 
 fn throughput(
-    sys: &mut dyn MoeSystem,
+    session: &mut MoeSession,
     batches: &[LoadMatrix],
     model: &CostModel,
     topo: &micromoe::topology::Topology,
     iter_model: &TrainIterationModel,
     tokens_per_iter: u64,
 ) -> f64 {
-    let mut acc = MoeLayerBreakdown::default();
-    let mut migration = 0.0;
-    for lm in batches {
-        let mut plan = sys.plan(lm);
-        migration += plan.prep_extra; // one-off per replacement
-        plan.prep_extra = 0.0;
-        let bd = moe_layer_time(model, topo, &plan);
-        acc.prep += bd.prep;
-        acc.dispatch += bd.dispatch;
-        acc.compute += bd.compute;
-        acc.combine += bd.combine;
-    }
-    let n = batches.len() as f64;
-    let mean = MoeLayerBreakdown {
-        prep: acc.prep / n,
-        dispatch: acc.dispatch / n,
-        compute: acc.compute / n,
-        combine: acc.combine / n,
-    };
-    let iter_t = iter_model.iteration_time(&mean) + migration / n;
+    let (mean, migration_per_batch) = mean_layer_breakdown(session, batches, model, topo);
+    // migration is a one-off per replacement, amortized per iteration
+    let iter_t = iter_model.iteration_time(&mean) + migration_per_batch;
     tokens_per_iter as f64 / iter_t
 }
 
@@ -76,53 +58,16 @@ fn main() {
         );
         let batches: Vec<LoadMatrix> = (0..24).map(|_| wl.next_batch()).collect();
 
-        let mut systems: Vec<Box<dyn MoeSystem>> = vec![
-            Box::new(VanillaEp::new(topo.clone(), e)),
-            Box::new(DeepSpeedPad::new(topo.clone(), e)),
-            Box::new({
-                let mut s = SmartMoe::new(topo.clone(), e)
-                    .with_migration_cost(model.clone(), bytes);
-                s.replace_every = 4;
-                s
-            }),
-            Box::new({
-                let mut f = FlexMoe::new(topo.clone(), e, 1)
-                    .with_migration_cost(model.clone(), bytes);
-                f.adjust_every = 4;
-                f
-            }),
-            Box::new(MicroMoe::new(
-                topo.clone(),
-                symmetric_placement(&topo, e),
-                SchedulerOptions::default(),
-            )),
-            Box::new(
-                MicroMoe::new(
-                    topo.clone(),
-                    symmetric_placement(&topo, e),
-                    SchedulerOptions::default(),
-                )
-                .with_adaptive(
-                    AdaptiveConfig {
-                        check_every: 8,
-                        window: 8,
-                        slots_per_gpu: topo.slots_per_gpu(e).max(2),
-                        ..Default::default()
-                    },
-                    11,
-                )
-                .with_migration_cost(model.clone(), bytes),
-            ),
-        ];
+        let mut systems = fig6_policy_arms(&topo, e, Some((&model, bytes)));
 
         let mut table = Table::new(
             &format!("Fig 6: {} ({} GPUs, {e} experts, s={skew})", preset.name, preset.num_gpus),
             &["system", "tokens/s", "speedup vs Megatron"],
         );
         let mut base = 0.0;
-        for sys in &mut systems {
+        for session in &mut systems {
             let tput = throughput(
-                sys.as_mut(),
+                session,
                 &batches,
                 &model,
                 &topo,
@@ -134,11 +79,11 @@ fn main() {
             }
             let speedup = tput / base;
             table.row(vec![
-                sys.name().to_string(),
+                session.name().to_string(),
                 format!("{tput:.0}"),
                 format!("{speedup:.3}x"),
             ]);
-            if sys.name() == "MicroMoE" {
+            if session.name() == "MicroMoE" {
                 summary.push((preset.name.to_string(), speedup));
             }
         }

@@ -1,42 +1,15 @@
 //! Fig. 7 regenerator: max/avg GPU load vs Zipf skewness for SmartMoE,
 //! FlexMoE, MicroMoE (random / w/o AR / full). DP=8, 32 experts, d=2 —
-//! exactly the paper's §7.3 setting.
+//! exactly the paper's §7.3 setting. Every arm is a policy selected by
+//! name through the `MoeSession` registry.
 
-use micromoe::adaptive::AdaptiveConfig;
-use micromoe::baselines::{FlexMoe, MicroMoe, MoeSystem, SmartMoe, VanillaEp};
-use micromoe::bench_harness::{save_json, Table};
-use micromoe::placement::cayley::symmetric_placement;
-use micromoe::placement::random::random_placement;
-use micromoe::rng::{Rng, Zipf};
-use micromoe::scheduler::{LoadMatrix, SchedulerOptions};
-use micromoe::stats::imbalance_ratio;
+use micromoe::bench_harness::{
+    fig7_policy_arms, fig7_zipf_stream, mean_imbalance, save_json, Table,
+};
 use micromoe::topology::Topology;
 
-fn mean_imbalance(sys: &mut dyn MoeSystem, s: f64, batches: usize) -> f64 {
-    let mut rng = Rng::new(1);
-    let zipf = Zipf::new(32, s);
-    let mut acc = 0.0;
-    let mut n = 0usize;
-    for b in 0..batches {
-        let mut lm = LoadMatrix::zeros(32, 8);
-        for g in 0..8 {
-            for _ in 0..2000 {
-                lm.add(zipf.sample(&mut rng), g, 1);
-            }
-        }
-        let plan = sys.plan(&lm);
-        if b >= batches / 3 {
-            acc += imbalance_ratio(
-                &plan.gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>(),
-            );
-            n += 1;
-        }
-    }
-    acc / n as f64
-}
-
 fn main() {
-    let batches = 24;
+    let n = 24;
     let topo = Topology::new(8, 4, 2, 8);
     let mut table = Table::new(
         "Fig 7: max/avg GPU load vs skewness (DP=8, 32 experts)",
@@ -44,40 +17,15 @@ fn main() {
     );
     for si in 0..=8 {
         let s = si as f64 * 0.25;
-        let mut vanilla = VanillaEp::new(topo.clone(), 32);
-        let mut smart = SmartMoe::new(topo.clone(), 32);
-        smart.replace_every = 8;
-        let mut flex = FlexMoe::new(topo.clone(), 32, 1);
-        flex.adjust_every = 8;
-        let mut rng = Rng::new(99);
-        let mut mm_rand = MicroMoe::new(
-            topo.clone(),
-            random_placement(8, 32, 2, &mut rng),
-            SchedulerOptions::default(),
-        );
-        let mut mm_sym = MicroMoe::new(
-            topo.clone(),
-            symmetric_placement(&topo, 32),
-            SchedulerOptions::default(),
-        );
-        let mut mm_full = MicroMoe::new(
-            topo.clone(),
-            symmetric_placement(&topo, 32),
-            SchedulerOptions::default(),
-        )
-        .with_adaptive(
-            AdaptiveConfig { check_every: 4, window: 8, slots_per_gpu: 8, ..Default::default() },
-            5,
-        );
-        table.row(vec![
-            format!("{s:.2}"),
-            format!("{:.3}", mean_imbalance(&mut vanilla, s, batches)),
-            format!("{:.3}", mean_imbalance(&mut smart, s, batches)),
-            format!("{:.3}", mean_imbalance(&mut flex, s, batches)),
-            format!("{:.3}", mean_imbalance(&mut mm_rand, s, batches)),
-            format!("{:.3}", mean_imbalance(&mut mm_sym, s, batches)),
-            format!("{:.3}", mean_imbalance(&mut mm_full, s, batches)),
-        ]);
+        let stream = fig7_zipf_stream(s, n);
+        // each arm is one registry policy; MicroMoE(rand) only swaps the
+        // placement the builder hands the same policy
+        let mut arms = fig7_policy_arms(&topo, 32);
+        let mut row = vec![format!("{s:.2}")];
+        for session in &mut arms {
+            row.push(format!("{:.3}", mean_imbalance(session, &stream, n / 3)));
+        }
+        table.row(row);
     }
     table.print();
     println!(

@@ -1,19 +1,18 @@
 //! Fig. 8 regenerator: execution-time breakdown of one MoE layer
 //! (prep / dispatch A2A / expert compute / combine A2A) per system at the
 //! paper's setting: DP=8, 32 experts, mbs=8, seq=2048, top-2, h=4096, s=1.
+//! Systems are policies selected by name through the `MoeSession`
+//! registry.
 //!
 //! Expected shape: compute dominates everywhere; MicroMoE's compute bar is
 //! the shortest (perfect balance); MicroMoE's prep is slightly larger but
 //! hidden by overlap; DeepSpeed omitted (as in the paper).
 
-use micromoe::adaptive::AdaptiveConfig;
-use micromoe::baselines::{FlexMoe, MicroMoe, MoeSystem, SmartMoe, VanillaEp};
-use micromoe::bench_harness::{fmt_time, save_json, Table};
-use micromoe::cluster::sim::{moe_layer_time, MoeLayerBreakdown};
+use micromoe::balancer::MoeSession;
+use micromoe::bench_harness::{fmt_time, mean_layer_breakdown, save_json, Table};
 use micromoe::cluster::CostModel;
-use micromoe::placement::cayley::symmetric_placement;
 use micromoe::rng::{Rng, Zipf};
-use micromoe::scheduler::{LoadMatrix, SchedulerOptions};
+use micromoe::scheduler::LoadMatrix;
 use micromoe::topology::Topology;
 
 fn main() {
@@ -21,70 +20,47 @@ fn main() {
     let model = CostModel::h100_testbed(); // h=4096 defaults
     let per_gpu = 8u64 * 2048 * 2; // mbs·seq·topK assignments per GPU
 
-    let mut systems: Vec<Box<dyn MoeSystem>> = vec![
-        Box::new(VanillaEp::new(topo.clone(), 32)),
-        Box::new({
-            let mut s = SmartMoe::new(topo.clone(), 32);
-            s.replace_every = 8;
-            s
-        }),
-        Box::new({
-            let mut f = FlexMoe::new(topo.clone(), 32, 1);
-            f.adjust_every = 8;
-            f
-        }),
-        Box::new(MicroMoe::new(
-            topo.clone(),
-            symmetric_placement(&topo, 32),
-            SchedulerOptions::default(),
-        )),
-        Box::new(
-            MicroMoe::new(
-                topo.clone(),
-                symmetric_placement(&topo, 32),
-                SchedulerOptions::default(),
-            )
-            .with_adaptive(
-                AdaptiveConfig { check_every: 8, window: 8, slots_per_gpu: 8, ..Default::default() },
-                3,
-            ),
-        ),
-    ];
-
-    let mut table = Table::new(
-        "Fig 8: MoE layer time breakdown (DP=8, E=32, mbs=8, seq=2048, top2, h=4096, s=1)",
-        &["system", "prep", "dispatch", "compute", "combine", "total"],
-    );
-    let mut json_rows = Vec::new();
-    for sys in &mut systems {
-        let mut rng = Rng::new(5);
-        let zipf = Zipf::new(32, 1.0);
-        let mut acc = MoeLayerBreakdown::default();
-        let rounds = 16;
-        for _ in 0..rounds {
+    let mut rng = Rng::new(5);
+    let zipf = Zipf::new(32, 1.0);
+    let batches: Vec<LoadMatrix> = (0..16)
+        .map(|_| {
             let mut lm = LoadMatrix::zeros(32, 8);
             for g in 0..8 {
                 for _ in 0..per_gpu {
                     lm.add(zipf.sample(&mut rng), g, 1);
                 }
             }
-            let mut plan = sys.plan(&lm);
-            plan.prep_extra = 0.0; // migrations amortize outside the layer
-            let bd = moe_layer_time(&model, &topo, &plan);
-            acc.prep += bd.prep;
-            acc.dispatch += bd.dispatch;
-            acc.compute += bd.compute;
-            acc.combine += bd.combine;
+            lm
+        })
+        .collect();
+
+    let arms: [(&str, Option<usize>); 5] = [
+        ("vanilla-ep", None),
+        ("smartmoe", Some(8)),
+        ("flexmoe", Some(8)),
+        ("micromoe", None),
+        ("micromoe-ar", Some(8)),
+    ];
+    let mut table = Table::new(
+        "Fig 8: MoE layer time breakdown (DP=8, E=32, mbs=8, seq=2048, top2, h=4096, s=1)",
+        &["system", "prep", "dispatch", "compute", "combine", "total"],
+    );
+    let mut json_rows = Vec::new();
+    for (name, replan) in arms {
+        let mut b = MoeSession::builder()
+            .topology(topo.clone())
+            .experts(32)
+            .policy_name(name)
+            .seed(if name == "flexmoe" { 1 } else { 3 });
+        if let Some(every) = replan {
+            b = b.replan_every(every);
         }
-        let n = rounds as f64;
-        let mean = MoeLayerBreakdown {
-            prep: acc.prep / n,
-            dispatch: acc.dispatch / n,
-            compute: acc.compute / n,
-            combine: acc.combine / n,
-        };
+        let mut session = b.build().expect("fig8 session");
+        // migrations amortize outside the layer: mean_layer_breakdown
+        // already pulls prep_extra out of the per-layer numbers
+        let (mean, _migration) = mean_layer_breakdown(&mut session, &batches, &model, &topo);
         table.row(vec![
-            sys.name().to_string(),
+            session.name().to_string(),
             fmt_time(mean.prep),
             fmt_time(mean.dispatch),
             fmt_time(mean.compute),
@@ -92,7 +68,7 @@ fn main() {
             fmt_time(mean.total()),
         ]);
         json_rows.push(micromoe::ser::Json::obj(vec![
-            ("system", micromoe::ser::Json::Str(sys.name().into())),
+            ("system", micromoe::ser::Json::Str(session.name().into())),
             ("prep", micromoe::ser::Json::Num(mean.prep)),
             ("dispatch", micromoe::ser::Json::Num(mean.dispatch)),
             ("compute", micromoe::ser::Json::Num(mean.compute)),

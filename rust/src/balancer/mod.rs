@@ -1,0 +1,247 @@
+//! The unified load-balancing API: one step-driven [`Balancer`] trait over
+//! every policy, and the [`MoeSession`] facade that drives it.
+//!
+//! Before this module the crate had four parallel entry points — the
+//! per-layer [`crate::scheduler::MicroEpScheduler`], the barrier fan-out
+//! [`crate::scheduler::schedule_layers_parallel`], the pipelined
+//! [`crate::engine::ScheduleEngine`], and the `baselines` planning trait —
+//! so every consumer (sim, trainer, CLI, benches) wired policies
+//! differently. Now everything speaks [`Balancer`]:
+//!
+//! ```text
+//!                 ┌──────────────── Balancer ────────────────┐
+//!                 │ step(&StepInput) -> StepOutput            │
+//!                 │ step_with / plan / warm_hint / stats / …  │
+//!                 └──────┬──────────────┬──────────────┬──────┘
+//!        LppBalancer     │  EngineBalancer             │  baselines::*
+//!  (per-layer warm LPP,  │  (persistent pool,          │  (VanillaEp,
+//!   barrier fan-out,     │   pipelined emission,       │   DeepSpeedPad,
+//!   all ScheduleModes)   │   speculative pre-solves)   │   SmartMoe,
+//!                        │                             │   FlexMoe,
+//!                        │                             │   MicroMoe+AR)
+//!                 ┌──────┴─────────────────────────────┴──────┐
+//!                 │ MoeSession — owns placement + policy,      │
+//!                 │ built from a name via the PolicySpec       │
+//!                 │ registry ([`registered_policies`])         │
+//!                 └────────────────────────────────────────────┘
+//! ```
+//!
+//! A step covers **all MoE layers of one micro-batch**: `loads[l]` is layer
+//! `l`'s `input_e^g` and the output carries one [`MoeLayerPlan`] per layer
+//! plus unified [`StepStats`]. Single-layer consumers use the provided
+//! [`Balancer::plan`] shorthand; latency-sensitive consumers use
+//! [`Balancer::step_with`], which the engine-backed policy overrides to
+//! hand each layer's plan over *while later layers are still solving*.
+
+pub mod policies;
+pub mod session;
+
+use crate::scheduler::{LoadMatrix, Route, Schedule, ScheduleStats};
+use crate::stats::{BalancerStats, EngineStats, StepStats};
+
+pub use policies::{EngineBalancer, LppBalancer};
+pub use session::{registered_policies, MoeSession, MoeSessionBuilder, SessionError};
+
+/// What a load-balancing policy decided for one MoE layer of one
+/// micro-batch (one layer of a [`Balancer`] step).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MoeLayerPlan {
+    /// tokens to compute per GPU (FFN input rows, already top-K expanded)
+    pub gpu_compute: Vec<u64>,
+    /// token movements (src != dst entries cost communication)
+    pub routes: Vec<Route>,
+    /// CPU scheduling time for this micro-batch (s); 0 for static systems
+    pub sched_time: f64,
+    /// whether scheduling hides under the permute op (§5.4)
+    pub sched_overlapped: bool,
+    /// extra prep charged to this layer (backend pre-processing,
+    /// amortized migration, padding setup …)
+    pub prep_extra: f64,
+}
+
+/// Input of one multi-layer scheduling step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepInput<'a> {
+    /// `loads[l]` — layer `l`'s `input_e^g` for this micro-batch.
+    pub loads: &'a [LoadMatrix],
+}
+
+/// Output of one multi-layer scheduling step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// One plan per input layer, in layer order.
+    pub layers: Vec<MoeLayerPlan>,
+    /// Unified solve diagnostics aggregated over the step's layers.
+    pub stats: StepStats,
+}
+
+/// A load-balancing policy planning every MoE layer of each micro-batch.
+///
+/// Implemented by the MicroEP LPP scheduler ([`LppBalancer`], all
+/// [`crate::scheduler::ScheduleMode`]s), the pipelined/speculative engine
+/// ([`EngineBalancer`]), and every `baselines` system — so one step loop
+/// compares them all on equal footing, and new scenarios are a policy
+/// registration away ([`session`]).
+///
+/// ```
+/// use micromoe::balancer::{Balancer, StepInput};
+/// use micromoe::scheduler::LoadMatrix;
+/// use micromoe::topology::Topology;
+///
+/// // every baseline system is a Balancer; so are the LPP/engine policies
+/// let mut policy = micromoe::baselines::VanillaEp::new(Topology::new(8, 4, 2, 8), 16);
+/// let mut lm = LoadMatrix::zeros(16, 8);
+/// lm.add(3, 1, 128);
+/// let out = policy.step(&StepInput { loads: std::slice::from_ref(&lm) });
+/// assert_eq!(out.layers.len(), 1);
+/// assert_eq!(out.layers[0].gpu_compute.iter().sum::<u64>(), 128);
+/// ```
+pub trait Balancer {
+    /// Display name for tables, legends, and logs.
+    fn name(&self) -> &str;
+
+    /// Schedule one micro-batch across every MoE layer.
+    fn step(&mut self, input: &StepInput) -> StepOutput;
+
+    /// Like [`Balancer::step`], but hands each layer's plan to `sink` in
+    /// layer order. The engine-backed policy overrides this to emit plans
+    /// *as soon as they are available*, overlapping the caller's per-layer
+    /// stage with the remaining layers' solves; the default materializes
+    /// the whole step first.
+    fn step_with(
+        &mut self,
+        input: &StepInput,
+        sink: &mut dyn FnMut(usize, MoeLayerPlan),
+    ) -> StepStats {
+        let out = self.step(input);
+        for (l, plan) in out.layers.into_iter().enumerate() {
+            sink(l, plan);
+        }
+        out.stats
+    }
+
+    /// Single-layer shorthand: a one-layer [`Balancer::step`]. Policies
+    /// constructed for a fixed multi-layer shape panic on it.
+    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
+        let mut out = self.step(&StepInput { loads: std::slice::from_ref(loads) });
+        debug_assert_eq!(out.layers.len(), 1);
+        out.layers.pop().expect("single-layer step produced one plan")
+    }
+
+    /// Prime predictors / warm-start state with per-layer loads expected in
+    /// upcoming steps, without producing a schedule. Default: no-op.
+    fn warm_hint(&mut self, _expected: &[LoadMatrix]) {}
+
+    /// Cumulative counters the policy keeps internally. The LP- and
+    /// engine-backed policies report real numbers; plan-based systems
+    /// return the default — use [`MoeSession::stats`] for a uniform
+    /// accumulator over any policy.
+    fn stats(&self) -> BalancerStats {
+        BalancerStats::default()
+    }
+
+    /// Speculation/pipeline counters when the policy runs the persistent
+    /// scheduling engine; `None` otherwise.
+    fn engine_stats(&self) -> Option<EngineStats> {
+        None
+    }
+}
+
+/// Drive a per-layer planner over a multi-layer step, aggregating unified
+/// stats — the adapter every plan-based system uses to implement
+/// [`Balancer::step`]. Layers are planned in order against the policy's
+/// single internal state, exactly like the pre-trait per-micro-batch loop.
+pub fn step_layers<F>(loads: &[LoadMatrix], mut plan_one: F) -> StepOutput
+where
+    F: FnMut(&LoadMatrix) -> MoeLayerPlan,
+{
+    let mut stats = StepStats::default();
+    let layers: Vec<MoeLayerPlan> = loads
+        .iter()
+        .map(|lm| {
+            let plan = plan_one(lm);
+            fold_plan(&mut stats, &plan);
+            plan
+        })
+        .collect();
+    StepOutput { layers, stats }
+}
+
+/// Fold one layer plan's observable costs into a step's stats.
+pub(crate) fn fold_plan(stats: &mut StepStats, plan: &MoeLayerPlan) {
+    stats.layers += 1;
+    stats.sched_seconds += plan.sched_time;
+    stats.prep_seconds += plan.prep_extra;
+    let layer_max = plan.gpu_compute.iter().copied().max().unwrap_or(0);
+    stats.max_gpu_load = stats.max_gpu_load.max(layer_max);
+}
+
+/// Fold one layer's LP solve diagnostics into a step's stats.
+pub(crate) fn fold_schedule(stats: &mut StepStats, s: &ScheduleStats) {
+    stats.lp_pivots += s.lp_iterations as u64;
+    stats.lp_dual_pivots += s.lp_dual_pivots as u64;
+    stats.lp_bound_flips += s.lp_bound_flips as u64;
+    stats.lp_refactors += s.lp_refactors as u64;
+    if s.warm {
+        stats.warm_layers += 1;
+    }
+}
+
+/// Lower a [`Schedule`] into the plan the cluster model consumes.
+pub(crate) fn schedule_to_plan(
+    s: Schedule,
+    placement: &crate::placement::Placement,
+    overlapped: bool,
+) -> MoeLayerPlan {
+    let gpu_compute = s.gpu_loads(placement);
+    let sched_time = s.stats.solve_ns as f64 * 1e-9;
+    MoeLayerPlan {
+        gpu_compute,
+        routes: s.routes,
+        sched_time,
+        sched_overlapped: overlapped,
+        prep_extra: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_plan(per_gpu: u64, g: usize) -> MoeLayerPlan {
+        MoeLayerPlan {
+            gpu_compute: vec![per_gpu; g],
+            routes: Vec::new(),
+            sched_time: 1e-6,
+            sched_overlapped: true,
+            prep_extra: 0.5e-6,
+        }
+    }
+
+    #[test]
+    fn step_layers_plans_every_layer_in_order() {
+        let loads: Vec<LoadMatrix> = (0..3).map(|_| LoadMatrix::zeros(2, 2)).collect();
+        let mut seen = 0usize;
+        let out = step_layers(&loads, |_| {
+            seen += 1;
+            flat_plan(seen as u64, 2)
+        });
+        assert_eq!(out.layers.len(), 3);
+        assert_eq!(out.layers[2].gpu_compute, vec![3, 3]);
+        assert_eq!(out.stats.layers, 3);
+        assert_eq!(out.stats.max_gpu_load, 3);
+        assert!((out.stats.sched_seconds - 3e-6).abs() < 1e-15);
+        assert!((out.stats.prep_seconds - 1.5e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fold_schedule_counts_warm_layers() {
+        let mut stats = StepStats::default();
+        let mut st = ScheduleStats { lp_iterations: 5, warm: true, ..Default::default() };
+        fold_schedule(&mut stats, &st);
+        st.warm = false;
+        fold_schedule(&mut stats, &st);
+        assert_eq!(stats.warm_layers, 1);
+        assert_eq!(stats.lp_pivots, 10);
+    }
+}

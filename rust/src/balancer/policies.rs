@@ -1,0 +1,252 @@
+//! The MicroMoE policies behind the [`Balancer`] trait: the per-layer
+//! warm-started LPP scheduler fan-out and the persistent pipelined /
+//! speculative engine.
+//!
+//! Both wrap existing machinery without changing its numerics, so they are
+//! bit-identical to the pre-trait entry points (pinned by
+//! `tests/trait_equivalence.rs`):
+//!
+//! * [`LppBalancer`] — one [`MicroEpScheduler`] per layer (each owns its
+//!   warm-start basis), executed through the round-barrier
+//!   [`schedule_layers_parallel`] fan-out. Supports every
+//!   [`crate::scheduler::ScheduleMode`].
+//! * [`EngineBalancer`] — the always-on [`ScheduleEngine`]: persistent
+//!   worker pool, bounded in-flight window with in-order emission, and (in
+//!   speculative mode) forecast-driven pre-solves between steps.
+
+use super::{
+    fold_plan, fold_schedule, schedule_to_plan, Balancer, MoeLayerPlan, StepInput, StepOutput,
+};
+use crate::engine::ScheduleEngine;
+use crate::placement::Placement;
+use crate::scheduler::{schedule_layers_parallel, LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use crate::stats::{BalancerStats, EngineStats, StepStats};
+use crate::topology::Topology;
+
+/// The MicroMoE LPP scheduler as a multi-layer [`Balancer`]: per-layer
+/// warm-started [`MicroEpScheduler`]s driven through the round-barrier
+/// fan-out (the `EngineMode::Barrier` arm of the `"micromoe"` policy).
+pub struct LppBalancer {
+    placement: Placement,
+    scheds: Vec<MicroEpScheduler>,
+    overlap: bool,
+    stats: BalancerStats,
+}
+
+impl LppBalancer {
+    /// One scheduler per layer over a shared placement. `overlap` marks the
+    /// emitted plans as §5.4-overlapped (scheduling hides under permute).
+    pub fn new(
+        placement: Placement,
+        topo: Option<Topology>,
+        opts: SchedulerOptions,
+        layers: usize,
+        overlap: bool,
+    ) -> Self {
+        assert!(layers > 0, "balancer needs at least one layer");
+        let scheds = (0..layers)
+            .map(|_| MicroEpScheduler::new(placement.clone(), topo.clone(), opts.clone()))
+            .collect();
+        LppBalancer { placement, scheds, overlap, stats: BalancerStats::default() }
+    }
+
+    /// MoE layers scheduled per step.
+    pub fn layers(&self) -> usize {
+        self.scheds.len()
+    }
+}
+
+impl Balancer for LppBalancer {
+    fn name(&self) -> &str {
+        "MicroMoE (w/o AR)"
+    }
+
+    fn step(&mut self, input: &StepInput) -> StepOutput {
+        assert_eq!(input.loads.len(), self.scheds.len(), "one load matrix per layer");
+        let schedules = schedule_layers_parallel(&mut self.scheds, input.loads);
+        let mut stats = StepStats::default();
+        let layers: Vec<MoeLayerPlan> = schedules
+            .into_iter()
+            .map(|s| {
+                fold_schedule(&mut stats, &s.stats);
+                let plan = schedule_to_plan(s, &self.placement, self.overlap);
+                fold_plan(&mut stats, &plan);
+                plan
+            })
+            .collect();
+        self.stats.absorb(&stats);
+        StepOutput { layers, stats }
+    }
+
+    fn warm_hint(&mut self, expected: &[LoadMatrix]) {
+        assert_eq!(expected.len(), self.scheds.len(), "one expected load matrix per layer");
+        // prime each layer's warm basis with a discarded solve
+        for (s, lm) in self.scheds.iter_mut().zip(expected) {
+            let _ = s.schedule(lm);
+        }
+    }
+
+    fn stats(&self) -> BalancerStats {
+        self.stats
+    }
+}
+
+/// The pipelined / speculative scheduling engine as a [`Balancer`] (the
+/// `EngineMode::{Pipeline, Speculative}` arms of the `"micromoe"` policy).
+/// Owns the persistent worker pool and, in speculative mode, the per-layer
+/// load forecasters.
+pub struct EngineBalancer {
+    engine: ScheduleEngine,
+    placement: Placement,
+    overlap: bool,
+    stats: BalancerStats,
+}
+
+impl EngineBalancer {
+    /// Engine over a shared placement; `opts.engine` must be `Pipeline` or
+    /// `Speculative` (the barrier mode belongs to [`LppBalancer`]).
+    pub fn new(
+        placement: Placement,
+        topo: Option<Topology>,
+        opts: SchedulerOptions,
+        layers: usize,
+        overlap: bool,
+    ) -> Self {
+        let engine = ScheduleEngine::new(placement.clone(), topo, opts, layers);
+        EngineBalancer { engine, placement, overlap, stats: BalancerStats::default() }
+    }
+
+    /// MoE layers scheduled per step.
+    pub fn layers(&self) -> usize {
+        self.engine.layers()
+    }
+
+    /// Worker threads in the persistent pool.
+    pub fn workers(&self) -> usize {
+        self.engine.workers()
+    }
+}
+
+impl Balancer for EngineBalancer {
+    fn name(&self) -> &str {
+        if self.engine.speculative() {
+            "MicroMoE (speculative engine)"
+        } else {
+            "MicroMoE (pipelined engine)"
+        }
+    }
+
+    fn step(&mut self, input: &StepInput) -> StepOutput {
+        let mut layers: Vec<MoeLayerPlan> = Vec::with_capacity(input.loads.len());
+        let stats = self.step_with(input, &mut |_, plan| layers.push(plan));
+        StepOutput { layers, stats }
+    }
+
+    fn step_with(
+        &mut self,
+        input: &StepInput,
+        sink: &mut dyn FnMut(usize, MoeLayerPlan),
+    ) -> StepStats {
+        let EngineBalancer { engine, placement, overlap, .. } = self;
+        let overlap = *overlap;
+        let mut stats = StepStats::default();
+        engine.schedule_step_with(input.loads, |l, s| {
+            fold_schedule(&mut stats, &s.stats);
+            let plan = schedule_to_plan(s, placement, overlap);
+            fold_plan(&mut stats, &plan);
+            sink(l, plan);
+        });
+        self.stats.absorb(&stats);
+        stats
+    }
+
+    fn warm_hint(&mut self, expected: &[LoadMatrix]) {
+        self.engine.prime(expected);
+    }
+
+    fn stats(&self) -> BalancerStats {
+        self.stats
+    }
+
+    fn engine_stats(&self) -> Option<EngineStats> {
+        Some(self.engine.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineMode;
+    use crate::placement::cayley::cayley_graph_placement;
+    use crate::rng::Rng;
+
+    fn random_lm(seed: u64, e: usize, g: usize, n: u64) -> LoadMatrix {
+        let mut rng = Rng::new(seed);
+        let mut lm = LoadMatrix::zeros(e, g);
+        for _ in 0..n {
+            lm.add(rng.below(e as u64) as usize, rng.below(g as u64) as usize, 1);
+        }
+        lm
+    }
+
+    #[test]
+    fn lpp_balancer_matches_direct_schedulers() {
+        let p = cayley_graph_placement(8, 16);
+        let layers = 3usize;
+        let mut bal =
+            LppBalancer::new(p.clone(), None, SchedulerOptions::default(), layers, true);
+        let mut direct: Vec<MicroEpScheduler> = (0..layers)
+            .map(|_| MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default()))
+            .collect();
+        for round in 0..3u64 {
+            let loads: Vec<LoadMatrix> =
+                (0..layers).map(|l| random_lm(round * 10 + l as u64, 16, 8, 900)).collect();
+            let out = bal.step(&StepInput { loads: &loads });
+            for (l, (plan, (s, lm))) in
+                out.layers.iter().zip(direct.iter_mut().zip(&loads)).enumerate()
+            {
+                let want = s.schedule(lm);
+                assert_eq!(plan.routes, want.routes, "round {round} layer {l}");
+                assert_eq!(plan.gpu_compute, want.gpu_loads(&p), "round {round} layer {l}");
+            }
+        }
+        let st = bal.stats();
+        assert_eq!(st.steps, 3);
+        assert_eq!(st.layers, 3 * layers as u64);
+        assert!(st.lp_pivots > 0);
+        assert!(bal.engine_stats().is_none());
+    }
+
+    #[test]
+    fn engine_balancer_streams_in_layer_order() {
+        let p = cayley_graph_placement(4, 8);
+        let layers = 5usize;
+        let opts = SchedulerOptions {
+            engine: EngineMode::Pipeline { workers: 2, inflight: 2 },
+            ..Default::default()
+        };
+        let mut bal = EngineBalancer::new(p, None, opts, layers, true);
+        let loads: Vec<LoadMatrix> =
+            (0..layers).map(|l| random_lm(l as u64, 8, 4, 400)).collect();
+        let mut order = Vec::new();
+        let stats = bal.step_with(&StepInput { loads: &loads }, &mut |l, plan| {
+            order.push(l);
+            assert_eq!(plan.gpu_compute.iter().sum::<u64>(), loads[l].total());
+        });
+        assert_eq!(order, (0..layers).collect::<Vec<_>>());
+        assert_eq!(stats.layers, layers);
+        assert!(bal.engine_stats().is_some());
+    }
+
+    #[test]
+    fn warm_hint_primes_without_changing_step_shape() {
+        let p = cayley_graph_placement(4, 8);
+        let mut bal = LppBalancer::new(p, None, SchedulerOptions::default(), 2, true);
+        let loads: Vec<LoadMatrix> = (0..2).map(|l| random_lm(40 + l, 8, 4, 600)).collect();
+        bal.warm_hint(&loads);
+        let out = bal.step(&StepInput { loads: &loads });
+        assert_eq!(out.layers.len(), 2);
+        // hint already solved these exact loads: the step is warm everywhere
+        assert_eq!(out.stats.warm_layers, 2);
+    }
+}

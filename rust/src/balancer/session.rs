@@ -1,0 +1,643 @@
+//! [`MoeSession`]: the one facade every consumer drives, and the policy
+//! registry that builds any [`Balancer`] from a [`PolicySpec`] name.
+//!
+//! Session lifecycle:
+//!
+//! 1. **configure** — [`MoeSession::builder`]: topology + experts (or an
+//!    explicit placement), a policy (by [`PolicySpec`] or name string),
+//!    the engine mode, layer count, and optional migration costing;
+//! 2. **build** — the registry resolves the policy name to a concrete
+//!    [`Balancer`] (constructing placement, forecasters, and the worker
+//!    pool as the policy requires);
+//! 3. **step** — [`MoeSession::step`] schedules every MoE layer of each
+//!    micro-batch and accumulates unified [`BalancerStats`];
+//! 4. **inspect** — [`MoeSession::stats`] / [`MoeSession::engine_stats`].
+//!
+//! Registered policies ([`registered_policies`]):
+//!
+//! | name | system |
+//! |---|---|
+//! | `micromoe` | MicroEP LPP scheduling; `options.engine` picks Barrier ([`LppBalancer`]) or Pipeline/Speculative ([`EngineBalancer`]) |
+//! | `micromoe-ar` | the full paper system: LPP scheduling + §6.4 adaptive replacement ([`crate::baselines::MicroMoe`]) |
+//! | `vanilla-ep` | Megatron-LM fixed EP ([`crate::baselines::VanillaEp`]) |
+//! | `deepspeed-pad` | DeepSpeed/GShard capacity padding ([`crate::baselines::DeepSpeedPad`]) |
+//! | `smartmoe` | periodic placement re-optimization ([`crate::baselines::SmartMoe`]) |
+//! | `flexmoe` | popularity-proportional replicas ([`crate::baselines::FlexMoe`]) |
+
+use super::policies::{EngineBalancer, LppBalancer};
+use super::{Balancer, MoeLayerPlan, StepInput, StepOutput};
+use crate::adaptive::AdaptiveConfig;
+use crate::baselines::{DeepSpeedPad, FlexMoe, MicroMoe, SmartMoe, VanillaEp};
+use crate::cluster::CostModel;
+use crate::config::PolicySpec;
+use crate::engine::EngineMode;
+use crate::placement::cayley::symmetric_placement;
+use crate::placement::Placement;
+use crate::scheduler::{LoadMatrix, SchedulerOptions};
+use crate::stats::{BalancerStats, EngineStats, StepStats};
+use crate::topology::Topology;
+
+/// Names the [`MoeSessionBuilder`] registry resolves (the `"micromoe"`
+/// policy further fans out over [`EngineMode`] via its options).
+pub fn registered_policies() -> &'static [&'static str] {
+    &["micromoe", "micromoe-ar", "vanilla-ep", "deepspeed-pad", "smartmoe", "flexmoe"]
+}
+
+/// Why a session could not be built.
+#[derive(Debug, thiserror::Error)]
+pub enum SessionError {
+    /// The policy name is not in the registry.
+    #[error("unknown policy '{0}' — registered: {1:?}")]
+    UnknownPolicy(String, &'static [&'static str]),
+    /// A required builder input was not provided.
+    #[error("session builder needs {0}")]
+    Missing(&'static str),
+    /// Provided inputs are inconsistent.
+    #[error("invalid session config: {0}")]
+    Invalid(String),
+}
+
+/// Configures and builds a [`MoeSession`] (see the module docs for the
+/// lifecycle and the policy registry).
+///
+/// ```
+/// use micromoe::balancer::MoeSession;
+/// use micromoe::engine::EngineMode;
+/// use micromoe::scheduler::LoadMatrix;
+/// use micromoe::topology::Topology;
+///
+/// let mut session = MoeSession::builder()
+///     .topology(Topology::new(8, 4, 2, 8))
+///     .experts(16)
+///     .policy_name("micromoe")
+///     .engine(EngineMode::pipeline())
+///     .layers(2)
+///     .build()
+///     .unwrap();
+/// let mk = |e: usize| {
+///     let mut lm = LoadMatrix::zeros(16, 8);
+///     lm.add(e, 0, 100);
+///     lm
+/// };
+/// let out = session.step(&[mk(1), mk(2)]);
+/// assert_eq!(out.layers.len(), 2);
+/// assert_eq!(session.stats().steps, 1);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct MoeSessionBuilder {
+    topo: Option<Topology>,
+    experts: Option<usize>,
+    placement: Option<Placement>,
+    spec: Option<PolicySpec>,
+    layers: Option<usize>,
+    overlap: Option<bool>,
+    label: Option<String>,
+    migration: Option<(CostModel, u64)>,
+}
+
+impl MoeSessionBuilder {
+    /// Parallelism topology the session schedules over (required).
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topo = Some(topo);
+        self
+    }
+
+    /// Experts per MoE layer (required unless a placement is given).
+    pub fn experts(mut self, experts: usize) -> Self {
+        self.experts = Some(experts);
+        self
+    }
+
+    /// Explicit replica placement for the policies that consume one
+    /// (`micromoe`, `micromoe-ar`; symmetric Cayley by default). Rejected
+    /// at build for the baselines, which derive their layout from the
+    /// topology.
+    pub fn placement(mut self, placement: Placement) -> Self {
+        self.placement = Some(placement);
+        self
+    }
+
+    /// Full policy specification (name + options + seed + cadence).
+    pub fn policy(mut self, spec: PolicySpec) -> Self {
+        self.spec = Some(spec);
+        self
+    }
+
+    /// Select the policy by registry name, keeping other spec fields.
+    pub fn policy_name(mut self, name: &str) -> Self {
+        self.spec.get_or_insert_with(PolicySpec::default).name = name.to_string();
+        self
+    }
+
+    /// Scheduler options (mode, warm start, solver, engine) for the policy.
+    pub fn options(mut self, options: SchedulerOptions) -> Self {
+        self.spec.get_or_insert_with(PolicySpec::default).options = options;
+        self
+    }
+
+    /// Multi-layer execution mode for the `micromoe` policy.
+    pub fn engine(mut self, engine: EngineMode) -> Self {
+        self.spec.get_or_insert_with(PolicySpec::default).options.engine = engine;
+        self
+    }
+
+    /// RNG seed for stochastic policies (FlexMoE placement, AR search).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.get_or_insert_with(PolicySpec::default).seed = seed;
+        self
+    }
+
+    /// Re-plan cadence in micro-batches for the periodic policies
+    /// (SmartMoE / FlexMoE / adaptive replacement); rejected at build for
+    /// policies with nothing to re-plan.
+    pub fn replan_every(mut self, every: usize) -> Self {
+        self.spec.get_or_insert_with(PolicySpec::default).replan_every = Some(every);
+        self
+    }
+
+    /// MoE layers per step (default 1; 0 is rejected at build). The
+    /// periodic plan-based policies tick their cadence per plan call and
+    /// therefore only accept 1.
+    pub fn layers(mut self, layers: usize) -> Self {
+        self.layers = Some(layers);
+        self
+    }
+
+    /// Whether scheduling overlaps the permute op (§5.4; default true).
+    pub fn overlap(mut self, overlap: bool) -> Self {
+        self.overlap = Some(overlap);
+        self
+    }
+
+    /// Display-name override for tables and legends.
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = Some(label.to_string());
+        self
+    }
+
+    /// Charge expert migrations of the periodic policies against this cost
+    /// model (`bytes_per_expert` copied per moved replica).
+    pub fn migration_cost(mut self, model: CostModel, bytes_per_expert: u64) -> Self {
+        self.migration = Some((model, bytes_per_expert));
+        self
+    }
+
+    /// Resolve the policy through the registry and build the session.
+    pub fn build(self) -> Result<MoeSession, SessionError> {
+        let MoeSessionBuilder {
+            topo,
+            experts,
+            placement,
+            spec,
+            layers,
+            overlap,
+            label,
+            migration,
+        } = self;
+        let topo = topo.ok_or(SessionError::Missing("a topology"))?;
+        let spec = spec.unwrap_or_default();
+        let layers = layers.unwrap_or(1);
+        if layers == 0 {
+            return Err(SessionError::Invalid("a session needs at least one layer".into()));
+        }
+        let overlap = overlap.unwrap_or(true);
+        let experts = experts
+            .or_else(|| placement.as_ref().map(|p| p.num_experts))
+            .ok_or(SessionError::Missing("experts (or a placement)"))?;
+        if let Some(p) = &placement {
+            if p.num_experts != experts {
+                return Err(SessionError::Invalid(format!(
+                    "placement has {} experts but {experts} were requested",
+                    p.num_experts
+                )));
+            }
+        }
+        let gpus = placement
+            .as_ref()
+            .map(|p| p.num_gpus)
+            .unwrap_or_else(|| topo.microep_group_size());
+        if !registered_policies().contains(&spec.name.as_str()) {
+            return Err(SessionError::UnknownPolicy(spec.name.clone(), registered_policies()));
+        }
+        if spec.replan_every == Some(0) {
+            return Err(SessionError::Invalid(
+                "replan_every must be at least 1 micro-batch".into(),
+            ));
+        }
+        // reject knobs the selected policy would silently ignore
+        let periodic = matches!(spec.name.as_str(), "micromoe-ar" | "smartmoe" | "flexmoe");
+        if spec.replan_every.is_some() && !periodic {
+            return Err(SessionError::Invalid(format!(
+                "policy '{}' has no re-plan cadence; replan_every only applies to \
+                 micromoe-ar/smartmoe/flexmoe",
+                spec.name
+            )));
+        }
+        if periodic && layers > 1 {
+            // these systems advance their per-micro-batch cadence and EMA
+            // state once per plan_layer call; a multi-layer step would tick
+            // them `layers` times per micro-batch and distort the cadence
+            return Err(SessionError::Invalid(format!(
+                "policy '{}' models a per-micro-batch re-plan cadence and only supports \
+                 single-layer steps (layers = 1)",
+                spec.name
+            )));
+        }
+        if spec.name != "micromoe" && !spec.options.engine.is_barrier() {
+            return Err(SessionError::Invalid(format!(
+                "policy '{}' runs the plan-based loop; engine modes only apply to 'micromoe'",
+                spec.name
+            )));
+        }
+        if migration.is_some() && !periodic {
+            return Err(SessionError::Invalid(format!(
+                "policy '{}' never migrates experts; migration_cost only applies to \
+                 micromoe-ar/smartmoe/flexmoe",
+                spec.name
+            )));
+        }
+        let takes_placement = matches!(spec.name.as_str(), "micromoe" | "micromoe-ar");
+        if placement.is_some() && !takes_placement {
+            return Err(SessionError::Invalid(format!(
+                "policy '{}' derives its layout from the topology; an explicit placement \
+                 only applies to micromoe/micromoe-ar",
+                spec.name
+            )));
+        }
+
+        let balancer: Box<dyn Balancer> = match spec.name.as_str() {
+            "micromoe" => {
+                let p = placement.unwrap_or_else(|| symmetric_placement(&topo, experts));
+                match spec.options.engine {
+                    EngineMode::Barrier => Box::new(LppBalancer::new(
+                        p,
+                        Some(topo.clone()),
+                        spec.options.clone(),
+                        layers,
+                        overlap,
+                    )),
+                    _ => Box::new(EngineBalancer::new(
+                        p,
+                        Some(topo.clone()),
+                        spec.options.clone(),
+                        layers,
+                        overlap,
+                    )),
+                }
+            }
+            "micromoe-ar" => {
+                let p = placement.unwrap_or_else(|| symmetric_placement(&topo, experts));
+                let cfg = AdaptiveConfig {
+                    check_every: spec.replan_every.unwrap_or(AdaptiveConfig::default().check_every),
+                    window: 8,
+                    slots_per_gpu: topo.slots_per_gpu(experts).max(2),
+                    ..Default::default()
+                };
+                let mut mm = MicroMoe::new(topo.clone(), p, spec.options.clone())
+                    .with_adaptive(cfg, spec.seed);
+                if let Some((model, bytes)) = migration {
+                    mm = mm.with_migration_cost(model, bytes);
+                }
+                mm.overlap = overlap;
+                Box::new(mm)
+            }
+            "vanilla-ep" => Box::new(VanillaEp::new(topo.clone(), experts)),
+            "deepspeed-pad" => Box::new(DeepSpeedPad::new(topo.clone(), experts)),
+            "smartmoe" => {
+                let mut s = SmartMoe::new(topo.clone(), experts);
+                if let Some(every) = spec.replan_every {
+                    s.replace_every = every;
+                }
+                if let Some((model, bytes)) = migration {
+                    s = s.with_migration_cost(model, bytes);
+                }
+                Box::new(s)
+            }
+            "flexmoe" => {
+                let mut f = FlexMoe::new(topo.clone(), experts, spec.seed);
+                if let Some(every) = spec.replan_every {
+                    f.adjust_every = every;
+                }
+                if let Some((model, bytes)) = migration {
+                    f = f.with_migration_cost(model, bytes);
+                }
+                Box::new(f)
+            }
+            other => unreachable!("policy '{other}' was validated against the registry above"),
+        };
+        Ok(MoeSession {
+            balancer,
+            label,
+            spec,
+            topo,
+            layers,
+            gpus,
+            experts,
+            stats: BalancerStats::default(),
+        })
+    }
+}
+
+/// The facade consumers drive: owns the policy (and through it placement,
+/// forecasters, and the worker pool) and steps every MoE layer of each
+/// micro-batch, accumulating unified stats. Built by [`MoeSessionBuilder`].
+pub struct MoeSession {
+    balancer: Box<dyn Balancer>,
+    label: Option<String>,
+    spec: PolicySpec,
+    topo: Topology,
+    layers: usize,
+    gpus: usize,
+    experts: usize,
+    stats: BalancerStats,
+}
+
+impl MoeSession {
+    /// Start configuring a session.
+    pub fn builder() -> MoeSessionBuilder {
+        MoeSessionBuilder::default()
+    }
+
+    /// Display name (the builder label, or the policy's own name).
+    pub fn name(&self) -> &str {
+        self.label.as_deref().unwrap_or_else(|| self.balancer.name())
+    }
+
+    /// The policy specification this session was built from.
+    pub fn policy(&self) -> &PolicySpec {
+        &self.spec
+    }
+
+    /// Topology the session schedules over.
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    /// MoE layers per step.
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    /// Experts per MoE layer.
+    pub fn experts(&self) -> usize {
+        self.experts
+    }
+
+    /// Source GPUs every load matrix must carry.
+    pub fn gpus(&self) -> usize {
+        self.gpus
+    }
+
+    /// Cumulative counters over every step driven through this session
+    /// (works for any policy, unlike [`Balancer::stats`]).
+    pub fn stats(&self) -> BalancerStats {
+        self.stats
+    }
+
+    /// Engine counters when the policy runs the persistent scheduling
+    /// engine (`micromoe` with Pipeline/Speculative); `None` otherwise.
+    pub fn engine_stats(&self) -> Option<EngineStats> {
+        self.balancer.engine_stats()
+    }
+
+    /// Schedule one micro-batch across every layer; `loads[l]` is layer
+    /// `l`'s `input_e^g`.
+    pub fn step(&mut self, loads: &[LoadMatrix]) -> StepOutput {
+        self.check(loads);
+        let out = self.balancer.step(&StepInput { loads });
+        self.stats.absorb(&out.stats);
+        out
+    }
+
+    /// Like [`MoeSession::step`], but hands each layer's plan to `sink` in
+    /// layer order as soon as it is available (the engine-backed policy
+    /// overlaps the sink with the remaining layers' solves).
+    pub fn step_with(
+        &mut self,
+        loads: &[LoadMatrix],
+        sink: &mut dyn FnMut(usize, MoeLayerPlan),
+    ) -> StepStats {
+        self.check(loads);
+        let stats = self.balancer.step_with(&StepInput { loads }, sink);
+        self.stats.absorb(&stats);
+        stats
+    }
+
+    /// Prime the policy's predictors / warm state with expected per-layer
+    /// loads (no schedule is produced). Shapes are checked like
+    /// [`MoeSession::step`]'s.
+    pub fn warm_hint(&mut self, expected: &[LoadMatrix]) {
+        self.check(expected);
+        self.balancer.warm_hint(expected);
+    }
+
+    fn check(&self, loads: &[LoadMatrix]) {
+        assert_eq!(loads.len(), self.layers, "one load matrix per layer");
+        for (l, lm) in loads.iter().enumerate() {
+            assert_eq!(lm.num_experts, self.experts, "layer {l}: expert count");
+            assert_eq!(lm.num_gpus, self.gpus, "layer {l}: gpu count");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Zipf};
+
+    fn topo() -> Topology {
+        Topology::new(8, 4, 2, 8)
+    }
+
+    fn zipf_lm(experts: usize, gpus: usize, per_gpu: u64, s: f64, seed: u64) -> LoadMatrix {
+        let mut rng = Rng::new(seed);
+        let z = Zipf::new(experts, s);
+        let mut lm = LoadMatrix::zeros(experts, gpus);
+        for g in 0..gpus {
+            for _ in 0..per_gpu {
+                lm.add(z.sample(&mut rng), g, 1);
+            }
+        }
+        lm
+    }
+
+    #[test]
+    fn every_registered_policy_builds_and_steps() {
+        for &name in registered_policies() {
+            let mut session = MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name(name)
+                .build()
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            for seed in 0..3 {
+                let lm = zipf_lm(16, 8, 600, 1.0, seed);
+                let total = lm.total();
+                let out = session.step(std::slice::from_ref(&lm));
+                assert_eq!(out.layers.len(), 1, "{name}");
+                assert!(
+                    out.layers[0].gpu_compute.iter().sum::<u64>() >= total,
+                    "{name} lost tokens"
+                );
+            }
+            assert_eq!(session.stats().steps, 3, "{name}");
+            assert_eq!(session.stats().layers, 3, "{name}");
+        }
+    }
+
+    #[test]
+    fn engine_modes_route_to_engine_balancer() {
+        for (mode, expect_engine) in [
+            (EngineMode::Barrier, false),
+            (EngineMode::pipeline(), true),
+            (EngineMode::speculative(), true),
+        ] {
+            let mut session = MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .engine(mode)
+                .layers(2)
+                .build()
+                .unwrap();
+            let loads = vec![zipf_lm(16, 8, 500, 0.8, 1), zipf_lm(16, 8, 500, 0.8, 2)];
+            let out = session.step(&loads);
+            assert_eq!(out.layers.len(), 2);
+            assert_eq!(session.engine_stats().is_some(), expect_engine, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_policy_is_rejected() {
+        let err = MoeSession::builder()
+            .topology(topo())
+            .experts(16)
+            .policy_name("nope")
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, SessionError::UnknownPolicy(..)), "{err}");
+    }
+
+    #[test]
+    fn inapplicable_knobs_are_rejected() {
+        // zero cadence would panic on the first modulo inside the policy
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name("smartmoe")
+                .replan_every(0)
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+        // engine modes only exist on the micromoe policy
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name("micromoe-ar")
+                .engine(EngineMode::speculative())
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+        // migration costing on a policy that never migrates
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name("vanilla-ep")
+                .migration_cost(crate::cluster::CostModel::h100_testbed(), 1 << 20)
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+        // a re-plan cadence on a policy with nothing to re-plan
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name("micromoe")
+                .replan_every(4)
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+        // periodic policies tick their cadence per plan call: multi-layer
+        // steps would distort it, so the builder refuses them
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name("flexmoe")
+                .layers(3)
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+        // a placement on a policy that derives its layout from the topology
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .placement(crate::placement::cayley::symmetric_placement(&topo(), 16))
+                .policy_name("vanilla-ep")
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+        // an explicit zero layer count
+        assert!(matches!(
+            MoeSession::builder().topology(topo()).experts(16).layers(0).build().unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+    }
+
+    #[test]
+    fn missing_inputs_are_rejected() {
+        assert!(matches!(
+            MoeSession::builder().experts(16).build().unwrap_err(),
+            SessionError::Missing(_)
+        ));
+        assert!(matches!(
+            MoeSession::builder().topology(topo()).build().unwrap_err(),
+            SessionError::Missing(_)
+        ));
+    }
+
+    #[test]
+    fn placement_supplies_experts_and_label_overrides_name() {
+        use crate::placement::cayley::symmetric_placement;
+        let t = topo();
+        let p = symmetric_placement(&t, 16);
+        let mut session = MoeSession::builder()
+            .topology(t)
+            .placement(p)
+            .label("my arm")
+            .build()
+            .unwrap();
+        assert_eq!(session.experts(), 16);
+        assert_eq!(session.name(), "my arm");
+        let lm = zipf_lm(16, 8, 400, 0.5, 9);
+        let out = session.step(std::slice::from_ref(&lm));
+        assert_eq!(out.layers[0].gpu_compute.iter().sum::<u64>(), lm.total());
+    }
+
+    #[test]
+    fn session_stats_accumulate_for_plan_based_policies() {
+        let mut session = MoeSession::builder()
+            .topology(topo())
+            .experts(16)
+            .policy_name("vanilla-ep")
+            .build()
+            .unwrap();
+        for seed in 0..4 {
+            session.step(std::slice::from_ref(&zipf_lm(16, 8, 300, 1.0, seed)));
+        }
+        let st = session.stats();
+        assert_eq!(st.steps, 4);
+        assert_eq!(st.layers, 4);
+        assert!(st.max_gpu_load > 0);
+        // static policy: no LP work
+        assert_eq!(st.lp_pivots, 0);
+    }
+}

@@ -6,8 +6,7 @@
 //! load, wasting compute and memory — which is why DeepSpeed collapses at
 //! 16/32 experts in Fig. 6 and is omitted from Fig. 8.
 
-use super::MoeSystem;
-use crate::cluster::sim::MoeLayerPlan;
+use crate::balancer::{step_layers, Balancer, MoeLayerPlan, StepInput, StepOutput};
 use crate::scheduler::{LoadMatrix, Route};
 use crate::topology::Topology;
 
@@ -30,12 +29,8 @@ impl DeepSpeedPad {
     }
 }
 
-impl MoeSystem for DeepSpeedPad {
-    fn name(&self) -> &'static str {
-        "DeepSpeed (capacity padding)"
-    }
-
-    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
+impl DeepSpeedPad {
+    fn plan_layer(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
         let mut plan = self.inner.plan(loads);
         // per EP group: pad every expert to the group's max expert load
         let experts_per_gpu = self.num_experts / self.topo.ep_degree;
@@ -73,6 +68,16 @@ impl MoeSystem for DeepSpeedPad {
         }
         plan.routes = pad_routes;
         plan
+    }
+}
+
+impl Balancer for DeepSpeedPad {
+    fn name(&self) -> &str {
+        "DeepSpeed (capacity padding)"
+    }
+
+    fn step(&mut self, input: &StepInput) -> StepOutput {
+        step_layers(input.loads, |lm| self.plan_layer(lm))
     }
 }
 

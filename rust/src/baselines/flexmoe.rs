@@ -7,8 +7,7 @@
 //! counts when the popularity EMA drifts, paying migration, and places
 //! replicas across the whole DP group like MicroMoE's asymmetric mode.
 
-use super::MoeSystem;
-use crate::cluster::sim::MoeLayerPlan;
+use crate::balancer::{step_layers, Balancer, MoeLayerPlan, StepInput, StepOutput};
 use crate::cluster::{migration, CostModel};
 use crate::placement::asymmetric::greedy_replica_counts;
 use crate::placement::{random::random_placement, Placement};
@@ -131,12 +130,8 @@ fn place_counts(
     Placement::from_replicas(num_gpus, replicas)
 }
 
-impl MoeSystem for FlexMoe {
-    fn name(&self) -> &'static str {
-        "FlexMoE (adaptive replicas)"
-    }
-
-    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
+impl FlexMoe {
+    fn plan_layer(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
         for e in 0..self.num_experts {
             self.ema[e].update(loads.expert_load(e) as f64);
         }
@@ -168,6 +163,16 @@ impl MoeSystem for FlexMoe {
             sched_overlapped: true,
             prep_extra,
         }
+    }
+}
+
+impl Balancer for FlexMoe {
+    fn name(&self) -> &str {
+        "FlexMoE (adaptive replicas)"
+    }
+
+    fn step(&mut self, input: &StepInput) -> StepOutput {
+        step_layers(input.loads, |lm| self.plan_layer(lm))
     }
 }
 

@@ -1,13 +1,16 @@
-//! MicroMoE — the paper's system as a [`MoeSystem`] plan producer.
+//! MicroMoE — the paper's system as a plan-producing
+//! [`crate::balancer::Balancer`] (the `"micromoe-ar"` registry policy).
 //!
 //! Composes the MicroEP LP scheduler (§5) with a placement (symmetric
 //! Cayley by default) and, optionally, adaptive replacement (§6.4). The
 //! `(w/o AR)` evaluation arm is this struct with `adaptive = None`;
-//! "MicroMoE (random)" is the random placement.
+//! "MicroMoE (random)" is the random placement. One internal scheduler is
+//! shared across a step's layers (adaptive replacement is a per-system,
+//! not per-layer, decision); for per-layer warm state use the
+//! `"micromoe"` policy ([`crate::balancer::LppBalancer`]).
 
-use super::MoeSystem;
 use crate::adaptive::{AdaptiveConfig, ReplacementManager};
-use crate::cluster::sim::MoeLayerPlan;
+use crate::balancer::{step_layers, Balancer, MoeLayerPlan, StepInput, StepOutput};
 use crate::cluster::{migration, CostModel};
 use crate::placement::Placement;
 use crate::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
@@ -61,17 +64,8 @@ impl MicroMoe {
     pub fn placement(&self) -> &Placement {
         &self.scheduler.placement
     }
-}
 
-impl MoeSystem for MicroMoe {
-    fn name(&self) -> &'static str {
-        self.name_override.unwrap_or(match self.adaptive {
-            Some(_) => "MicroMoE",
-            None => "MicroMoE (w/o AR)",
-        })
-    }
-
-    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
+    fn plan_layer(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
         let mut prep_extra = 0.0;
         if let Some(mgr) = &mut self.adaptive {
             mgr.observe(&loads.expert_loads());
@@ -106,6 +100,19 @@ impl MoeSystem for MicroMoe {
             sched_overlapped: self.overlap,
             prep_extra,
         }
+    }
+}
+
+impl Balancer for MicroMoe {
+    fn name(&self) -> &str {
+        self.name_override.unwrap_or(match self.adaptive {
+            Some(_) => "MicroMoE",
+            None => "MicroMoE (w/o AR)",
+        })
+    }
+
+    fn step(&mut self, input: &StepInput) -> StepOutput {
+        step_layers(input.loads, |lm| self.plan_layer(lm))
     }
 }
 

@@ -1,6 +1,9 @@
 //! Load-balancing systems under one interface: the paper's baselines
-//! (§7.1) plus MicroMoE itself, all planning against the same cluster
-//! model so Fig. 6/7/8 comparisons are apples-to-apples.
+//! (§7.1) plus MicroMoE itself, all implementing the unified
+//! [`crate::balancer::Balancer`] trait so Fig. 6/7/8 comparisons are
+//! apples-to-apples — one step loop, swappable policy (the former
+//! `MoeSystem` trait is folded into `Balancer`; the per-layer
+//! [`crate::balancer::Balancer::plan`] shorthand replaces its old method).
 //!
 //! * [`vanilla_ep::VanillaEp`] — Megatron-LM: fixed placement, tokens go to
 //!   their expert's replica inside the source GPU's EP group.
@@ -12,24 +15,15 @@
 //!   even load split across replicas, DP-group-wide.
 //! * [`micromoe::MicroMoe`] — MicroEP token scheduling (± adaptive
 //!   replacement), the paper's system.
+//!
+//! Each is registered by name in the [`crate::balancer::MoeSession`]
+//! policy registry; construct them there unless a test needs the struct.
 
 pub mod deepspeed;
 pub mod flexmoe;
 pub mod micromoe;
 pub mod smartmoe;
 pub mod vanilla_ep;
-
-use crate::cluster::sim::MoeLayerPlan;
-use crate::scheduler::LoadMatrix;
-
-/// A load-balancing system planning one MoE layer per micro-batch.
-pub trait MoeSystem {
-    /// Display name for tables and legends.
-    fn name(&self) -> &'static str;
-    /// Decide token→GPU assignment (and implied communication) for one
-    /// micro-batch of gate outputs.
-    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan;
-}
 
 pub use deepspeed::DeepSpeedPad;
 pub use flexmoe::FlexMoe;

@@ -8,8 +8,7 @@
 //! fluctuations, so SmartMoE sometimes loses even to vanilla Megatron once
 //! migration overhead is charged.
 
-use super::MoeSystem;
-use crate::cluster::sim::MoeLayerPlan;
+use crate::balancer::{step_layers, Balancer, MoeLayerPlan, StepInput, StepOutput};
 use crate::cluster::{migration, CostModel};
 use crate::scheduler::{LoadMatrix, Route};
 use crate::stats::Ema;
@@ -83,14 +82,8 @@ impl SmartMoe {
     fn home_gpu(&self, e: usize, src: usize) -> usize {
         self.topo.ep_group_of(src) * self.topo.ep_degree + self.rank_of[e]
     }
-}
 
-impl MoeSystem for SmartMoe {
-    fn name(&self) -> &'static str {
-        "SmartMoE (expert placement)"
-    }
-
-    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
+    fn plan_layer(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
         // update long-term statistics
         for e in 0..self.num_experts {
             self.ema[e].update(loads.expert_load(e) as f64);
@@ -144,6 +137,16 @@ impl MoeSystem for SmartMoe {
             sched_overlapped: true,
             prep_extra,
         }
+    }
+}
+
+impl Balancer for SmartMoe {
+    fn name(&self) -> &str {
+        "SmartMoE (expert placement)"
+    }
+
+    fn step(&mut self, input: &StepInput) -> StepOutput {
+        step_layers(input.loads, |lm| self.plan_layer(lm))
     }
 }
 

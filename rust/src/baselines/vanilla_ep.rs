@@ -5,8 +5,7 @@
 //! `g`'s own EP group. GPU load is therefore fully determined by the gate —
 //! no scheduling space, and the straggler bounds the layer (§2.3).
 
-use super::MoeSystem;
-use crate::cluster::sim::MoeLayerPlan;
+use crate::balancer::{step_layers, Balancer, MoeLayerPlan, StepInput, StepOutput};
 use crate::scheduler::{LoadMatrix, Route};
 use crate::topology::Topology;
 
@@ -30,14 +29,8 @@ impl VanillaEp {
         let rank = e / self.experts_per_gpu;
         self.topo.ep_group_of(src) * self.topo.ep_degree + rank
     }
-}
 
-impl MoeSystem for VanillaEp {
-    fn name(&self) -> &'static str {
-        "Megatron-LM (vanilla EP)"
-    }
-
-    fn plan(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
+    fn plan_layer(&mut self, loads: &LoadMatrix) -> MoeLayerPlan {
         let g_count = loads.num_gpus;
         let mut gpu_compute = vec![0u64; g_count];
         let mut routes = Vec::new();
@@ -59,6 +52,16 @@ impl MoeSystem for VanillaEp {
             sched_overlapped: true,
             prep_extra: 0.0,
         }
+    }
+}
+
+impl Balancer for VanillaEp {
+    fn name(&self) -> &str {
+        "Megatron-LM (vanilla EP)"
+    }
+
+    fn step(&mut self, input: &StepInput) -> StepOutput {
+        step_layers(input.loads, |lm| self.plan_layer(lm))
     }
 }
 

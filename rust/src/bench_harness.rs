@@ -1,12 +1,20 @@
-//! Mini-criterion: warmup + timed iterations + robust summary, and an
-//! aligned table printer for regenerating the paper's figures as text.
-//! (criterion is unavailable offline; `cargo bench` targets use
-//! `harness = false` and drive this module from `main`.)
+//! Mini-criterion: warmup + timed iterations + robust summary, an aligned
+//! table printer for regenerating the paper's figures as text, and the
+//! policy-session drivers the figure benches share (criterion is
+//! unavailable offline; `cargo bench` targets use `harness = false` and
+//! drive this module from `main`).
 
 use std::time::Instant;
 
+use crate::balancer::MoeSession;
+use crate::cluster::sim::{moe_layer_time, MoeLayerBreakdown};
+use crate::cluster::CostModel;
+use crate::placement::random::random_placement;
+use crate::rng::Rng;
+use crate::scheduler::LoadMatrix;
 use crate::ser::Json;
-use crate::stats::Summary;
+use crate::stats::{imbalance_ratio, Summary};
+use crate::topology::Topology;
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -130,6 +138,148 @@ impl Table {
     }
 }
 
+/// The six standard arms of the Fig.-6-style end-to-end comparisons
+/// (vanilla EP, DeepSpeed padding, SmartMoE(4), FlexMoE(4), MicroMoE,
+/// MicroMoE+AR(8)), built through the policy registry — shared by the
+/// fig6 bench and the cluster_sim example so the pair can't drift.
+/// `migration` charges the periodic policies' expert movements against a
+/// cost model (`bytes` copied per moved replica).
+pub fn fig6_policy_arms(
+    topo: &Topology,
+    experts: usize,
+    migration: Option<(&CostModel, u64)>,
+) -> Vec<MoeSession> {
+    // (policy name, re-plan cadence, charge migrations?)
+    let arms: [(&str, Option<usize>, bool); 6] = [
+        ("vanilla-ep", None, false),
+        ("deepspeed-pad", None, false),
+        ("smartmoe", Some(4), true),
+        ("flexmoe", Some(4), true),
+        ("micromoe", None, false),
+        ("micromoe-ar", Some(8), true),
+    ];
+    arms.iter()
+        .map(|&(name, replan, migrate)| {
+            let mut b = MoeSession::builder()
+                .topology(topo.clone())
+                .experts(experts)
+                .policy_name(name)
+                .seed(match name {
+                    "flexmoe" => 1,
+                    "micromoe-ar" => 11,
+                    _ => 0,
+                });
+            if let Some(every) = replan {
+                b = b.replan_every(every);
+            }
+            if migrate {
+                if let Some((model, bytes)) = migration {
+                    b = b.migration_cost(model.clone(), bytes);
+                }
+            }
+            b.build().expect("registered comparison arm")
+        })
+        .collect()
+}
+
+/// The Fig.-7 load stream at one skew: 32 experts × 8 GPUs × 2000
+/// tokens/GPU Zipf(s) micro-batches from a fixed seed — shared by the
+/// fig7 bench and the skew_sweep example so every arm (and both
+/// consumers) sees identical loads.
+pub fn fig7_zipf_stream(s: f64, batches: usize) -> Vec<LoadMatrix> {
+    let mut rng = Rng::new(1);
+    let zipf = crate::rng::Zipf::new(32, s);
+    (0..batches)
+        .map(|_| {
+            let mut lm = LoadMatrix::zeros(32, 8);
+            for g in 0..8 {
+                for _ in 0..2000 {
+                    lm.add(zipf.sample(&mut rng), g, 1);
+                }
+            }
+            lm
+        })
+        .collect()
+}
+
+/// The six Fig.-7 skew-sweep arms (vanilla EP, SmartMoE(8), FlexMoE(8),
+/// MicroMoE over a random placement, symmetric MicroMoE, MicroMoE+AR(4)),
+/// shared by the fig7 bench and the skew_sweep example.
+pub fn fig7_policy_arms(topo: &Topology, experts: usize) -> Vec<MoeSession> {
+    let session = |name: &str| {
+        MoeSession::builder().topology(topo.clone()).experts(experts).policy_name(name)
+    };
+    let mut rng = Rng::new(99);
+    let random = random_placement(topo.microep_group_size(), experts, topo.d, &mut rng);
+    vec![
+        session("vanilla-ep").build().expect("vanilla arm"),
+        session("smartmoe").replan_every(8).build().expect("smartmoe arm"),
+        session("flexmoe").seed(1).replan_every(8).build().expect("flexmoe arm"),
+        session("micromoe")
+            .placement(random)
+            .label("MicroMoE (random)")
+            .build()
+            .expect("random-placement arm"),
+        session("micromoe").build().expect("symmetric arm"),
+        session("micromoe-ar").seed(5).replan_every(4).build().expect("AR arm"),
+    ]
+}
+
+/// Mean max/avg GPU-load imbalance of a policy session over a stream of
+/// single-layer micro-batch steps, skipping the first `skip` batches
+/// (warmup / adaptation transient) — the Fig.-7-style metric every
+/// comparison bench reports.
+pub fn mean_imbalance(session: &mut MoeSession, batches: &[LoadMatrix], skip: usize) -> f64 {
+    assert!(batches.len() > skip, "need at least one measured batch");
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (i, lm) in batches.iter().enumerate() {
+        let out = session.step(std::slice::from_ref(lm));
+        if i >= skip {
+            acc += imbalance_ratio(
+                &out.layers[0].gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+            );
+            n += 1;
+        }
+    }
+    acc / n as f64
+}
+
+/// Mean Fig.-8 layer breakdown of a policy session over single-layer
+/// steps under a cost model. Migration charges (`prep_extra`) are pulled
+/// out of the per-layer breakdown and returned separately as a mean
+/// per-batch cost, since Fig.-6-style callers amortize them per iteration
+/// instead of per layer.
+pub fn mean_layer_breakdown(
+    session: &mut MoeSession,
+    batches: &[LoadMatrix],
+    model: &CostModel,
+    topo: &Topology,
+) -> (MoeLayerBreakdown, f64) {
+    assert!(!batches.is_empty());
+    let mut acc = MoeLayerBreakdown::default();
+    let mut migration = 0.0;
+    for lm in batches {
+        let mut out = session.step(std::slice::from_ref(lm));
+        let plan = &mut out.layers[0];
+        migration += plan.prep_extra;
+        plan.prep_extra = 0.0;
+        let bd = moe_layer_time(model, topo, plan);
+        acc.prep += bd.prep;
+        acc.dispatch += bd.dispatch;
+        acc.compute += bd.compute;
+        acc.combine += bd.combine;
+    }
+    let n = batches.len() as f64;
+    let mean = MoeLayerBreakdown {
+        prep: acc.prep / n,
+        dispatch: acc.dispatch / n,
+        compute: acc.compute / n,
+        combine: acc.combine / n,
+    };
+    (mean, migration / n)
+}
+
 /// Format an a-vs-b ratio as a speedup cell (`"2.13x"`); `"-"` when the
 /// denominator is degenerate. Used by the per-(pricing × factorization)
 /// solver tables, where a missing baseline cell must not poison the row.
@@ -205,6 +355,51 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["only one".into()]);
+    }
+
+    #[test]
+    fn policy_arm_helpers_build_the_standard_tables() {
+        let topo = Topology::new(8, 4, 2, 8);
+        assert_eq!(fig6_policy_arms(&topo, 32, None).len(), 6);
+        let arms = fig7_policy_arms(&topo, 32);
+        assert_eq!(arms.len(), 6);
+        assert_eq!(arms[3].name(), "MicroMoE (random)");
+        assert_eq!(arms[5].name(), "MicroMoE");
+    }
+
+    #[test]
+    fn policy_session_drivers_measure_policies() {
+        use crate::rng::{Rng, Zipf};
+        let topo = Topology::new(8, 4, 2, 8);
+        let mut rng = Rng::new(3);
+        let z = Zipf::new(16, 1.2);
+        let batches: Vec<LoadMatrix> = (0..4)
+            .map(|_| {
+                let mut lm = LoadMatrix::zeros(16, 8);
+                for g in 0..8 {
+                    for _ in 0..300 {
+                        lm.add(z.sample(&mut rng), g, 1);
+                    }
+                }
+                lm
+            })
+            .collect();
+        let session = |name: &str| {
+            MoeSession::builder()
+                .topology(topo.clone())
+                .experts(16)
+                .policy_name(name)
+                .build()
+                .unwrap()
+        };
+        let vi = mean_imbalance(&mut session("vanilla-ep"), &batches, 1);
+        let mi = mean_imbalance(&mut session("micromoe"), &batches, 1);
+        assert!(mi <= vi + 1e-9, "micromoe {mi} vs vanilla {vi}");
+        let model = CostModel::h100_testbed();
+        let (mean, migration) =
+            mean_layer_breakdown(&mut session("micromoe"), &batches, &model, &topo);
+        assert!(mean.compute > 0.0 && mean.total().is_finite());
+        assert_eq!(migration, 0.0, "micromoe never migrates");
     }
 
     #[test]

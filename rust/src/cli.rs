@@ -1,7 +1,12 @@
 //! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
-//! positional args, with typed accessors and usage errors.
+//! positional args, with typed accessors, usage errors, and the
+//! [`Args::policy_spec`] bridge that turns `--policy`/`--engine` flags
+//! into a [`PolicySpec`] for the [`crate::balancer::MoeSession`] registry.
 
 use std::collections::HashMap;
+
+use crate::config::PolicySpec;
+use crate::engine::{EngineMode, ForecastConfig};
 
 /// Parsed command line: `--key value` / `--key=value` options, bare
 /// `--flag`s, and positional arguments.
@@ -72,6 +77,59 @@ impl Args {
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
+
+    /// Build a [`PolicySpec`] from the standard policy flags:
+    /// `--policy <name>` (registry name, default `micromoe`),
+    /// `--engine barrier|pipeline|speculative` with optional `--workers N`
+    /// / `--inflight N`, `--policy-seed N`, and `--replan-every N`.
+    pub fn policy_spec(&self) -> Result<PolicySpec, String> {
+        let parse_count = |key: &str| -> Result<usize, String> {
+            match self.str(key) {
+                Some(v) => v.parse().map_err(|_| format!("--{key}: bad count '{v}'")),
+                None => Ok(0),
+            }
+        };
+        let mut spec = PolicySpec::default();
+        if let Some(name) = self.str("policy") {
+            spec.name = name.to_string();
+        }
+        if let Some(seed) = self.str("policy-seed") {
+            spec.seed = seed.parse().map_err(|_| format!("--policy-seed: bad seed '{seed}'"))?;
+        }
+        if let Some(every) = self.str("replan-every") {
+            spec.replan_every =
+                Some(every.parse().map_err(|_| format!("--replan-every: bad count '{every}'"))?);
+        }
+        let sized = self.str("workers").is_some() || self.str("inflight").is_some();
+        if let Some(engine) = self.str("engine") {
+            let workers = parse_count("workers")?;
+            let inflight = parse_count("inflight")?;
+            spec.options.engine = match engine {
+                "barrier" if sized => {
+                    return Err(
+                        "--workers/--inflight only apply to --engine pipeline|speculative".into()
+                    )
+                }
+                "barrier" => EngineMode::Barrier,
+                "pipeline" => EngineMode::Pipeline { workers, inflight },
+                "speculative" => EngineMode::Speculative {
+                    workers,
+                    inflight,
+                    forecast: ForecastConfig::default(),
+                },
+                other => {
+                    return Err(format!(
+                        "--engine: unknown mode '{other}' (barrier|pipeline|speculative)"
+                    ))
+                }
+            };
+        } else if sized {
+            return Err(
+                "--workers/--inflight require --engine pipeline|speculative".into(),
+            );
+        }
+        Ok(spec)
+    }
 }
 
 #[cfg(test)]
@@ -119,5 +177,53 @@ mod tests {
         let a = parse("--a --b value");
         assert!(a.flag("a"));
         assert_eq!(a.str("b"), Some("value"));
+    }
+
+    #[test]
+    fn policy_spec_defaults_to_micromoe() {
+        let spec = parse("").policy_spec().unwrap();
+        assert_eq!(spec, PolicySpec::default());
+        assert_eq!(spec.name, "micromoe");
+    }
+
+    #[test]
+    fn policy_spec_parses_engine_flags() {
+        let spec = parse("--policy micromoe --engine speculative --workers 2 --inflight 3")
+            .policy_spec()
+            .unwrap();
+        assert!(matches!(
+            spec.options.engine,
+            EngineMode::Speculative { workers: 2, inflight: 3, .. }
+        ));
+        let spec = parse("--engine barrier").policy_spec().unwrap();
+        assert_eq!(spec.options.engine, EngineMode::Barrier);
+    }
+
+    #[test]
+    fn policy_spec_parses_policy_knobs() {
+        let spec = parse("--policy flexmoe --policy-seed 7 --replan-every 4")
+            .policy_spec()
+            .unwrap();
+        assert_eq!(spec.name, "flexmoe");
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.replan_every, Some(4));
+    }
+
+    #[test]
+    fn policy_spec_rejects_bad_engine() {
+        assert!(parse("--engine warp").policy_spec().is_err());
+        assert!(parse("--replan-every soon").policy_spec().is_err());
+    }
+
+    #[test]
+    fn policy_spec_rejects_orphan_sizing_flags() {
+        // --workers/--inflight would be silently ignored without an engine
+        assert!(parse("--workers 4").policy_spec().is_err());
+        assert!(parse("--inflight 2").policy_spec().is_err());
+        assert!(parse("--engine barrier --workers 4").policy_spec().is_err());
+        assert!(parse("--engine pipeline --workers 4").policy_spec().is_ok());
+        // unparseable counts/seeds error instead of falling back to defaults
+        assert!(parse("--engine pipeline --workers sixteen").policy_spec().is_err());
+        assert!(parse("--policy-seed abc").policy_spec().is_err());
     }
 }

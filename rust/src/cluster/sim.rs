@@ -6,30 +6,13 @@
 //! time with pipeline-parallel bubbles and gradient sync (Fig. 6).
 
 use super::CostModel;
-use crate::engine::ScheduleEngine;
+use crate::balancer::MoeSession;
 use crate::placement::Placement;
-use crate::scheduler::{
-    schedule_layers_parallel, LoadMatrix, MicroEpScheduler, Route, Schedule, SchedulerOptions,
-};
+use crate::scheduler::{LoadMatrix, SchedulerOptions};
 use crate::stats::EngineStats;
 use crate::topology::Topology;
 
-/// What a load-balancing system decided for one MoE layer of one
-/// micro-batch (produced by [`crate::baselines::MoeSystem::plan`]).
-#[derive(Clone, Debug)]
-pub struct MoeLayerPlan {
-    /// tokens to compute per GPU (FFN input rows, already top-K expanded)
-    pub gpu_compute: Vec<u64>,
-    /// token movements (src != dst entries cost communication)
-    pub routes: Vec<Route>,
-    /// CPU scheduling time for this micro-batch (s); 0 for static systems
-    pub sched_time: f64,
-    /// whether scheduling hides under the permute op (§5.4)
-    pub sched_overlapped: bool,
-    /// extra prep charged to this layer (backend pre-processing,
-    /// amortized migration, padding setup …)
-    pub prep_extra: f64,
-}
+pub use crate::balancer::MoeLayerPlan;
 
 /// Fig.-8 execution-time breakdown of one MoE layer (seconds).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -82,59 +65,31 @@ pub fn moe_layer_time(
     MoeLayerBreakdown { prep, dispatch, compute, combine }
 }
 
-/// How a [`MultiLayerSim`] executes its per-layer solves.
-enum SimBackend {
-    /// Per-round scoped-thread fan-out ([`schedule_layers_parallel`]) —
-    /// the PR-1 path, kept selectable for ablation.
-    Barrier(Vec<MicroEpScheduler>),
-    /// Persistent pipelined engine ([`ScheduleEngine`]): no per-round
-    /// spawns, layer ℓ−1's dispatch timing overlaps layer ℓ's solve, and
-    /// (in speculative mode) forecast-driven pre-solves between steps.
-    Engine(ScheduleEngine),
-}
-
-/// Multi-layer MoE timing: one independent [`MicroEpScheduler`] per layer
-/// (each owns its own warm-start basis, exactly like the per-layer solver
-/// replicas a real deployment keeps). On a training pipeline every layer's
-/// gate output is available once the previous forward finishes, so the
-/// solves are embarrassingly parallel — this is the wall-clock win that
-/// keeps scheduling off the critical path even when a stage holds many
-/// MoE layers. [`SchedulerOptions::engine`] selects the execution backend:
-/// the round-barrier fan-out (default) or the persistent
-/// [`ScheduleEngine`] (pipelined / speculative).
+/// Multi-layer MoE timing over the unified policy API: a
+/// [`MoeSession`] owns one warm scheduler per layer (exactly like the
+/// per-layer solver replicas a real deployment keeps) and the sim times
+/// every emitted plan under the cost model. On a training pipeline every
+/// layer's gate output is available once the previous forward finishes, so
+/// the solves are embarrassingly parallel — this is the wall-clock win
+/// that keeps scheduling off the critical path even when a stage holds
+/// many MoE layers. [`SchedulerOptions::engine`] selects the execution
+/// backend of the default `micromoe` policy: the round-barrier fan-out
+/// (default) or the persistent engine (pipelined / speculative); arbitrary
+/// policies plug in through [`MultiLayerSim::with_session`].
 pub struct MultiLayerSim {
     /// Cluster cost model used to time each layer.
     pub model: CostModel,
     /// Topology (node boundaries for the all-to-all model).
     pub topo: Topology,
-    placement: Placement,
-    backend: SimBackend,
-    layers: usize,
+    session: MoeSession,
     /// §5.4: scheduling overlaps the token-permute op
     pub overlap: bool,
 }
 
-/// Time one layer's schedule under the cost model.
-fn time_one(
-    model: &CostModel,
-    topo: &Topology,
-    placement: &Placement,
-    overlap: bool,
-    s: Schedule,
-) -> MoeLayerBreakdown {
-    let plan = MoeLayerPlan {
-        gpu_compute: s.gpu_loads(placement),
-        routes: s.routes,
-        sched_time: s.stats.solve_ns as f64 * 1e-9,
-        sched_overlapped: overlap,
-        prep_extra: 0.0,
-    };
-    moe_layer_time(model, topo, &plan)
-}
-
 impl MultiLayerSim {
-    /// `layers` independent schedulers over one shared placement, executed
-    /// by the backend `opts.engine` selects.
+    /// `layers` independent per-layer schedulers over one shared placement
+    /// (the `micromoe` policy), executed by the backend `opts.engine`
+    /// selects.
     pub fn new(
         model: CostModel,
         topo: Topology,
@@ -142,61 +97,50 @@ impl MultiLayerSim {
         opts: SchedulerOptions,
         layers: usize,
     ) -> Self {
-        assert!(layers > 0);
-        let backend = if opts.engine.is_barrier() {
-            SimBackend::Barrier(
-                (0..layers)
-                    .map(|_| {
-                        MicroEpScheduler::new(placement.clone(), Some(topo.clone()), opts.clone())
-                    })
-                    .collect(),
-            )
-        } else {
-            SimBackend::Engine(ScheduleEngine::new(
-                placement.clone(),
-                Some(topo.clone()),
-                opts,
-                layers,
-            ))
-        };
-        MultiLayerSim { model, topo, placement, backend, layers, overlap: true }
+        let session = MoeSession::builder()
+            .topology(topo.clone())
+            .placement(placement)
+            .options(opts)
+            .layers(layers)
+            .build()
+            .expect("sim session over an explicit placement");
+        MultiLayerSim::with_session(model, topo, session)
+    }
+
+    /// Time an arbitrary policy session under this cost model.
+    pub fn with_session(model: CostModel, topo: Topology, session: MoeSession) -> Self {
+        MultiLayerSim { model, topo, session, overlap: true }
     }
 
     /// Number of MoE layers simulated.
     pub fn layers(&self) -> usize {
-        self.layers
+        self.session.layers()
     }
 
-    /// Engine counters (hit/miss/pivot meters) when the engine backend is
-    /// active; `None` on the barrier path.
+    /// The policy session driving the per-layer solves.
+    pub fn session(&self) -> &MoeSession {
+        &self.session
+    }
+
+    /// Engine counters (hit/miss/pivot meters) when the session's policy
+    /// runs the persistent engine; `None` on the barrier path.
     pub fn engine_stats(&self) -> Option<EngineStats> {
-        match &self.backend {
-            SimBackend::Engine(e) => Some(e.stats()),
-            SimBackend::Barrier(_) => None,
-        }
+        self.session.engine_stats()
     }
 
     /// Schedule one micro-batch for every layer and time each layer under
     /// the cost model. `loads[l]` is layer `l`'s `input_e^g`. On the
-    /// engine backend each layer's timing is computed as its schedule is
+    /// engine backend each layer's timing is computed as its plan is
     /// emitted, while later layers are still solving in the pool.
     pub fn step(&mut self, loads: &[LoadMatrix]) -> Vec<MoeLayerBreakdown> {
-        assert_eq!(loads.len(), self.layers, "one load matrix per layer");
-        let MultiLayerSim { model, topo, placement, backend, overlap, .. } = self;
-        let (model, topo, placement, overlap) = (&*model, &*topo, &*placement, *overlap);
-        match backend {
-            SimBackend::Barrier(scheds) => schedule_layers_parallel(scheds, loads)
-                .into_iter()
-                .map(|s| time_one(model, topo, placement, overlap, s))
-                .collect(),
-            SimBackend::Engine(engine) => {
-                let mut out = Vec::with_capacity(loads.len());
-                engine.schedule_step_with(loads, |_, s| {
-                    out.push(time_one(model, topo, placement, overlap, s));
-                });
-                out
-            }
-        }
+        let MultiLayerSim { model, topo, session, overlap } = self;
+        let (model, topo, overlap) = (&*model, &*topo, *overlap);
+        let mut out = Vec::with_capacity(loads.len());
+        session.step_with(loads, &mut |_, mut plan| {
+            plan.sched_overlapped = overlap;
+            out.push(moe_layer_time(model, topo, &plan));
+        });
+        out
     }
 }
 
@@ -260,6 +204,7 @@ impl TrainIterationModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scheduler::{MicroEpScheduler, Route};
 
     fn flat_plan(per_gpu: u64, g: usize) -> MoeLayerPlan {
         MoeLayerPlan {

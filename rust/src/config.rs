@@ -1,8 +1,14 @@
-//! Model/experiment configuration: Table-2 presets and a small
-//! `key = value` config-file parser (no serde/toml crates offline).
+//! Model/experiment configuration: Table-2 presets, a small `key = value`
+//! config-file parser (no serde/toml crates offline), and the
+//! JSON-loadable [`PolicySpec`] the [`crate::balancer::MoeSession`]
+//! registry resolves — benches and the CLI select policies by name string.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
+use crate::engine::{EngineMode, ForecastConfig};
+use crate::lp::{FactorKind, Pricing, SolverKind};
+use crate::scheduler::{ScheduleMode, SchedulerOptions};
+use crate::ser::Json;
 use crate::topology::Topology;
 
 /// One row of Table 2 (model hyperparameters used in §7.2 / Fig. 6/10).
@@ -107,6 +113,324 @@ pub fn table2() -> Vec<ModelPreset> {
 /// Look up a Table-2 preset by (case-insensitive) name.
 pub fn preset(name: &str) -> Option<ModelPreset> {
     table2().into_iter().find(|p| p.name.eq_ignore_ascii_case(name))
+}
+
+/// Which load-balancing policy a [`crate::balancer::MoeSession`] runs,
+/// selected by registry name
+/// ([`crate::balancer::registered_policies`]) with its knobs — the
+/// JSON-round-trippable unit benches and the CLI configure policies with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolicySpec {
+    /// Registry name (`"micromoe"`, `"micromoe-ar"`, `"vanilla-ep"`,
+    /// `"deepspeed-pad"`, `"smartmoe"`, `"flexmoe"`).
+    pub name: String,
+    /// Scheduler options (mode, warm start, solver, engine) — consumed by
+    /// the LP-backed policies.
+    pub options: SchedulerOptions,
+    /// RNG seed for stochastic policies (FlexMoE placement, AR search).
+    pub seed: u64,
+    /// Re-plan cadence in micro-batches for the periodic policies
+    /// (SmartMoE / FlexMoE / adaptive replacement); `None` = policy default.
+    pub replan_every: Option<usize>,
+}
+
+impl Default for PolicySpec {
+    fn default() -> Self {
+        PolicySpec {
+            name: "micromoe".to_string(),
+            options: SchedulerOptions::default(),
+            seed: 0,
+            replan_every: None,
+        }
+    }
+}
+
+impl PolicySpec {
+    /// Serialize to the JSON object [`PolicySpec::from_json`] accepts.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("policy", Json::Str(self.name.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("options", scheduler_options_to_json(&self.options)),
+        ];
+        if let Some(every) = self.replan_every {
+            pairs.push(("replan_every", Json::Num(every as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse from JSON, rejecting unknown fields. Only `"policy"` is
+    /// required; everything else defaults.
+    pub fn from_json(j: &Json) -> Result<PolicySpec, String> {
+        let m = as_obj(j, "policy spec")?;
+        for key in m.keys() {
+            if !matches!(key.as_str(), "policy" | "seed" | "replan_every" | "options") {
+                return Err(format!("policy spec: unknown field '{key}'"));
+            }
+        }
+        let name = m
+            .get("policy")
+            .ok_or("policy spec: missing 'policy'")?
+            .as_str()
+            .ok_or("policy spec: 'policy' must be a string")?
+            .to_string();
+        let seed = match m.get("seed") {
+            Some(v) => uint_field(v, "seed")?,
+            None => 0,
+        };
+        let replan_every = match m.get("replan_every") {
+            Some(v) => Some(uint_field(v, "replan_every")? as usize),
+            None => None,
+        };
+        let options = match m.get("options") {
+            Some(v) => scheduler_options_from_json(v)?,
+            None => SchedulerOptions::default(),
+        };
+        Ok(PolicySpec { name, options, seed, replan_every })
+    }
+
+    /// Parse a complete JSON document ([`PolicySpec::from_json`]).
+    pub fn parse(text: &str) -> Result<PolicySpec, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        PolicySpec::from_json(&j)
+    }
+}
+
+fn as_obj<'a>(j: &'a Json, what: &str) -> Result<&'a BTreeMap<String, Json>, String> {
+    match j {
+        Json::Obj(m) => Ok(m),
+        _ => Err(format!("{what}: expected a JSON object")),
+    }
+}
+
+fn get_bool(m: &BTreeMap<String, Json>, key: &str, default: bool) -> Result<bool, String> {
+    match m.get(key) {
+        Some(v) => v.as_bool().ok_or_else(|| format!("'{key}' must be a bool")),
+        None => Ok(default),
+    }
+}
+
+/// Strict non-negative integer: fractions and negatives are rejected, not
+/// silently truncated, and values past 2^53 are rejected because the JSON
+/// substrate carries numbers as f64 (they would round-trip corrupted).
+fn uint_field(v: &Json, key: &str) -> Result<u64, String> {
+    let x = v.as_f64().ok_or_else(|| format!("'{key}' must be a number"))?;
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(format!("'{key}' must be a non-negative integer, got {x}"));
+    }
+    if x > (1u64 << 53) as f64 {
+        return Err(format!("'{key}' exceeds 2^53 and cannot round-trip through JSON"));
+    }
+    Ok(x as u64)
+}
+
+fn get_usize(m: &BTreeMap<String, Json>, key: &str, default: usize) -> Result<usize, String> {
+    match m.get(key) {
+        Some(v) => uint_field(v, key).map(|x| x as usize),
+        None => Ok(default),
+    }
+}
+
+fn req_f64(m: &BTreeMap<String, Json>, key: &str) -> Result<f64, String> {
+    m.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing or non-numeric '{key}'"))
+}
+
+fn get_f64(m: &BTreeMap<String, Json>, key: &str, default: f64) -> Result<f64, String> {
+    match m.get(key) {
+        Some(v) => v.as_f64().ok_or_else(|| format!("'{key}' must be a number")),
+        None => Ok(default),
+    }
+}
+
+/// Serialize [`SchedulerOptions`] to the JSON object
+/// [`scheduler_options_from_json`] accepts. Mode-, solver-, and
+/// engine-dependent fields are emitted only when applicable, mirroring the
+/// parser's rejection of inapplicable fields.
+pub fn scheduler_options_to_json(o: &SchedulerOptions) -> Json {
+    let mut pairs: Vec<(&str, Json)> = Vec::new();
+    match o.mode {
+        ScheduleMode::Compute => pairs.push(("mode", Json::Str("compute".into()))),
+        ScheduleMode::CommAware { alpha } => {
+            pairs.push(("mode", Json::Str("comm-aware".into())));
+            pairs.push(("alpha", Json::Num(alpha)));
+        }
+        ScheduleMode::TopoAware { alpha1, alpha2 } => {
+            pairs.push(("mode", Json::Str("topo-aware".into())));
+            pairs.push(("alpha1", Json::Num(alpha1)));
+            pairs.push(("alpha2", Json::Num(alpha2)));
+        }
+    }
+    pairs.push(("warm_start", Json::Bool(o.warm_start)));
+    pairs.push(("locality_aware", Json::Bool(o.locality_aware)));
+    pairs.push(("topo_aware_routing", Json::Bool(o.topo_aware_routing)));
+    match o.solver {
+        SolverKind::Revised { pricing, factor } => {
+            pairs.push(("solver", Json::Str("revised".into())));
+            pairs.push((
+                "pricing",
+                Json::Str(match pricing {
+                    Pricing::Dantzig => "dantzig".into(),
+                    Pricing::Devex => "devex".into(),
+                }),
+            ));
+            pairs.push((
+                "factor",
+                Json::Str(match factor {
+                    FactorKind::Auto => "auto".into(),
+                    FactorKind::DenseInverse => "dense-inverse".into(),
+                    FactorKind::SparseLu => "sparse-lu".into(),
+                }),
+            ));
+        }
+        SolverKind::DenseTableau => pairs.push(("solver", Json::Str("dense-tableau".into()))),
+    }
+    match o.engine {
+        EngineMode::Barrier => pairs.push(("engine", Json::Str("barrier".into()))),
+        EngineMode::Pipeline { workers, inflight } => {
+            pairs.push(("engine", Json::Str("pipeline".into())));
+            pairs.push(("workers", Json::Num(workers as f64)));
+            pairs.push(("inflight", Json::Num(inflight as f64)));
+        }
+        EngineMode::Speculative { workers, inflight, forecast } => {
+            pairs.push(("engine", Json::Str("speculative".into())));
+            pairs.push(("workers", Json::Num(workers as f64)));
+            pairs.push(("inflight", Json::Num(inflight as f64)));
+            pairs.push((
+                "forecast",
+                Json::obj(vec![
+                    ("ema_alpha", Json::Num(forecast.ema_alpha)),
+                    ("window", Json::Num(forecast.window as f64)),
+                    ("blend", Json::Num(forecast.blend)),
+                    ("drift_threshold", Json::Num(forecast.drift_threshold)),
+                    ("min_history", Json::Num(forecast.min_history as f64)),
+                ]),
+            ));
+        }
+    }
+    Json::obj(pairs)
+}
+
+fn forecast_from_json(j: &Json) -> Result<ForecastConfig, String> {
+    let m = as_obj(j, "forecast")?;
+    for key in m.keys() {
+        if !matches!(
+            key.as_str(),
+            "ema_alpha" | "window" | "blend" | "drift_threshold" | "min_history"
+        ) {
+            return Err(format!("forecast: unknown field '{key}'"));
+        }
+    }
+    let d = ForecastConfig::default();
+    Ok(ForecastConfig {
+        ema_alpha: get_f64(m, "ema_alpha", d.ema_alpha)?,
+        window: get_usize(m, "window", d.window)?,
+        blend: get_f64(m, "blend", d.blend)?,
+        drift_threshold: get_f64(m, "drift_threshold", d.drift_threshold)?,
+        min_history: get_usize(m, "min_history", d.min_history)?,
+    })
+}
+
+/// Parse [`SchedulerOptions`] from JSON. Unknown fields are rejected, and
+/// so are fields inapplicable to the selected mode/solver/engine (e.g.
+/// `alpha` with `"mode": "compute"`, `pricing` with the dense tableau) —
+/// nothing silently fails to round-trip.
+pub fn scheduler_options_from_json(j: &Json) -> Result<SchedulerOptions, String> {
+    let m = as_obj(j, "options")?;
+    let mode_name = match m.get("mode") {
+        Some(v) => v.as_str().ok_or("options: 'mode' must be a string")?,
+        None => "compute",
+    };
+    let solver_name = match m.get("solver") {
+        Some(v) => v.as_str().ok_or("options: 'solver' must be a string")?,
+        None => "revised",
+    };
+    let engine_name = match m.get("engine") {
+        Some(v) => v.as_str().ok_or("options: 'engine' must be a string")?,
+        None => "barrier",
+    };
+
+    let mut allowed: Vec<&str> = vec![
+        "mode",
+        "warm_start",
+        "locality_aware",
+        "topo_aware_routing",
+        "solver",
+        "engine",
+    ];
+    match mode_name {
+        "comm-aware" => allowed.push("alpha"),
+        "topo-aware" => allowed.extend(["alpha1", "alpha2"]),
+        _ => {}
+    }
+    if solver_name == "revised" {
+        allowed.extend(["pricing", "factor"]);
+    }
+    match engine_name {
+        "pipeline" => allowed.extend(["workers", "inflight"]),
+        "speculative" => allowed.extend(["workers", "inflight", "forecast"]),
+        _ => {}
+    }
+    for key in m.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(format!(
+                "options: unknown or inapplicable field '{key}' (mode {mode_name}, \
+                 solver {solver_name}, engine {engine_name})"
+            ));
+        }
+    }
+
+    let mode = match mode_name {
+        "compute" => ScheduleMode::Compute,
+        "comm-aware" => ScheduleMode::CommAware { alpha: req_f64(m, "alpha")? },
+        "topo-aware" => {
+            ScheduleMode::TopoAware { alpha1: req_f64(m, "alpha1")?, alpha2: req_f64(m, "alpha2")? }
+        }
+        other => return Err(format!("options: unknown mode '{other}'")),
+    };
+    let solver = match solver_name {
+        "revised" => {
+            let pricing = match m.get("pricing").map(|v| v.as_str()) {
+                None => Pricing::default(),
+                Some(Some("devex")) => Pricing::Devex,
+                Some(Some("dantzig")) => Pricing::Dantzig,
+                Some(other) => return Err(format!("options: bad pricing {other:?}")),
+            };
+            let factor = match m.get("factor").map(|v| v.as_str()) {
+                None => FactorKind::default(),
+                Some(Some("auto")) => FactorKind::Auto,
+                Some(Some("dense-inverse")) => FactorKind::DenseInverse,
+                Some(Some("sparse-lu")) => FactorKind::SparseLu,
+                Some(other) => return Err(format!("options: bad factor {other:?}")),
+            };
+            SolverKind::Revised { pricing, factor }
+        }
+        "dense-tableau" => SolverKind::DenseTableau,
+        other => return Err(format!("options: unknown solver '{other}'")),
+    };
+    let engine = match engine_name {
+        "barrier" => EngineMode::Barrier,
+        "pipeline" => EngineMode::Pipeline {
+            workers: get_usize(m, "workers", 0)?,
+            inflight: get_usize(m, "inflight", 0)?,
+        },
+        "speculative" => EngineMode::Speculative {
+            workers: get_usize(m, "workers", 0)?,
+            inflight: get_usize(m, "inflight", 0)?,
+            forecast: match m.get("forecast") {
+                Some(v) => forecast_from_json(v)?,
+                None => ForecastConfig::default(),
+            },
+        },
+        other => return Err(format!("options: unknown engine '{other}'")),
+    };
+    Ok(SchedulerOptions {
+        mode,
+        warm_start: get_bool(m, "warm_start", true)?,
+        locality_aware: get_bool(m, "locality_aware", true)?,
+        topo_aware_routing: get_bool(m, "topo_aware_routing", false)?,
+        solver,
+        engine,
+    })
 }
 
 /// Minimal `key = value` config file: `#` comments, blank lines, string /
@@ -225,5 +549,137 @@ mod tests {
     #[test]
     fn config_rejects_garbage() {
         assert!(ConfigFile::parse("not a kv line").is_err());
+    }
+
+    fn roundtrip_opts(o: &SchedulerOptions) -> SchedulerOptions {
+        let j = scheduler_options_to_json(o);
+        // through text too, so formatting quirks can't hide
+        let j2 = Json::parse(&j.to_string_pretty()).unwrap();
+        scheduler_options_from_json(&j2).unwrap()
+    }
+
+    #[test]
+    fn scheduler_options_default_roundtrip() {
+        let o = SchedulerOptions::default();
+        assert_eq!(roundtrip_opts(&o), o);
+        // and an empty object parses to the default (default-equivalence)
+        let from_empty = scheduler_options_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(from_empty, o);
+    }
+
+    #[test]
+    fn scheduler_options_every_variant_roundtrips() {
+        let variants = vec![
+            SchedulerOptions {
+                mode: ScheduleMode::CommAware { alpha: 0.25 },
+                warm_start: false,
+                ..Default::default()
+            },
+            SchedulerOptions {
+                mode: ScheduleMode::TopoAware { alpha1: 0.1, alpha2: 1.5 },
+                topo_aware_routing: true,
+                locality_aware: false,
+                ..Default::default()
+            },
+            SchedulerOptions { solver: SolverKind::DenseTableau, ..Default::default() },
+            SchedulerOptions {
+                solver: SolverKind::Revised {
+                    pricing: Pricing::Dantzig,
+                    factor: FactorKind::SparseLu,
+                },
+                ..Default::default()
+            },
+            SchedulerOptions {
+                engine: EngineMode::Pipeline { workers: 4, inflight: 3 },
+                ..Default::default()
+            },
+            SchedulerOptions {
+                engine: EngineMode::Speculative {
+                    workers: 2,
+                    inflight: 0,
+                    forecast: ForecastConfig {
+                        ema_alpha: 0.125,
+                        window: 6,
+                        blend: 0.75,
+                        drift_threshold: 0.375,
+                        min_history: 3,
+                    },
+                },
+                ..Default::default()
+            },
+        ];
+        for o in variants {
+            assert_eq!(roundtrip_opts(&o), o, "{o:?}");
+        }
+    }
+
+    #[test]
+    fn scheduler_options_reject_unknown_and_inapplicable_fields() {
+        for bad in [
+            r#"{"bogus": 1}"#,
+            // alpha only exists in comm-aware mode
+            r#"{"mode": "compute", "alpha": 0.5}"#,
+            // pricing only exists on the revised solver
+            r#"{"solver": "dense-tableau", "pricing": "devex"}"#,
+            // workers only exist on the engine modes
+            r#"{"engine": "barrier", "workers": 4}"#,
+            // forecast only exists in speculative mode
+            r#"{"engine": "pipeline", "forecast": {}}"#,
+            r#"{"engine": "speculative", "forecast": {"bogus": 1}}"#,
+            r#"{"mode": "warp"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(scheduler_options_from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn policy_spec_roundtrips() {
+        let specs = vec![
+            PolicySpec::default(),
+            PolicySpec {
+                name: "flexmoe".into(),
+                seed: 7,
+                replan_every: Some(4),
+                ..Default::default()
+            },
+            PolicySpec {
+                name: "micromoe".into(),
+                options: SchedulerOptions {
+                    engine: EngineMode::speculative(),
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        ];
+        for spec in specs {
+            let parsed = PolicySpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+            assert_eq!(parsed, spec, "{spec:?}");
+        }
+    }
+
+    #[test]
+    fn integer_fields_reject_fractions_and_negatives() {
+        for bad in [
+            r#"{"policy": "flexmoe", "replan_every": 0.5}"#,
+            r#"{"policy": "flexmoe", "seed": -1}"#,
+            r#"{"policy": "micromoe", "options": {"engine": "pipeline", "workers": 1.5}}"#,
+            r#"{"policy": "micromoe", "options": {"engine": "pipeline", "workers": -2}}"#,
+            // past 2^53 an f64-carried integer silently loses precision
+            r#"{"policy": "flexmoe", "seed": 11400714819323198485}"#,
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn policy_spec_rejects_unknown_fields_and_requires_name() {
+        assert!(PolicySpec::parse(r#"{"policy": "micromoe", "bogus": 1}"#).is_err());
+        assert!(PolicySpec::parse(r#"{"seed": 3}"#).is_err());
+        // name alone is enough; everything else defaults
+        let spec = PolicySpec::parse(r#"{"policy": "vanilla-ep"}"#).unwrap();
+        assert_eq!(spec.name, "vanilla-ep");
+        assert_eq!(spec.options, SchedulerOptions::default());
+        assert_eq!(spec.replan_every, None);
     }
 }

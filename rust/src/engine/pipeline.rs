@@ -129,6 +129,22 @@ impl ScheduleEngine {
         self.stats
     }
 
+    /// Prime every layer's warm basis by submitting speculative pre-solves
+    /// on the given expected loads (`expected[l]` for layer `l`). No
+    /// schedule is returned; the pool's results are metered as
+    /// off-critical-path pre-solve work when they drain during later
+    /// steps. Unlike the automatic speculation loop this never registers a
+    /// pending forecast, so it cannot produce hits or misses — it only
+    /// moves each layer's warm-start state toward the expected optimum.
+    /// Works in pipeline mode too, where it is the only source of
+    /// speculative jobs.
+    pub fn prime(&mut self, expected: &[LoadMatrix]) {
+        assert_eq!(expected.len(), self.layers, "one expected load matrix per layer");
+        for (l, lm) in expected.iter().enumerate() {
+            self.pool.submit_speculate(l, Arc::new(lm.clone()));
+        }
+    }
+
     /// Schedule one micro-batch for every layer; `loads[l]` is layer `l`'s
     /// `input_e^g`. Returns schedules in layer order.
     pub fn schedule_step(&mut self, loads: &[LoadMatrix]) -> Vec<Schedule> {

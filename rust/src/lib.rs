@@ -10,6 +10,11 @@
 //!   placement theory ([`placement`]), adaptive replacement ([`adaptive`]),
 //!   plus every substrate the paper depends on (LP solver [`lp`], cluster
 //!   model [`cluster`], baselines [`baselines`], workloads [`workload`]).
+//!   The public surface is the step-driven [`balancer::Balancer`] trait and
+//!   the [`balancer::MoeSession`] facade, which run every policy —
+//!   MicroMoE's LPP scheduling (barrier / pipelined / speculative engine)
+//!   and all baselines — through one loop, selected by name via
+//!   [`config::PolicySpec`].
 //! * **Layer 2/1 (python/, build-time only)** — JAX GPT-MoE train step and
 //!   Pallas grouped-FFN kernels, AOT-lowered to `artifacts/*.hlo.txt` and
 //!   executed from rust through PJRT ([`runtime`]).
@@ -19,6 +24,7 @@
 #![warn(missing_docs)]
 
 pub mod adaptive;
+pub mod balancer;
 pub mod baselines;
 pub mod bench_harness;
 pub mod cli;

@@ -20,7 +20,9 @@ fn main() -> Result<()> {
                  usage: micromoe <command> [--opts]\n\
                  commands:\n\
                  \x20 info                     show artifact manifest + platform\n\
-                 \x20 train [--steps N]        run the e2e PJRT trainer\n\
+                 \x20 train [--steps N] [--engine barrier|pipeline|speculative]\n\
+                 \x20                          run the e2e PJRT trainer (MicroEP\n\
+                 \x20                          scheduling via the MoeSession facade)\n\
                  \x20 calibrate                fit cost-model constants from PJRT timings\n\
                  figure regenerators: cargo bench (one target per paper figure)\n\
                  examples: cargo run --release --example quickstart",
@@ -70,8 +72,26 @@ fn info(_args: &Args) -> Result<()> {
 fn train(args: &Args) -> Result<()> {
     let steps = args.usize_or("steps", 64);
     let seed = args.u64_or("seed", 0);
+    let spec = args.policy_spec().map_err(|e| anyhow::anyhow!(e))?;
+    if spec.name != "micromoe" {
+        anyhow::bail!(
+            "`train` always schedules with the micromoe policy; `--policy {}` would be \
+             ignored (use --engine to pick barrier|pipeline|speculative)",
+            spec.name
+        );
+    }
+    if spec.replan_every.is_some() || args.str("policy-seed").is_some() {
+        anyhow::bail!(
+            "`train` only consumes --engine/--workers/--inflight; \
+             --replan-every/--policy-seed have no effect on it"
+        );
+    }
     let rt = micromoe::runtime::Runtime::load_default()?;
     let mut trainer = micromoe::train::Trainer::new(rt, seed)?;
+    if args.str("engine").is_some() {
+        // default stays the trainer's pipelined engine; --engine overrides
+        trainer.engine_mode = spec.options.engine;
+    }
     let log = trainer.run(steps, args.usize_or("log-every", 8))?;
     let first = log.losses.first().copied().unwrap_or(f32::NAN);
     let last = log.losses.last().copied().unwrap_or(f32::NAN);

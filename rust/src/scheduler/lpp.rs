@@ -501,7 +501,8 @@ mod tests {
     fn replica_loads_conserve_expert_totals() {
         let p = ring4();
         let lm = uniform_inputs(&[13, 7, 22, 5], 4);
-        let sched = crate::scheduler::schedule_once(&p, &lm);
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let sched = s.schedule(&lm);
         for e in 0..4 {
             let sum: u64 = sched.replica_loads[e].iter().sum();
             assert_eq!(sum, lm.expert_load(e), "expert {e}");
@@ -643,7 +644,8 @@ mod tests {
     fn empty_batch_is_fine() {
         let p = ring4();
         let lm = LoadMatrix::zeros(4, 4);
-        let sched = crate::scheduler::schedule_once(&p, &lm);
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let sched = s.schedule(&lm);
         assert_eq!(sched.gpu_loads(&p), vec![0, 0, 0, 0]);
         assert!(sched.routes.is_empty());
     }

@@ -22,7 +22,6 @@ pub mod rounding;
 pub mod routing;
 
 use crate::placement::Placement;
-use crate::topology::Topology;
 
 /// `input_e^g` — token counts per (expert, source GPU), expert-major.
 #[derive(Clone, Debug, PartialEq)]
@@ -188,7 +187,7 @@ pub enum ScheduleMode {
 }
 
 /// Scheduler options (each maps to a Fig. 11 ablation arm).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerOptions {
     /// Objective (LPP-1 / LPP-4 / topology-aware).
     pub mode: ScheduleMode,
@@ -264,21 +263,6 @@ pub fn schedule_layers_parallel(
         }
     });
     out.into_iter().map(|s| s.expect("scheduler thread completed")).collect()
-}
-
-/// Convenience: schedule one micro-batch with default options.
-pub fn schedule_once(placement: &Placement, loads: &LoadMatrix) -> Schedule {
-    let mut s = MicroEpScheduler::new(placement.clone(), None, SchedulerOptions::default());
-    s.schedule(loads)
-}
-
-/// Convenience: scheduler bound to a topology (for topo-aware modes).
-pub fn scheduler_with_topology(
-    placement: Placement,
-    topo: Topology,
-    opts: SchedulerOptions,
-) -> MicroEpScheduler {
-    MicroEpScheduler::new(placement, Some(topo), opts)
 }
 
 #[cfg(test)]

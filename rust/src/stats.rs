@@ -232,6 +232,85 @@ impl EngineStats {
     }
 }
 
+/// Unified per-step scheduling diagnostics reported by every
+/// [`crate::balancer::Balancer`] in its
+/// [`crate::balancer::StepOutput`]. Static systems (vanilla EP, padding)
+/// leave the LP counters at zero; LP-backed policies fill them from the
+/// per-layer [`crate::scheduler::ScheduleStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepStats {
+    /// Layer plans produced this step.
+    pub layers: usize,
+    /// Layers whose solve took the warm-start path.
+    pub warm_layers: usize,
+    /// Simplex pivots spent across the step's layers.
+    pub lp_pivots: u64,
+    /// Dual-simplex pivots alone (the warm-repair work).
+    pub lp_dual_pivots: u64,
+    /// Nonbasic bound flips across the step's layers.
+    pub lp_bound_flips: u64,
+    /// Basis refactorizations across the step's layers.
+    pub lp_refactors: u64,
+    /// Total scheduling wall time (LP + routing) across layers, seconds.
+    pub sched_seconds: f64,
+    /// Extra prep charged by the policy (migrations, padding setup), seconds.
+    pub prep_seconds: f64,
+    /// Max per-GPU compute load over all of the step's layers, tokens.
+    pub max_gpu_load: u64,
+}
+
+/// Cumulative counters over a [`crate::balancer::Balancer`]'s lifetime
+/// (what [`crate::balancer::MoeSession::stats`] accumulates for any
+/// policy, and LP-backed policies also keep internally).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BalancerStats {
+    /// Multi-layer steps executed.
+    pub steps: u64,
+    /// Layer plans produced in total.
+    pub layers: u64,
+    /// Layers whose solve took the warm-start path.
+    pub warm_layers: u64,
+    /// Simplex pivots spent in total.
+    pub lp_pivots: u64,
+    /// Dual-simplex pivots alone.
+    pub lp_dual_pivots: u64,
+    /// Nonbasic bound flips in total.
+    pub lp_bound_flips: u64,
+    /// Basis refactorizations in total.
+    pub lp_refactors: u64,
+    /// Total scheduling wall time, seconds.
+    pub sched_seconds: f64,
+    /// Total extra prep charged by the policy, seconds.
+    pub prep_seconds: f64,
+    /// Max per-GPU compute load ever observed, tokens.
+    pub max_gpu_load: u64,
+}
+
+impl BalancerStats {
+    /// Fold one step's diagnostics into the cumulative counters.
+    pub fn absorb(&mut self, step: &StepStats) {
+        self.steps += 1;
+        self.layers += step.layers as u64;
+        self.warm_layers += step.warm_layers as u64;
+        self.lp_pivots += step.lp_pivots;
+        self.lp_dual_pivots += step.lp_dual_pivots;
+        self.lp_bound_flips += step.lp_bound_flips;
+        self.lp_refactors += step.lp_refactors;
+        self.sched_seconds += step.sched_seconds;
+        self.prep_seconds += step.prep_seconds;
+        self.max_gpu_load = self.max_gpu_load.max(step.max_gpu_load);
+    }
+
+    /// Mean scheduling seconds per executed step (0 before the first).
+    pub fn sched_seconds_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.sched_seconds / self.steps as f64
+        }
+    }
+}
+
 /// max/avg imbalance of a load vector (Fig. 7's y-axis).
 pub fn imbalance_ratio(loads: &[f64]) -> f64 {
     let max = loads.iter().cloned().fold(f64::MIN, f64::max);
@@ -316,6 +395,29 @@ mod tests {
         let empty = EngineStats::default();
         assert_eq!(empty.hit_rate(), 0.0);
         assert_eq!(empty.repair_pivots_per_hit(), 0.0);
+    }
+
+    #[test]
+    fn balancer_stats_absorb_accumulates() {
+        let mut b = BalancerStats::default();
+        let s1 = StepStats {
+            layers: 4,
+            warm_layers: 3,
+            lp_pivots: 10,
+            sched_seconds: 0.5,
+            max_gpu_load: 100,
+            ..Default::default()
+        };
+        let s2 = StepStats { layers: 4, lp_pivots: 2, max_gpu_load: 80, ..Default::default() };
+        b.absorb(&s1);
+        b.absorb(&s2);
+        assert_eq!(b.steps, 2);
+        assert_eq!(b.layers, 8);
+        assert_eq!(b.warm_layers, 3);
+        assert_eq!(b.lp_pivots, 12);
+        assert_eq!(b.max_gpu_load, 100);
+        assert!((b.sched_seconds_per_step() - 0.25).abs() < 1e-12);
+        assert_eq!(BalancerStats::default().sched_seconds_per_step(), 0.0);
     }
 
     #[test]

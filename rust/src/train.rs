@@ -13,11 +13,12 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::engine::{EngineMode, ScheduleEngine};
+use crate::balancer::{Balancer, MoeSession};
+use crate::engine::EngineMode;
 use crate::placement::cayley::symmetric_placement;
 use crate::rng::Rng;
 use crate::runtime::{lit, Runtime};
-use crate::scheduler::{LoadMatrix, SchedulerOptions};
+use crate::scheduler::LoadMatrix;
 use crate::stats::imbalance_ratio;
 use crate::topology::Topology;
 use crate::workload::TraceWorkload;
@@ -96,6 +97,11 @@ pub struct Trainer {
     step_ctr: xla::Literal,
     corpus: Corpus,
     pub dp_virtual: usize,
+    /// How the per-DP-round multi-layer scheduling executes through the
+    /// session facade: pipelined engine by default; `--engine speculative`
+    /// adds forecast-driven pre-solves between rounds, `--engine barrier`
+    /// keeps the round-barrier fan-out for ablation.
+    pub engine_mode: EngineMode,
 }
 
 impl Trainer {
@@ -133,6 +139,7 @@ impl Trainer {
             step_ctr: lit::f32_scalar(0.0),
             corpus,
             dp_virtual: 8,
+            engine_mode: EngineMode::pipeline(),
         })
     }
 
@@ -179,18 +186,19 @@ impl Trainer {
     pub fn run(&mut self, steps: usize, log_every: usize) -> Result<TrainLog> {
         let topo = Topology::new(self.dp_virtual, (self.dp_virtual / 2).max(1), 2, 8);
         let placement = symmetric_placement(&topo, self.experts);
-        // one scheduler per MoE layer, owned by the persistent engine pool:
-        // warm-start state is per-layer (the gate distributions of
-        // different layers are unrelated), the per-layer solves are
-        // independent, and the pipelined engine emits each layer's
-        // schedule while the remaining layers still solve — no per-round
-        // thread spawns
-        let mut engine = ScheduleEngine::new(
-            placement.clone(),
-            Some(topo.clone()),
-            SchedulerOptions { engine: EngineMode::pipeline(), ..Default::default() },
-            self.layers,
-        );
+        // the unified facade owns one warm scheduler per MoE layer (the
+        // gate distributions of different layers are unrelated) plus, for
+        // the engine modes, the persistent worker pool and forecasters:
+        // the pipelined engine emits each layer's plan while the remaining
+        // layers still solve, and the speculative mode pre-solves the next
+        // round's forecast between rounds — no per-round thread spawns
+        let mut session = MoeSession::builder()
+            .topology(topo.clone())
+            .placement(placement)
+            .engine(self.engine_mode)
+            .layers(self.layers)
+            .build()
+            .map_err(|e| anyhow!("scheduling session: {e}"))?;
         let mut vanilla = crate::baselines::VanillaEp::new(topo.clone(), self.experts);
 
         let mut log_out = TrainLog::default();
@@ -209,16 +217,20 @@ impl Trainer {
             }
             if g == self.dp_virtual - 1 {
                 // schedule the completed DP round on real loads, all layers
-                // at once (pipelined through the engine's worker pool)
-                let schedules = engine.schedule_step(&rounds);
-                let micro_imb = schedules
+                // at once (pipelined through the session's worker pool)
+                let out = session.step(&rounds);
+                let micro_imb = out
+                    .layers
                     .iter()
-                    .map(|m| m.imbalance(&placement))
+                    .map(|p| {
+                        imbalance_ratio(
+                            &p.gpu_compute.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+                        )
+                    })
                     .sum::<f64>()
-                    / schedules.len() as f64;
+                    / out.layers.len() as f64;
                 // baseline over the same per-layer workloads, so the
                 // (vanilla, MicroEP) pair measures identical loads
-                use crate::baselines::MoeSystem;
                 let van_imb = rounds
                     .iter()
                     .map(|round| {

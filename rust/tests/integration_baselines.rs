@@ -3,7 +3,8 @@
 //! (who wins, in what order, and by roughly what kind of factor).
 
 use micromoe::adaptive::AdaptiveConfig;
-use micromoe::baselines::{DeepSpeedPad, FlexMoe, MicroMoe, MoeSystem, SmartMoe, VanillaEp};
+use micromoe::balancer::Balancer;
+use micromoe::baselines::{DeepSpeedPad, FlexMoe, MicroMoe, SmartMoe, VanillaEp};
 use micromoe::cluster::sim::{moe_layer_time, TrainIterationModel};
 use micromoe::cluster::CostModel;
 use micromoe::placement::cayley::symmetric_placement;
@@ -32,7 +33,7 @@ fn workload(batches: usize, s: f64, seed: u64) -> Vec<LoadMatrix> {
         .collect()
 }
 
-fn mean_imbalance(sys: &mut dyn MoeSystem, batches: &[LoadMatrix], skip: usize) -> f64 {
+fn mean_imbalance(sys: &mut dyn Balancer, batches: &[LoadMatrix], skip: usize) -> f64 {
     let mut acc = 0.0;
     let mut n = 0usize;
     for (i, lm) in batches.iter().enumerate() {
@@ -112,7 +113,7 @@ fn fig6_throughput_relationship() {
     let model = CostModel::h100_testbed().for_hidden_size(2048);
     let iter_model = TrainIterationModel::paper_default(2, 24, 16);
 
-    let bench = |sys: &mut dyn MoeSystem| -> f64 {
+    let bench = |sys: &mut dyn Balancer| -> f64 {
         let mut total = 0.0;
         for lm in &batches {
             let plan = sys.plan(lm);
@@ -209,7 +210,7 @@ fn adaptive_beats_static_on_drifting_skew() {
 fn no_system_loses_tokens() {
     let t = topo();
     let batches = workload(6, 1.4, 11);
-    let mut systems: Vec<Box<dyn MoeSystem>> = vec![
+    let mut systems: Vec<Box<dyn Balancer>> = vec![
         Box::new(VanillaEp::new(t.clone(), 32)),
         Box::new(SmartMoe::new(t.clone(), 32)),
         Box::new(FlexMoe::new(t.clone(), 32, 2)),

@@ -2,7 +2,8 @@
 //! times, backends, and migration compose into the paper's qualitative
 //! behaviours.
 
-use micromoe::baselines::{MicroMoe, MoeSystem, VanillaEp};
+use micromoe::balancer::Balancer;
+use micromoe::baselines::{MicroMoe, VanillaEp};
 use micromoe::cluster::sim::{moe_layer_time, TrainIterationModel};
 use micromoe::cluster::{CommBackend, CostModel};
 use micromoe::moe::PipelinedMicroEp;

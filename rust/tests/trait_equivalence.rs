@@ -1,0 +1,243 @@
+//! Trait-equivalence suite: every `Balancer` impl reachable through the
+//! `MoeSession` registry must produce bit-identical schedules to its
+//! pre-refactor direct entry point on golden Zipf traces —
+//!
+//! * the five plan-based systems vs direct struct construction + per-batch
+//!   planning (the old `MoeSystem::plan` loop),
+//! * the `micromoe` Barrier policy vs per-layer `MicroEpScheduler`s driven
+//!   through `schedule_layers_parallel`,
+//! * the engine-backed policy vs a directly constructed `ScheduleEngine`
+//!   at 1 / 2 / 8 workers (and vs the sequential per-layer loop),
+//! * the speculative policy deterministic across worker counts through
+//!   the facade.
+
+use micromoe::adaptive::AdaptiveConfig;
+use micromoe::balancer::{Balancer, MoeLayerPlan, MoeSession};
+use micromoe::baselines::{DeepSpeedPad, FlexMoe, MicroMoe, SmartMoe, VanillaEp};
+use micromoe::engine::{EngineMode, ScheduleEngine};
+use micromoe::placement::cayley::symmetric_placement;
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::{
+    schedule_layers_parallel, LoadMatrix, MicroEpScheduler, SchedulerOptions,
+};
+use micromoe::topology::Topology;
+
+fn topo() -> Topology {
+    Topology::new(8, 4, 2, 8)
+}
+
+/// Golden trace: fixed-seed Zipf streams (what every assertion replays).
+fn golden_trace(
+    experts: usize,
+    gpus: usize,
+    per_gpu: u64,
+    s: f64,
+    batches: usize,
+) -> Vec<LoadMatrix> {
+    let mut rng = Rng::new(0xE0_17);
+    let z = Zipf::new(experts, s);
+    (0..batches)
+        .map(|_| {
+            let mut lm = LoadMatrix::zeros(experts, gpus);
+            for g in 0..gpus {
+                for _ in 0..per_gpu {
+                    lm.add(z.sample(&mut rng), g, 1);
+                }
+            }
+            lm
+        })
+        .collect()
+}
+
+/// The bit-identity check: compute loads, routes, and migration charges
+/// must match exactly (solve wall time is measured, so it is excluded).
+fn assert_plan_eq(a: &MoeLayerPlan, b: &MoeLayerPlan, what: &str) {
+    assert_eq!(a.gpu_compute, b.gpu_compute, "{what}: gpu_compute");
+    assert_eq!(a.routes, b.routes, "{what}: routes");
+    assert_eq!(a.prep_extra, b.prep_extra, "{what}: prep_extra");
+    assert_eq!(a.sched_overlapped, b.sched_overlapped, "{what}: overlap flag");
+}
+
+fn session(name: &str, seed: u64, replan: Option<usize>) -> MoeSession {
+    let mut b = MoeSession::builder().topology(topo()).experts(16).policy_name(name).seed(seed);
+    if let Some(every) = replan {
+        b = b.replan_every(every);
+    }
+    b.build().unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+/// Each plan-based system through the registry vs its direct pre-refactor
+/// construction, batch by batch on the same golden trace.
+#[test]
+fn plan_based_policies_match_direct_construction() {
+    let trace = golden_trace(16, 8, 1500, 1.1, 24);
+    let t = topo();
+    let directs: Vec<(&str, u64, Option<usize>, Box<dyn Balancer>)> = vec![
+        ("vanilla-ep", 0, None, Box::new(VanillaEp::new(t.clone(), 16))),
+        ("deepspeed-pad", 0, None, Box::new(DeepSpeedPad::new(t.clone(), 16))),
+        ("smartmoe", 0, Some(8), {
+            let mut s = SmartMoe::new(t.clone(), 16);
+            s.replace_every = 8;
+            Box::new(s)
+        }),
+        ("flexmoe", 7, Some(8), {
+            let mut f = FlexMoe::new(t.clone(), 16, 7);
+            f.adjust_every = 8;
+            Box::new(f)
+        }),
+        ("micromoe-ar", 5, Some(4), {
+            Box::new(
+                MicroMoe::new(t.clone(), symmetric_placement(&t, 16), SchedulerOptions::default())
+                    .with_adaptive(
+                        AdaptiveConfig {
+                            check_every: 4,
+                            window: 8,
+                            slots_per_gpu: t.slots_per_gpu(16).max(2),
+                            ..Default::default()
+                        },
+                        5,
+                    ),
+            )
+        }),
+    ];
+    for (name, seed, replan, mut direct) in directs {
+        let mut via_registry = session(name, seed, replan);
+        for (i, lm) in trace.iter().enumerate() {
+            let got = via_registry.step(std::slice::from_ref(lm));
+            let want = direct.plan(lm);
+            assert_plan_eq(&got.layers[0], &want, &format!("{name} batch {i}"));
+        }
+    }
+}
+
+/// `micromoe` (Barrier) through the facade vs per-layer schedulers driven
+/// through the pre-refactor `schedule_layers_parallel` fan-out.
+#[test]
+fn micromoe_barrier_matches_schedule_layers_parallel() {
+    let t = topo();
+    let p = symmetric_placement(&t, 16);
+    let layers = 6usize;
+    let mut via_facade = MoeSession::builder()
+        .topology(t.clone())
+        .placement(p.clone())
+        .policy_name("micromoe")
+        .layers(layers)
+        .build()
+        .unwrap();
+    let mut direct: Vec<MicroEpScheduler> = (0..layers)
+        .map(|_| MicroEpScheduler::new(p.clone(), Some(t.clone()), SchedulerOptions::default()))
+        .collect();
+    for round in 0..4usize {
+        let mut loads = golden_trace(16, 8, 1200, 0.9, layers);
+        for (l, lm) in loads.iter_mut().enumerate() {
+            // perturb per (round, layer) so warm-start history matters
+            lm.add((round + l) % 16, l % 8, 17 * (round as u64 + 1));
+        }
+        let out = via_facade.step(&loads);
+        let want = schedule_layers_parallel(&mut direct, &loads);
+        for (l, (plan, sched)) in out.layers.iter().zip(&want).enumerate() {
+            assert_eq!(plan.routes, sched.routes, "round {round} layer {l}");
+            assert_eq!(plan.gpu_compute, sched.gpu_loads(&p), "round {round} layer {l}");
+        }
+    }
+}
+
+/// The engine-backed policy through the facade vs a directly constructed
+/// `ScheduleEngine` — and vs the plain sequential per-layer loop — at
+/// 1 / 2 / 8 workers, on the same golden trace.
+#[test]
+fn micromoe_pipeline_matches_direct_engine_across_worker_counts() {
+    let t = topo();
+    let p = symmetric_placement(&t, 16);
+    let layers = 4usize;
+    for workers in [1usize, 2, 8] {
+        let mode = EngineMode::Pipeline { workers, inflight: 2 };
+        let mut via_facade = MoeSession::builder()
+            .topology(t.clone())
+            .placement(p.clone())
+            .policy_name("micromoe")
+            .engine(mode)
+            .layers(layers)
+            .build()
+            .unwrap();
+        let mut direct = ScheduleEngine::new(
+            p.clone(),
+            Some(t.clone()),
+            SchedulerOptions { engine: mode, ..Default::default() },
+            layers,
+        );
+        let mut fresh_sequential: Vec<MicroEpScheduler> = (0..layers)
+            .map(|_| {
+                MicroEpScheduler::new(p.clone(), Some(t.clone()), SchedulerOptions::default())
+            })
+            .collect();
+        for round in 0..3usize {
+            let mut loads = golden_trace(16, 8, 1400, 0.9, layers);
+            for (l, lm) in loads.iter_mut().enumerate() {
+                // perturb per (round, layer) so warm-start history matters
+                lm.add((round + l) % 16, l % 8, 23 * (round as u64 + 1));
+            }
+            let out = via_facade.step(&loads);
+            let want = direct.schedule_step(&loads);
+            for (l, (plan, sched)) in out.layers.iter().zip(&want).enumerate() {
+                assert_eq!(plan.routes, sched.routes, "workers {workers} layer {l}");
+                assert_eq!(plan.gpu_compute, sched.gpu_loads(&p), "workers {workers} layer {l}");
+            }
+            // and both equal the plain sequential per-layer loop
+            for (l, (plan, (s, lm))) in
+                out.layers.iter().zip(fresh_sequential.iter_mut().zip(&loads)).enumerate()
+            {
+                let seq = s.schedule(lm);
+                assert_eq!(plan.routes, seq.routes, "workers {workers} layer {l} (sequential)");
+            }
+        }
+    }
+}
+
+/// The speculative policy is deterministic across worker counts through
+/// the facade: identical schedules and identical hit/miss counters.
+#[test]
+fn micromoe_speculative_deterministic_across_worker_counts_via_facade() {
+    let t = topo();
+    let p = symmetric_placement(&t, 16);
+    let layers = 3usize;
+    let mut sessions: Vec<MoeSession> = [1usize, 2, 8]
+        .into_iter()
+        .map(|workers| {
+            let mode = match EngineMode::speculative() {
+                EngineMode::Speculative { forecast, .. } => {
+                    EngineMode::Speculative { workers, inflight: 2, forecast }
+                }
+                _ => unreachable!(),
+            };
+            MoeSession::builder()
+                .topology(t.clone())
+                .placement(p.clone())
+                .policy_name("micromoe")
+                .engine(mode)
+                .layers(layers)
+                .build()
+                .unwrap()
+        })
+        .collect();
+    for round in 0..6usize {
+        // mildly drifting: autocorrelated enough that speculation is judged
+        let mut loads = golden_trace(16, 8, 1800, 0.8, layers);
+        for (l, lm) in loads.iter_mut().enumerate() {
+            lm.add((round / 3 + l) % 16, 0, 40);
+        }
+        let (first, rest) = sessions.split_first_mut().unwrap();
+        let reference = first.step(&loads);
+        for session in rest {
+            let got = session.step(&loads);
+            for (l, (a, b)) in got.layers.iter().zip(&reference.layers).enumerate() {
+                assert_plan_eq(a, b, &format!("round {round} layer {l}"));
+            }
+        }
+    }
+    let st0 = sessions[0].engine_stats().unwrap();
+    assert!(st0.spec_issued > 0, "speculation never engaged: {st0:?}");
+    for session in &sessions[1..] {
+        assert_eq!(session.engine_stats().unwrap(), st0, "counters diverged across workers");
+    }
+}
