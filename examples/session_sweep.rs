@@ -59,7 +59,7 @@ fn main() {
             "Session sweep: all registered policies ({GPUS} GPUs, {EXPERTS} experts, \
              drifting Zipf s=1.0, {steps} steps)"
         ),
-        &["policy", "mean imb", "sched/step", "LP pivots", "hit rate"],
+        &["policy", "mean imb", "sched/step", "LP pivots", "hit rate", "rungs w/c/g/p"],
     );
     let mut json = Vec::new();
     for (label, spec) in arms {
@@ -80,12 +80,17 @@ fn main() {
         let mean_imb = imb_acc / trace.len() as f64;
         let st = session.stats();
         let hit_rate = session.engine_stats().map(|e| e.hit_rate());
+        // degradation-rung counts (warm/cold LP, greedy, passthrough):
+        // anything right of the LP columns is a silent-fallback red flag
+        // the CI sweep watches for
+        let deg = st.degradation;
         table.row(vec![
             label.clone(),
             format!("{mean_imb:.3}"),
             fmt_time(st.sched_seconds_per_step()),
             st.lp_pivots.to_string(),
             hit_rate.map_or("-".to_string(), |h| format!("{:.0}%", h * 100.0)),
+            format!("{}/{}/{}/{}", deg.warm_lp, deg.cold_lp, deg.greedy, deg.passthrough),
         ]);
         json.push(Json::obj(vec![
             ("policy", Json::Str(label)),
@@ -98,6 +103,11 @@ fn main() {
             ("lp_pivots", Json::Num(st.lp_pivots as f64)),
             ("warm_layers", Json::Num(st.warm_layers as f64)),
             ("spec_hit_rate", hit_rate.map_or(Json::Null, Json::Num)),
+            ("rung_warm_lp", Json::Num(deg.warm_lp as f64)),
+            ("rung_cold_lp", Json::Num(deg.cold_lp as f64)),
+            ("rung_greedy", Json::Num(deg.greedy as f64)),
+            ("rung_passthrough", Json::Num(deg.passthrough as f64)),
+            ("lp_rate", Json::Num(deg.lp_rate())),
         ]));
     }
     table.print();

@@ -185,6 +185,7 @@ pub(crate) fn fold_schedule(stats: &mut StepStats, s: &ScheduleStats) {
     if s.warm {
         stats.warm_layers += 1;
     }
+    stats.degradation.record(s.rung, s.budget_exhausted, s.fallback_excess);
 }
 
 /// Lower a [`Schedule`] into the plan the cluster model consumes.

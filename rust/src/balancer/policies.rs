@@ -17,10 +17,12 @@
 use super::{
     fold_plan, fold_schedule, schedule_to_plan, Balancer, MoeLayerPlan, StepInput, StepOutput,
 };
-use crate::engine::ScheduleEngine;
+use crate::engine::{EngineError, ScheduleEngine};
 use crate::placement::Placement;
-use crate::scheduler::{schedule_layers_parallel, LoadMatrix, MicroEpScheduler, SchedulerOptions};
-use crate::stats::{BalancerStats, EngineStats, StepStats};
+use crate::scheduler::{
+    schedule_layers_parallel, LoadMatrix, MicroEpScheduler, Route, SchedulerOptions,
+};
+use crate::stats::{BalancerStats, DegradationRung, EngineStats, StepStats};
 use crate::topology::Topology;
 
 /// The MicroMoE LPP scheduler as a multi-layer [`Balancer`]: per-layer
@@ -104,16 +106,17 @@ pub struct EngineBalancer {
 
 impl EngineBalancer {
     /// Engine over a shared placement; `opts.engine` must be `Pipeline` or
-    /// `Speculative` (the barrier mode belongs to [`LppBalancer`]).
+    /// `Speculative` (the barrier mode belongs to [`LppBalancer`] and
+    /// yields [`EngineError::BarrierMode`]).
     pub fn new(
         placement: Placement,
         topo: Option<Topology>,
         opts: SchedulerOptions,
         layers: usize,
         overlap: bool,
-    ) -> Self {
-        let engine = ScheduleEngine::new(placement.clone(), topo, opts, layers);
-        EngineBalancer { engine, placement, overlap, stats: BalancerStats::default() }
+    ) -> Result<Self, EngineError> {
+        let engine = ScheduleEngine::new(placement.clone(), topo, opts, layers)?;
+        Ok(EngineBalancer { engine, placement, overlap, stats: BalancerStats::default() })
     }
 
     /// MoE layers scheduled per step.
@@ -150,12 +153,29 @@ impl Balancer for EngineBalancer {
         let EngineBalancer { engine, placement, overlap, .. } = self;
         let overlap = *overlap;
         let mut stats = StepStats::default();
-        engine.schedule_step_with(input.loads, |l, s| {
+        let mut emitted = vec![false; input.loads.len()];
+        let result = engine.schedule_step_with(input.loads, |l, s| {
+            emitted[l] = true;
             fold_schedule(&mut stats, &s.stats);
             let plan = schedule_to_plan(s, placement, overlap);
             fold_plan(&mut stats, &plan);
             sink(l, plan);
         });
+        if let Err(e) = result {
+            // The ladder's last rung: the engine is past recovery (respawn
+            // limit), but the step must still cover every layer — emit
+            // vanilla-EP passthrough plans for whatever was not scheduled.
+            log::error!("scheduling engine failed ({e}); passthrough for the remaining layers");
+            for (l, lm) in input.loads.iter().enumerate() {
+                if emitted[l] {
+                    continue;
+                }
+                let plan = passthrough_plan(placement, lm, overlap);
+                stats.degradation.record(DegradationRung::Passthrough, None, 0.0);
+                fold_plan(&mut stats, &plan);
+                sink(l, plan);
+            }
+        }
         self.stats.absorb(&stats);
         stats
     }
@@ -170,6 +190,33 @@ impl Balancer for EngineBalancer {
 
     fn engine_stats(&self) -> Option<EngineStats> {
         Some(self.engine.stats())
+    }
+}
+
+/// The degradation ladder's terminal rung: a plan that needs no solver at
+/// all. Every expert's tokens go to its first replica's host GPU —
+/// vanilla-EP semantics over the current placement, always feasible, no
+/// balancing.
+fn passthrough_plan(placement: &Placement, loads: &LoadMatrix, overlap: bool) -> MoeLayerPlan {
+    let mut gpu_compute = vec![0u64; placement.num_gpus];
+    let mut routes = Vec::new();
+    for (e, grp) in placement.replicas.iter().enumerate() {
+        let dst = *grp.first().expect("every expert has a replica");
+        for src in 0..placement.num_gpus {
+            let n = loads.get(e, src);
+            if n == 0 {
+                continue;
+            }
+            gpu_compute[dst] += n;
+            routes.push(Route { expert: e, src, dst, tokens: n });
+        }
+    }
+    MoeLayerPlan {
+        gpu_compute,
+        routes,
+        sched_time: 0.0,
+        sched_overlapped: overlap,
+        prep_extra: 0.0,
     }
 }
 
@@ -225,7 +272,7 @@ mod tests {
             engine: EngineMode::Pipeline { workers: 2, inflight: 2 },
             ..Default::default()
         };
-        let mut bal = EngineBalancer::new(p, None, opts, layers, true);
+        let mut bal = EngineBalancer::new(p, None, opts, layers, true).unwrap();
         let loads: Vec<LoadMatrix> =
             (0..layers).map(|l| random_lm(l as u64, 8, 4, 400)).collect();
         let mut order = Vec::new();
@@ -236,6 +283,43 @@ mod tests {
         assert_eq!(order, (0..layers).collect::<Vec<_>>());
         assert_eq!(stats.layers, layers);
         assert!(bal.engine_stats().is_some());
+    }
+
+    #[test]
+    fn barrier_mode_is_a_typed_construction_error() {
+        let p = cayley_graph_placement(4, 8);
+        let err = EngineBalancer::new(p, None, SchedulerOptions::default(), 2, true)
+            .expect_err("barrier mode has no engine");
+        assert_eq!(err, EngineError::BarrierMode);
+    }
+
+    #[test]
+    fn exhausted_engine_degrades_to_passthrough_plans() {
+        use crate::faults::{Fault, FaultPlan};
+        let p = cayley_graph_placement(4, 8);
+        let layers = 2usize;
+        let opts = SchedulerOptions {
+            engine: EngineMode::Pipeline { workers: 1, inflight: 1 },
+            // the sole worker dies on every delivery of step 0 / layer 0:
+            // the pool burns its respawn budget and the balancer must
+            // still cover the whole step
+            faults: Some(std::sync::Arc::new(FaultPlan::with_faults(vec![(
+                0,
+                0,
+                Fault::WorkerPanic { persistent: true },
+            )]))),
+            ..Default::default()
+        };
+        let mut bal = EngineBalancer::new(p, None, opts, layers, true).unwrap();
+        let loads: Vec<LoadMatrix> =
+            (0..layers).map(|l| random_lm(70 + l as u64, 8, 4, 500)).collect();
+        let out = bal.step(&StepInput { loads: &loads });
+        assert_eq!(out.layers.len(), layers, "every layer emitted despite engine death");
+        for (l, plan) in out.layers.iter().enumerate() {
+            assert_eq!(plan.gpu_compute.iter().sum::<u64>(), loads[l].total(), "layer {l}");
+        }
+        assert_eq!(out.stats.degradation.passthrough, layers as u64);
+        assert_eq!(out.stats.degradation.total(), layers as u64);
     }
 
     #[test]

@@ -276,13 +276,18 @@ impl MoeSessionBuilder {
                         layers,
                         overlap,
                     )),
-                    _ => Box::new(EngineBalancer::new(
-                        p,
-                        Some(topo.clone()),
-                        spec.options.clone(),
-                        layers,
-                        overlap,
-                    )),
+                    // mode validity was checked above, but surface any
+                    // engine construction failure as a typed build error
+                    _ => Box::new(
+                        EngineBalancer::new(
+                            p,
+                            Some(topo.clone()),
+                            spec.options.clone(),
+                            layers,
+                            overlap,
+                        )
+                        .map_err(|e| SessionError::Invalid(e.to_string()))?,
+                    ),
                 }
             }
             "micromoe-ar" => {

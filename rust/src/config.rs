@@ -6,7 +6,7 @@
 use std::collections::{BTreeMap, HashMap};
 
 use crate::engine::{EngineMode, ForecastConfig};
-use crate::lp::{FactorKind, Pricing, SolverKind};
+use crate::lp::{FactorKind, Pricing, SolveBudget, SolverKind};
 use crate::scheduler::{ScheduleMode, SchedulerOptions};
 use crate::ser::Json;
 use crate::topology::Topology;
@@ -231,6 +231,13 @@ fn get_usize(m: &BTreeMap<String, Json>, key: &str, default: usize) -> Result<us
     }
 }
 
+fn opt_usize(m: &BTreeMap<String, Json>, key: &str) -> Result<Option<usize>, String> {
+    match m.get(key) {
+        Some(v) => uint_field(v, key).map(|x| Some(x as usize)),
+        None => Ok(None),
+    }
+}
+
 fn req_f64(m: &BTreeMap<String, Json>, key: &str) -> Result<f64, String> {
     m.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing or non-numeric '{key}'"))
 }
@@ -307,6 +314,18 @@ pub fn scheduler_options_to_json(o: &SchedulerOptions) -> Json {
             ));
         }
     }
+    // budget caps: emitted only when set, so an unlimited (default) budget
+    // round-trips as absence. Fault plans are deliberately *not*
+    // serializable — chaos harnesses are built in code, never from config.
+    if let Some(p) = o.budget.max_pivots {
+        pairs.push(("budget_max_pivots", Json::Num(p as f64)));
+    }
+    if let Some(r) = o.budget.max_refactors {
+        pairs.push(("budget_max_refactors", Json::Num(r as f64)));
+    }
+    if let Some(w) = o.budget.max_wall {
+        pairs.push(("budget_max_wall_us", Json::Num(w.as_micros() as f64)));
+    }
     Json::obj(pairs)
 }
 
@@ -356,6 +375,9 @@ pub fn scheduler_options_from_json(j: &Json) -> Result<SchedulerOptions, String>
         "topo_aware_routing",
         "solver",
         "engine",
+        "budget_max_pivots",
+        "budget_max_refactors",
+        "budget_max_wall_us",
     ];
     match mode_name {
         "comm-aware" => allowed.push("alpha"),
@@ -423,6 +445,12 @@ pub fn scheduler_options_from_json(j: &Json) -> Result<SchedulerOptions, String>
         },
         other => return Err(format!("options: unknown engine '{other}'")),
     };
+    let budget = SolveBudget {
+        max_pivots: opt_usize(m, "budget_max_pivots")?,
+        max_refactors: opt_usize(m, "budget_max_refactors")?,
+        max_wall: opt_usize(m, "budget_max_wall_us")?
+            .map(|us| std::time::Duration::from_micros(us as u64)),
+    };
     Ok(SchedulerOptions {
         mode,
         warm_start: get_bool(m, "warm_start", true)?,
@@ -430,6 +458,9 @@ pub fn scheduler_options_from_json(j: &Json) -> Result<SchedulerOptions, String>
         topo_aware_routing: get_bool(m, "topo_aware_routing", false)?,
         solver,
         engine,
+        budget,
+        // fault plans are code-only (chaos tests); config never carries one
+        faults: None,
     })
 }
 
@@ -591,6 +622,14 @@ mod tests {
             },
             SchedulerOptions {
                 engine: EngineMode::Pipeline { workers: 4, inflight: 3 },
+                ..Default::default()
+            },
+            SchedulerOptions {
+                budget: SolveBudget {
+                    max_pivots: Some(5000),
+                    max_refactors: None,
+                    max_wall: Some(std::time::Duration::from_micros(1500)),
+                },
                 ..Default::default()
             },
             SchedulerOptions {

@@ -34,6 +34,31 @@ pub use forecast::{ForecastConfig, LoadForecaster};
 pub use pipeline::ScheduleEngine;
 pub use pool::WorkerPool;
 
+/// Unrecoverable engine failures. Transient worker deaths are *not* here —
+/// the pool respawns dead workers and re-submits their in-flight jobs
+/// transparently; these errors surface only when construction is
+/// impossible or recovery has been exhausted, and the balancer layer
+/// answers them with passthrough plans rather than a crash.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum EngineError {
+    /// [`ScheduleEngine`] was asked to run the round-barrier mode, which
+    /// has no engine (use [`crate::scheduler::schedule_layers_parallel`]).
+    #[error("ScheduleEngine requires EngineMode::Pipeline or EngineMode::Speculative, not Barrier")]
+    BarrierMode,
+    /// A worker died repeatedly without making progress; the pool stopped
+    /// respawning it.
+    #[error("scheduling worker {worker} exceeded {limit} consecutive respawns without progress")]
+    RespawnLimit {
+        /// Index of the repeatedly-dying worker.
+        worker: usize,
+        /// The consecutive-respawn cap that was exceeded.
+        limit: usize,
+    },
+    /// The pool's result channel disconnected entirely.
+    #[error("all scheduling workers disconnected")]
+    PoolDisconnected,
+}
+
 /// How multi-layer scheduling executes
 /// ([`crate::scheduler::SchedulerOptions::engine`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]

@@ -35,7 +35,7 @@ use crate::topology::Topology;
 
 use super::forecast::LoadForecaster;
 use super::pool::WorkerPool;
-use super::EngineMode;
+use super::{EngineError, EngineMode};
 
 /// Speculation verdict for one layer of one step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,6 +62,10 @@ pub struct ScheduleEngine {
     /// forecast a pre-solve was issued against, per layer (next step's);
     /// shares the allocation the pool pre-solved
     pending: Vec<Option<Arc<LoadMatrix>>>,
+    /// commit-step counter, stamped into every commit job — authoritative
+    /// for fault injection, so `(step, layer)` slots stay deterministic
+    /// across worker respawns and job replays
+    step: usize,
     stats: EngineStats,
 }
 
@@ -69,18 +73,17 @@ impl ScheduleEngine {
     /// Build the engine for `layers` MoE layers over one shared placement.
     /// `opts.engine` selects the mode and sizing; [`EngineMode::Barrier`]
     /// is the one mode this engine does not implement (use
-    /// [`crate::scheduler::schedule_layers_parallel`] for that) and panics.
+    /// [`crate::scheduler::schedule_layers_parallel`] for that) and yields
+    /// [`EngineError::BarrierMode`].
     pub fn new(
         placement: Placement,
         topo: Option<Topology>,
         opts: SchedulerOptions,
         layers: usize,
-    ) -> Self {
+    ) -> Result<Self, EngineError> {
         assert!(layers > 0, "engine needs at least one layer");
         let (workers, inflight, forecast_cfg) = match opts.engine {
-            EngineMode::Barrier => {
-                panic!("ScheduleEngine requires EngineMode::Pipeline or ::Speculative")
-            }
+            EngineMode::Barrier => return Err(EngineError::BarrierMode),
             EngineMode::Pipeline { workers, inflight } => (workers, inflight, None),
             EngineMode::Speculative { workers, inflight, forecast } => {
                 (workers, inflight, Some(forecast))
@@ -94,14 +97,15 @@ impl ScheduleEngine {
             Some(cfg) => (0..layers).map(|_| LoadForecaster::new(experts, gpus, cfg)).collect(),
             None => Vec::new(),
         };
-        ScheduleEngine {
+        Ok(ScheduleEngine {
             pool,
             layers,
             inflight,
             forecasters,
             pending: (0..layers).map(|_| None).collect(),
+            step: 0,
             stats: EngineStats::default(),
-        }
+        })
     }
 
     /// MoE layers scheduled per step.
@@ -137,32 +141,46 @@ impl ScheduleEngine {
     /// pending forecast, so it cannot produce hits or misses — it only
     /// moves each layer's warm-start state toward the expected optimum.
     /// Works in pipeline mode too, where it is the only source of
-    /// speculative jobs.
+    /// speculative jobs. Best-effort: priming is an optimization, so a
+    /// worker already past its respawn limit is ignored here and surfaces
+    /// on the next [`Self::schedule_step`] instead.
     pub fn prime(&mut self, expected: &[LoadMatrix]) {
         assert_eq!(expected.len(), self.layers, "one expected load matrix per layer");
         for (l, lm) in expected.iter().enumerate() {
-            self.pool.submit_speculate(l, Arc::new(lm.clone()));
+            let _ = self.pool.submit_speculate(l, Arc::new(lm.clone()));
         }
     }
 
     /// Schedule one micro-batch for every layer; `loads[l]` is layer `l`'s
-    /// `input_e^g`. Returns schedules in layer order.
-    pub fn schedule_step(&mut self, loads: &[LoadMatrix]) -> Vec<Schedule> {
+    /// `input_e^g`. Returns schedules in layer order. Errs only when a
+    /// worker exceeds the pool's respawn limit (transient worker deaths
+    /// are recovered internally); the step is then incomplete and the
+    /// caller decides the fallback (the balancer layer emits passthrough
+    /// plans).
+    pub fn schedule_step(&mut self, loads: &[LoadMatrix]) -> Result<Vec<Schedule>, EngineError> {
         let mut out: Vec<Option<Schedule>> = (0..self.layers).map(|_| None).collect();
-        self.schedule_step_with(loads, |layer, s| out[layer] = Some(s));
-        out.into_iter().map(|s| s.expect("every layer emitted")).collect()
+        self.schedule_step_with(loads, |layer, s| out[layer] = Some(s))?;
+        Ok(out.into_iter().map(|s| s.expect("every layer emitted")).collect())
     }
 
     /// Like [`Self::schedule_step`], but hands each schedule to `sink` in
     /// layer order *as soon as it is available* — the caller's per-layer
     /// stage (routing/dispatch timing, tensor permutation, …) overlaps the
-    /// remaining layers' LP solves.
-    pub fn schedule_step_with<F>(&mut self, loads: &[LoadMatrix], mut sink: F)
+    /// remaining layers' LP solves. On `Err`, every schedule already
+    /// handed to `sink` stays valid; the remaining layers were never
+    /// emitted.
+    pub fn schedule_step_with<F>(
+        &mut self,
+        loads: &[LoadMatrix],
+        mut sink: F,
+    ) -> Result<(), EngineError>
     where
         F: FnMut(usize, Schedule),
     {
         assert_eq!(loads.len(), self.layers, "one load matrix per layer");
         self.stats.steps += 1;
+        let step = self.step;
+        self.step += 1;
 
         // ---- speculation verdicts for this step's commits ----
         let decisions: Vec<SpecDecision> = (0..self.layers)
@@ -185,10 +203,10 @@ impl ScheduleEngine {
         while emitted < self.layers {
             while submitted < self.layers && submitted - emitted < self.inflight {
                 let cold = decisions[submitted] == SpecDecision::Miss;
-                self.pool.submit_commit(submitted, Arc::new(loads[submitted].clone()), cold);
+                self.pool.submit_commit(step, submitted, Arc::new(loads[submitted].clone()), cold)?;
                 submitted += 1;
             }
-            let r = self.pool.recv();
+            let r = self.pool.recv()?;
             if r.speculative {
                 // a pre-solve issued at the end of the previous step; its
                 // work happened off the critical path — just meter it
@@ -221,12 +239,13 @@ impl ScheduleEngine {
                 self.forecasters[l].observe(lm);
                 if let Some(pred) = self.forecasters[l].forecast() {
                     let pred = Arc::new(pred);
-                    self.pool.submit_speculate(l, Arc::clone(&pred));
+                    self.pool.submit_speculate(l, Arc::clone(&pred))?;
                     self.pending[l] = Some(pred);
                     self.stats.spec_issued += 1;
                 }
             }
         }
+        Ok(())
     }
 }
 
@@ -258,14 +277,14 @@ mod tests {
         let p = cayley_graph_placement(8, 16);
         let layers = 4;
         let mut engine =
-            ScheduleEngine::new(p.clone(), None, pipeline_opts(2, 2), layers);
+            ScheduleEngine::new(p.clone(), None, pipeline_opts(2, 2), layers).unwrap();
         let mut serial: Vec<MicroEpScheduler> = (0..layers)
             .map(|_| MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default()))
             .collect();
         for round in 0..3 {
             let loads: Vec<LoadMatrix> =
                 (0..layers).map(|l| random_lm(round * 10 + l as u64, 16, 8, 1200)).collect();
-            let got = engine.schedule_step(&loads);
+            let got = engine.schedule_step(&loads).unwrap();
             let want: Vec<Schedule> =
                 serial.iter_mut().zip(&loads).map(|(s, lm)| s.schedule(lm)).collect();
             for (l, (a, b)) in got.iter().zip(&want).enumerate() {
@@ -284,11 +303,11 @@ mod tests {
         let p = cayley_graph_placement(4, 8);
         let layers = 6;
         let mut engine =
-            ScheduleEngine::new(p, None, pipeline_opts(3, 2), layers);
+            ScheduleEngine::new(p, None, pipeline_opts(3, 2), layers).unwrap();
         let loads: Vec<LoadMatrix> =
             (0..layers).map(|l| random_lm(l as u64, 8, 4, 600)).collect();
         let mut order = Vec::new();
-        engine.schedule_step_with(&loads, |l, _| order.push(l));
+        engine.schedule_step_with(&loads, |l, _| order.push(l)).unwrap();
         assert_eq!(order, (0..layers).collect::<Vec<_>>());
     }
 
@@ -300,11 +319,11 @@ mod tests {
             engine: EngineMode::speculative(),
             ..Default::default()
         };
-        let mut engine = ScheduleEngine::new(p, None, opts, layers);
+        let mut engine = ScheduleEngine::new(p, None, opts, layers).unwrap();
         let lm = random_lm(3, 16, 8, 2000);
         let loads = vec![lm.clone(), lm.clone()];
         for _ in 0..5 {
-            let scheds = engine.schedule_step(&loads);
+            let scheds = engine.schedule_step(&loads).unwrap();
             for s in &scheds {
                 let total: u64 =
                     s.replica_loads.iter().map(|v| v.iter().sum::<u64>()).sum();
@@ -329,12 +348,12 @@ mod tests {
             engine: EngineMode::speculative(),
             ..Default::default()
         };
-        let mut engine = ScheduleEngine::new(p, None, opts, 1);
+        let mut engine = ScheduleEngine::new(p, None, opts, 1).unwrap();
         // concentrate all load on a rotating expert: every step is a jump
         for step in 0..6 {
             let mut lm = LoadMatrix::zeros(8, 4);
             lm.set(step % 8, 0, 4000);
-            engine.schedule_step(&[lm]);
+            engine.schedule_step(&[lm]).unwrap();
         }
         let st = engine.stats();
         assert!(st.spec_issued > 0);

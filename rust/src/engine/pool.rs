@@ -1,4 +1,4 @@
-//! Persistent scheduling worker pool.
+//! Persistent scheduling worker pool — now fault-tolerant.
 //!
 //! The PR-1 parallel path ([`crate::scheduler::schedule_layers_parallel`])
 //! re-spawns scoped threads every round — measurable overhead once
@@ -17,29 +17,91 @@
 //! the schedule itself is discarded by the engine). Results flow back over
 //! one shared channel and are re-ordered by the engine
 //! ([`super::ScheduleEngine`]), never here.
+//!
+//! # Worker-respawn state machine
+//!
+//! A worker thread can die (a solver panic, or an injected
+//! [`crate::faults::Fault::WorkerPanic`] in the chaos suite). The pool
+//! keeps a per-worker FIFO of **unacknowledged jobs** — submitted, result
+//! not yet received — so death is recoverable without engine cooperation:
+//!
+//! 1. **detect** — [`WorkerPool::recv`] polls with a short timeout; on a
+//!    quiet tick it scans worker handles for `is_finished()`. A dead
+//!    worker is also caught eagerly when a submit's channel send fails.
+//! 2. **respawn** — the dead thread is joined (reaping its panic payload),
+//!    a fresh thread is spawned over a new job channel, and it rebuilds
+//!    its layers' schedulers from scratch — warm bases are lost, so the
+//!    next solve on those layers runs the cold rung.
+//! 3. **replay** — the worker's unacknowledged jobs are re-submitted in
+//!    order. The front job is the one it died on; its injected panic (if
+//!    any) is *disarmed* on replay so a one-shot fault cannot live-lock
+//!    the pool, while `persistent` faults re-fire by design.
+//! 4. **give up** — more than [`MAX_RESPAWNS`] consecutive respawns of the
+//!    same worker without a single result in between returns
+//!    [`EngineError::RespawnLimit`]; the balancer layer answers with
+//!    passthrough plans. Any received result resets the worker's counter.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
+use crate::faults::Fault;
 use crate::placement::Placement;
 use crate::scheduler::{LoadMatrix, MicroEpScheduler, Schedule, SchedulerOptions};
 use crate::topology::Topology;
 
+use super::EngineError;
+
+/// Consecutive respawns of one worker (without a result in between) before
+/// the pool gives up with [`EngineError::RespawnLimit`].
+pub const MAX_RESPAWNS: usize = 3;
+
+/// How often a blocked [`WorkerPool::recv`] wakes to scan for dead
+/// workers. Purely a liveness knob: results are handled the moment they
+/// arrive, this only bounds how long a silent worker death can stall the
+/// drain loop.
+const DEATH_POLL: Duration = Duration::from_millis(25);
+
 /// One unit of work for a layer-owning worker. Loads travel as `Arc`s so
 /// the engine can share one allocation between the pool and its own
-/// bookkeeping (forecasts) instead of deep-copying per consumer.
+/// bookkeeping (forecasts) instead of deep-copying per consumer — and so
+/// the pool's in-flight replay queue can hold a clone for free.
+#[derive(Clone)]
 enum Job {
     /// Solve + route actual loads; `cold` forces a from-scratch solve
     /// (speculation miss: the primed basis is too far off to repair).
     Commit {
+        /// Engine-stamped step index — authoritative for fault lookup, so
+        /// injections stay deterministic across respawns and replay.
+        step: usize,
         layer: usize,
         loads: Arc<LoadMatrix>,
         cold: bool,
+        /// Whether an injected `WorkerPanic` at this `(step, layer)` may
+        /// fire. Cleared when the job is replayed after a respawn (unless
+        /// the fault is `persistent`).
+        armed: bool,
     },
     /// Speculative pre-solve on forecast loads: primes the layer's warm
-    /// basis; the engine meters the pivots and drops the schedule.
+    /// basis; the engine meters the pivots and drops the schedule. Never
+    /// consults the fault plan and never advances the fault step cursor.
     Speculate { layer: usize, loads: Arc<LoadMatrix> },
+}
+
+impl Job {
+    fn layer(&self) -> usize {
+        match self {
+            Job::Commit { layer, .. } | Job::Speculate { layer, .. } => *layer,
+        }
+    }
+
+    fn disarm(&mut self) {
+        if let Job::Commit { armed, .. } = self {
+            *armed = false;
+        }
+    }
 }
 
 /// A completed job, tagged for re-ordering by the engine.
@@ -53,12 +115,85 @@ pub(crate) struct JobResult {
 }
 
 /// Always-on pool of solver workers, each owning the warm-start state of
-/// its layers across steps (no per-round spawns).
+/// its layers across steps (no per-round spawns). Survives worker death by
+/// respawning and replaying unacknowledged jobs (see the module docs).
 pub struct WorkerPool {
     senders: Vec<Sender<Job>>,
     results: Receiver<JobResult>,
-    handles: Vec<JoinHandle<()>>,
+    /// Kept so the results channel never disconnects and respawned workers
+    /// can be handed a fresh clone.
+    res_tx: Sender<JobResult>,
+    handles: Vec<Option<JoinHandle<()>>>,
+    /// Per-worker FIFO of submitted-but-unacknowledged jobs. Workers
+    /// process and answer strictly in order, so the front entry is always
+    /// the job the next result (or death) belongs to.
+    inflight: Vec<VecDeque<Job>>,
+    /// Consecutive respawns per worker since its last delivered result.
+    respawns: Vec<usize>,
     layers: usize,
+    // ---- retained construction state for respawns ----
+    placement: Placement,
+    topo: Option<Topology>,
+    opts: SchedulerOptions,
+}
+
+fn spawn_worker(
+    w: usize,
+    workers: usize,
+    layers: usize,
+    placement: Placement,
+    topo: Option<Topology>,
+    opts: SchedulerOptions,
+    rx: Receiver<Job>,
+    res_tx: Sender<JobResult>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("sched-worker-{w}"))
+        .spawn(move || {
+            // One warm scheduler per owned layer, alive across steps — the
+            // whole point of the persistent pool. Built inside the thread
+            // so solver state never crosses threads; a respawned worker
+            // therefore restarts its layers cold.
+            let faults = opts.faults.clone();
+            let mut scheds: Vec<Option<MicroEpScheduler>> = (0..layers)
+                .map(|l| {
+                    (l % workers == w).then(|| {
+                        let mut s =
+                            MicroEpScheduler::new(placement.clone(), topo.clone(), opts.clone());
+                        s.set_layer(l);
+                        s
+                    })
+                })
+                .collect();
+            while let Ok(job) = rx.recv() {
+                let (layer, speculative, schedule) = match job {
+                    Job::Commit { step, layer, loads, cold, armed } => {
+                        if let Some(plan) = &faults {
+                            if let Some(Fault::WorkerPanic { persistent }) = plan.at(step, layer) {
+                                if armed || persistent {
+                                    panic!("injected worker panic at step {step} layer {layer}");
+                                }
+                            }
+                        }
+                        let s = scheds[layer].as_mut().expect("job routed to owner");
+                        let schedule = if cold {
+                            s.schedule_cold_at(step, &loads)
+                        } else {
+                            s.schedule_at(step, &loads)
+                        };
+                        (layer, false, schedule)
+                    }
+                    Job::Speculate { layer, loads } => {
+                        let s = scheds[layer].as_mut().expect("job routed to owner");
+                        (layer, true, s.speculate(&loads))
+                    }
+                };
+                if res_tx.send(JobResult { layer, speculative, schedule }).is_err() {
+                    break; // engine gone: shut down
+                }
+            }
+        })
+        .expect("spawn scheduler worker")
 }
 
 impl WorkerPool {
@@ -86,49 +221,29 @@ impl WorkerPool {
         for w in 0..workers {
             let (tx, rx) = channel::<Job>();
             senders.push(tx);
-            let res_tx = res_tx.clone();
-            let placement = placement.clone();
-            let topo = topo.clone();
-            let opts = opts.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("sched-worker-{w}"))
-                .spawn(move || {
-                    // One warm scheduler per owned layer, alive across steps
-                    // — the whole point of the persistent pool. Built inside
-                    // the thread so solver state never crosses threads.
-                    let mut scheds: Vec<Option<MicroEpScheduler>> = (0..layers)
-                        .map(|l| {
-                            (l % workers == w).then(|| {
-                                MicroEpScheduler::new(
-                                    placement.clone(),
-                                    topo.clone(),
-                                    opts.clone(),
-                                )
-                            })
-                        })
-                        .collect();
-                    while let Ok(job) = rx.recv() {
-                        let (layer, speculative, schedule) = match job {
-                            Job::Commit { layer, loads, cold } => {
-                                let s = scheds[layer].as_mut().expect("job routed to owner");
-                                let schedule =
-                                    if cold { s.schedule_cold(&loads) } else { s.schedule(&loads) };
-                                (layer, false, schedule)
-                            }
-                            Job::Speculate { layer, loads } => {
-                                let s = scheds[layer].as_mut().expect("job routed to owner");
-                                (layer, true, s.schedule(&loads))
-                            }
-                        };
-                        if res_tx.send(JobResult { layer, speculative, schedule }).is_err() {
-                            break; // engine gone: shut down
-                        }
-                    }
-                })
-                .expect("spawn scheduler worker");
-            handles.push(handle);
+            handles.push(Some(spawn_worker(
+                w,
+                workers,
+                layers,
+                placement.clone(),
+                topo.clone(),
+                opts.clone(),
+                rx,
+                res_tx.clone(),
+            )));
         }
-        WorkerPool { senders, results, handles, layers }
+        WorkerPool {
+            senders,
+            results,
+            res_tx,
+            handles,
+            inflight: (0..workers).map(|_| VecDeque::new()).collect(),
+            respawns: vec![0; workers],
+            layers,
+            placement,
+            topo,
+            opts,
+        }
     }
 
     /// Worker threads actually running (after the layer-count cap).
@@ -141,23 +256,114 @@ impl WorkerPool {
         self.layers
     }
 
-    pub(crate) fn submit_commit(&self, layer: usize, loads: Arc<LoadMatrix>, cold: bool) {
+    pub(crate) fn submit_commit(
+        &mut self,
+        step: usize,
+        layer: usize,
+        loads: Arc<LoadMatrix>,
+        cold: bool,
+    ) -> Result<(), EngineError> {
         assert!(layer < self.layers);
-        self.senders[layer % self.senders.len()]
-            .send(Job::Commit { layer, loads, cold })
-            .expect("worker thread alive");
+        self.dispatch(Job::Commit { step, layer, loads, cold, armed: true })
     }
 
-    pub(crate) fn submit_speculate(&self, layer: usize, loads: Arc<LoadMatrix>) {
+    pub(crate) fn submit_speculate(
+        &mut self,
+        layer: usize,
+        loads: Arc<LoadMatrix>,
+    ) -> Result<(), EngineError> {
         assert!(layer < self.layers);
-        self.senders[layer % self.senders.len()]
-            .send(Job::Speculate { layer, loads })
-            .expect("worker thread alive");
+        self.dispatch(Job::Speculate { layer, loads })
+    }
+
+    fn dispatch(&mut self, job: Job) -> Result<(), EngineError> {
+        let w = job.layer() % self.senders.len();
+        // Queue before sending: if the worker is already dead the job is
+        // part of its in-flight set and the respawn replays it.
+        self.inflight[w].push_back(job.clone());
+        if self.senders[w].send(job).is_err() {
+            self.respawn(w)?;
+        }
+        Ok(())
     }
 
     /// Blocking receive of the next finished job (any layer, any kind).
-    pub(crate) fn recv(&self) -> JobResult {
-        self.results.recv().expect("a worker owes a result")
+    /// Transparently respawns dead workers and replays their in-flight
+    /// jobs; errs only once a worker exceeds the consecutive-respawn cap.
+    pub(crate) fn recv(&mut self) -> Result<JobResult, EngineError> {
+        loop {
+            match self.results.recv_timeout(DEATH_POLL) {
+                Ok(r) => {
+                    let w = r.layer % self.senders.len();
+                    // Workers answer in FIFO order: this result
+                    // acknowledges the front of w's in-flight queue.
+                    self.inflight[w].pop_front();
+                    self.respawns[w] = 0;
+                    return Ok(r);
+                }
+                Err(RecvTimeoutError::Timeout) => self.reap_dead()?,
+                // Unreachable while we hold `res_tx`, but fail typed
+                // rather than looping forever if that invariant breaks.
+                Err(RecvTimeoutError::Disconnected) => return Err(EngineError::PoolDisconnected),
+            }
+        }
+    }
+
+    /// Respawn every worker whose thread has exited.
+    fn reap_dead(&mut self) -> Result<(), EngineError> {
+        for w in 0..self.handles.len() {
+            if self.handles[w].as_ref().is_some_and(|h| h.is_finished()) {
+                self.respawn(w)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Replace worker `w`'s thread and replay its unacknowledged jobs. The
+    /// replayed front job is disarmed so a one-shot injected panic cannot
+    /// re-fire; the new worker rebuilds its schedulers cold.
+    fn respawn(&mut self, w: usize) -> Result<(), EngineError> {
+        self.respawns[w] += 1;
+        if self.respawns[w] > MAX_RESPAWNS {
+            return Err(EngineError::RespawnLimit { worker: w, limit: MAX_RESPAWNS });
+        }
+        if let Some(h) = self.handles[w].take() {
+            // The thread is already dead or unwinding (its job receiver is
+            // gone / is_finished fired), so this join is immediate; it
+            // also swallows the panic payload.
+            let _ = h.join();
+        }
+        log::warn!(
+            "scheduling worker {w} died with {} job(s) in flight; respawning (attempt {}/{})",
+            self.inflight[w].len(),
+            self.respawns[w],
+            MAX_RESPAWNS
+        );
+        let workers = self.senders.len();
+        let (tx, rx) = channel::<Job>();
+        self.handles[w] = Some(spawn_worker(
+            w,
+            workers,
+            self.layers,
+            self.placement.clone(),
+            self.topo.clone(),
+            self.opts.clone(),
+            rx,
+            self.res_tx.clone(),
+        ));
+        self.senders[w] = tx;
+        for (i, queued) in self.inflight[w].iter().enumerate() {
+            let mut job = queued.clone();
+            if i == 0 {
+                job.disarm();
+            }
+            if self.senders[w].send(job).is_err() {
+                // Died again before the replay finished queueing — counted
+                // by the recursion, bounded by MAX_RESPAWNS.
+                return self.respawn(w);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -167,7 +373,7 @@ impl Drop for WorkerPool {
         // exit; results they still send land in the buffered channel and
         // are dropped with it.
         self.senders.clear();
-        for h in self.handles.drain(..) {
+        for h in self.handles.iter_mut().filter_map(Option::take) {
             let _ = h.join();
         }
     }
@@ -176,8 +382,10 @@ impl Drop for WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::FaultPlan;
     use crate::placement::cayley::cayley_graph_placement;
     use crate::rng::Rng;
+    use crate::stats::DegradationRung;
 
     fn random_lm(seed: u64, e: usize, g: usize, n: u64) -> LoadMatrix {
         let mut rng = Rng::new(seed);
@@ -200,15 +408,15 @@ mod tests {
     fn pool_solves_and_reports_every_layer() {
         let p = cayley_graph_placement(4, 8);
         let layers = 3;
-        let pool = WorkerPool::new(p, None, SchedulerOptions::default(), layers, 2);
+        let mut pool = WorkerPool::new(p, None, SchedulerOptions::default(), layers, 2);
         let loads: Vec<LoadMatrix> =
             (0..layers).map(|l| random_lm(l as u64, 8, 4, 500)).collect();
         for (l, lm) in loads.iter().enumerate() {
-            pool.submit_commit(l, Arc::new(lm.clone()), false);
+            pool.submit_commit(0, l, Arc::new(lm.clone()), false).unwrap();
         }
         let mut seen = vec![false; layers];
         for _ in 0..layers {
-            let r = pool.recv();
+            let r = pool.recv().unwrap();
             assert!(!r.speculative);
             assert!(!seen[r.layer], "layer {} reported twice", r.layer);
             seen[r.layer] = true;
@@ -222,10 +430,64 @@ mod tests {
     #[test]
     fn dropping_pool_with_queued_work_does_not_hang() {
         let p = cayley_graph_placement(4, 8);
-        let pool = WorkerPool::new(p, None, SchedulerOptions::default(), 2, 2);
+        let mut pool = WorkerPool::new(p, None, SchedulerOptions::default(), 2, 2);
         for l in 0..2 {
-            pool.submit_speculate(l, Arc::new(random_lm(9 + l as u64, 8, 4, 300)));
+            pool.submit_speculate(l, Arc::new(random_lm(9 + l as u64, 8, 4, 300))).unwrap();
         }
         drop(pool); // must join cleanly with results unread
+    }
+
+    #[test]
+    fn worker_death_respawns_and_replays() {
+        let p = cayley_graph_placement(4, 8);
+        let layers = 2;
+        let opts = SchedulerOptions {
+            faults: Some(Arc::new(FaultPlan::with_faults(vec![(
+                1,
+                0,
+                Fault::WorkerPanic { persistent: false },
+            )]))),
+            ..Default::default()
+        };
+        let mut pool = WorkerPool::new(p, None, opts, layers, 2);
+        let loads: Vec<LoadMatrix> =
+            (0..layers).map(|l| random_lm(40 + l as u64, 8, 4, 600)).collect();
+        for step in 0..3 {
+            for (l, lm) in loads.iter().enumerate() {
+                pool.submit_commit(step, l, Arc::new(lm.clone()), false).unwrap();
+            }
+            let mut rungs = vec![None; layers];
+            for _ in 0..layers {
+                let r = pool.recv().unwrap();
+                let total: u64 =
+                    r.schedule.replica_loads.iter().map(|v| v.iter().sum::<u64>()).sum();
+                assert_eq!(total, loads[r.layer].total(), "step {step} layer {}", r.layer);
+                rungs[r.layer] = Some(r.schedule.stats.rung);
+            }
+            if step == 1 {
+                // The replayed job ran on a fresh worker: cold rung.
+                assert_eq!(rungs[0], Some(DegradationRung::ColdLp), "step {step}");
+            } else if step == 2 {
+                // Recovered: back to warm repairs on the respawned worker.
+                assert_eq!(rungs[0], Some(DegradationRung::WarmLp), "step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn persistent_panic_exhausts_respawn_limit() {
+        let p = cayley_graph_placement(4, 8);
+        let opts = SchedulerOptions {
+            faults: Some(Arc::new(FaultPlan::with_faults(vec![(
+                0,
+                0,
+                Fault::WorkerPanic { persistent: true },
+            )]))),
+            ..Default::default()
+        };
+        let mut pool = WorkerPool::new(p, None, opts, 1, 1);
+        pool.submit_commit(0, 0, Arc::new(random_lm(7, 8, 4, 400)), false).unwrap();
+        let err = pool.recv().expect_err("persistent panic must exhaust the respawn limit");
+        assert_eq!(err, EngineError::RespawnLimit { worker: 0, limit: MAX_RESPAWNS });
     }
 }

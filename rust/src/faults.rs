@@ -1,0 +1,181 @@
+//! Deterministic fault injection — the chaos-test harness behind
+//! `tests/chaos.rs` and ISSUE-6's robustness acceptance criteria.
+//!
+//! A [`FaultPlan`] is a finite list of `(step, layer) → Fault` injections,
+//! derived deterministically from a seed so any CI failure replays exactly
+//! (`FAULT_SEED=<seed> cargo test --test chaos`, mirroring the
+//! `LP_FUZZ_SEED` convention of the LP fuzz suites). The plan is threaded
+//! through [`crate::scheduler::SchedulerOptions::faults`]; with the default
+//! `None` nothing is consulted and every path is bit-identical to a
+//! fault-free build.
+//!
+//! # Fault model
+//!
+//! | fault | injected where | expected degradation |
+//! |---|---|---|
+//! | [`Fault::WorkerPanic`] | engine worker thread, before the solve | worker respawn + cold re-solve (or passthrough past the respawn limit) |
+//! | [`Fault::BudgetStarvation`] | zero-pivot [`crate::lp::SolveBudget`] for this solve | greedy rung, `budget_pivots` count |
+//! | [`Fault::NanLoads`] | `NaN` into the LP rhs updates | input validation rejects, greedy rung |
+//! | [`Fault::OverflowLoads`] | `~1e300` into the LP rhs updates | input validation rejects, greedy rung |
+//! | [`Fault::ForceInfeasible`] | `−1` rhs on an equality row | LP reports `Infeasible`, greedy rung |
+//!
+//! Every fault degrades the plan, never the *feasibility* of the emitted
+//! schedule: the load perturbations poison only the LP's view, while the
+//! greedy fallback and token routing work from the true integer loads.
+
+use crate::rng::Rng;
+
+/// One injectable fault (see the module-level fault model table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Fault {
+    /// Kill the engine worker thread that owns this `(step, layer)` commit.
+    /// `persistent` re-arms after every respawn (drives the respawn limit
+    /// and the passthrough rung); one-shot panics fire exactly once.
+    WorkerPanic {
+        /// Whether the panic re-fires on the respawned worker too.
+        persistent: bool,
+    },
+    /// Run this solve under a zero-pivot budget: both LP rungs exhaust
+    /// immediately and the ladder lands on greedy.
+    BudgetStarvation,
+    /// Poison one LP rhs update with `NaN`.
+    NanLoads,
+    /// Poison one LP rhs update with a value far beyond the exactly-
+    /// representable integer range (`~1e300`).
+    OverflowLoads,
+    /// Rewrite one expert's conservation row to an unsatisfiable `= −1`.
+    ForceInfeasible,
+}
+
+impl Fault {
+    /// Whether the fault is handled by the engine worker (vs the
+    /// scheduler's solve path).
+    pub fn is_worker_fault(&self) -> bool {
+        matches!(self, Fault::WorkerPanic { .. })
+    }
+}
+
+/// A deterministic `(step, layer) → Fault` injection schedule, at most one
+/// fault per slot.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Sorted, deduplicated `(step, layer, fault)` triples.
+    faults: Vec<(usize, usize, Fault)>,
+}
+
+impl FaultPlan {
+    /// No faults at all.
+    pub fn empty() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Derive a plan from a seed: each `(step, layer)` slot independently
+    /// receives a fault with probability `density`, the kind drawn
+    /// uniformly from the non-persistent kinds. Fully determined by
+    /// `(seed, steps, layers, density)`.
+    pub fn from_seed(seed: u64, steps: usize, layers: usize, density: f64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA01_7D5A_11CE_0BAD);
+        let kinds = [
+            Fault::WorkerPanic { persistent: false },
+            Fault::BudgetStarvation,
+            Fault::NanLoads,
+            Fault::OverflowLoads,
+            Fault::ForceInfeasible,
+        ];
+        let mut faults = Vec::new();
+        for step in 0..steps {
+            for layer in 0..layers {
+                if rng.f64() < density {
+                    let kind = kinds[rng.below(kinds.len() as u64) as usize];
+                    faults.push((step, layer, kind));
+                }
+            }
+        }
+        FaultPlan { seed, faults }
+    }
+
+    /// Build an explicit plan (targeted tests). Triples are sorted and
+    /// later duplicates for the same `(step, layer)` are dropped.
+    pub fn with_faults(mut faults: Vec<(usize, usize, Fault)>) -> Self {
+        faults.sort_by_key(|&(s, l, _)| (s, l));
+        faults.dedup_by_key(|&mut (s, l, _)| (s, l));
+        FaultPlan { seed: 0, faults }
+    }
+
+    /// The fault injected at `(step, layer)`, if any.
+    pub fn at(&self, step: usize, layer: usize) -> Option<Fault> {
+        self.faults
+            .binary_search_by_key(&(step, layer), |&(s, l, _)| (s, l))
+            .ok()
+            .map(|i| self.faults[i].2)
+    }
+
+    /// All injections, sorted by `(step, layer)`.
+    pub fn faults(&self) -> &[(usize, usize, Fault)] {
+        &self.faults
+    }
+
+    /// The seed this plan was derived from (0 for explicit plans).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Whether the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+}
+
+/// The chaos suite's seed hook: `FAULT_SEED` wins over the test's default,
+/// and the value used is printed so a failing CI run names the seed that
+/// reproduces it (libtest surfaces the print exactly when the test fails).
+pub fn fault_seed(default: u64) -> u64 {
+    let seed = crate::prop::seed_from_env("FAULT_SEED", default);
+    eprintln!("replay with: FAULT_SEED={seed}");
+    seed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_seed_is_deterministic() {
+        let a = FaultPlan::from_seed(42, 20, 4, 0.3);
+        let b = FaultPlan::from_seed(42, 20, 4, 0.3);
+        assert_eq!(a, b);
+        assert_eq!(a.seed(), 42);
+        let c = FaultPlan::from_seed(43, 20, 4, 0.3);
+        assert_ne!(a.faults(), c.faults(), "different seeds, different plans");
+    }
+
+    #[test]
+    fn density_scales_fault_count() {
+        assert!(FaultPlan::from_seed(1, 50, 4, 0.0).is_empty());
+        let full = FaultPlan::from_seed(1, 50, 4, 1.0);
+        assert_eq!(full.faults().len(), 200, "density 1.0 hits every slot");
+        let some = FaultPlan::from_seed(1, 50, 4, 0.25);
+        assert!(!some.is_empty() && some.faults().len() < 200);
+    }
+
+    #[test]
+    fn at_looks_up_injections() {
+        let plan = FaultPlan::with_faults(vec![
+            (3, 1, Fault::NanLoads),
+            (0, 0, Fault::BudgetStarvation),
+            (3, 1, Fault::OverflowLoads), // duplicate slot: dropped
+        ]);
+        assert_eq!(plan.at(0, 0), Some(Fault::BudgetStarvation));
+        assert_eq!(plan.at(3, 1), Some(Fault::NanLoads));
+        assert_eq!(plan.at(1, 1), None);
+        assert_eq!(plan.faults().len(), 2);
+    }
+
+    #[test]
+    fn worker_faults_classified() {
+        assert!(Fault::WorkerPanic { persistent: true }.is_worker_fault());
+        assert!(!Fault::BudgetStarvation.is_worker_fault());
+        assert!(!Fault::ForceInfeasible.is_worker_fault());
+    }
+}

@@ -31,6 +31,7 @@ pub mod cli;
 pub mod cluster;
 pub mod config;
 pub mod engine;
+pub mod faults;
 pub mod lp;
 pub mod moe;
 pub mod placement;

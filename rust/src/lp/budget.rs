@@ -1,0 +1,150 @@
+//! Deterministic per-solve budgets — the robustness layer's contract with
+//! the simplex engines.
+//!
+//! A production balancer cannot let one numerically nasty micro-batch hold
+//! the training step hostage: the scheduler needs a *bounded* answer to
+//! "how long may this solve run?" that is reproducible across machines.
+//! [`SolveBudget`] expresses that bound in units the solver already counts
+//! deterministically — pivots (basis changes + bound flips) and basis
+//! refactorizations — plus an *optional* wall-clock cap for deployments
+//! that prefer an SLO over determinism. The pivot/refactor caps are exact
+//! and replayable: the same instance with the same budget exhausts at the
+//! same pivot on every run. The wall-clock cap is best-effort and
+//! explicitly non-deterministic; it is checked only when set, so the
+//! default (unlimited) budget never reads the clock and stays bit-stable.
+//!
+//! Exhaustion surfaces as
+//! [`SimplexError::BudgetExhausted`](super::simplex::SimplexError) carrying
+//! a [`BudgetReason`], and callers that want a success-or-degrade view
+//! instead of a `Result` can classify any solve through [`SolveOutcome`].
+
+use super::simplex::{SimplexError, Solution};
+
+/// Per-solve resource budget. `None` fields are unlimited; the default is
+/// fully unlimited, which keeps every pre-existing path byte-identical
+/// (no counter comparisons change behaviour, and the clock is never read).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SolveBudget {
+    /// Cap on pivots (basis changes plus bound flips, the same unit as
+    /// [`super::SolveStats::pivots`]) spent by one solve attempt.
+    pub max_pivots: Option<usize>,
+    /// Cap on basis refactorizations within one solve attempt.
+    pub max_refactors: Option<usize>,
+    /// Optional wall-clock cap. **Non-deterministic**: two runs of the same
+    /// instance may exhaust at different pivots. Checked only when set.
+    pub max_wall: Option<std::time::Duration>,
+}
+
+impl SolveBudget {
+    /// Fully unlimited budget (the default).
+    pub fn unlimited() -> Self {
+        Self::default()
+    }
+
+    /// Pivot-capped budget with everything else unlimited.
+    pub fn with_max_pivots(max_pivots: usize) -> Self {
+        SolveBudget { max_pivots: Some(max_pivots), ..Self::default() }
+    }
+
+    /// Whether no cap is set at all — the bit-stable fast path.
+    pub fn is_unlimited(&self) -> bool {
+        self.max_pivots.is_none() && self.max_refactors.is_none() && self.max_wall.is_none()
+    }
+}
+
+/// Which budget dimension ran out first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BudgetReason {
+    /// The pivot cap ([`SolveBudget::max_pivots`]) was reached.
+    Pivots,
+    /// The refactorization cap ([`SolveBudget::max_refactors`]) was reached.
+    Refactors,
+    /// The wall-clock deadline ([`SolveBudget::max_wall`]) passed.
+    WallClock,
+}
+
+impl std::fmt::Display for BudgetReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BudgetReason::Pivots => write!(f, "pivot cap"),
+            BudgetReason::Refactors => write!(f, "refactorization cap"),
+            BudgetReason::WallClock => write!(f, "wall-clock deadline"),
+        }
+    }
+}
+
+/// Typed outcome of a budgeted solve attempt — the success-or-degrade view
+/// the degradation ladder consumes instead of matching on raw
+/// [`SimplexError`] variants at every rung.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SolveOutcome {
+    /// The solve reached a proven optimum.
+    Optimal(Solution),
+    /// The solve ran out of budget before optimality; the partial basis is
+    /// retained but no primal solution is reported.
+    BudgetExhausted(BudgetReason),
+    /// The solve failed for a numerical or structural reason (singular
+    /// basis, infeasible instance, iteration-limit stall, …).
+    Numerical(SimplexError),
+}
+
+impl SolveOutcome {
+    /// Classify a raw solver result.
+    pub fn from_result(r: Result<Solution, SimplexError>) -> Self {
+        match r {
+            Ok(sol) => SolveOutcome::Optimal(sol),
+            Err(SimplexError::BudgetExhausted(reason)) => SolveOutcome::BudgetExhausted(reason),
+            Err(e) => SolveOutcome::Numerical(e),
+        }
+    }
+
+    /// The solution, when the outcome is optimal.
+    pub fn solution(self) -> Option<Solution> {
+        match self {
+            SolveOutcome::Optimal(sol) => Some(sol),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_budget_is_unlimited() {
+        let b = SolveBudget::default();
+        assert!(b.is_unlimited());
+        assert_eq!(b, SolveBudget::unlimited());
+    }
+
+    #[test]
+    fn pivot_cap_is_not_unlimited() {
+        assert!(!SolveBudget::with_max_pivots(5).is_unlimited());
+        assert_eq!(SolveBudget::with_max_pivots(5).max_pivots, Some(5));
+    }
+
+    #[test]
+    fn outcome_classifies_budget_errors() {
+        let o = SolveOutcome::from_result(Err(SimplexError::BudgetExhausted(
+            BudgetReason::Pivots,
+        )));
+        assert_eq!(o, SolveOutcome::BudgetExhausted(BudgetReason::Pivots));
+        let n = SolveOutcome::from_result(Err(SimplexError::Unbounded));
+        assert_eq!(n, SolveOutcome::Numerical(SimplexError::Unbounded));
+        assert!(n.solution().is_none());
+    }
+
+    #[test]
+    fn reasons_render_distinctly() {
+        let labels: Vec<String> =
+            [BudgetReason::Pivots, BudgetReason::Refactors, BudgetReason::WallClock]
+                .iter()
+                .map(|r| r.to_string())
+                .collect();
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len());
+    }
+}

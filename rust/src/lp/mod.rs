@@ -74,6 +74,8 @@
 //!   objective sense.
 //! * [`bounds`] — bound↔row lowering shared by the backends, plus the CSC
 //!   matrix type.
+//! * [`budget`] — deterministic per-solve budgets ([`SolveBudget`]) and the
+//!   typed [`SolveOutcome`] the degradation ladder consumes.
 //! * [`factor`] — the [`Factorization`] trait + engine selection.
 //! * [`basis`] — dense explicit basis inverse (eta updates, Gauss–Jordan
 //!   refactorization); the small-`m` fast path.
@@ -87,6 +89,7 @@
 
 pub mod basis;
 pub mod bounds;
+pub mod budget;
 pub mod factor;
 pub mod lu;
 pub mod problem;
@@ -94,6 +97,7 @@ pub mod revised;
 pub mod simplex;
 pub mod warm;
 
+pub use budget::{BudgetReason, SolveBudget, SolveOutcome};
 pub use factor::{FactorKind, Factorization};
 pub use problem::{Constraint, LpProblem, Relation};
 pub use revised::{Pricing, RevisedSolver, SolveStats};

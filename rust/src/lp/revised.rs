@@ -69,6 +69,7 @@
 //! flipped columns kept stale weights until the next framework reset.
 
 use super::bounds::Csc;
+use super::budget::{BudgetReason, SolveBudget};
 use super::factor::{FactorKind, Factorization};
 use super::problem::{LpProblem, Relation};
 use super::simplex::{SimplexError, Solution};
@@ -196,6 +197,15 @@ pub struct RevisedSolver {
     /// classic one-flip-per-pivot test for ablations/differential tests
     long_step: bool,
     phase1_done: bool,
+    /// per-solve resource caps ([`SolveBudget`]); unlimited by default
+    budget: SolveBudget,
+    /// `iterations` snapshot taken when the current solve armed its budget
+    budget_base_pivots: usize,
+    /// `refactorizations` snapshot at budget arming
+    budget_base_refactors: usize,
+    /// wall-clock deadline of the current solve (set only when the budget
+    /// carries a wall cap — the unlimited path never reads the clock)
+    budget_deadline: Option<std::time::Instant>,
     // scratch buffers reused across pivots
     w: Vec<f64>,
     y: Vec<f64>,
@@ -332,6 +342,10 @@ impl RevisedSolver {
             refactorizations: 0,
             long_step: true,
             phase1_done: false,
+            budget: SolveBudget::default(),
+            budget_base_pivots: 0,
+            budget_base_refactors: 0,
+            budget_deadline: None,
             w: vec![0.0; m],
             y: vec![0.0; m],
             rho: vec![0.0; m],
@@ -361,6 +375,51 @@ impl RevisedSolver {
             bound_flips: self.bound_flips,
             refactorizations: self.refactorizations,
         }
+    }
+
+    /// Install a per-solve resource budget. Applies to every subsequent
+    /// [`Self::solve`] / [`Self::warm_resolve`]; each arms the budget
+    /// afresh at entry (caps meter one solve attempt, not the solver's
+    /// lifetime). The default unlimited budget changes nothing and never
+    /// reads the clock, keeping default-path results bit-identical.
+    pub fn set_budget(&mut self, budget: SolveBudget) {
+        self.budget = budget;
+    }
+
+    /// The budget in force for subsequent solves.
+    pub fn budget(&self) -> SolveBudget {
+        self.budget
+    }
+
+    /// Snapshot the work counters (and deadline, when a wall cap is set)
+    /// so the caps meter the solve that is about to run.
+    fn arm_budget(&mut self) {
+        self.budget_base_pivots = self.iterations;
+        self.budget_base_refactors = self.refactorizations;
+        self.budget_deadline = self.budget.max_wall.map(|w| std::time::Instant::now() + w);
+    }
+
+    /// Enforce the armed budget; called at the top of every simplex
+    /// iteration and before each refactorization. Pure counter compares on
+    /// the deterministic caps; the clock is read only when a wall cap is
+    /// actually set.
+    fn check_budget(&self) -> Result<(), SimplexError> {
+        if let Some(cap) = self.budget.max_pivots {
+            if self.iterations - self.budget_base_pivots >= cap {
+                return Err(SimplexError::BudgetExhausted(BudgetReason::Pivots));
+            }
+        }
+        if let Some(cap) = self.budget.max_refactors {
+            if self.refactorizations - self.budget_base_refactors >= cap {
+                return Err(SimplexError::BudgetExhausted(BudgetReason::Refactors));
+            }
+        }
+        if let Some(deadline) = self.budget_deadline {
+            if std::time::Instant::now() >= deadline {
+                return Err(SimplexError::BudgetExhausted(BudgetReason::WallClock));
+            }
+        }
+        Ok(())
     }
 
     /// Toggle the long-step (bound-flipping) dual ratio test. On by
@@ -446,6 +505,11 @@ impl RevisedSolver {
     /// Refactorize and refresh `x_B`; called on drift or when the engine
     /// says so (eta count for the dense inverse, fill growth for LU).
     fn refactor(&mut self) -> Result<(), SimplexError> {
+        if let Some(cap) = self.budget.max_refactors {
+            if self.refactorizations - self.budget_base_refactors >= cap {
+                return Err(SimplexError::BudgetExhausted(BudgetReason::Refactors));
+            }
+        }
         self.factor
             .refactor(&self.csc, &self.basis)
             .map_err(|_| SimplexError::Numerical("singular basis on refactor"))?;
@@ -677,6 +741,7 @@ impl RevisedSolver {
             if steps > limit {
                 return Err(SimplexError::IterLimit(limit));
             }
+            self.check_budget()?;
             if self.factor.due_for_refactor() {
                 self.refactor()?;
             }
@@ -847,6 +912,7 @@ impl RevisedSolver {
             if steps > limit {
                 return Err(SimplexError::IterLimit(limit));
             }
+            self.check_budget()?;
             if self.factor.due_for_refactor() {
                 self.refactor()?;
             }
@@ -1010,8 +1076,10 @@ impl RevisedSolver {
         Ok(())
     }
 
-    /// Two-phase solve from the current (initial) basis.
+    /// Two-phase solve from the current (initial) basis. The installed
+    /// [`SolveBudget`] (if any) meters this call as one attempt.
     pub fn solve(&mut self) -> Result<Solution, SimplexError> {
+        self.arm_budget();
         if !self.phase1_done {
             let any_artificial_basic = self.basis.iter().any(|&j| j >= self.art_base);
             if any_artificial_basic {
@@ -1060,6 +1128,7 @@ impl RevisedSolver {
     /// Requires a completed prior [`Self::solve`].
     pub fn warm_resolve(&mut self) -> Result<Solution, SimplexError> {
         debug_assert!(self.phase1_done, "warm_resolve before any cold solve");
+        self.arm_budget();
         self.recompute_xb();
         self.dual_iterate()?;
         let cost = self.cost.clone();
@@ -1439,5 +1508,123 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Beale's classic cycling LP: every early vertex is degenerate, so
+    /// pivots are spent without objective progress and (without the Bland
+    /// fallback) Dantzig pricing cycles forever. The hard pivot cap must
+    /// surface as a typed `BudgetExhausted`, never a hang.
+    fn beale_degenerate() -> LpProblem {
+        let mut p = LpProblem::new(4);
+        p.set_objective(0, -0.75);
+        p.set_objective(1, 150.0);
+        p.set_objective(2, -0.02);
+        p.set_objective(3, 6.0);
+        p.add(vec![(0, 0.25), (1, -60.0), (2, -0.04), (3, 9.0)], Le, 0.0);
+        p.add(vec![(0, 0.5), (1, -90.0), (2, -0.02), (3, 3.0)], Le, 0.0);
+        p.add(vec![(2, 1.0)], Le, 1.0);
+        p
+    }
+
+    #[test]
+    fn pivot_cap_trips_on_degenerate_instance() {
+        use crate::lp::budget::{BudgetReason, SolveBudget};
+        let p = beale_degenerate();
+        for (pricing, factor) in all_configs() {
+            // unlimited: reaches the known optimum −0.05 at (1/25, 0, 1, 0)
+            let mut full = RevisedSolver::with_config(&p, pricing, factor);
+            let sol = full.solve().unwrap();
+            assert_close(sol.objective, -0.05);
+            assert!(full.stats().pivots >= 2, "{pricing:?}/{factor:?}");
+            // capped below what the solve needs: typed exhaustion, and the
+            // cap is respected exactly (no overshoot past the budget)
+            let mut capped = RevisedSolver::with_config(&p, pricing, factor);
+            capped.set_budget(SolveBudget::with_max_pivots(1));
+            assert_eq!(
+                capped.solve().unwrap_err(),
+                SimplexError::BudgetExhausted(BudgetReason::Pivots),
+                "{pricing:?}/{factor:?}"
+            );
+            assert!(capped.stats().pivots <= 1, "{pricing:?}/{factor:?}");
+        }
+    }
+
+    #[test]
+    fn zero_pivot_budget_starves_before_any_work() {
+        use crate::lp::budget::{BudgetReason, SolveBudget};
+        let p = beale_degenerate();
+        let mut s = RevisedSolver::new(&p);
+        s.set_budget(SolveBudget::with_max_pivots(0));
+        assert_eq!(
+            s.solve().unwrap_err(),
+            SimplexError::BudgetExhausted(BudgetReason::Pivots)
+        );
+        assert_eq!(s.stats().pivots, 0);
+    }
+
+    #[test]
+    fn zero_wall_budget_trips_on_the_clock() {
+        use crate::lp::budget::{BudgetReason, SolveBudget};
+        let p = beale_degenerate();
+        let mut s = RevisedSolver::new(&p);
+        s.set_budget(SolveBudget {
+            max_wall: Some(std::time::Duration::ZERO),
+            ..SolveBudget::default()
+        });
+        assert_eq!(
+            s.solve().unwrap_err(),
+            SimplexError::BudgetExhausted(BudgetReason::WallClock)
+        );
+    }
+
+    #[test]
+    fn generous_budget_is_bit_identical_to_unlimited() {
+        use crate::lp::budget::SolveBudget;
+        let p = beale_degenerate();
+        for (pricing, factor) in all_configs() {
+            let mut free = RevisedSolver::with_config(&p, pricing, factor);
+            let a = free.solve().unwrap();
+            let mut capped = RevisedSolver::with_config(&p, pricing, factor);
+            capped.set_budget(SolveBudget::with_max_pivots(1_000_000));
+            let b = capped.solve().unwrap();
+            // budget checks are pure counter compares: they must not
+            // perturb a single pricing or ratio-test decision
+            assert_eq!(a.x, b.x, "{pricing:?}/{factor:?}");
+            assert_eq!(a.iterations, b.iterations, "{pricing:?}/{factor:?}");
+            assert_eq!(free.stats(), capped.stats(), "{pricing:?}/{factor:?}");
+        }
+    }
+
+    #[test]
+    fn budget_rearms_per_solve_across_warm_repairs() {
+        use crate::lp::budget::{BudgetReason, SolveBudget};
+        // the cap meters each attempt, not the solver lifetime: a sequence
+        // of warm repairs under a per-solve cap keeps succeeding, and a
+        // starved warm repair reports exhaustion instead of looping
+        let build = |l0: f64, l1: f64| {
+            let mut p = LpProblem::new(5);
+            p.set_objective(4, 1.0);
+            p.add(vec![(0, 1.0), (2, 1.0), (4, -1.0)], Le, 0.0);
+            p.add(vec![(1, 1.0), (3, 1.0), (4, -1.0)], Le, 0.0);
+            p.add(vec![(0, 1.0), (1, 1.0)], Eq, l0);
+            p.add(vec![(2, 1.0), (3, 1.0)], Eq, l1);
+            p
+        };
+        let mut s = RevisedSolver::new(&build(10.0, 2.0));
+        s.set_budget(SolveBudget::with_max_pivots(10_000));
+        s.solve().unwrap();
+        for (l0, l1) in [(4.0, 4.0), (20.0, 0.0), (1.0, 7.0)] {
+            s.update_rhs(2, l0);
+            s.update_rhs(3, l1);
+            let sw = s.warm_resolve().unwrap();
+            let sc = solve(&build(l0, l1)).unwrap();
+            assert!((sw.objective - sc.objective).abs() < 1e-6);
+        }
+        s.set_budget(SolveBudget::with_max_pivots(0));
+        s.update_rhs(2, 50.0);
+        assert_eq!(
+            s.warm_resolve().unwrap_err(),
+            SimplexError::BudgetExhausted(BudgetReason::Pivots)
+        );
     }
 }

@@ -12,7 +12,7 @@ use super::problem::{LpProblem, Relation};
 const TOL: f64 = 1e-9;
 
 /// Terminal outcome of a solve that did not produce an optimum.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Clone, Debug, thiserror::Error, PartialEq)]
 pub enum SimplexError {
     /// No feasible point exists (carries the residual phase-1 objective).
     #[error("LP infeasible (phase-1 objective {0} > 0)")]
@@ -23,13 +23,18 @@ pub enum SimplexError {
     /// Pivot budget exhausted — almost certainly numerical cycling.
     #[error("iteration limit {0} exceeded (cycling?)")]
     IterLimit(usize),
+    /// A caller-imposed [`super::SolveBudget`] ran out before optimality
+    /// (deterministic pivot/refactor caps, or the optional wall-clock
+    /// deadline — the [`super::budget::BudgetReason`] says which).
+    #[error("solve budget exhausted ({0})")]
+    BudgetExhausted(super::budget::BudgetReason),
     /// A basis operation broke down numerically.
     #[error("numerical breakdown: {0}")]
     Numerical(&'static str),
 }
 
 /// Optimal solution to an [`LpProblem`].
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Solution {
     /// Values of the original (pre-standard-form) variables.
     pub x: Vec<f64>,

@@ -20,6 +20,7 @@
 //! poisoning or dropping the retained state.
 
 use super::bounds;
+use super::budget::SolveBudget;
 use super::factor::FactorKind;
 use super::problem::LpProblem;
 use super::revised::{Pricing, RevisedSolver, SolveStats};
@@ -139,6 +140,14 @@ pub struct WarmSolver {
     /// backend reports pivots only (it has neither implicit bounds nor a
     /// maintained factorization).
     pub last_stats: SolveStats,
+    /// Why the most recent *warm attempt* failed before the automatic cold
+    /// fallback ran (`None` when the warm path succeeded, was skipped, or
+    /// was never tried). Lets the degradation ladder attribute a cold solve
+    /// to a warm budget exhaustion vs a numerical stall.
+    pub last_warm_failure: Option<SimplexError>,
+    /// Per-solve budget applied to every revised-backend attempt (cold and
+    /// warm). The dense tableau baseline does not enforce budgets.
+    budget: SolveBudget,
 }
 
 impl WarmSolver {
@@ -164,7 +173,24 @@ impl WarmSolver {
             last_iterations: 0,
             last_was_warm: false,
             last_stats: SolveStats::default(),
+            last_warm_failure: None,
+            budget: SolveBudget::default(),
         }
+    }
+
+    /// Set the per-solve budget for all subsequent attempts. Applies to the
+    /// retained revised solver immediately and to every future cold solve.
+    /// The dense tableau backend ignores budgets (ablation baseline only).
+    pub fn set_budget(&mut self, budget: SolveBudget) {
+        self.budget = budget;
+        if let Backend::Revised { slot: Some(s), .. } = &mut self.backend {
+            s.set_budget(budget);
+        }
+    }
+
+    /// The per-solve budget currently in force.
+    pub fn budget(&self) -> SolveBudget {
+        self.budget
     }
 
     /// The backend this solver was built with.
@@ -185,10 +211,12 @@ impl WarmSolver {
     /// Solve from scratch (two-phase primal), replacing any retained basis.
     pub fn solve_cold(&mut self) -> Result<Solution, SimplexError> {
         self.last_was_warm = false;
+        self.last_warm_failure = None;
         match &mut self.backend {
             Backend::Revised { slot, pricing, factor } => {
                 *slot = None;
                 let mut s = RevisedSolver::with_config(&self.problem, *pricing, *factor);
+                s.set_budget(self.budget);
                 let sol = s.solve()?;
                 self.last_iterations = s.iterations;
                 self.last_stats = s.stats();
@@ -284,9 +312,19 @@ impl WarmSolver {
     ) -> Result<Solution, SimplexError> {
         self.apply_updates(rhs_updates, bound_updates);
         match self.try_warm(rhs_updates, bound_updates) {
-            Some(Ok(sol)) => Ok(sol),
-            // no retained basis, or the warm dual stalled/erred: cold
-            Some(Err(_)) | None => self.solve_cold(),
+            Some(Ok(sol)) => {
+                self.last_warm_failure = None;
+                Ok(sol)
+            }
+            // the warm dual stalled, erred, or ran out of budget: cold,
+            // remembering why the warm rung was skipped
+            Some(Err(warm_err)) => {
+                let cold = self.solve_cold();
+                self.last_warm_failure = Some(warm_err);
+                cold
+            }
+            // no retained basis yet: plain cold solve
+            None => self.solve_cold(),
         }
     }
 
@@ -550,6 +588,33 @@ mod tests {
             let s = warm.resolve(&[(2, 8.0)]).unwrap();
             assert!((s.objective - 5.0).abs() < 1e-7, "{kind:?}");
             assert!(!warm.last_was_warm, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn budget_threads_through_warm_solver() {
+        use crate::lp::budget::SolveBudget;
+        // revised cells only — the dense tableau baseline ignores budgets
+        for kind in all_kinds() {
+            if kind == SolverKind::DenseTableau {
+                continue;
+            }
+            let mut warm = WarmSolver::with_kind(lpp1_toy(10.0, 2.0), kind);
+            warm.set_budget(SolveBudget::with_max_pivots(0));
+            let err = warm.solve_cold().unwrap_err();
+            assert!(matches!(err, SimplexError::BudgetExhausted(_)), "{kind:?}: {err}");
+            // lift the cap: the same solver state recovers
+            warm.set_budget(SolveBudget::unlimited());
+            warm.solve_cold().unwrap();
+            // starved again: the warm attempt exhausts, the automatic cold
+            // fallback exhausts too, and the warm failure is attributed
+            warm.set_budget(SolveBudget::with_max_pivots(0));
+            let err = warm.resolve(&[(2, 40.0)]).unwrap_err();
+            assert!(matches!(err, SimplexError::BudgetExhausted(_)), "{kind:?}: {err}");
+            assert!(
+                matches!(warm.last_warm_failure, Some(SimplexError::BudgetExhausted(_))),
+                "{kind:?}: warm failure not recorded"
+            );
         }
     }
 }

@@ -1,0 +1,282 @@
+//! Greedy fallback planners — the sub-LP rungs of the degradation ladder.
+//!
+//! When both LP rungs fail (budget exhausted, numerical stall, poisoned
+//! inputs), the scheduler must still emit a feasible plan *this step*. The
+//! planners here are deterministic, allocation-light, and never fail:
+//!
+//! * [`greedy_fraction`] — least-loaded water-fill (~LPT): experts in
+//!   descending-load order each spread their load over their replicas so
+//!   the touched GPUs end at a common level. Provably within a factor
+//!   `G_used / R_min` of the LP optimum (see below), and in practice far
+//!   closer.
+//! * [`passthrough_fraction`] — vanilla-EP passthrough: each expert's full
+//!   load on its first replica, i.e. no balancing at all. The engine-level
+//!   last resort when the scheduling workers themselves are gone.
+//!
+//! Both return the same `frac[e][r]` fractional-load matrix the LP path
+//! produces, so the existing integer rounding
+//! ([`super::rounding::round_replica_loads`], which conserves every
+//! expert's total exactly) and token routing (Algorithm 1) run unchanged
+//! downstream — a fallback plan is feasible by the same construction that
+//! makes an LP plan feasible.
+//!
+//! # The proven approximation bound
+//!
+//! Let `T` be the batch's total tokens, `R_min = min_e |replicas(e)|`, and
+//! `G_used` the number of GPUs hosting at least one replica. Water-filling
+//! expert `e` either stays below an already-achieved GPU level (the max
+//! does not grow) or raises *all* of `e`'s replicas to the common level
+//! `(load_e + Σ prior load on replicas(e)) / |replicas(e)| ≤ T / R_min`.
+//! Hence `greedy_max ≤ T / R_min`. The LP optimum is at least `T /
+//! G_used` (all tokens land on the used GPUs), so
+//!
+//! ```text
+//! greedy_max ≤ OPT_LP · G_used / R_min
+//! ```
+//!
+//! — the bound `tests/chaos.rs`'s property test pins over the fuzz
+//! instance generators.
+
+use super::LoadMatrix;
+use crate::placement::Placement;
+
+/// Deterministic least-loaded water-fill. Experts are processed in
+/// descending total-load order (ties by ascending index); each expert's
+/// load is split over its replicas so the lowest-loaded host GPUs rise to
+/// a common level. Returns the `frac[e][r]` matrix (absolute fractional
+/// loads, aligned with `placement.replicas`), non-negative and summing to
+/// each expert's total exactly up to floating error — the same contract
+/// the LP solution path feeds into integer rounding.
+///
+/// `base` adds pre-existing per-GPU load (App. A.2 pipelining); pass `&[]`
+/// for none.
+pub fn greedy_fraction(placement: &Placement, loads: &LoadMatrix, base: &[u64]) -> Vec<Vec<f64>> {
+    assert!(base.is_empty() || base.len() == placement.num_gpus);
+    let mut gpu_load: Vec<f64> = if base.is_empty() {
+        vec![0.0; placement.num_gpus]
+    } else {
+        base.iter().map(|&b| b as f64).collect()
+    };
+    let mut frac: Vec<Vec<f64>> = placement
+        .replicas
+        .iter()
+        .map(|grp| vec![0.0; grp.len()])
+        .collect();
+
+    // descending load, ascending index — fully deterministic
+    let mut order: Vec<usize> = (0..placement.num_experts).collect();
+    order.sort_by_key(|&e| (std::cmp::Reverse(loads.expert_load(e)), e));
+
+    for e in order {
+        let load = loads.expert_load(e) as f64;
+        if load == 0.0 {
+            continue;
+        }
+        let hosts = &placement.replicas[e];
+        // replicas sorted by current host load (ties by replica index)
+        let mut by_load: Vec<usize> = (0..hosts.len()).collect();
+        by_load.sort_by(|&a, &b| {
+            gpu_load[hosts[a]]
+                .partial_cmp(&gpu_load[hosts[b]])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        // water-fill: bring the lowest j replicas to a common level, where
+        // j is the largest prefix the load can lift to (at least) the next
+        // replica's level
+        let levels: Vec<f64> = by_load.iter().map(|&r| gpu_load[hosts[r]]).collect();
+        let mut fill = levels.len();
+        let mut prefix_sum = 0.0;
+        for (j, &lv) in levels.iter().enumerate() {
+            if j > 0 && j as f64 * lv - prefix_sum >= load {
+                fill = j;
+                break;
+            }
+            prefix_sum += lv;
+        }
+        let prefix: f64 = levels[..fill].iter().sum();
+        let level = (load + prefix) / fill as f64;
+        let mut assigned = 0.0;
+        for (j, &r) in by_load[..fill].iter().enumerate() {
+            let share = (level - levels[j]).max(0.0);
+            frac[e][r] = share;
+            gpu_load[hosts[r]] += share;
+            assigned += share;
+        }
+        // absorb floating residue on the (now lowest-ish) first replica so
+        // the expert's total is conserved exactly enough for rounding
+        let residue = load - assigned;
+        if residue != 0.0 {
+            let r = by_load[0];
+            frac[e][r] = (frac[e][r] + residue).max(0.0);
+            gpu_load[hosts[r]] += residue;
+        }
+    }
+    frac
+}
+
+/// Vanilla-EP passthrough plan: each expert's full load on its first
+/// replica. No balancing — the always-available rung-3 plan.
+pub fn passthrough_fraction(placement: &Placement, loads: &LoadMatrix) -> Vec<Vec<f64>> {
+    (0..placement.num_experts)
+        .map(|e| {
+            let k = placement.replica_count(e);
+            let mut row = vec![0.0; k];
+            row[0] = loads.expert_load(e) as f64;
+            row
+        })
+        .collect()
+}
+
+/// Lower bound on the LPP-1 optimum (fractional max GPU load):
+/// `max(T / G_used, max_e load_e / |replicas(e)|)`. Used to price fallback
+/// plans ([`crate::stats::DegradationStats::fallback_excess_sum`]) without
+/// needing the LP to have solved.
+pub fn lp_lower_bound(placement: &Placement, loads: &LoadMatrix) -> f64 {
+    let mut used = vec![false; placement.num_gpus];
+    for grp in &placement.replicas {
+        for &g in grp {
+            used[g] = true;
+        }
+    }
+    let g_used = used.iter().filter(|&&u| u).count().max(1);
+    let total = loads.total() as f64;
+    let mut bound = total / g_used as f64;
+    for e in 0..placement.num_experts {
+        let per_replica = loads.expert_load(e) as f64 / placement.replica_count(e) as f64;
+        bound = bound.max(per_replica);
+    }
+    bound
+}
+
+/// Relative excess of a plan's max GPU load over the LP lower bound
+/// (`0.0` when the bound is zero — an empty batch has nothing to excess).
+pub fn excess_over_bound(max_gpu_load: u64, lower_bound: f64) -> f64 {
+    if lower_bound <= 0.0 {
+        0.0
+    } else {
+        (max_gpu_load as f64 - lower_bound).max(0.0) / lower_bound
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::cayley::cayley_graph_placement;
+    use crate::rng::Rng;
+    use crate::scheduler::rounding::round_replica_loads;
+
+    fn ring4() -> Placement {
+        Placement::from_replicas(4, vec![vec![0, 3], vec![0, 1], vec![1, 2], vec![2, 3]])
+    }
+
+    fn random_lm(seed: u64, e: usize, g: usize, n: u64) -> LoadMatrix {
+        let mut rng = Rng::new(seed);
+        let mut lm = LoadMatrix::zeros(e, g);
+        for _ in 0..n {
+            lm.add(rng.below(e as u64) as usize, rng.below(g as u64) as usize, 1);
+        }
+        lm
+    }
+
+    fn gpu_loads_of(p: &Placement, frac: &[Vec<f64>]) -> Vec<f64> {
+        let mut out = vec![0.0; p.num_gpus];
+        for (e, grp) in p.replicas.iter().enumerate() {
+            for (r, &g) in grp.iter().enumerate() {
+                out[g] += frac[e][r];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn greedy_conserves_and_stays_nonnegative() {
+        let p = cayley_graph_placement(8, 16);
+        for seed in 0..10 {
+            let lm = random_lm(seed, 16, 8, 2000);
+            let frac = greedy_fraction(&p, &lm, &[]);
+            for e in 0..16 {
+                let sum: f64 = frac[e].iter().sum();
+                assert!(
+                    (sum - lm.expert_load(e) as f64).abs() < 1e-6,
+                    "seed {seed} expert {e}: {sum} vs {}",
+                    lm.expert_load(e)
+                );
+                assert!(frac[e].iter().all(|&x| x >= 0.0), "seed {seed} expert {e}");
+            }
+            // rounding accepts the matrix and conserves exactly
+            let rl = round_replica_loads(&frac, &lm.expert_loads());
+            for e in 0..16 {
+                assert_eq!(rl[e].iter().sum::<u64>(), lm.expert_load(e));
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_balances_the_figure3c_example() {
+        // loads 4,6,6,8 on the ring: the LP reaches all-6; greedy must be
+        // within its proven bound and in fact lands at the optimum here
+        let p = ring4();
+        let mut lm = LoadMatrix::zeros(4, 4);
+        for (e, &l) in [4u64, 6, 6, 8].iter().enumerate() {
+            lm.set(e, 0, l);
+        }
+        let frac = greedy_fraction(&p, &lm, &[]);
+        let gl = gpu_loads_of(&p, &frac);
+        let max = gl.iter().cloned().fold(0.0, f64::max);
+        assert!(max <= 6.0 + 1e-9, "greedy max {max}, loads {gl:?}");
+    }
+
+    #[test]
+    fn greedy_respects_proven_bound() {
+        let p = cayley_graph_placement(8, 16);
+        let r_min = (0..16).map(|e| p.replica_count(e)).min().unwrap();
+        for seed in 0..10 {
+            let lm = random_lm(100 + seed, 16, 8, 3000);
+            let frac = greedy_fraction(&p, &lm, &[]);
+            let max = gpu_loads_of(&p, &frac).iter().cloned().fold(0.0, f64::max);
+            assert!(
+                max <= lm.total() as f64 / r_min as f64 + 1e-6,
+                "seed {seed}: {max} > T/R_min"
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_accounts_for_base_loads() {
+        // gpu 0 pre-loaded: greedy should steer away from it
+        let p = ring4();
+        let mut lm = LoadMatrix::zeros(4, 4);
+        lm.set(1, 0, 10); // expert 1 on gpus {0,1}
+        let frac = greedy_fraction(&p, &lm, &[100, 0, 0, 0]);
+        assert_eq!(frac[1][0], 0.0, "all load should avoid the busy gpu");
+        assert!((frac[1][1] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn passthrough_puts_everything_on_first_replica() {
+        let p = ring4();
+        let lm = random_lm(7, 4, 4, 500);
+        let frac = passthrough_fraction(&p, &lm);
+        for e in 0..4 {
+            assert_eq!(frac[e][0], lm.expert_load(e) as f64);
+            assert!(frac[e][1..].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn lower_bound_and_excess() {
+        let p = ring4();
+        let lm = LoadMatrix::from_rows(vec![
+            vec![4, 0, 0, 0],
+            vec![6, 0, 0, 0],
+            vec![6, 0, 0, 0],
+            vec![8, 0, 0, 0],
+        ]);
+        let lb = lp_lower_bound(&p, &lm);
+        assert!((lb - 6.0).abs() < 1e-9, "T/G = 24/4 = 6, got {lb}");
+        assert_eq!(excess_over_bound(6, lb), 0.0);
+        assert!((excess_over_bound(9, lb) - 0.5).abs() < 1e-9);
+        assert_eq!(excess_over_bound(5, 0.0), 0.0);
+    }
+}

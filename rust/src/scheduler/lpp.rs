@@ -27,12 +27,20 @@
 
 use std::time::Instant;
 
+use super::fallback;
 use super::rounding::round_replica_loads;
 use super::routing::route_tokens;
 use super::{LoadMatrix, Schedule, ScheduleMode, ScheduleStats, SchedulerOptions};
-use crate::lp::{LpProblem, Relation, SolveStats, WarmSolver};
+use crate::lp::{LpProblem, Relation, SimplexError, SolveBudget, SolveStats, WarmSolver};
 use crate::placement::Placement;
+use crate::stats::DegradationRung;
 use crate::topology::Topology;
+
+/// Largest magnitude accepted into the LP's rhs/bound updates. Token
+/// counts live far below this; anything beyond (or non-finite) marks a
+/// corrupted load matrix, and the solve is skipped in favor of the greedy
+/// fallback rather than feeding the simplex ratio tests garbage.
+const MAX_LP_LOAD: f64 = 9.0e15;
 
 /// Stateful MicroEP scheduler for one MicroEP group.
 pub struct MicroEpScheduler {
@@ -66,6 +74,13 @@ pub struct MicroEpScheduler {
     gpu_rows_dirty: bool,
     warm: WarmSolver,
     solved_once: bool,
+    /// Layer id used for fault-plan lookups (engine workers pin one
+    /// scheduler per layer; standalone schedulers keep the default 0).
+    layer: usize,
+    /// Next commit step for fault-plan lookups. Advances on every commit
+    /// solve; the engine overrides it per job ([`Self::schedule_at`]) so
+    /// the count survives worker respawns.
+    step: usize,
 }
 
 impl MicroEpScheduler {
@@ -78,6 +93,8 @@ impl MicroEpScheduler {
         }
         let mut b = Builder::new(&placement, topo.as_ref(), &opts.mode);
         let problem = b.build();
+        let mut warm = WarmSolver::with_kind(problem, opts.solver);
+        warm.set_budget(opts.budget);
         MicroEpScheduler {
             placement,
             topo,
@@ -90,10 +107,18 @@ impl MicroEpScheduler {
             gpu_rows: b.gpu_rows,
             base_updates: Vec::new(),
             gpu_rows_dirty: false,
-            warm: WarmSolver::with_kind(problem, opts.solver),
+            warm,
             solved_once: false,
+            layer: 0,
+            step: 0,
             opts,
         }
+    }
+
+    /// Set the layer id used for fault-plan lookups
+    /// ([`SchedulerOptions::faults`]). A no-op for fault-free schedulers.
+    pub fn set_layer(&mut self, layer: usize) {
+        self.layer = layer;
     }
 
     /// The options this scheduler was built with.
@@ -123,7 +148,31 @@ impl MicroEpScheduler {
     /// Schedule one micro-batch.
     pub fn schedule(&mut self, loads: &LoadMatrix) -> Schedule {
         let use_warm = self.opts.warm_start && self.solved_once;
-        self.schedule_inner(loads, use_warm)
+        self.schedule_inner(loads, use_warm, true)
+    }
+
+    /// Commit-schedule at an explicit step index. The engine workers use
+    /// this so the fault-plan step count is authoritative even when a
+    /// respawned worker replays re-submitted jobs.
+    pub fn schedule_at(&mut self, step: usize, loads: &LoadMatrix) -> Schedule {
+        self.step = step;
+        self.schedule(loads)
+    }
+
+    /// Cold commit-schedule at an explicit step index (speculation-miss
+    /// path through the engine).
+    pub fn schedule_cold_at(&mut self, step: usize, loads: &LoadMatrix) -> Schedule {
+        self.step = step;
+        self.schedule_cold(loads)
+    }
+
+    /// Speculative pre-solve: primes the warm-start basis exactly like
+    /// [`Self::schedule`] but is *not* a committed step — the fault plan is
+    /// not consulted and the step counter does not advance. (With no fault
+    /// plan this is behaviorally identical to `schedule`.)
+    pub fn speculate(&mut self, loads: &LoadMatrix) -> Schedule {
+        let use_warm = self.opts.warm_start && self.solved_once;
+        self.schedule_inner(loads, use_warm, false)
     }
 
     /// Schedule one micro-batch from scratch, ignoring (and replacing) any
@@ -132,10 +181,24 @@ impl MicroEpScheduler {
     /// from the actuals to be worth repairing, and a fresh solve both
     /// bounds the commit latency and re-anchors the warm state.
     pub fn schedule_cold(&mut self, loads: &LoadMatrix) -> Schedule {
-        self.schedule_inner(loads, false)
+        self.schedule_inner(loads, false, true)
     }
 
-    fn schedule_inner(&mut self, loads: &LoadMatrix, use_warm: bool) -> Schedule {
+    /// Per-GPU base loads implied by the transient `base_updates` rhs
+    /// overrides (empty when no base is installed) — lets the greedy
+    /// fallback account for the App. A.2 pipelined EP share too.
+    fn base_loads(&self) -> Vec<u64> {
+        if self.base_updates.is_empty() {
+            return Vec::new();
+        }
+        let mut base = vec![0u64; self.placement.num_gpus];
+        for (&(_, g), &(_, rhs)) in self.gpu_rows.iter().zip(&self.base_updates) {
+            base[g] = (-rhs) as u64;
+        }
+        base
+    }
+
+    fn schedule_inner(&mut self, loads: &LoadMatrix, use_warm: bool, commit: bool) -> Schedule {
         assert_eq!(loads.num_experts, self.placement.num_experts);
         assert_eq!(loads.num_gpus, self.placement.num_gpus);
         let t0 = Instant::now();
@@ -189,29 +252,95 @@ impl MicroEpScheduler {
             }
         }
 
-        // ---- solve ----
-        let (frac, stats_lp) = match self.warm.solve_with_bounds(&updates, &bound_updates, use_warm)
-        {
-            Ok(sol) => {
+        // ---- fault injection (chaos harness; `faults` is None outside it) ----
+        let fault = if commit {
+            let f = self.opts.faults.as_ref().and_then(|f| f.at(self.step, self.layer));
+            self.step += 1;
+            f
+        } else {
+            None
+        };
+        let mut starved = false;
+        match fault {
+            Some(crate::faults::Fault::BudgetStarvation) => starved = true,
+            Some(crate::faults::Fault::NanLoads) => {
+                if let Some(u) = updates.first_mut() {
+                    u.1 = f64::NAN;
+                }
+            }
+            Some(crate::faults::Fault::OverflowLoads) => {
+                if let Some(u) = updates.first_mut() {
+                    u.1 = 1e300;
+                }
+            }
+            Some(crate::faults::Fault::ForceInfeasible) => {
+                // Σ x_e = −1 with x ≥ 0 is unsatisfiable in every mode
+                if let Some(&row) = self.eq_row.first() {
+                    if let Some(u) = updates.iter_mut().find(|u| u.0 == row) {
+                        u.1 = -1.0;
+                    }
+                }
+            }
+            // worker panics are the engine pool's business, not ours
+            _ => {}
+        }
+
+        // ---- solve: rungs 0–2 of the degradation ladder ----
+        // Rung 0 (warm LP) and rung 1 (cold LP, including the automatic
+        // warm→cold fallback inside the solver) run only on validated
+        // inputs; any failure drops to rung 2, the greedy water-fill,
+        // which works from the true integer loads and cannot fail.
+        let inputs_valid = updates.iter().all(|&(_, v)| v.is_finite() && v.abs() <= MAX_LP_LOAD)
+            && bound_updates.iter().all(|&(_, v)| v.is_finite() && v.abs() <= MAX_LP_LOAD);
+        if starved {
+            self.warm.set_budget(SolveBudget::with_max_pivots(0));
+        }
+        let lp_result = if inputs_valid {
+            Some(self.warm.solve_with_bounds(&updates, &bound_updates, use_warm))
+        } else {
+            log::warn!("corrupted LP inputs (non-finite or overflowing); using greedy fallback");
+            None
+        };
+        if starved {
+            self.warm.set_budget(self.opts.budget);
+        }
+        // a budget-exhausted *warm* attempt that fell through to a cold
+        // solve still counts as a budget event (the ladder descended a rung)
+        let mut budget_exhausted = match (&lp_result, &self.warm.last_warm_failure) {
+            (Some(_), Some(SimplexError::BudgetExhausted(r))) => Some(*r),
+            _ => None,
+        };
+        let (frac, stats_lp, rung, lower_bound) = match lp_result {
+            Some(Ok(sol)) => {
                 self.solved_once = true;
                 let frac: Vec<Vec<f64>> = self
                     .var_of
                     .iter()
                     .map(|vars| vars.iter().map(|&v| sol.x[v]).collect())
                     .collect();
-                (frac, (self.warm.last_stats, self.warm.last_was_warm, sol.objective))
+                let rung = if self.warm.last_was_warm {
+                    DegradationRung::WarmLp
+                } else {
+                    DegradationRung::ColdLp
+                };
+                (frac, (self.warm.last_stats, self.warm.last_was_warm, sol.objective), rung, None)
             }
-            Err(e) => {
-                // Defensive fallback (should not happen: LPP 1/4 are always
-                // feasible): split each expert's load evenly over replicas.
-                log::warn!("LP solve failed ({e}); falling back to even split");
-                let frac: Vec<Vec<f64>> = (0..self.placement.num_experts)
-                    .map(|ei| {
-                        let k = self.placement.replica_count(ei);
-                        vec![loads.expert_load(ei) as f64 / k as f64; k]
-                    })
-                    .collect();
-                (frac, (SolveStats::default(), false, f64::NAN))
+            other => {
+                if let Some(Err(e)) = other {
+                    if let SimplexError::BudgetExhausted(r) = &e {
+                        budget_exhausted = Some(*r);
+                    }
+                    log::warn!("LP solve failed ({e}); degrading to greedy fallback");
+                }
+                let base = self.base_loads();
+                let frac = fallback::greedy_fraction(&self.placement, loads, &base);
+                let lower = fallback::lp_lower_bound(&self.placement, loads);
+                (
+                    frac,
+                    (SolveStats::default(), false, f64::NAN),
+                    DegradationRung::Greedy,
+                    Some(lower),
+                )
             }
         };
 
@@ -239,9 +368,15 @@ impl MicroEpScheduler {
                 lp_objective: stats_lp.2,
                 max_gpu_load: 0,
                 solve_ns: 0,
+                rung,
+                budget_exhausted,
+                fallback_excess: 0.0,
             },
         };
         sched.stats.max_gpu_load = sched.gpu_loads(&self.placement).into_iter().max().unwrap_or(0);
+        if let Some(lb) = lower_bound {
+            sched.stats.fallback_excess = fallback::excess_over_bound(sched.stats.max_gpu_load, lb);
+        }
         sched.stats.solve_ns = t0.elapsed().as_nanos() as u64;
         sched
     }
@@ -648,5 +783,111 @@ mod tests {
         let sched = s.schedule(&lm);
         assert_eq!(sched.gpu_loads(&p), vec![0, 0, 0, 0]);
         assert!(sched.routes.is_empty());
+    }
+
+    #[test]
+    fn lp_rungs_are_recorded() {
+        let p = ring4();
+        let lm = uniform_inputs(&[4, 6, 6, 8], 4);
+        let mut s = MicroEpScheduler::new(p, None, SchedulerOptions::default());
+        let first = s.schedule(&lm);
+        assert_eq!(first.stats.rung, crate::stats::DegradationRung::ColdLp);
+        assert_eq!(first.stats.budget_exhausted, None);
+        assert_eq!(first.stats.fallback_excess, 0.0);
+        let second = s.schedule(&lm);
+        assert_eq!(second.stats.rung, crate::stats::DegradationRung::WarmLp);
+    }
+
+    #[test]
+    fn budget_starved_scheduler_degrades_to_greedy() {
+        let p = ring4();
+        let lm = uniform_inputs(&[4, 6, 6, 8], 4);
+        let mut s = MicroEpScheduler::new(
+            p.clone(),
+            None,
+            SchedulerOptions {
+                budget: crate::lp::SolveBudget::with_max_pivots(0),
+                ..Default::default()
+            },
+        );
+        let sched = s.schedule(&lm);
+        assert_eq!(sched.stats.rung, crate::stats::DegradationRung::Greedy);
+        assert_eq!(sched.stats.budget_exhausted, Some(crate::lp::BudgetReason::Pivots));
+        assert!(sched.stats.lp_objective.is_nan(), "no LP rung produced this plan");
+        assert!(sched.stats.fallback_excess >= 0.0);
+        // the plan is still feasible: every expert's total conserved, and
+        // the greedy bound T / R_min = 24 / 2 holds
+        for e in 0..4 {
+            assert_eq!(sched.replica_loads[e].iter().sum::<u64>(), lm.expert_load(e));
+        }
+        assert!(sched.stats.max_gpu_load <= 12);
+    }
+
+    #[test]
+    fn injected_faults_degrade_without_breaking_feasibility() {
+        use crate::faults::{Fault, FaultPlan};
+        use crate::stats::DegradationRung;
+        let p = ring4();
+        let plan = FaultPlan::with_faults(vec![
+            (1, 0, Fault::NanLoads),
+            (2, 0, Fault::ForceInfeasible),
+            (3, 0, Fault::BudgetStarvation),
+            (4, 0, Fault::OverflowLoads),
+        ]);
+        let mut s = MicroEpScheduler::new(
+            p,
+            None,
+            SchedulerOptions {
+                faults: Some(std::sync::Arc::new(plan)),
+                ..Default::default()
+            },
+        );
+        let lm = uniform_inputs(&[13, 7, 22, 5], 4);
+        for step in 0..6 {
+            let sched = s.schedule(&lm);
+            for e in 0..4 {
+                assert_eq!(
+                    sched.replica_loads[e].iter().sum::<u64>(),
+                    lm.expert_load(e),
+                    "step {step} expert {e}"
+                );
+            }
+            let expect_greedy = (1..=4).contains(&step);
+            assert_eq!(
+                sched.stats.rung == DegradationRung::Greedy,
+                expect_greedy,
+                "step {step}: rung {:?}",
+                sched.stats.rung
+            );
+            if step == 3 {
+                assert_eq!(
+                    sched.stats.budget_exhausted,
+                    Some(crate::lp::BudgetReason::Pivots),
+                    "starvation step must report the pivot cap"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn speculate_does_not_consume_fault_slots() {
+        use crate::faults::{Fault, FaultPlan};
+        use crate::stats::DegradationRung;
+        let plan = FaultPlan::with_faults(vec![(1, 0, Fault::NanLoads)]);
+        let mut s = MicroEpScheduler::new(
+            ring4(),
+            None,
+            SchedulerOptions {
+                faults: Some(std::sync::Arc::new(plan)),
+                ..Default::default()
+            },
+        );
+        let lm = uniform_inputs(&[4, 6, 6, 8], 4);
+        let a = s.schedule(&lm); // commit step 0
+        assert_ne!(a.stats.rung, DegradationRung::Greedy);
+        let sp = s.speculate(&lm); // not a commit: step stays at 1
+        assert_ne!(sp.stats.rung, DegradationRung::Greedy);
+        let b = s.schedule(&lm); // commit step 1 — the injected NaN fires here
+        assert_eq!(b.stats.rung, DegradationRung::Greedy);
     }
 }

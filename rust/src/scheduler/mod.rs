@@ -16,6 +16,7 @@
 //! bit-identical schedules.
 
 pub mod distributed;
+pub mod fallback;
 pub mod flow;
 pub mod lpp;
 pub mod rounding;
@@ -115,12 +116,22 @@ pub struct ScheduleStats {
     pub lp_refactors: usize,
     /// whether the warm path was taken
     pub warm: bool,
-    /// LP objective (fractional optimal max GPU load, or comp+α·comm)
+    /// LP objective (fractional optimal max GPU load, or comp+α·comm);
+    /// `NaN` when no LP rung produced the plan
     pub lp_objective: f64,
     /// max GPU load after integer rounding
     pub max_gpu_load: u64,
     /// wall time of the LP solve + routing, nanoseconds
     pub solve_ns: u64,
+    /// which rung of the degradation ladder produced this plan
+    pub rung: crate::stats::DegradationRung,
+    /// why a solve attempt ran out of [`crate::lp::SolveBudget`], when one
+    /// did (the plan then came from a lower rung, or from the cold rung
+    /// after a budget-exhausted warm attempt)
+    pub budget_exhausted: Option<crate::lp::BudgetReason>,
+    /// for fallback rungs: `(plan max load − LP lower bound) / LP lower
+    /// bound`, the balance price of degrading; 0.0 on LP rungs
+    pub fallback_excess: f64,
 }
 
 /// A complete per-micro-batch schedule.
@@ -212,6 +223,15 @@ pub struct SchedulerOptions {
     /// ([`crate::engine::EngineMode`]). Ignored by a single
     /// [`MicroEpScheduler`].
     pub engine: crate::engine::EngineMode,
+    /// Per-solve resource budget threaded down to the LP backend. The
+    /// default is unlimited, which keeps every solve bit-identical to a
+    /// budget-free build; capped solves that exhaust degrade down the
+    /// ladder (cold LP → greedy) instead of blocking the step.
+    pub budget: crate::lp::SolveBudget,
+    /// Deterministic fault-injection plan consulted at each `(step, layer)`
+    /// — the chaos-test harness. `None` (the default, and the only value
+    /// the config round-trip produces) injects nothing and adds no work.
+    pub faults: Option<std::sync::Arc<crate::faults::FaultPlan>>,
 }
 
 impl Default for SchedulerOptions {
@@ -223,6 +243,8 @@ impl Default for SchedulerOptions {
             topo_aware_routing: false,
             solver: crate::lp::SolverKind::default(),
             engine: crate::engine::EngineMode::Barrier,
+            budget: crate::lp::SolveBudget::unlimited(),
+            faults: None,
         }
     }
 }

@@ -232,6 +232,116 @@ impl EngineStats {
     }
 }
 
+/// Which rung of the robustness ladder produced a schedule: warm LP →
+/// cold LP → greedy least-loaded fallback → vanilla-EP passthrough
+/// (see `ARCHITECTURE.md` §8). Lower rungs are better-balanced; the
+/// ladder only descends when a rung fails or runs out of
+/// [`crate::lp::SolveBudget`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DegradationRung {
+    /// Warm-started LP repair succeeded (rung 0, the steady-state path).
+    WarmLp,
+    /// Cold LP solve succeeded (rung 1; also every first solve).
+    #[default]
+    ColdLp,
+    /// Both LP attempts failed or exhausted their budget: deterministic
+    /// greedy least-loaded water-fill over the replicas (rung 2).
+    Greedy,
+    /// Engine-level last resort: vanilla-EP passthrough plan (rung 3),
+    /// used when the scheduling workers themselves are unrecoverable.
+    Passthrough,
+}
+
+/// Degradation-ladder counters: how often each rung produced the plan,
+/// why solve budgets ran out, and how far fallback plans were from the
+/// LP-quality balance. Aggregated per step in [`StepStats`] and over a
+/// balancer's lifetime in [`BalancerStats`]; the chaos suite asserts
+/// these match an injected [`crate::faults::FaultPlan`] exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DegradationStats {
+    /// Plans produced by a successful warm LP repair (rung 0).
+    pub warm_lp: u64,
+    /// Plans produced by a successful cold LP solve (rung 1).
+    pub cold_lp: u64,
+    /// Plans produced by the greedy least-loaded fallback (rung 2).
+    pub greedy: u64,
+    /// Plans produced by vanilla-EP passthrough (rung 3).
+    pub passthrough: u64,
+    /// Solve attempts that exhausted their pivot cap.
+    pub budget_pivots: u64,
+    /// Solve attempts that exhausted their refactorization cap.
+    pub budget_refactors: u64,
+    /// Solve attempts that blew their wall-clock deadline.
+    pub budget_wall: u64,
+    /// Sum over fallback plans of `(plan max load − LP lower bound) /
+    /// LP lower bound` — the imbalance price paid for degrading. Divide
+    /// by `greedy + passthrough` for the mean excess.
+    pub fallback_excess_sum: f64,
+}
+
+impl DegradationStats {
+    /// Record one schedule's rung, optional budget-exhaustion reason, and
+    /// (for fallback rungs) its imbalance excess over the LP lower bound.
+    pub fn record(
+        &mut self,
+        rung: DegradationRung,
+        budget: Option<crate::lp::BudgetReason>,
+        fallback_excess: f64,
+    ) {
+        match rung {
+            DegradationRung::WarmLp => self.warm_lp += 1,
+            DegradationRung::ColdLp => self.cold_lp += 1,
+            DegradationRung::Greedy => self.greedy += 1,
+            DegradationRung::Passthrough => self.passthrough += 1,
+        }
+        match budget {
+            Some(crate::lp::BudgetReason::Pivots) => self.budget_pivots += 1,
+            Some(crate::lp::BudgetReason::Refactors) => self.budget_refactors += 1,
+            Some(crate::lp::BudgetReason::WallClock) => self.budget_wall += 1,
+            None => {}
+        }
+        if matches!(rung, DegradationRung::Greedy | DegradationRung::Passthrough)
+            && fallback_excess.is_finite()
+        {
+            self.fallback_excess_sum += fallback_excess;
+        }
+    }
+
+    /// Fold another accumulator into this one.
+    pub fn absorb(&mut self, other: &DegradationStats) {
+        self.warm_lp += other.warm_lp;
+        self.cold_lp += other.cold_lp;
+        self.greedy += other.greedy;
+        self.passthrough += other.passthrough;
+        self.budget_pivots += other.budget_pivots;
+        self.budget_refactors += other.budget_refactors;
+        self.budget_wall += other.budget_wall;
+        self.fallback_excess_sum += other.fallback_excess_sum;
+    }
+
+    /// Total plans recorded across all rungs.
+    pub fn total(&self) -> u64 {
+        self.warm_lp + self.cold_lp + self.greedy + self.passthrough
+    }
+
+    /// Fraction of plans produced by an LP rung (1.0 when none recorded —
+    /// an empty run has not degraded).
+    pub fn lp_rate(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            1.0
+        } else {
+            (self.warm_lp + self.cold_lp) as f64 / total as f64
+        }
+    }
+
+    /// Plans produced below the LP rungs (the silent-fallback detector the
+    /// `session_sweep` CI column watches).
+    pub fn fallbacks(&self) -> u64 {
+        self.greedy + self.passthrough
+    }
+}
+
 /// Unified per-step scheduling diagnostics reported by every
 /// [`crate::balancer::Balancer`] in its
 /// [`crate::balancer::StepOutput`]. Static systems (vanilla EP, padding)
@@ -257,6 +367,9 @@ pub struct StepStats {
     pub prep_seconds: f64,
     /// Max per-GPU compute load over all of the step's layers, tokens.
     pub max_gpu_load: u64,
+    /// Degradation-ladder counters for the step's layers. Static policies
+    /// (vanilla EP, padding) leave this at zero — they have no ladder.
+    pub degradation: DegradationStats,
 }
 
 /// Cumulative counters over a [`crate::balancer::Balancer`]'s lifetime
@@ -284,6 +397,8 @@ pub struct BalancerStats {
     pub prep_seconds: f64,
     /// Max per-GPU compute load ever observed, tokens.
     pub max_gpu_load: u64,
+    /// Cumulative degradation-ladder counters.
+    pub degradation: DegradationStats,
 }
 
 impl BalancerStats {
@@ -299,6 +414,7 @@ impl BalancerStats {
         self.sched_seconds += step.sched_seconds;
         self.prep_seconds += step.prep_seconds;
         self.max_gpu_load = self.max_gpu_load.max(step.max_gpu_load);
+        self.degradation.absorb(&step.degradation);
     }
 
     /// Mean scheduling seconds per executed step (0 before the first).
@@ -418,6 +534,38 @@ mod tests {
         assert_eq!(b.max_gpu_load, 100);
         assert!((b.sched_seconds_per_step() - 0.25).abs() < 1e-12);
         assert_eq!(BalancerStats::default().sched_seconds_per_step(), 0.0);
+    }
+
+    #[test]
+    fn degradation_stats_record_and_absorb() {
+        use crate::lp::BudgetReason;
+        let mut d = DegradationStats::default();
+        d.record(DegradationRung::WarmLp, None, 0.0);
+        d.record(DegradationRung::ColdLp, Some(BudgetReason::Pivots), 0.0);
+        d.record(DegradationRung::Greedy, Some(BudgetReason::WallClock), 0.25);
+        // non-finite excess must not poison the sum
+        d.record(DegradationRung::Greedy, None, f64::NAN);
+        assert_eq!(d.warm_lp, 1);
+        assert_eq!(d.cold_lp, 1);
+        assert_eq!(d.greedy, 2);
+        assert_eq!(d.budget_pivots, 1);
+        assert_eq!(d.budget_wall, 1);
+        assert!((d.fallback_excess_sum - 0.25).abs() < 1e-12);
+        assert_eq!(d.total(), 4);
+        assert_eq!(d.fallbacks(), 2);
+        assert!((d.lp_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(DegradationStats::default().lp_rate(), 1.0);
+
+        let mut sum = DegradationStats::default();
+        sum.absorb(&d);
+        sum.absorb(&d);
+        assert_eq!(sum.greedy, 4);
+        assert_eq!(sum.total(), 8);
+
+        // StepStats absorption carries the ladder into BalancerStats
+        let mut b = BalancerStats::default();
+        b.absorb(&StepStats { degradation: d, ..Default::default() });
+        assert_eq!(b.degradation, d);
     }
 
     #[test]

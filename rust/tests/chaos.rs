@@ -1,0 +1,255 @@
+//! Deterministic fault-injection (chaos) suite — ISSUE-6's robustness
+//! acceptance criteria.
+//!
+//! A seeded [`FaultPlan`] injects worker panics, budget starvation,
+//! NaN/overflow load poisoning, and forced infeasibility into a live
+//! [`MoeSession`]; the session must still emit a feasible plan for every
+//! layer of every step, never panic or deadlock, and its
+//! `DegradationStats` must match the injected plan exactly. Replay a CI
+//! failure with `FAULT_SEED=<seed> cargo test --test chaos` (the seed is
+//! printed by every run, surfaced by libtest on failure).
+
+use std::sync::Arc;
+
+use micromoe::balancer::{MoeSession, StepOutput};
+use micromoe::engine::EngineMode;
+use micromoe::faults::{fault_seed, Fault, FaultPlan};
+use micromoe::placement::cayley::cayley_graph_placement;
+use micromoe::placement::Placement;
+use micromoe::prop::forall;
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::{fallback, LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use micromoe::topology::Topology;
+
+const EXPERTS: usize = 16;
+const GPUS: usize = 8;
+
+fn topo() -> Topology {
+    Topology::new(8, 4, 2, 8)
+}
+
+fn zipf_lm(seed: u64, per_gpu: u64, s: f64) -> LoadMatrix {
+    let mut rng = Rng::new(seed);
+    let z = Zipf::new(EXPERTS, s);
+    let mut lm = LoadMatrix::zeros(EXPERTS, GPUS);
+    for g in 0..GPUS {
+        for _ in 0..per_gpu {
+            lm.add(z.sample(&mut rng), g, 1);
+        }
+    }
+    lm
+}
+
+fn session_with(plan: Option<FaultPlan>, workers: usize, layers: usize) -> MoeSession {
+    let opts = SchedulerOptions {
+        engine: EngineMode::Pipeline { workers, inflight: 2 },
+        faults: plan.map(Arc::new),
+        ..Default::default()
+    };
+    MoeSession::builder()
+        .topology(topo())
+        .experts(EXPERTS)
+        .policy_name("micromoe")
+        .options(opts)
+        .layers(layers)
+        .build()
+        .expect("chaos session builds")
+}
+
+/// Every layer of a step must be present and conserve the batch's tokens,
+/// no matter what was injected.
+fn assert_step_feasible(out: &StepOutput, loads: &[LoadMatrix], step: usize) {
+    assert_eq!(out.layers.len(), loads.len(), "step {step}: missing layers");
+    for (l, (plan, lm)) in out.layers.iter().zip(loads).enumerate() {
+        assert_eq!(
+            plan.gpu_compute.iter().sum::<u64>(),
+            lm.total(),
+            "step {step} layer {l}: plan lost tokens"
+        );
+    }
+}
+
+/// The headline chaos run: a seeded fault plan over a pipelined session.
+/// Feasible output every layer/step, and the final `DegradationStats`
+/// match the plan exactly — every scheduler-level fault lands on the
+/// greedy rung (budget starvations also counted by reason), worker panics
+/// are recovered by respawn without ever degrading below the LP rungs.
+#[test]
+fn seeded_fault_plan_degrades_exactly_as_injected() {
+    const STEPS: usize = 20;
+    const LAYERS: usize = 4;
+    let seed = fault_seed(0x0C4A05);
+    let plan = FaultPlan::from_seed(seed, STEPS, LAYERS, 0.3);
+    assert!(!plan.is_empty(), "density 0.3 over {} slots injected nothing", STEPS * LAYERS);
+
+    // expected degradation, simulated straight from the plan
+    let mut expect_greedy = 0u64;
+    let mut expect_budget_pivots = 0u64;
+    for &(_, _, fault) in plan.faults() {
+        if !fault.is_worker_fault() {
+            expect_greedy += 1;
+        }
+        if fault == Fault::BudgetStarvation {
+            expect_budget_pivots += 1;
+        }
+    }
+
+    let mut session = session_with(Some(plan), 2, LAYERS);
+    for step in 0..STEPS {
+        let loads: Vec<LoadMatrix> = (0..LAYERS)
+            .map(|l| zipf_lm(seed ^ (step * LAYERS + l) as u64, 900, 1.0))
+            .collect();
+        let out = session.step(&loads);
+        assert_step_feasible(&out, &loads, step);
+        assert_eq!(
+            out.stats.degradation.total(),
+            LAYERS as u64,
+            "step {step}: every layer records exactly one rung"
+        );
+    }
+
+    let st = session.stats().degradation;
+    let total = (STEPS * LAYERS) as u64;
+    assert_eq!(st.total(), total, "one rung per layer per step: {st:?}");
+    assert_eq!(st.greedy, expect_greedy, "greedy rung != injected scheduler faults: {st:?}");
+    assert_eq!(st.passthrough, 0, "no persistent panics were injected: {st:?}");
+    assert_eq!(st.budget_pivots, expect_budget_pivots, "starvation counts: {st:?}");
+    assert_eq!(st.budget_refactors, 0, "{st:?}");
+    assert_eq!(st.budget_wall, 0, "no wall-clock budget was set: {st:?}");
+    assert_eq!(st.warm_lp + st.cold_lp, total - expect_greedy, "LP rungs cover the rest: {st:?}");
+    assert!(st.fallback_excess_sum.is_finite() && st.fallback_excess_sum >= 0.0, "{st:?}");
+}
+
+/// Zero faults + unlimited budget must be bit-identical to a session with
+/// no fault plan at all — the robustness machinery is inert by default.
+#[test]
+fn empty_fault_plan_is_bit_identical_to_none() {
+    const LAYERS: usize = 3;
+    let mut plain = session_with(None, 2, LAYERS);
+    let mut chaos = session_with(Some(FaultPlan::empty()), 2, LAYERS);
+    for step in 0..4 {
+        let loads: Vec<LoadMatrix> =
+            (0..LAYERS).map(|l| zipf_lm(77 + (step * LAYERS + l) as u64, 700, 0.9)).collect();
+        let a = plain.step(&loads);
+        let b = chaos.step(&loads);
+        for (l, (pa, pb)) in a.layers.iter().zip(&b.layers).enumerate() {
+            assert_eq!(pa.routes, pb.routes, "step {step} layer {l}");
+            assert_eq!(pa.gpu_compute, pb.gpu_compute, "step {step} layer {l}");
+        }
+    }
+    let st = chaos.stats().degradation;
+    assert_eq!(st.fallbacks(), 0, "no injected fault may degrade a plan: {st:?}");
+    assert_eq!(plain.stats().degradation, st, "rung accounting must match too");
+}
+
+/// One-shot worker panics: the pool respawns the worker, replays its jobs,
+/// and the session keeps emitting LP plans (never a fallback rung) — at
+/// the price of cold re-solves on the respawned worker's layers.
+#[test]
+fn worker_panics_recover_without_leaving_the_lp_rungs() {
+    const STEPS: usize = 4;
+    const LAYERS: usize = 4;
+    let plan = FaultPlan::with_faults(vec![
+        (1, 0, Fault::WorkerPanic { persistent: false }),
+        (2, 3, Fault::WorkerPanic { persistent: false }),
+    ]);
+    let mut session = session_with(Some(plan), 2, LAYERS);
+    for step in 0..STEPS {
+        let loads: Vec<LoadMatrix> =
+            (0..LAYERS).map(|l| zipf_lm(300 + (step * LAYERS + l) as u64, 800, 1.1)).collect();
+        let out = session.step(&loads);
+        assert_step_feasible(&out, &loads, step);
+    }
+    let st = session.stats().degradation;
+    assert_eq!(st.total(), (STEPS * LAYERS) as u64, "{st:?}");
+    assert_eq!(st.fallbacks(), 0, "panics respawn onto LP rungs, not fallbacks: {st:?}");
+    // step 0 starts every layer cold, and each panic rebuilds its worker's
+    // schedulers cold — so strictly more cold solves than the fault-free
+    // baseline's initial ones
+    assert!(st.cold_lp > LAYERS as u64, "respawns must re-solve cold: {st:?}");
+}
+
+/// A persistently dying worker exhausts the respawn limit; the session
+/// still covers every layer of every step via passthrough plans — the
+/// ladder's terminal rung — instead of hanging or panicking.
+#[test]
+fn respawn_limit_degrades_to_passthrough_but_still_plans() {
+    const LAYERS: usize = 2;
+    let plan =
+        FaultPlan::with_faults(vec![(0, 0, Fault::WorkerPanic { persistent: true })]);
+    let mut session = session_with(Some(plan), 1, LAYERS);
+    for step in 0..2 {
+        let loads: Vec<LoadMatrix> =
+            (0..LAYERS).map(|l| zipf_lm(500 + (step * LAYERS + l) as u64, 600, 1.0)).collect();
+        let out = session.step(&loads);
+        assert_step_feasible(&out, &loads, step);
+    }
+    let st = session.stats().degradation;
+    assert_eq!(st.passthrough, (2 * LAYERS) as u64, "dead engine => all passthrough: {st:?}");
+    assert_eq!(st.total(), (2 * LAYERS) as u64, "{st:?}");
+}
+
+fn used_gpus(p: &Placement) -> usize {
+    let mut used = vec![false; p.num_gpus];
+    for grp in &p.replicas {
+        for &g in grp {
+            used[g] = true;
+        }
+    }
+    used.iter().filter(|&&u| u).count().max(1)
+}
+
+/// Property (satellite d): the greedy fallback is always feasible, and on
+/// instances where the LP also solves, its max GPU load stays within the
+/// proven `G_used / R_min` factor of the LP objective (see
+/// `scheduler::fallback`'s module docs for the derivation).
+#[test]
+fn greedy_fallback_is_feasible_and_within_proven_bound_of_lp() {
+    forall("greedy fallback vs LP", 40, |rng, _case| {
+        let gpus = 4 + 2 * rng.below(3) as usize; // 4, 6, or 8
+        let experts = 2 * gpus;
+        let p = cayley_graph_placement(gpus, experts);
+        let z = Zipf::new(experts, 0.5 + rng.f64());
+        let mut lm = LoadMatrix::zeros(experts, gpus);
+        for _ in 0..(400 + rng.below(2600)) {
+            let g = rng.below(gpus as u64) as usize;
+            lm.add(z.sample(rng), g, 1);
+        }
+
+        // feasibility: non-negative, conserves every expert's load
+        let frac = fallback::greedy_fraction(&p, &lm, &[]);
+        let mut gpu_load = vec![0.0f64; gpus];
+        for (e, grp) in p.replicas.iter().enumerate() {
+            let sum: f64 = frac[e].iter().sum();
+            assert!(
+                (sum - lm.expert_load(e) as f64).abs() < 1e-6,
+                "expert {e}: greedy assigned {sum} of {}",
+                lm.expert_load(e)
+            );
+            for (r, &g) in grp.iter().enumerate() {
+                assert!(frac[e][r] >= 0.0, "expert {e} replica {r} negative");
+                gpu_load[g] += frac[e][r];
+            }
+        }
+        let greedy_max = gpu_load.iter().cloned().fold(0.0, f64::max);
+
+        // unconditional half of the bound: greedy_max <= T / R_min
+        let r_min = (0..experts).map(|e| p.replica_count(e)).min().unwrap();
+        assert!(
+            greedy_max <= lm.total() as f64 / r_min as f64 + 1e-6,
+            "greedy max {greedy_max} breaks T/R_min"
+        );
+
+        // vs the LP, where it solves: greedy_max <= OPT * G_used / R_min
+        let mut s = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let sched = s.schedule(&lm);
+        let opt = sched.stats.lp_objective;
+        if opt.is_finite() && opt > 0.0 {
+            let factor = used_gpus(&p) as f64 / r_min as f64;
+            assert!(
+                greedy_max <= opt * factor + 1e-6,
+                "greedy max {greedy_max} > LP opt {opt} x {factor}"
+            );
+        }
+    });
+}

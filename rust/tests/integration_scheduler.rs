@@ -191,6 +191,7 @@ fn engine_pipeline_bit_identical_to_sequential_across_worker_counts() {
                 },
                 layers,
             )
+            .unwrap()
         })
         .collect();
     for round in 0..4u64 {
@@ -200,7 +201,7 @@ fn engine_pipeline_bit_identical_to_sequential_across_worker_counts() {
         let want: Vec<_> =
             sequential.iter_mut().zip(&loads).map(|(s, lm)| s.schedule(lm)).collect();
         for engine in &mut engines {
-            let got = engine.schedule_step(&loads);
+            let got = engine.schedule_step(&loads).unwrap();
             for (l, (a, b)) in got.iter().zip(&want).enumerate() {
                 assert_eq!(
                     a.replica_loads, b.replica_loads,
@@ -243,6 +244,7 @@ fn engine_speculation_deterministic_across_worker_counts() {
                 },
                 layers,
             )
+            .unwrap()
         })
         .collect();
     for round in 0..6u64 {
@@ -250,9 +252,9 @@ fn engine_speculation_deterministic_across_worker_counts() {
         let loads: Vec<LoadMatrix> = (0..layers)
             .map(|l| zipf_lm(16, 8, 2000, 0.8, 7 + l as u64 + (round / 3)))
             .collect();
-        let reference = engines[0].schedule_step(&loads);
+        let reference = engines[0].schedule_step(&loads).unwrap();
         for engine in &mut engines[1..] {
-            let got = engine.schedule_step(&loads);
+            let got = engine.schedule_step(&loads).unwrap();
             for (l, (a, b)) in got.iter().zip(&reference).enumerate() {
                 assert_eq!(a.replica_loads, b.replica_loads, "round {round} layer {l}");
                 assert_eq!(a.routes, b.routes, "round {round} layer {l}");

@@ -165,7 +165,8 @@ fn micromoe_pipeline_matches_direct_engine_across_worker_counts() {
             Some(t.clone()),
             SchedulerOptions { engine: mode, ..Default::default() },
             layers,
-        );
+        )
+        .unwrap();
         let mut fresh_sequential: Vec<MicroEpScheduler> = (0..layers)
             .map(|_| {
                 MicroEpScheduler::new(p.clone(), Some(t.clone()), SchedulerOptions::default())
@@ -178,7 +179,7 @@ fn micromoe_pipeline_matches_direct_engine_across_worker_counts() {
                 lm.add((round + l) % 16, l % 8, 23 * (round as u64 + 1));
             }
             let out = via_facade.step(&loads);
-            let want = direct.schedule_step(&loads);
+            let want = direct.schedule_step(&loads).unwrap();
             for (l, (plan, sched)) in out.layers.iter().zip(&want).enumerate() {
                 assert_eq!(plan.routes, sched.routes, "workers {workers} layer {l}");
                 assert_eq!(plan.gpu_compute, sched.gpu_loads(&p), "workers {workers} layer {l}");
