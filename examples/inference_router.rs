@@ -1,23 +1,47 @@
 //! Inference-mode scheduling (§9 Discussion): latency-sensitive MoE
 //! serving, where per-request scheduling time matters more than steady
 //! state. Simulates a bursty request stream (variable batch sizes, shifting
-//! expert popularity) and compares three per-batch solvers on the same
-//! placement:
+//! expert popularity) and compares three registered policies on the same
+//! placement through the closed-loop [`ServingRunner`]:
 //!
 //! * warm LP  — the training-path scheduler (carries basis state),
 //! * cold LP  — a fresh simplex per batch (no cross-request state),
-//! * max-flow — the paper's proposed LP replacement (stateless, integral).
+//! * max-flow — the `least-loaded-inference` policy (stateless, integral).
 //!
 //! Run: `cargo run --release --example inference_router [-- --requests 200]`
+//!
+//! Pass `--serve` to instead drive the open-loop batching-window server
+//! ([`micromoe::serving::MoeServer`]) under a configurable arrival process
+//! (`--arrival poisson|bursty|diurnal`, `--window-us`, `--max-batch`, …).
 
+use micromoe::balancer::MoeSession;
 use micromoe::bench_harness::{fmt_time, Table};
 use micromoe::cli::Args;
 use micromoe::placement::cayley::symmetric_placement;
+use micromoe::placement::Placement;
 use micromoe::rng::{Rng, Zipf};
 use micromoe::scheduler::flow::flow_schedule;
-use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
-use micromoe::stats::Summary;
+use micromoe::scheduler::LoadMatrix;
+use micromoe::serving::{ArrivalGen, ServingRunner, SlaStats, TokenModel};
 use micromoe::topology::Topology;
+use micromoe::workload::TopicMix;
+
+fn session(policy: &str, warm: bool, label: &str, topo: &Topology, p: &Placement) -> MoeSession {
+    let opts =
+        micromoe::scheduler::SchedulerOptions { warm_start: warm, ..Default::default() };
+    MoeSession::builder()
+        .topology(topo.clone())
+        .placement(p.clone())
+        .policy_name(policy)
+        .options(opts)
+        .label(label)
+        .build()
+        .expect("registered policy builds")
+}
+
+fn exact_us(sla: &SlaStats, q: f64) -> f64 {
+    sla.solve.exact(q)
+}
 
 fn main() {
     let args = Args::from_env();
@@ -25,6 +49,10 @@ fn main() {
     let topo = Topology::new(8, 4, 2, 8);
     let e = 32;
     let placement = symmetric_placement(&topo, e);
+
+    if args.flag("serve") {
+        return serve_demo(&args, &topo, e);
+    }
 
     // bursty request stream: batch sizes 16..2048 tokens/GPU, popularity
     // ranking rotates every ~25 requests (session locality)
@@ -46,55 +74,96 @@ fn main() {
         batches.push(lm);
     }
 
-    let mut warm = MicroEpScheduler::new(
-        placement.clone(),
-        Some(topo.clone()),
-        SchedulerOptions::default(),
-    );
-    let mut cold_opts = SchedulerOptions::default();
-    cold_opts.warm_start = false;
-    let mut cold = MicroEpScheduler::new(placement.clone(), Some(topo), cold_opts);
-
-    let mut t_warm = Vec::new();
-    let mut t_cold = Vec::new();
-    let mut t_flow = Vec::new();
-    let mut agree = 0usize;
-    for lm in &batches {
-        let t0 = std::time::Instant::now();
-        let sw = warm.schedule(lm);
-        t_warm.push(t0.elapsed().as_secs_f64());
-
-        let t0 = std::time::Instant::now();
-        let _sc = cold.schedule(lm);
-        t_cold.push(t0.elapsed().as_secs_f64());
-
-        let t0 = std::time::Instant::now();
-        let sf = flow_schedule(&placement, lm);
-        t_flow.push(t0.elapsed().as_secs_f64());
-
-        if (sw.stats.lp_objective.ceil() as i64 - sf.max_load as i64).abs() <= 1 {
-            agree += 1;
-        }
-    }
+    let arms = [
+        ("warm LP", session("micromoe", true, "warm LP", &topo, &placement)),
+        ("cold LP", session("micromoe", false, "cold LP", &topo, &placement)),
+        ("max-flow", session("least-loaded-inference", true, "max-flow", &topo, &placement)),
+    ];
 
     let mut table = Table::new(
         &format!("inference scheduling latency over {requests} bursty requests"),
         &["solver", "p50", "p95", "max"],
     );
-    for (name, ts) in [("warm LP", &t_warm), ("cold LP", &t_cold), ("max-flow", &t_flow)] {
-        let s = Summary::of(ts);
+    let mut flow_plans = Vec::new();
+    let mut warm_plans = Vec::new();
+    for (name, s) in arms {
+        let mut runner = ServingRunner::new(s);
+        let plans = runner.run(&batches);
+        let sla = runner.sla();
         table.row(vec![
             name.to_string(),
-            fmt_time(s.p50),
-            fmt_time(s.p95),
-            fmt_time(s.max),
+            fmt_time(exact_us(sla, 0.50) * 1e-6),
+            fmt_time(exact_us(sla, 0.95) * 1e-6),
+            fmt_time(sla.solve.max() * 1e-6),
+        ]);
+        match name {
+            "warm LP" => warm_plans = plans,
+            "max-flow" => flow_plans = plans,
+            _ => {}
+        }
+    }
+    table.print();
+
+    // optimum agreement: the stateless flow router's bottleneck is the
+    // integral optimum, so it never exceeds (and usually matches) warm LP's
+    let mut agree = 0usize;
+    for (i, lm) in batches.iter().enumerate() {
+        let flow_max = *flow_plans[i].gpu_compute.iter().max().unwrap_or(&0);
+        let warm_max = *warm_plans[i].gpu_compute.iter().max().unwrap_or(&0);
+        assert_eq!(
+            flow_max,
+            flow_schedule(&placement, lm).max_load,
+            "request {i}: policy deviated from the flow optimum"
+        );
+        assert!(flow_max <= warm_max, "request {i}: flow above a feasible LP plan");
+        if flow_max == warm_max {
+            agree += 1;
+        }
+    }
+    println!(
+        "\noptima agreement (flow max == warm-LP max): {agree}/{requests}\n\
+         §9: for inference, tail latency matters — compare p95/max, not p50; \
+         the stateless flow solver has no warm-state dependence on the \
+         previous request's shape."
+    );
+}
+
+/// `--serve`: the open-loop complement — a batching-window server under a
+/// CLI-selected arrival process, reporting SLO accounting.
+fn serve_demo(args: &Args, topo: &Topology, e: usize) {
+    let n = args.usize_or("requests", 2_000);
+    let process = args.arrival_process().unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2);
+    });
+    let cfg = args.serving_config();
+    let seed = args.u64_or("seed", 17);
+    let placement = symmetric_placement(topo, e);
+    let session = session("least-loaded-inference", true, "max-flow serving", topo, &placement);
+    let reqs = ArrivalGen::new(process, TokenModel::Fixed(32), seed).take(n);
+    let mut server = session.serve(cfg, TopicMix::new(e, 1.1, 25, seed));
+    let trace = server.run(&reqs);
+    let sla = server.sla();
+    let mut table = Table::new(
+        &format!("open-loop serving: {n} requests, {} windows", trace.windows.len()),
+        &["track", "p50", "p95", "p99 (P²)"],
+    );
+    for (name, t) in
+        [("queue", &sla.queue), ("solve", &sla.solve), ("dispatch", &sla.dispatch), ("e2e", &sla.e2e)]
+    {
+        table.row(vec![
+            name.to_string(),
+            fmt_time(t.exact(0.50) * 1e-6),
+            fmt_time(t.exact(0.95) * 1e-6),
+            fmt_time(t.p2_p99() * 1e-6),
         ]);
     }
     table.print();
     println!(
-        "\noptima agreement (flow == ⌈LP⌉): {agree}/{requests}\n\
-         §9: for inference, tail latency matters — compare p95/max, not p50; \
-         the stateless flow solver has no warm-state dependence on the \
-         previous request's shape."
+        "served {} / shed {} / deadline misses {} (miss rate {:.2}%)",
+        sla.served,
+        sla.shed,
+        sla.deadline_misses,
+        sla.miss_rate() * 100.0
     );
 }

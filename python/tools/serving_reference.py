@@ -1,0 +1,528 @@
+#!/usr/bin/env python3
+"""Reference implementation of the rust serving tier, and the generator of
+``rust/tests/golden_serving.json``.
+
+Transliterates, op-for-op:
+
+* the arrival processes of ``rust/src/serving/arrivals.rs`` (Poisson,
+  2-state MMPP "bursty", Lewis-Shedler-thinned diurnal) with their
+  whole-microsecond gap quantization,
+* the P^2 (Jain-Chlamtac 1985) streaming quantile estimator and the
+  LatencyTrack accumulator of ``rust/src/stats.rs``,
+* the batching-window loop and SLO accounting of
+  ``rust/src/serving/server.rs`` / ``sla.rs`` under the deterministic
+  charges (``SolveCost::Virtual`` + ``DispatchCost::PerToken``).
+
+Bit-exactness contract: inter-arrival gaps are floored to whole
+microseconds, so every arrival timestamp is an integer-valued float and all
+downstream window/SLO arithmetic uses only +,-,*,/ and comparisons — which
+are bit-identical IEEE-754 in Python and rust. The only transcendental math
+(log, sin) lives in arrival generation; this generator therefore *guards*
+every draw (the floored value must sit >= 1e-6 from an integer boundary,
+thinning decisions >= 1e-9 from the accept threshold) so a 1-ulp libm
+difference between Python and rust cannot flip any decision. Guarded-out
+draws are simply redrawn and never recorded; the fixture stores exactly the
+uniform stream rust replays through ``ArrivalGen::with_uniforms``.
+
+Config constants are dyadic (0.0625, 0.125, 500.0, ...) so products and
+sums round identically. ``json.dump`` emits shortest-round-trip floats and
+rust's ``str::parse::<f64>`` is correctly rounded, so values survive the
+trip exactly.
+
+Run:  python3 python/tools/serving_reference.py
+"""
+
+import json
+import math
+import os
+
+import numpy as np
+
+FRAC_GUARD = 1e-6     # floored draws must sit this far from integer edges
+ACCEPT_GUARD = 1e-9   # thinning draws must sit this far from the threshold
+
+
+# ---------------------------------------------------------------- arrivals
+
+class GuardedUniforms:
+    """numpy-backed uniform source recording every draw rust will replay."""
+
+    def __init__(self, seed):
+        self.rng = np.random.default_rng(seed)
+        self.recorded = []
+
+    def _raw(self):
+        return float(self.rng.random())
+
+    def gap_us(self, rate_hz):
+        """exp_gap_us: floor(-ln(1-u)/rate*1e6), min 1 us (guarded)."""
+        while True:
+            u = self._raw()
+            x = -math.log(1.0 - u) / rate_hz * 1e6
+            f = x - math.floor(x)
+            if FRAC_GUARD < f < 1.0 - FRAC_GUARD:
+                self.recorded.append(u)
+                return max(float(math.floor(x)), 1.0)
+
+    def dwell_us(self, mean_us):
+        """exp_dwell_us: floor(-ln(1-u)*mean), min 1 us (guarded)."""
+        while True:
+            u = self._raw()
+            x = -math.log(1.0 - u) * mean_us
+            f = x - math.floor(x)
+            if FRAC_GUARD < f < 1.0 - FRAC_GUARD:
+                self.recorded.append(u)
+                return max(float(math.floor(x)), 1.0)
+
+    def accept_draw(self, threshold):
+        """Thinning uniform, guarded away from the accept threshold."""
+        while True:
+            u = self._raw()
+            if abs(u - threshold) > ACCEPT_GUARD:
+                self.recorded.append(u)
+                return u
+
+
+def token_count(tokens, rid):
+    if tokens["kind"] == "fixed":
+        return tokens["value"]
+    if tokens["kind"] == "ramp":
+        return tokens["base"] + tokens["step"] * (rid // tokens["every"])
+    raise ValueError(tokens)
+
+
+class ArrivalGen:
+    """Mirror of rust ``ArrivalGen`` driven by a GuardedUniforms source."""
+
+    def __init__(self, process, tokens, uni):
+        self.process = process
+        self.tokens = tokens
+        self.uni = uni
+        self.clock_us = 0.0
+        self.next_id = 0
+        self.burst = False
+        # MMPP draws its first (calm) dwell at construction — fixed order
+        if process["kind"] == "bursty":
+            self.phase_end_us = self.uni.dwell_us(process["mean_calm_us"])
+        else:
+            self.phase_end_us = math.inf
+
+    def next_request(self):
+        p = self.process
+        if p["kind"] == "poisson":
+            self.clock_us += self.uni.gap_us(p["rate_hz"])
+        elif p["kind"] == "bursty":
+            while True:
+                rate = p["burst_hz"] if self.burst else p["calm_hz"]
+                candidate = self.clock_us + self.uni.gap_us(rate)
+                if candidate <= self.phase_end_us:
+                    self.clock_us = candidate
+                    break
+                # phase flips first: jump to the boundary, toggle, new dwell,
+                # re-draw the gap in the new phase (memorylessness)
+                self.clock_us = self.phase_end_us
+                self.burst = not self.burst
+                mean = p["mean_burst_us"] if self.burst else p["mean_calm_us"]
+                self.phase_end_us = self.clock_us + self.uni.dwell_us(mean)
+        elif p["kind"] == "diurnal":
+            peak_hz = p["base_hz"] * (1.0 + p["amplitude"])
+            while True:
+                self.clock_us += self.uni.gap_us(peak_hz)
+                phase = math.tau * self.clock_us / p["period_us"]
+                accept = p["base_hz"] * (1.0 + p["amplitude"] * math.sin(phase)) / peak_hz
+                if self.uni.accept_draw(accept) < accept:
+                    break
+        else:
+            raise ValueError(p)
+        rid = self.next_id
+        self.next_id += 1
+        return {"id": rid, "arrival_us": self.clock_us,
+                "tokens": token_count(self.tokens, rid)}
+
+    def take(self, n):
+        return [self.next_request() for _ in range(n)]
+
+
+# ------------------------------------------------------------- percentiles
+
+def percentile(sorted_xs, q):
+    """Mirror of rust ``stats::percentile`` (interpolated, sorted input)."""
+    n = len(sorted_xs)
+    assert n > 0 and 0.0 <= q <= 1.0
+    if n == 1:
+        return sorted_xs[0]
+    pos = q * float(n - 1)
+    lo = int(math.floor(pos))
+    hi = int(math.ceil(pos))
+    frac = pos - float(lo)
+    return sorted_xs[lo] * (1.0 - frac) + sorted_xs[hi] * frac
+
+
+class P2Quantile:
+    """Mirror of rust ``stats::P2Quantile`` — keep arithmetic and
+    evaluation order in lock-step with the rust implementation."""
+
+    def __init__(self, p):
+        assert 0.0 < p < 1.0
+        self.p = p
+        self.count = 0
+        self.warmup = []
+        self.q = [0.0] * 5
+        self.pos = [0.0] * 5
+        self.desired = [0.0] * 5
+        self.dn = [0.0] * 5
+
+    def observe(self, x):
+        self.count += 1
+        if self.count <= 5:
+            self.warmup.append(x)
+            if self.count == 5:
+                init = sorted(self.warmup)
+                for i in range(5):
+                    self.q[i] = init[i]
+                    self.pos[i] = float(i + 1)
+                p = self.p
+                self.desired = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0]
+                self.dn = [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0]
+            return
+        if x < self.q[0]:
+            self.q[0] = x
+            k = 0
+        elif x < self.q[1]:
+            k = 0
+        elif x < self.q[2]:
+            k = 1
+        elif x < self.q[3]:
+            k = 2
+        elif x <= self.q[4]:
+            k = 3
+        else:
+            self.q[4] = x
+            k = 3
+        for i in range(k + 1, 5):
+            self.pos[i] += 1.0
+        for i in range(5):
+            self.desired[i] += self.dn[i]
+        for i in range(1, 4):
+            d = self.desired[i] - self.pos[i]
+            if (d >= 1.0 and self.pos[i + 1] - self.pos[i] > 1.0) or \
+               (d <= -1.0 and self.pos[i - 1] - self.pos[i] < -1.0):
+                s = 1.0 if d >= 0.0 else -1.0
+                cand = self._parabolic(i, s)
+                if self.q[i - 1] < cand < self.q[i + 1]:
+                    self.q[i] = cand
+                else:
+                    self.q[i] = self._linear(i, s)
+                self.pos[i] += s
+
+    def _parabolic(self, i, s):
+        q, n = self.q, self.pos
+        return q[i] + s / (n[i + 1] - n[i - 1]) \
+            * ((n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+               + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+
+    def _linear(self, i, s):
+        j = i + 1 if s > 0.0 else i - 1
+        return self.q[i] + s * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+
+    def estimate(self):
+        if self.count == 0:
+            return math.nan
+        if self.count <= 5:
+            return percentile(sorted(self.warmup), self.p)
+        return self.q[2]
+
+
+class LatencyTrack:
+    """Mirror of rust ``stats::LatencyTrack``."""
+
+    def __init__(self):
+        self.samples = []
+        self.sum = 0.0
+        self.max = 0.0
+        self.p2_50 = P2Quantile(0.50)
+        self.p2_95 = P2Quantile(0.95)
+        self.p2_99 = P2Quantile(0.99)
+
+    def record(self, x):
+        self.sum += x
+        self.max = max(self.max, x)
+        self.p2_50.observe(x)
+        self.p2_95.observe(x)
+        self.p2_99.observe(x)
+        self.samples.append(x)
+
+    def mean(self):
+        return math.nan if not self.samples else self.sum / float(len(self.samples))
+
+    def exact(self, q):
+        return math.nan if not self.samples else percentile(sorted(self.samples), q)
+
+    def to_json(self):
+        def num(x):
+            return None if math.isnan(x) else x
+        return {
+            "count": len(self.samples),
+            "mean_us": num(self.mean()),
+            "max_us": self.max,
+            "p50_us": num(self.exact(0.50)),
+            "p95_us": num(self.exact(0.95)),
+            "p99_us": num(self.exact(0.99)),
+            "p2_p50_us": num(self.p2_50.estimate()),
+            "p2_p95_us": num(self.p2_95.estimate()),
+            "p2_p99_us": num(self.p2_99.estimate()),
+        }
+
+
+class SlaStats:
+    """Mirror of rust ``serving::SlaStats``."""
+
+    def __init__(self):
+        self.arrived = 0
+        self.served = 0
+        self.shed = 0
+        self.deadline_misses = 0
+        self.windows = 0
+        self.empty_windows = 0
+        self.queue = LatencyTrack()
+        self.solve = LatencyTrack()
+        self.dispatch = LatencyTrack()
+        self.e2e = LatencyTrack()
+
+    def record_served(self, queue_us, solve_us, dispatch_us, slo_us):
+        self.served += 1
+        e2e = queue_us + solve_us + dispatch_us
+        self.queue.record(queue_us)
+        self.solve.record(solve_us)
+        self.dispatch.record(dispatch_us)
+        self.e2e.record(e2e)
+        if e2e > slo_us:
+            self.deadline_misses += 1
+
+    def record_shed(self):
+        self.shed += 1
+
+    def to_json(self):
+        return {
+            "arrived": self.arrived,
+            "served": self.served,
+            "shed": self.shed,
+            "deadline_misses": self.deadline_misses,
+            "windows": self.windows,
+            "empty_windows": self.empty_windows,
+            "queue": self.queue.to_json(),
+            "solve": self.solve.to_json(),
+            "dispatch": self.dispatch.to_json(),
+            "e2e": self.e2e.to_json(),
+        }
+
+
+# ------------------------------------------------------------------ server
+
+def run_server(reqs, cfg):
+    """Mirror of ``MoeServer::run`` under Virtual solve + PerToken dispatch.
+
+    Policy plans (gpu_compute / routes) are *not* mirrored — they depend on
+    the scheduler; the golden fixture pins every field that is a pure
+    function of the trace and the config.
+    """
+    shed_after = cfg["shed_after_us"] if cfg["shed_after_us"] is not None else math.inf
+    sla = SlaStats()
+    sla.arrived = len(reqs)
+    n = len(reqs)
+    now = 0.0
+    windows = []
+    queue = []   # indices; pops at the front (FIFO)
+    head = 0     # front of `queue` (avoid O(n) list.pop(0))
+    i = 0
+    index = 0
+    while i < n or head < len(queue):
+        while i < n and reqs[i]["arrival_us"] <= now:
+            queue.append(i)
+            i += 1
+        if head == len(queue):
+            now = reqs[i]["arrival_us"]
+            continue
+        open_us = now
+        close_us = open_us + cfg["window_us"]
+        while (len(queue) - head) < cfg["max_batch"] and i < n \
+                and reqs[i]["arrival_us"] <= close_us:
+            queue.append(i)
+            i += 1
+        if (len(queue) - head) >= cfg["max_batch"]:
+            close_us = max(open_us, reqs[queue[head + cfg["max_batch"] - 1]]["arrival_us"])
+        batch = []
+        shed = []
+        while len(batch) < cfg["max_batch"] and head < len(queue):
+            j = queue[head]
+            head += 1
+            wait = close_us - reqs[j]["arrival_us"]
+            if wait > shed_after:
+                shed.append(reqs[j]["id"])
+                sla.record_shed()
+            else:
+                batch.append(j)
+        sla.windows += 1
+        if not batch:
+            sla.empty_windows += 1
+            tokens = 0
+            solve_us = 0.0
+            dispatch_us = 0.0
+        else:
+            tokens = 0
+            for j in batch:
+                tokens += reqs[j]["tokens"]
+            solve_us = cfg["virtual_solve_us"]
+            dispatch_us = cfg["dispatch_fixed_us"] + cfg["dispatch_us_per_token"] * float(tokens)
+        service_us = solve_us + dispatch_us
+        for j in batch:
+            wait = close_us - reqs[j]["arrival_us"]
+            sla.record_served(wait, solve_us, dispatch_us, cfg["slo_us"])
+        windows.append({
+            "index": index,
+            "open_us": open_us,
+            "close_us": close_us,
+            "served": [reqs[j]["id"] for j in batch],
+            "shed": shed,
+            "tokens": tokens,
+            "solve_us": solve_us,
+            "dispatch_us": dispatch_us,
+        })
+        index += 1
+        now = close_us + service_us
+    return windows, sla
+
+
+# ------------------------------------------------------------------- cases
+
+def cases():
+    """>= 6 regimes; every numeric knob dyadic so arithmetic is exact."""
+    return [
+        {
+            "name": "steady_poisson",
+            "seed": 11,
+            "requests": 300,
+            "process": {"kind": "poisson", "rate_hz": 20000.0},
+            "tokens": {"kind": "fixed", "value": 32},
+            "config": {"window_us": 500.0, "max_batch": 16, "slo_us": 2000.0,
+                       "shed_after_us": None, "virtual_solve_us": 64.0,
+                       "dispatch_fixed_us": 32.0, "dispatch_us_per_token": 0.0625},
+        },
+        {
+            "name": "burst",
+            "seed": 23,
+            "requests": 400,
+            "process": {"kind": "bursty", "calm_hz": 4000.0, "burst_hz": 64000.0,
+                        "mean_calm_us": 8000.0, "mean_burst_us": 2000.0},
+            "tokens": {"kind": "fixed", "value": 16},
+            "config": {"window_us": 500.0, "max_batch": 8, "slo_us": 1500.0,
+                       "shed_after_us": None, "virtual_solve_us": 32.0,
+                       "dispatch_fixed_us": 16.0, "dispatch_us_per_token": 0.125},
+        },
+        {
+            "name": "diurnal_ramp",
+            "seed": 37,
+            "requests": 400,
+            "process": {"kind": "diurnal", "base_hz": 10000.0, "amplitude": 0.75,
+                        "period_us": 50000.0},
+            "tokens": {"kind": "fixed", "value": 24},
+            "config": {"window_us": 250.0, "max_batch": 8, "slo_us": 1000.0,
+                       "shed_after_us": None, "virtual_solve_us": 16.0,
+                       "dispatch_fixed_us": 8.0, "dispatch_us_per_token": 0.25},
+        },
+        {
+            "name": "overload_shed",
+            "seed": 41,
+            "requests": 400,
+            "process": {"kind": "poisson", "rate_hz": 50000.0},
+            "tokens": {"kind": "fixed", "value": 8},
+            "config": {"window_us": 500.0, "max_batch": 4, "slo_us": 2000.0,
+                       "shed_after_us": 3000.0, "virtual_solve_us": 2000.0,
+                       "dispatch_fixed_us": 64.0, "dispatch_us_per_token": 0.5},
+        },
+        {
+            "name": "drift",
+            "seed": 53,
+            "requests": 400,
+            "process": {"kind": "poisson", "rate_hz": 15000.0},
+            "tokens": {"kind": "ramp", "base": 8, "step": 8, "every": 50},
+            "config": {"window_us": 500.0, "max_batch": 16, "slo_us": 3000.0,
+                       "shed_after_us": None, "virtual_solve_us": 64.0,
+                       "dispatch_fixed_us": 32.0, "dispatch_us_per_token": 0.0625},
+        },
+        {
+            "name": "empty_window",
+            "seed": 67,
+            "requests": 120,
+            "process": {"kind": "poisson", "rate_hz": 10000.0},
+            "tokens": {"kind": "fixed", "value": 4},
+            "config": {"window_us": 500.0, "max_batch": 8, "slo_us": 1000.0,
+                       "shed_after_us": 0.0, "virtual_solve_us": 64.0,
+                       "dispatch_fixed_us": 32.0, "dispatch_us_per_token": 0.0625},
+        },
+    ]
+
+
+def self_test(case, reqs, windows, sla):
+    """Invariants every regime must satisfy before it is committed."""
+    n = case["requests"]
+    assert sla.served + sla.shed == n, case["name"]
+    seen = sorted(
+        [rid for w in windows for rid in w["served"]]
+        + [rid for w in windows for rid in w["shed"]]
+    )
+    assert seen == list(range(n)), f"{case['name']}: conservation"
+    for w in windows:
+        assert len(w["served"]) <= case["config"]["max_batch"]
+        for rid in w["served"]:
+            assert reqs[rid]["arrival_us"] <= w["close_us"], "served before arrival"
+    assert all(r["arrival_us"] == math.floor(r["arrival_us"]) for r in reqs), \
+        "arrivals must be integer microseconds"
+    if case["name"] == "overload_shed":
+        assert sla.shed > 0, "overload regime must shed"
+    if case["name"] == "empty_window":
+        assert sla.empty_windows > 0, "empty-window regime must form empty windows"
+    # P^2 vs exact: loose sanity only (the fixture pins both separately)
+    if sla.e2e.samples and len(sla.e2e.samples) >= 100:
+        exact = sla.e2e.exact(0.50)
+        est = sla.e2e.p2_50.estimate()
+        assert abs(est - exact) <= 0.5 * max(abs(exact), 1.0), \
+            f"{case['name']}: P2 p50 {est} vs exact {exact}"
+
+
+def main():
+    out = {"cases": []}
+    for case in cases():
+        uni = GuardedUniforms(case["seed"])
+        gen = ArrivalGen(case["process"], case["tokens"], uni)
+        reqs = gen.take(case["requests"])
+        windows, sla = run_server(reqs, case["config"])
+        self_test(case, reqs, windows, sla)
+        out["cases"].append({
+            "name": case["name"],
+            "seed": case["seed"],
+            "requests": case["requests"],
+            "process": case["process"],
+            "tokens": case["tokens"],
+            "config": case["config"],
+            "uniforms": uni.recorded,
+            "arrival_us": [r["arrival_us"] for r in reqs],
+            "arrival_tokens": [r["tokens"] for r in reqs],
+            "windows": windows,
+            "sla": sla.to_json(),
+        })
+        print(f"{case['name']}: {case['requests']} reqs, "
+              f"{len(uni.recorded)} uniforms, {len(windows)} windows, "
+              f"served {sla.served} shed {sla.shed} "
+              f"empty {sla.empty_windows} misses {sla.deadline_misses}")
+    path = os.path.normpath(os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "..", "..", "rust", "tests", "golden_serving.json"))
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, allow_nan=False)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

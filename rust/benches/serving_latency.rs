@@ -1,0 +1,139 @@
+//! Serving-latency regenerator: open-loop batching-window serving
+//! (ARCHITECTURE.md §9) comparing the registered policies under three
+//! arrival regimes at 64- and 256-GPU scale.
+//!
+//! Every policy serves the **identical** request trace per (scale, regime)
+//! — arrivals are seed-deterministic — so the per-request
+//! queue/solve/dispatch percentiles and deadline-miss rates are directly
+//! comparable: the LP/flow policies must buy their better-balanced plans
+//! (lower modeled dispatch) back against their real solve wall time
+//! ([`SolveCost::Wall`] + [`DispatchCost::Modeled`]).
+//!
+//! Smoke knobs (CI): `SERVING_BENCH_REQUESTS` (default 4000),
+//! `SERVING_BENCH_GPUS` (comma list, default `64,256`).
+
+use micromoe::balancer::MoeSession;
+use micromoe::bench_harness::{fmt_time, save_json, Table};
+use micromoe::cluster::CostModel;
+use micromoe::engine::EngineMode;
+use micromoe::ser::Json;
+use micromoe::serving::{
+    ArrivalGen, ArrivalProcess, DispatchCost, Request, ServingConfig, SlaStats, SolveCost,
+    TokenModel,
+};
+use micromoe::topology::Topology;
+use micromoe::workload::TopicMix;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_gpus() -> Vec<usize> {
+    match std::env::var("SERVING_BENCH_GPUS") {
+        Ok(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        Err(_) => vec![64, 256],
+    }
+}
+
+/// The three arrival regimes, sized so one 500 µs window collects a
+/// meaningful micro-batch at every scale.
+fn regimes() -> Vec<(&'static str, ArrivalProcess)> {
+    vec![
+        ("poisson", ArrivalProcess::Poisson { rate_hz: 24_000.0 }),
+        (
+            "bursty",
+            ArrivalProcess::Bursty {
+                calm_hz: 12_000.0,
+                burst_hz: 96_000.0,
+                mean_calm_us: 20_000.0,
+                mean_burst_us: 4_000.0,
+            },
+        ),
+        (
+            "diurnal",
+            ArrivalProcess::Diurnal { base_hz: 18_000.0, amplitude: 0.9, period_us: 200_000.0 },
+        ),
+    ]
+}
+
+fn policies() -> Vec<(&'static str, &'static str, EngineMode)> {
+    vec![
+        ("vanilla-ep", "vanilla-ep", EngineMode::Barrier),
+        ("lpp-barrier", "micromoe", EngineMode::Barrier),
+        ("lpp-speculative", "micromoe", EngineMode::speculative()),
+        ("max-flow", "least-loaded-inference", EngineMode::Barrier),
+    ]
+}
+
+fn session(policy: &str, engine: EngineMode, label: &str, gpus: usize, experts: usize) -> MoeSession {
+    let topo = Topology::new(gpus, gpus / 2, 2, 8);
+    let mut b = MoeSession::builder().topology(topo).experts(experts).policy_name(policy).label(label);
+    if !engine.is_barrier() {
+        b = b.engine(engine);
+    }
+    b.build().expect("registered policy builds")
+}
+
+fn serve(label: &str, policy: &str, engine: EngineMode, gpus: usize, reqs: &[Request]) -> SlaStats {
+    let experts = 2 * gpus;
+    let cfg = ServingConfig {
+        window_us: 500.0,
+        max_batch: 64,
+        slo_us: 10_000.0,
+        shed_after_us: 20_000.0,
+        solve_cost: SolveCost::Wall,
+        dispatch_cost: DispatchCost::Modeled {
+            model: CostModel::h100_testbed(),
+            topo: Topology::new(gpus, gpus / 2, 2, 8),
+        },
+    };
+    let s = session(policy, engine, label, gpus, experts);
+    let mut server = s.serve(cfg, TopicMix::new(experts, 1.1, 25, 7));
+    server.run(reqs);
+    server.sla().clone()
+}
+
+fn main() {
+    let requests = env_usize("SERVING_BENCH_REQUESTS", 4_000);
+    let mut table = Table::new(
+        &format!("open-loop serving latency over {requests} requests per (scale, regime)"),
+        &["GPUs", "regime", "policy", "e2e p50", "e2e p95", "e2e p99", "solve p95", "miss%", "shed"],
+    );
+    let mut json = Vec::new();
+    for gpus in env_gpus() {
+        for (regime, process) in regimes() {
+            // one shared trace per (scale, regime): every policy queues and
+            // sheds against the same arrivals
+            let reqs =
+                ArrivalGen::new(process, TokenModel::Fixed(64), 17).take(requests);
+            for (label, policy, engine) in policies() {
+                let sla = serve(label, policy, engine, gpus, &reqs);
+                table.row(vec![
+                    gpus.to_string(),
+                    regime.to_string(),
+                    label.to_string(),
+                    fmt_time(sla.e2e.exact(0.50) * 1e-6),
+                    fmt_time(sla.e2e.exact(0.95) * 1e-6),
+                    fmt_time(sla.e2e.p2_p99() * 1e-6),
+                    fmt_time(sla.solve.exact(0.95) * 1e-6),
+                    format!("{:.2}", sla.miss_rate() * 100.0),
+                    sla.shed.to_string(),
+                ]);
+                json.push(Json::obj(vec![
+                    ("gpus", Json::Num(gpus as f64)),
+                    ("regime", Json::Str(regime.to_string())),
+                    ("policy", Json::Str(label.to_string())),
+                    ("requests", Json::Num(requests as f64)),
+                    ("sla", sla.to_json()),
+                ]));
+            }
+        }
+    }
+    table.print();
+    println!(
+        "\nserving contract: identical arrivals per (scale, regime); the LP/flow \
+         policies must buy their better-balanced dispatch back against real \
+         solve wall time. Compare e2e p95/p99 and miss%, not p50."
+    );
+    let _ = save_json("serving_latency", &Json::Arr(json));
+}

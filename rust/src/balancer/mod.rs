@@ -39,7 +39,7 @@ pub mod session;
 use crate::scheduler::{LoadMatrix, Route, Schedule, ScheduleStats};
 use crate::stats::{BalancerStats, EngineStats, StepStats};
 
-pub use policies::{EngineBalancer, LppBalancer};
+pub use policies::{EngineBalancer, LeastLoadedInference, LppBalancer};
 pub use session::{registered_policies, MoeSession, MoeSessionBuilder, SessionError};
 
 /// What a load-balancing policy decided for one MoE layer of one

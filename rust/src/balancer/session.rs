@@ -23,8 +23,9 @@
 //! | `deepspeed-pad` | DeepSpeed/GShard capacity padding ([`crate::baselines::DeepSpeedPad`]) |
 //! | `smartmoe` | periodic placement re-optimization ([`crate::baselines::SmartMoe`]) |
 //! | `flexmoe` | popularity-proportional replicas ([`crate::baselines::FlexMoe`]) |
+//! | `least-loaded-inference` | per-batch max-flow least-loaded routing for serving ([`LeastLoadedInference`]) |
 
-use super::policies::{EngineBalancer, LppBalancer};
+use super::policies::{EngineBalancer, LeastLoadedInference, LppBalancer};
 use super::{Balancer, MoeLayerPlan, StepInput, StepOutput};
 use crate::adaptive::AdaptiveConfig;
 use crate::baselines::{DeepSpeedPad, FlexMoe, MicroMoe, SmartMoe, VanillaEp};
@@ -40,7 +41,15 @@ use crate::topology::Topology;
 /// Names the [`MoeSessionBuilder`] registry resolves (the `"micromoe"`
 /// policy further fans out over [`EngineMode`] via its options).
 pub fn registered_policies() -> &'static [&'static str] {
-    &["micromoe", "micromoe-ar", "vanilla-ep", "deepspeed-pad", "smartmoe", "flexmoe"]
+    &[
+        "micromoe",
+        "micromoe-ar",
+        "vanilla-ep",
+        "deepspeed-pad",
+        "smartmoe",
+        "flexmoe",
+        "least-loaded-inference",
+    ]
 }
 
 /// Why a session could not be built.
@@ -256,7 +265,8 @@ impl MoeSessionBuilder {
                 spec.name
             )));
         }
-        let takes_placement = matches!(spec.name.as_str(), "micromoe" | "micromoe-ar");
+        let takes_placement =
+            matches!(spec.name.as_str(), "micromoe" | "micromoe-ar" | "least-loaded-inference");
         if placement.is_some() && !takes_placement {
             return Err(SessionError::Invalid(format!(
                 "policy '{}' derives its layout from the topology; an explicit placement \
@@ -305,6 +315,10 @@ impl MoeSessionBuilder {
                 }
                 mm.overlap = overlap;
                 Box::new(mm)
+            }
+            "least-loaded-inference" => {
+                let p = placement.unwrap_or_else(|| symmetric_placement(&topo, experts));
+                Box::new(LeastLoadedInference::new(p, layers, overlap))
             }
             "vanilla-ep" => Box::new(VanillaEp::new(topo.clone(), experts)),
             "deepspeed-pad" => Box::new(DeepSpeedPad::new(topo.clone(), experts)),
@@ -434,6 +448,18 @@ impl MoeSession {
     pub fn warm_hint(&mut self, expected: &[LoadMatrix]) {
         self.check(expected);
         self.balancer.warm_hint(expected);
+    }
+
+    /// Wrap this session in an open-loop batching-window server
+    /// ([`crate::serving::MoeServer`]) — the serving tier's entry point.
+    /// Panics if the session schedules more than one layer (serving forms
+    /// single-layer decode micro-batches).
+    pub fn serve(
+        self,
+        cfg: crate::serving::ServingConfig,
+        mix: crate::workload::TopicMix,
+    ) -> crate::serving::MoeServer {
+        crate::serving::MoeServer::new(self, cfg, mix)
     }
 
     fn check(&self, loads: &[LoadMatrix]) {

@@ -1,12 +1,15 @@
 //! Tiny CLI argument parser (no clap offline): `--key value`, `--flag`,
-//! positional args, with typed accessors, usage errors, and the
+//! positional args, with typed accessors, usage errors, the
 //! [`Args::policy_spec`] bridge that turns `--policy`/`--engine` flags
-//! into a [`PolicySpec`] for the [`crate::balancer::MoeSession`] registry.
+//! into a [`PolicySpec`] for the [`crate::balancer::MoeSession`] registry,
+//! and the [`Args::arrival_process`] / [`Args::serving_config`] bridges
+//! the serving tier's examples use.
 
 use std::collections::HashMap;
 
 use crate::config::PolicySpec;
 use crate::engine::{EngineMode, ForecastConfig};
+use crate::serving::{ArrivalProcess, ServingConfig};
 
 /// Parsed command line: `--key value` / `--key=value` options, bare
 /// `--flag`s, and positional arguments.
@@ -130,6 +133,43 @@ impl Args {
         }
         Ok(spec)
     }
+
+    /// Build an [`ArrivalProcess`] from the standard serving flags:
+    /// `--arrival poisson|bursty|diurnal` (default poisson) with
+    /// `--rate-hz` (poisson, default 20000),
+    /// `--calm-hz`/`--burst-hz`/`--mean-calm-us`/`--mean-burst-us`
+    /// (bursty), or `--base-hz`/`--amplitude`/`--period-us` (diurnal).
+    pub fn arrival_process(&self) -> Result<ArrivalProcess, String> {
+        match self.str_or("arrival", "poisson") {
+            "poisson" => Ok(ArrivalProcess::Poisson { rate_hz: self.f64_or("rate-hz", 20_000.0) }),
+            "bursty" => Ok(ArrivalProcess::Bursty {
+                calm_hz: self.f64_or("calm-hz", 10_000.0),
+                burst_hz: self.f64_or("burst-hz", 80_000.0),
+                mean_calm_us: self.f64_or("mean-calm-us", 20_000.0),
+                mean_burst_us: self.f64_or("mean-burst-us", 4_000.0),
+            }),
+            "diurnal" => Ok(ArrivalProcess::Diurnal {
+                base_hz: self.f64_or("base-hz", 15_000.0),
+                amplitude: self.f64_or("amplitude", 0.8),
+                period_us: self.f64_or("period-us", 100_000.0),
+            }),
+            other => Err(format!("--arrival: unknown process '{other}' (poisson|bursty|diurnal)")),
+        }
+    }
+
+    /// Build a [`ServingConfig`] from the batching-window flags
+    /// (`--window-us`, `--max-batch`, `--slo-us`, `--shed-after-us`),
+    /// keeping the default solve/dispatch cost charges.
+    pub fn serving_config(&self) -> ServingConfig {
+        let d = ServingConfig::default();
+        ServingConfig {
+            window_us: self.f64_or("window-us", d.window_us),
+            max_batch: self.usize_or("max-batch", d.max_batch),
+            slo_us: self.f64_or("slo-us", d.slo_us),
+            shed_after_us: self.f64_or("shed-after-us", d.shed_after_us),
+            ..d
+        }
+    }
 }
 
 #[cfg(test)]
@@ -213,6 +253,36 @@ mod tests {
     fn policy_spec_rejects_bad_engine() {
         assert!(parse("--engine warp").policy_spec().is_err());
         assert!(parse("--replan-every soon").policy_spec().is_err());
+    }
+
+    #[test]
+    fn arrival_process_parses_every_regime() {
+        assert!(matches!(
+            parse("").arrival_process().unwrap(),
+            ArrivalProcess::Poisson { rate_hz } if rate_hz == 20_000.0
+        ));
+        assert!(matches!(
+            parse("--arrival poisson --rate-hz 5000").arrival_process().unwrap(),
+            ArrivalProcess::Poisson { rate_hz } if rate_hz == 5_000.0
+        ));
+        assert!(matches!(
+            parse("--arrival bursty --burst-hz 90000").arrival_process().unwrap(),
+            ArrivalProcess::Bursty { burst_hz, .. } if burst_hz == 90_000.0
+        ));
+        assert!(matches!(
+            parse("--arrival diurnal --amplitude 0.5").arrival_process().unwrap(),
+            ArrivalProcess::Diurnal { amplitude, .. } if amplitude == 0.5
+        ));
+        assert!(parse("--arrival tidal").arrival_process().is_err());
+    }
+
+    #[test]
+    fn serving_config_overrides_window_knobs() {
+        let cfg = parse("--window-us 250 --max-batch 8 --slo-us 2000").serving_config();
+        assert_eq!(cfg.window_us, 250.0);
+        assert_eq!(cfg.max_batch, 8);
+        assert_eq!(cfg.slo_us, 2_000.0);
+        assert!(cfg.shed_after_us.is_infinite(), "default admission keeps everything");
     }
 
     #[test]

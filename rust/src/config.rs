@@ -122,7 +122,8 @@ pub fn preset(name: &str) -> Option<ModelPreset> {
 #[derive(Clone, Debug, PartialEq)]
 pub struct PolicySpec {
     /// Registry name (`"micromoe"`, `"micromoe-ar"`, `"vanilla-ep"`,
-    /// `"deepspeed-pad"`, `"smartmoe"`, `"flexmoe"`).
+    /// `"deepspeed-pad"`, `"smartmoe"`, `"flexmoe"`,
+    /// `"least-loaded-inference"`).
     pub name: String,
     /// Scheduler options (mode, warm start, solver, engine) — consumed by
     /// the LP-backed policies.

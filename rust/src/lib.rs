@@ -43,6 +43,7 @@ pub mod rng;
 pub mod runtime;
 pub mod scheduler;
 pub mod ser;
+pub mod serving;
 pub mod stats;
 pub mod topology;
 /// e2e PJRT trainer (drives [`runtime`]); gated with it.

@@ -1,0 +1,378 @@
+//! Open-loop arrival processes over a virtual microsecond clock.
+//!
+//! Three seed-deterministic processes generate request streams for the
+//! batching-window server:
+//!
+//! * [`ArrivalProcess::Poisson`] — steady memoryless traffic at a fixed
+//!   rate (the M/·/1 baseline every queueing result is stated against).
+//! * [`ArrivalProcess::Bursty`] — a 2-state Markov-modulated Poisson
+//!   process (MMPP-2): exponential dwell times alternate a calm rate and a
+//!   burst rate, the canonical model for flash-crowd traffic.
+//! * [`ArrivalProcess::Diurnal`] — a sinusoidally-modulated rate realized
+//!   by Lewis–Shedler thinning against the peak rate, modelling the
+//!   day/night cycle of a global user base.
+//!
+//! Inter-arrival gaps are **quantized to whole microseconds** (floor, min
+//! 1 µs). That keeps every arrival timestamp an integer-valued `f64`, so
+//! all downstream window/SLO arithmetic is exact IEEE-754 and the Python
+//! transliteration in `python/tools/serving_reference.py` reproduces the
+//! Rust server bit-for-bit: the only transcendental math (`ln`, `sin`)
+//! is quarantined here, and the golden-fixture generator asserts each
+//! draw lands far from its floor/accept boundary before committing it.
+//!
+//! Uniform draws come from a [`UniformSource`]: the crate's
+//! xoshiro256**-backed [`Rng`] in production, or a recorded stream when
+//! replaying the golden fixture.
+
+use crate::prop::seed_from_env;
+use crate::rng::Rng;
+
+/// The serving suites' seed hook: `ARRIVAL_SEED` wins over the test's
+/// default, and the value used is printed so a failing CI run names the
+/// seed that reproduces it (libtest surfaces the print exactly when the
+/// test fails).
+pub fn arrival_seed(default: u64) -> u64 {
+    let seed = seed_from_env("ARRIVAL_SEED", default);
+    eprintln!("replay with: ARRIVAL_SEED={seed}");
+    seed
+}
+
+/// One decode request emitted by an arrival process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    /// Monotone request id (also the tie-free FIFO order).
+    pub id: u64,
+    /// Arrival timestamp on the virtual clock, µs (integer-valued).
+    pub arrival_us: f64,
+    /// Decode tokens the request contributes to its window's micro-batch.
+    pub tokens: u64,
+}
+
+/// Open-loop arrival process shapes (rates in requests per second).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Constant-rate memoryless arrivals.
+    Poisson {
+        /// Mean arrival rate, requests/s.
+        rate_hz: f64,
+    },
+    /// 2-state MMPP: calm and burst phases with exponential dwell times.
+    Bursty {
+        /// Arrival rate inside calm phases, requests/s.
+        calm_hz: f64,
+        /// Arrival rate inside burst phases, requests/s.
+        burst_hz: f64,
+        /// Mean calm-phase dwell, µs.
+        mean_calm_us: f64,
+        /// Mean burst-phase dwell, µs.
+        mean_burst_us: f64,
+    },
+    /// Sinusoidally-modulated rate `base_hz * (1 + amplitude * sin(2πt/period))`,
+    /// realized by thinning against the peak rate.
+    Diurnal {
+        /// Mean arrival rate, requests/s.
+        base_hz: f64,
+        /// Relative modulation depth in [0, 1].
+        amplitude: f64,
+        /// Cycle length, µs.
+        period_us: f64,
+    },
+}
+
+/// How many decode tokens each request carries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TokenModel {
+    /// Every request carries the same token count.
+    Fixed(u64),
+    /// Token counts ramp with the request id — request `i` carries
+    /// `base + step * (i / every)` tokens, modelling drifting decode
+    /// pressure (the golden fixture's "drift" regime).
+    Ramp {
+        /// Tokens carried by the first `every` requests.
+        base: u64,
+        /// Increment applied every `every` requests.
+        step: u64,
+        /// Requests per ramp step (must be > 0).
+        every: u64,
+    },
+}
+
+impl TokenModel {
+    /// Tokens carried by request `id`.
+    pub fn tokens(&self, id: u64) -> u64 {
+        match *self {
+            TokenModel::Fixed(t) => t,
+            TokenModel::Ramp { base, step, every } => base + step * (id / every),
+        }
+    }
+}
+
+/// Where an [`ArrivalGen`]'s uniform draws come from.
+#[derive(Clone, Debug)]
+pub enum UniformSource {
+    /// Seeded production source (xoshiro256** via [`Rng::f64`]).
+    Seeded(Rng),
+    /// Replays a recorded stream — the golden-fixture path. Panics if the
+    /// stream runs dry (the fixture records exactly the draws consumed).
+    Replay {
+        /// Recorded uniforms in [0, 1), in consumption order.
+        vals: Vec<f64>,
+        /// Next index to consume.
+        next: usize,
+    },
+}
+
+impl UniformSource {
+    fn draw(&mut self) -> f64 {
+        match self {
+            UniformSource::Seeded(rng) => rng.f64(),
+            UniformSource::Replay { vals, next } => {
+                let v = *vals.get(*next).expect("replay uniform stream exhausted");
+                *next += 1;
+                v
+            }
+        }
+    }
+}
+
+/// Seed-deterministic request generator: an [`ArrivalProcess`] plus a
+/// [`TokenModel`] driven by a [`UniformSource`] over a virtual clock.
+#[derive(Clone, Debug)]
+pub struct ArrivalGen {
+    process: ArrivalProcess,
+    tokens: TokenModel,
+    source: UniformSource,
+    clock_us: f64,
+    next_id: u64,
+    /// MMPP state: currently in the burst phase?
+    burst: bool,
+    /// MMPP: virtual time the current phase ends, µs.
+    phase_end_us: f64,
+    /// Uniform draws consumed so far (pinned by the golden fixture).
+    consumed: u64,
+}
+
+/// Exponential gap with the given rate (per second), quantized to whole
+/// microseconds with a 1 µs floor. `u` is a uniform in [0, 1).
+fn exp_gap_us(u: f64, rate_hz: f64) -> f64 {
+    let x = -(1.0 - u).ln() / rate_hz * 1e6;
+    x.floor().max(1.0)
+}
+
+/// Exponential dwell with the given mean (µs), quantized like the gaps.
+fn exp_dwell_us(u: f64, mean_us: f64) -> f64 {
+    let x = -(1.0 - u).ln() * mean_us;
+    x.floor().max(1.0)
+}
+
+impl ArrivalGen {
+    fn validate(process: &ArrivalProcess) {
+        match *process {
+            ArrivalProcess::Poisson { rate_hz } => assert!(rate_hz > 0.0, "rate must be positive"),
+            ArrivalProcess::Bursty { calm_hz, burst_hz, mean_calm_us, mean_burst_us } => {
+                assert!(calm_hz > 0.0 && burst_hz > 0.0, "rates must be positive");
+                assert!(mean_calm_us >= 1.0 && mean_burst_us >= 1.0, "dwells must be >= 1 us");
+            }
+            ArrivalProcess::Diurnal { base_hz, amplitude, period_us } => {
+                assert!(base_hz > 0.0, "rate must be positive");
+                assert!((0.0..=1.0).contains(&amplitude), "amplitude must be in [0, 1]");
+                assert!(period_us > 0.0, "period must be positive");
+            }
+        }
+    }
+
+    fn with_source(process: ArrivalProcess, tokens: TokenModel, mut source: UniformSource) -> Self {
+        Self::validate(&process);
+        if let TokenModel::Ramp { every, .. } = tokens {
+            assert!(every > 0, "ramp step length must be > 0");
+        }
+        let mut consumed = 0u64;
+        // MMPP starts calm; its first dwell is drawn at construction so
+        // the draw order is fixed (and mirrored by the Python reference).
+        let phase_end_us = if let ArrivalProcess::Bursty { mean_calm_us, .. } = process {
+            consumed += 1;
+            exp_dwell_us(source.draw(), mean_calm_us)
+        } else {
+            f64::INFINITY
+        };
+        ArrivalGen {
+            process,
+            tokens,
+            source,
+            clock_us: 0.0,
+            next_id: 0,
+            burst: false,
+            phase_end_us,
+            consumed,
+        }
+    }
+
+    /// Production generator: uniforms from a fresh [`Rng`] seeded `seed`.
+    pub fn new(process: ArrivalProcess, tokens: TokenModel, seed: u64) -> Self {
+        Self::with_source(process, tokens, UniformSource::Seeded(Rng::new(seed)))
+    }
+
+    /// Replay generator: uniforms from a recorded stream (golden fixtures).
+    pub fn with_uniforms(process: ArrivalProcess, tokens: TokenModel, vals: Vec<f64>) -> Self {
+        Self::with_source(process, tokens, UniformSource::Replay { vals, next: 0 })
+    }
+
+    fn draw(&mut self) -> f64 {
+        self.consumed += 1;
+        self.source.draw()
+    }
+
+    /// Uniform draws consumed so far.
+    pub fn uniforms_consumed(&self) -> u64 {
+        self.consumed
+    }
+
+    /// Generate the next request (arrival times are non-decreasing and
+    /// strictly increase by at least 1 µs between consecutive requests of
+    /// the Poisson and bursty processes).
+    pub fn next_request(&mut self) -> Request {
+        match self.process {
+            ArrivalProcess::Poisson { rate_hz } => {
+                let u = self.draw();
+                self.clock_us += exp_gap_us(u, rate_hz);
+            }
+            ArrivalProcess::Bursty { calm_hz, burst_hz, mean_calm_us, mean_burst_us } => loop {
+                let rate = if self.burst { burst_hz } else { calm_hz };
+                let u = self.draw();
+                let candidate = self.clock_us + exp_gap_us(u, rate);
+                if candidate <= self.phase_end_us {
+                    self.clock_us = candidate;
+                    break;
+                }
+                // phase flips before the candidate lands: jump to the
+                // boundary, toggle, draw the new dwell, and (by
+                // memorylessness) re-draw the gap in the new phase
+                self.clock_us = self.phase_end_us;
+                self.burst = !self.burst;
+                let mean = if self.burst { mean_burst_us } else { mean_calm_us };
+                let u2 = self.draw();
+                self.phase_end_us = self.clock_us + exp_dwell_us(u2, mean);
+            },
+            ArrivalProcess::Diurnal { base_hz, amplitude, period_us } => {
+                let peak_hz = base_hz * (1.0 + amplitude);
+                loop {
+                    let u = self.draw();
+                    self.clock_us += exp_gap_us(u, peak_hz);
+                    let phase = std::f64::consts::TAU * self.clock_us / period_us;
+                    let accept = base_hz * (1.0 + amplitude * phase.sin()) / peak_hz;
+                    let u2 = self.draw();
+                    if u2 < accept {
+                        break;
+                    }
+                }
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        Request { id, arrival_us: self.clock_us, tokens: self.tokens.tokens(id) }
+    }
+
+    /// Generate the next `n` requests in arrival order.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let mut gen = ArrivalGen::new(
+            ArrivalProcess::Poisson { rate_hz: 10_000.0 },
+            TokenModel::Fixed(8),
+            42,
+        );
+        let reqs = gen.take(5_000);
+        let span_s = reqs.last().unwrap().arrival_us / 1e6;
+        let rate = reqs.len() as f64 / span_s;
+        assert!((rate - 10_000.0).abs() / 10_000.0 < 0.1, "empirical rate {rate}");
+        assert!(reqs.windows(2).all(|w| w[0].arrival_us < w[1].arrival_us));
+        assert!(reqs.iter().all(|r| r.arrival_us == r.arrival_us.floor()), "integer µs");
+    }
+
+    #[test]
+    fn bursty_mixes_two_rates() {
+        let mut gen = ArrivalGen::new(
+            ArrivalProcess::Bursty {
+                calm_hz: 1_000.0,
+                burst_hz: 50_000.0,
+                mean_calm_us: 20_000.0,
+                mean_burst_us: 20_000.0,
+            },
+            TokenModel::Fixed(8),
+            7,
+        );
+        let reqs = gen.take(5_000);
+        let span_s = reqs.last().unwrap().arrival_us / 1e6;
+        let rate = reqs.len() as f64 / span_s;
+        // empirical rate must land strictly between the two phase rates
+        assert!(rate > 1_500.0 && rate < 49_000.0, "empirical rate {rate}");
+        assert!(reqs.windows(2).all(|w| w[0].arrival_us < w[1].arrival_us));
+    }
+
+    #[test]
+    fn diurnal_peak_beats_trough() {
+        let period = 1_000_000.0;
+        let mut gen = ArrivalGen::new(
+            ArrivalProcess::Diurnal { base_hz: 20_000.0, amplitude: 0.875, period_us: period },
+            TokenModel::Fixed(8),
+            3,
+        );
+        let reqs = gen.take(40_000);
+        // count arrivals in the rising half vs the falling half of cycle 0
+        let (mut peak, mut trough) = (0u64, 0u64);
+        for r in &reqs {
+            let phase = (r.arrival_us % period) / period;
+            if phase < 0.5 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "sin-modulated halves should differ: peak {peak} trough {trough}"
+        );
+    }
+
+    #[test]
+    fn token_ramp_steps() {
+        let m = TokenModel::Ramp { base: 8, step: 4, every: 10 };
+        assert_eq!(m.tokens(0), 8);
+        assert_eq!(m.tokens(9), 8);
+        assert_eq!(m.tokens(10), 12);
+        assert_eq!(m.tokens(25), 16);
+    }
+
+    #[test]
+    fn identical_seed_identical_stream() {
+        let p = ArrivalProcess::Bursty {
+            calm_hz: 2_000.0,
+            burst_hz: 20_000.0,
+            mean_calm_us: 10_000.0,
+            mean_burst_us: 5_000.0,
+        };
+        let a = ArrivalGen::new(p, TokenModel::Fixed(16), 99).take(500);
+        let b = ArrivalGen::new(p, TokenModel::Fixed(16), 99).take(500);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn replay_source_panics_when_dry() {
+        let mut gen = ArrivalGen::with_uniforms(
+            ArrivalProcess::Poisson { rate_hz: 1_000.0 },
+            TokenModel::Fixed(1),
+            vec![0.5],
+        );
+        gen.next_request();
+        gen.next_request();
+    }
+}

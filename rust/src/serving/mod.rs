@@ -1,0 +1,38 @@
+//! Online serving tier: open-loop request streams over the balancing
+//! stack (ARCHITECTURE.md §9).
+//!
+//! Training drives the schedulers step-by-step; serving is the other
+//! regime the ROADMAP's north star demands — continuous request streams
+//! whose arrival process, not a training loop, decides when work exists.
+//! This module stacks three layers on top of the [`crate::balancer`]
+//! facade:
+//!
+//! * [`arrivals`] — seed-deterministic Poisson / bursty-MMPP / diurnal
+//!   arrival processes over a virtual microsecond clock ([`ArrivalGen`]),
+//!   emitting [`Request`]s whose decode-token counts follow a
+//!   [`TokenModel`].
+//! * [`server`] — the open-loop batching-window loop ([`MoeServer`]):
+//!   collect for `window_us` or `max_batch`, shed stale requests, scatter
+//!   the survivors over a drifting [`crate::workload::TopicMix`], drive
+//!   any registered policy, and charge solve + dispatch latency; plus the
+//!   closed-loop [`ServingRunner`] benches use instead of hand-rolled
+//!   step loops.
+//! * [`sla`] — per-request queue/solve/dispatch/e2e latency accounting
+//!   with exact and P² streaming percentiles, deadline-miss and shed
+//!   counters ([`SlaStats`]).
+//!
+//! Determinism contract: with [`SolveCost::Virtual`] the entire run —
+//! request trace, per-window plans, and [`SlaStats`] — is a pure function
+//! of `(process, token model, seed, config)`, bit-identical across runs
+//! and engine worker counts, and transliterated op-for-op by
+//! `python/tools/serving_reference.py` into the golden-serving fixture.
+
+pub mod arrivals;
+pub mod server;
+pub mod sla;
+
+pub use arrivals::{arrival_seed, ArrivalGen, ArrivalProcess, Request, TokenModel, UniformSource};
+pub use server::{
+    DispatchCost, MoeServer, ServingConfig, ServingRunner, ServingTrace, SolveCost, WindowRecord,
+};
+pub use sla::SlaStats;

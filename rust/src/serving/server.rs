@@ -1,0 +1,428 @@
+//! The batching-window serving loop and the closed-loop bench runner.
+//!
+//! [`MoeServer`] consumes an open-loop request trace: it collects pending
+//! requests for `window_us` (or until `max_batch` are queued, whichever
+//! comes first), sheds requests that have been queued past
+//! `shed_after_us`, scatters the survivors' decode tokens over a drifting
+//! [`TopicMix`] into a single-layer micro-batch, drives any registered
+//! [`crate::balancer::Balancer`] policy through the [`MoeSession`] facade,
+//! and charges solve + dispatch latency against each request's SLO.
+//!
+//! The virtual clock is **serial**: the next window opens only after the
+//! previous window's service completes, so sustained overload builds a
+//! queue and (with a finite `shed_after_us`) triggers admission shedding —
+//! the open-loop behaviour the serving benches measure. Every decision the
+//! loop makes (admit, close, shed, miss) is a pure function of the request
+//! trace and the config whenever [`SolveCost::Virtual`] is selected, which
+//! is what the determinism and golden-serving suites pin; keep the loop's
+//! arithmetic in lock-step with `python/tools/serving_reference.py`.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::balancer::{MoeLayerPlan, MoeSession};
+use crate::cluster::sim::moe_layer_time;
+use crate::cluster::CostModel;
+use crate::scheduler::{LoadMatrix, Route};
+use crate::topology::Topology;
+use crate::workload::TopicMix;
+
+use super::arrivals::Request;
+use super::sla::SlaStats;
+
+/// How scheduling latency is charged against the SLO.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SolveCost {
+    /// Charge a fixed virtual latency per window — the deterministic mode
+    /// every reproducibility suite uses (the clock advance is then a pure
+    /// function of the trace).
+    Virtual {
+        /// Charged scheduling latency per non-empty window, µs.
+        us: f64,
+    },
+    /// Charge the measured wall time of the policy's solve — what the
+    /// serving benches use to compare real scheduling overheads.
+    Wall,
+}
+
+/// How dispatch + expert-compute + combine latency is charged.
+#[derive(Clone, Debug)]
+pub enum DispatchCost {
+    /// Affine in the window's token count — deterministic and mirrored by
+    /// the Python serving reference.
+    PerToken {
+        /// Fixed per-window overhead, µs.
+        fixed_us: f64,
+        /// Marginal cost per routed token, µs.
+        us_per_token: f64,
+    },
+    /// The cluster cost model's per-GPU breakdown for the emitted plan
+    /// (`dispatch + compute + combine` of
+    /// [`crate::cluster::sim::moe_layer_time`]) — this is where a
+    /// better-balanced plan directly buys latency.
+    Modeled {
+        /// Cluster cost model.
+        model: CostModel,
+        /// Topology (node boundaries for the all-to-all model).
+        topo: Topology,
+    },
+}
+
+/// Batching-window server configuration.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Maximum time a window stays open collecting requests, µs (≥ 1).
+    pub window_us: f64,
+    /// Maximum requests per window's micro-batch (≥ 1).
+    pub max_batch: usize,
+    /// End-to-end deadline per request, µs.
+    pub slo_us: f64,
+    /// Admission control: shed a request whose queue wait at window close
+    /// exceeds this, µs (`f64::INFINITY` = never shed).
+    pub shed_after_us: f64,
+    /// Scheduling-latency charge.
+    pub solve_cost: SolveCost,
+    /// Dispatch/compute/combine-latency charge.
+    pub dispatch_cost: DispatchCost,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            window_us: 500.0,
+            max_batch: 32,
+            slo_us: 5_000.0,
+            shed_after_us: f64::INFINITY,
+            solve_cost: SolveCost::Virtual { us: 64.0 },
+            dispatch_cost: DispatchCost::PerToken { fixed_us: 32.0, us_per_token: 0.0625 },
+        }
+    }
+}
+
+/// What one batching window did (the determinism suite compares these
+/// bit-for-bit; solve wall time is excluded by construction — only the
+/// *charged* latencies appear).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowRecord {
+    /// Window index (0-based).
+    pub index: u64,
+    /// Virtual time the window opened, µs.
+    pub open_us: f64,
+    /// Virtual time the window closed and the batch dispatched, µs.
+    pub close_us: f64,
+    /// Ids served in this window's micro-batch, FIFO order.
+    pub served: Vec<u64>,
+    /// Ids shed at this window's close.
+    pub shed: Vec<u64>,
+    /// Total decode tokens in the micro-batch.
+    pub tokens: u64,
+    /// The emitted plan's per-GPU compute loads (empty for empty windows).
+    pub gpu_compute: Vec<u64>,
+    /// The emitted plan's token routes (empty for empty windows).
+    pub routes: Vec<Route>,
+    /// Charged scheduling latency, µs.
+    pub solve_us: f64,
+    /// Charged dispatch + compute + combine latency, µs.
+    pub dispatch_us: f64,
+}
+
+/// Full per-window record of one [`MoeServer::run`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServingTrace {
+    /// One record per formed window, in virtual-time order.
+    pub windows: Vec<WindowRecord>,
+}
+
+/// Open-loop batching-window server over any registered policy.
+pub struct MoeServer {
+    session: MoeSession,
+    cfg: ServingConfig,
+    mix: TopicMix,
+    gpus: usize,
+    sla: SlaStats,
+    now_us: f64,
+    windows: u64,
+}
+
+impl MoeServer {
+    /// Server over a single-layer session. Panics if the session schedules
+    /// more than one layer (serving forms single-layer decode batches) or
+    /// the config is degenerate.
+    pub fn new(session: MoeSession, cfg: ServingConfig, mix: TopicMix) -> Self {
+        assert_eq!(session.layers(), 1, "serving drives single-layer decode sessions");
+        assert_eq!(mix.num_experts(), session.experts(), "mix/session expert counts differ");
+        assert!(cfg.window_us >= 1.0, "window must be at least 1 us");
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        assert!(cfg.slo_us >= 0.0 && cfg.shed_after_us >= 0.0, "negative SLO bounds");
+        let gpus = session.gpus();
+        MoeServer { session, cfg, mix, gpus, sla: SlaStats::default(), now_us: 0.0, windows: 0 }
+    }
+
+    /// Serve a request trace (sorted by arrival) to completion: every
+    /// request ends up served or shed. Returns the per-window trace;
+    /// cumulative SLO accounting accrues in [`MoeServer::sla`].
+    pub fn run(&mut self, reqs: &[Request]) -> ServingTrace {
+        assert!(
+            reqs.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
+            "request trace must be sorted by arrival time"
+        );
+        let n = reqs.len();
+        self.sla.arrived += n as u64;
+        let mut trace = ServingTrace::default();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        let mut i = 0usize;
+        while i < n || !queue.is_empty() {
+            // admit everything that arrived while the last window served
+            while i < n && reqs[i].arrival_us <= self.now_us {
+                queue.push_back(i);
+                i += 1;
+            }
+            if queue.is_empty() {
+                // idle: jump the clock to the next arrival
+                self.now_us = reqs[i].arrival_us;
+                continue;
+            }
+            let open_us = self.now_us;
+            let mut close_us = open_us + self.cfg.window_us;
+            // collect during the window, closing early once max_batch are
+            // pending
+            while queue.len() < self.cfg.max_batch && i < n && reqs[i].arrival_us <= close_us {
+                queue.push_back(i);
+                i += 1;
+            }
+            if queue.len() >= self.cfg.max_batch {
+                // filled early: close at the arrival that filled it (a
+                // pre-existing backlog closes the window immediately)
+                close_us = open_us.max(reqs[queue[self.cfg.max_batch - 1]].arrival_us);
+            }
+            // shed stale requests from the front, then take the batch FIFO
+            let mut batch: Vec<usize> = Vec::new();
+            let mut shed: Vec<u64> = Vec::new();
+            while batch.len() < self.cfg.max_batch {
+                let Some(j) = queue.pop_front() else { break };
+                let wait = close_us - reqs[j].arrival_us;
+                if wait > self.cfg.shed_after_us {
+                    shed.push(reqs[j].id);
+                    self.sla.record_shed();
+                } else {
+                    batch.push(j);
+                }
+            }
+
+            self.sla.windows += 1;
+            let index = self.windows;
+            self.windows += 1;
+            let (tokens, gpu_compute, routes, solve_us, dispatch_us) = if batch.is_empty() {
+                self.sla.empty_windows += 1;
+                (0u64, Vec::new(), Vec::new(), 0.0, 0.0)
+            } else {
+                self.mix.next_window();
+                let mut lm = LoadMatrix::zeros(self.session.experts(), self.gpus);
+                let mut tokens = 0u64;
+                for &j in &batch {
+                    let r = &reqs[j];
+                    // requests pin to source GPUs round-robin by id
+                    let gpu = (r.id % self.gpus as u64) as usize;
+                    self.mix.scatter(&mut lm, gpu, r.tokens);
+                    tokens += r.tokens;
+                }
+                let t0 = Instant::now();
+                let out = self.session.step(std::slice::from_ref(&lm));
+                let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+                let plan = &out.layers[0];
+                let solve_us = match self.cfg.solve_cost {
+                    SolveCost::Virtual { us } => us,
+                    SolveCost::Wall => wall_us,
+                };
+                let dispatch_us = dispatch_charge(&self.cfg.dispatch_cost, tokens, plan);
+                (tokens, plan.gpu_compute.clone(), plan.routes.clone(), solve_us, dispatch_us)
+            };
+            let service_us = solve_us + dispatch_us;
+            for &j in &batch {
+                let wait = close_us - reqs[j].arrival_us;
+                self.sla.record_served(wait, solve_us, dispatch_us, self.cfg.slo_us);
+            }
+            trace.windows.push(WindowRecord {
+                index,
+                open_us,
+                close_us,
+                served: batch.iter().map(|&j| reqs[j].id).collect(),
+                shed,
+                tokens,
+                gpu_compute,
+                routes,
+                solve_us,
+                dispatch_us,
+            });
+            // serial server: the next window opens after service completes
+            self.now_us = close_us + service_us;
+        }
+        trace
+    }
+
+    /// Cumulative SLO accounting.
+    pub fn sla(&self) -> &SlaStats {
+        &self.sla
+    }
+
+    /// The policy session being driven.
+    pub fn session(&self) -> &MoeSession {
+        &self.session
+    }
+
+    /// Current virtual time, µs.
+    pub fn now_us(&self) -> f64 {
+        self.now_us
+    }
+}
+
+fn dispatch_charge(cost: &DispatchCost, tokens: u64, plan: &MoeLayerPlan) -> f64 {
+    match cost {
+        DispatchCost::PerToken { fixed_us, us_per_token } => {
+            fixed_us + us_per_token * tokens as f64
+        }
+        DispatchCost::Modeled { model, topo } => {
+            let bd = moe_layer_time(model, topo, plan);
+            // solve latency is charged separately; take the data-path legs
+            (bd.dispatch + bd.compute + bd.combine) * 1e6
+        }
+    }
+}
+
+/// Closed-loop driver: feeds each micro-batch as soon as the previous one
+/// completes (no arrival process, no queueing — the classic closed-loop
+/// complement to [`MoeServer`]'s open loop) and meters per-batch solve and
+/// modeled dispatch latency into the same [`SlaStats`]. Benches and
+/// examples use this instead of hand-rolling `session.step` timing loops.
+pub struct ServingRunner {
+    session: MoeSession,
+    dispatch_cost: Option<DispatchCost>,
+    slo_us: f64,
+    sla: SlaStats,
+}
+
+impl ServingRunner {
+    /// Closed-loop runner over any session; dispatch latency is not
+    /// charged until [`ServingRunner::with_dispatch`] installs a model.
+    pub fn new(session: MoeSession) -> Self {
+        ServingRunner { session, dispatch_cost: None, slo_us: f64::INFINITY, sla: SlaStats::default() }
+    }
+
+    /// Charge dispatch latency per batch under the given model.
+    pub fn with_dispatch(mut self, cost: DispatchCost) -> Self {
+        self.dispatch_cost = Some(cost);
+        self
+    }
+
+    /// Count batches whose solve + dispatch latency exceeds `slo_us` as
+    /// deadline misses.
+    pub fn with_slo_us(mut self, slo_us: f64) -> Self {
+        self.slo_us = slo_us;
+        self
+    }
+
+    /// Feed one micro-batch, metering wall solve latency (and dispatch, if
+    /// a model is installed) into [`ServingRunner::sla`].
+    pub fn step(&mut self, lm: &LoadMatrix) -> MoeLayerPlan {
+        self.sla.arrived += 1;
+        self.sla.windows += 1;
+        let t0 = Instant::now();
+        let out = self.session.step(std::slice::from_ref(lm));
+        let solve_us = t0.elapsed().as_secs_f64() * 1e6;
+        let plan = out.layers.into_iter().next().expect("single-layer step");
+        let dispatch_us = match &self.dispatch_cost {
+            Some(cost) => dispatch_charge(cost, lm.total(), &plan),
+            None => 0.0,
+        };
+        self.sla.record_served(0.0, solve_us, dispatch_us, self.slo_us);
+        plan
+    }
+
+    /// Feed every batch in order, returning the emitted plans.
+    pub fn run(&mut self, batches: &[LoadMatrix]) -> Vec<MoeLayerPlan> {
+        batches.iter().map(|lm| self.step(lm)).collect()
+    }
+
+    /// Per-batch latency accounting (queue is always zero: closed loop).
+    pub fn sla(&self) -> &SlaStats {
+        &self.sla
+    }
+
+    /// The session being driven.
+    pub fn session(&self) -> &MoeSession {
+        &self.session
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::arrivals::{ArrivalGen, ArrivalProcess, TokenModel};
+    use crate::topology::Topology;
+
+    fn session(policy: &str) -> MoeSession {
+        MoeSession::builder()
+            .topology(Topology::new(8, 4, 2, 8))
+            .experts(16)
+            .policy_name(policy)
+            .build()
+            .unwrap()
+    }
+
+    fn poisson_reqs(n: usize, rate_hz: f64, seed: u64) -> Vec<Request> {
+        ArrivalGen::new(ArrivalProcess::Poisson { rate_hz }, TokenModel::Fixed(32), seed).take(n)
+    }
+
+    #[test]
+    fn serves_every_request_exactly_once() {
+        let cfg = ServingConfig::default();
+        let mut server = session("vanilla-ep").serve(cfg.clone(), TopicMix::new(16, 1.1, 4, 5));
+        let reqs = poisson_reqs(300, 20_000.0, 11);
+        let trace = server.run(&reqs);
+        let sla = server.sla();
+        assert_eq!(sla.arrived, 300);
+        assert_eq!(sla.served, 300);
+        assert_eq!(sla.shed, 0);
+        assert_eq!(sla.accounted(), 300);
+        let mut seen: Vec<u64> = trace.windows.iter().flat_map(|w| w.served.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..300).collect::<Vec<_>>());
+        for w in &trace.windows {
+            assert!(w.served.len() <= cfg.max_batch, "window {} overfull", w.index);
+            assert_eq!(w.gpu_compute.iter().sum::<u64>(), w.tokens, "plan lost tokens");
+        }
+    }
+
+    #[test]
+    fn overload_sheds_under_tight_admission() {
+        let cfg = ServingConfig {
+            shed_after_us: 2_000.0,
+            solve_cost: SolveCost::Virtual { us: 4_000.0 },
+            ..Default::default()
+        };
+        let mut server = session("vanilla-ep").serve(cfg, TopicMix::new(16, 1.1, 4, 5));
+        // arrivals far faster than the 4ms-per-window service rate
+        let reqs = poisson_reqs(400, 100_000.0, 13);
+        server.run(&reqs);
+        let sla = server.sla();
+        assert!(sla.shed > 0, "overload must shed: {sla:?}");
+        assert_eq!(sla.accounted(), 400, "conservation under shedding");
+    }
+
+    #[test]
+    fn closed_loop_runner_meters_every_batch() {
+        let mut runner = ServingRunner::new(session("micromoe")).with_slo_us(f64::INFINITY);
+        let mut lm = LoadMatrix::zeros(16, 8);
+        for g in 0..8 {
+            lm.add(g % 16, g, 100);
+        }
+        let plans = runner.run(&[lm.clone(), lm.clone(), lm]);
+        assert_eq!(plans.len(), 3);
+        let sla = runner.sla();
+        assert_eq!(sla.served, 3);
+        assert_eq!(sla.deadline_misses, 0);
+        assert_eq!(sla.queue.count(), 3);
+        assert!(sla.queue.samples().iter().all(|&q| q == 0.0), "closed loop has no queueing");
+        assert!(sla.solve.mean() > 0.0, "wall solve latency metered");
+    }
+}

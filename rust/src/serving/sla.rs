@@ -1,0 +1,161 @@
+//! SLO accounting for the serving tier: per-request latency breakdown
+//! (queue / solve / dispatch), exact and P² streaming percentiles, and the
+//! deadline-miss / shed counters the serving benches report.
+//!
+//! All latencies are in virtual microseconds. When the server runs with
+//! [`crate::serving::SolveCost::Virtual`] the whole accumulator is a pure
+//! function of the request trace and the server config — that is what lets
+//! the determinism suite demand bit-identical [`SlaStats`] across runs and
+//! engine worker counts, and the golden fixture replay them from Python.
+
+use crate::ser::Json;
+use crate::stats::LatencyTrack;
+
+/// Cumulative serving-tier SLO accounting.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SlaStats {
+    /// Requests that entered the server's queue.
+    pub arrived: u64,
+    /// Requests served in some window's micro-batch.
+    pub served: u64,
+    /// Requests shed by admission control (queued past `shed_after_us`).
+    pub shed: u64,
+    /// Served requests whose end-to-end latency exceeded `slo_us`.
+    pub deadline_misses: u64,
+    /// Batching windows formed (including emptied-by-shedding ones).
+    pub windows: u64,
+    /// Windows whose batch was empty after shedding (no plan emitted).
+    pub empty_windows: u64,
+    /// Per-request time spent queued before its window closed, µs.
+    pub queue: LatencyTrack,
+    /// Per-request (= per-window) scheduling latency, µs.
+    pub solve: LatencyTrack,
+    /// Per-request (= per-window) dispatch + compute + combine latency, µs.
+    pub dispatch: LatencyTrack,
+    /// Per-request end-to-end latency (queue + solve + dispatch), µs.
+    pub e2e: LatencyTrack,
+}
+
+impl SlaStats {
+    /// Record one served request's latency breakdown against deadline
+    /// `slo_us`, returning whether it missed.
+    pub fn record_served(
+        &mut self,
+        queue_us: f64,
+        solve_us: f64,
+        dispatch_us: f64,
+        slo_us: f64,
+    ) -> bool {
+        self.served += 1;
+        let e2e = queue_us + solve_us + dispatch_us;
+        self.queue.record(queue_us);
+        self.solve.record(solve_us);
+        self.dispatch.record(dispatch_us);
+        self.e2e.record(e2e);
+        let miss = e2e > slo_us;
+        if miss {
+            self.deadline_misses += 1;
+        }
+        miss
+    }
+
+    /// Record one shed request.
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// Requests accounted for (served or shed).
+    pub fn accounted(&self) -> u64 {
+        self.served + self.shed
+    }
+
+    /// Deadline misses over served requests (0 when nothing was served).
+    pub fn miss_rate(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.served as f64
+        }
+    }
+
+    /// Shed requests over arrived requests (0 before the first arrival).
+    pub fn shed_rate(&self) -> f64 {
+        if self.arrived == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.arrived as f64
+        }
+    }
+
+    /// JSON report (what the serving bench uploads as a CI artifact):
+    /// counters plus exact and P² p50/p95/p99 for every latency component.
+    pub fn to_json(&self) -> Json {
+        fn track(t: &LatencyTrack) -> Json {
+            fn num(x: f64) -> Json {
+                // JSON has no NaN; empty tracks report null
+                if x.is_nan() {
+                    Json::Null
+                } else {
+                    Json::Num(x)
+                }
+            }
+            Json::obj(vec![
+                ("count", Json::Num(t.count() as f64)),
+                ("mean_us", num(t.mean())),
+                ("max_us", Json::Num(t.max())),
+                ("p50_us", num(t.exact(0.50))),
+                ("p95_us", num(t.exact(0.95))),
+                ("p99_us", num(t.exact(0.99))),
+                ("p2_p50_us", num(t.p2_p50())),
+                ("p2_p95_us", num(t.p2_p95())),
+                ("p2_p99_us", num(t.p2_p99())),
+            ])
+        }
+        Json::obj(vec![
+            ("arrived", Json::Num(self.arrived as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("deadline_misses", Json::Num(self.deadline_misses as f64)),
+            ("windows", Json::Num(self.windows as f64)),
+            ("empty_windows", Json::Num(self.empty_windows as f64)),
+            ("miss_rate", Json::Num(self.miss_rate())),
+            ("shed_rate", Json::Num(self.shed_rate())),
+            ("queue", track(&self.queue)),
+            ("solve", track(&self.solve)),
+            ("dispatch", track(&self.dispatch)),
+            ("e2e", track(&self.e2e)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_served_breaks_down_and_flags_misses() {
+        let mut s = SlaStats::default();
+        s.arrived = 3;
+        assert!(!s.record_served(10.0, 5.0, 20.0, 100.0));
+        assert!(s.record_served(80.0, 5.0, 20.0, 100.0), "105 > 100 misses");
+        s.record_shed();
+        assert_eq!(s.served, 2);
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.accounted(), 3);
+        assert!((s.miss_rate() - 0.5).abs() < 1e-12);
+        assert!((s.shed_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.e2e.count(), 2);
+        assert!((s.e2e.max() - 105.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_have_benign_rates_and_json() {
+        let s = SlaStats::default();
+        assert_eq!(s.miss_rate(), 0.0);
+        assert_eq!(s.shed_rate(), 0.0);
+        let j = s.to_json();
+        assert_eq!(j.path(&["e2e", "p50_us"]), Some(&Json::Null));
+        assert_eq!(j.get("arrived").and_then(Json::as_f64), Some(0.0));
+    }
+}

@@ -1,6 +1,7 @@
 //! Small statistics substrate: summaries, histograms, moving averages and
 //! time-series tooling shared by the adaptive-replacement predictor, the
-//! bench harness, and the experiment reports.
+//! bench harness, the serving tier's SLO accounting, and the experiment
+//! reports.
 
 /// Summary statistics over a sample.
 #[derive(Clone, Debug, PartialEq)]
@@ -54,6 +55,244 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     let hi = pos.ceil() as usize;
     let frac = pos - lo as f64;
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// P² (Jain–Chlamtac 1985) streaming quantile estimator: one quantile in
+/// O(1) memory with five piecewise-parabolic markers, so the serving tier
+/// can report p50/p95/p99 over unbounded request streams without keeping
+/// every latency sample. The first five observations are buffered and
+/// answered exactly; from the sixth on, marker heights are adjusted by the
+/// parabolic (or, when non-monotone, linear) P² update.
+///
+/// The estimator is transliterated op-for-op in
+/// `python/tools/serving_reference.py`; keep the update arithmetic and its
+/// evaluation order in sync with that reference — the golden-serving
+/// fixture pins both implementations to identical marker trajectories.
+#[derive(Clone, Debug, PartialEq)]
+pub struct P2Quantile {
+    p: f64,
+    count: u64,
+    /// First five observations, kept for the exact small-sample answer.
+    warmup: Vec<f64>,
+    /// Marker heights q0..q4.
+    q: [f64; 5],
+    /// Marker positions (1-based observation counts), n0..n4.
+    pos: [f64; 5],
+    /// Desired marker positions n'0..n'4.
+    desired: [f64; 5],
+    /// Per-observation desired-position increments dn0..dn4.
+    dn: [f64; 5],
+}
+
+impl P2Quantile {
+    /// Estimator for quantile `p` in (0, 1).
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p < 1.0, "quantile must be in (0, 1), got {p}");
+        P2Quantile {
+            p,
+            count: 0,
+            warmup: Vec::with_capacity(5),
+            q: [0.0; 5],
+            pos: [0.0; 5],
+            desired: [0.0; 5],
+            dn: [0.0; 5],
+        }
+    }
+
+    /// Quantile being tracked.
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+
+    /// Observations folded in so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Fold in one observation.
+    pub fn observe(&mut self, x: f64) {
+        self.count += 1;
+        if self.count <= 5 {
+            self.warmup.push(x);
+            if self.count == 5 {
+                let mut init = self.warmup.clone();
+                init.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                for i in 0..5 {
+                    self.q[i] = init[i];
+                    self.pos[i] = (i + 1) as f64;
+                }
+                let p = self.p;
+                self.desired = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0];
+                self.dn = [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0];
+            }
+            return;
+        }
+        // cell index k: which marker interval x falls into (extremes clamp)
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x < self.q[1] {
+            0
+        } else if x < self.q[2] {
+            1
+        } else if x < self.q[3] {
+            2
+        } else if x <= self.q[4] {
+            3
+        } else {
+            self.q[4] = x;
+            3
+        };
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.desired[i] += self.dn[i];
+        }
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let s = if d >= 0.0 { 1.0 } else { -1.0 };
+                let cand = self.parabolic(i, s);
+                self.q[i] = if self.q[i - 1] < cand && cand < self.q[i + 1] {
+                    cand
+                } else {
+                    self.linear(i, s)
+                };
+                self.pos[i] += s;
+            }
+        }
+    }
+
+    /// Piecewise-parabolic (P²) height prediction for marker `i` moving by
+    /// `s` (±1).
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (q, n) = (&self.q, &self.pos);
+        q[i] + s / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + s) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - s) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    /// Linear fallback when the parabolic prediction is non-monotone.
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + s * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate: exact (interpolated) over the warmup buffer while
+    /// five or fewer observations are held, the middle marker height after;
+    /// `NaN` before the first observation.
+    pub fn estimate(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count <= 5 {
+            let mut sorted = self.warmup.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            return percentile(&sorted, self.p);
+        }
+        self.q[2]
+    }
+}
+
+/// Latency accumulator used by the serving tier's SLO accounting: exact
+/// samples (kept for true percentiles and conservation checks) alongside
+/// P² streaming estimators for p50/p95/p99, so reports can show both the
+/// ground truth and what an O(1)-memory production meter would have said.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyTrack {
+    samples: Vec<f64>,
+    sum: f64,
+    max: f64,
+    p2_50: P2Quantile,
+    p2_95: P2Quantile,
+    p2_99: P2Quantile,
+}
+
+impl Default for LatencyTrack {
+    fn default() -> Self {
+        LatencyTrack::new()
+    }
+}
+
+impl LatencyTrack {
+    /// Empty track.
+    pub fn new() -> Self {
+        LatencyTrack {
+            samples: Vec::new(),
+            sum: 0.0,
+            max: 0.0,
+            p2_50: P2Quantile::new(0.50),
+            p2_95: P2Quantile::new(0.95),
+            p2_99: P2Quantile::new(0.99),
+        }
+    }
+
+    /// Record one latency sample (any unit; the serving tier uses µs).
+    pub fn record(&mut self, x: f64) {
+        self.sum += x;
+        self.max = self.max.max(x);
+        self.p2_50.observe(x);
+        self.p2_95.observe(x);
+        self.p2_99.observe(x);
+        self.samples.push(x);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Mean sample (`NaN` when empty).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            f64::NAN
+        } else {
+            self.sum / self.samples.len() as f64
+        }
+    }
+
+    /// Largest sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Exact interpolated quantile `q` in [0, 1] (`NaN` when empty).
+    pub fn exact(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&sorted, q)
+    }
+
+    /// P² streaming p50 estimate (`NaN` when empty).
+    pub fn p2_p50(&self) -> f64 {
+        self.p2_50.estimate()
+    }
+
+    /// P² streaming p95 estimate (`NaN` when empty).
+    pub fn p2_p95(&self) -> f64 {
+        self.p2_95.estimate()
+    }
+
+    /// P² streaming p99 estimate (`NaN` when empty).
+    pub fn p2_p99(&self) -> f64 {
+        self.p2_99.estimate()
+    }
+
+    /// Raw samples in arrival order.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
 }
 
 /// Exponential moving average (the paper's §6.4 "moving averages" predictor
@@ -566,6 +805,55 @@ mod tests {
         let mut b = BalancerStats::default();
         b.absorb(&StepStats { degradation: d, ..Default::default() });
         assert_eq!(b.degradation, d);
+    }
+
+    #[test]
+    fn p2_small_samples_are_exact() {
+        let mut p2 = P2Quantile::new(0.5);
+        assert!(p2.estimate().is_nan());
+        for x in [5.0, 1.0, 3.0] {
+            p2.observe(x);
+        }
+        assert!((p2.estimate() - 3.0).abs() < 1e-12, "exact median of 3 samples");
+        assert_eq!(p2.count(), 3);
+        assert!((p2.p() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_tracks_uniform_stream_quantiles() {
+        // a 1..=1000 permutation-free ramp: exact quantiles are known
+        for (p, want) in [(0.5, 500.0), (0.95, 950.0), (0.99, 990.0)] {
+            let mut p2 = P2Quantile::new(p);
+            for i in 1..=1000 {
+                p2.observe(i as f64);
+            }
+            let got = p2.estimate();
+            assert!(
+                (got - want).abs() / want < 0.05,
+                "p{p}: got {got}, want ~{want}"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_track_exact_and_p2_agree_on_ramp() {
+        let mut t = LatencyTrack::new();
+        assert!(t.is_empty());
+        assert!(t.mean().is_nan());
+        for i in 0..2000 {
+            t.record((i % 1000) as f64);
+        }
+        assert_eq!(t.count(), 2000);
+        assert_eq!(t.max(), 999.0);
+        assert!((t.mean() - 499.5).abs() < 1e-9);
+        for (exact, p2) in
+            [(t.exact(0.50), t.p2_p50()), (t.exact(0.95), t.p2_p95()), (t.exact(0.99), t.p2_p99())]
+        {
+            assert!(
+                (exact - p2).abs() / exact.max(1.0) < 0.05,
+                "exact {exact} vs p2 {p2}"
+            );
+        }
     }
 
     #[test]

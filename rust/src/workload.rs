@@ -7,6 +7,9 @@
 //! * [`DriftingWorkload`] — the Fig.-2 phenomenon: popularity ranks rotate
 //!   and per-micro-batch noise fluctuates, so the hot expert set changes
 //!   over time (what adaptive replacement reacts to).
+//! * [`TopicMix`] — the serving tier's per-token view of the same drift
+//!   model: expert popularity sampled one token at a time, rotated per
+//!   batching window instead of per fixed-shape batch.
 //! * [`TraceWorkload`] — replays `(micro_batch, expert, gpu) -> count`
 //!   traces recorded from the real e2e training run (Fig. 2's data).
 
@@ -118,6 +121,70 @@ impl Workload for DriftingWorkload {
 
     fn num_gpus(&self) -> usize {
         self.inner.gpus
+    }
+}
+
+/// Per-token drifting expert popularity for the serving tier: the same
+/// Zipf-over-drifting-ranks model as [`DriftingWorkload`], but sampled one
+/// token at a time so the batching-window server can assemble load
+/// matrices from whatever requests fell inside a window, instead of
+/// consuming fixed-shape batches. Rotation ticks per *window* (via
+/// [`TopicMix::next_window`]), mirroring `DriftingWorkload`'s per-batch
+/// rotation of the hottest third of the ranking.
+pub struct TopicMix {
+    experts: usize,
+    zipf: Zipf,
+    rank_of: Vec<usize>,
+    rng: Rng,
+    rotate_every: usize,
+    window: usize,
+}
+
+impl TopicMix {
+    /// Mix over `experts` with Zipf skew `s`, rotating the hot set every
+    /// `rotate_every` windows (0 disables drift), from a seeded ranking.
+    pub fn new(experts: usize, s: f64, rotate_every: usize, seed: u64) -> Self {
+        assert!(experts > 0);
+        let mut rng = Rng::new(seed);
+        let mut rank_of: Vec<usize> = (0..experts).collect();
+        rng.shuffle(&mut rank_of);
+        TopicMix { experts, zipf: Zipf::new(experts, s), rank_of, rng, rotate_every, window: 0 }
+    }
+
+    /// Experts in the popularity ranking.
+    pub fn num_experts(&self) -> usize {
+        self.experts
+    }
+
+    /// Advance to the next batching window, applying the drift rotation on
+    /// the same cadence and with the same permutation moves as
+    /// [`DriftingWorkload`].
+    pub fn next_window(&mut self) {
+        if self.rotate_every > 0 && self.window > 0 && self.window % self.rotate_every == 0 {
+            let k = (self.experts / 3).max(2).min(self.experts);
+            self.rank_of[..k].rotate_left(1);
+            let hot = self.rng.below(k as u64) as usize;
+            let cold = k + self.rng.below((self.experts - k).max(1) as u64) as usize;
+            if cold < self.experts {
+                self.rank_of.swap(hot, cold);
+            }
+        }
+        self.window += 1;
+    }
+
+    /// Sample the expert one token routes to under the current ranking.
+    pub fn sample_expert(&mut self) -> usize {
+        let rank = self.zipf.sample(&mut self.rng);
+        self.rank_of[rank]
+    }
+
+    /// Spread `tokens` tokens emitted by source GPU `gpu` over the experts
+    /// of `lm` (one Zipf draw per token).
+    pub fn scatter(&mut self, lm: &mut LoadMatrix, gpu: usize, tokens: u64) {
+        for _ in 0..tokens {
+            let e = self.sample_expert();
+            lm.add(e, gpu, 1);
+        }
     }
 }
 
@@ -258,6 +325,29 @@ mod tests {
             }
         }
         assert!(changed, "hot expert never drifted");
+    }
+
+    #[test]
+    fn topic_mix_conserves_and_drifts() {
+        let mut mix = TopicMix::new(8, 1.5, 1, 7);
+        let hot_of = |mix: &mut TopicMix| -> usize {
+            let mut lm = LoadMatrix::zeros(8, 2);
+            mix.next_window();
+            mix.scatter(&mut lm, 0, 2_500);
+            mix.scatter(&mut lm, 1, 2_500);
+            assert_eq!(lm.total(), 5_000);
+            let loads = lm.expert_loads();
+            loads.iter().enumerate().max_by_key(|&(_, &l)| l).unwrap().0
+        };
+        let first = hot_of(&mut mix);
+        let mut changed = false;
+        for _ in 0..30 {
+            if hot_of(&mut mix) != first {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed, "hot expert never drifted across windows");
     }
 
     #[test]

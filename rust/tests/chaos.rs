@@ -189,6 +189,77 @@ fn respawn_limit_degrades_to_passthrough_but_still_plans() {
     assert_eq!(st.total(), (2 * LAYERS) as u64, "{st:?}");
 }
 
+/// Serving under chaos: worker panics and budget starvation strike
+/// mid-stream while the batching-window loop is live. The server must keep
+/// emitting feasible per-window plans (token-exact for the LPP policy),
+/// its SLO accounting must stay conservative (every request served or shed,
+/// one e2e sample per served request), and the session's
+/// `DegradationStats` must record exactly one rung per non-empty window
+/// with the injected faults landing on the expected rungs.
+#[test]
+fn serving_survives_worker_panics_and_budget_starvation_mid_stream() {
+    use micromoe::serving::{
+        ArrivalGen, ArrivalProcess, DispatchCost, ServingConfig, SolveCost, TokenModel,
+    };
+    use micromoe::workload::TopicMix;
+
+    // non-empty windows drive the session step counter one-for-one (empty
+    // windows never step), so these (step, layer=0) slots hit the 2nd, 4th
+    // and 7th served windows
+    let plan = FaultPlan::with_faults(vec![
+        (1, 0, Fault::BudgetStarvation),
+        (3, 0, Fault::WorkerPanic { persistent: false }),
+        (6, 0, Fault::BudgetStarvation),
+    ]);
+    let session = session_with(Some(plan), 2, 1);
+
+    let reqs = ArrivalGen::new(
+        ArrivalProcess::Poisson { rate_hz: 20_000.0 },
+        TokenModel::Fixed(48),
+        0xC4A05,
+    )
+    .take(400);
+    let cfg = ServingConfig {
+        window_us: 400.0,
+        max_batch: 32,
+        slo_us: 2_000.0,
+        shed_after_us: f64::INFINITY, // nothing shed => every request planned
+        solve_cost: SolveCost::Virtual { us: 50.0 },
+        dispatch_cost: DispatchCost::PerToken { fixed_us: 10.0, us_per_token: 0.25 },
+    };
+    let mut server = session.serve(cfg, TopicMix::new(EXPERTS, 1.1, 8, 9));
+    let trace = server.run(&reqs);
+
+    let non_empty: Vec<_> = trace.windows.iter().filter(|w| !w.served.is_empty()).collect();
+    assert!(non_empty.len() >= 8, "need >= 8 served windows, got {}", non_empty.len());
+    for w in &non_empty {
+        // LPP plans are token-exact even on the greedy rung
+        assert_eq!(
+            w.gpu_compute.iter().sum::<u64>(),
+            w.tokens,
+            "window {}: plan lost tokens under chaos",
+            w.index
+        );
+    }
+
+    let sla = server.sla();
+    assert_eq!(sla.arrived, 400, "arrived");
+    assert_eq!(sla.served, 400, "infinite shed_after must serve everything");
+    assert_eq!(sla.shed, 0);
+    assert_eq!(sla.e2e.count(), 400, "one e2e sample per served request");
+    assert_eq!(sla.windows, trace.windows.len() as u64);
+
+    // DegradationStats consistent with SlaStats: one rung per non-empty
+    // window, faults on the expected rungs
+    let st = server.session().stats().degradation;
+    assert_eq!(st.total(), non_empty.len() as u64, "one rung per served window: {st:?}");
+    assert_eq!(st.total(), sla.windows - sla.empty_windows, "{st:?}");
+    assert_eq!(st.greedy, 2, "both starvations land on the greedy rung: {st:?}");
+    assert_eq!(st.budget_pivots, 2, "{st:?}");
+    assert_eq!(st.passthrough, 0, "one-shot panic respawns, never passthrough: {st:?}");
+    assert!(st.cold_lp >= 2, "initial cold solve + post-respawn re-solve: {st:?}");
+}
+
 fn used_gpus(p: &Placement) -> usize {
     let mut used = vec![false; p.num_gpus];
     for grp in &p.replicas {

@@ -1,0 +1,224 @@
+//! Golden test: the serving tier vs its Python reference.
+//!
+//! `python/tools/serving_reference.py` transliterates the arrival
+//! processes, the P² estimator, and the batching-window/SLO loop, then
+//! records — per regime — the uniform stream it consumed, the arrival
+//! trace, every window's decisions, and the full `SlaStats`. This suite
+//! replays the recorded uniforms through the *real* rust generator and
+//! server and demands agreement:
+//!
+//! * arrival timestamps are integer microseconds by construction, so they
+//!   must match **exactly** (a libm `ln`/`sin` divergence would flip a
+//!   floor or a thinning accept — the generator guards every draw against
+//!   that);
+//! * every downstream number (window bounds, charged latencies, SLO
+//!   accounting, P² marker heights) is pure IEEE-754 `+,-,*,/` on those
+//!   integers and dyadic config constants, so it is compared at 1e-9 —
+//!   effectively bit-exact.
+//!
+//! The fixture `tests/golden_serving.json` is committed; a missing file is
+//! a hard failure (regenerate with the tool above and commit the result).
+
+use micromoe::balancer::MoeSession;
+use micromoe::ser::Json;
+use micromoe::serving::{
+    ArrivalGen, ArrivalProcess, DispatchCost, ServingConfig, SolveCost, TokenModel,
+};
+use micromoe::stats::LatencyTrack;
+use micromoe::topology::Topology;
+use micromoe::workload::TopicMix;
+
+fn fixture() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_serving.json");
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!("{path} missing ({e}) — regenerate with python/tools/serving_reference.py and commit")
+    });
+    Json::parse(&text).unwrap()
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).unwrap_or_else(|| panic!("missing '{key}'")).as_f64().unwrap()
+}
+
+/// `null` in the fixture encodes NaN (empty-track statistics).
+fn num_or_nan(j: &Json, key: &str) -> f64 {
+    match j.get(key).unwrap_or_else(|| panic!("missing '{key}'")) {
+        Json::Null => f64::NAN,
+        v => v.as_f64().unwrap(),
+    }
+}
+
+fn as_f64s(j: &Json) -> Vec<f64> {
+    j.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect()
+}
+
+fn as_u64s(j: &Json) -> Vec<u64> {
+    j.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as u64).collect()
+}
+
+/// Same-order IEEE arithmetic on identical inputs: 1e-9 relative is
+/// "bit-exact with headroom".
+fn close(a: f64, b: f64, what: &str) {
+    if a.is_nan() && b.is_nan() {
+        return;
+    }
+    assert!((a - b).abs() <= 1e-9 * b.abs().max(1.0), "{what}: rust {a} vs reference {b}");
+}
+
+fn process_of(j: &Json) -> ArrivalProcess {
+    match j.get("kind").unwrap().as_str().unwrap() {
+        "poisson" => ArrivalProcess::Poisson { rate_hz: num(j, "rate_hz") },
+        "bursty" => ArrivalProcess::Bursty {
+            calm_hz: num(j, "calm_hz"),
+            burst_hz: num(j, "burst_hz"),
+            mean_calm_us: num(j, "mean_calm_us"),
+            mean_burst_us: num(j, "mean_burst_us"),
+        },
+        "diurnal" => ArrivalProcess::Diurnal {
+            base_hz: num(j, "base_hz"),
+            amplitude: num(j, "amplitude"),
+            period_us: num(j, "period_us"),
+        },
+        other => panic!("unknown process kind '{other}'"),
+    }
+}
+
+fn tokens_of(j: &Json) -> TokenModel {
+    match j.get("kind").unwrap().as_str().unwrap() {
+        "fixed" => TokenModel::Fixed(num(j, "value") as u64),
+        "ramp" => TokenModel::Ramp {
+            base: num(j, "base") as u64,
+            step: num(j, "step") as u64,
+            every: num(j, "every") as u64,
+        },
+        other => panic!("unknown token model '{other}'"),
+    }
+}
+
+fn config_of(j: &Json) -> ServingConfig {
+    let shed_after_us = match j.get("shed_after_us").unwrap() {
+        Json::Null => f64::INFINITY,
+        v => v.as_f64().unwrap(),
+    };
+    ServingConfig {
+        window_us: num(j, "window_us"),
+        max_batch: num(j, "max_batch") as usize,
+        slo_us: num(j, "slo_us"),
+        shed_after_us,
+        solve_cost: SolveCost::Virtual { us: num(j, "virtual_solve_us") },
+        dispatch_cost: DispatchCost::PerToken {
+            fixed_us: num(j, "dispatch_fixed_us"),
+            us_per_token: num(j, "dispatch_us_per_token"),
+        },
+    }
+}
+
+fn check_track(t: &LatencyTrack, j: &Json, what: &str) {
+    assert_eq!(t.count(), num(j, "count") as usize, "{what}: sample count");
+    close(t.mean(), num_or_nan(j, "mean_us"), &format!("{what}: mean"));
+    close(t.max(), num(j, "max_us"), &format!("{what}: max"));
+    close(t.exact(0.50), num_or_nan(j, "p50_us"), &format!("{what}: p50"));
+    close(t.exact(0.95), num_or_nan(j, "p95_us"), &format!("{what}: p95"));
+    close(t.exact(0.99), num_or_nan(j, "p99_us"), &format!("{what}: p99"));
+    close(t.p2_p50(), num_or_nan(j, "p2_p50_us"), &format!("{what}: P2 p50"));
+    close(t.p2_p95(), num_or_nan(j, "p2_p95_us"), &format!("{what}: P2 p95"));
+    close(t.p2_p99(), num_or_nan(j, "p2_p99_us"), &format!("{what}: P2 p99"));
+}
+
+#[test]
+fn replays_every_golden_regime() {
+    let fx = fixture();
+    let cases = fx.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 6, "fixture must cover at least 6 regimes, has {}", cases.len());
+    let mut names = Vec::new();
+    for case in cases {
+        let name = case.get("name").unwrap().as_str().unwrap().to_string();
+        let n = num(case, "requests") as usize;
+        let uniforms = as_f64s(case.get("uniforms").unwrap());
+        let process = process_of(case.get("process").unwrap());
+        let tokens = tokens_of(case.get("tokens").unwrap());
+
+        // 1. regenerate arrivals from the recorded uniforms — this runs the
+        //    rust process logic (phase jumps, thinning, quantization), not a
+        //    byte copy of the reference's output
+        let mut gen = ArrivalGen::with_uniforms(process, tokens, uniforms.clone());
+        let reqs = gen.take(n);
+        assert_eq!(
+            gen.uniforms_consumed() as usize,
+            uniforms.len(),
+            "{name}: rust consumed a different number of uniform draws"
+        );
+        let exp_arrival = as_f64s(case.get("arrival_us").unwrap());
+        let exp_tokens = as_u64s(case.get("arrival_tokens").unwrap());
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "{name}: id order");
+            assert!(
+                r.arrival_us == exp_arrival[i],
+                "{name}: arrival {i}: rust {} vs reference {}",
+                r.arrival_us,
+                exp_arrival[i]
+            );
+            assert_eq!(r.tokens, exp_tokens[i], "{name}: tokens {i}");
+        }
+
+        // 2. serve the trace through the real server + a real policy; every
+        //    fixture-pinned field is policy-independent
+        let session = MoeSession::builder()
+            .topology(Topology::new(8, 4, 2, 8))
+            .experts(16)
+            .policy_name("vanilla-ep")
+            .build()
+            .unwrap();
+        let cfg = config_of(case.get("config").unwrap());
+        let mut server = session.serve(cfg, TopicMix::new(16, 1.1, 4, 5));
+        let trace = server.run(&reqs);
+
+        let exp_windows = case.get("windows").unwrap().as_arr().unwrap();
+        assert_eq!(trace.windows.len(), exp_windows.len(), "{name}: window count");
+        for (w, ej) in trace.windows.iter().zip(exp_windows) {
+            let what = format!("{name}: window {}", w.index);
+            assert_eq!(w.index, num(ej, "index") as u64, "{what}: index");
+            close(w.open_us, num(ej, "open_us"), &format!("{what}: open"));
+            close(w.close_us, num(ej, "close_us"), &format!("{what}: close"));
+            assert_eq!(w.served, as_u64s(ej.get("served").unwrap()), "{what}: served ids");
+            assert_eq!(w.shed, as_u64s(ej.get("shed").unwrap()), "{what}: shed ids");
+            assert_eq!(w.tokens, num(ej, "tokens") as u64, "{what}: tokens");
+            close(w.solve_us, num(ej, "solve_us"), &format!("{what}: solve"));
+            close(w.dispatch_us, num(ej, "dispatch_us"), &format!("{what}: dispatch"));
+            // policy-side sanity the reference can't model: the emitted plan
+            // covers the window's tokens (vanilla EP may pad, never lose)
+            assert!(
+                w.gpu_compute.iter().sum::<u64>() >= w.tokens,
+                "{what}: plan lost tokens"
+            );
+        }
+
+        let sla = server.sla();
+        let ej = case.get("sla").unwrap();
+        assert_eq!(sla.arrived, num(ej, "arrived") as u64, "{name}: arrived");
+        assert_eq!(sla.served, num(ej, "served") as u64, "{name}: served");
+        assert_eq!(sla.shed, num(ej, "shed") as u64, "{name}: shed");
+        assert_eq!(
+            sla.deadline_misses,
+            num(ej, "deadline_misses") as u64,
+            "{name}: deadline misses"
+        );
+        assert_eq!(sla.windows, num(ej, "windows") as u64, "{name}: windows");
+        assert_eq!(sla.empty_windows, num(ej, "empty_windows") as u64, "{name}: empty windows");
+        for (track, key) in [
+            (&sla.queue, "queue"),
+            (&sla.solve, "solve"),
+            (&sla.dispatch, "dispatch"),
+            (&sla.e2e, "e2e"),
+        ] {
+            check_track(track, ej.get(key).unwrap(), &format!("{name}: {key}"));
+        }
+        names.push(name);
+    }
+    // the six regimes the issue demands, by name
+    for required in
+        ["steady_poisson", "burst", "diurnal_ramp", "overload_shed", "drift", "empty_window"]
+    {
+        assert!(names.iter().any(|n| n == required), "fixture missing regime '{required}'");
+    }
+}

@@ -9,7 +9,9 @@
 //! * the engine-backed policy vs a directly constructed `ScheduleEngine`
 //!   at 1 / 2 / 8 workers (and vs the sequential per-layer loop),
 //! * the speculative policy deterministic across worker counts through
-//!   the facade.
+//!   the facade,
+//! * the `least-loaded-inference` serving policy vs the promoted
+//!   `inference_router` max-flow routing logic it was lifted from.
 
 use micromoe::adaptive::AdaptiveConfig;
 use micromoe::balancer::{Balancer, MoeLayerPlan, MoeSession};
@@ -192,6 +194,40 @@ fn micromoe_pipeline_matches_direct_engine_across_worker_counts() {
                 assert_eq!(plan.routes, seq.routes, "workers {workers} layer {l} (sequential)");
             }
         }
+    }
+}
+
+/// The serving policy through the registry vs the promoted
+/// `inference_router` logic (`LeastLoadedInference::plan_one`: max-flow +
+/// locality-first route lowering), bit-identical batch by batch — plus the
+/// optimality theorem the seed example asserted: the flow max-load is
+/// exact, and no feasible integral plan (e.g. the warm LP's) beats it.
+#[test]
+fn least_loaded_inference_matches_seed_router_logic() {
+    use micromoe::balancer::LeastLoadedInference;
+    use micromoe::scheduler::flow::flow_schedule;
+
+    let trace = golden_trace(16, 8, 1500, 1.1, 24);
+    let p = symmetric_placement(&topo(), 16);
+    let mut via_registry = session("least-loaded-inference", 0, None);
+    let mut warm_lp = session("micromoe", 0, None);
+    for (i, lm) in trace.iter().enumerate() {
+        let got = via_registry.step(std::slice::from_ref(lm));
+        let want = LeastLoadedInference::plan_one(&p, lm, true); // builder default overlap
+        assert_plan_eq(&got.layers[0], &want, &format!("batch {i}"));
+
+        let flow_max = *want.gpu_compute.iter().max().unwrap();
+        assert_eq!(
+            flow_max,
+            flow_schedule(&p, lm).max_load,
+            "batch {i}: lowering must preserve the flow bottleneck"
+        );
+        let warm = warm_lp.step(std::slice::from_ref(lm));
+        let warm_max = *warm.layers[0].gpu_compute.iter().max().unwrap();
+        assert!(
+            flow_max <= warm_max,
+            "batch {i}: flow optimum {flow_max} beaten by warm LP {warm_max}"
+        );
     }
 }
 
