@@ -239,14 +239,17 @@ class LatencyTrack:
     def __init__(self):
         self.samples = []
         self.sum = 0.0
-        self.max = 0.0
+        # NaN sentinel like the rust track: an empty track has no maximum
+        self.max = math.nan
         self.p2_50 = P2Quantile(0.50)
         self.p2_95 = P2Quantile(0.95)
         self.p2_99 = P2Quantile(0.99)
 
     def record(self, x):
         self.sum += x
-        self.max = max(self.max, x)
+        # mirror rust f64::max (maxNum): NaN.max(x) == x — python's
+        # builtin max() would instead propagate the NaN sentinel forever
+        self.max = x if math.isnan(self.max) else max(self.max, x)
         self.p2_50.observe(x)
         self.p2_95.observe(x)
         self.p2_99.observe(x)
@@ -264,7 +267,7 @@ class LatencyTrack:
         return {
             "count": len(self.samples),
             "mean_us": num(self.mean()),
-            "max_us": self.max,
+            "max_us": num(self.max),
             "p50_us": num(self.exact(0.50)),
             "p95_us": num(self.exact(0.95)),
             "p99_us": num(self.exact(0.99)),
@@ -351,17 +354,22 @@ def run_server(reqs, cfg):
             i += 1
         if (len(queue) - head) >= cfg["max_batch"]:
             close_us = max(open_us, reqs[queue[head + cfg["max_batch"] - 1]]["arrival_us"])
-        batch = []
+        # shed the ENTIRE stale prefix at close (queue is in arrival
+        # order, so stale requests sit at the front), then take the batch
+        # FIFO from the fresh remainder — op-for-op with MoeServer::run
         shed = []
-        while len(batch) < cfg["max_batch"] and head < len(queue):
+        while head < len(queue):
             j = queue[head]
-            head += 1
-            wait = close_us - reqs[j]["arrival_us"]
-            if wait > shed_after:
+            if close_us - reqs[j]["arrival_us"] > shed_after:
+                head += 1
                 shed.append(reqs[j]["id"])
                 sla.record_shed()
             else:
-                batch.append(j)
+                break
+        batch = []
+        while len(batch) < cfg["max_batch"] and head < len(queue):
+            batch.append(queue[head])
+            head += 1
         sla.windows += 1
         if not batch:
             sla.empty_windows += 1

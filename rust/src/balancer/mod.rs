@@ -186,6 +186,14 @@ pub(crate) fn fold_schedule(stats: &mut StepStats, s: &ScheduleStats) {
         stats.warm_layers += 1;
     }
     stats.degradation.record(s.rung, s.budget_exhausted, s.fallback_excess);
+    if let Some(d) = s.decompose {
+        stats.decompose.solves += 1;
+        stats.decompose.outer_iters += d.outer_iters as u64;
+        stats.decompose.subproblem_pivots += d.subproblem_pivots;
+        stats.decompose.master_gap_sum += d.master_gap;
+        stats.decompose.master_gap_max = stats.decompose.master_gap_max.max(d.master_gap);
+        stats.decompose.blocks_degraded += d.blocks_degraded as u64;
+    }
 }
 
 /// Lower a [`Schedule`] into the plan the cluster model consumes.

@@ -267,6 +267,12 @@ pub fn scheduler_options_to_json(o: &SchedulerOptions) -> Json {
             pairs.push(("alpha1", Json::Num(alpha1)));
             pairs.push(("alpha2", Json::Num(alpha2)));
         }
+        ScheduleMode::Decomposed { nodes_per_block, max_outer_iters, tol } => {
+            pairs.push(("mode", Json::Str("decomposed".into())));
+            pairs.push(("nodes_per_block", Json::Num(nodes_per_block as f64)));
+            pairs.push(("max_outer_iters", Json::Num(max_outer_iters as f64)));
+            pairs.push(("tol", Json::Num(tol)));
+        }
     }
     pairs.push(("warm_start", Json::Bool(o.warm_start)));
     pairs.push(("locality_aware", Json::Bool(o.locality_aware)));
@@ -383,6 +389,7 @@ pub fn scheduler_options_from_json(j: &Json) -> Result<SchedulerOptions, String>
     match mode_name {
         "comm-aware" => allowed.push("alpha"),
         "topo-aware" => allowed.extend(["alpha1", "alpha2"]),
+        "decomposed" => allowed.extend(["nodes_per_block", "max_outer_iters", "tol"]),
         _ => {}
     }
     if solver_name == "revised" {
@@ -408,6 +415,11 @@ pub fn scheduler_options_from_json(j: &Json) -> Result<SchedulerOptions, String>
         "topo-aware" => {
             ScheduleMode::TopoAware { alpha1: req_f64(m, "alpha1")?, alpha2: req_f64(m, "alpha2")? }
         }
+        "decomposed" => ScheduleMode::Decomposed {
+            nodes_per_block: get_usize(m, "nodes_per_block", 1)?,
+            max_outer_iters: get_usize(m, "max_outer_iters", 4)?,
+            tol: get_f64(m, "tol", 1e-2)?,
+        },
         other => return Err(format!("options: unknown mode '{other}'")),
     };
     let solver = match solver_name {
@@ -613,6 +625,14 @@ mod tests {
                 locality_aware: false,
                 ..Default::default()
             },
+            SchedulerOptions {
+                mode: ScheduleMode::Decomposed {
+                    nodes_per_block: 2,
+                    max_outer_iters: 6,
+                    tol: 1e-3,
+                },
+                ..Default::default()
+            },
             SchedulerOptions { solver: SolverKind::DenseTableau, ..Default::default() },
             SchedulerOptions {
                 solver: SolverKind::Revised {
@@ -659,6 +679,9 @@ mod tests {
             r#"{"bogus": 1}"#,
             // alpha only exists in comm-aware mode
             r#"{"mode": "compute", "alpha": 0.5}"#,
+            // block sizing only exists in decomposed mode
+            r#"{"mode": "compute", "nodes_per_block": 2}"#,
+            r#"{"mode": "topo-aware", "alpha1": 0.1, "alpha2": 1.0, "tol": 0.01}"#,
             // pricing only exists on the revised solver
             r#"{"solver": "dense-tableau", "pricing": "devex"}"#,
             // workers only exist on the engine modes

@@ -1,0 +1,663 @@
+//! Two-level Dantzig–Wolfe-style decomposition of the scheduling LP
+//! ([`super::ScheduleMode::Decomposed`]) — hierarchical scheduling past
+//! ~10³ GPUs.
+//!
+//! The monolithic LPP solve is `O(G)` rows × `O(nx)` columns; past a few
+//! hundred GPUs even a warm solve blows the ~1 ms per-micro-batch budget.
+//! But the constraint matrix is *block-angular*: per-GPU load rows only
+//! couple replicas on that GPU, and only the per-expert conservation rows
+//! span blocks. This module exploits that exactly the way Dantzig–Wolfe
+//! decomposition does — a small coordination master over block aggregates,
+//! plus one independent subproblem per block:
+//!
+//! * **Blocks** are `nodes_per_block` consecutive topology nodes; the block
+//!   of GPU `g` is `topo.node_of(g) / nodes_per_block`. Blocks partition
+//!   the GPUs, so the global max load is the max over block maxima.
+//! * **Master**: a deterministic weighted water-fill splits each expert's
+//!   load over the blocks hosting its replicas, proportional to effective
+//!   block capacities `κ_b` (initialized to the block's used-GPU count).
+//!   Experts are placed in descending-load order, each leveling its
+//!   candidate blocks' normalized fill `assigned_b / κ_b` — the same LPT
+//!   water-fill the greedy fallback uses, lifted to block granularity.
+//! * **Subproblem** per block: `min t_b` s.t. per-GPU `Σx − t_b ≤ 0` and
+//!   per block-expert `Σx = y_{e,b}`. The matrix is fixed at construction;
+//!   each round only rewrites equality rhs — exactly the rhs-update shape
+//!   [`WarmSolver`] warm-starts. Subproblems solve in parallel with scoped
+//!   threads (each block owns its solver outright, like
+//!   [`super::schedule_layers_parallel`]); per-layer decomposed schedulers
+//!   additionally ride the [`crate::engine`] worker pool across layers.
+//! * **Feedback / iteration**: after a round, `κ_b ← assigned_b / t_b`
+//!   (capped at the block's GPU count) — blocks that balanced poorly
+//!   (interior structure forced a high `t_b`) attract less load next
+//!   round. The loop stops when the achieved max is within `tol` of the
+//!   global fractional lower bound ([`fallback::lp_lower_bound`]), when it
+//!   stalls, or after `max_outer_iters` rounds; the best iterate is kept.
+//!
+//! **Determinism** (§5.3 requirement): the master is pure, ordered IEEE
+//! arithmetic; subproblem results depend only on each block's own solver
+//! state and rhs, never on thread scheduling; the reduction over blocks is
+//! index-ordered. Schedules are therefore bit-identical across devices and
+//! worker counts — `distributed.rs` pins this.
+//!
+//! **Degradation** is block-scoped: a subproblem that exhausts its
+//! [`crate::lp::SolveBudget`] (or stalls numerically) degrades to a
+//! water-fill *within that block only*; the layer's rung drops to
+//! [`DegradationRung::Greedy`] only when every block degraded.
+
+use super::fallback;
+use super::{LoadMatrix, SchedulerOptions};
+use crate::lp::{
+    BudgetReason, LpProblem, Relation, SimplexError, SolveBudget, SolveStats, WarmSolver,
+};
+use crate::placement::Placement;
+use crate::stats::DegradationRung;
+use crate::topology::Topology;
+
+/// Per-solve meters for the decomposed path, carried on
+/// [`super::ScheduleStats::decompose`] and rolled up into
+/// [`crate::stats::DecomposeStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DecomposeMeters {
+    /// Master/subproblem coordination rounds actually run.
+    pub outer_iters: u32,
+    /// Simplex pivots summed over every block subproblem solve (all
+    /// rounds).
+    pub subproblem_pivots: u64,
+    /// Final relative gap of the kept iterate to the global fractional
+    /// lower bound: `(max_b t_b − LB) / LB` (0 when the bound is 0).
+    pub master_gap: f64,
+    /// Subproblem blocks in the partition (those hosting ≥1 replica).
+    pub blocks: u32,
+    /// Blocks of the kept iterate whose subproblem degraded to the
+    /// block-local water-fill.
+    pub blocks_degraded: u32,
+}
+
+/// One block's subproblem: the GPUs of `nodes_per_block` consecutive
+/// nodes, the expert replicas living there, and a warm-started LP over
+/// them.
+struct BlockSub {
+    /// Materialized (replica-hosting) GPUs in this block.
+    num_gpus: usize,
+    /// Block-expert descriptors, ascending global expert id.
+    experts: Vec<BlockExpert>,
+    /// Equality-row index per block-expert (rhs = this round's `y_{e,b}`).
+    eq_row: Vec<usize>,
+    /// LP variable per (block-expert, replica).
+    var_of: Vec<Vec<usize>>,
+    warm: WarmSolver,
+    solved_once: bool,
+}
+
+/// An expert's footprint inside one block.
+struct BlockExpert {
+    /// Global expert id.
+    e: usize,
+    /// Replica indices into `placement.replicas[e]` hosted in this block.
+    reps: Vec<usize>,
+    /// Local GPU slot of each replica (parallel to `reps`).
+    gpu_local: Vec<usize>,
+}
+
+/// Result of one block subproblem solve.
+struct BlockOutcome {
+    /// Fractional loads per (block-expert, replica).
+    frac: Vec<Vec<f64>>,
+    /// Max implied GPU load inside the block.
+    t: f64,
+    /// LP work counters (zero when the block degraded).
+    lp: SolveStats,
+    warm: bool,
+    degraded: bool,
+    budget: Option<BudgetReason>,
+}
+
+/// The iterate retained as the solve's answer (lowest `max_b t_b`).
+struct Kept {
+    t: f64,
+    frac: Vec<Vec<Vec<f64>>>,
+    degraded: Vec<bool>,
+}
+
+/// What [`DecomposedState::solve`] hands back to the scheduler.
+pub(crate) struct DecomposedSolve {
+    /// Global fractional replica loads, aligned with `placement.replicas`.
+    pub(crate) frac: Vec<Vec<f64>>,
+    pub(crate) meters: DecomposeMeters,
+    pub(crate) rung: DegradationRung,
+    pub(crate) budget_exhausted: Option<BudgetReason>,
+    /// Fractional objective of the kept iterate (global max GPU load).
+    pub(crate) objective: f64,
+    /// Global fractional lower bound the gap was measured against.
+    pub(crate) lower_bound: f64,
+    /// LP work totals across all subproblem solves.
+    pub(crate) lp: SolveStats,
+}
+
+/// The two-level solver state owned by a
+/// [`super::MicroEpScheduler`] in decomposed mode.
+pub(crate) struct DecomposedState {
+    blocks: Vec<BlockSub>,
+    /// Per expert: `(block index, block-expert index)` for every block
+    /// hosting one of its replicas.
+    expert_sites: Vec<Vec<(usize, usize)>>,
+    max_outer_iters: usize,
+    tol: f64,
+}
+
+impl DecomposedState {
+    /// Partition the placement into node blocks and lower one subproblem
+    /// LP per (non-empty) block. Like the monolithic builder, this fixes
+    /// every constraint matrix once; solves only rewrite equality rhs.
+    pub(crate) fn new(
+        placement: &Placement,
+        topo: &Topology,
+        opts: &SchedulerOptions,
+        nodes_per_block: usize,
+        max_outer_iters: usize,
+        tol: f64,
+    ) -> Self {
+        assert!(nodes_per_block >= 1, "nodes_per_block must be positive");
+        assert!(max_outer_iters >= 1, "max_outer_iters must be positive");
+        assert!(tol.is_finite() && tol >= 0.0, "tol must be finite and non-negative");
+        let gpus_per_block = topo.gpus_per_node * nodes_per_block;
+        let raw_blocks = placement.num_gpus.div_ceil(gpus_per_block);
+        // (expert, replica, gpu) per raw block; ascending (e, r) by
+        // construction of the scan
+        let mut members: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); raw_blocks];
+        for (e, reps) in placement.replicas.iter().enumerate() {
+            for (r, &g) in reps.iter().enumerate() {
+                members[topo.node_of(g) / nodes_per_block].push((e, r, g));
+            }
+        }
+        let mut blocks: Vec<BlockSub> = Vec::new();
+        let mut expert_sites: Vec<Vec<(usize, usize)>> =
+            vec![Vec::new(); placement.num_experts];
+        for mem in members.into_iter().filter(|m| !m.is_empty()) {
+            let bi = blocks.len();
+            let mut gpus: Vec<usize> = mem.iter().map(|&(_, _, g)| g).collect();
+            gpus.sort_unstable();
+            gpus.dedup();
+            let mut experts: Vec<BlockExpert> = Vec::new();
+            for &(e, r, g) in &mem {
+                if experts.last().map(|x| x.e) != Some(e) {
+                    expert_sites[e].push((bi, experts.len()));
+                    experts.push(BlockExpert { e, reps: Vec::new(), gpu_local: Vec::new() });
+                }
+                let be = experts.last_mut().unwrap();
+                be.reps.push(r);
+                be.gpu_local.push(gpus.binary_search(&g).unwrap());
+            }
+            // vars: one x per block replica, then t; rows: per local GPU
+            // `Σx − t ≤ 0`, then per block-expert `Σx = y` (rhs per round)
+            let nx: usize = experts.iter().map(|x| x.reps.len()).sum();
+            let t = nx;
+            let mut lp = LpProblem::new(nx + 1);
+            lp.set_objective(t, 1.0);
+            let mut var_of: Vec<Vec<usize>> = Vec::with_capacity(experts.len());
+            let mut next = 0usize;
+            for x in &experts {
+                var_of.push((0..x.reps.len()).map(|k| next + k).collect());
+                next += x.reps.len();
+            }
+            let mut on_gpu: Vec<Vec<usize>> = vec![Vec::new(); gpus.len()];
+            for (x, vars) in experts.iter().zip(&var_of) {
+                for (k, &lg) in x.gpu_local.iter().enumerate() {
+                    on_gpu[lg].push(vars[k]);
+                }
+            }
+            for vars in &on_gpu {
+                let mut terms: Vec<(usize, f64)> = vars.iter().map(|&v| (v, 1.0)).collect();
+                terms.push((t, -1.0));
+                lp.add(terms, Relation::Le, 0.0);
+            }
+            let mut eq_row = Vec::with_capacity(experts.len());
+            for vars in &var_of {
+                let terms = vars.iter().map(|&v| (v, 1.0)).collect();
+                eq_row.push(lp.add(terms, Relation::Eq, 0.0));
+            }
+            let mut warm = WarmSolver::with_kind(lp, opts.solver);
+            warm.set_budget(opts.budget);
+            blocks.push(BlockSub {
+                num_gpus: gpus.len(),
+                experts,
+                eq_row,
+                var_of,
+                warm,
+                solved_once: false,
+            });
+        }
+        DecomposedState { blocks, expert_sites, max_outer_iters, tol }
+    }
+
+    /// Re-budget every block solver (the chaos harness's starvation fault
+    /// goes through here so exhaustion degrades blocks, not the layer).
+    pub(crate) fn set_budget(&mut self, budget: SolveBudget) {
+        for b in &mut self.blocks {
+            b.warm.set_budget(budget);
+        }
+    }
+
+    /// Run the two-level solve for one micro-batch. `use_warm` gates the
+    /// *first* round's warm start (later rounds always repair from the
+    /// previous round's basis — same state on every device, so still
+    /// deterministic).
+    pub(crate) fn solve(
+        &mut self,
+        placement: &Placement,
+        loads: &LoadMatrix,
+        use_warm: bool,
+    ) -> DecomposedSolve {
+        let expert_loads = loads.expert_loads();
+        let lower_bound = fallback::lp_lower_bound(placement, loads);
+        let nb = self.blocks.len();
+        let mut kappa: Vec<f64> = self.blocks.iter().map(|b| b.num_gpus as f64).collect();
+        let mut meters = DecomposeMeters { blocks: nb as u32, ..Default::default() };
+        let mut lp_total = SolveStats::default();
+        let mut budget_exhausted: Option<BudgetReason> = None;
+        let mut first_round_all_warm = false;
+        let mut best: Option<Kept> = None;
+        let mut prev_t = f64::INFINITY;
+
+        for outer in 0..self.max_outer_iters {
+            let (y, assigned) = self.allocate(&expert_loads, &kappa);
+            let warm_round = if outer == 0 { use_warm } else { true };
+            let outcomes = solve_blocks(&mut self.blocks, &y, warm_round);
+            meters.outer_iters += 1;
+            let mut t_max = 0.0f64;
+            let mut all_warm = true;
+            for o in &outcomes {
+                t_max = t_max.max(o.t);
+                lp_total.pivots += o.lp.pivots;
+                lp_total.dual_pivots += o.lp.dual_pivots;
+                lp_total.bound_flips += o.lp.bound_flips;
+                lp_total.refactorizations += o.lp.refactorizations;
+                meters.subproblem_pivots += o.lp.pivots as u64;
+                if budget_exhausted.is_none() {
+                    budget_exhausted = o.budget;
+                }
+                if o.degraded || !o.warm {
+                    all_warm = false;
+                }
+            }
+            if outer == 0 {
+                first_round_all_warm = all_warm;
+            }
+            let better = match &best {
+                Some(k) => t_max < k.t,
+                None => true,
+            };
+            if better {
+                best = Some(Kept {
+                    t: t_max,
+                    frac: outcomes.iter().map(|o| o.frac.clone()).collect(),
+                    degraded: outcomes.iter().map(|o| o.degraded).collect(),
+                });
+            }
+            let gap = if lower_bound > 0.0 { (t_max - lower_bound) / lower_bound } else { 0.0 };
+            if gap <= self.tol {
+                break;
+            }
+            if (prev_t - t_max).abs() <= self.tol * t_max.max(1.0) {
+                break; // stalled: more rounds would retrace this iterate
+            }
+            prev_t = t_max;
+            // capacity feedback: blocks that balanced poorly shrink
+            for (i, o) in outcomes.iter().enumerate() {
+                let cap = self.blocks[i].num_gpus as f64;
+                kappa[i] = if o.t > 1e-12 {
+                    (assigned[i] / o.t).clamp(1e-9, cap)
+                } else {
+                    cap
+                };
+            }
+        }
+
+        let kept = best.expect("max_outer_iters >= 1 ran at least one round");
+        let degraded = kept.degraded.iter().filter(|&&d| d).count();
+        meters.blocks_degraded = degraded as u32;
+        meters.master_gap = if lower_bound > 0.0 {
+            ((kept.t - lower_bound) / lower_bound).max(0.0)
+        } else {
+            0.0
+        };
+        let rung = if nb > 0 && degraded == nb {
+            DegradationRung::Greedy
+        } else if first_round_all_warm {
+            DegradationRung::WarmLp
+        } else {
+            DegradationRung::ColdLp
+        };
+        let mut frac: Vec<Vec<f64>> =
+            placement.replicas.iter().map(|g| vec![0.0; g.len()]).collect();
+        for (b, bf) in self.blocks.iter().zip(&kept.frac) {
+            for (be, x) in b.experts.iter().zip(bf) {
+                for (k, &r) in be.reps.iter().enumerate() {
+                    frac[be.e][r] = x[k];
+                }
+            }
+        }
+        DecomposedSolve {
+            frac,
+            meters,
+            rung,
+            budget_exhausted,
+            objective: kept.t,
+            lower_bound,
+            lp: lp_total,
+        }
+    }
+
+    /// Master step: deterministically water-fill each expert's load over
+    /// the blocks hosting its replicas, weighted by capacities `kappa`.
+    /// Returns per-block `y` (aligned with each block's experts) and the
+    /// per-block assigned totals.
+    fn allocate(&self, expert_loads: &[u64], kappa: &[f64]) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut y: Vec<Vec<f64>> =
+            self.blocks.iter().map(|b| vec![0.0; b.experts.len()]).collect();
+        let mut assigned = vec![0.0; self.blocks.len()];
+        // descending load, ascending index — same order as the greedy
+        let mut order: Vec<usize> = (0..expert_loads.len()).collect();
+        order.sort_by_key(|&e| (std::cmp::Reverse(expert_loads[e]), e));
+        for e in order {
+            let load = expert_loads[e] as f64;
+            if load == 0.0 || self.expert_sites[e].is_empty() {
+                continue;
+            }
+            let sites = &self.expert_sites[e];
+            if sites.len() == 1 {
+                let (bi, be) = sites[0];
+                y[bi][be] = load;
+                assigned[bi] += load;
+                continue;
+            }
+            // candidate blocks by normalized fill level, ties by index
+            let mut lv: Vec<(f64, usize, usize)> = sites
+                .iter()
+                .map(|&(bi, be)| (assigned[bi] / kappa[bi], bi, be))
+                .collect();
+            lv.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            // largest prefix the load can lift to (at least) the next
+            // block's level, in weighted level space
+            let mut fill = lv.len();
+            let mut wsum = 0.0;
+            let mut asum = 0.0;
+            for (j, &(level, bi, _)) in lv.iter().enumerate() {
+                if j > 0 && level * wsum - asum >= load {
+                    fill = j;
+                    break;
+                }
+                wsum += kappa[bi];
+                asum += assigned[bi];
+            }
+            let lambda = (load + asum) / wsum;
+            let mut acc = 0.0;
+            for &(_, bi, be) in &lv[..fill] {
+                let give = (kappa[bi] * lambda - assigned[bi]).max(0.0);
+                y[bi][be] = give;
+                assigned[bi] += give;
+                acc += give;
+            }
+            // float residue → lowest block, clamped at zero with the
+            // running totals kept in sync (same rule as the fallback)
+            let residue = load - acc;
+            if residue != 0.0 {
+                let (_, bi, be) = lv[0];
+                let old = y[bi][be];
+                let new = (old + residue).max(0.0);
+                y[bi][be] = new;
+                assigned[bi] += new - old;
+            }
+        }
+        (y, assigned)
+    }
+}
+
+impl BlockSub {
+    /// Solve this block's subproblem for the round's `y` (one entry per
+    /// block-expert). Never fails: LP exhaustion degrades to the
+    /// block-local water-fill.
+    fn solve(&mut self, y: &[f64], warm_allowed: bool) -> BlockOutcome {
+        let updates: Vec<(usize, f64)> =
+            self.eq_row.iter().copied().zip(y.iter().copied()).collect();
+        let use_warm = warm_allowed && self.solved_once;
+        let result = self.warm.solve_with(&updates, use_warm);
+        // a budget-exhausted warm attempt that fell through to cold still
+        // counts as a budget event (mirrors the monolithic ladder)
+        let mut budget = match (&result, &self.warm.last_warm_failure) {
+            (Ok(_), Some(SimplexError::BudgetExhausted(r))) => Some(*r),
+            _ => None,
+        };
+        match result {
+            Ok(sol) => {
+                self.solved_once = true;
+                let frac: Vec<Vec<f64>> = self
+                    .var_of
+                    .iter()
+                    .map(|vars| vars.iter().map(|&v| sol.x[v]).collect())
+                    .collect();
+                let t = self.implied_max(&frac);
+                BlockOutcome {
+                    frac,
+                    t,
+                    lp: self.warm.last_stats,
+                    warm: self.warm.last_was_warm,
+                    degraded: false,
+                    budget,
+                }
+            }
+            Err(e) => {
+                if let SimplexError::BudgetExhausted(r) = &e {
+                    budget = Some(*r);
+                }
+                let frac = self.greedy_fill(y);
+                let t = self.implied_max(&frac);
+                BlockOutcome {
+                    frac,
+                    t,
+                    lp: SolveStats::default(),
+                    warm: false,
+                    degraded: true,
+                    budget,
+                }
+            }
+        }
+    }
+
+    /// Max per-GPU load inside the block implied by a fractional
+    /// assignment (computed from the assignment, not the LP objective, so
+    /// it is also valid for degraded blocks).
+    fn implied_max(&self, frac: &[Vec<f64>]) -> f64 {
+        let mut level = vec![0.0f64; self.num_gpus];
+        for (be, x) in self.experts.iter().zip(frac) {
+            for (k, &lg) in be.gpu_local.iter().enumerate() {
+                level[lg] += x[k];
+            }
+        }
+        level.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    /// Block-local water-fill (the block's degradation rung): the same
+    /// deterministic LPT fill as [`fallback::greedy_fraction`], restricted
+    /// to this block's GPUs and this round's `y`.
+    fn greedy_fill(&self, y: &[f64]) -> Vec<Vec<f64>> {
+        let mut level = vec![0.0f64; self.num_gpus];
+        let mut frac: Vec<Vec<f64>> =
+            self.experts.iter().map(|x| vec![0.0; x.reps.len()]).collect();
+        let mut order: Vec<usize> = (0..self.experts.len()).collect();
+        order.sort_by(|&a, &b| {
+            y[b].partial_cmp(&y[a]).unwrap().then(self.experts[a].e.cmp(&self.experts[b].e))
+        });
+        for bi in order {
+            let load = y[bi];
+            if load <= 0.0 {
+                continue;
+            }
+            let slots = &self.experts[bi].gpu_local;
+            let mut by_load: Vec<usize> = (0..slots.len()).collect();
+            by_load.sort_by(|&a, &b| {
+                level[slots[a]].partial_cmp(&level[slots[b]]).unwrap().then(a.cmp(&b))
+            });
+            let levels: Vec<f64> = by_load.iter().map(|&k| level[slots[k]]).collect();
+            let mut fill = levels.len();
+            let mut prefix_sum = 0.0;
+            for (j, &lvl) in levels.iter().enumerate() {
+                if j > 0 && j as f64 * lvl - prefix_sum >= load {
+                    fill = j;
+                    break;
+                }
+                prefix_sum += lvl;
+            }
+            let prefix: f64 = levels[..fill].iter().sum();
+            let common = (load + prefix) / fill as f64;
+            for (j, &k) in by_load[..fill].iter().enumerate() {
+                let share = (common - levels[j]).max(0.0);
+                frac[bi][k] = share;
+                level[slots[k]] += share;
+            }
+            // any float residue is re-conserved by global integer rounding
+        }
+        frac
+    }
+}
+
+/// Solve every block's subproblem, in parallel when it pays. Each block
+/// owns its warm state outright, so results are bit-identical to the
+/// serial loop regardless of thread count (the same argument as
+/// [`super::schedule_layers_parallel`]).
+fn solve_blocks(blocks: &mut [BlockSub], y: &[Vec<f64>], warm_allowed: bool) -> Vec<BlockOutcome> {
+    let n = blocks.len();
+    let workers = std::thread::available_parallelism().map_or(1, |p| p.get()).min(n);
+    if workers <= 1 {
+        return blocks.iter_mut().zip(y).map(|(b, yb)| b.solve(yb, warm_allowed)).collect();
+    }
+    let mut out: Vec<Option<BlockOutcome>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for ((b_chunk, y_chunk), o_chunk) in
+            blocks.chunks_mut(chunk).zip(y.chunks(chunk)).zip(out.chunks_mut(chunk))
+        {
+            scope.spawn(move || {
+                for ((b, yb), slot) in b_chunk.iter_mut().zip(y_chunk).zip(o_chunk.iter_mut()) {
+                    *slot = Some(b.solve(yb, warm_allowed));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("block solver thread completed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::scheduler::{MicroEpScheduler, ScheduleMode};
+    use crate::stats::DegradationRung;
+
+    /// Each expert gets two adjacent-GPU pairs half a ring apart: replica
+    /// freedom inside a block (the pair) times master freedom across
+    /// blocks (the two pairs land in different blocks).
+    fn paired_placement(gpus: usize, experts: usize) -> Placement {
+        let half = gpus / 2;
+        let reps = (0..experts)
+            .map(|e| {
+                let a = (2 * e) % half;
+                let mut v = vec![a, a + 1, a + half, a + half + 1];
+                v.sort_unstable();
+                v.dedup();
+                v
+            })
+            .collect();
+        Placement::from_replicas(gpus, reps)
+    }
+
+    fn random_lm(seed: u64, e: usize, g: usize, n: u64) -> LoadMatrix {
+        let mut rng = Rng::new(seed);
+        let mut lm = LoadMatrix::zeros(e, g);
+        for _ in 0..n {
+            lm.add(rng.below(e as u64) as usize, rng.below(g as u64) as usize, 1);
+        }
+        lm
+    }
+
+    fn dec_opts(nodes_per_block: usize) -> SchedulerOptions {
+        SchedulerOptions {
+            mode: ScheduleMode::Decomposed { nodes_per_block, max_outer_iters: 6, tol: 1e-3 },
+            ..Default::default()
+        }
+    }
+
+    fn topo16() -> Topology {
+        Topology::new(16, 8, 2, 4) // one 16-GPU MicroEP group, 4 nodes of 4
+    }
+
+    #[test]
+    fn decomposed_matches_exact_within_one_percent() {
+        let p = paired_placement(16, 12);
+        let mut exact = MicroEpScheduler::new(p.clone(), None, SchedulerOptions::default());
+        let mut dec = MicroEpScheduler::new(p.clone(), Some(topo16()), dec_opts(1));
+        for batch in 0..5 {
+            let lm = random_lm(90 + batch, 12, 16, 4000);
+            let a = exact.schedule(&lm);
+            let b = dec.schedule(&lm);
+            for e in 0..12 {
+                assert_eq!(
+                    b.replica_loads[e].iter().sum::<u64>(),
+                    lm.expert_load(e),
+                    "batch {batch} expert {e}: conservation"
+                );
+            }
+            let m = b.stats.decompose.expect("decomposed meters recorded");
+            assert!(m.blocks > 1, "partition must be nontrivial, got {} blocks", m.blocks);
+            assert_eq!(m.blocks_degraded, 0, "batch {batch}");
+            let (ea, eb) = (a.stats.max_gpu_load as f64, b.stats.max_gpu_load as f64);
+            assert!(eb <= ea * 1.01 + 1.0, "batch {batch}: decomposed {eb} vs exact {ea}");
+        }
+    }
+
+    #[test]
+    fn warm_rung_engages_on_the_second_batch() {
+        let p = paired_placement(16, 12);
+        let mut dec = MicroEpScheduler::new(p, Some(topo16()), dec_opts(2));
+        let lm = random_lm(11, 12, 16, 5000);
+        let first = dec.schedule(&lm);
+        assert_eq!(first.stats.rung, DegradationRung::ColdLp);
+        assert!(first.stats.decompose.unwrap().outer_iters >= 1);
+        let second = dec.schedule(&lm);
+        assert_eq!(second.stats.rung, DegradationRung::WarmLp);
+        assert!(second.stats.warm);
+    }
+
+    #[test]
+    fn starved_budget_degrades_blocks_not_the_solve() {
+        let p = paired_placement(16, 12);
+        let mut dec = MicroEpScheduler::new(
+            p,
+            Some(topo16()),
+            SchedulerOptions {
+                budget: SolveBudget::with_max_pivots(0),
+                ..dec_opts(1)
+            },
+        );
+        let lm = random_lm(7, 12, 16, 3000);
+        let sched = dec.schedule(&lm);
+        for e in 0..12 {
+            assert_eq!(sched.replica_loads[e].iter().sum::<u64>(), lm.expert_load(e));
+        }
+        assert_eq!(sched.stats.rung, DegradationRung::Greedy);
+        assert_eq!(sched.stats.budget_exhausted, Some(BudgetReason::Pivots));
+        let m = sched.stats.decompose.expect("meters survive degradation");
+        assert_eq!(m.blocks_degraded, m.blocks, "every block degraded under a zero budget");
+        assert!(sched.stats.fallback_excess >= 0.0);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let p = paired_placement(16, 12);
+        let mut dec = MicroEpScheduler::new(p.clone(), Some(topo16()), dec_opts(1));
+        let sched = dec.schedule(&LoadMatrix::zeros(12, 16));
+        assert_eq!(sched.gpu_loads(&p), vec![0; 16]);
+        assert!(sched.routes.is_empty());
+        assert_eq!(sched.stats.decompose.unwrap().master_gap, 0.0);
+    }
+}

@@ -51,13 +51,20 @@ impl DistributedSchedulers {
     }
 
     /// Run one round: every device schedules the all-gathered loads
-    /// independently; results are cross-checked.
+    /// independently; results are cross-checked. The check covers the
+    /// *full* schedule each GPU would act on — replica loads, token
+    /// routes, and the implied per-GPU compute — not just the replica
+    /// split (two schedules can agree on loads yet route differently).
     pub fn round(&mut self, gathered: &LoadMatrix) -> DistributedRound {
         let mut schedules: Vec<Schedule> =
             self.devices.iter_mut().map(|d| d.schedule(gathered)).collect();
         let first = schedules.remove(0);
+        let placement = &self.devices[0].placement;
+        let first_gpu = first.gpu_loads(placement);
         let consistent = schedules.iter().all(|s| {
-            s.replica_loads == first.replica_loads && s.routes == first.routes
+            s.replica_loads == first.replica_loads
+                && s.routes == first.routes
+                && s.gpu_loads(placement) == first_gpu
         });
         DistributedRound { schedule: first, consistent }
     }
@@ -138,6 +145,29 @@ mod tests {
             for _ in 0..50 {
                 lm.add(rng.below(32) as usize, rng.below(8) as usize, 1);
             }
+        }
+    }
+
+    #[test]
+    fn decomposed_fleets_agree_bit_for_bit() {
+        // §5.3 extended to the two-level path: the water-fill master and
+        // the per-block subproblem solves (which fan out across threads)
+        // must replicate bit-for-bit on every device. Seed rotates via
+        // LP_FUZZ_SEED so CI sweeps fresh load patterns.
+        let seed = crate::prop::fuzz_seed(0x5eed_dec0);
+        let p = cayley_graph_placement(32, 64);
+        let topo = Topology::new(32, 16, 2, 4);
+        let opts = SchedulerOptions {
+            mode: ScheduleMode::Decomposed { nodes_per_block: 2, max_outer_iters: 3, tol: 1e-3 },
+            ..Default::default()
+        };
+        let mut fleet = DistributedSchedulers::new(p, Some(topo), opts, 5);
+        for batch in 0..10 {
+            let lm = random_loads(seed.wrapping_add(batch), 64, 32, 3000);
+            let round = fleet.round(&lm);
+            assert!(round.consistent, "divergence at batch {batch} (seed {seed})");
+            let m = round.schedule.stats.decompose.expect("decomposed path taken");
+            assert!(m.blocks > 1, "partition must be nontrivial");
         }
     }
 

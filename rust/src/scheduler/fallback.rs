@@ -104,15 +104,27 @@ pub fn greedy_fraction(placement: &Placement, loads: &LoadMatrix, base: &[u64]) 
             assigned += share;
         }
         // absorb floating residue on the (now lowest-ish) first replica so
-        // the expert's total is conserved exactly enough for rounding
+        // the expert's total is conserved exactly enough for rounding; when
+        // a negative residue is clamped at zero, the level bookkeeping must
+        // move by the clamped delta, not the raw residue, or later experts
+        // water-fill against a phantom deficit on this GPU
         let residue = load - assigned;
         if residue != 0.0 {
             let r = by_load[0];
-            frac[e][r] = (frac[e][r] + residue).max(0.0);
-            gpu_load[hosts[r]] += residue;
+            absorb_residue(&mut frac[e][r], &mut gpu_load[hosts[r]], residue);
         }
     }
     frac
+}
+
+/// Fold a floating residue into one replica's share, clamping at zero, and
+/// advance the host GPU's water level by exactly the clamped delta so the
+/// level bookkeeping never drifts from the emitted `frac`.
+fn absorb_residue(share: &mut f64, level: &mut f64, residue: f64) {
+    let old = *share;
+    let new = (old + residue).max(0.0);
+    *share = new;
+    *level += new - old;
 }
 
 /// Vanilla-EP passthrough plan: each expert's full load on its first
@@ -210,6 +222,54 @@ mod tests {
                 assert_eq!(rl[e].iter().sum::<u64>(), lm.expert_load(e));
             }
         }
+    }
+
+    #[test]
+    fn greedy_conserves_at_residue_magnifying_magnitudes() {
+        // huge per-cell loads magnify the floating residue the absorb step
+        // handles; conservation must hold to relative precision and the
+        // frac-implied GPU loads must stay finite and non-negative
+        let p = cayley_graph_placement(8, 16);
+        for seed in 0..10 {
+            let mut rng = Rng::new(900 + seed);
+            let mut lm = LoadMatrix::zeros(16, 8);
+            for _ in 0..200 {
+                let e = rng.below(16) as usize;
+                let g = rng.below(8) as usize;
+                lm.add(e, g, rng.below(1 << 45) + 1);
+            }
+            let frac = greedy_fraction(&p, &lm, &[]);
+            for e in 0..16 {
+                let want = lm.expert_load(e) as f64;
+                let sum: f64 = frac[e].iter().sum();
+                assert!(
+                    (sum - want).abs() <= 1e-9 * want.max(1.0),
+                    "seed {seed} expert {e}: {sum} vs {want}"
+                );
+                assert!(frac[e].iter().all(|&x| x >= 0.0 && x.is_finite()));
+            }
+            let gl = gpu_loads_of(&p, &frac);
+            assert!(gl.iter().all(|&x| x >= 0.0 && x.is_finite()), "seed {seed}: {gl:?}");
+        }
+    }
+
+    #[test]
+    fn residue_clamp_keeps_levels_in_sync_with_frac() {
+        // the clamp path: a negative residue larger than the absorbing
+        // share zeroes the share, and the level must move by the clamped
+        // delta (-0.25 here), not the raw residue (-0.75)
+        let mut share = 0.25;
+        let mut level = 10.25;
+        absorb_residue(&mut share, &mut level, -0.75);
+        assert_eq!(share, 0.0);
+        assert!((level - 10.0).abs() < 1e-12, "level {level} must drop by the old share only");
+        // unclamped residues (either sign) pass straight through
+        absorb_residue(&mut share, &mut level, 0.5);
+        assert_eq!(share, 0.5);
+        assert!((level - 10.5).abs() < 1e-12);
+        absorb_residue(&mut share, &mut level, -0.125);
+        assert_eq!(share, 0.375);
+        assert!((level - 10.375).abs() < 1e-12);
     }
 
     #[test]

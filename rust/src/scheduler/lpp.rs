@@ -27,6 +27,7 @@
 
 use std::time::Instant;
 
+use super::decompose;
 use super::fallback;
 use super::rounding::round_replica_loads;
 use super::routing::route_tokens;
@@ -73,6 +74,10 @@ pub struct MicroEpScheduler {
     /// per-batch zero-reset of those rows entirely
     gpu_rows_dirty: bool,
     warm: WarmSolver,
+    /// Two-level solver state when `opts.mode` is
+    /// [`ScheduleMode::Decomposed`]; the monolithic `warm` solver then
+    /// holds only a placeholder problem and is never consulted.
+    decomp: Option<decompose::DecomposedState>,
     solved_once: bool,
     /// Layer id used for fault-plan lookups (engine workers pin one
     /// scheduler per layer; standalone schedulers keep the default 0).
@@ -88,16 +93,35 @@ impl MicroEpScheduler {
     /// matrix for `opts.mode` once; every later [`Self::schedule`] call
     /// only rewrites rhs entries and variable bounds.
     pub fn new(placement: Placement, topo: Option<Topology>, opts: SchedulerOptions) -> Self {
-        if matches!(opts.mode, ScheduleMode::TopoAware { .. }) || opts.topo_aware_routing {
+        if matches!(
+            opts.mode,
+            ScheduleMode::TopoAware { .. } | ScheduleMode::Decomposed { .. }
+        ) || opts.topo_aware_routing
+        {
             assert!(topo.is_some(), "topology-aware scheduling needs a Topology");
         }
         let mut b = Builder::new(&placement, topo.as_ref(), &opts.mode);
         let problem = b.build();
         let mut warm = WarmSolver::with_kind(problem, opts.solver);
         warm.set_budget(opts.budget);
+        let decomp = if let ScheduleMode::Decomposed { nodes_per_block, max_outer_iters, tol } =
+            &opts.mode
+        {
+            Some(decompose::DecomposedState::new(
+                &placement,
+                topo.as_ref().unwrap(),
+                &opts,
+                *nodes_per_block,
+                *max_outer_iters,
+                *tol,
+            ))
+        } else {
+            None
+        };
         MicroEpScheduler {
             placement,
             topo,
+            decomp,
             var_of: b.var_of,
             eq_row: b.eq_row,
             input_cap_vars: b.input_cap_vars,
@@ -201,6 +225,9 @@ impl MicroEpScheduler {
     fn schedule_inner(&mut self, loads: &LoadMatrix, use_warm: bool, commit: bool) -> Schedule {
         assert_eq!(loads.num_experts, self.placement.num_experts);
         assert_eq!(loads.num_gpus, self.placement.num_gpus);
+        if self.decomp.is_some() {
+            return self.schedule_decomposed(loads, use_warm, commit);
+        }
         let t0 = Instant::now();
 
         // ---- rhs + bound updates for this micro-batch ----
@@ -371,6 +398,107 @@ impl MicroEpScheduler {
                 rung,
                 budget_exhausted,
                 fallback_excess: 0.0,
+                decompose: None,
+            },
+        };
+        sched.stats.max_gpu_load = sched.gpu_loads(&self.placement).into_iter().max().unwrap_or(0);
+        if let Some(lb) = lower_bound {
+            sched.stats.fallback_excess = fallback::excess_over_bound(sched.stats.max_gpu_load, lb);
+        }
+        sched.stats.solve_ns = t0.elapsed().as_nanos() as u64;
+        sched
+    }
+
+    /// Decomposed-mode solve path ([`ScheduleMode::Decomposed`]): the
+    /// two-level master/subproblem iteration in [`decompose`] replaces the
+    /// monolithic LP; fault handling, rounding, routing, and stats mirror
+    /// [`Self::schedule_inner`].
+    fn schedule_decomposed(&mut self, loads: &LoadMatrix, use_warm: bool, commit: bool) -> Schedule {
+        let t0 = Instant::now();
+
+        // ---- fault injection (chaos harness; `faults` is None outside it) ----
+        let fault = if commit {
+            let f = self.opts.faults.as_ref().and_then(|f| f.at(self.step, self.layer));
+            self.step += 1;
+            f
+        } else {
+            None
+        };
+        // Corrupted loads and forced infeasibility have no single rhs to
+        // poison here (each block sees its own slice), so they skip the
+        // decomposition outright — the same ladder rung the monolithic
+        // path lands on after its solver rejects the poisoned input.
+        // Budget starvation instead starves every *block* budget: blocks
+        // degrade individually and the layer answer is still assembled.
+        let mut starved = false;
+        let mut poisoned = false;
+        match fault {
+            Some(crate::faults::Fault::BudgetStarvation) => starved = true,
+            Some(
+                crate::faults::Fault::NanLoads
+                | crate::faults::Fault::OverflowLoads
+                | crate::faults::Fault::ForceInfeasible,
+            ) => poisoned = true,
+            _ => {}
+        }
+        let inputs_valid =
+            !poisoned && loads.expert_loads().iter().all(|&l| (l as f64) <= MAX_LP_LOAD);
+
+        let decomp = self.decomp.as_mut().expect("decomposed mode");
+        let (frac, stats_lp, rung, budget_exhausted, lower_bound, meters) = if inputs_valid {
+            if starved {
+                decomp.set_budget(SolveBudget::with_max_pivots(0));
+            }
+            let s = decomp.solve(&self.placement, loads, use_warm);
+            if starved {
+                decomp.set_budget(self.opts.budget);
+            }
+            self.solved_once = true;
+            let warm = s.rung == DegradationRung::WarmLp;
+            // fallback_excess keeps its ladder meaning: distance to the
+            // bound only when the layer as a whole degraded to greedy
+            let lb = (s.rung == DegradationRung::Greedy).then_some(s.lower_bound);
+            (s.frac, (s.lp, warm, s.objective), s.rung, s.budget_exhausted, lb, Some(s.meters))
+        } else {
+            log::warn!("corrupted LP inputs in decomposed mode; using greedy fallback");
+            let frac = fallback::greedy_fraction(&self.placement, loads, &[]);
+            let lower = fallback::lp_lower_bound(&self.placement, loads);
+            (
+                frac,
+                (SolveStats::default(), false, f64::NAN),
+                DegradationRung::Greedy,
+                None,
+                Some(lower),
+                None,
+            )
+        };
+
+        // ---- integer rounding + routing: identical to the global path ----
+        let replica_loads = round_replica_loads(&frac, &loads.expert_loads());
+        let routes = route_tokens(
+            &self.placement,
+            loads,
+            &replica_loads,
+            self.opts.locality_aware,
+            if self.opts.topo_aware_routing { self.topo.as_ref() } else { None },
+        );
+
+        let mut sched = Schedule {
+            replica_loads,
+            routes,
+            stats: ScheduleStats {
+                lp_iterations: stats_lp.0.pivots,
+                lp_dual_pivots: stats_lp.0.dual_pivots,
+                lp_bound_flips: stats_lp.0.bound_flips,
+                lp_refactors: stats_lp.0.refactorizations,
+                warm: stats_lp.1,
+                lp_objective: stats_lp.2,
+                max_gpu_load: 0,
+                solve_ns: 0,
+                rung,
+                budget_exhausted,
+                fallback_excess: 0.0,
+                decompose: meters,
             },
         };
         sched.stats.max_gpu_load = sched.gpu_loads(&self.placement).into_iter().max().unwrap_or(0);
@@ -560,6 +688,15 @@ impl Builder {
                     let row = lp.add(terms, Relation::Eq, 0.0);
                     me.eq_row.push(row);
                 }
+                lp
+            }
+            ScheduleMode::Decomposed { .. } => {
+                // the real constraint matrices live per block inside
+                // `decompose::DecomposedState`; the monolithic solver gets
+                // a trivially satisfiable placeholder and is never invoked
+                let mut lp = LpProblem::new(1);
+                lp.set_objective(0, 1.0);
+                lp.add(vec![(0, 1.0)], Relation::Le, 1.0);
                 lp
             }
         };

@@ -15,6 +15,7 @@
 //! device runs the same algorithm on all-gathered inputs and must produce
 //! bit-identical schedules.
 
+pub mod decompose;
 pub mod distributed;
 pub mod fallback;
 pub mod flow;
@@ -132,6 +133,9 @@ pub struct ScheduleStats {
     /// for fallback rungs: `(plan max load − LP lower bound) / LP lower
     /// bound`, the balance price of degrading; 0.0 on LP rungs
     pub fallback_excess: f64,
+    /// decomposition meters when [`ScheduleMode::Decomposed`] produced the
+    /// plan; `None` on the monolithic paths
+    pub decompose: Option<decompose::DecomposeMeters>,
 }
 
 /// A complete per-micro-batch schedule.
@@ -195,6 +199,22 @@ pub enum ScheduleMode {
     /// Topology-aware LPP (Appendix A.1): separate intra-node (alpha1) and
     /// inter-node (alpha2) communication weights.
     TopoAware { alpha1: f64, alpha2: f64 },
+    /// Dantzig–Wolfe-style two-level decomposition of the scheduling LP
+    /// ([`decompose`]): per-node-block subproblem LPs coordinated by a
+    /// deterministic water-fill master, iterated until the max block load
+    /// is within `tol` of the global fractional lower bound (or stalls).
+    /// Needs a [`crate::topology::Topology`]; scales the solve to
+    /// thousand-GPU groups where the monolithic LP blows the per-batch
+    /// budget.
+    Decomposed {
+        /// Consecutive topology nodes merged into one subproblem block.
+        nodes_per_block: usize,
+        /// Cap on master/subproblem coordination rounds per micro-batch.
+        max_outer_iters: usize,
+        /// Relative gap-to-lower-bound (and stall) tolerance ending the
+        /// outer loop early.
+        tol: f64,
+    },
 }
 
 /// Scheduler options (each maps to a Fig. 11 ablation arm).

@@ -195,18 +195,26 @@ impl MoeServer {
                 // pre-existing backlog closes the window immediately)
                 close_us = open_us.max(reqs[queue[self.cfg.max_batch - 1]].arrival_us);
             }
-            // shed stale requests from the front, then take the batch FIFO
-            let mut batch: Vec<usize> = Vec::new();
+            // shed the ENTIRE stale prefix at close — the queue is in
+            // arrival order, so every request whose wait exceeds
+            // shed_after_us sits at the front; examining only requests
+            // popped toward the batch would let a stale request survive
+            // the close that already condemned it whenever the batch fills
+            // first. Then take the batch FIFO from the fresh remainder.
             let mut shed: Vec<u64> = Vec::new();
-            while batch.len() < self.cfg.max_batch {
-                let Some(j) = queue.pop_front() else { break };
-                let wait = close_us - reqs[j].arrival_us;
-                if wait > self.cfg.shed_after_us {
+            while let Some(&j) = queue.front() {
+                if close_us - reqs[j].arrival_us > self.cfg.shed_after_us {
+                    queue.pop_front();
                     shed.push(reqs[j].id);
                     self.sla.record_shed();
                 } else {
-                    batch.push(j);
+                    break;
                 }
+            }
+            let mut batch: Vec<usize> = Vec::new();
+            while batch.len() < self.cfg.max_batch {
+                let Some(j) = queue.pop_front() else { break };
+                batch.push(j);
             }
 
             self.sla.windows += 1;
@@ -302,9 +310,13 @@ pub struct ServingRunner {
 }
 
 impl ServingRunner {
-    /// Closed-loop runner over any session; dispatch latency is not
-    /// charged until [`ServingRunner::with_dispatch`] installs a model.
+    /// Closed-loop runner over a single-layer session; dispatch latency is
+    /// not charged until [`ServingRunner::with_dispatch`] installs a model.
+    /// Panics if the session schedules more than one layer — the runner
+    /// meters one plan per batch, so a multi-layer session would silently
+    /// drop every layer past the first.
     pub fn new(session: MoeSession) -> Self {
+        assert_eq!(session.layers(), 1, "serving drives single-layer decode sessions");
         ServingRunner { session, dispatch_cost: None, slo_us: f64::INFINITY, sla: SlaStats::default() }
     }
 
@@ -407,6 +419,58 @@ mod tests {
         let sla = server.sla();
         assert!(sla.shed > 0, "overload must shed: {sla:?}");
         assert_eq!(sla.accounted(), 400, "conservation under shedding");
+    }
+
+    #[test]
+    #[should_panic(expected = "single-layer decode sessions")]
+    fn closed_loop_runner_rejects_multi_layer_sessions() {
+        // without the assert a 2-layer session would meter layer 0 and
+        // silently drop layer 1's plan on every step
+        let session = MoeSession::builder()
+            .topology(Topology::new(8, 4, 2, 8))
+            .experts(16)
+            .policy_name("micromoe")
+            .layers(2)
+            .build()
+            .unwrap();
+        let _ = ServingRunner::new(session);
+    }
+
+    #[test]
+    fn stale_backlog_is_shed_in_full_at_window_close() {
+        // 40 requests burst in at t=0; service is slow (4ms/window) and
+        // shed_after is tight (1ms). From the second window on, the whole
+        // backlog is stale at close: every close must shed its entire
+        // stale prefix, never strand one behind a filled batch.
+        let cfg = ServingConfig {
+            max_batch: 8,
+            shed_after_us: 1_000.0,
+            solve_cost: SolveCost::Virtual { us: 4_000.0 },
+            ..Default::default()
+        };
+        let mut server = session("vanilla-ep").serve(cfg.clone(), TopicMix::new(16, 1.1, 4, 5));
+        let reqs: Vec<Request> = (0..40)
+            .map(|id| Request { id, arrival_us: 0.0, tokens: 16 })
+            .collect();
+        let trace = server.run(&reqs);
+        let sla = server.sla();
+        assert_eq!(sla.accounted(), 40, "conservation under shedding");
+        assert!(sla.shed > 0, "stale backlog must shed: {sla:?}");
+        for w in &trace.windows {
+            // after a close, no request left queued may already be stale
+            // at that close — it would have to survive into the next
+            // window with an even longer wait
+            for later in &trace.windows[w.index as usize + 1..] {
+                for &id in &later.served {
+                    let wait = w.close_us - reqs[id as usize].arrival_us;
+                    assert!(
+                        wait <= cfg.shed_after_us,
+                        "request {id} was stale at window {} close but served later",
+                        w.index
+                    );
+                }
+            }
+        }
     }
 
     #[test]

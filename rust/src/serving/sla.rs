@@ -102,7 +102,7 @@ impl SlaStats {
             Json::obj(vec![
                 ("count", Json::Num(t.count() as f64)),
                 ("mean_us", num(t.mean())),
-                ("max_us", Json::Num(t.max())),
+                ("max_us", num(t.max())),
                 ("p50_us", num(t.exact(0.50))),
                 ("p95_us", num(t.exact(0.95))),
                 ("p99_us", num(t.exact(0.99))),
@@ -156,6 +156,10 @@ mod tests {
         assert_eq!(s.shed_rate(), 0.0);
         let j = s.to_json();
         assert_eq!(j.path(&["e2e", "p50_us"]), Some(&Json::Null));
+        // max_us goes through the same NaN→null guard as every other
+        // moment — an empty track must not fabricate a zero maximum
+        assert_eq!(j.path(&["e2e", "max_us"]), Some(&Json::Null));
+        assert_eq!(j.path(&["queue", "max_us"]), Some(&Json::Null));
         assert_eq!(j.get("arrived").and_then(Json::as_f64), Some(0.0));
     }
 }

@@ -223,7 +223,10 @@ impl LatencyTrack {
         LatencyTrack {
             samples: Vec::new(),
             sum: 0.0,
-            max: 0.0,
+            // NaN, not 0.0: an empty track has no largest sample, and a
+            // fabricated zero would read as a real zero-latency maximum in
+            // SLO artifacts. `f64::max` recovers on the first record.
+            max: f64::NAN,
             p2_50: P2Quantile::new(0.50),
             p2_95: P2Quantile::new(0.95),
             p2_99: P2Quantile::new(0.99),
@@ -233,6 +236,8 @@ impl LatencyTrack {
     /// Record one latency sample (any unit; the serving tier uses µs).
     pub fn record(&mut self, x: f64) {
         self.sum += x;
+        // IEEE maxNum semantics: NaN.max(x) == x, so the empty-track NaN
+        // sentinel is replaced by the first real sample
         self.max = self.max.max(x);
         self.p2_50.observe(x);
         self.p2_95.observe(x);
@@ -259,7 +264,8 @@ impl LatencyTrack {
         }
     }
 
-    /// Largest sample (0 when empty).
+    /// Largest sample (`NaN` when empty, like [`LatencyTrack::mean`] —
+    /// JSON emitters route it through the same NaN→null guard).
     pub fn max(&self) -> f64 {
         self.max
     }
@@ -581,6 +587,55 @@ impl DegradationStats {
     }
 }
 
+/// Two-level (Dantzig–Wolfe-style) decomposition meters from
+/// [`crate::scheduler::ScheduleMode::Decomposed`] solves: how many
+/// master/subproblem outer iterations each layer took, where the simplex
+/// pivots went (per-block subproblems vs the one global LP the exact modes
+/// solve), how far the final coordination gap sat from the LP lower bound,
+/// and how many block subproblems degraded to the greedy water-fill
+/// (block-level degradation — the layer keeps its LP rung). Zero for every
+/// non-decomposed mode. Aggregated per step in [`StepStats`] and over a
+/// balancer's lifetime in [`BalancerStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DecomposeStats {
+    /// Decomposed layer solves recorded.
+    pub solves: u64,
+    /// Master/subproblem outer iterations summed over solves.
+    pub outer_iters: u64,
+    /// Simplex pivots spent inside per-block subproblem solves.
+    pub subproblem_pivots: u64,
+    /// Sum over solves of the final master gap — `(max block level − LP
+    /// lower bound) / LP lower bound`. Divide by [`DecomposeStats::solves`]
+    /// for the mean gap.
+    pub master_gap_sum: f64,
+    /// Largest final master gap observed over any solve.
+    pub master_gap_max: f64,
+    /// Block subproblems that degraded to the greedy water-fill (budget
+    /// exhaustion or a numerical failure confined to that block).
+    pub blocks_degraded: u64,
+}
+
+impl DecomposeStats {
+    /// Fold another accumulator into this one.
+    pub fn absorb(&mut self, other: &DecomposeStats) {
+        self.solves += other.solves;
+        self.outer_iters += other.outer_iters;
+        self.subproblem_pivots += other.subproblem_pivots;
+        self.master_gap_sum += other.master_gap_sum;
+        self.master_gap_max = self.master_gap_max.max(other.master_gap_max);
+        self.blocks_degraded += other.blocks_degraded;
+    }
+
+    /// Mean final master gap per decomposed solve (0 when none recorded).
+    pub fn mean_gap(&self) -> f64 {
+        if self.solves == 0 {
+            0.0
+        } else {
+            self.master_gap_sum / self.solves as f64
+        }
+    }
+}
+
 /// Unified per-step scheduling diagnostics reported by every
 /// [`crate::balancer::Balancer`] in its
 /// [`crate::balancer::StepOutput`]. Static systems (vanilla EP, padding)
@@ -609,6 +664,9 @@ pub struct StepStats {
     /// Degradation-ladder counters for the step's layers. Static policies
     /// (vanilla EP, padding) leave this at zero — they have no ladder.
     pub degradation: DegradationStats,
+    /// Decomposition meters for the step's layers; zero unless the policy
+    /// runs [`crate::scheduler::ScheduleMode::Decomposed`].
+    pub decompose: DecomposeStats,
 }
 
 /// Cumulative counters over a [`crate::balancer::Balancer`]'s lifetime
@@ -638,6 +696,8 @@ pub struct BalancerStats {
     pub max_gpu_load: u64,
     /// Cumulative degradation-ladder counters.
     pub degradation: DegradationStats,
+    /// Cumulative decomposition meters (decomposed-mode policies only).
+    pub decompose: DecomposeStats,
 }
 
 impl BalancerStats {
@@ -654,6 +714,7 @@ impl BalancerStats {
         self.prep_seconds += step.prep_seconds;
         self.max_gpu_load = self.max_gpu_load.max(step.max_gpu_load);
         self.degradation.absorb(&step.degradation);
+        self.decompose.absorb(&step.decompose);
     }
 
     /// Mean scheduling seconds per executed step (0 before the first).
@@ -833,6 +894,57 @@ mod tests {
                 "p{p}: got {got}, want ~{want}"
             );
         }
+    }
+
+    #[test]
+    fn empty_latency_track_has_no_fabricated_max() {
+        let t = LatencyTrack::new();
+        assert!(t.is_empty());
+        // every moment of an empty track is NaN — not a fake 0.0 maximum
+        assert!(t.max().is_nan());
+        assert!(t.mean().is_nan());
+        assert!(t.exact(0.5).is_nan());
+        // the first real sample replaces the sentinel outright
+        let mut t = t;
+        t.record(-3.0);
+        assert_eq!(t.max(), -3.0);
+        t.record(7.0);
+        assert_eq!(t.max(), 7.0);
+    }
+
+    #[test]
+    fn decompose_stats_absorb_and_mean_gap() {
+        let a = DecomposeStats {
+            solves: 2,
+            outer_iters: 5,
+            subproblem_pivots: 40,
+            master_gap_sum: 0.02,
+            master_gap_max: 0.015,
+            blocks_degraded: 1,
+        };
+        let b = DecomposeStats {
+            solves: 1,
+            outer_iters: 3,
+            subproblem_pivots: 10,
+            master_gap_sum: 0.04,
+            master_gap_max: 0.04,
+            blocks_degraded: 0,
+        };
+        let mut sum = DecomposeStats::default();
+        assert_eq!(sum.mean_gap(), 0.0);
+        sum.absorb(&a);
+        sum.absorb(&b);
+        assert_eq!(sum.solves, 3);
+        assert_eq!(sum.outer_iters, 8);
+        assert_eq!(sum.subproblem_pivots, 50);
+        assert_eq!(sum.blocks_degraded, 1);
+        assert_eq!(sum.master_gap_max, 0.04);
+        assert!((sum.mean_gap() - 0.02).abs() < 1e-12);
+
+        // StepStats absorption carries the meters into BalancerStats
+        let mut bal = BalancerStats::default();
+        bal.absorb(&StepStats { decompose: a, ..Default::default() });
+        assert_eq!(bal.decompose, a);
     }
 
     #[test]
