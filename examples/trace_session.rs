@@ -1,0 +1,144 @@
+//! Traced session walkthrough: exercise every span kind in the ISSUE-9
+//! observability vocabulary and export the results.
+//!
+//! One shared Wall-clock [`Tracer`] records (1) a speculative training
+//! loop with an injected one-shot worker panic (solve, engine and
+//! worker-respawn spans), (2) a Dantzig–Wolfe decomposed session
+//! (decompose-round spans), and (3) an open-loop serving run whose
+//! batching windows land on the virtual-time lane (serving-window spans).
+//! The trace is written as Chrome-trace JSON — load it in
+//! `chrome://tracing` or <https://ui.perfetto.dev> — next to a metrics
+//! snapshot from the [`MetricsHub`], and the Prometheus text exposition is
+//! printed to stdout.
+//!
+//! Run: `cargo run --release --example trace_session`
+//! Artifacts: `target/bench-results/trace.json`,
+//! `target/bench-results/trace_metrics.json`.
+
+use std::sync::Arc;
+
+use micromoe::balancer::MoeSession;
+use micromoe::bench_harness::save_json;
+use micromoe::engine::EngineMode;
+use micromoe::faults::{Fault, FaultPlan};
+use micromoe::obs::{chrome_trace, prometheus, MetricsHub, TraceConfig, Tracer};
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::{LoadMatrix, ScheduleMode, SchedulerOptions};
+use micromoe::serving::{
+    ArrivalGen, ArrivalProcess, DispatchCost, ServingConfig, SolveCost, TokenModel,
+};
+use micromoe::topology::Topology;
+use micromoe::workload::TopicMix;
+
+const EXPERTS: usize = 16;
+const GPUS: usize = 8;
+
+fn zipf_lm(seed: u64, per_gpu: u64, s: f64) -> LoadMatrix {
+    let mut rng = Rng::new(seed);
+    let z = Zipf::new(EXPERTS, s);
+    let mut lm = LoadMatrix::zeros(EXPERTS, GPUS);
+    for g in 0..GPUS {
+        for _ in 0..per_gpu {
+            lm.add(z.sample(&mut rng), g, 1);
+        }
+    }
+    lm
+}
+
+fn session(topo: Topology, opts: SchedulerOptions, layers: usize) -> MoeSession {
+    MoeSession::builder()
+        .topology(topo)
+        .experts(EXPERTS)
+        .policy_name("micromoe")
+        .options(opts)
+        .layers(layers)
+        .build()
+        .expect("registered policy")
+}
+
+fn main() {
+    let tracer = Tracer::new(TraceConfig::Wall);
+
+    // 1. speculative training loop — autocorrelated loads so pre-solves
+    //    hit, plus one injected one-shot worker panic so the trace shows a
+    //    respawn discontinuity and the recovery that follows it
+    let plan = FaultPlan::with_faults(vec![(2, 0, Fault::WorkerPanic { persistent: false })]);
+    let opts = SchedulerOptions {
+        engine: EngineMode::speculative(),
+        faults: Some(Arc::new(plan)),
+        trace: tracer.clone(),
+        ..Default::default()
+    };
+    let mut train = session(Topology::new(8, 4, 2, 8), opts, 4);
+    for step in 0..6usize {
+        // the hot set rotates every other step: misses, then hits
+        let loads: Vec<LoadMatrix> =
+            (0..4).map(|l| zipf_lm((step / 2 * 4 + l) as u64, 900, 1.0)).collect();
+        train.step(&loads);
+    }
+
+    // 2. decomposed solves: 2 nodes of 4 GPUs -> 2 subproblem blocks, each
+    //    outer round leaving one span per block on the same buffer
+    let dec_opts = SchedulerOptions {
+        mode: ScheduleMode::Decomposed { nodes_per_block: 1, max_outer_iters: 6, tol: 1e-3 },
+        trace: tracer.clone(),
+        ..Default::default()
+    };
+    let mut dec = session(Topology::new(8, 4, 2, 4), dec_opts, 2);
+    for step in 0..3usize {
+        let loads: Vec<LoadMatrix> =
+            (0..2).map(|l| zipf_lm((60 + step * 2 + l) as u64, 900, 1.0)).collect();
+        dec.step(&loads);
+    }
+
+    // 3. open-loop serving: window spans carry the deterministic virtual
+    //    clock, so the trace shows both timelines side by side
+    let serve_opts = SchedulerOptions {
+        engine: EngineMode::Pipeline { workers: 2, inflight: 2 },
+        trace: tracer.clone(),
+        ..Default::default()
+    };
+    let sess = session(Topology::new(8, 4, 2, 8), serve_opts, 1);
+    let reqs = ArrivalGen::new(
+        ArrivalProcess::Poisson { rate_hz: 20_000.0 },
+        TokenModel::Fixed(48),
+        0xBEE,
+    )
+    .take(200);
+    let cfg = ServingConfig {
+        window_us: 400.0,
+        max_batch: 24,
+        slo_us: 900.0,
+        shed_after_us: 1_500.0,
+        solve_cost: SolveCost::Virtual { us: 50.0 },
+        dispatch_cost: DispatchCost::PerToken { fixed_us: 10.0, us_per_token: 0.25 },
+    };
+    let mut server = sess.serve(cfg, TopicMix::new(EXPERTS, 1.1, 8, 9));
+    server.run(&reqs);
+
+    // span census
+    let mut counts: std::collections::BTreeMap<&'static str, usize> = Default::default();
+    for e in tracer.events() {
+        *counts.entry(e.span.name()).or_default() += 1;
+    }
+    println!("recorded spans:");
+    for (name, n) in &counts {
+        println!("  {name:16} {n}");
+    }
+
+    // metrics: one hub over the training session's counters and the
+    // server's SLO accounting (keys are namespaced, so they coexist)
+    let mut hub = MetricsHub::new();
+    hub.absorb_balancer(&train.stats());
+    if let Some(es) = train.engine_stats() {
+        hub.absorb_engine(&es);
+    }
+    hub.absorb_sla(server.sla());
+
+    let trace_path = save_json("trace", &chrome_trace(&tracer)).expect("write trace.json");
+    let metrics_path =
+        save_json("trace_metrics", &hub.snapshot()).expect("write trace_metrics.json");
+    println!("\nchrome trace -> {} ({} events)", trace_path.display(), tracer.event_count());
+    println!("metrics snapshot -> {}", metrics_path.display());
+    println!("\n{}", prometheus(&hub));
+}

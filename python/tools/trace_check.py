@@ -1,0 +1,152 @@
+"""Schema validator for the rust tracer's Chrome-trace JSON export.
+
+CI's trace-smoke job runs ``cargo run --example trace_session`` and then
+points this tool at the emitted ``target/bench-results/trace.json``. It
+checks the file against the subset of the Trace Event Format that
+``rust/src/obs/export.rs`` promises to produce — enough that the artifact
+is guaranteed to load in ``chrome://tracing`` / Perfetto and that every
+span kind of the ISSUE-9 vocabulary actually made it into the file:
+
+* top level: an object with a ``traceEvents`` array and
+  ``displayTimeUnit == "ms"``;
+* every complete event (``ph == "X"``): string ``name``, integer
+  ``pid``/``tid``, finite numeric ``ts``/``dur`` with ``ts >= 0`` and
+  ``dur >= 0``, and an ``args`` object;
+* per span kind, the required args emitted by the exporter (e.g. a solve
+  span carries ``step``/``layer``/``mode``/``rung``/pivot counters);
+* metadata events (``ph == "M"``) name both clock-domain process lanes;
+* all five span kinds present (pass ``--require`` to narrow the set).
+
+Usage: ``python3 python/tools/trace_check.py <trace.json>
+[--require solve,engine,...]``. Exits non-zero with a description of the
+first violation, or prints a per-kind census on success.
+
+stdlib-only on purpose: the CI container for this job installs nothing.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+# span kind -> args the exporter always attaches (values checked for
+# presence, not type, except the counters listed in INT_ARGS)
+REQUIRED_ARGS = {
+    "solve": ["step", "layer", "mode", "rung", "warm", "pivots",
+              "dual_pivots", "flips", "refactors"],
+    "engine": ["step", "layer", "worker", "outcome", "inflight", "pivots"],
+    "decompose_round": ["round", "block", "gap", "kappa"],
+    "serving_window": ["index", "admitted", "shed", "deadline_miss"],
+    "worker_respawn": ["worker", "attempt"],
+}
+
+INT_ARGS = {
+    "solve": ["step", "layer", "pivots", "dual_pivots", "flips", "refactors"],
+    "engine": ["step", "layer", "worker", "inflight", "pivots"],
+    "decompose_round": ["round", "block"],
+    "serving_window": ["index", "admitted", "shed", "deadline_miss"],
+    "worker_respawn": ["worker", "attempt"],
+}
+
+SPAN_KINDS = sorted(REQUIRED_ARGS)
+
+
+def fail(msg):
+    print(f"trace_check: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_number(ev, field):
+    v = ev.get(field)
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        fail(f"event {ev.get('name')!r} id={ev.get('id')}: {field} is not a number: {v!r}")
+    if not math.isfinite(v):
+        fail(f"event {ev.get('name')!r} id={ev.get('id')}: {field} is not finite: {v!r}")
+    if v < 0:
+        fail(f"event {ev.get('name')!r} id={ev.get('id')}: {field} is negative: {v!r}")
+    return v
+
+
+def check_span(ev):
+    name = ev.get("name")
+    if name not in REQUIRED_ARGS:
+        fail(f"unknown span kind {name!r}")
+    check_number(ev, "ts")
+    check_number(ev, "dur")
+    for field in ("pid", "tid"):
+        v = ev.get(field)
+        if not isinstance(v, int) or isinstance(v, bool):
+            fail(f"{name} span: {field} must be an integer, got {v!r}")
+    if ev.get("pid") not in (0, 1):
+        fail(f"{name} span: pid {ev['pid']} is neither the wall (0) nor virtual (1) lane")
+    args = ev.get("args")
+    if not isinstance(args, dict):
+        fail(f"{name} span: args missing or not an object")
+    for key in REQUIRED_ARGS[name]:
+        if key not in args:
+            fail(f"{name} span: missing arg {key!r} (has {sorted(args)})")
+    for key in INT_ARGS[name]:
+        v = args[key]
+        if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+            fail(f"{name} span: arg {key!r} must be a non-negative integer, got {v!r}")
+    return name
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="path to the exported Chrome-trace JSON")
+    ap.add_argument(
+        "--require",
+        default=",".join(SPAN_KINDS),
+        help="comma list of span kinds that must appear (default: all five)",
+    )
+    opts = ap.parse_args()
+    required = [k.strip() for k in opts.require.split(",") if k.strip()]
+    for k in required:
+        if k not in REQUIRED_ARGS:
+            fail(f"--require names unknown span kind {k!r} (known: {SPAN_KINDS})")
+
+    try:
+        with open(opts.trace, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"cannot load {opts.trace}: {e}")
+
+    if not isinstance(doc, dict):
+        fail("top level must be an object")
+    if doc.get("displayTimeUnit") != "ms":
+        fail(f"displayTimeUnit must be 'ms', got {doc.get('displayTimeUnit')!r}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        fail("traceEvents missing or not an array")
+
+    census = {}
+    meta_lanes = set()
+    for ev in events:
+        if not isinstance(ev, dict):
+            fail(f"non-object entry in traceEvents: {ev!r}")
+        ph = ev.get("ph")
+        if ph == "M":
+            if ev.get("name") == "process_name":
+                meta_lanes.add(ev.get("args", {}).get("name"))
+            continue
+        if ph != "X":
+            fail(f"unexpected event phase {ph!r} (exporter emits only 'X' and 'M')")
+        kind = check_span(ev)
+        census[kind] = census.get(kind, 0) + 1
+
+    for lane in ("wall", "virtual"):
+        if not any(lane in str(n) for n in meta_lanes):
+            fail(f"missing process_name metadata for the {lane} clock lane (saw {meta_lanes})")
+    for k in required:
+        if census.get(k, 0) == 0:
+            fail(f"no {k!r} spans recorded (census: {census})")
+
+    total = sum(census.values())
+    print(f"trace_check: OK — {total} spans across {len(census)} kinds")
+    for k in sorted(census):
+        print(f"  {k:16} {census[k]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,10 @@
 //! 128 GPUs, hit rate > 0 on autocorrelated loads, repair pivots per hit
 //! below cold pivots.
 //!
+//! A fourth arm re-runs the pipeline with an enabled Wall
+//! [`micromoe::obs::Tracer`] and reports the recording overhead against
+//! the (off-tracer) pipeline row — the ISSUE-9 tracing-cost meter.
+//!
 //! Env knobs (CI smoke): `ENGINE_BENCH_GPUS` (comma list, default
 //! `64,128,256`), `ENGINE_BENCH_STEPS` (measured steps, default 8),
 //! `ENGINE_BENCH_LAYERS` (default 4), `ENGINE_BENCH_GAP_US` (modelled
@@ -23,6 +27,7 @@ use std::time::{Duration, Instant};
 use micromoe::balancer::{MoeLayerPlan, MoeSession};
 use micromoe::bench_harness::{fmt_time, save_json, Table};
 use micromoe::engine::EngineMode;
+use micromoe::obs::{TraceConfig, Tracer};
 use micromoe::placement::cayley::cayley_graph_placement;
 use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
 use micromoe::ser::Json;
@@ -82,12 +87,14 @@ fn run_mode(
     layers: usize,
     rounds: &[Vec<LoadMatrix>],
     gap: Duration,
+    tracer: Tracer,
 ) -> ModeResult {
     let placement = cayley_graph_placement(gpus, EXPERTS);
     let mut session = MoeSession::builder()
         .topology(Topology::new(gpus, gpus / 2, 2, 8))
         .placement(placement)
         .engine(mode)
+        .tracer(tracer)
         .layers(layers)
         .build()
         .expect("engine bench session");
@@ -163,11 +170,15 @@ fn main() {
         let tokens_per_step = (layers * gpus) as f64 * TOKENS_PER_GPU as f64;
         let cold_piv = cold_pivots_mean(gpus, &rounds);
         let mut barrier_thr = 0.0f64;
+        let mut pipeline_sched = 0.0f64;
         for (name, mode) in modes.iter().copied() {
-            let r = run_mode(mode, gpus, layers, &rounds, gap);
+            let r = run_mode(mode, gpus, layers, &rounds, gap, Tracer::off());
             let thr = tokens_per_step / r.sched_s_per_step;
             if name == "barrier" {
                 barrier_thr = thr;
+            }
+            if name == "pipeline" {
+                pipeline_sched = r.sched_s_per_step;
             }
             let speculative = matches!(mode, EngineMode::Speculative { .. });
             table.row(vec![
@@ -193,6 +204,40 @@ fn main() {
                 ("cold_pivots_mean", Json::Num(cold_piv)),
             ]));
         }
+
+        // tracing-overhead arm: the pipeline row above *is* the
+        // disabled-tracer baseline (the default tracer is off, and
+        // tests/trace_identity.rs pins off == untraced bit-for-bit), so
+        // one extra run with an enabled Wall tracer bounds the recording
+        // cost from above — the off cost contract is <1% of it
+        let wall = Tracer::new(TraceConfig::Wall);
+        let r = run_mode(EngineMode::pipeline(), gpus, layers, &rounds, gap, wall.clone());
+        let thr = tokens_per_step / r.sched_s_per_step;
+        let overhead_pct = if pipeline_sched > 0.0 {
+            (r.sched_s_per_step - pipeline_sched) / pipeline_sched * 100.0
+        } else {
+            0.0
+        };
+        table.row(vec![
+            gpus.to_string(),
+            "pipeline+trace".to_string(),
+            fmt_time(r.sched_s_per_step),
+            format!("{:.2e}", thr),
+            if barrier_thr > 0.0 { format!("{:.2}x", thr / barrier_thr) } else { "-".into() },
+            "-".into(),
+            "-".into(),
+            format!("{cold_piv:.1}"),
+        ]);
+        json.push(Json::obj(vec![
+            ("gpus", Json::Num(gpus as f64)),
+            ("experts", Json::Num(EXPERTS as f64)),
+            ("layers", Json::Num(layers as f64)),
+            ("mode", Json::Str("pipeline+trace".to_string())),
+            ("sched_s_per_step", Json::Num(r.sched_s_per_step)),
+            ("tokens_per_s", Json::Num(thr)),
+            ("trace_overhead_pct", Json::num(overhead_pct)),
+            ("trace_events", Json::Num(wall.event_count() as f64)),
+        ]));
     }
     table.print();
     println!(

@@ -104,6 +104,12 @@ pub struct EngineBalancer {
     placement: Placement,
     overlap: bool,
     stats: BalancerStats,
+    /// clone of `opts.trace` + the mode's export name (the engine owns the
+    /// options): passthrough plans emitted on engine failure still get a
+    /// solve span, keeping trace rung counts equal to
+    /// [`crate::stats::DegradationStats`]
+    trace: crate::obs::Tracer,
+    mode_name: &'static str,
 }
 
 impl EngineBalancer {
@@ -117,8 +123,17 @@ impl EngineBalancer {
         layers: usize,
         overlap: bool,
     ) -> Result<Self, EngineError> {
+        let trace = opts.trace.clone();
+        let mode_name = opts.mode.name();
         let engine = ScheduleEngine::new(placement.clone(), topo, opts, layers)?;
-        Ok(EngineBalancer { engine, placement, overlap, stats: BalancerStats::default() })
+        Ok(EngineBalancer {
+            engine,
+            placement,
+            overlap,
+            stats: BalancerStats::default(),
+            trace,
+            mode_name,
+        })
     }
 
     /// MoE layers scheduled per step.
@@ -152,7 +167,10 @@ impl Balancer for EngineBalancer {
         input: &StepInput,
         sink: &mut dyn FnMut(usize, MoeLayerPlan),
     ) -> StepStats {
-        let EngineBalancer { engine, placement, overlap, .. } = self;
+        // index of the step being scheduled (absorb() advances the counter
+        // only after the step completes)
+        let step = self.stats.steps as usize;
+        let EngineBalancer { engine, placement, overlap, trace, mode_name, .. } = self;
         let overlap = *overlap;
         let mut stats = StepStats::default();
         let mut emitted = vec![false; input.loads.len()];
@@ -174,6 +192,20 @@ impl Balancer for EngineBalancer {
                 }
                 let plan = passthrough_plan(placement, lm, overlap);
                 stats.degradation.record(DegradationRung::Passthrough, None, 0.0);
+                trace.record(
+                    0.0,
+                    crate::obs::Span::Solve {
+                        step,
+                        layer: l,
+                        mode: *mode_name,
+                        rung: DegradationRung::Passthrough,
+                        warm: false,
+                        pivots: 0,
+                        dual_pivots: 0,
+                        flips: 0,
+                        refactors: 0,
+                    },
+                );
                 fold_plan(&mut stats, &plan);
                 sink(l, plan);
             }

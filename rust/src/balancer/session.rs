@@ -150,6 +150,27 @@ impl MoeSessionBuilder {
         self
     }
 
+    /// Enable structured tracing for the session's scheduling pipeline
+    /// ([`crate::obs`]): builds a fresh [`crate::obs::Tracer`] on the given
+    /// clock and threads it through the policy's schedulers, the engine
+    /// pool, and (via [`MoeSession::serve`]) the serving tier. Read it back
+    /// with [`MoeSession::tracer`]. [`crate::obs::TraceConfig::Off`] — the
+    /// default — keeps the zero-cost disabled handle. Tracing observes,
+    /// never steers: schedules are bit-identical either way.
+    pub fn trace(mut self, cfg: crate::obs::TraceConfig) -> Self {
+        self.spec.get_or_insert_with(PolicySpec::default).options.trace =
+            crate::obs::Tracer::new(cfg);
+        self
+    }
+
+    /// Share an existing tracer (e.g. one timeline across several
+    /// sessions). Prefer [`MoeSessionBuilder::trace`] for the common
+    /// single-session case.
+    pub fn tracer(mut self, tracer: crate::obs::Tracer) -> Self {
+        self.spec.get_or_insert_with(PolicySpec::default).options.trace = tracer;
+        self
+    }
+
     /// RNG seed for stochastic policies (FlexMoE placement, AR search).
     pub fn seed(mut self, seed: u64) -> Self {
         self.spec.get_or_insert_with(PolicySpec::default).seed = seed;
@@ -417,6 +438,13 @@ impl MoeSession {
     /// engine (`micromoe` with Pipeline/Speculative); `None` otherwise.
     pub fn engine_stats(&self) -> Option<EngineStats> {
         self.balancer.engine_stats()
+    }
+
+    /// The session's tracing handle (disabled unless the builder enabled
+    /// it) — a clone of the one the schedulers record into, so its event
+    /// buffer is shared. Export with [`crate::obs::chrome_trace`].
+    pub fn tracer(&self) -> &crate::obs::Tracer {
+        &self.spec.options.trace
     }
 
     /// Schedule one micro-batch across every layer; `loads[l]` is layer

@@ -85,6 +85,10 @@ impl Args {
     /// `--policy <name>` (registry name, default `micromoe`),
     /// `--engine barrier|pipeline|speculative` with optional `--workers N`
     /// / `--inflight N`, `--policy-seed N`, and `--replan-every N`.
+    /// `--trace <path>` additionally enables the Wall-clock
+    /// [`crate::obs::Tracer`] on the options — the command owning the run
+    /// is expected to export the recorded spans to `<path>` when done
+    /// (`micromoe train` writes Chrome-trace JSON there).
     pub fn policy_spec(&self) -> Result<PolicySpec, String> {
         let parse_count = |key: &str| -> Result<usize, String> {
             match self.str(key) {
@@ -102,6 +106,9 @@ impl Args {
         if let Some(every) = self.str("replan-every") {
             spec.replan_every =
                 Some(every.parse().map_err(|_| format!("--replan-every: bad count '{every}'"))?);
+        }
+        if self.trace_path().is_some() {
+            spec.options.trace = crate::obs::Tracer::new(crate::obs::TraceConfig::Wall);
         }
         let sized = self.str("workers").is_some() || self.str("inflight").is_some();
         if let Some(engine) = self.str("engine") {
@@ -132,6 +139,12 @@ impl Args {
             );
         }
         Ok(spec)
+    }
+
+    /// Destination of `--trace <path>` (the Chrome-trace JSON output the
+    /// owning command writes after its run), if tracing was requested.
+    pub fn trace_path(&self) -> Option<&str> {
+        self.str("trace")
     }
 
     /// Build an [`ArrivalProcess`] from the standard serving flags:
@@ -247,6 +260,18 @@ mod tests {
         assert_eq!(spec.name, "flexmoe");
         assert_eq!(spec.seed, 7);
         assert_eq!(spec.replan_every, Some(4));
+    }
+
+    #[test]
+    fn policy_spec_enables_tracing() {
+        let args = parse("--trace out.json");
+        assert_eq!(args.trace_path(), Some("out.json"));
+        let spec = args.policy_spec().unwrap();
+        assert!(spec.options.trace.enabled());
+        assert_eq!(spec.options.trace.config(), crate::obs::TraceConfig::Wall);
+        // tracing stays off (zero-cost) unless explicitly requested
+        let plain = parse("--engine pipeline").policy_spec().unwrap();
+        assert!(!plain.options.trace.enabled());
     }
 
     #[test]

@@ -474,6 +474,9 @@ pub fn scheduler_options_from_json(j: &Json) -> Result<SchedulerOptions, String>
         budget,
         // fault plans are code-only (chaos tests); config never carries one
         faults: None,
+        // tracers are handles, not data — wired in code via
+        // MoeSessionBuilder::trace, never through config
+        trace: crate::obs::Tracer::default(),
     })
 }
 

@@ -67,6 +67,10 @@ pub struct ScheduleEngine {
     /// across worker respawns and job replays
     step: usize,
     stats: EngineStats,
+    /// clone of `opts.trace` (the pool owns the options); emits one
+    /// [`crate::obs::Span::Engine`] per in-order emission, so engine-span
+    /// counts match [`EngineStats::schedules`]
+    trace: crate::obs::Tracer,
 }
 
 impl ScheduleEngine {
@@ -91,6 +95,7 @@ impl ScheduleEngine {
         };
         let experts = placement.num_experts;
         let gpus = placement.num_gpus;
+        let trace = opts.trace.clone();
         let pool = WorkerPool::new(placement, topo, opts, layers, workers);
         let inflight = if inflight == 0 { 2 * pool.workers() } else { inflight }.clamp(1, layers);
         let forecasters = match forecast_cfg {
@@ -105,6 +110,7 @@ impl ScheduleEngine {
             pending: (0..layers).map(|_| None).collect(),
             step: 0,
             stats: EngineStats::default(),
+            trace,
         })
     }
 
@@ -228,6 +234,21 @@ impl ScheduleEngine {
                     }
                     SpecDecision::None => {}
                 }
+                self.trace.record(
+                    s.stats.solve_ns as f64 / 1_000.0,
+                    crate::obs::Span::Engine {
+                        step,
+                        layer: emitted,
+                        worker: emitted % self.pool.workers(),
+                        outcome: match decisions[emitted] {
+                            SpecDecision::Hit => crate::obs::SpanOutcome::Hit,
+                            SpecDecision::Miss => crate::obs::SpanOutcome::Miss,
+                            SpecDecision::None => crate::obs::SpanOutcome::Fresh,
+                        },
+                        inflight: submitted - emitted,
+                        pivots: s.stats.lp_iterations,
+                    },
+                );
                 sink(emitted, s);
                 emitted += 1;
             }

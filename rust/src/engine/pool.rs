@@ -339,6 +339,12 @@ impl WorkerPool {
             self.respawns[w],
             MAX_RESPAWNS
         );
+        // mark the discontinuity: replayed jobs re-solve under fresh span
+        // ids on the shared tracer, so the trace stays globally consistent
+        self.opts.trace.record(
+            0.0,
+            crate::obs::Span::WorkerRespawn { worker: w, attempt: self.respawns[w] },
+        );
         let workers = self.senders.len();
         let (tx, rx) = channel::<Job>();
         self.handles[w] = Some(spawn_worker(

@@ -34,6 +34,7 @@ pub mod engine;
 pub mod faults;
 pub mod lp;
 pub mod moe;
+pub mod obs;
 pub mod placement;
 pub mod prop;
 pub mod rng;

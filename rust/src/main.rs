@@ -21,8 +21,11 @@ fn main() -> Result<()> {
                  commands:\n\
                  \x20 info                     show artifact manifest + platform\n\
                  \x20 train [--steps N] [--engine barrier|pipeline|speculative]\n\
+                 \x20       [--trace spans.json]\n\
                  \x20                          run the e2e PJRT trainer (MicroEP\n\
-                 \x20                          scheduling via the MoeSession facade)\n\
+                 \x20                          scheduling via the MoeSession facade);\n\
+                 \x20                          --trace records scheduling spans and\n\
+                 \x20                          exports Chrome-trace JSON\n\
                  \x20 calibrate                fit cost-model constants from PJRT timings\n\
                  figure regenerators: cargo bench (one target per paper figure)\n\
                  examples: cargo run --release --example quickstart",
@@ -92,6 +95,10 @@ fn train(args: &Args) -> Result<()> {
         // default stays the trainer's pipelined engine; --engine overrides
         trainer.engine_mode = spec.options.engine;
     }
+    // --trace: policy_spec() armed a Wall-clock tracer on the options;
+    // thread it into the trainer's session so every solve/engine span of
+    // the scheduling pipeline lands on one buffer, exported after the run.
+    trainer.tracer = spec.options.trace.clone();
     let log = trainer.run(steps, args.usize_or("log-every", 8))?;
     let first = log.losses.first().copied().unwrap_or(f32::NAN);
     let last = log.losses.last().copied().unwrap_or(f32::NAN);
@@ -99,6 +106,14 @@ fn train(args: &Args) -> Result<()> {
     if let Some(out) = args.str("trace-out") {
         micromoe::train::Trainer::save_trace(&log, &out.into())?;
         println!("trace written to {out}");
+    }
+    if let Some(path) = args.trace_path() {
+        let doc = micromoe::obs::chrome_trace(&trainer.tracer);
+        std::fs::write(path, doc.to_string_pretty())?;
+        println!(
+            "chrome trace written to {path} ({} spans); open in chrome://tracing or Perfetto",
+            trainer.tracer.event_count()
+        );
     }
     Ok(())
 }

@@ -1,0 +1,223 @@
+//! Trace and metrics exporters: Chrome-trace JSON and Prometheus text.
+//!
+//! [`chrome_trace`] turns a [`Tracer`]'s events into the Chrome Trace
+//! Event Format (`chrome://tracing`, Perfetto's legacy JSON importer):
+//! complete (`"ph": "X"`) events with µs timestamps, the wall and virtual
+//! clock domains separated onto two named processes (`pid` 0/1) so the two
+//! timelines never interleave, and span attributes under `args`.
+//!
+//! [`prometheus`] renders a [`MetricsHub`] in the Prometheus text
+//! exposition format (`# TYPE` headers, one sample per line, metric names
+//! prefixed `micromoe_`).
+
+use std::collections::BTreeMap;
+
+use crate::ser::Json;
+
+use super::registry::{MetricKind, MetricsHub};
+use super::trace::{rung_name, ClockDomain, Span, TraceEvent, Tracer};
+
+fn pid(domain: ClockDomain) -> f64 {
+    match domain {
+        ClockDomain::Wall => 0.0,
+        ClockDomain::Virtual => 1.0,
+    }
+}
+
+fn args(span: &Span) -> Json {
+    match span {
+        Span::Solve { step, layer, mode, rung, warm, pivots, dual_pivots, flips, refactors } => {
+            Json::obj(vec![
+                ("step", Json::Num(*step as f64)),
+                ("layer", Json::Num(*layer as f64)),
+                ("mode", Json::Str((*mode).to_string())),
+                ("rung", Json::Str(rung_name(*rung).to_string())),
+                ("warm", Json::Bool(*warm)),
+                ("pivots", Json::Num(*pivots as f64)),
+                ("dual_pivots", Json::Num(*dual_pivots as f64)),
+                ("flips", Json::Num(*flips as f64)),
+                ("refactors", Json::Num(*refactors as f64)),
+            ])
+        }
+        Span::Engine { step, layer, worker, outcome, inflight, pivots } => Json::obj(vec![
+            ("step", Json::Num(*step as f64)),
+            ("layer", Json::Num(*layer as f64)),
+            ("worker", Json::Num(*worker as f64)),
+            ("outcome", Json::Str(outcome.name().to_string())),
+            ("inflight", Json::Num(*inflight as f64)),
+            ("pivots", Json::Num(*pivots as f64)),
+        ]),
+        Span::DecomposeRound { round, block, gap, kappa } => Json::obj(vec![
+            ("round", Json::Num(*round as f64)),
+            ("block", Json::Num(*block as f64)),
+            ("gap", Json::num(*gap)),
+            ("kappa", Json::num(*kappa)),
+        ]),
+        Span::ServingWindow { index, admitted, shed, deadline_miss } => Json::obj(vec![
+            ("index", Json::Num(*index as f64)),
+            ("admitted", Json::Num(*admitted as f64)),
+            ("shed", Json::Num(*shed as f64)),
+            ("deadline_miss", Json::Num(*deadline_miss as f64)),
+        ]),
+        Span::WorkerRespawn { worker, attempt } => Json::obj(vec![
+            ("worker", Json::Num(*worker as f64)),
+            ("attempt", Json::Num(*attempt as f64)),
+        ]),
+    }
+}
+
+fn event_json(e: &TraceEvent) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(e.span.name().to_string())),
+        ("cat", Json::Str("micromoe".to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("pid", Json::Num(pid(e.domain))),
+        ("tid", Json::Num(e.span.lane() as f64)),
+        ("ts", Json::num(e.ts_us)),
+        ("dur", Json::num(e.dur_us)),
+        ("id", Json::Num(e.id as f64)),
+        ("args", args(&e.span)),
+    ])
+}
+
+fn process_meta(domain: ClockDomain, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str("process_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(pid(domain))),
+        ("tid", Json::Num(0.0)),
+        ("args", Json::obj(vec![("name", Json::Str(name.to_string()))])),
+    ])
+}
+
+/// Export every recorded event as a Chrome-trace JSON document. Events are
+/// sorted by (domain, start, id) so the artifact is stable for a fixed
+/// event set even when pool workers raced to record. A disabled tracer
+/// yields a valid document with only the process-name metadata.
+pub fn chrome_trace(tracer: &Tracer) -> Json {
+    let mut events = tracer.events();
+    events.sort_by(|a, b| {
+        (pid(a.domain), a.ts_us, a.id)
+            .partial_cmp(&(pid(b.domain), b.ts_us, b.id))
+            .expect("trace timestamps are comparable")
+    });
+    let mut out = vec![
+        process_meta(ClockDomain::Wall, "micromoe (wall clock)"),
+        process_meta(ClockDomain::Virtual, "micromoe (virtual clock)"),
+    ];
+    out.extend(events.iter().map(event_json));
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+fn format_value(x: f64) -> String {
+    if x.is_nan() {
+        "NaN".to_string() // valid in the Prometheus text format
+    } else if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Render a [`MetricsHub`] in the Prometheus text exposition format.
+pub fn prometheus(hub: &MetricsHub) -> String {
+    let mut out = String::new();
+    // group samples under one # TYPE header per metric name
+    let mut by_name: BTreeMap<String, (MetricKind, f64)> = BTreeMap::new();
+    for (name, kind, value) in hub.iter() {
+        by_name.insert(name.to_string(), (kind, value));
+    }
+    for (name, (kind, value)) in by_name {
+        let kind = match kind {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+        };
+        out.push_str(&format!("# TYPE micromoe_{name} {kind}\n"));
+        out.push_str(&format!("micromoe_{name} {}\n", format_value(value)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{SpanOutcome, TraceConfig};
+    use crate::stats::DegradationRung;
+
+    fn traced() -> Tracer {
+        let t = Tracer::new(TraceConfig::Wall);
+        t.record(10.0, Span::Solve {
+            step: 0,
+            layer: 1,
+            mode: "compute",
+            rung: DegradationRung::ColdLp,
+            warm: false,
+            pivots: 12,
+            dual_pivots: 0,
+            flips: 3,
+            refactors: 1,
+        });
+        t.record(2.0, Span::Engine {
+            step: 0,
+            layer: 1,
+            worker: 1,
+            outcome: SpanOutcome::Fresh,
+            inflight: 2,
+            pivots: 12,
+        });
+        t.record_at(500.0, 250.0, Span::ServingWindow {
+            index: 0,
+            admitted: 3,
+            shed: 0,
+            deadline_miss: 1,
+        });
+        t
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_and_complete() {
+        let j = chrome_trace(&traced());
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 process metadata + 3 spans
+        assert_eq!(evs.len(), 5);
+        let spans: Vec<&Json> =
+            evs.iter().filter(|e| e.get("ph").unwrap().as_str() == Some("X")).collect();
+        assert_eq!(spans.len(), 3);
+        for s in &spans {
+            assert!(s.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(s.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(s.get("args").is_some());
+        }
+        // the serving window landed on the virtual process
+        let sw = spans
+            .iter()
+            .find(|s| s.get("name").unwrap().as_str() == Some("serving_window"))
+            .unwrap();
+        assert_eq!(sw.get("pid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(sw.path(&["args", "deadline_miss"]).unwrap().as_f64(), Some(1.0));
+        // round-trips through the parser (i.e. no NaN leaked into the text)
+        assert_eq!(Json::parse(&j.to_string_pretty()).unwrap(), j);
+    }
+
+    #[test]
+    fn disabled_tracer_exports_empty_document() {
+        let j = chrome_trace(&Tracer::off());
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.iter().all(|e| e.get("ph").unwrap().as_str() == Some("M")));
+    }
+
+    #[test]
+    fn prometheus_renders_types_and_nan() {
+        let mut hub = MetricsHub::new();
+        hub.set_counter("balancer_steps", 4.0);
+        hub.set_gauge("serving_e2e_p99_us", f64::NAN);
+        let text = prometheus(&hub);
+        assert!(text.contains("# TYPE micromoe_balancer_steps counter\n"));
+        assert!(text.contains("micromoe_balancer_steps 4\n"));
+        assert!(text.contains("# TYPE micromoe_serving_e2e_p99_us gauge\n"));
+        assert!(text.contains("micromoe_serving_e2e_p99_us NaN\n"));
+    }
+}

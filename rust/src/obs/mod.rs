@@ -1,0 +1,32 @@
+//! Observability spine: structured tracing + unified metrics.
+//!
+//! Everything the stack already measures — [`crate::stats::BalancerStats`],
+//! [`crate::stats::EngineStats`], [`crate::stats::DegradationStats`],
+//! [`crate::stats::DecomposeStats`], [`crate::serving::SlaStats`] — is
+//! *aggregate*: totals with no timeline and no per-event attribution. This
+//! module adds the missing event layer and one export surface:
+//!
+//! * [`trace`] — a zero-cost-when-disabled [`Tracer`] recording typed
+//!   spans ([`Span::Solve`], [`Span::Engine`], [`Span::DecomposeRound`],
+//!   [`Span::ServingWindow`]) on either the wall clock or the serving
+//!   tier's virtual µs clock ([`TraceConfig`]);
+//! * [`export`] — Chrome-trace (`chrome://tracing` / Perfetto) JSON and
+//!   Prometheus text exposition;
+//! * [`registry`] — the [`MetricsHub`] folding every stats struct into one
+//!   named-metric namespace with JSON snapshots and per-step diffs.
+//!
+//! The contract threaded through the stack: tracing **observes, never
+//! steers**. A session traced with `TraceConfig::Off` (the default) is
+//! bit-identical to one built before this module existed, and a traced run
+//! produces the same schedules as an untraced one — pinned by
+//! `tests/trace_identity.rs` and the `engine_pipeline` bench's overhead
+//! column. See `ARCHITECTURE.md` §11 for the span taxonomy and the
+//! wall-vs-virtual clock-domain rules.
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use export::{chrome_trace, prometheus};
+pub use registry::{MetricKind, MetricsHub};
+pub use trace::{ClockDomain, Span, SpanOutcome, TraceConfig, TraceEvent, Tracer};

@@ -1,0 +1,232 @@
+//! The [`MetricsHub`]: one named-metric namespace over every stats struct.
+//!
+//! The stack meters itself in four unrelated structs —
+//! [`crate::stats::BalancerStats`] (with its nested degradation and
+//! decompose rollups), [`crate::stats::EngineStats`], and the serving
+//! tier's [`crate::serving::SlaStats`]. The hub folds any subset of them
+//! into one flat `name → value` namespace (Prometheus-safe snake_case
+//! names), so exports ([`super::export::prometheus`]), JSON snapshots, and
+//! per-step diffs all read from a single source.
+//!
+//! Typical per-step use: snapshot the hub, absorb the fresh stats, then
+//! [`MetricsHub::diff`] against the snapshot — counters report their
+//! delta, gauges their new value.
+
+use std::collections::BTreeMap;
+
+use crate::ser::Json;
+use crate::serving::SlaStats;
+use crate::stats::{BalancerStats, EngineStats, LatencyTrack};
+
+/// Prometheus-style metric kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone cumulative count; diffs report the delta.
+    Counter,
+    /// Point-in-time value; diffs report the new value.
+    Gauge,
+}
+
+/// Unified named-metric registry — see the module docs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsHub {
+    metrics: BTreeMap<String, (MetricKind, f64)>,
+}
+
+impl MetricsHub {
+    /// Empty hub.
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    /// Set (or overwrite) a counter.
+    pub fn set_counter(&mut self, name: &str, value: f64) {
+        self.metrics.insert(name.to_string(), (MetricKind::Counter, value));
+    }
+
+    /// Set (or overwrite) a gauge.
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.metrics.insert(name.to_string(), (MetricKind::Gauge, value));
+    }
+
+    /// Current value of a metric.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.metrics.get(name).map(|(_, v)| *v)
+    }
+
+    /// Metrics registered.
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    /// Whether nothing has been registered.
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    /// Iterate `(name, kind, value)` in name order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, MetricKind, f64)> {
+        self.metrics.iter().map(|(k, (kind, v))| (k.as_str(), *kind, *v))
+    }
+
+    /// Fold a balancer's cumulative counters (including its degradation
+    /// ladder and decomposition rollups) under `balancer_*`,
+    /// `degradation_*`, and `decompose_*`.
+    pub fn absorb_balancer(&mut self, b: &BalancerStats) {
+        self.set_counter("balancer_steps", b.steps as f64);
+        self.set_counter("balancer_layers", b.layers as f64);
+        self.set_counter("balancer_warm_layers", b.warm_layers as f64);
+        self.set_counter("balancer_lp_pivots", b.lp_pivots as f64);
+        self.set_counter("balancer_lp_dual_pivots", b.lp_dual_pivots as f64);
+        self.set_counter("balancer_lp_bound_flips", b.lp_bound_flips as f64);
+        self.set_counter("balancer_lp_refactors", b.lp_refactors as f64);
+        self.set_counter("balancer_sched_seconds", b.sched_seconds);
+        self.set_counter("balancer_prep_seconds", b.prep_seconds);
+        self.set_gauge("balancer_max_gpu_load", b.max_gpu_load as f64);
+        let d = &b.degradation;
+        self.set_counter("degradation_warm_lp", d.warm_lp as f64);
+        self.set_counter("degradation_cold_lp", d.cold_lp as f64);
+        self.set_counter("degradation_greedy", d.greedy as f64);
+        self.set_counter("degradation_passthrough", d.passthrough as f64);
+        self.set_counter("degradation_budget_pivots", d.budget_pivots as f64);
+        self.set_counter("degradation_budget_refactors", d.budget_refactors as f64);
+        self.set_counter("degradation_budget_wall", d.budget_wall as f64);
+        self.set_counter("degradation_fallback_excess_sum", d.fallback_excess_sum);
+        self.set_gauge("degradation_lp_rate", d.lp_rate());
+        let dc = &b.decompose;
+        self.set_counter("decompose_solves", dc.solves as f64);
+        self.set_counter("decompose_outer_iters", dc.outer_iters as f64);
+        self.set_counter("decompose_subproblem_pivots", dc.subproblem_pivots as f64);
+        self.set_counter("decompose_blocks_degraded", dc.blocks_degraded as f64);
+        self.set_gauge("decompose_master_gap_mean", dc.mean_gap());
+        self.set_gauge("decompose_master_gap_max", dc.master_gap_max);
+    }
+
+    /// Fold the pipelined engine's counters under `engine_*`.
+    pub fn absorb_engine(&mut self, e: &EngineStats) {
+        self.set_counter("engine_steps", e.steps as f64);
+        self.set_counter("engine_schedules", e.schedules as f64);
+        self.set_counter("engine_spec_issued", e.spec_issued as f64);
+        self.set_counter("engine_spec_hits", e.spec_hits as f64);
+        self.set_counter("engine_spec_misses", e.spec_misses as f64);
+        self.set_counter("engine_hit_repair_pivots", e.hit_repair_pivots as f64);
+        self.set_counter("engine_miss_solve_pivots", e.miss_solve_pivots as f64);
+        self.set_counter("engine_spec_presolve_pivots", e.spec_presolve_pivots as f64);
+        self.set_gauge("engine_hit_rate", e.hit_rate());
+    }
+
+    fn absorb_track(&mut self, prefix: &str, t: &LatencyTrack) {
+        self.set_counter(&format!("{prefix}_count"), t.count() as f64);
+        self.set_gauge(&format!("{prefix}_mean_us"), t.mean());
+        self.set_gauge(&format!("{prefix}_max_us"), t.max());
+        self.set_gauge(&format!("{prefix}_p50_us"), t.p2_p50());
+        self.set_gauge(&format!("{prefix}_p95_us"), t.p2_p95());
+        self.set_gauge(&format!("{prefix}_p99_us"), t.p2_p99());
+    }
+
+    /// Fold the serving tier's SLO accounting under `serving_*`, with the
+    /// four latency tracks exposed as P² quantile gauges (summary-style:
+    /// `serving_e2e_p99_us` etc.; empty tracks read `NaN`, which the JSON
+    /// snapshot maps to `null`).
+    pub fn absorb_sla(&mut self, s: &SlaStats) {
+        self.set_counter("serving_arrived", s.arrived as f64);
+        self.set_counter("serving_served", s.served as f64);
+        self.set_counter("serving_shed", s.shed as f64);
+        self.set_counter("serving_deadline_misses", s.deadline_misses as f64);
+        self.set_counter("serving_windows", s.windows as f64);
+        self.set_counter("serving_empty_windows", s.empty_windows as f64);
+        self.set_gauge("serving_miss_rate", s.miss_rate());
+        self.set_gauge("serving_shed_rate", s.shed_rate());
+        self.absorb_track("serving_queue", &s.queue);
+        self.absorb_track("serving_solve", &s.solve);
+        self.absorb_track("serving_dispatch", &s.dispatch);
+        self.absorb_track("serving_e2e", &s.e2e);
+    }
+
+    /// Full snapshot: one JSON object, `name → value`, non-finite values
+    /// mapped to `null` (the [`Json::num`] guard).
+    pub fn snapshot(&self) -> Json {
+        Json::Obj(self.metrics.iter().map(|(k, (_, v))| (k.clone(), Json::num(*v))).collect())
+    }
+
+    /// What changed since `prev`: counters report `now − before`, gauges
+    /// their new value; unchanged metrics (including still-NaN gauges) are
+    /// omitted, and metrics absent from `prev` count from zero.
+    pub fn diff(&self, prev: &MetricsHub) -> Json {
+        let mut out = BTreeMap::new();
+        for (name, (kind, now)) in &self.metrics {
+            let before = prev.get(name).unwrap_or(0.0);
+            if *now == before || (now.is_nan() && before.is_nan()) {
+                continue;
+            }
+            let value = match kind {
+                MetricKind::Counter => Json::num(now - before),
+                MetricKind::Gauge => Json::num(*now),
+            };
+            out.insert(name.clone(), value);
+        }
+        Json::Obj(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::{DegradationRung, StepStats};
+
+    #[test]
+    fn absorb_balancer_names_every_rollup() {
+        let mut b = BalancerStats::default();
+        let mut step = StepStats { layers: 2, lp_pivots: 9, max_gpu_load: 70, ..Default::default() };
+        step.degradation.record(DegradationRung::Greedy, None, 0.5);
+        b.absorb(&step);
+        let mut hub = MetricsHub::new();
+        hub.absorb_balancer(&b);
+        assert_eq!(hub.get("balancer_steps"), Some(1.0));
+        assert_eq!(hub.get("balancer_lp_pivots"), Some(9.0));
+        assert_eq!(hub.get("degradation_greedy"), Some(1.0));
+        assert_eq!(hub.get("degradation_fallback_excess_sum"), Some(0.5));
+        assert_eq!(hub.get("decompose_solves"), Some(0.0));
+        assert!(!hub.is_empty());
+    }
+
+    #[test]
+    fn absorb_engine_and_sla() {
+        let mut hub = MetricsHub::new();
+        hub.absorb_engine(&EngineStats { spec_hits: 3, spec_misses: 1, ..Default::default() });
+        assert_eq!(hub.get("engine_spec_hits"), Some(3.0));
+        assert_eq!(hub.get("engine_hit_rate"), Some(0.75));
+        let mut sla = SlaStats::default();
+        sla.arrived = 2;
+        sla.e2e.record(120.0);
+        hub.absorb_sla(&sla);
+        assert_eq!(hub.get("serving_arrived"), Some(2.0));
+        assert_eq!(hub.get("serving_e2e_count"), Some(1.0));
+        assert_eq!(hub.get("serving_e2e_max_us"), Some(120.0));
+        // empty queue track: NaN gauge, null in the snapshot
+        assert!(hub.get("serving_queue_p99_us").unwrap().is_nan());
+        let snap = hub.snapshot();
+        assert_eq!(snap.get("serving_queue_p99_us"), Some(&Json::Null));
+        assert_eq!(snap.get("serving_e2e_count"), Some(&Json::Num(1.0)));
+    }
+
+    #[test]
+    fn diff_reports_counter_deltas_and_gauge_values() {
+        let mut before = MetricsHub::new();
+        before.set_counter("balancer_steps", 2.0);
+        before.set_gauge("balancer_max_gpu_load", 50.0);
+        before.set_gauge("serving_e2e_p99_us", f64::NAN);
+        let mut after = before.clone();
+        after.set_counter("balancer_steps", 5.0);
+        after.set_gauge("balancer_max_gpu_load", 80.0);
+        after.set_counter("engine_steps", 1.0);
+        let d = after.diff(&before);
+        assert_eq!(d.get("balancer_steps").unwrap().as_f64(), Some(3.0));
+        assert_eq!(d.get("balancer_max_gpu_load").unwrap().as_f64(), Some(80.0));
+        assert_eq!(d.get("engine_steps").unwrap().as_f64(), Some(1.0));
+        // still-NaN gauge is not noise
+        assert!(d.get("serving_e2e_p99_us").is_none());
+        // no change at all → empty diff
+        assert_eq!(after.diff(&after), Json::Obj(Default::default()));
+    }
+}

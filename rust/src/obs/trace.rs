@@ -1,0 +1,445 @@
+//! The [`Tracer`]: typed span recording behind a zero-cost-when-disabled
+//! handle.
+//!
+//! A `Tracer` is a cheap clonable handle (`Option<Arc<..>>`). Disabled —
+//! the [`TraceConfig::Off`] default — it holds no allocation and every
+//! record call is a branch on a `None`; the schedulers, the engine pool,
+//! and the serving tier can therefore carry one unconditionally (inside
+//! [`crate::scheduler::SchedulerOptions`]) without paying for it. Enabled,
+//! all clones share one event buffer and one span-id counter, so spans
+//! recorded by pool workers survive worker respawn/replay with globally
+//! unique ids.
+//!
+//! # Clock domains
+//!
+//! Each tracer lives on one clock ([`TraceConfig::Wall`] or
+//! [`TraceConfig::Virtual`]):
+//!
+//! * **Wall** — timestamps are µs since tracer creation; [`Tracer::record`]
+//!   places a span so it *ends* now (`ts = now − dur`).
+//! * **Virtual** — timestamps are the serving tier's deterministic µs
+//!   clock, advanced explicitly via [`Tracer::set_virtual_us`];
+//!   [`Tracer::record`] places a span *starting* at the current virtual
+//!   time (wall-measured durations keep their length but carry no virtual
+//!   start of their own), and [`Tracer::record_at`] places a span at an
+//!   explicit virtual interval (what [`crate::serving::MoeServer`] uses
+//!   for its windows).
+//!
+//! Every event remembers which domain stamped it ([`ClockDomain`]), and
+//! the Chrome export keeps the domains on separate process lanes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::stats::DegradationRung;
+
+/// Whether a [`Tracer`] records at all, and on which clock.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceConfig {
+    /// No tracing: recording is a no-op and allocates nothing (default).
+    #[default]
+    Off,
+    /// Record on the wall clock (µs since tracer creation).
+    Wall,
+    /// Record on the serving tier's virtual µs clock
+    /// ([`Tracer::set_virtual_us`]).
+    Virtual,
+}
+
+/// Which clock stamped an event's timestamps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockDomain {
+    /// Wall-clock µs since tracer creation.
+    Wall,
+    /// Serving-tier virtual µs.
+    Virtual,
+}
+
+/// Speculation verdict attribute of an engine emission span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// A speculative pre-solve was judged close enough: warm repair.
+    Hit,
+    /// The pre-solve's forecast drifted: re-solved from scratch.
+    Miss,
+    /// No pre-solve was pending (warmup, or pipeline mode).
+    Fresh,
+}
+
+impl SpanOutcome {
+    /// Attribute string used in exports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanOutcome::Hit => "hit",
+            SpanOutcome::Miss => "miss",
+            SpanOutcome::Fresh => "fresh",
+        }
+    }
+}
+
+/// Export name of a degradation rung (span attribute vocabulary).
+pub fn rung_name(rung: DegradationRung) -> &'static str {
+    match rung {
+        DegradationRung::WarmLp => "warm-lp",
+        DegradationRung::ColdLp => "cold-lp",
+        DegradationRung::Greedy => "greedy",
+        DegradationRung::Passthrough => "passthrough",
+    }
+}
+
+/// Typed span payloads — the trace vocabulary of the whole stack.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Span {
+    /// One committed per-layer schedule solve (LP / greedy / passthrough).
+    /// Emitted once per committed plan — speculative pre-solves and
+    /// non-committing probes are excluded, so solve-span rung counts match
+    /// [`crate::stats::DegradationStats`] exactly.
+    Solve {
+        /// Commit-step index of the producing scheduler.
+        step: usize,
+        /// MoE layer the schedule belongs to.
+        layer: usize,
+        /// Schedule mode name ([`crate::scheduler::ScheduleMode::name`]).
+        mode: &'static str,
+        /// Degradation-ladder rung that produced the plan.
+        rung: DegradationRung,
+        /// Whether the solve took the warm-start path.
+        warm: bool,
+        /// Primal simplex pivots.
+        pivots: usize,
+        /// Dual simplex pivots (warm-repair work).
+        dual_pivots: usize,
+        /// Nonbasic bound flips.
+        flips: usize,
+        /// Basis refactorizations.
+        refactors: usize,
+    },
+    /// One in-order schedule emission by the pipelined engine. Emitted
+    /// once per emitted layer, so engine-span counts match
+    /// [`crate::stats::EngineStats::schedules`] and the hit/miss tags
+    /// match its speculation counters.
+    Engine {
+        /// Engine step index.
+        step: usize,
+        /// Emitted layer.
+        layer: usize,
+        /// Pool worker pinned to the layer (`layer % workers`).
+        worker: usize,
+        /// Speculation verdict for this layer's commit.
+        outcome: SpanOutcome,
+        /// Layers submitted but not yet emitted at emission time.
+        inflight: usize,
+        /// LP pivots the commit spent on the critical path.
+        pivots: usize,
+    },
+    /// One outer round of one block of a Dantzig–Wolfe decomposed solve.
+    DecomposeRound {
+        /// Outer master/subproblem iteration (0-based).
+        round: usize,
+        /// Node-block index.
+        block: usize,
+        /// Master coordination gap after this round.
+        gap: f64,
+        /// The block's capacity-feedback weight κ_b after this round.
+        kappa: f64,
+    },
+    /// One formed serving batching window (including windows emptied by
+    /// admission shedding), so window-span counts match
+    /// [`crate::serving::SlaStats::windows`].
+    ServingWindow {
+        /// Window index in arrival order.
+        index: usize,
+        /// Requests admitted into the window's batch.
+        admitted: usize,
+        /// Requests shed while forming the batch.
+        shed: usize,
+        /// Served requests that missed their deadline.
+        deadline_miss: usize,
+    },
+    /// A pool worker died and was respawned (replayed jobs re-solve under
+    /// fresh span ids; this marks the discontinuity).
+    WorkerRespawn {
+        /// Worker index.
+        worker: usize,
+        /// Consecutive respawn attempt (1-based).
+        attempt: usize,
+    },
+}
+
+impl Span {
+    /// Export name of the span kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Span::Solve { .. } => "solve",
+            Span::Engine { .. } => "engine",
+            Span::DecomposeRound { .. } => "decompose_round",
+            Span::ServingWindow { .. } => "serving_window",
+            Span::WorkerRespawn { .. } => "worker_respawn",
+        }
+    }
+
+    /// Chrome-trace lane (`tid`) the span renders on: solves by layer,
+    /// engine emissions by worker, decompose rounds by block, serving and
+    /// respawn markers on their own lanes.
+    pub fn lane(&self) -> u64 {
+        match self {
+            Span::Solve { layer, .. } => *layer as u64,
+            Span::Engine { worker, .. } => 100 + *worker as u64,
+            Span::DecomposeRound { block, .. } => 200 + *block as u64,
+            Span::ServingWindow { .. } => 300,
+            Span::WorkerRespawn { worker, .. } => 100 + *worker as u64,
+        }
+    }
+}
+
+/// One recorded span instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Globally unique span id (monotone across clones and respawns).
+    pub id: u64,
+    /// Start timestamp, µs in the event's clock domain.
+    pub ts_us: f64,
+    /// Duration, µs.
+    pub dur_us: f64,
+    /// Clock that stamped `ts_us`.
+    pub domain: ClockDomain,
+    /// Typed payload.
+    pub span: Span,
+}
+
+#[derive(Debug)]
+struct TracerInner {
+    clock: ClockDomain,
+    epoch: Instant,
+    /// Current virtual time, stored as f64 bits (µs).
+    virtual_us: AtomicU64,
+    next_id: AtomicU64,
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+/// Shared tracing handle — see the module docs. `Default` is disabled;
+/// clones of one enabled tracer share the same buffer and id counter.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    inner: Option<Arc<TracerInner>>,
+}
+
+/// Two tracers are equal when both are disabled or both are clones of the
+/// same enabled tracer — so [`crate::scheduler::SchedulerOptions`] keeps
+/// its derived `PartialEq` (and `default() == default()` holds).
+impl PartialEq for Tracer {
+    fn eq(&self, other: &Self) -> bool {
+        match (&self.inner, &other.inner) {
+            (None, None) => true,
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            _ => false,
+        }
+    }
+}
+
+impl Tracer {
+    /// Build a tracer; [`TraceConfig::Off`] yields the no-op handle.
+    pub fn new(cfg: TraceConfig) -> Tracer {
+        let clock = match cfg {
+            TraceConfig::Off => return Tracer { inner: None },
+            TraceConfig::Wall => ClockDomain::Wall,
+            TraceConfig::Virtual => ClockDomain::Virtual,
+        };
+        Tracer {
+            inner: Some(Arc::new(TracerInner {
+                clock,
+                epoch: Instant::now(),
+                virtual_us: AtomicU64::new(0f64.to_bits()),
+                next_id: AtomicU64::new(0),
+                events: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    /// The disabled no-op handle (same as `Tracer::default()`).
+    pub fn off() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// Whether recording does anything.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The config this tracer was built with.
+    pub fn config(&self) -> TraceConfig {
+        match &self.inner {
+            None => TraceConfig::Off,
+            Some(i) => match i.clock {
+                ClockDomain::Wall => TraceConfig::Wall,
+                ClockDomain::Virtual => TraceConfig::Virtual,
+            },
+        }
+    }
+
+    /// Advance the virtual clock (serving tier); no-op when disabled.
+    pub fn set_virtual_us(&self, us: f64) {
+        if let Some(i) = &self.inner {
+            i.virtual_us.store(us.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Current virtual time, µs (0 when disabled or never set).
+    pub fn virtual_us(&self) -> f64 {
+        match &self.inner {
+            None => 0.0,
+            Some(i) => f64::from_bits(i.virtual_us.load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Record a span of `dur_us` µs ending now (wall domain) or starting
+    /// at the current virtual time (virtual domain). No-op when disabled.
+    pub fn record(&self, dur_us: f64, span: Span) {
+        let Some(i) = &self.inner else { return };
+        let (ts, domain) = match i.clock {
+            ClockDomain::Wall => {
+                let now = i.epoch.elapsed().as_secs_f64() * 1e6;
+                ((now - dur_us).max(0.0), ClockDomain::Wall)
+            }
+            ClockDomain::Virtual => {
+                (f64::from_bits(i.virtual_us.load(Ordering::Relaxed)), ClockDomain::Virtual)
+            }
+        };
+        self.push(i, ts, dur_us, domain, span);
+    }
+
+    /// Record a span at an explicit virtual interval, whatever the
+    /// tracer's own clock — the serving tier's windows always live on the
+    /// virtual timeline. No-op when disabled.
+    pub fn record_at(&self, ts_us: f64, dur_us: f64, span: Span) {
+        let Some(i) = &self.inner else { return };
+        self.push(i, ts_us, dur_us, ClockDomain::Virtual, span);
+    }
+
+    fn push(&self, i: &TracerInner, ts_us: f64, dur_us: f64, domain: ClockDomain, span: Span) {
+        let id = i.next_id.fetch_add(1, Ordering::Relaxed);
+        let ev = TraceEvent { id, ts_us, dur_us, domain, span };
+        i.events.lock().expect("trace buffer poisoned").push(ev);
+    }
+
+    /// Snapshot of every recorded event (empty when disabled). Order is
+    /// buffer-arrival order; concurrent recorders interleave, so assert on
+    /// span *sets*, not sequence.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(i) => i.events.lock().expect("trace buffer poisoned").clone(),
+        }
+    }
+
+    /// Recorded event count without cloning the buffer.
+    pub fn event_count(&self) -> usize {
+        match &self.inner {
+            None => 0,
+            Some(i) => i.events.lock().expect("trace buffer poisoned").len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solve_span(step: usize) -> Span {
+        Span::Solve {
+            step,
+            layer: 0,
+            mode: "compute",
+            rung: DegradationRung::WarmLp,
+            warm: true,
+            pivots: 3,
+            dual_pivots: 2,
+            flips: 1,
+            refactors: 0,
+        }
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert_and_equal_to_default() {
+        let t = Tracer::off();
+        assert!(!t.enabled());
+        assert_eq!(t.config(), TraceConfig::Off);
+        t.record(5.0, solve_span(0));
+        t.record_at(1.0, 2.0, solve_span(1));
+        t.set_virtual_us(99.0);
+        assert_eq!(t.event_count(), 0);
+        assert!(t.events().is_empty());
+        assert_eq!(t, Tracer::default());
+        assert_eq!(Tracer::new(TraceConfig::Off), Tracer::default());
+    }
+
+    #[test]
+    fn clones_share_buffer_and_ids() {
+        let t = Tracer::new(TraceConfig::Wall);
+        let c = t.clone();
+        assert_eq!(t, c, "clones compare equal (same buffer)");
+        assert_ne!(t, Tracer::new(TraceConfig::Wall), "distinct tracers differ");
+        t.record(1.0, solve_span(0));
+        c.record(1.0, solve_span(1));
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].id, 0);
+        assert_eq!(evs[1].id, 1);
+        assert!(evs.iter().all(|e| e.domain == ClockDomain::Wall));
+    }
+
+    #[test]
+    fn wall_spans_end_at_record_time() {
+        let t = Tracer::new(TraceConfig::Wall);
+        t.record(1e12, solve_span(0)); // longer than the tracer has lived
+        let e = &t.events()[0];
+        assert_eq!(e.ts_us, 0.0, "start clamps to the epoch");
+        assert_eq!(e.dur_us, 1e12);
+    }
+
+    #[test]
+    fn virtual_clock_stamps_records() {
+        let t = Tracer::new(TraceConfig::Virtual);
+        t.set_virtual_us(1500.0);
+        assert_eq!(t.virtual_us(), 1500.0);
+        t.record(40.0, solve_span(0));
+        t.record_at(2000.0, 500.0, Span::ServingWindow {
+            index: 0,
+            admitted: 4,
+            shed: 1,
+            deadline_miss: 0,
+        });
+        let evs = t.events();
+        assert_eq!(evs[0].ts_us, 1500.0);
+        assert_eq!(evs[0].domain, ClockDomain::Virtual);
+        assert_eq!(evs[1].ts_us, 2000.0);
+        assert_eq!(evs[1].dur_us, 500.0);
+    }
+
+    #[test]
+    fn span_names_and_lanes() {
+        assert_eq!(solve_span(0).name(), "solve");
+        assert_eq!(solve_span(0).lane(), 0);
+        let e = Span::Engine {
+            step: 0,
+            layer: 3,
+            worker: 1,
+            outcome: SpanOutcome::Hit,
+            inflight: 2,
+            pivots: 7,
+        };
+        assert_eq!(e.name(), "engine");
+        assert_eq!(e.lane(), 101);
+        assert_eq!(SpanOutcome::Miss.name(), "miss");
+        assert_eq!(rung_name(DegradationRung::Passthrough), "passthrough");
+        let d = Span::DecomposeRound { round: 0, block: 2, gap: 0.01, kappa: 1.0 };
+        assert_eq!(d.lane(), 202);
+        let w = Span::ServingWindow { index: 0, admitted: 0, shed: 0, deadline_miss: 0 };
+        assert_eq!(w.name(), "serving_window");
+        assert_eq!(w.lane(), 300);
+        let r = Span::WorkerRespawn { worker: 2, attempt: 1 };
+        assert_eq!(r.name(), "worker_respawn");
+        assert_eq!(r.lane(), 102);
+    }
+}

@@ -241,12 +241,17 @@ impl DecomposedState {
     /// Run the two-level solve for one micro-batch. `use_warm` gates the
     /// *first* round's warm start (later rounds always repair from the
     /// previous round's basis — same state on every device, so still
-    /// deterministic).
+    /// deterministic). `trace` records one
+    /// [`crate::obs::Span::DecomposeRound`] per round per block (the
+    /// scheduler passes the disabled tracer for non-committing solves);
+    /// tracing observes, never steers — the iteration is identical either
+    /// way.
     pub(crate) fn solve(
         &mut self,
         placement: &Placement,
         loads: &LoadMatrix,
         use_warm: bool,
+        trace: &crate::obs::Tracer,
     ) -> DecomposedSolve {
         let expert_loads = loads.expert_loads();
         let lower_bound = fallback::lp_lower_bound(placement, loads);
@@ -295,14 +300,11 @@ impl DecomposedState {
                 });
             }
             let gap = if lower_bound > 0.0 { (t_max - lower_bound) / lower_bound } else { 0.0 };
-            if gap <= self.tol {
-                break;
-            }
-            if (prev_t - t_max).abs() <= self.tol * t_max.max(1.0) {
-                break; // stalled: more rounds would retrace this iterate
-            }
-            prev_t = t_max;
-            // capacity feedback: blocks that balanced poorly shrink
+            // capacity feedback: blocks that balanced poorly shrink. Runs
+            // before the convergence checks so the final round's κ is the
+            // same value the per-round trace spans report (κ is only read
+            // by the *next* round's allocate, so ordering is behaviorally
+            // neutral).
             for (i, o) in outcomes.iter().enumerate() {
                 let cap = self.blocks[i].num_gpus as f64;
                 kappa[i] = if o.t > 1e-12 {
@@ -310,7 +312,23 @@ impl DecomposedState {
                 } else {
                     cap
                 };
+                trace.record(
+                    0.0,
+                    crate::obs::Span::DecomposeRound {
+                        round: outer,
+                        block: i,
+                        gap,
+                        kappa: kappa[i],
+                    },
+                );
             }
+            if gap <= self.tol {
+                break;
+            }
+            if (prev_t - t_max).abs() <= self.tol * t_max.max(1.0) {
+                break; // stalled: more rounds would retrace this iterate
+            }
+            prev_t = t_max;
         }
 
         let kept = best.expect("max_outer_iters >= 1 ran at least one round");

@@ -229,6 +229,9 @@ impl MicroEpScheduler {
             return self.schedule_decomposed(loads, use_warm, commit);
         }
         let t0 = Instant::now();
+        // the commit step this solve belongs to (self.step advances in the
+        // fault block below; spans must report the pre-increment index)
+        let span_step = self.step;
 
         // ---- rhs + bound updates for this micro-batch ----
         let mut updates: Vec<(usize, f64)> = Vec::with_capacity(
@@ -406,7 +409,30 @@ impl MicroEpScheduler {
             sched.stats.fallback_excess = fallback::excess_over_bound(sched.stats.max_gpu_load, lb);
         }
         sched.stats.solve_ns = t0.elapsed().as_nanos() as u64;
+        if commit {
+            self.emit_solve_span(span_step, &sched.stats);
+        }
         sched
+    }
+
+    /// Record one committed solve as a trace span (no-op when tracing is
+    /// off). Gated on `commit` by the callers so solve-span rung counts
+    /// match [`crate::stats::DegradationStats`] exactly.
+    fn emit_solve_span(&self, step: usize, stats: &ScheduleStats) {
+        self.opts.trace.record(
+            stats.solve_ns as f64 / 1_000.0,
+            crate::obs::Span::Solve {
+                step,
+                layer: self.layer,
+                mode: self.opts.mode.name(),
+                rung: stats.rung,
+                warm: stats.warm,
+                pivots: stats.lp_iterations,
+                dual_pivots: stats.lp_dual_pivots,
+                flips: stats.lp_bound_flips,
+                refactors: stats.lp_refactors,
+            },
+        );
     }
 
     /// Decomposed-mode solve path ([`ScheduleMode::Decomposed`]): the
@@ -415,6 +441,11 @@ impl MicroEpScheduler {
     /// [`Self::schedule_inner`].
     fn schedule_decomposed(&mut self, loads: &LoadMatrix, use_warm: bool, commit: bool) -> Schedule {
         let t0 = Instant::now();
+        let span_step = self.step;
+        // decompose rounds are only traced for committed solves, matching
+        // the solve-span gating (speculative probes leave no spans)
+        let round_trace =
+            if commit { self.opts.trace.clone() } else { crate::obs::Tracer::off() };
 
         // ---- fault injection (chaos harness; `faults` is None outside it) ----
         let fault = if commit {
@@ -449,7 +480,7 @@ impl MicroEpScheduler {
             if starved {
                 decomp.set_budget(SolveBudget::with_max_pivots(0));
             }
-            let s = decomp.solve(&self.placement, loads, use_warm);
+            let s = decomp.solve(&self.placement, loads, use_warm, &round_trace);
             if starved {
                 decomp.set_budget(self.opts.budget);
             }
@@ -506,6 +537,9 @@ impl MicroEpScheduler {
             sched.stats.fallback_excess = fallback::excess_over_bound(sched.stats.max_gpu_load, lb);
         }
         sched.stats.solve_ns = t0.elapsed().as_nanos() as u64;
+        if commit {
+            self.emit_solve_span(span_step, &sched.stats);
+        }
         sched
     }
 }

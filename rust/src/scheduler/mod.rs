@@ -217,6 +217,19 @@ pub enum ScheduleMode {
     },
 }
 
+impl ScheduleMode {
+    /// Stable mode name used as a trace-span attribute (and matching the
+    /// config vocabulary in [`crate::config`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleMode::Compute => "compute",
+            ScheduleMode::CommAware { .. } => "comm-aware",
+            ScheduleMode::TopoAware { .. } => "topo-aware",
+            ScheduleMode::Decomposed { .. } => "decomposed",
+        }
+    }
+}
+
 /// Scheduler options (each maps to a Fig. 11 ablation arm).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SchedulerOptions {
@@ -252,6 +265,13 @@ pub struct SchedulerOptions {
     /// — the chaos-test harness. `None` (the default, and the only value
     /// the config round-trip produces) injects nothing and adds no work.
     pub faults: Option<std::sync::Arc<crate::faults::FaultPlan>>,
+    /// Structured-trace handle every consumer of these options records
+    /// into ([`crate::obs::Tracer`]). Disabled by default (and the only
+    /// value the config round-trip produces): recording is then a no-op,
+    /// pinned bit-identical to an untraced build by
+    /// `tests/trace_identity.rs`. Tracing observes, never steers — it must
+    /// not change any schedule.
+    pub trace: crate::obs::Tracer,
 }
 
 impl Default for SchedulerOptions {
@@ -265,6 +285,7 @@ impl Default for SchedulerOptions {
             engine: crate::engine::EngineMode::Barrier,
             budget: crate::lp::SolveBudget::unlimited(),
             faults: None,
+            trace: crate::obs::Tracer::default(),
         }
     }
 }

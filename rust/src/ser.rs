@@ -42,6 +42,19 @@ impl Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Number with the crate-wide non-finite guard: NaN/±inf become
+    /// `null`. JSON has no non-finite numbers — a raw `Json::Num(NaN)`
+    /// would serialize as the invalid literal `NaN` — and the stats
+    /// substrate uses NaN as its "no samples" sentinel, so every emitter
+    /// of possibly-empty statistics must construct numbers through this.
+    pub fn num(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Num(x)
+        } else {
+            Json::Null
+        }
+    }
+
     /// Array of numbers from f64s.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
@@ -465,6 +478,16 @@ mod tests {
     fn numbers_integral_formatting() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.25).to_string(), "3.25");
+    }
+
+    #[test]
+    fn num_guards_non_finite() {
+        assert_eq!(Json::num(2.5), Json::Num(2.5));
+        assert_eq!(Json::num(f64::NAN), Json::Null);
+        assert_eq!(Json::num(f64::INFINITY), Json::Null);
+        assert_eq!(Json::num(f64::NEG_INFINITY), Json::Null);
+        // the guarded form always serializes to valid JSON
+        assert_eq!(Json::num(f64::NAN).to_string(), "null");
     }
 
     #[test]

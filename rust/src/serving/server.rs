@@ -168,6 +168,11 @@ impl MoeServer {
         );
         let n = reqs.len();
         self.sla.arrived += n as u64;
+        // clone of the session's tracing handle (shared buffer): window
+        // spans land on the virtual timeline via record_at, and the clock
+        // is advanced so solve spans from a Virtual-clock tracer stamp at
+        // the window close. Disabled tracers make all of this a no-op.
+        let obs = self.session.tracer().clone();
         let mut trace = ServingTrace::default();
         let mut queue: VecDeque<usize> = VecDeque::new();
         let mut i = 0usize;
@@ -220,6 +225,7 @@ impl MoeServer {
             self.sla.windows += 1;
             let index = self.windows;
             self.windows += 1;
+            obs.set_virtual_us(close_us);
             let (tokens, gpu_compute, routes, solve_us, dispatch_us) = if batch.is_empty() {
                 self.sla.empty_windows += 1;
                 (0u64, Vec::new(), Vec::new(), 0.0, 0.0)
@@ -246,10 +252,23 @@ impl MoeServer {
                 (tokens, plan.gpu_compute.clone(), plan.routes.clone(), solve_us, dispatch_us)
             };
             let service_us = solve_us + dispatch_us;
+            let mut misses = 0usize;
             for &j in &batch {
                 let wait = close_us - reqs[j].arrival_us;
-                self.sla.record_served(wait, solve_us, dispatch_us, self.cfg.slo_us);
+                if self.sla.record_served(wait, solve_us, dispatch_us, self.cfg.slo_us) {
+                    misses += 1;
+                }
             }
+            obs.record_at(
+                open_us,
+                (close_us - open_us) + service_us,
+                crate::obs::Span::ServingWindow {
+                    index: index as usize,
+                    admitted: batch.len(),
+                    shed: shed.len(),
+                    deadline_miss: misses,
+                },
+            );
             trace.windows.push(WindowRecord {
                 index,
                 open_us,

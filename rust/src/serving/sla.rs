@@ -91,14 +91,8 @@ impl SlaStats {
     /// counters plus exact and P² p50/p95/p99 for every latency component.
     pub fn to_json(&self) -> Json {
         fn track(t: &LatencyTrack) -> Json {
-            fn num(x: f64) -> Json {
-                // JSON has no NaN; empty tracks report null
-                if x.is_nan() {
-                    Json::Null
-                } else {
-                    Json::Num(x)
-                }
-            }
+            // JSON has no NaN; empty tracks report null (crate-wide guard)
+            let num = Json::num;
             Json::obj(vec![
                 ("count", Json::Num(t.count() as f64)),
                 ("mean_us", num(t.mean())),

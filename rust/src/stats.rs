@@ -23,9 +23,23 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Summarize a non-empty sample.
+    /// Summarize a sample. An empty sample yields the stats-wide empty
+    /// sentinel — `n == 0` with every moment `NaN`, the
+    /// [`LatencyTrack::max`] convention — rather than panicking; JSON
+    /// emitters route the fields through [`crate::ser::Json::num`], which
+    /// maps non-finite to `null`.
     pub fn of(xs: &[f64]) -> Summary {
-        assert!(!xs.is_empty(), "summary of empty sample");
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                p50: f64::NAN,
+                p95: f64::NAN,
+                max: f64::NAN,
+            };
+        }
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
@@ -43,10 +57,14 @@ impl Summary {
     }
 }
 
-/// Percentile of an already-sorted slice (nearest-rank with interpolation).
+/// Percentile of an already-sorted slice (nearest-rank with
+/// interpolation); `NaN` on an empty slice (the stats-wide empty-sample
+/// sentinel, like [`Summary::of`] and [`LatencyTrack::max`]).
 pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
     assert!((0.0..=1.0).contains(&q));
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -197,13 +215,32 @@ impl P2Quantile {
     }
 }
 
-/// Latency accumulator used by the serving tier's SLO accounting: exact
-/// samples (kept for true percentiles and conservation checks) alongside
-/// P² streaming estimators for p50/p95/p99, so reports can show both the
-/// ground truth and what an O(1)-memory production meter would have said.
+/// splitmix64 finalizer — the stateless hash behind the reservoir's
+/// Algorithm R replacement index, so sampling needs no carried RNG state
+/// (the track keeps its derived `PartialEq`, and long serving runs stay
+/// bit-reproducible across runs and worker counts).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Latency accumulator used by the serving tier's SLO accounting: a
+/// bounded reservoir of raw samples (exact while the stream fits under the
+/// cap — true percentiles and conservation checks; a deterministic uniform
+/// reservoir past it, so unbounded serving runs can't grow memory without
+/// bound) alongside P² streaming estimators for p50/p95/p99, so reports
+/// can show both the ground truth and what an O(1)-memory production meter
+/// would have said.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LatencyTrack {
     samples: Vec<f64>,
+    /// Reservoir capacity (samples kept at most).
+    cap: usize,
+    /// Samples ever recorded (drives count/mean; `samples` holds at most
+    /// `cap` of them).
+    seen: u64,
     sum: f64,
     max: f64,
     p2_50: P2Quantile,
@@ -218,10 +255,27 @@ impl Default for LatencyTrack {
 }
 
 impl LatencyTrack {
-    /// Empty track.
+    /// Default reservoir capacity: large enough that every existing bench
+    /// and test keeps exact quantiles, small enough to bound a week-long
+    /// serving run to ~512 KiB of samples per track.
+    pub const DEFAULT_RESERVOIR: usize = 65_536;
+
+    /// Empty track with the default reservoir capacity.
     pub fn new() -> Self {
+        LatencyTrack::with_capacity(Self::DEFAULT_RESERVOIR)
+    }
+
+    /// Empty track keeping at most `cap` raw samples (`cap > 0`). The
+    /// moment counters ([`LatencyTrack::count`], [`LatencyTrack::mean`],
+    /// [`LatencyTrack::max`]) and the P² estimators always cover the full
+    /// stream; only [`LatencyTrack::exact`] degrades to a reservoir
+    /// estimate once the stream outgrows the cap.
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0, "reservoir needs room for at least one sample");
         LatencyTrack {
             samples: Vec::new(),
+            cap,
+            seen: 0,
             sum: 0.0,
             // NaN, not 0.0: an empty track has no largest sample, and a
             // fabricated zero would read as a real zero-latency maximum in
@@ -233,6 +287,11 @@ impl LatencyTrack {
         }
     }
 
+    /// Reservoir capacity this track was built with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
     /// Record one latency sample (any unit; the serving tier uses µs).
     pub fn record(&mut self, x: f64) {
         self.sum += x;
@@ -242,25 +301,36 @@ impl LatencyTrack {
         self.p2_50.observe(x);
         self.p2_95.observe(x);
         self.p2_99.observe(x);
-        self.samples.push(x);
+        // Vitter's Algorithm R, with the replacement index drawn from a
+        // stateless splitmix64 hash of the sample ordinal: sample i
+        // replaces slot j = hash(i) mod (i+1) iff j < cap.
+        if (self.seen as usize) < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = splitmix64(self.seen) % (self.seen + 1);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+        self.seen += 1;
     }
 
-    /// Samples recorded.
+    /// Samples recorded over the whole stream (not just those retained).
     pub fn count(&self) -> usize {
-        self.samples.len()
+        self.seen as usize
     }
 
     /// Whether nothing has been recorded.
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.seen == 0
     }
 
-    /// Mean sample (`NaN` when empty).
+    /// Mean over the whole stream (`NaN` when empty).
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.seen == 0 {
             f64::NAN
         } else {
-            self.sum / self.samples.len() as f64
+            self.sum / self.seen as f64
         }
     }
 
@@ -270,7 +340,11 @@ impl LatencyTrack {
         self.max
     }
 
-    /// Exact interpolated quantile `q` in [0, 1] (`NaN` when empty).
+    /// Interpolated quantile `q` in [0, 1] over the retained samples
+    /// (`NaN` when empty). Exact while the stream fits in the reservoir
+    /// (`count() <= capacity()`); past the cap it is the quantile of a
+    /// uniform sample of the stream — an unbiased estimate, no longer the
+    /// exact order statistic.
     pub fn exact(&self, q: f64) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -295,7 +369,8 @@ impl LatencyTrack {
         self.p2_99.estimate()
     }
 
-    /// Raw samples in arrival order.
+    /// Retained raw samples: the full stream in arrival order while under
+    /// the reservoir cap, a uniform reservoir of it past the cap.
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
@@ -972,5 +1047,117 @@ mod tests {
     fn imbalance_of_uniform_is_one() {
         assert!((imbalance_ratio(&[4.0, 4.0, 4.0]) - 1.0).abs() < 1e-12);
         assert!((imbalance_ratio(&[8.0, 0.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_and_percentile_use_nan_sentinel() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        for v in [s.mean, s.std, s.min, s.p50, s.p95, s.max] {
+            assert!(v.is_nan(), "empty-summary moments are the NaN sentinel");
+        }
+        assert!(percentile(&[], 0.5).is_nan());
+        assert!(percentile(&[], 0.0).is_nan());
+        // the q-range contract still holds on empty input
+        assert!(std::panic::catch_unwind(|| percentile(&[], 1.5)).is_err());
+    }
+
+    #[test]
+    fn reservoir_bounds_samples_but_not_the_moments() {
+        let mut t = LatencyTrack::with_capacity(64);
+        assert_eq!(t.capacity(), 64);
+        for i in 0..1000 {
+            t.record(i as f64);
+        }
+        assert_eq!(t.samples().len(), 64, "reservoir caps retained samples");
+        assert_eq!(t.count(), 1000, "count covers the whole stream");
+        assert_eq!(t.max(), 999.0);
+        assert!((t.mean() - 499.5).abs() < 1e-9, "mean covers the whole stream");
+        // the reservoir quantile still estimates the stream's median
+        let est = t.exact(0.5);
+        assert!((est - 499.5).abs() < 150.0, "reservoir median far off: {est}");
+        // P² markers are unaffected by the reservoir
+        assert!((t.p2_p50() - 500.0).abs() < 50.0, "p2 p50: {}", t.p2_p50());
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_and_exact_under_cap() {
+        let fill = |cap: usize| {
+            let mut t = LatencyTrack::with_capacity(cap);
+            for i in 0..300 {
+                t.record(((i * 7919) % 1000) as f64);
+            }
+            t
+        };
+        // same stream, same cap → bit-identical tracks (derived PartialEq)
+        assert_eq!(fill(128), fill(128));
+        // under the cap the track is the exact stream in arrival order
+        let exact = fill(512);
+        assert_eq!(exact.samples().len(), 300);
+        assert_eq!(exact.samples()[0], 0.0);
+        assert_eq!(exact.count(), 300);
+    }
+
+    // The P² edge-case goldens below are the Python reference's outputs
+    // (python/tools/serving_reference.py, P2Quantile/percentile): each
+    // expected value was produced by feeding the identical stream to the
+    // transliterated estimator. Keep them in sync with that file.
+
+    fn p2_over(stream: &[f64], p: f64) -> f64 {
+        let mut q = P2Quantile::new(p);
+        for &x in stream {
+            q.observe(x);
+        }
+        q.estimate()
+    }
+
+    #[test]
+    fn p2_under_five_observations_matches_exact_percentile() {
+        // fewer than 5 observations: the warmup buffer answers exactly
+        let stream = [7.0, 1.0, 4.0];
+        // reference: p2=4.0, 6.699999999999999, 6.9399999999999995
+        assert!((p2_over(&stream, 0.50) - 4.0).abs() < 1e-12);
+        assert!((p2_over(&stream, 0.95) - 6.699999999999999).abs() < 1e-12);
+        assert!((p2_over(&stream, 0.99) - 6.9399999999999995).abs() < 1e-12);
+        let mut sorted = stream.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.5, 0.95, 0.99] {
+            assert!((p2_over(&stream, p) - percentile(&sorted, p)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn p2_duplicate_heavy_stream_matches_reference() {
+        // 90% duplicates of 5.0 with a 10% spread — marker collisions
+        // stress the parabolic/linear update's monotonicity guard
+        let stream: Vec<f64> = (0..500)
+            .map(|i| if i % 10 != 0 { 5.0 } else { (i % 100) as f64 })
+            .collect();
+        // reference: p2 = 5.0003071711622455 / 41.67689047416763 /
+        // 84.07637171085906
+        assert!((p2_over(&stream, 0.50) - 5.0003071711622455).abs() < 1e-9);
+        assert!((p2_over(&stream, 0.95) - 41.67689047416763).abs() < 1e-9);
+        assert!((p2_over(&stream, 0.99) - 84.07637171085906).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p2_adversarial_monotone_streams_match_reference() {
+        // sorted input is the estimator's worst case: every observation
+        // lands in the top cell and drags the desired positions
+        let up: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+        let down: Vec<f64> = (1..=200).rev().map(|i| i as f64).collect();
+        // reference (up): p2 = 100.0 / 190.0 / 197.0
+        assert!((p2_over(&up, 0.50) - 100.0).abs() < 1e-9);
+        assert!((p2_over(&up, 0.95) - 190.0).abs() < 1e-9);
+        assert!((p2_over(&up, 0.99) - 197.0).abs() < 1e-9);
+        // reference (down): p2 = 101.0 / 191.0 / 198.0
+        assert!((p2_over(&down, 0.50) - 101.0).abs() < 1e-9);
+        assert!((p2_over(&down, 0.95) - 191.0).abs() < 1e-9);
+        assert!((p2_over(&down, 0.99) - 198.0).abs() < 1e-9);
+        // and both stay within a few percent of the exact quantiles
+        for (p, want) in [(0.50, 100.5), (0.95, 190.05), (0.99, 198.01)] {
+            assert!((p2_over(&up, p) - want).abs() / want < 0.05);
+            assert!((p2_over(&down, p) - want).abs() / want < 0.05);
+        }
     }
 }

@@ -102,6 +102,10 @@ pub struct Trainer {
     /// adds forecast-driven pre-solves between rounds, `--engine barrier`
     /// keeps the round-barrier fan-out for ablation.
     pub engine_mode: EngineMode,
+    /// Span tracer threaded into the scheduling session (off — zero-cost —
+    /// by default; `micromoe train --trace <path>` installs a Wall-clock
+    /// tracer and exports the recorded spans as Chrome-trace JSON).
+    pub tracer: crate::obs::Tracer,
 }
 
 impl Trainer {
@@ -140,6 +144,7 @@ impl Trainer {
             corpus,
             dp_virtual: 8,
             engine_mode: EngineMode::pipeline(),
+            tracer: crate::obs::Tracer::off(),
         })
     }
 
@@ -196,6 +201,7 @@ impl Trainer {
             .topology(topo.clone())
             .placement(placement)
             .engine(self.engine_mode)
+            .tracer(self.tracer.clone())
             .layers(self.layers)
             .build()
             .map_err(|e| anyhow!("scheduling session: {e}"))?;

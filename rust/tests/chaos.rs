@@ -260,6 +260,128 @@ fn serving_survives_worker_panics_and_budget_starvation_mid_stream() {
     assert!(st.cold_lp >= 2, "initial cold solve + post-respawn re-solve: {st:?}");
 }
 
+/// ISSUE-9 acceptance: on a seeded chaos run, the recorded span set is the
+/// exact ledger of the stats structs — solve spans bucketed by rung
+/// reproduce `DegradationStats`, engine spans count every in-order
+/// emission, and respawn markers count every injected worker panic.
+#[test]
+fn seeded_chaos_trace_reconciles_with_stats() {
+    use micromoe::obs::{Span, TraceConfig, Tracer};
+    use micromoe::stats::DegradationRung;
+
+    const STEPS: usize = 20;
+    const LAYERS: usize = 4;
+    let seed = fault_seed(0x0C4A06);
+    let plan = FaultPlan::from_seed(seed, STEPS, LAYERS, 0.3);
+    let worker_faults =
+        plan.faults().iter().filter(|(_, _, f)| f.is_worker_fault()).count();
+
+    let tracer = Tracer::new(TraceConfig::Wall);
+    let opts = SchedulerOptions {
+        engine: EngineMode::Pipeline { workers: 2, inflight: 2 },
+        faults: Some(Arc::new(plan)),
+        trace: tracer.clone(),
+        ..Default::default()
+    };
+    let mut session = MoeSession::builder()
+        .topology(topo())
+        .experts(EXPERTS)
+        .policy_name("micromoe")
+        .options(opts)
+        .layers(LAYERS)
+        .build()
+        .expect("chaos session builds");
+    for step in 0..STEPS {
+        let loads: Vec<LoadMatrix> = (0..LAYERS)
+            .map(|l| zipf_lm(seed ^ (step * LAYERS + l) as u64, 900, 1.0))
+            .collect();
+        let out = session.step(&loads);
+        assert_step_feasible(&out, &loads, step);
+    }
+
+    let st = session.stats().degradation;
+    let es = session.engine_stats().expect("pipeline engine");
+    let evs = tracer.events();
+
+    let (mut warm, mut cold, mut greedy, mut pass) = (0u64, 0u64, 0u64, 0u64);
+    let mut engine_spans = 0u64;
+    let mut respawns = 0usize;
+    for e in &evs {
+        match &e.span {
+            Span::Solve { rung, .. } => match rung {
+                DegradationRung::WarmLp => warm += 1,
+                DegradationRung::ColdLp => cold += 1,
+                DegradationRung::Greedy => greedy += 1,
+                DegradationRung::Passthrough => pass += 1,
+            },
+            Span::Engine { .. } => engine_spans += 1,
+            Span::WorkerRespawn { .. } => respawns += 1,
+            _ => {}
+        }
+    }
+    assert_eq!(warm, st.warm_lp, "warm-lp spans != stats: {st:?}");
+    assert_eq!(cold, st.cold_lp, "cold-lp spans != stats: {st:?}");
+    assert_eq!(greedy, st.greedy, "greedy spans != stats: {st:?}");
+    assert_eq!(pass, st.passthrough, "passthrough spans != stats: {st:?}");
+    assert_eq!(warm + cold + greedy + pass, st.total(), "{st:?}");
+    assert_eq!(engine_spans, es.schedules, "one engine span per emission: {es:?}");
+    assert_eq!(respawns, worker_faults, "one respawn span per one-shot panic");
+}
+
+/// Each recovered worker panic leaves exactly one respawn marker in the
+/// trace, and span ids stay globally unique across the discontinuity (the
+/// respawned schedulers record into the same shared buffer).
+#[test]
+fn respawn_spans_mark_each_recovery() {
+    use micromoe::obs::{Span, TraceConfig, Tracer};
+
+    const STEPS: usize = 4;
+    const LAYERS: usize = 4;
+    let plan = FaultPlan::with_faults(vec![
+        (1, 0, Fault::WorkerPanic { persistent: false }),
+        (2, 3, Fault::WorkerPanic { persistent: false }),
+    ]);
+    let tracer = Tracer::new(TraceConfig::Wall);
+    let opts = SchedulerOptions {
+        engine: EngineMode::Pipeline { workers: 2, inflight: 2 },
+        faults: Some(Arc::new(plan)),
+        trace: tracer.clone(),
+        ..Default::default()
+    };
+    let mut session = MoeSession::builder()
+        .topology(topo())
+        .experts(EXPERTS)
+        .policy_name("micromoe")
+        .options(opts)
+        .layers(LAYERS)
+        .build()
+        .expect("chaos session builds");
+    for step in 0..STEPS {
+        let loads: Vec<LoadMatrix> =
+            (0..LAYERS).map(|l| zipf_lm(300 + (step * LAYERS + l) as u64, 800, 1.1)).collect();
+        let out = session.step(&loads);
+        assert_step_feasible(&out, &loads, step);
+    }
+
+    let evs = tracer.events();
+    let respawns: Vec<_> = evs
+        .iter()
+        .filter_map(|e| match &e.span {
+            Span::WorkerRespawn { worker, attempt } => Some((*worker, *attempt)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(respawns.len(), 2, "one marker per injected panic: {respawns:?}");
+    for &(_, attempt) in &respawns {
+        assert_eq!(attempt, 1, "one-shot panics respawn once: {respawns:?}");
+    }
+
+    let mut ids: Vec<u64> = evs.iter().map(|e| e.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), evs.len(), "span ids must survive respawn uniquely");
+}
+
 fn used_gpus(p: &Placement) -> usize {
     let mut used = vec![false; p.num_gpus];
     for grp in &p.replicas {

@@ -1,0 +1,280 @@
+//! Tracing identity + span-accounting suite — ISSUE-9's observability
+//! acceptance criteria.
+//!
+//! Two contracts are pinned here. **Identity**: tracing observes, never
+//! steers — a session with an enabled [`Tracer`] emits bit-identical
+//! schedules to an untraced one, and the disabled default records nothing
+//! at all. **Accounting**: the recorded span set is exact — one solve span
+//! per committed layer plan, one engine span per in-order emission, one
+//! decompose-round span per outer round per block, one serving-window span
+//! per formed window — so span counts reconcile against the stats structs
+//! (`DegradationStats`, `EngineStats`, `DecomposeStats`, `SlaStats`)
+//! without slack.
+
+use micromoe::balancer::MoeSession;
+use micromoe::engine::EngineMode;
+use micromoe::obs::{ClockDomain, Span, SpanOutcome, TraceConfig, TraceEvent, Tracer};
+use micromoe::rng::{Rng, Zipf};
+use micromoe::scheduler::{LoadMatrix, ScheduleMode, SchedulerOptions};
+use micromoe::topology::Topology;
+
+const EXPERTS: usize = 16;
+const GPUS: usize = 8;
+
+fn zipf_lm(seed: u64, per_gpu: u64, s: f64) -> LoadMatrix {
+    let mut rng = Rng::new(seed);
+    let z = Zipf::new(EXPERTS, s);
+    let mut lm = LoadMatrix::zeros(EXPERTS, GPUS);
+    for g in 0..GPUS {
+        for _ in 0..per_gpu {
+            lm.add(z.sample(&mut rng), g, 1);
+        }
+    }
+    lm
+}
+
+fn session(topo: Topology, opts: SchedulerOptions, layers: usize) -> MoeSession {
+    MoeSession::builder()
+        .topology(topo)
+        .experts(EXPERTS)
+        .policy_name("micromoe")
+        .options(opts)
+        .layers(layers)
+        .build()
+        .expect("session builds")
+}
+
+fn pipeline_opts(trace: Tracer) -> SchedulerOptions {
+    SchedulerOptions {
+        engine: EngineMode::Pipeline { workers: 2, inflight: 2 },
+        trace,
+        ..Default::default()
+    }
+}
+
+fn named<'a>(evs: &'a [TraceEvent], name: &str) -> Vec<&'a TraceEvent> {
+    evs.iter().filter(|e| e.span.name() == name).collect()
+}
+
+/// The identity contract: an enabled Wall tracer changes no schedule, the
+/// disabled default records no event, and the traced run's span set is the
+/// exact commit/emission ledger of the pipelined session.
+#[test]
+fn enabled_tracing_is_bit_identical_and_off_records_nothing() {
+    const LAYERS: usize = 3;
+    const STEPS: usize = 4;
+    let tracer = Tracer::new(TraceConfig::Wall);
+    let mut plain = session(Topology::new(8, 4, 2, 8), pipeline_opts(Tracer::off()), LAYERS);
+    let mut traced = session(Topology::new(8, 4, 2, 8), pipeline_opts(tracer.clone()), LAYERS);
+
+    for step in 0..STEPS {
+        let loads: Vec<LoadMatrix> =
+            (0..LAYERS).map(|l| zipf_lm(11 + (step * LAYERS + l) as u64, 700, 1.0)).collect();
+        let a = plain.step(&loads);
+        let b = traced.step(&loads);
+        for (l, (pa, pb)) in a.layers.iter().zip(&b.layers).enumerate() {
+            assert_eq!(pa.routes, pb.routes, "step {step} layer {l}: tracing changed routing");
+            assert_eq!(pa.gpu_compute, pb.gpu_compute, "step {step} layer {l}");
+            assert_eq!(pa.replica_loads, pb.replica_loads, "step {step} layer {l}");
+        }
+    }
+
+    assert!(!plain.tracer().enabled(), "default tracer is off");
+    assert_eq!(plain.tracer().event_count(), 0, "disabled tracer must record nothing");
+    assert!(plain.tracer().events().is_empty());
+
+    let evs = tracer.events();
+    let total = STEPS * LAYERS;
+    let solves = named(&evs, "solve");
+    let engines = named(&evs, "engine");
+    assert_eq!(solves.len(), total, "one solve span per committed layer plan");
+    assert_eq!(engines.len(), total, "one engine span per in-order emission");
+    assert_eq!(
+        engines.len() as u64,
+        traced.engine_stats().expect("pipeline engine").schedules
+    );
+
+    // every (step, layer) slot commits exactly once, in compute mode
+    let mut seen = vec![false; total];
+    for e in &solves {
+        let Span::Solve { step, layer, mode, .. } = &e.span else { unreachable!() };
+        assert_eq!(*mode, "compute");
+        let k = *step * LAYERS + *layer;
+        assert!(!seen[k], "duplicate solve span for step {step} layer {layer}");
+        seen[k] = true;
+    }
+    assert!(seen.iter().all(|&s| s), "a committed plan is missing its solve span");
+
+    // the pipeline engine never speculates: every emission is fresh
+    for e in &engines {
+        let Span::Engine { outcome, .. } = &e.span else { unreachable!() };
+        assert_eq!(*outcome, SpanOutcome::Fresh);
+    }
+
+    // well-formed events: globally unique ids, wall domain, finite stamps
+    let mut ids: Vec<u64> = evs.iter().map(|e| e.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), evs.len(), "span ids must be globally unique");
+    for e in &evs {
+        assert_eq!(e.domain, ClockDomain::Wall);
+        assert!(e.ts_us.is_finite() && e.ts_us >= 0.0, "bad ts {}", e.ts_us);
+        assert!(e.dur_us.is_finite() && e.dur_us >= 0.0, "bad dur {}", e.dur_us);
+    }
+}
+
+/// Speculative-engine emissions carry hit/miss/fresh tags that reconcile
+/// exactly against `EngineStats`' speculation counters.
+#[test]
+fn speculative_engine_spans_tag_every_emission() {
+    const LAYERS: usize = 4;
+    const STEPS: usize = 6;
+    let tracer = Tracer::new(TraceConfig::Wall);
+    let opts = SchedulerOptions {
+        engine: EngineMode::speculative(),
+        trace: tracer.clone(),
+        ..Default::default()
+    };
+    let mut session = session(Topology::new(8, 4, 2, 8), opts, LAYERS);
+    // identical loads every step: past warmup the forecast is exact, so
+    // speculation must start hitting
+    let loads: Vec<LoadMatrix> = (0..LAYERS).map(|l| zipf_lm(40 + l as u64, 800, 1.1)).collect();
+    for _ in 0..STEPS {
+        session.step(&loads);
+    }
+
+    let es = session.engine_stats().expect("speculative engine");
+    let engines = named(&tracer.events(), "engine");
+    assert_eq!(engines.len() as u64, es.schedules, "one engine span per emission");
+
+    let (mut hits, mut misses, mut fresh) = (0u64, 0u64, 0u64);
+    for e in &engines {
+        let Span::Engine { outcome, .. } = &e.span else { unreachable!() };
+        match outcome {
+            SpanOutcome::Hit => hits += 1,
+            SpanOutcome::Miss => misses += 1,
+            SpanOutcome::Fresh => fresh += 1,
+        }
+    }
+    assert_eq!(hits, es.spec_hits, "hit tags != judged hits: {es:?}");
+    assert_eq!(misses, es.spec_misses, "miss tags != judged misses: {es:?}");
+    assert_eq!(hits + misses + fresh, es.schedules, "{es:?}");
+    assert!(hits > 0, "an exact forecast must produce speculation hits: {es:?}");
+}
+
+/// Decomposed-mode solves trace one round span per outer iteration per
+/// block, reconciling against `DecomposeStats::outer_iters`, with the
+/// master gap and κ feedback attributes well-formed.
+#[test]
+fn decomposed_rounds_trace_once_per_round_per_block() {
+    const LAYERS: usize = 2;
+    const STEPS: usize = 3;
+    let tracer = Tracer::new(TraceConfig::Wall);
+    let opts = SchedulerOptions {
+        mode: ScheduleMode::Decomposed { nodes_per_block: 1, max_outer_iters: 6, tol: 1e-3 },
+        trace: tracer.clone(),
+        ..Default::default()
+    };
+    // 2 nodes of 4 GPUs -> 2 subproblem blocks per solve
+    let mut session = session(Topology::new(8, 4, 2, 4), opts, LAYERS);
+    for step in 0..STEPS {
+        let loads: Vec<LoadMatrix> =
+            (0..LAYERS).map(|l| zipf_lm(60 + (step * LAYERS + l) as u64, 900, 1.0)).collect();
+        session.step(&loads);
+    }
+
+    let dec = session.stats().decompose;
+    assert_eq!(dec.solves, (STEPS * LAYERS) as u64, "{dec:?}");
+    assert!(dec.outer_iters >= dec.solves, "at least one round per solve: {dec:?}");
+
+    let evs = tracer.events();
+    let solves = named(&evs, "solve");
+    assert_eq!(solves.len(), STEPS * LAYERS, "one solve span per committed plan");
+    for e in &solves {
+        let Span::Solve { mode, .. } = &e.span else { unreachable!() };
+        assert_eq!(*mode, "decomposed");
+    }
+
+    let rounds = named(&evs, "decompose_round");
+    let mut per_block = [0u64; 2];
+    for e in &rounds {
+        let Span::DecomposeRound { round, block, gap, kappa } = &e.span else { unreachable!() };
+        assert!(*round < 6, "round index beyond max_outer_iters");
+        assert!(*block < 2, "unexpected block index {block}");
+        per_block[*block] += 1;
+        assert!(gap.is_finite(), "non-finite master gap");
+        // κ is clamped into (0, block GPU count]
+        assert!(*kappa > 0.0 && *kappa <= 4.0 + 1e-9, "kappa {kappa} out of range");
+    }
+    assert_eq!(per_block[0], per_block[1], "every round covers every block");
+    assert_eq!(
+        rounds.len() as u64,
+        dec.outer_iters * 2,
+        "one round span per outer iteration per block: {dec:?}"
+    );
+}
+
+/// Serving-window spans on the virtual timeline reconcile exactly against
+/// `SlaStats`: one span per formed window, with admitted/shed/deadline-miss
+/// attributes summing to the server's cumulative accounting.
+#[test]
+fn serving_window_spans_match_sla_accounting() {
+    use micromoe::serving::{
+        ArrivalGen, ArrivalProcess, DispatchCost, ServingConfig, SolveCost, TokenModel,
+    };
+    use micromoe::workload::TopicMix;
+
+    let tracer = Tracer::new(TraceConfig::Virtual);
+    let sess = session(Topology::new(8, 4, 2, 8), pipeline_opts(tracer.clone()), 1);
+    let reqs = ArrivalGen::new(
+        ArrivalProcess::Poisson { rate_hz: 20_000.0 },
+        TokenModel::Fixed(48),
+        0x7E57,
+    )
+    .take(300);
+    let cfg = ServingConfig {
+        window_us: 400.0,
+        max_batch: 24,
+        slo_us: 900.0,
+        shed_after_us: 1_500.0,
+        solve_cost: SolveCost::Virtual { us: 50.0 },
+        dispatch_cost: DispatchCost::PerToken { fixed_us: 10.0, us_per_token: 0.25 },
+    };
+    let mut server = sess.serve(cfg, TopicMix::new(EXPERTS, 1.1, 8, 9));
+    let trace = server.run(&reqs);
+    let sla = server.sla();
+
+    let evs = tracer.events();
+    let windows = named(&evs, "serving_window");
+    assert_eq!(windows.len() as u64, sla.windows, "one span per formed window");
+    assert_eq!(windows.len(), trace.windows.len());
+
+    let (mut admitted, mut shed, mut misses, mut empty) = (0u64, 0u64, 0u64, 0u64);
+    let mut prev_ts = f64::NEG_INFINITY;
+    for e in &windows {
+        let Span::ServingWindow { admitted: a, shed: s, deadline_miss: m, .. } = &e.span else {
+            unreachable!()
+        };
+        admitted += *a as u64;
+        shed += *s as u64;
+        misses += *m as u64;
+        if *a == 0 {
+            empty += 1;
+        }
+        assert_eq!(e.domain, ClockDomain::Virtual, "window spans live on the virtual clock");
+        assert!(e.ts_us >= prev_ts, "window spans must open in order");
+        prev_ts = e.ts_us;
+    }
+    assert_eq!(admitted, sla.served, "admitted sums to served: {sla:?}");
+    assert_eq!(shed, sla.shed, "shed attributes sum to shed requests: {sla:?}");
+    assert_eq!(misses, sla.deadline_misses, "{sla:?}");
+    assert_eq!(empty, sla.empty_windows, "{sla:?}");
+
+    // the session's solve spans ride the same buffer, stamped by the
+    // advancing virtual clock: one committed solve per non-empty window
+    let solves = named(&evs, "solve");
+    assert_eq!(solves.len() as u64, sla.windows - sla.empty_windows, "{sla:?}");
+    for e in &solves {
+        assert_eq!(e.domain, ClockDomain::Virtual);
+    }
+}
