@@ -11,6 +11,7 @@
 use micromoe::balancer::{registered_policies, MoeSession};
 use micromoe::bench_harness::{fmt_time, save_json, Table};
 use micromoe::config::PolicySpec;
+use micromoe::control::ControlSpec;
 use micromoe::engine::EngineMode;
 use micromoe::scheduler::LoadMatrix;
 use micromoe::ser::Json;
@@ -48,6 +49,12 @@ fn main() {
                 spec.options.engine = engine;
                 arms.push((label.to_string(), spec));
             }
+            // the two-timescale arm: barrier engine plus the slow
+            // placement-control loop (replication/eviction every 4 steps,
+            // migration downtime charged at h100_testbed pricing)
+            let mut spec = PolicySpec { name: name.to_string(), ..Default::default() };
+            spec.control = Some(ControlSpec { interval: 4, dwell: 2, ..Default::default() });
+            arms.push(("micromoe (controlled)".to_string(), spec));
         } else {
             let spec = PolicySpec { name: name.to_string(), ..Default::default() };
             arms.push((name.to_string(), spec));
@@ -108,6 +115,8 @@ fn main() {
             ("rung_greedy", Json::Num(deg.greedy as f64)),
             ("rung_passthrough", Json::Num(deg.passthrough as f64)),
             ("lp_rate", Json::Num(deg.lp_rate())),
+            ("control_decisions", Json::Num(st.control.decisions as f64)),
+            ("control_downtime_s", Json::Num(st.control.downtime)),
         ]));
     }
     table.print();

@@ -1,0 +1,634 @@
+#!/usr/bin/env python3
+"""Reference implementation of the rust placement controller.
+
+Two roles:
+
+1. **Transliteration** — pure-python mirrors of the controller's decision
+   path, operation for operation: ``LoadDetector`` (EWMA load shares +
+   dual hysteresis, ``rust/src/control/detect.rs``), the exact Eq.-3
+   density enumeration (``rust/src/placement/graph.rs``),
+   ``placement_diff`` / ``migration_time``
+   (``rust/src/cluster/migration.rs``) and the greedy replicate/evict
+   ``decide`` loop (``rust/src/control/decide.rs``). Python floats are
+   IEEE doubles and every sum/product is performed in the same order as
+   the rust code, so the two implementations agree bit for bit. At the
+   fixture's 8-GPU scale the rust density evaluator takes the exact
+   (rng-free) path, which is what makes an rng-free python mirror
+   possible.
+
+2. **Fixture generation** — drives the mirror through drift regimes
+   (stationary, sudden shift, oscillating load held off by hysteresis,
+   move-capped, eviction-forced, rotating drift, budget-starved) and
+   records the load traces plus every control-tick decision into
+   ``rust/tests/golden_controller.json``. ``tests/golden_controller.rs``
+   replays the traces through the rust detector + decider and must
+   reproduce every EWMA value, flag, move list and accounting float
+   exactly (``json.dump`` emits shortest-roundtrip floats; rust's
+   ``str::parse::<f64>`` is correctly rounded, so the bits survive the
+   trip).
+
+Guard bands are asserted at generation time: no EWMA lands within 1e-9
+of a hysteresis threshold, no migration time within 1e-9 of the budget,
+no predicted gain within 1e-9 of the ``min_gain`` floor — a fixture
+whose decisions hinge on the last ulp would be a flaky fixture.
+
+Run from anywhere:  python3 python/tools/controller_reference.py
+"""
+
+import json
+import os
+
+# ---------------------------------------------------------------------------
+# constants mirrored from rust (CostModel::h100_testbed + migration.rs)
+# ---------------------------------------------------------------------------
+
+NVLINK_BW = 900e9
+IB_BW = 100e9
+INTER_LAT = 25e-6
+MIGRATION_EFF = 0.10
+REINIT_OVERHEAD = 50e-3
+
+
+def expert_bytes(hidden, ffn, with_optimizer):
+    """Mirror of cluster::migration::expert_bytes."""
+    params = 2 * hidden * ffn
+    return params * (14 if with_optimizer else 2)
+
+
+class ControlSpec:
+    """Mirror of control::ControlSpec (defaults included)."""
+
+    def __init__(self, **kw):
+        self.interval = kw.pop("interval", 16)
+        self.ema_alpha = kw.pop("ema_alpha", 0.25)
+        self.hot_enter = kw.pop("hot_enter", 2.0)
+        self.hot_exit = kw.pop("hot_exit", 1.5)
+        self.cold_enter = kw.pop("cold_enter", 0.5)
+        self.cold_exit = kw.pop("cold_exit", 0.75)
+        self.dwell = kw.pop("dwell", 4)
+        self.budget_seconds = kw.pop("budget_seconds", 0.5)
+        self.max_moves = kw.pop("max_moves", 8)
+        self.min_gain = kw.pop("min_gain", 0.01)
+        self.bytes_per_expert = kw.pop("bytes_per_expert", expert_bytes(2048, 8192, True))
+        self.slot_headroom = kw.pop("slot_headroom", 1)
+        assert not kw, "unknown spec fields: %s" % sorted(kw)
+
+    def to_json(self):
+        return {
+            "interval": self.interval,
+            "ema_alpha": self.ema_alpha,
+            "hot_enter": self.hot_enter,
+            "hot_exit": self.hot_exit,
+            "cold_enter": self.cold_enter,
+            "cold_exit": self.cold_exit,
+            "dwell": self.dwell,
+            "budget_seconds": self.budget_seconds,
+            "max_moves": self.max_moves,
+            "min_gain": self.min_gain,
+            "bytes_per_expert": self.bytes_per_expert,
+            "slot_headroom": self.slot_headroom,
+        }
+
+
+class LoadDetector:
+    """Mirror of control::detect::LoadDetector, op for op."""
+
+    def __init__(self, num_experts, spec):
+        assert num_experts > 0
+        uniform = 1.0 / float(num_experts)
+        self.alpha = spec.ema_alpha
+        self.hot_enter = spec.hot_enter * uniform
+        self.hot_exit = spec.hot_exit * uniform
+        self.cold_enter = spec.cold_enter * uniform
+        self.cold_exit = spec.cold_exit * uniform
+        self.dwell = spec.dwell
+        self.ema = [0.0] * num_experts
+        self.primed = False
+        self.hot = [False] * num_experts
+        self.hot_run = [0] * num_experts
+        self.cold = [False] * num_experts
+        self.cold_run = [0] * num_experts
+        self.observed = 0
+
+    def observe(self, loads):
+        assert len(loads) == len(self.ema)
+        total = sum(loads)  # exact integer sum, same as rust's u64 sum
+        if total == 0:
+            return
+        inv = 1.0 / float(total)
+        if not self.primed:
+            for e, x in enumerate(loads):
+                self.ema[e] = float(x) * inv
+            self.primed = True
+        else:
+            for e, x in enumerate(loads):
+                self.ema[e] = self.alpha * (float(x) * inv) + (1.0 - self.alpha) * self.ema[e]
+        self.observed += 1
+        for e in range(len(self.ema)):
+            m = self.ema[e]
+            crossing = (m < self.hot_exit) if self.hot[e] else (m > self.hot_enter)
+            if crossing:
+                self.hot_run[e] += 1
+                if self.hot_run[e] >= self.dwell:
+                    self.hot[e] = not self.hot[e]
+                    self.hot_run[e] = 0
+            else:
+                self.hot_run[e] = 0
+            crossing = (m > self.cold_exit) if self.cold[e] else (m < self.cold_enter)
+            if crossing:
+                self.cold_run[e] += 1
+                if self.cold_run[e] >= self.dwell:
+                    self.cold[e] = not self.cold[e]
+                    self.cold_run[e] = 0
+            else:
+                self.cold_run[e] = 0
+
+    def threshold_guard(self, band=1e-9):
+        """Generation-time guard: no EWMA within `band` of a threshold."""
+        for m in self.ema:
+            for thr in (self.hot_enter, self.hot_exit, self.cold_enter, self.cold_exit):
+                assert abs(m - thr) > band, "EWMA %r within %g of threshold %r" % (m, band, thr)
+
+
+def density_exact(replicas, loads, num_gpus):
+    """Mirror of placement::graph::max_induced_density_exact (density only)."""
+    assert num_gpus <= 26
+    masks = []
+    for grp in replicas:
+        m = 0
+        for gg in grp:
+            m |= 1 << gg
+        masks.append(m)
+    best = 0.0
+    for subset in range(1, 1 << num_gpus):
+        total = 0.0
+        for e, mask in enumerate(masks):
+            if mask & subset == mask:
+                total += loads[e]
+        density = total / float(bin(subset).count("1"))
+        if density > best + 1e-12:
+            best = density
+    return best
+
+
+def same_node(a, b, gpus_per_node):
+    return a // gpus_per_node == b // gpus_per_node
+
+
+def placement_diff(old_replicas, new_replicas, gpus_per_node):
+    """Mirror of cluster::migration::placement_diff; moves as (e, dst, src)."""
+    assert len(old_replicas) == len(new_replicas)
+    moves = []
+    for e in range(len(new_replicas)):
+        for dst in new_replicas[e]:
+            if dst not in old_replicas[e]:
+                src = min(
+                    old_replicas[e],
+                    key=lambda s: (int(not same_node(s, dst, gpus_per_node)), s),
+                )
+                moves.append((e, dst, src))
+    moves.sort(key=lambda m: (m[0], m[2], m[1]))
+    return moves
+
+
+def migration_time(moves, bytes_per_expert, gpus_per_node, num_gpus):
+    """Mirror of cluster::migration::migration_time (h100 testbed model)."""
+    if not moves:
+        return 0.0
+    si = [0] * num_gpus
+    ri = [0] * num_gpus
+    sj = [0] * num_gpus
+    rj = [0] * num_gpus
+    for (_e, dst, src) in moves:
+        if same_node(src, dst, gpus_per_node):
+            si[src] += bytes_per_expert
+            ri[dst] += bytes_per_expert
+        else:
+            sj[src] += bytes_per_expert
+            rj[dst] += bytes_per_expert
+    worst = 0.0
+    for g in range(num_gpus):
+        t = float(max(si[g], ri[g])) / (NVLINK_BW * MIGRATION_EFF) + float(
+            max(sj[g], rj[g])
+        ) / (IB_BW * MIGRATION_EFF)
+        worst = max(worst, t)
+    return worst + INTER_LAT + REINIT_OVERHEAD
+
+
+def proxy_loads(replicas, ema, num_gpus):
+    """Mirror of control::decide::proxy_loads."""
+    proxy = [0.0] * num_gpus
+    for e, group in enumerate(replicas):
+        per = ema[e] / float(len(group))
+        for g in group:
+            proxy[g] += per
+    return proxy
+
+
+def decide(replicas, detector, gpus_per_node, spec, slot_budget, num_gpus, guards=None):
+    """Mirror of control::decide::decide (exact-density path, rng-free).
+
+    `guards`, when a dict, collects generation-time guard-band evidence:
+    counts of ops rejected for the move cap / time budget, and asserts
+    that no comparison in the decision path was decided within 1e-9.
+    """
+    if detector.observed == 0:
+        return None
+    ema = list(detector.ema)
+    base = density_exact(replicas, ema, num_gpus)
+
+    working = [list(grp) for grp in replicas]
+    used = [sum(1 for grp in working if gpu in grp) for gpu in range(num_gpus)]
+
+    hot = [e for e in range(len(working)) if detector.hot[e]]
+    hot.sort(key=lambda e: (-ema[e], e))
+
+    cur_density = base
+    replications = 0
+    evictions = 0
+
+    for e in hot:
+        if len(working[e]) >= num_gpus:
+            continue
+        proxy = proxy_loads(working, ema, num_gpus)
+        cands = [g for g in range(num_gpus) if g not in working[e] and used[g] < slot_budget]
+        dst = min(cands, key=lambda g: (proxy[g], g)) if cands else None
+        evicted = None
+        if dst is None:
+            gpus = [g for g in range(num_gpus) if g not in working[e]]
+            gpus.sort(key=lambda g: (proxy[g], g))
+            for gpu in gpus:
+                vcands = [
+                    c
+                    for c in range(len(working))
+                    if c != e
+                    and detector.cold[c]
+                    and not detector.hot[c]
+                    and len(working[c]) > 1
+                    and gpu in working[c]
+                ]
+                if vcands:
+                    victim = min(vcands, key=lambda c: (ema[c], c))
+                    working[victim].remove(gpu)
+                    used[gpu] -= 1
+                    evicted = (victim, gpu)
+                    dst = gpu
+                    break
+        if dst is None:
+            continue
+
+        working[e].append(dst)
+        working[e].sort()
+        used[dst] += 1
+        moves = placement_diff(replicas, working, gpus_per_node)
+        mig = migration_time(moves, spec.bytes_per_expert, gpus_per_node, num_gpus)
+        over_moves = len(moves) > spec.max_moves
+        over_time = mig > spec.budget_seconds
+        if guards is not None:
+            assert abs(mig - spec.budget_seconds) > 1e-9, "migration time hugs the budget"
+            if over_moves:
+                guards["rejected_moves"] = guards.get("rejected_moves", 0) + 1
+            if over_time:
+                guards["rejected_time"] = guards.get("rejected_time", 0) + 1
+        over_budget = over_moves or over_time
+        density = float("inf") if over_budget else density_exact(working, ema, num_gpus)
+        if guards is not None and density != float("inf") and density != cur_density:
+            assert abs(density - cur_density) > 1e-9, "density comparison hugs the slop"
+        if not over_budget and density < cur_density - 1e-12:
+            cur_density = density
+            replications += 1
+            if evicted is not None:
+                evictions += 1
+        else:
+            working[e].remove(dst)
+            used[dst] -= 1
+            if evicted is not None:
+                c, gpu = evicted
+                working[c].append(gpu)
+                working[c].sort()
+                used[gpu] += 1
+
+    if replications == 0:
+        return None
+    predicted_gain = base - cur_density
+    if guards is not None:
+        assert abs(predicted_gain - spec.min_gain * base) > 1e-9, "gain hugs the min_gain floor"
+    if predicted_gain <= spec.min_gain * base:
+        return None
+    moves = placement_diff(replicas, working, gpus_per_node)
+    downtime = migration_time(moves, spec.bytes_per_expert, gpus_per_node, num_gpus)
+    nbytes = len(moves) * spec.bytes_per_expert
+    return {
+        "replicas": [list(grp) for grp in working],
+        "moves": [list(m) for m in moves],
+        "predicted_gain": predicted_gain,
+        "downtime": downtime,
+        "bytes": nbytes,
+        "replications": replications,
+        "evictions": evictions,
+    }
+
+
+# ---------------------------------------------------------------------------
+# numpy self-test: the mirror vs an independent vectorized implementation
+# ---------------------------------------------------------------------------
+
+
+def self_test():
+    import numpy as np
+
+    failures = 0
+
+    # 1. EWMA recurrence vs the vectorized numpy recurrence
+    rng = np.random.default_rng(7)
+    spec = ControlSpec(ema_alpha=0.3, dwell=2)
+    det = LoadDetector(8, spec)
+    ref = None
+    for _ in range(40):
+        loads = rng.integers(1, 500, size=8)
+        det.observe([int(x) for x in loads])
+        share = loads.astype(np.float64) / float(loads.sum())
+        ref = share if ref is None else 0.3 * share + 0.7 * ref
+    if not np.allclose(np.array(det.ema), ref, atol=1e-12):
+        print("FAIL: detector EWMA diverged from numpy recurrence")
+        failures += 1
+
+    # 2. exact density vs numpy brute force (membership matrix + dot)
+    replicas = [[0], [1], [0, 2], [3], [1, 3], [2]]
+    loads = [0.3, 0.1, 0.25, 0.05, 0.2, 0.1]
+    G = 4
+    member = np.zeros((len(replicas), G), dtype=bool)
+    for e, grp in enumerate(replicas):
+        member[e, grp] = True
+    best = 0.0
+    for subset in range(1, 1 << G):
+        inside = np.array([(subset >> g) & 1 == 1 for g in range(G)])
+        covered = member[:, ~inside].sum(axis=1) == 0
+        d = float(np.array(loads)[covered].sum()) / float(inside.sum())
+        best = max(best, d)
+    mine = density_exact(replicas, loads, G)
+    if abs(mine - best) > 1e-9:
+        print("FAIL: exact density %r vs numpy brute force %r" % (mine, best))
+        failures += 1
+
+    # 3. migration time vs a hand-computed value (one move per tier)
+    moves = [(0, 1, 0), (1, 3, 0)]  # gpn=2: (0->1) intra, (0->3) inter
+    b = 1 << 24
+    t = migration_time(moves, b, 2, 4)
+    hand = float(b) / (NVLINK_BW * MIGRATION_EFF) + float(b) / (IB_BW * MIGRATION_EFF)
+    hand = hand + INTER_LAT + REINIT_OVERHEAD
+    if abs(t - hand) > 1e-12:
+        print("FAIL: migration_time %r vs hand %r" % (t, hand))
+        failures += 1
+
+    # 4. decide replicates a hot expert on the 4-GPU toy (mirrors the rust
+    #    unit test) and is deterministic call to call
+    spec = ControlSpec(dwell=2, bytes_per_expert=expert_bytes(256, 1024, True))
+    det = LoadDetector(8, spec)
+    skew = [40] * 8
+    skew[0] = 1000
+    for _ in range(12):
+        det.observe(skew)
+    if not det.hot[0]:
+        print("FAIL: skewed trace did not flag expert 0 hot")
+        failures += 1
+    placement = [[e % 4] for e in range(8)]
+    d1 = decide(placement, det, 2, spec, 3, 4)
+    d2 = decide(placement, det, 2, spec, 3, 4)
+    if d1 is None or len(d1["replicas"][0]) < 2:
+        print("FAIL: decide did not replicate the hot expert: %r" % (d1,))
+        failures += 1
+    elif d1 != d2:
+        print("FAIL: decide is not deterministic")
+        failures += 1
+    # a budget below the 50 ms re-init floor blocks everything
+    starved = ControlSpec(dwell=2, budget_seconds=0.01, bytes_per_expert=spec.bytes_per_expert)
+    if decide(placement, det, 2, starved, 3, 4) is not None:
+        print("FAIL: sub-floor budget still produced a decision")
+        failures += 1
+
+    return failures
+
+
+# ---------------------------------------------------------------------------
+# fixture scenarios
+# ---------------------------------------------------------------------------
+
+# shared geometry: 16 experts on 8 GPUs, 2 nodes of 4 (dp=8, ep=4, d=2).
+# 8 GPUs keeps the rust density evaluator on the exact, rng-free path.
+TOPO = [8, 4, 2, 4]  # Topology::new(dp, ep, d, gpus_per_node)
+SMALL_EXPERT = expert_bytes(256, 1024, True)
+
+
+def symmetric_replicas(experts, gpus):
+    assert experts % gpus == 0
+    per = experts // gpus
+    return [[e // per] for e in range(experts)]
+
+
+def run_scenario(name, experts, gpus, gpn, spec, slot_budget, replicas, loads_per_step):
+    """Drive the mirror through a load trace; record every control tick."""
+    det = LoadDetector(experts, spec)
+    current = [list(g) for g in replicas]
+    ticks = []
+    guards = {}
+    max_hot_run = 0
+    for step, loads in enumerate(loads_per_step, start=1):
+        assert len(loads) == experts
+        det.observe(loads)
+        det.threshold_guard()
+        max_hot_run = max(max_hot_run, max(det.hot_run))
+        if step % spec.interval == 0:
+            decision = decide(current, det, gpn, spec, slot_budget, gpus, guards=guards)
+            ticks.append({"step": step, "decision": decision})
+            if decision is not None:
+                current = [list(g) for g in decision["replicas"]]
+    return {
+        "scenario": {
+            "name": name,
+            "experts": experts,
+            "gpus": gpus,
+            "topo": TOPO[:3] + [gpn],
+            "slot_budget": slot_budget,
+            "spec": spec.to_json(),
+            "initial_replicas": [list(g) for g in replicas],
+            "loads": [list(l) for l in loads_per_step],
+            "ticks": ticks,
+            "final": {
+                "ema": list(det.ema),
+                "hot": list(det.hot),
+                "cold": list(det.cold),
+                "observed": det.observed,
+            },
+        },
+        "det": det,
+        "guards": guards,
+        "max_hot_run": max_hot_run,
+        "decisions": [t["decision"] for t in ticks if t["decision"] is not None],
+    }
+
+
+def uniform_step(experts, base, t):
+    # deterministic wobble: near-uniform, never crosses a band
+    return [base + (3 * t + 5 * e) % 7 for e in range(experts)]
+
+
+def build_scenarios():
+    E, G, GPN = 16, 8, 4
+    out = []
+
+    # --- 1. stationary near-uniform: the controller must do nothing -------
+    spec = ControlSpec(interval=4, dwell=2, bytes_per_expert=SMALL_EXPERT)
+    loads = [uniform_step(E, 100, t) for t in range(16)]
+    r = run_scenario("stationary_uniform", E, G, GPN, spec, 3, symmetric_replicas(E, G), loads)
+    assert not r["decisions"], "stationary trace must produce no decisions"
+    assert not any(r["det"].hot) and not any(r["det"].cold), "no flags on uniform load"
+    out.append(r)
+
+    # --- 2. sudden shift: hysteresis enter + dwell, then replication ------
+    spec = ControlSpec(interval=4, ema_alpha=0.5, dwell=3, bytes_per_expert=SMALL_EXPERT)
+    loads = [[100] * E for _ in range(8)]
+    for _ in range(16):
+        step = [60] * E
+        step[5] = 700
+        loads.append(step)
+    r = run_scenario("sudden_shift", E, G, GPN, spec, 3, symmetric_replicas(E, G), loads)
+    assert r["det"].hot[5], "sustained shift must flag expert 5 hot"
+    assert r["decisions"], "shift must trigger at least one replication"
+    assert all(
+        t["decision"] is None for t in r["scenario"]["ticks"][:2]
+    ), "pre-shift ticks must be quiet"
+    first = r["decisions"][0]
+    assert first["replications"] >= 1 and 5 in [m[0] for m in first["moves"]]
+    assert first["bytes"] == len(first["moves"]) * spec.bytes_per_expert
+    out.append(r)
+
+    # --- 3. oscillating load: crossings happen, dwell blocks the flip -----
+    spec = ControlSpec(interval=4, ema_alpha=0.25, dwell=3, bytes_per_expert=SMALL_EXPERT)
+    loads = []
+    for t in range(32):
+        if t % 4 == 2:  # one burst step per 4-step cycle (primed on uniform)
+            step = [100] * E
+            step[2] = 808
+        else:
+            step = [100] * E
+        loads.append(step)
+    r = run_scenario("oscillating_hysteresis", E, G, GPN, spec, 3, symmetric_replicas(E, G), loads)
+    assert r["max_hot_run"] >= 2, "bursts must at least start a crossing run"
+    assert not any(r["det"].hot), "dwell must block the oscillating flip"
+    assert not r["decisions"], "no flags means no decisions"
+    out.append(r)
+
+    # --- 4. two hot experts, move cap 1: budget-limited decision ----------
+    spec = ControlSpec(
+        interval=4, ema_alpha=0.5, dwell=2, max_moves=1, bytes_per_expert=SMALL_EXPERT
+    )
+    loads = []
+    for _ in range(16):
+        step = [40] * E
+        step[3] = 500
+        step[9] = 300
+        loads.append(step)
+    r = run_scenario("move_cap_limited", E, G, GPN, spec, 3, symmetric_replicas(E, G), loads)
+    assert r["det"].hot[3] and r["det"].hot[9], "both spiked experts must be hot"
+    assert r["decisions"], "the cap limits, it must not starve"
+    assert all(len(d["moves"]) <= 1 for d in r["decisions"])
+    assert r["guards"].get("rejected_moves", 0) >= 1, "cap must actually reject an op"
+    out.append(r)
+
+    # --- 5. packed slots: replication must evict a cold replica -----------
+    E5 = 14
+    spec = ControlSpec(interval=4, ema_alpha=0.5, dwell=2, bytes_per_expert=SMALL_EXPERT)
+    replicas = [[e // 2] for e in range(12)] + [[6, 7], [6, 7]]
+    loads = []
+    for _ in range(12):
+        step = [100] * E5
+        step[0] = 800
+        step[12] = 20
+        step[13] = 20
+        loads.append(step)
+    r = run_scenario("eviction_under_full_slots", E5, G, GPN, spec, 2, replicas, loads)
+    assert r["det"].hot[0] and r["det"].cold[12] and r["det"].cold[13]
+    assert r["decisions"], "eviction path must free a slot"
+    assert any(d["evictions"] >= 1 for d in r["decisions"])
+    for d in r["decisions"]:
+        assert all(len(grp) >= 1 for grp in d["replicas"]), "eviction orphaned an expert"
+    out.append(r)
+
+    # --- 6. rotating drift: hot expert moves, controller follows ----------
+    spec = ControlSpec(interval=4, ema_alpha=0.5, dwell=2, bytes_per_expert=SMALL_EXPERT)
+    loads = []
+    for t in range(36):
+        step = [60] * E
+        step[[1, 6, 11][t // 12]] = 700
+        loads.append(step)
+    r = run_scenario("rotating_drift", E, G, GPN, spec, 3, symmetric_replicas(E, G), loads)
+    assert len(r["decisions"]) >= 2, "rotation must trigger repeated adaptation"
+    moved = set()
+    for d in r["decisions"]:
+        moved.update(m[0] for m in d["moves"])
+    assert len(moved & {1, 6, 11}) >= 2, "decisions must chase the rotating hot expert"
+    out.append(r)
+
+    # --- 7. budget starvation: hot experts exist, migrations too costly ---
+    # (a) every attractive destination is cross-node and the Table-2-sized
+    # expert blows the 70 ms budget; (b) is the sub-floor variant.
+    spec = ControlSpec(
+        interval=4,
+        ema_alpha=0.5,
+        dwell=2,
+        budget_seconds=0.07,
+        bytes_per_expert=expert_bytes(2048, 8192, True),
+    )
+    loads = []
+    for _ in range(8):
+        step = [60] * E
+        for e in range(1, 8):
+            step[e] = 150  # keep node 0 warm so the coolest dst is cross-node
+        step[0] = 700
+        loads.append(step)
+    r = run_scenario("budget_starved_cross_node", E, G, GPN, spec, 3, symmetric_replicas(E, G), loads)
+    assert r["det"].hot[0], "expert 0 must be hot"
+    assert not r["decisions"], "every candidate move must be over budget"
+    assert r["guards"].get("rejected_time", 0) >= 1, "the budget must actually reject an op"
+    out.append(r)
+
+    spec = ControlSpec(interval=4, ema_alpha=0.5, dwell=2, budget_seconds=0.04,
+                       bytes_per_expert=SMALL_EXPERT)
+    loads = []
+    for _ in range(8):
+        step = [60] * E
+        step[0] = 700
+        loads.append(step)
+    r = run_scenario("budget_below_reinit_floor", E, G, GPN, spec, 3, symmetric_replicas(E, G), loads)
+    assert r["det"].hot[0] and not r["decisions"]
+    assert r["guards"].get("rejected_time", 0) >= 1
+    out.append(r)
+
+    return out
+
+
+def main():
+    failures = self_test()
+    assert failures == 0, "%d self-test failures; fixture not written" % failures
+
+    results = build_scenarios()
+    decided = sum(len(r["decisions"]) for r in results)
+    quiet = sum(
+        1 for r in results for t in r["scenario"]["ticks"] if t["decision"] is None
+    )
+    assert decided >= 4 and quiet >= 4, "fixture must exercise both outcomes"
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "..", "..", "rust", "tests", "golden_controller.json")
+    with open(path, "w") as fh:
+        json.dump({"scenarios": [r["scenario"] for r in results]}, fh, indent=1)
+        fh.write("\n")
+    print(
+        "self-test clean; wrote %d scenarios (%d decisions, %d quiet ticks) to %s"
+        % (len(results), decided, quiet, os.path.normpath(path))
+    )
+
+
+if __name__ == "__main__":
+    main()

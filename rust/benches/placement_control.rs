@@ -1,0 +1,229 @@
+//! Placement-control regenerator: static placement vs the two-timescale
+//! controller vs a free-replacement oracle on a drifting-Zipf trace.
+//!
+//! Three arms schedule the identical seeded trace:
+//!
+//! * **static** — the plain `micromoe` LPP session; the placement laid
+//!   down at build time never changes, so drift shows up as imbalance.
+//! * **controller** — `MoeSession::builder().control(..)`: EWMA + dual
+//!   hysteresis detection, Eq.-3-scored replicate/evict decisions, every
+//!   committed migration's downtime charged into the step.
+//! * **oracle** — a clairvoyant upper bound: every control interval the
+//!   placement is rebuilt from scratch (greedy replica counts +
+//!   Monte-Carlo location search on the same EWMA) at **zero** migration
+//!   cost. The controller cannot beat it; the gap it closes from static
+//!   toward the oracle is the headline number.
+//!
+//! Reported per arm: mean imbalance (max/mean GPU compute, post-warmup),
+//! net step time (FFN bottleneck under `CostModel::h100_testbed` plus all
+//! charged downtime), and the migration ledger. Knobs:
+//! `PLACEMENT_CONTROL_GPUS` (default 64; CI smoke uses the default),
+//! `PLACEMENT_CONTROL_STEPS` (default 96), `PLACEMENT_CONTROL_TOKENS`
+//! (tokens per source GPU, default 2048). Results land in
+//! `target/bench-results/placement_control.json`.
+
+use micromoe::balancer::MoeSession;
+use micromoe::bench_harness::{fmt_time, save_json, Table};
+use micromoe::cluster::CostModel;
+use micromoe::control::{ControlSpec, LoadDetector};
+use micromoe::placement::asymmetric::asymmetric_placement;
+use micromoe::placement::cayley::symmetric_placement;
+use micromoe::rng::Rng;
+use micromoe::scheduler::{LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use micromoe::ser::Json;
+use micromoe::topology::Topology;
+use micromoe::workload::{DriftingWorkload, Workload};
+
+fn knob(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+struct ArmResult {
+    name: &'static str,
+    mean_imbalance: f64,
+    net_time_s: f64,
+    downtime_s: f64,
+    decisions: u64,
+    moves: u64,
+    bytes: u64,
+}
+
+fn imbalance(max: u64, total: u64, gpus: usize) -> f64 {
+    max as f64 * gpus as f64 / total as f64
+}
+
+/// Drive a `MoeSession` arm over the trace; `warmup` steps are excluded
+/// from the imbalance mean (no decision can land before the first tick).
+fn run_session(
+    name: &'static str,
+    mut session: MoeSession,
+    trace: &[LoadMatrix],
+    model: &CostModel,
+    gpus: usize,
+    warmup: usize,
+) -> ArmResult {
+    let mut imb = 0.0;
+    let mut net = 0.0;
+    for (i, lm) in trace.iter().enumerate() {
+        let out = session.step(std::slice::from_ref(lm));
+        let plan = &out.layers[0];
+        let max = *plan.gpu_compute.iter().max().unwrap();
+        net += model.ffn_time(max) + plan.prep_extra;
+        if i >= warmup {
+            imb += imbalance(max, lm.total(), gpus);
+        }
+    }
+    let st = session.stats();
+    ArmResult {
+        name,
+        mean_imbalance: imb / (trace.len() - warmup) as f64,
+        net_time_s: net,
+        downtime_s: st.control.downtime,
+        decisions: st.control.decisions,
+        moves: st.control.moves,
+        bytes: st.control.bytes,
+    }
+}
+
+/// The oracle: re-place for free from the EWMA every `interval` steps.
+#[allow(clippy::too_many_arguments)]
+fn run_oracle(
+    trace: &[LoadMatrix],
+    topo: &Topology,
+    model: &CostModel,
+    spec: &ControlSpec,
+    experts: usize,
+    gpus: usize,
+    warmup: usize,
+    seed: u64,
+) -> ArmResult {
+    let slots_per_gpu = experts / gpus + spec.slot_headroom;
+    let mut rng = Rng::new(seed);
+    let mut det = LoadDetector::new(experts, spec);
+    let mut sched = MicroEpScheduler::new(
+        symmetric_placement(topo, experts),
+        Some(topo.clone()),
+        SchedulerOptions::default(),
+    );
+    let mut imb = 0.0;
+    let mut net = 0.0;
+    let mut replans = 0u64;
+    for (i, lm) in trace.iter().enumerate() {
+        det.observe(&lm.expert_loads());
+        if (i + 1) % spec.interval == 0 {
+            // clairvoyant and free: full Monte-Carlo re-placement, no
+            // migration charged, warm basis thrown away without penalty
+            let p = asymmetric_placement(gpus, det.ema(), slots_per_gpu, 64, &mut rng);
+            sched = MicroEpScheduler::new(p, Some(topo.clone()), SchedulerOptions::default());
+            replans += 1;
+        }
+        let s = sched.schedule(lm);
+        let max = s.stats.max_gpu_load;
+        net += model.ffn_time(max);
+        if i >= warmup {
+            imb += imbalance(max, lm.total(), gpus);
+        }
+    }
+    ArmResult {
+        name: "oracle",
+        mean_imbalance: imb / (trace.len() - warmup) as f64,
+        net_time_s: net,
+        downtime_s: 0.0,
+        decisions: replans,
+        moves: 0,
+        bytes: 0,
+    }
+}
+
+fn main() {
+    let gpus = knob("PLACEMENT_CONTROL_GPUS", 64);
+    let steps = knob("PLACEMENT_CONTROL_STEPS", 96);
+    let tokens = knob("PLACEMENT_CONTROL_TOKENS", 2048) as u64;
+    let experts = 2 * gpus;
+    let topo = Topology::new(gpus, gpus / 2, 2, 8);
+    let model = CostModel::h100_testbed();
+    let spec = ControlSpec { interval: 8, dwell: 2, ..Default::default() };
+    let warmup = spec.interval;
+
+    let mut wl = DriftingWorkload::new(experts, gpus, tokens, 1.3, 24, 0xCAFE);
+    let trace: Vec<LoadMatrix> = (0..steps).map(|_| wl.next_batch()).collect();
+
+    let session = |controlled: bool| {
+        let mut b = MoeSession::builder()
+            .topology(topo.clone())
+            .experts(experts)
+            .policy_name("micromoe")
+            .layers(1);
+        if controlled {
+            b = b
+                .control(spec.clone())
+                .migration_cost(CostModel::h100_testbed(), 1 << 22);
+        }
+        b.build().expect("session builds")
+    };
+
+    let arms = vec![
+        run_session("static", session(false), &trace, &model, gpus, warmup),
+        run_session("controller", session(true), &trace, &model, gpus, warmup),
+        run_oracle(&trace, &topo, &model, &spec, experts, gpus, warmup, 0xFEED),
+    ];
+
+    let mut table = Table::new(
+        &format!(
+            "Placement control: drifting Zipf, {gpus} GPUs x {experts} experts, \
+             {steps} steps, interval {}",
+            spec.interval
+        ),
+        &["arm", "mean imbalance", "net step time", "downtime", "decisions", "moves"],
+    );
+    let mut json = Vec::new();
+    for a in &arms {
+        table.row(vec![
+            a.name.to_string(),
+            format!("{:.3}x", a.mean_imbalance),
+            fmt_time(a.net_time_s),
+            fmt_time(a.downtime_s),
+            a.decisions.to_string(),
+            a.moves.to_string(),
+        ]);
+        json.push(Json::obj(vec![
+            ("arm", Json::Str(a.name.into())),
+            ("mean_imbalance", Json::Num(a.mean_imbalance)),
+            ("net_time_s", Json::Num(a.net_time_s)),
+            ("downtime_s", Json::Num(a.downtime_s)),
+            ("decisions", Json::Num(a.decisions as f64)),
+            ("moves", Json::Num(a.moves as f64)),
+            ("bytes", Json::Num(a.bytes as f64)),
+        ]));
+    }
+    table.print();
+
+    let [s, c, o] = &arms[..] else { unreachable!() };
+    let closed = if s.mean_imbalance > o.mean_imbalance {
+        (s.mean_imbalance - c.mean_imbalance) / (s.mean_imbalance - o.mean_imbalance)
+    } else {
+        0.0
+    };
+    println!(
+        "\ncontroller closes {:.0}% of the static→oracle imbalance gap while \
+         paying {} of migration downtime; net step time {} vs static {} \
+         (oracle floor {}).",
+        closed * 100.0,
+        fmt_time(c.downtime_s),
+        fmt_time(c.net_time_s),
+        fmt_time(s.net_time_s),
+        fmt_time(o.net_time_s),
+    );
+    let _ = save_json(
+        "placement_control",
+        &Json::obj(vec![
+            ("gpus", Json::Num(gpus as f64)),
+            ("experts", Json::Num(experts as f64)),
+            ("steps", Json::Num(steps as f64)),
+            ("tokens_per_gpu", Json::Num(tokens as f64)),
+            ("interval", Json::Num(spec.interval as f64)),
+            ("gap_closed", Json::Num(closed)),
+            ("arms", Json::Arr(json)),
+        ]),
+    );
+}

@@ -17,7 +17,7 @@
 //!
 //! | name | system |
 //! |---|---|
-//! | `micromoe` | MicroEP LPP scheduling; `options.engine` picks Barrier ([`LppBalancer`]) or Pipeline/Speculative ([`EngineBalancer`]) |
+//! | `micromoe` | MicroEP LPP scheduling; `options.engine` picks Barrier ([`LppBalancer`]) or Pipeline/Speculative ([`EngineBalancer`]); with [`MoeSessionBuilder::control`] the barrier arm becomes the two-timescale [`crate::control::ControlledLppBalancer`] |
 //! | `micromoe-ar` | the full paper system: LPP scheduling + §6.4 adaptive replacement ([`crate::baselines::MicroMoe`]) |
 //! | `vanilla-ep` | Megatron-LM fixed EP ([`crate::baselines::VanillaEp`]) |
 //! | `deepspeed-pad` | DeepSpeed/GShard capacity padding ([`crate::baselines::DeepSpeedPad`]) |
@@ -31,6 +31,7 @@ use crate::adaptive::AdaptiveConfig;
 use crate::baselines::{DeepSpeedPad, FlexMoe, MicroMoe, SmartMoe, VanillaEp};
 use crate::cluster::CostModel;
 use crate::config::PolicySpec;
+use crate::control::{ControlSpec, ControlledLppBalancer};
 use crate::engine::EngineMode;
 use crate::placement::cayley::symmetric_placement;
 use crate::placement::Placement;
@@ -171,7 +172,21 @@ impl MoeSessionBuilder {
         self
     }
 
-    /// RNG seed for stochastic policies (FlexMoE placement, AR search).
+    /// Attach the slow placement-control loop ([`crate::control`]): every
+    /// [`ControlSpec::interval`] steps the session re-evaluates per-expert
+    /// load EWMAs and, when the predicted density gain beats the migration
+    /// bill, replicates/migrates experts and rebuilds the affected layers'
+    /// warm scheduler bases. Only the `"micromoe"` policy on the barrier
+    /// engine accepts one (rejected at build otherwise). Migration pricing
+    /// defaults to [`CostModel::h100_testbed`]; override it (and the bytes
+    /// moved per replica) with [`MoeSessionBuilder::migration_cost`].
+    pub fn control(mut self, control: ControlSpec) -> Self {
+        self.spec.get_or_insert_with(PolicySpec::default).control = Some(control);
+        self
+    }
+
+    /// RNG seed for stochastic policies (FlexMoE placement, AR search,
+    /// controller density search at >16 GPUs).
     pub fn seed(mut self, seed: u64) -> Self {
         self.spec.get_or_insert_with(PolicySpec::default).seed = seed;
         self
@@ -205,8 +220,9 @@ impl MoeSessionBuilder {
         self
     }
 
-    /// Charge expert migrations of the periodic policies against this cost
-    /// model (`bytes_per_expert` copied per moved replica).
+    /// Charge expert migrations of the periodic policies — or of the
+    /// placement controller ([`MoeSessionBuilder::control`]) — against this
+    /// cost model (`bytes_per_expert` copied per moved replica).
     pub fn migration_cost(mut self, model: CostModel, bytes_per_expert: u64) -> Self {
         self.migration = Some((model, bytes_per_expert));
         self
@@ -279,12 +295,31 @@ impl MoeSessionBuilder {
                 spec.name
             )));
         }
-        if migration.is_some() && !periodic {
+        if migration.is_some() && !periodic && spec.control.is_none() {
             return Err(SessionError::Invalid(format!(
                 "policy '{}' never migrates experts; migration_cost only applies to \
-                 micromoe-ar/smartmoe/flexmoe",
+                 micromoe-ar/smartmoe/flexmoe and controller-enabled micromoe",
                 spec.name
             )));
+        }
+        if let Some(c) = &spec.control {
+            if spec.name != "micromoe" {
+                return Err(SessionError::Invalid(format!(
+                    "policy '{}' has no placement controller; control only applies to \
+                     'micromoe'",
+                    spec.name
+                )));
+            }
+            if !spec.options.engine.is_barrier() {
+                return Err(SessionError::Invalid(
+                    "the placement controller swaps per-layer placements and rebuilds \
+                     their warm bases mid-run; the engine modes share one placement \
+                     across a persistent pool, so control requires the barrier engine"
+                        .into(),
+                ));
+            }
+            c.validate()
+                .map_err(|e| SessionError::Invalid(format!("control spec: {e}")))?;
         }
         let takes_placement =
             matches!(spec.name.as_str(), "micromoe" | "micromoe-ar" | "least-loaded-inference");
@@ -300,6 +335,27 @@ impl MoeSessionBuilder {
             "micromoe" => {
                 let p = placement.unwrap_or_else(|| symmetric_placement(&topo, experts));
                 match spec.options.engine {
+                    EngineMode::Barrier if spec.control.is_some() => {
+                        let mut cspec =
+                            spec.control.clone().expect("checked control.is_some above");
+                        let model = match &migration {
+                            Some((m, bytes)) => {
+                                cspec.bytes_per_expert = *bytes;
+                                m.clone()
+                            }
+                            None => CostModel::h100_testbed(),
+                        };
+                        Box::new(ControlledLppBalancer::new(
+                            p,
+                            topo.clone(),
+                            spec.options.clone(),
+                            layers,
+                            overlap,
+                            cspec,
+                            model,
+                            spec.seed,
+                        ))
+                    }
                     EngineMode::Barrier => Box::new(LppBalancer::new(
                         p,
                         Some(topo.clone()),
@@ -634,6 +690,53 @@ mod tests {
                 .unwrap_err(),
             SessionError::Invalid(_)
         ));
+        // a controller on a policy without one
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name("smartmoe")
+                .control(ControlSpec::default())
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+        // a controller on the engine modes (it needs per-layer rebuilds,
+        // which only the barrier arm supports)
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name("micromoe")
+                .engine(EngineMode::pipeline())
+                .control(ControlSpec::default())
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+        // an internally inconsistent control spec
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name("micromoe")
+                .control(ControlSpec { hot_enter: 1.0, hot_exit: 2.0, ..Default::default() })
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
+        // migration costing still needs a policy that migrates: micromoe
+        // without a controller keeps rejecting it
+        assert!(matches!(
+            MoeSession::builder()
+                .topology(topo())
+                .experts(16)
+                .policy_name("micromoe")
+                .migration_cost(crate::cluster::CostModel::h100_testbed(), 1 << 20)
+                .build()
+                .unwrap_err(),
+            SessionError::Invalid(_)
+        ));
         // a placement on a policy that derives its layout from the topology
         assert!(matches!(
             MoeSession::builder()
@@ -649,6 +752,40 @@ mod tests {
             MoeSession::builder().topology(topo()).experts(16).layers(0).build().unwrap_err(),
             SessionError::Invalid(_)
         ));
+    }
+
+    #[test]
+    fn controller_session_ticks_and_reports_control_stats() {
+        // migration_cost with a controller is accepted and overrides the
+        // bytes moved per replica
+        let mut session = MoeSession::builder()
+            .topology(topo())
+            .experts(16)
+            .policy_name("micromoe")
+            .layers(2)
+            .seed(3)
+            .control(ControlSpec { interval: 4, dwell: 2, ..Default::default() })
+            .migration_cost(crate::cluster::CostModel::h100_testbed(), 1 << 22)
+            .build()
+            .unwrap();
+        assert_eq!(session.name(), "MicroMoE (controlled)");
+        // sustained skew toward one expert so the controller has work
+        for step in 0..12 {
+            let loads = vec![zipf_lm(16, 8, 600, 1.4, step), zipf_lm(16, 8, 600, 1.4, step)];
+            let out = session.step(&loads);
+            for (l, lm) in loads.iter().enumerate() {
+                assert_eq!(
+                    out.layers[l].gpu_compute.iter().sum::<u64>(),
+                    lm.total(),
+                    "step {step} layer {l}"
+                );
+            }
+        }
+        let st = session.stats();
+        assert_eq!(st.control.ticks, 3, "12 steps / interval 4");
+        assert!(st.control.decisions > 0, "skewed trace must trigger decisions");
+        assert_eq!(st.control.bytes, st.control.moves * (1 << 22), "bytes override");
+        assert!(st.prep_seconds >= st.control.downtime - 1e-12, "downtime charged");
     }
 
     #[test]

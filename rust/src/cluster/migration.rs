@@ -28,7 +28,10 @@ pub struct Move {
     pub src: usize,
 }
 
-/// Diff two placements into the replica copies required.
+/// Diff two placements into the replica copies required. The result is
+/// deterministically ordered by `(expert, src, dst)` so downstream
+/// consumers (controller decisions, trace spans, golden fixtures) see a
+/// stable move list regardless of replica-group iteration order.
 pub fn placement_diff(old: &Placement, new: &Placement, topo: &Topology) -> Vec<Move> {
     assert_eq!(old.num_experts, new.num_experts);
     let mut moves = Vec::new();
@@ -45,6 +48,7 @@ pub fn placement_diff(old: &Placement, new: &Placement, topo: &Topology) -> Vec<
             }
         }
     }
+    moves.sort_unstable_by_key(|m| (m.expert, m.src, m.dst));
     moves
 }
 
@@ -148,6 +152,57 @@ mod tests {
         let moves = placement_diff(&old, &new, &topo);
         let t = migration_time(&moves, expert_bytes(4096, 16384, true), &model, &topo, 8);
         assert!((0.05..2.0).contains(&t), "migration {t}s out of Fig-10 range");
+    }
+
+    #[test]
+    fn diff_is_sorted_by_expert_src_dst() {
+        // experts placed so the raw scan order (per-expert dst order)
+        // differs from the pinned (expert, src, dst) order
+        let old = Placement::from_replicas(4, vec![vec![3], vec![2], vec![1]]);
+        let new =
+            Placement::from_replicas(4, vec![vec![3, 2, 0], vec![2, 0], vec![1, 3]]);
+        let moves = placement_diff(&old, &new, &topo4());
+        let keys: Vec<_> = moves.iter().map(|m| (m.expert, m.src, m.dst)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "moves must come out ordered by (expert, src, dst)");
+        assert_eq!(moves.len(), 4);
+    }
+
+    #[test]
+    fn migration_time_monotone_in_bytes() {
+        let model = CostModel::h100_testbed();
+        let topo = topo4();
+        let moves = vec![
+            Move { expert: 0, dst: 1, src: 0 },
+            Move { expert: 1, dst: 3, src: 0 },
+        ];
+        let mut prev = 0.0;
+        for bytes in [1u64 << 20, 1 << 24, 1 << 28, 1 << 32] {
+            let t = migration_time(&moves, bytes, &model, &topo, 4);
+            assert!(t > prev, "time must strictly grow with bytes: {t} vs {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn migration_time_monotone_in_bandwidth() {
+        let topo = topo4();
+        let moves = vec![
+            Move { expert: 0, dst: 1, src: 0 }, // intra-node (NVLink tier)
+            Move { expert: 1, dst: 3, src: 0 }, // inter-node (IB tier)
+        ];
+        let b = expert_bytes(4096, 16384, true);
+        let base = CostModel::h100_testbed();
+        let t0 = migration_time(&moves, b, &base, &topo, 4);
+        // doubling either link tier's bandwidth must strictly shrink the
+        // total (each tier carries traffic in this move set)
+        let mut fast_nv = base.clone();
+        fast_nv.nvlink_bw *= 2.0;
+        assert!(migration_time(&moves, b, &fast_nv, &topo, 4) < t0);
+        let mut fast_ib = base.clone();
+        fast_ib.ib_bw *= 2.0;
+        assert!(migration_time(&moves, b, &fast_ib, &topo, 4) < t0);
     }
 
     #[test]

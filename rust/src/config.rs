@@ -5,6 +5,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 
+use crate::control::ControlSpec;
 use crate::engine::{EngineMode, ForecastConfig};
 use crate::lp::{FactorKind, Pricing, SolveBudget, SolverKind};
 use crate::scheduler::{ScheduleMode, SchedulerOptions};
@@ -133,6 +134,9 @@ pub struct PolicySpec {
     /// Re-plan cadence in micro-batches for the periodic policies
     /// (SmartMoE / FlexMoE / adaptive replacement); `None` = policy default.
     pub replan_every: Option<usize>,
+    /// Slow-loop placement controller ([`crate::control`]); only the
+    /// `"micromoe"` policy on the barrier engine accepts one.
+    pub control: Option<ControlSpec>,
 }
 
 impl Default for PolicySpec {
@@ -142,6 +146,7 @@ impl Default for PolicySpec {
             options: SchedulerOptions::default(),
             seed: 0,
             replan_every: None,
+            control: None,
         }
     }
 }
@@ -157,6 +162,9 @@ impl PolicySpec {
         if let Some(every) = self.replan_every {
             pairs.push(("replan_every", Json::Num(every as f64)));
         }
+        if let Some(c) = &self.control {
+            pairs.push(("control", control_spec_to_json(c)));
+        }
         Json::obj(pairs)
     }
 
@@ -165,7 +173,8 @@ impl PolicySpec {
     pub fn from_json(j: &Json) -> Result<PolicySpec, String> {
         let m = as_obj(j, "policy spec")?;
         for key in m.keys() {
-            if !matches!(key.as_str(), "policy" | "seed" | "replan_every" | "options") {
+            if !matches!(key.as_str(), "policy" | "seed" | "replan_every" | "options" | "control")
+            {
                 return Err(format!("policy spec: unknown field '{key}'"));
             }
         }
@@ -187,7 +196,11 @@ impl PolicySpec {
             Some(v) => scheduler_options_from_json(v)?,
             None => SchedulerOptions::default(),
         };
-        Ok(PolicySpec { name, options, seed, replan_every })
+        let control = match m.get("control") {
+            Some(v) => Some(control_spec_from_json(v)?),
+            None => None,
+        };
+        Ok(PolicySpec { name, options, seed, replan_every, control })
     }
 
     /// Parse a complete JSON document ([`PolicySpec::from_json`]).
@@ -334,6 +347,72 @@ pub fn scheduler_options_to_json(o: &SchedulerOptions) -> Json {
         pairs.push(("budget_max_wall_us", Json::Num(w.as_micros() as f64)));
     }
     Json::obj(pairs)
+}
+
+/// Serialize a [`ControlSpec`] to the JSON object
+/// [`control_spec_from_json`] accepts. Every knob is emitted (the spec has
+/// no mode-dependent fields), so a round-trip compares exactly.
+pub fn control_spec_to_json(c: &ControlSpec) -> Json {
+    Json::obj(vec![
+        ("interval", Json::Num(c.interval as f64)),
+        ("ema_alpha", Json::Num(c.ema_alpha)),
+        ("hot_enter", Json::Num(c.hot_enter)),
+        ("hot_exit", Json::Num(c.hot_exit)),
+        ("cold_enter", Json::Num(c.cold_enter)),
+        ("cold_exit", Json::Num(c.cold_exit)),
+        ("dwell", Json::Num(c.dwell as f64)),
+        ("budget_seconds", Json::Num(c.budget_seconds)),
+        ("max_moves", Json::Num(c.max_moves as f64)),
+        ("min_gain", Json::Num(c.min_gain)),
+        ("bytes_per_expert", Json::Num(c.bytes_per_expert as f64)),
+        ("slot_headroom", Json::Num(c.slot_headroom as f64)),
+    ])
+}
+
+/// Parse a [`ControlSpec`] from JSON: unknown fields are rejected, absent
+/// fields take the [`ControlSpec::default`] values, and the result must
+/// pass [`ControlSpec::validate`] (threshold ordering, positive periods).
+pub fn control_spec_from_json(j: &Json) -> Result<ControlSpec, String> {
+    let m = as_obj(j, "control")?;
+    for key in m.keys() {
+        if !matches!(
+            key.as_str(),
+            "interval"
+                | "ema_alpha"
+                | "hot_enter"
+                | "hot_exit"
+                | "cold_enter"
+                | "cold_exit"
+                | "dwell"
+                | "budget_seconds"
+                | "max_moves"
+                | "min_gain"
+                | "bytes_per_expert"
+                | "slot_headroom"
+        ) {
+            return Err(format!("control: unknown field '{key}'"));
+        }
+    }
+    let d = ControlSpec::default();
+    let spec = ControlSpec {
+        interval: get_usize(m, "interval", d.interval)?,
+        ema_alpha: get_f64(m, "ema_alpha", d.ema_alpha)?,
+        hot_enter: get_f64(m, "hot_enter", d.hot_enter)?,
+        hot_exit: get_f64(m, "hot_exit", d.hot_exit)?,
+        cold_enter: get_f64(m, "cold_enter", d.cold_enter)?,
+        cold_exit: get_f64(m, "cold_exit", d.cold_exit)?,
+        dwell: get_usize(m, "dwell", d.dwell)?,
+        budget_seconds: get_f64(m, "budget_seconds", d.budget_seconds)?,
+        max_moves: get_usize(m, "max_moves", d.max_moves)?,
+        min_gain: get_f64(m, "min_gain", d.min_gain)?,
+        bytes_per_expert: match m.get("bytes_per_expert") {
+            Some(v) => uint_field(v, "bytes_per_expert")?,
+            None => d.bytes_per_expert,
+        },
+        slot_headroom: get_usize(m, "slot_headroom", d.slot_headroom)?,
+    };
+    spec.validate().map_err(|e| format!("control: {e}"))?;
+    Ok(spec)
 }
 
 fn forecast_from_json(j: &Json) -> Result<ForecastConfig, String> {
@@ -717,6 +796,30 @@ mod tests {
                 },
                 ..Default::default()
             },
+            PolicySpec {
+                name: "micromoe".into(),
+                control: Some(ControlSpec::default()),
+                ..Default::default()
+            },
+            PolicySpec {
+                name: "micromoe".into(),
+                seed: 11,
+                control: Some(ControlSpec {
+                    interval: 32,
+                    ema_alpha: 0.5,
+                    hot_enter: 3.0,
+                    hot_exit: 2.0,
+                    cold_enter: 0.25,
+                    cold_exit: 0.5,
+                    dwell: 2,
+                    budget_seconds: 0.25,
+                    max_moves: 4,
+                    min_gain: 0.05,
+                    bytes_per_expert: 1 << 24,
+                    slot_headroom: 2,
+                }),
+                ..Default::default()
+            },
         ];
         for spec in specs {
             let parsed = PolicySpec::parse(&spec.to_json().to_string_pretty()).unwrap();
@@ -736,6 +839,24 @@ mod tests {
         ] {
             assert!(PolicySpec::parse(bad).is_err(), "accepted: {bad}");
         }
+    }
+
+    #[test]
+    fn control_spec_rejects_unknown_fields_and_invalid_bands() {
+        for bad in [
+            r#"{"policy": "micromoe", "control": {"bogus": 1}}"#,
+            // inverted hysteresis band fails ControlSpec::validate
+            r#"{"policy": "micromoe", "control": {"hot_enter": 1.0, "hot_exit": 1.5}}"#,
+            r#"{"policy": "micromoe", "control": {"interval": 0}}"#,
+            r#"{"policy": "micromoe", "control": {"dwell": 0.5}}"#,
+            r#"{"policy": "micromoe", "control": {"bytes_per_expert": -4}}"#,
+            r#"{"policy": "micromoe", "control": 7}"#,
+        ] {
+            assert!(PolicySpec::parse(bad).is_err(), "accepted: {bad}");
+        }
+        // absent fields default: an empty control object is the default spec
+        let spec = PolicySpec::parse(r#"{"policy": "micromoe", "control": {}}"#).unwrap();
+        assert_eq!(spec.control, Some(ControlSpec::default()));
     }
 
     #[test]

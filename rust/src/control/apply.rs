@@ -1,0 +1,368 @@
+//! Decision execution: the two-timescale balancer.
+//!
+//! [`ControlledLppBalancer`] wraps the barrier LPP fan-out (the
+//! [`crate::balancer::LppBalancer`] machinery) with the slow control loop:
+//! every step it feeds the raw per-layer loads to the detectors, and every
+//! `interval` steps it runs [`super::decide`] per layer. A committed
+//! decision
+//!
+//! 1. emits a [`crate::obs::Span::PlacementChange`] trace span,
+//! 2. swaps the layer's placement and **rebuilds that layer's scheduler
+//!    only** (a fresh [`MicroEpScheduler`] starts with a cold warm-start
+//!    basis, so the invalidation shows up honestly as one `cold_lp` rung
+//!    in [`crate::stats::DegradationStats`]; untouched layers keep their
+//!    warm bases),
+//! 3. charges the migration downtime into the layer's `prep_extra` for
+//!    this step (and into [`crate::stats::ControlStats`]), and
+//! 4. re-plans the step against the new placement.
+//!
+//! Realized gain is scored one tick later: the density of the *old*
+//! placement under the *new* EWMA shares minus the new placement's — the
+//! honest "what did the move actually buy" number
+//! ([`crate::stats::ControlStats::gain_accuracy`]).
+
+// fold_plan / fold_schedule / schedule_to_plan are the same crate-internal
+// helpers the plain policies use, so the controlled arm's accounting stays
+// bit-identical to LppBalancer's outside of control ticks
+use crate::balancer::{
+    fold_plan, fold_schedule, schedule_to_plan, Balancer, MoeLayerPlan, StepInput, StepOutput,
+};
+use crate::cluster::CostModel;
+use crate::obs::Span;
+use crate::placement::graph::max_induced_density;
+use crate::placement::Placement;
+use crate::rng::Rng;
+use crate::scheduler::{schedule_layers_parallel, LoadMatrix, MicroEpScheduler, SchedulerOptions};
+use crate::stats::{BalancerStats, ControlStats, StepStats};
+use crate::topology::Topology;
+
+use super::{decide, ControlSpec, LoadDetector};
+
+/// The `"micromoe"` barrier policy with the slow placement-control loop
+/// attached: per-layer warm-started LPP scheduling every step, per-layer
+/// replicate/evict placement adaptation every [`ControlSpec::interval`]
+/// steps. Built by `MoeSession::builder().control(..)`.
+pub struct ControlledLppBalancer {
+    topo: Topology,
+    opts: SchedulerOptions,
+    model: CostModel,
+    spec: ControlSpec,
+    slot_budget: usize,
+    overlap: bool,
+    placements: Vec<Placement>,
+    scheds: Vec<MicroEpScheduler>,
+    detectors: Vec<LoadDetector>,
+    rngs: Vec<Rng>,
+    /// old placement per layer awaiting realized-gain scoring next tick
+    pending: Vec<Option<Placement>>,
+    step: usize,
+    ticks: usize,
+    stats: BalancerStats,
+}
+
+impl ControlledLppBalancer {
+    /// One detector + scheduler + decision stream per layer over a shared
+    /// starting placement. `seed` forks one decision rng per layer (only
+    /// consumed by the approximate density evaluator, i.e. never at ≤16
+    /// GPUs). The controller may deepen GPUs up to the starting
+    /// placement's deepest slot count plus [`ControlSpec::slot_headroom`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        placement: Placement,
+        topo: Topology,
+        opts: SchedulerOptions,
+        layers: usize,
+        overlap: bool,
+        spec: ControlSpec,
+        model: CostModel,
+        seed: u64,
+    ) -> Self {
+        assert!(layers > 0, "balancer needs at least one layer");
+        spec.validate().expect("control spec must be validated by the builder");
+        let g = placement.num_gpus;
+        let deepest = (0..g).map(|gpu| placement.slots_used(gpu)).max().unwrap_or(1);
+        let slot_budget = deepest + spec.slot_headroom;
+        let scheds = (0..layers)
+            .map(|l| {
+                let mut s =
+                    MicroEpScheduler::new(placement.clone(), Some(topo.clone()), opts.clone());
+                s.set_layer(l);
+                s
+            })
+            .collect();
+        let detectors =
+            (0..layers).map(|_| LoadDetector::new(placement.num_experts, &spec)).collect();
+        let mut root = Rng::new(seed);
+        let rngs = (0..layers).map(|l| root.fork(l as u64)).collect();
+        ControlledLppBalancer {
+            topo,
+            opts,
+            model,
+            spec,
+            slot_budget,
+            overlap,
+            placements: vec![placement; layers],
+            scheds,
+            detectors,
+            rngs,
+            pending: vec![None; layers],
+            step: 0,
+            ticks: 0,
+            stats: BalancerStats::default(),
+        }
+    }
+
+    /// MoE layers scheduled per step.
+    pub fn layers(&self) -> usize {
+        self.scheds.len()
+    }
+
+    /// Control ticks run so far.
+    pub fn ticks(&self) -> usize {
+        self.ticks
+    }
+
+    /// Current per-layer placements (starts as `layers` copies of the
+    /// build placement; diverges as per-layer decisions commit).
+    pub fn placements(&self) -> &[Placement] {
+        &self.placements
+    }
+
+    /// Layer `l`'s detector state — the replay surface the golden and
+    /// determinism tests drive independently of any scheduling.
+    pub fn detector(&self, layer: usize) -> &LoadDetector {
+        &self.detectors[layer]
+    }
+
+    /// Run one control tick over every layer: score last tick's realized
+    /// gains, then ask [`decide`] for new placements. Returns this tick's
+    /// [`ControlStats`] plus the per-layer downtime to charge.
+    fn control_tick(&mut self) -> (ControlStats, Vec<f64>) {
+        self.ticks += 1;
+        let mut control = ControlStats { ticks: 1, ..Default::default() };
+        let mut charge = vec![0.0; self.scheds.len()];
+        for l in 0..self.scheds.len() {
+            // realized gain of the *previous* decision, under today's EWMA
+            if let Some(old) = self.pending[l].take() {
+                let ema: Vec<f64> = self.detectors[l].ema().to_vec();
+                let d_old = max_induced_density(&old, &ema, &mut self.rngs[l]).density;
+                let d_new =
+                    max_induced_density(&self.placements[l], &ema, &mut self.rngs[l]).density;
+                control.realized_gain += d_old - d_new;
+            }
+            let Some(d) = decide(
+                &self.placements[l],
+                &self.detectors[l],
+                &self.topo,
+                &self.model,
+                &self.spec,
+                self.slot_budget,
+                &mut self.rngs[l],
+            ) else {
+                continue;
+            };
+            self.opts.trace.record(d.downtime * 1e6, Span::PlacementChange {
+                step: self.step,
+                tick: self.ticks,
+                moves: d.moves.len(),
+                bytes: d.bytes,
+                predicted_gain: d.predicted_gain,
+                downtime: d.downtime,
+            });
+            control.decisions += 1;
+            control.moves += d.moves.len() as u64;
+            control.bytes += d.bytes;
+            control.downtime += d.downtime;
+            control.predicted_gain += d.predicted_gain;
+            charge[l] = d.downtime;
+            // swap the placement; keep the old one for realized-gain
+            // scoring at the next tick
+            let old = std::mem::replace(&mut self.placements[l], d.placement);
+            self.pending[l] = Some(old);
+            // warm-basis invalidation, this layer only: a fresh scheduler
+            // has no basis, so its next solve takes the cold_lp rung
+            let mut fresh = MicroEpScheduler::new(
+                self.placements[l].clone(),
+                Some(self.topo.clone()),
+                self.opts.clone(),
+            );
+            fresh.set_layer(l);
+            self.scheds[l] = fresh;
+        }
+        (control, charge)
+    }
+}
+
+impl Balancer for ControlledLppBalancer {
+    fn name(&self) -> &str {
+        "MicroMoE (controlled)"
+    }
+
+    fn step(&mut self, input: &StepInput) -> StepOutput {
+        assert_eq!(input.loads.len(), self.scheds.len(), "one load matrix per layer");
+        // detectors see the raw input loads before any scheduling — the
+        // decision stream depends only on the load trace, spec, and seed
+        for (det, lm) in self.detectors.iter_mut().zip(input.loads) {
+            det.observe(&lm.expert_loads());
+        }
+        self.step += 1;
+        let (control, charge) = if self.step % self.spec.interval == 0 {
+            self.control_tick()
+        } else {
+            (ControlStats::default(), vec![0.0; self.scheds.len()])
+        };
+        // re-plan against the (possibly just-changed) placements
+        let schedules = schedule_layers_parallel(&mut self.scheds, input.loads);
+        let mut stats = StepStats::default();
+        let layers: Vec<MoeLayerPlan> = schedules
+            .into_iter()
+            .enumerate()
+            .map(|(l, s)| {
+                fold_schedule(&mut stats, &s.stats);
+                let mut plan = schedule_to_plan(s, &self.placements[l], self.overlap);
+                plan.prep_extra += charge[l];
+                fold_plan(&mut stats, &plan);
+                plan
+            })
+            .collect();
+        stats.control = control;
+        self.stats.absorb(&stats);
+        StepOutput { layers, stats }
+    }
+
+    fn warm_hint(&mut self, expected: &[LoadMatrix]) {
+        assert_eq!(expected.len(), self.scheds.len(), "one expected load matrix per layer");
+        // prime each layer's warm basis with a discarded solve; detectors
+        // are NOT fed — hints are speculative, not observed traffic
+        for (s, lm) in self.scheds.iter_mut().zip(expected) {
+            let _ = s.schedule(lm);
+        }
+    }
+
+    fn stats(&self) -> BalancerStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::migration::expert_bytes;
+    use crate::placement::cayley::symmetric_placement;
+    use crate::workload::{DriftingWorkload, Workload};
+
+    fn topo() -> Topology {
+        Topology::new(8, 4, 2, 8)
+    }
+
+    fn spec() -> ControlSpec {
+        ControlSpec {
+            interval: 4,
+            dwell: 2,
+            bytes_per_expert: expert_bytes(256, 1024, true),
+            ..Default::default()
+        }
+    }
+
+    fn controlled(layers: usize) -> ControlledLppBalancer {
+        let topo = topo();
+        let placement = symmetric_placement(&topo, 16);
+        ControlledLppBalancer::new(
+            placement,
+            topo,
+            SchedulerOptions::default(),
+            layers,
+            false,
+            spec(),
+            CostModel::h100_testbed(),
+            42,
+        )
+    }
+
+    fn drift_trace(steps: usize, layers: usize) -> Vec<Vec<LoadMatrix>> {
+        let mut wl = DriftingWorkload::new(16, 8, 2048, 1.2, 8, 99);
+        (0..steps).map(|_| (0..layers).map(|_| wl.next_batch()).collect()).collect()
+    }
+
+    #[test]
+    fn controller_ticks_and_conserves_tokens() {
+        let mut b = controlled(2);
+        let trace = drift_trace(20, 2);
+        for (i, loads) in trace.iter().enumerate() {
+            let out = b.step(&StepInput { loads });
+            assert_eq!(out.layers.len(), 2);
+            for (l, plan) in out.layers.iter().enumerate() {
+                assert_eq!(
+                    plan.gpu_compute.iter().sum::<u64>(),
+                    loads[l].total(),
+                    "token conservation at step {i} layer {l}"
+                );
+            }
+        }
+        assert_eq!(b.ticks(), 5, "20 steps / interval 4");
+        let st = b.stats();
+        assert_eq!(st.control.ticks, 5);
+        assert!(st.control.decisions > 0, "drifting Zipf must trigger decisions");
+        assert!(st.control.downtime > 0.0);
+        // downtime was charged into prep time
+        assert!(st.prep_seconds >= st.control.downtime - 1e-12);
+    }
+
+    #[test]
+    fn reruns_are_bit_identical() {
+        let trace = drift_trace(24, 1);
+        let run = || {
+            let mut b = controlled(1);
+            for loads in &trace {
+                b.step(&StepInput { loads });
+            }
+            (b.stats(), b.placements().to_vec())
+        };
+        let (sa, pa) = run();
+        let (sb, pb) = run();
+        assert_eq!(sa.control, sb.control);
+        assert_eq!(pa[0].replicas, pb[0].replicas);
+        assert_eq!(sa.control.downtime.to_bits(), sb.control.downtime.to_bits());
+        assert_eq!(sa.control.predicted_gain.to_bits(), sb.control.predicted_gain.to_bits());
+    }
+
+    #[test]
+    fn off_tick_steps_never_touch_placement() {
+        let mut b = controlled(1);
+        let trace = drift_trace(3, 1); // interval 4: no tick in 3 steps
+        let before = b.placements()[0].replicas.clone();
+        for loads in &trace {
+            let out = b.step(&StepInput { loads });
+            assert_eq!(out.stats.control, ControlStats::default());
+            assert_eq!(out.layers[0].prep_extra, 0.0);
+        }
+        assert_eq!(b.placements()[0].replicas, before);
+        assert_eq!(b.ticks(), 0);
+    }
+
+    #[test]
+    fn only_decided_layers_lose_their_warm_basis() {
+        // layer 0 sees drifting skew (decisions), layer 1 steady uniform
+        // (no decisions): layer 1 must keep warm-solving every step after
+        // the first, i.e. cold_lp rung count stays at layers-with-decisions
+        let mut b = controlled(2);
+        let mut wl = DriftingWorkload::new(16, 8, 2048, 1.4, 6, 5);
+        let uniform = {
+            let mut lm = LoadMatrix::zeros(16, 8);
+            for e in 0..16 {
+                for g in 0..8 {
+                    lm.add(e, g, 16);
+                }
+            }
+            lm
+        };
+        for _ in 0..24 {
+            let loads = vec![wl.next_batch(), uniform.clone()];
+            b.step(&StepInput { loads: &loads });
+        }
+        let st = b.stats();
+        // every decision costs exactly one cold re-solve (the rebuilt
+        // layer); the two initial cold solves are the baseline
+        assert_eq!(st.degradation.cold_lp, 2 + st.control.decisions, "per-layer invalidation");
+    }
+}

@@ -1,0 +1,312 @@
+//! Placement-change proposals: greedy replication of hot experts (with
+//! cold-replica eviction when slots run out) scored by predicted Eq.-3
+//! density gain against the migration bill.
+//!
+//! Each control tick calls [`decide`] with the layer's current placement
+//! and detector state. The decider builds a proposal one operation at a
+//! time: every operation is re-scored with the real density evaluator
+//! ([`crate::placement::graph::max_induced_density`]) on the EWMA load
+//! shares and re-priced with the real migration model
+//! ([`crate::cluster::migration::migration_time`]) on the cumulative move
+//! list — so the accepted decision's predicted gain and downtime are
+//! exactly what the balancer then charges and traces.
+
+use crate::cluster::migration::{migration_time, placement_diff, Move};
+use crate::cluster::CostModel;
+use crate::placement::graph::max_induced_density;
+use crate::placement::Placement;
+use crate::rng::Rng;
+use crate::topology::Topology;
+
+use super::{ControlSpec, LoadDetector};
+
+/// One committed placement change: the new placement, the replica copies
+/// that realize it, and the decision-time accounting the balancer charges
+/// into [`crate::stats::ControlStats`].
+#[derive(Clone, Debug)]
+pub struct Decision {
+    /// The placement to switch to (already [`Placement::validate`]d).
+    pub placement: Placement,
+    /// Replica copies `placement_diff(old, new)` — deterministically
+    /// ordered by `(expert, src, dst)`.
+    pub moves: Vec<Move>,
+    /// Predicted Eq.-3 density improvement on the EWMA shares (old density
+    /// minus new density; positive).
+    pub predicted_gain: f64,
+    /// Migration downtime for `moves`, seconds.
+    pub downtime: f64,
+    /// Total bytes migrated (`moves.len() × bytes_per_expert`).
+    pub bytes: u64,
+    /// Hot-expert replications in the proposal.
+    pub replications: usize,
+    /// Cold replicas evicted to make room.
+    pub evictions: usize,
+}
+
+/// Proxy per-GPU load under `ema` shares: each expert's share split evenly
+/// across its replicas. Cheap stand-in for ranking destination GPUs; the
+/// accept/reject call is always made by the real density evaluator.
+fn proxy_loads(replicas: &[Vec<usize>], ema: &[f64], num_gpus: usize) -> Vec<f64> {
+    let mut proxy = vec![0.0; num_gpus];
+    for (e, group) in replicas.iter().enumerate() {
+        let per = ema[e] / group.len() as f64;
+        for &g in group {
+            proxy[g] += per;
+        }
+    }
+    proxy
+}
+
+/// Propose a placement change for one layer, or `None` when the current
+/// placement is already good enough (no hot experts, every operation over
+/// budget, or total predicted gain under `min_gain × current density`).
+///
+/// Deterministic for a fixed `(current, detector, spec, rng)` state: hot
+/// experts are visited by descending EWMA share (index ties ascending),
+/// candidate GPUs by ascending proxy load (then index), eviction victims
+/// by ascending EWMA share (then index). `rng` is only consumed by the
+/// approximate density evaluator, i.e. never at ≤16 GPUs.
+#[allow(clippy::too_many_arguments)]
+pub fn decide(
+    current: &Placement,
+    detector: &LoadDetector,
+    topo: &Topology,
+    model: &CostModel,
+    spec: &ControlSpec,
+    slot_budget: usize,
+    rng: &mut Rng,
+) -> Option<Decision> {
+    assert_eq!(detector.num_experts(), current.num_experts, "detector/placement shape");
+    if detector.observed() == 0 {
+        return None;
+    }
+    let g = current.num_gpus;
+    let ema: Vec<f64> = detector.ema().to_vec();
+    let base = max_induced_density(current, &ema, rng).density;
+
+    // working replica groups, mutated op by op
+    let mut working: Vec<Vec<usize>> = current.replicas.clone();
+    let mut used: Vec<usize> = (0..g)
+        .map(|gpu| working.iter().filter(|grp| grp.contains(&gpu)).count())
+        .collect();
+
+    let mut hot: Vec<usize> =
+        (0..working.len()).filter(|&e| detector.hot()[e]).collect();
+    hot.sort_by(|&a, &b| {
+        ema[b].partial_cmp(&ema[a]).expect("EWMA shares are finite").then(a.cmp(&b))
+    });
+
+    let mut cur_density = base;
+    let mut replications = 0usize;
+    let mut evictions = 0usize;
+
+    for &e in &hot {
+        if working[e].len() >= g {
+            continue; // already everywhere
+        }
+        let proxy = proxy_loads(&working, &ema, g);
+        // coolest non-hosting GPU with a free slot
+        let mut dst = (0..g)
+            .filter(|&gpu| !working[e].contains(&gpu) && used[gpu] < slot_budget)
+            .min_by(|&a, &b| {
+                proxy[a].partial_cmp(&proxy[b]).expect("proxy loads are finite").then(a.cmp(&b))
+            });
+        // no free slot anywhere: evict the coldest cold replica on the
+        // coolest non-hosting GPU that has one
+        let mut evicted: Option<(usize, usize)> = None; // (victim expert, gpu)
+        if dst.is_none() {
+            let mut gpus: Vec<usize> =
+                (0..g).filter(|&gpu| !working[e].contains(&gpu)).collect();
+            gpus.sort_by(|&a, &b| {
+                proxy[a].partial_cmp(&proxy[b]).expect("proxy loads are finite").then(a.cmp(&b))
+            });
+            'search: for gpu in gpus {
+                let victim = (0..working.len())
+                    .filter(|&c| {
+                        c != e
+                            && detector.cold()[c]
+                            && !detector.hot()[c]
+                            && working[c].len() > 1
+                            && working[c].contains(&gpu)
+                    })
+                    .min_by(|&a, &b| {
+                        ema[a]
+                            .partial_cmp(&ema[b])
+                            .expect("EWMA shares are finite")
+                            .then(a.cmp(&b))
+                    });
+                if let Some(c) = victim {
+                    working[c].retain(|&x| x != gpu);
+                    used[gpu] -= 1;
+                    evicted = Some((c, gpu));
+                    dst = Some(gpu);
+                    break 'search;
+                }
+            }
+        }
+        let Some(dst) = dst else { continue };
+
+        // tentative op: replicate e onto dst
+        working[e].push(dst);
+        working[e].sort_unstable();
+        used[dst] += 1;
+        let tentative = Placement::from_replicas(g, working.clone());
+        let moves = placement_diff(current, &tentative, topo);
+        let over_budget = moves.len() > spec.max_moves
+            || migration_time(&moves, spec.bytes_per_expert, model, topo, g)
+                > spec.budget_seconds;
+        let density =
+            if over_budget { f64::INFINITY } else { max_induced_density(&tentative, &ema, rng).density };
+        if !over_budget && density < cur_density - 1e-12 {
+            cur_density = density;
+            replications += 1;
+            if evicted.is_some() {
+                evictions += 1;
+            }
+        } else {
+            // revert the op (different later ops may still fit the budget)
+            working[e].retain(|&x| x != dst);
+            used[dst] -= 1;
+            if let Some((c, gpu)) = evicted {
+                working[c].push(gpu);
+                working[c].sort_unstable();
+                used[gpu] += 1;
+            }
+        }
+    }
+
+    if replications == 0 {
+        return None;
+    }
+    let predicted_gain = base - cur_density;
+    if predicted_gain <= spec.min_gain * base {
+        return None;
+    }
+    let placement = Placement::from_replicas(g, working);
+    placement.validate().expect("controller proposed an invalid placement");
+    let moves = placement_diff(current, &placement, topo);
+    let downtime = migration_time(&moves, spec.bytes_per_expert, model, topo, g);
+    let bytes = moves.len() as u64 * spec.bytes_per_expert;
+    Some(Decision { placement, moves, predicted_gain, downtime, bytes, replications, evictions })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::migration::expert_bytes;
+
+    fn topo() -> Topology {
+        Topology::new(4, 2, 2, 2)
+    }
+
+    fn spec() -> ControlSpec {
+        ControlSpec {
+            dwell: 2,
+            // small expert so the default 0.5 s budget fits several copies
+            bytes_per_expert: expert_bytes(256, 1024, true),
+            ..Default::default()
+        }
+    }
+
+    /// Detector driven to a steady skew: expert 0 hot, the tail cold.
+    fn skewed_detector(experts: usize, spec: &ControlSpec) -> LoadDetector {
+        let mut d = LoadDetector::new(experts, spec);
+        let mut loads = vec![40u64; experts];
+        loads[0] = 1000;
+        for _ in 0..12 {
+            d.observe(&loads);
+        }
+        assert!(d.hot()[0], "setup: expert 0 must be hot");
+        d
+    }
+
+    #[test]
+    fn stationary_uniform_yields_no_decision() {
+        let s = spec();
+        let mut d = LoadDetector::new(8, &s);
+        for _ in 0..20 {
+            d.observe(&[100; 8]);
+        }
+        let p = Placement::from_replicas(4, (0..8).map(|e| vec![e % 4]).collect());
+        let mut rng = Rng::new(1);
+        assert!(decide(&p, &d, &topo(), &CostModel::h100_testbed(), &s, 3, &mut rng).is_none());
+    }
+
+    #[test]
+    fn hot_expert_gets_replicated_with_positive_gain() {
+        let s = spec();
+        let d = skewed_detector(8, &s);
+        let p = Placement::from_replicas(4, (0..8).map(|e| vec![e % 4]).collect());
+        let mut rng = Rng::new(1);
+        let dec = decide(&p, &d, &topo(), &CostModel::h100_testbed(), &s, 3, &mut rng)
+            .expect("hot skew must trigger a decision");
+        assert!(dec.placement.replica_count(0) > 1, "hot expert replicated");
+        assert!(dec.predicted_gain > 0.0);
+        assert!(dec.downtime > 0.0);
+        assert_eq!(dec.bytes, dec.moves.len() as u64 * s.bytes_per_expert);
+        assert!(!dec.moves.is_empty());
+        dec.placement.validate().unwrap();
+        // moves reproduce the placement diff exactly
+        assert_eq!(dec.moves, placement_diff(&p, &dec.placement, &topo()));
+    }
+
+    #[test]
+    fn budget_below_reinit_floor_blocks_everything() {
+        // migration_time has a 50 ms re-init floor; a 10 ms budget can
+        // never be met, so no decision may come out
+        let s = ControlSpec { budget_seconds: 0.01, ..spec() };
+        let d = skewed_detector(8, &s);
+        let p = Placement::from_replicas(4, (0..8).map(|e| vec![e % 4]).collect());
+        let mut rng = Rng::new(1);
+        assert!(decide(&p, &d, &topo(), &CostModel::h100_testbed(), &s, 3, &mut rng).is_none());
+    }
+
+    #[test]
+    fn full_slots_force_cold_eviction() {
+        let s = spec();
+        let d = skewed_detector(8, &s);
+        // every GPU fully packed at 2 slots; expert 1 double-replicated so
+        // a cold victim with >1 replicas exists off expert 0's GPU
+        let p = Placement::from_replicas(
+            4,
+            vec![
+                vec![0],
+                vec![1, 2],
+                vec![1],
+                vec![2],
+                vec![3],
+                vec![3],
+                vec![0],
+                // expert 7 keeps its single replica (never evictable)
+                vec![2],
+            ],
+        );
+        assert!((0..4).all(|g| p.slots_used(g) >= 2));
+        let mut rng = Rng::new(1);
+        let dec = decide(&p, &d, &topo(), &CostModel::h100_testbed(), &s, 2, &mut rng)
+            .expect("eviction path must free a slot for the hot expert");
+        assert!(dec.evictions >= 1, "a cold replica must have been evicted");
+        assert!(dec.placement.replica_count(0) > 1);
+        // single-replica experts survive: eviction never orphans an expert
+        for e in 0..8 {
+            assert!(dec.placement.replica_count(e) >= 1);
+        }
+        dec.placement.validate().unwrap();
+    }
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let s = spec();
+        let d = skewed_detector(8, &s);
+        let p = Placement::from_replicas(4, (0..8).map(|e| vec![e % 4]).collect());
+        let run = || {
+            let mut rng = Rng::new(7);
+            decide(&p, &d, &topo(), &CostModel::h100_testbed(), &s, 3, &mut rng)
+        };
+        let (a, b) = (run().unwrap(), run().unwrap());
+        assert_eq!(a.moves, b.moves);
+        assert_eq!(a.placement.replicas, b.placement.replicas);
+        assert_eq!(a.predicted_gain.to_bits(), b.predicted_gain.to_bits());
+        assert_eq!(a.downtime.to_bits(), b.downtime.to_bits());
+    }
+}

@@ -1,0 +1,232 @@
+//! Hot/cold expert detection: per-expert EWMA load shares with dual
+//! hysteresis state machines.
+//!
+//! The detector observes each layer's raw `input_e^g` totals *before*
+//! scheduling, so its state — and therefore every controller decision — is
+//! a pure function of the load trace, the spec, and the seed, independent
+//! of how (or on how many workers) the fast loop solved the LPs.
+//!
+//! Hysteresis follows the classic thermostat shape: a *hot* flag turns on
+//! only after the smoothed share exceeds `hot_enter / E` for `dwell`
+//! consecutive observations, and turns off only after it drops below
+//! `hot_exit / E` for `dwell` consecutive observations (with
+//! `hot_exit < hot_enter`, so shares oscillating inside the band never
+//! flap the flag). The *cold* flag is the mirror image around
+//! `cold_enter / E < cold_exit / E`.
+
+use super::ControlSpec;
+
+/// Per-expert load EWMA plus hot/cold hysteresis state (one per layer in
+/// the controller).
+#[derive(Clone, Debug)]
+pub struct LoadDetector {
+    alpha: f64,
+    hot_enter: f64,
+    hot_exit: f64,
+    cold_enter: f64,
+    cold_exit: f64,
+    dwell: usize,
+    /// smoothed load *shares* (sum ≈ 1 once primed)
+    ema: Vec<f64>,
+    primed: bool,
+    hot: Vec<bool>,
+    hot_run: Vec<usize>,
+    cold: Vec<bool>,
+    cold_run: Vec<usize>,
+    observed: usize,
+}
+
+impl LoadDetector {
+    /// Fresh detector for `num_experts` experts under `spec`'s thresholds.
+    /// Thresholds are stored pre-scaled by the uniform share `1/E`.
+    pub fn new(num_experts: usize, spec: &ControlSpec) -> Self {
+        assert!(num_experts > 0, "detector needs at least one expert");
+        let uniform = 1.0 / num_experts as f64;
+        LoadDetector {
+            alpha: spec.ema_alpha,
+            hot_enter: spec.hot_enter * uniform,
+            hot_exit: spec.hot_exit * uniform,
+            cold_enter: spec.cold_enter * uniform,
+            cold_exit: spec.cold_exit * uniform,
+            dwell: spec.dwell,
+            ema: vec![0.0; num_experts],
+            primed: false,
+            hot: vec![false; num_experts],
+            hot_run: vec![0; num_experts],
+            cold: vec![false; num_experts],
+            cold_run: vec![0; num_experts],
+            observed: 0,
+        }
+    }
+
+    /// Feed one step's per-expert token totals. An all-zero step (no MoE
+    /// tokens this micro-batch) is skipped entirely — it carries no share
+    /// information and must not decay the EWMA toward zero.
+    pub fn observe(&mut self, loads: &[u64]) {
+        assert_eq!(loads.len(), self.ema.len(), "one load per expert");
+        let total: u64 = loads.iter().sum();
+        if total == 0 {
+            return;
+        }
+        let inv = 1.0 / total as f64;
+        if !self.primed {
+            for (m, &x) in self.ema.iter_mut().zip(loads) {
+                *m = x as f64 * inv;
+            }
+            self.primed = true;
+        } else {
+            for (m, &x) in self.ema.iter_mut().zip(loads) {
+                *m = self.alpha * (x as f64 * inv) + (1.0 - self.alpha) * *m;
+            }
+        }
+        self.observed += 1;
+        for e in 0..self.ema.len() {
+            let m = self.ema[e];
+            // hot machine
+            let crossing = if self.hot[e] { m < self.hot_exit } else { m > self.hot_enter };
+            if crossing {
+                self.hot_run[e] += 1;
+                if self.hot_run[e] >= self.dwell {
+                    self.hot[e] = !self.hot[e];
+                    self.hot_run[e] = 0;
+                }
+            } else {
+                self.hot_run[e] = 0;
+            }
+            // cold machine (mirror image)
+            let crossing = if self.cold[e] { m > self.cold_exit } else { m < self.cold_enter };
+            if crossing {
+                self.cold_run[e] += 1;
+                if self.cold_run[e] >= self.dwell {
+                    self.cold[e] = !self.cold[e];
+                    self.cold_run[e] = 0;
+                }
+            } else {
+                self.cold_run[e] = 0;
+            }
+        }
+    }
+
+    /// Smoothed per-expert load shares (all zero until the first non-empty
+    /// observation).
+    pub fn ema(&self) -> &[f64] {
+        &self.ema
+    }
+
+    /// Experts currently flagged persistently hot.
+    pub fn hot(&self) -> &[bool] {
+        &self.hot
+    }
+
+    /// Experts currently flagged persistently cold.
+    pub fn cold(&self) -> &[bool] {
+        &self.cold
+    }
+
+    /// Non-empty observations folded in so far.
+    pub fn observed(&self) -> usize {
+        self.observed
+    }
+
+    /// Number of experts tracked.
+    pub fn num_experts(&self) -> usize {
+        self.ema.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ControlSpec {
+        ControlSpec { dwell: 3, ..Default::default() }
+    }
+
+    /// skewed step: expert 0 takes `frac` of 1000 tokens, rest uniform
+    fn skewed(e: usize, frac: f64) -> Vec<u64> {
+        let hotload = (1000.0 * frac) as u64;
+        let rest = (1000 - hotload) / (e as u64 - 1);
+        let mut v = vec![rest; e];
+        v[0] = hotload;
+        v
+    }
+
+    #[test]
+    fn first_observation_seeds_ema_exactly() {
+        let mut d = LoadDetector::new(4, &spec());
+        d.observe(&[10, 20, 30, 40]);
+        assert_eq!(d.ema(), &[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(d.observed(), 1);
+    }
+
+    #[test]
+    fn zero_total_steps_are_skipped() {
+        let mut d = LoadDetector::new(4, &spec());
+        d.observe(&[10, 20, 30, 40]);
+        let before = d.ema().to_vec();
+        d.observe(&[0, 0, 0, 0]);
+        assert_eq!(d.ema(), &before[..]);
+        assert_eq!(d.observed(), 1);
+    }
+
+    #[test]
+    fn dwell_blocks_single_spike() {
+        let mut d = LoadDetector::new(8, &spec());
+        // steady uniform, then one hot spike, then uniform again
+        for _ in 0..5 {
+            d.observe(&[125; 8]);
+        }
+        d.observe(&skewed(8, 0.9));
+        assert!(!d.hot()[0], "one spike must not flip the hot flag");
+    }
+
+    #[test]
+    fn sustained_heat_enters_after_dwell_and_band_prevents_flapping() {
+        let mut d = LoadDetector::new(8, &spec());
+        // sustained 60% share on expert 0: uniform share is 1/8, so the
+        // EWMA crosses 2/8 quickly and must stay crossed `dwell` steps
+        for _ in 0..10 {
+            d.observe(&skewed(8, 0.6));
+        }
+        assert!(d.hot()[0], "sustained skew must flag hot");
+        assert!(!d.cold()[0]);
+        assert!(d.cold().iter().skip(1).all(|&c| c), "starved experts go cold");
+        // decay into the hysteresis band (between hot_exit and hot_enter):
+        // the flag must hold
+        let spec_scaled_exit = 1.5 / 8.0;
+        let spec_scaled_enter = 2.0 / 8.0;
+        for _ in 0..100 {
+            d.observe(&skewed(8, 0.23)); // share inside (1.5/8, 2/8)
+            let m = d.ema()[0];
+            if m < spec_scaled_enter && m > spec_scaled_exit {
+                assert!(d.hot()[0], "EWMA inside the band must not exit hot");
+            }
+        }
+        // full cooldown exits
+        for _ in 0..50 {
+            d.observe(&[125; 8]);
+        }
+        assert!(!d.hot()[0], "uniform load must eventually exit hot");
+    }
+
+    #[test]
+    fn detector_state_is_independent_of_call_site() {
+        // bit-determinism: two detectors fed the same trace agree exactly
+        let (mut a, mut b) = (LoadDetector::new(8, &spec()), LoadDetector::new(8, &spec()));
+        let mut x = 1u64;
+        for _ in 0..64 {
+            // cheap LCG trace
+            let loads: Vec<u64> = (0..8)
+                .map(|_| {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    x >> 56
+                })
+                .collect();
+            a.observe(&loads);
+            b.observe(&loads);
+        }
+        assert_eq!(a.ema(), b.ema());
+        assert_eq!(a.hot(), b.hot());
+        assert_eq!(a.cold(), b.cold());
+    }
+}

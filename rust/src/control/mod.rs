@@ -1,0 +1,206 @@
+//! Placement controller: the slow loop of a two-timescale load-balancing
+//! system (ROADMAP item 3, the Pro-Prophet-style replication/migration
+//! layer the paper positions LPP scheduling inside).
+//!
+//! The fast loop is the per-micro-batch LPP token scheduler; it rebalances
+//! *tokens* against a fixed replica placement and runs every step. This
+//! module adds the slow loop: every `interval` steps the controller looks
+//! at smoothed per-expert load, decides whether the *placement itself* has
+//! gone stale, and — when the predicted Eq.-3 density gain beats the
+//! migration bill — replicates hot experts, evicting cold replicas when
+//! slots run out:
+//!
+//! ```text
+//!            per step (fast)                every N steps (slow)
+//!   loads ──► LPP schedule ──► plans   loads ──► EWMA + hysteresis
+//!                 ▲                               │ hot/cold experts
+//!                 │ placement                     ▼
+//!            ┌────┴─────┐   replicate/evict  ┌─────────┐
+//!            │ Placement│ ◄─────────────────┤  decide  │
+//!            └──────────┘  (budgeted moves,  └─────────┘
+//!                           predicted gain
+//!                           vs migration time)
+//! ```
+//!
+//! The pieces:
+//!
+//! * [`detect`] — [`LoadDetector`]: per-expert EWMA of load *shares* with
+//!   dual hysteresis state machines (enter/exit thresholds plus a dwell
+//!   requirement) flagging persistently hot and cold experts without
+//!   flapping on transient spikes.
+//! * [`decide`] — [`decide::decide`]: greedy replicate/evict proposals
+//!   scored by the exact/approx Eq.-3 density evaluators
+//!   ([`crate::placement::graph`]) against
+//!   [`crate::cluster::migration::migration_time`] under the topology's
+//!   link bandwidths, subject to a per-tick downtime budget and move cap.
+//! * [`apply`] — [`ControlledLppBalancer`]: a [`crate::balancer::Balancer`]
+//!   that executes committed decisions through
+//!   [`crate::cluster::migration::placement_diff`], charges the downtime
+//!   into the step's prep time ([`crate::stats::ControlStats`]), emits
+//!   [`crate::obs::Span::PlacementChange`] trace spans, rebuilds the warm
+//!   scheduler bases *of the affected layers only*, and re-plans.
+//!
+//! Determinism: the detector observes the raw per-layer input loads
+//! (before any scheduling), so for a fixed spec, seed, and load trace the
+//! decision sequence is a pure function of the trace — independent of
+//! scheduler threading or engine worker counts. At ≤16 GPUs the density
+//! evaluator takes the exact path and never consumes randomness, which is
+//! what lets `tests/golden_controller.rs` replay the Python reference
+//! bit-exactly.
+
+pub mod apply;
+pub mod decide;
+pub mod detect;
+
+pub use apply::ControlledLppBalancer;
+pub use decide::{decide, Decision};
+pub use detect::LoadDetector;
+
+use crate::cluster::migration::expert_bytes;
+
+/// Tuning knobs of the slow placement-control loop. All fields are plain
+/// scalars so the spec round-trips through the [`crate::config`] JSON
+/// registry and compares exactly; the [`crate::cluster::CostModel`] used
+/// to price migrations is supplied separately (builder override or the
+/// H100 testbed default).
+///
+/// Thresholds are expressed as multiples of the uniform share `1/E`
+/// (`E` = expert count): `hot_enter = 2.0` means "flag an expert hot once
+/// its smoothed load share has exceeded twice the uniform share for
+/// `dwell` consecutive steps".
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControlSpec {
+    /// Steps between control ticks (the slow-loop period).
+    pub interval: usize,
+    /// EWMA smoothing factor for per-expert load shares, in `(0, 1]`.
+    pub ema_alpha: f64,
+    /// Hot-entry threshold, × uniform share. Must exceed `hot_exit`.
+    pub hot_enter: f64,
+    /// Hot-exit threshold, × uniform share (the hysteresis band floor).
+    pub hot_exit: f64,
+    /// Cold-entry threshold, × uniform share. Must be below `cold_exit`.
+    pub cold_enter: f64,
+    /// Cold-exit threshold, × uniform share (the hysteresis band ceiling).
+    pub cold_exit: f64,
+    /// Consecutive threshold-crossing steps required to flip a state.
+    pub dwell: usize,
+    /// Migration-downtime budget per control tick, seconds. Decisions
+    /// whose [`crate::cluster::migration::migration_time`] exceeds it are
+    /// rejected (note the 50 ms re-init floor: budgets below that block
+    /// every migration).
+    pub budget_seconds: f64,
+    /// Maximum replica copies per decision.
+    pub max_moves: usize,
+    /// Minimum *relative* predicted density gain (fraction of the current
+    /// Eq.-3 density) below which a proposal is dropped — keeps the
+    /// controller from thrashing on noise-level improvements.
+    pub min_gain: f64,
+    /// Bytes migrated per expert replica (params + optimizer state);
+    /// defaults to the GPT-32×1.3B expert of the paper's Table 2. A
+    /// session-level `migration_cost(model, bytes)` override replaces it.
+    pub bytes_per_expert: u64,
+    /// Extra replica slots per GPU the controller may use beyond the
+    /// initial placement's deepest GPU.
+    pub slot_headroom: usize,
+}
+
+impl Default for ControlSpec {
+    fn default() -> Self {
+        ControlSpec {
+            interval: 16,
+            ema_alpha: 0.25,
+            hot_enter: 2.0,
+            hot_exit: 1.5,
+            cold_enter: 0.5,
+            cold_exit: 0.75,
+            dwell: 4,
+            budget_seconds: 0.5,
+            max_moves: 8,
+            min_gain: 0.01,
+            bytes_per_expert: expert_bytes(2048, 8192, true),
+            slot_headroom: 1,
+        }
+    }
+}
+
+impl ControlSpec {
+    /// Check the spec's internal consistency (threshold ordering, positive
+    /// periods/budgets). Returns a human-readable reason on failure; the
+    /// session builder surfaces it as
+    /// [`crate::balancer::SessionError::Invalid`].
+    pub fn validate(&self) -> Result<(), String> {
+        if self.interval == 0 {
+            return Err("control interval must be >= 1 step".into());
+        }
+        if !(self.ema_alpha > 0.0 && self.ema_alpha <= 1.0) {
+            return Err(format!("ema_alpha {} outside (0, 1]", self.ema_alpha));
+        }
+        if !(self.hot_enter > self.hot_exit) {
+            return Err(format!(
+                "hot_enter {} must exceed hot_exit {} (hysteresis band)",
+                self.hot_enter, self.hot_exit
+            ));
+        }
+        if !(self.cold_exit > self.cold_enter) {
+            return Err(format!(
+                "cold_exit {} must exceed cold_enter {} (hysteresis band)",
+                self.cold_exit, self.cold_enter
+            ));
+        }
+        if !(self.cold_exit <= self.hot_exit) {
+            return Err(format!(
+                "cold_exit {} must not exceed hot_exit {} (an expert cannot \
+                 be hot and cold at once)",
+                self.cold_exit, self.hot_exit
+            ));
+        }
+        if self.dwell == 0 {
+            return Err("dwell must be >= 1 step".into());
+        }
+        if !(self.budget_seconds > 0.0) {
+            return Err(format!("budget_seconds {} must be positive", self.budget_seconds));
+        }
+        if self.max_moves == 0 {
+            return Err("max_moves must be >= 1".into());
+        }
+        if !(self.min_gain >= 0.0) {
+            return Err(format!("min_gain {} must be >= 0", self.min_gain));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_spec_is_valid() {
+        ControlSpec::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_inverted_bands() {
+        let mut s = ControlSpec { hot_enter: 1.0, ..Default::default() };
+        assert!(s.validate().is_err(), "hot_enter <= hot_exit must fail");
+        s = ControlSpec { cold_enter: 0.9, ..Default::default() };
+        assert!(s.validate().is_err(), "cold_enter >= cold_exit must fail");
+        s = ControlSpec { cold_exit: 1.6, ..Default::default() };
+        assert!(s.validate().is_err(), "overlapping hot/cold bands must fail");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_periods() {
+        for bad in [
+            ControlSpec { interval: 0, ..Default::default() },
+            ControlSpec { dwell: 0, ..Default::default() },
+            ControlSpec { max_moves: 0, ..Default::default() },
+            ControlSpec { ema_alpha: 0.0, ..Default::default() },
+            ControlSpec { ema_alpha: 1.5, ..Default::default() },
+            ControlSpec { budget_seconds: 0.0, ..Default::default() },
+            ControlSpec { min_gain: -0.1, ..Default::default() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} should be rejected");
+        }
+    }
+}

@@ -7,7 +7,8 @@
 //!
 //! * **Layer 3 (this crate)** — the paper's contribution: per-micro-batch
 //!   token scheduling via linear programming ([`scheduler`]), expert
-//!   placement theory ([`placement`]), adaptive replacement ([`adaptive`]),
+//!   placement theory ([`placement`]), adaptive replacement ([`adaptive`])
+//!   with its two-timescale placement controller ([`control`]),
 //!   plus every substrate the paper depends on (LP solver [`lp`], cluster
 //!   model [`cluster`], baselines [`baselines`], workloads [`workload`]).
 //!   The public surface is the step-driven [`balancer::Balancer`] trait and
@@ -30,6 +31,7 @@ pub mod bench_harness;
 pub mod cli;
 pub mod cluster;
 pub mod config;
+pub mod control;
 pub mod engine;
 pub mod faults;
 pub mod lp;

@@ -63,6 +63,16 @@ fn args(span: &Span) -> Json {
             ("worker", Json::Num(*worker as f64)),
             ("attempt", Json::Num(*attempt as f64)),
         ]),
+        Span::PlacementChange { step, tick, moves, bytes, predicted_gain, downtime } => {
+            Json::obj(vec![
+                ("step", Json::Num(*step as f64)),
+                ("tick", Json::Num(*tick as f64)),
+                ("moves", Json::Num(*moves as f64)),
+                ("bytes", Json::Num(*bytes as f64)),
+                ("predicted_gain", Json::num(*predicted_gain)),
+                ("downtime", Json::num(*downtime)),
+            ])
+        }
     }
 }
 

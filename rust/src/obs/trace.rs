@@ -165,6 +165,25 @@ pub enum Span {
         /// Consecutive respawn attempt (1-based).
         attempt: usize,
     },
+    /// One committed placement change by the slow control loop
+    /// ([`crate::control`]): the session migrated expert replicas and
+    /// rebuilt the affected layers' warm scheduler bases. Emitted once per
+    /// decision, so placement-change span counts and their `moves` sums
+    /// reconcile exactly with [`crate::stats::ControlStats`].
+    PlacementChange {
+        /// Step index at which the change was applied.
+        step: usize,
+        /// Control tick that produced the decision (1-based).
+        tick: usize,
+        /// Replica copies executed ([`crate::cluster::migration::Move`]s).
+        moves: usize,
+        /// Expert-parameter bytes migrated.
+        bytes: u64,
+        /// Predicted Eq.-3 density improvement at decision time.
+        predicted_gain: f64,
+        /// Migration downtime charged into the step, seconds.
+        downtime: f64,
+    },
 }
 
 impl Span {
@@ -176,6 +195,7 @@ impl Span {
             Span::DecomposeRound { .. } => "decompose_round",
             Span::ServingWindow { .. } => "serving_window",
             Span::WorkerRespawn { .. } => "worker_respawn",
+            Span::PlacementChange { .. } => "placement_change",
         }
     }
 
@@ -189,6 +209,7 @@ impl Span {
             Span::DecomposeRound { block, .. } => 200 + *block as u64,
             Span::ServingWindow { .. } => 300,
             Span::WorkerRespawn { worker, .. } => 100 + *worker as u64,
+            Span::PlacementChange { .. } => 400,
         }
     }
 }
@@ -441,5 +462,15 @@ mod tests {
         let r = Span::WorkerRespawn { worker: 2, attempt: 1 };
         assert_eq!(r.name(), "worker_respawn");
         assert_eq!(r.lane(), 102);
+        let p = Span::PlacementChange {
+            step: 8,
+            tick: 2,
+            moves: 3,
+            bytes: 1 << 20,
+            predicted_gain: 12.5,
+            downtime: 0.06,
+        };
+        assert_eq!(p.name(), "placement_change");
+        assert_eq!(p.lane(), 400);
     }
 }

@@ -125,7 +125,9 @@ pub fn asymmetric_placement(
             best = Some((d, p));
         }
     }
-    best.expect("no feasible placement sampled").1
+    let p = best.expect("no feasible placement sampled").1;
+    p.validate().expect("Monte-Carlo search produced an invalid placement");
+    p
 }
 
 #[cfg(test)]

@@ -150,6 +150,50 @@ impl Placement {
         Ok(())
     }
 
+    /// Full structural validation: shape invariants plus the B.3 slot
+    /// consistency of [`Placement::check_consistency`]. This is the gate
+    /// every search/controller output passes through before a placement is
+    /// handed to a scheduler — `from_replicas` establishes the invariants,
+    /// `validate` proves an arbitrary (possibly hand-assembled or mutated)
+    /// placement still satisfies them.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.replicas.len() != self.num_experts {
+            return Err(format!(
+                "replicas has {} groups for {} experts",
+                self.replicas.len(),
+                self.num_experts
+            ));
+        }
+        if self.local_slots.len() != self.num_gpus {
+            return Err(format!(
+                "local_slots has {} rows for {} GPUs",
+                self.local_slots.len(),
+                self.num_gpus
+            ));
+        }
+        for (e, grp) in self.replicas.iter().enumerate() {
+            if grp.is_empty() {
+                return Err(format!("expert {e} has no replicas"));
+            }
+            if !grp.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("expert {e} replica group not sorted/deduped"));
+            }
+            if *grp.last().unwrap() >= self.num_gpus {
+                return Err(format!("expert {e} replica GPU out of range"));
+            }
+        }
+        // every replica must actually occupy a slot on its GPU (B.3 check
+        // below then proves it is the *same* slot everywhere)
+        for (e, grp) in self.replicas.iter().enumerate() {
+            for &g in grp {
+                if !self.local_slots[g].contains(&Some(e)) {
+                    return Err(format!("expert {e} listed on GPU {g} but holds no slot"));
+                }
+            }
+        }
+        self.check_consistency()
+    }
+
     /// Vanilla-EP placement for reference/baselines: expert `e` lives on EP
     /// rank `e / experts_per_gpu` of *every* EP group in the MicroEP scope —
     /// identical placement per EP group, so EDP groups never intersect
@@ -239,6 +283,37 @@ mod tests {
     #[should_panic(expected = "duplicate")]
     fn duplicate_gpu_rejected() {
         Placement::from_replicas(4, vec![vec![1, 1]]);
+    }
+
+    #[test]
+    fn validate_accepts_constructed_and_rejects_mutated() {
+        let p = Placement::from_replicas(
+            4,
+            vec![vec![0, 3], vec![0, 1], vec![1, 2], vec![2, 3]],
+        );
+        p.validate().unwrap();
+
+        // break B.3: move expert 0's replica on GPU 3 to a different slot
+        let mut broken = p.clone();
+        let s = broken.slot_of(0).unwrap();
+        broken.local_slots[3][s] = None;
+        broken.local_slots[3].push(Some(0));
+        assert!(broken.validate().is_err(), "slot-inconsistent placement must fail");
+
+        // break residency: a slot holding an expert not replicated there
+        let mut ghost = p.clone();
+        ghost.local_slots[0].push(Some(2));
+        assert!(ghost.validate().is_err(), "non-resident occupant must fail");
+
+        // break shape: unsorted replica group
+        let mut unsorted = p.clone();
+        unsorted.replicas[1] = vec![1, 0];
+        assert!(unsorted.validate().is_err(), "unsorted group must fail");
+
+        // break coverage: replica listed without any slot
+        let mut missing = p;
+        missing.replicas[2].push(3);
+        assert!(missing.validate().is_err(), "slotless replica must fail");
     }
 
     #[test]

@@ -711,6 +711,57 @@ impl DecomposeStats {
     }
 }
 
+/// Placement-controller meters from the slow loop of the two-timescale
+/// system ([`crate::control`]): how many control ticks evaluated the
+/// placement, how many produced a decision, what the decisions moved
+/// (replica copies, bytes, charged downtime), and how the predicted Eq.-3
+/// density gain compared with the realized one. Zero for sessions without
+/// a controller. Aggregated per step in [`StepStats`] and over a
+/// balancer's lifetime in [`BalancerStats`]; the chaos suite and the
+/// trace-reconciliation test pin `moves` against the placement-change
+/// spans exactly.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ControlStats {
+    /// Control ticks that ran the detector/decider (every N steps).
+    pub ticks: u64,
+    /// Ticks that committed a placement change (decisions taken).
+    pub decisions: u64,
+    /// Replica copies executed across all decisions.
+    pub moves: u64,
+    /// Expert-parameter bytes migrated across all decisions.
+    pub bytes: u64,
+    /// Migration downtime charged into step prep time, seconds.
+    pub downtime: f64,
+    /// Sum of predicted Eq.-3 density improvements at decision time.
+    pub predicted_gain: f64,
+    /// Sum of realized density improvements, measured on the first
+    /// post-migration load matrix against the old placement.
+    pub realized_gain: f64,
+}
+
+impl ControlStats {
+    /// Fold another accumulator into this one.
+    pub fn absorb(&mut self, other: &ControlStats) {
+        self.ticks += other.ticks;
+        self.decisions += other.decisions;
+        self.moves += other.moves;
+        self.bytes += other.bytes;
+        self.downtime += other.downtime;
+        self.predicted_gain += other.predicted_gain;
+        self.realized_gain += other.realized_gain;
+    }
+
+    /// Mean realized/predicted gain ratio (1.0 when nothing was predicted —
+    /// an idle controller has not mispredicted).
+    pub fn gain_accuracy(&self) -> f64 {
+        if self.predicted_gain <= 0.0 {
+            1.0
+        } else {
+            self.realized_gain / self.predicted_gain
+        }
+    }
+}
+
 /// Unified per-step scheduling diagnostics reported by every
 /// [`crate::balancer::Balancer`] in its
 /// [`crate::balancer::StepOutput`]. Static systems (vanilla EP, padding)
@@ -742,6 +793,9 @@ pub struct StepStats {
     /// Decomposition meters for the step's layers; zero unless the policy
     /// runs [`crate::scheduler::ScheduleMode::Decomposed`].
     pub decompose: DecomposeStats,
+    /// Placement-controller meters for the step; zero unless the session
+    /// runs the [`crate::control`] slow loop.
+    pub control: ControlStats,
 }
 
 /// Cumulative counters over a [`crate::balancer::Balancer`]'s lifetime
@@ -773,6 +827,8 @@ pub struct BalancerStats {
     pub degradation: DegradationStats,
     /// Cumulative decomposition meters (decomposed-mode policies only).
     pub decompose: DecomposeStats,
+    /// Cumulative placement-controller meters (controller sessions only).
+    pub control: ControlStats,
 }
 
 impl BalancerStats {
@@ -790,6 +846,7 @@ impl BalancerStats {
         self.max_gpu_load = self.max_gpu_load.max(step.max_gpu_load);
         self.degradation.absorb(&step.degradation);
         self.decompose.absorb(&step.decompose);
+        self.control.absorb(&step.control);
     }
 
     /// Mean scheduling seconds per executed step (0 before the first).
@@ -1020,6 +1077,43 @@ mod tests {
         let mut bal = BalancerStats::default();
         bal.absorb(&StepStats { decompose: a, ..Default::default() });
         assert_eq!(bal.decompose, a);
+    }
+
+    #[test]
+    fn control_stats_absorb_and_gain_accuracy() {
+        let a = ControlStats {
+            ticks: 4,
+            decisions: 2,
+            moves: 5,
+            bytes: 1_000,
+            downtime: 0.25,
+            predicted_gain: 40.0,
+            realized_gain: 30.0,
+        };
+        let b = ControlStats {
+            ticks: 1,
+            decisions: 1,
+            moves: 2,
+            bytes: 500,
+            downtime: 0.05,
+            predicted_gain: 10.0,
+            realized_gain: 15.0,
+        };
+        let mut sum = ControlStats::default();
+        assert_eq!(sum.gain_accuracy(), 1.0, "idle controller has not mispredicted");
+        sum.absorb(&a);
+        sum.absorb(&b);
+        assert_eq!(sum.ticks, 5);
+        assert_eq!(sum.decisions, 3);
+        assert_eq!(sum.moves, 7);
+        assert_eq!(sum.bytes, 1_500);
+        assert!((sum.downtime - 0.30).abs() < 1e-12);
+        assert!((sum.gain_accuracy() - 0.9).abs() < 1e-12);
+
+        // StepStats absorption carries the meters into BalancerStats
+        let mut bal = BalancerStats::default();
+        bal.absorb(&StepStats { control: a, ..Default::default() });
+        assert_eq!(bal.control, a);
     }
 
     #[test]

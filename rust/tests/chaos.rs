@@ -382,6 +382,80 @@ fn respawn_spans_mark_each_recovery() {
     assert_eq!(ids.len(), evs.len(), "span ids must survive respawn uniquely");
 }
 
+/// Placement controller under chaos (ISSUE-10): scheduler-level faults and
+/// a (barrier-inert) worker panic strike a controller-enabled session while
+/// migrations land mid-run. Every step must stay feasible, and the control
+/// loop must be completely blind to the faults — `ControlStats` is driven
+/// by the raw load trace alone, so a faulted run and a fault-free run make
+/// bit-identical placement decisions while their scheduling rungs diverge.
+#[test]
+fn controller_chaos_faults_steer_scheduling_never_control() {
+    use micromoe::cluster::CostModel;
+    use micromoe::control::ControlSpec;
+
+    const STEPS: usize = 16;
+    const LAYERS: usize = 2;
+    // all scheduler-level slots fire before the first control tick (step 4)
+    // so they cannot be skipped by a placement-change scheduler rebuild
+    // (a rebuilt layer restarts its fault clock); the WorkerPanic slot must
+    // be inert — the barrier engine has no workers to kill
+    let faults = vec![
+        (1, 0, Fault::NanLoads),
+        (2, 1, Fault::ForceInfeasible),
+        (2, 0, Fault::WorkerPanic { persistent: false }),
+        (3, 0, Fault::BudgetStarvation),
+    ];
+    let spec = ControlSpec { interval: 4, dwell: 2, ..Default::default() };
+    let build = |plan: Option<FaultPlan>| {
+        let opts = SchedulerOptions { faults: plan.map(Arc::new), ..Default::default() };
+        MoeSession::builder()
+            .topology(topo())
+            .experts(EXPERTS)
+            .policy_name("micromoe")
+            .options(opts)
+            .layers(LAYERS)
+            .control(spec.clone())
+            .migration_cost(CostModel::h100_testbed(), 1 << 22)
+            .build()
+            .expect("controlled chaos session builds")
+    };
+    let mut chaos = build(Some(FaultPlan::with_faults(faults)));
+    let mut clean = build(None);
+    assert!(chaos.engine_stats().is_none(), "controller runs on the barrier engine");
+
+    for step in 0..STEPS {
+        let loads: Vec<LoadMatrix> = (0..LAYERS)
+            .map(|l| zipf_lm(0xC0DE ^ (step * LAYERS + l) as u64, 900, 1.4))
+            .collect();
+        let a = chaos.step(&loads);
+        let b = clean.step(&loads);
+        assert_step_feasible(&a, &loads, step);
+        assert_step_feasible(&b, &loads, step);
+        // identical control accounting step by step, faults or not
+        assert_eq!(a.stats.control, b.stats.control, "step {step}: control diverged");
+    }
+
+    let (sa, sb) = (chaos.stats(), clean.stats());
+    assert_eq!(sa.control, sb.control, "faults must never steer the controller");
+    assert_eq!(sa.control.ticks, (STEPS / 4) as u64, "one tick per interval");
+    assert!(sa.control.decisions > 0, "zipf 1.4 skew must trigger migrations: {:?}", sa.control);
+    assert!(sa.control.downtime > 0.0 && sa.control.bytes > 0, "{:?}", sa.control);
+
+    // scheduling, by contrast, must have degraded exactly where injected:
+    // the three scheduler faults land on the greedy rung (possibly again on
+    // a rebuilt layer's restarted fault clock), the panic slot is a no-op
+    let (da, db) = (sa.degradation, sb.degradation);
+    assert_eq!(da.total(), (STEPS * LAYERS) as u64, "one rung per layer per step: {da:?}");
+    assert_eq!(db.total(), (STEPS * LAYERS) as u64, "{db:?}");
+    assert!(da.greedy >= 3, "injected scheduler faults must hit the greedy rung: {da:?}");
+    assert_eq!(db.greedy, 0, "fault-free run must stay on the LP rungs: {db:?}");
+    assert_eq!(da.passthrough, 0, "barrier mode has no workers to lose: {da:?}");
+    assert_eq!(db.passthrough, 0, "{db:?}");
+    // warm-basis invalidation is controller-driven and thus identical:
+    // initial cold solves plus exactly one per placement decision
+    assert_eq!(db.cold_lp, LAYERS as u64 + sb.control.decisions, "{db:?}");
+}
+
 fn used_gpus(p: &Placement) -> usize {
     let mut used = vec![false; p.num_gpus];
     for grp in &p.replicas {

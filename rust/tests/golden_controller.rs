@@ -1,0 +1,206 @@
+//! Golden test: the rust placement controller vs its python reference.
+//!
+//! `python/tools/controller_reference.py` transliterates the controller's
+//! decision path — [`LoadDetector`]'s EWMA + dual hysteresis, the exact
+//! Eq.-3 density enumeration, `placement_diff` / `migration_time` and the
+//! greedy replicate/evict [`decide`] loop — self-tests it against numpy,
+//! and records drift-regime load traces (stationary, sudden shift,
+//! oscillation held off by hysteresis, move-capped, eviction-forced,
+//! rotating drift, budget-starved) with every control tick's decision in
+//! `tests/golden_controller.json`. Replaying the traces here must
+//! reproduce every decision **bit-exactly**: the two implementations
+//! mirror each other operation for operation, python floats are IEEE
+//! doubles, the fixture's 8-GPU scale keeps the density evaluator on the
+//! exact (rng-free) path, and `json.dump`'s shortest-roundtrip floats
+//! survive rust's correctly-rounded `str::parse::<f64>` unchanged.
+//!
+//! This is also the worker-count-independence proof for the controller:
+//! the replay drives the detector + decider with nothing but the raw load
+//! trace, and `ControlledLppBalancer` feeds them exactly that — so
+//! decisions cannot depend on scheduler threading or engine workers.
+//!
+//! The fixture is committed; a missing file is a hard failure (regenerate
+//! with the tool above and commit the result).
+
+use micromoe::cluster::CostModel;
+use micromoe::control::{decide, ControlSpec, LoadDetector};
+use micromoe::placement::Placement;
+use micromoe::rng::Rng;
+use micromoe::ser::Json;
+use micromoe::topology::Topology;
+
+fn fixture() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_controller.json");
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!(
+            "{path} missing ({e}) — regenerate with \
+             python/tools/controller_reference.py and commit"
+        )
+    });
+    Json::parse(&text).unwrap()
+}
+
+fn usize_vec(j: &Json) -> Vec<usize> {
+    j.as_arr().unwrap().iter().map(|x| x.as_usize().unwrap()).collect()
+}
+
+fn spec_from_json(j: &Json) -> ControlSpec {
+    let f = |k: &str| j.get(k).unwrap().as_f64().unwrap();
+    let u = |k: &str| j.get(k).unwrap().as_usize().unwrap();
+    ControlSpec {
+        interval: u("interval"),
+        ema_alpha: f("ema_alpha"),
+        hot_enter: f("hot_enter"),
+        hot_exit: f("hot_exit"),
+        cold_enter: f("cold_enter"),
+        cold_exit: f("cold_exit"),
+        dwell: u("dwell"),
+        budget_seconds: f("budget_seconds"),
+        max_moves: u("max_moves"),
+        min_gain: f("min_gain"),
+        bytes_per_expert: f("bytes_per_expert") as u64,
+        slot_headroom: u("slot_headroom"),
+    }
+}
+
+#[test]
+fn controller_matches_python_reference() {
+    let fx = fixture();
+    let scenarios = fx.get("scenarios").unwrap().as_arr().unwrap();
+    assert!(scenarios.len() >= 4, "suspiciously few controller scenarios");
+    let (mut decided, mut quiet) = (0u64, 0u64);
+    for sc in scenarios {
+        let name = sc.get("name").unwrap().as_str().unwrap();
+        let experts = sc.get("experts").unwrap().as_usize().unwrap();
+        let gpus = sc.get("gpus").unwrap().as_usize().unwrap();
+        let t = usize_vec(sc.get("topo").unwrap());
+        let topo = Topology::new(t[0], t[1], t[2], t[3]);
+        let slot_budget = sc.get("slot_budget").unwrap().as_usize().unwrap();
+        let spec = spec_from_json(sc.get("spec").unwrap());
+        spec.validate().unwrap();
+        let model = CostModel::h100_testbed();
+
+        let initial: Vec<Vec<usize>> = sc
+            .get("initial_replicas")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(usize_vec)
+            .collect();
+        let mut current = Placement::from_replicas(gpus, initial);
+        current.validate().unwrap();
+        let mut det = LoadDetector::new(experts, &spec);
+        // never consumed: 8 GPUs stay on the exact density path
+        let mut rng = Rng::new(0);
+
+        let loads = sc.get("loads").unwrap().as_arr().unwrap();
+        let ticks = sc.get("ticks").unwrap().as_arr().unwrap();
+        let mut ti = 0usize;
+        for (i, row) in loads.iter().enumerate() {
+            let step_loads: Vec<u64> = row
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_f64().unwrap() as u64)
+                .collect();
+            assert_eq!(step_loads.len(), experts, "{name}: fixture load row shape");
+            det.observe(&step_loads);
+            let step = i + 1;
+            if step % spec.interval != 0 {
+                continue;
+            }
+            let tick = &ticks[ti];
+            assert_eq!(
+                tick.get("step").unwrap().as_usize().unwrap(),
+                step,
+                "{name}: tick schedule diverged"
+            );
+            let dec = decide(&current, &det, &topo, &model, &spec, slot_budget, &mut rng);
+            let want = tick.get("decision").unwrap();
+            match dec {
+                None => {
+                    assert_eq!(want, &Json::Null, "{name} step {step}: reference decided, rust did not");
+                    quiet += 1;
+                }
+                Some(d) => {
+                    assert_ne!(
+                        want,
+                        &Json::Null,
+                        "{name} step {step}: rust decided, reference did not"
+                    );
+                    let want_replicas: Vec<Vec<usize>> =
+                        want.get("replicas").unwrap().as_arr().unwrap().iter().map(usize_vec).collect();
+                    assert_eq!(d.placement.replicas, want_replicas, "{name} step {step}: placement");
+                    let want_moves: Vec<Vec<usize>> =
+                        want.get("moves").unwrap().as_arr().unwrap().iter().map(usize_vec).collect();
+                    let got_moves: Vec<Vec<usize>> =
+                        d.moves.iter().map(|m| vec![m.expert, m.dst, m.src]).collect();
+                    assert_eq!(got_moves, want_moves, "{name} step {step}: move list");
+                    // accounting floats must match to the bit — python and
+                    // rust perform the identical IEEE operation sequence
+                    let want_gain = want.get("predicted_gain").unwrap().as_f64().unwrap();
+                    assert_eq!(
+                        d.predicted_gain.to_bits(),
+                        want_gain.to_bits(),
+                        "{name} step {step}: predicted_gain {} vs reference {want_gain}",
+                        d.predicted_gain
+                    );
+                    let want_dt = want.get("downtime").unwrap().as_f64().unwrap();
+                    assert_eq!(
+                        d.downtime.to_bits(),
+                        want_dt.to_bits(),
+                        "{name} step {step}: downtime {} vs reference {want_dt}",
+                        d.downtime
+                    );
+                    assert_eq!(d.bytes, want.get("bytes").unwrap().as_f64().unwrap() as u64);
+                    assert_eq!(d.replications, want.get("replications").unwrap().as_usize().unwrap());
+                    assert_eq!(d.evictions, want.get("evictions").unwrap().as_usize().unwrap());
+                    d.placement.validate().unwrap();
+                    current = d.placement;
+                    decided += 1;
+                }
+            }
+            ti += 1;
+        }
+        assert_eq!(ti, ticks.len(), "{name}: fixture has unreplayed ticks");
+
+        // final detector state, bit for bit
+        let fin = sc.get("final").unwrap();
+        let want_ema: Vec<f64> = fin
+            .get("ema")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        assert_eq!(det.ema().len(), want_ema.len(), "{name}: final EWMA shape");
+        for (e, (a, w)) in det.ema().iter().zip(&want_ema).enumerate() {
+            assert_eq!(a.to_bits(), w.to_bits(), "{name}: final EWMA[{e}] {a} vs reference {w}");
+        }
+        let want_hot: Vec<bool> = fin
+            .get("hot")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_bool().unwrap())
+            .collect();
+        assert_eq!(det.hot(), &want_hot[..], "{name}: final hot flags");
+        let want_cold: Vec<bool> = fin
+            .get("cold")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_bool().unwrap())
+            .collect();
+        assert_eq!(det.cold(), &want_cold[..], "{name}: final cold flags");
+        assert_eq!(det.observed(), fin.get("observed").unwrap().as_usize().unwrap(), "{name}");
+    }
+    assert!(
+        decided > 0 && quiet > 0,
+        "fixture no longer exercises both outcomes (decided {decided}, quiet {quiet})"
+    );
+}

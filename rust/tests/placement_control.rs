@@ -1,0 +1,246 @@
+//! ISSUE-10 acceptance: the two-timescale placement controller on drifting
+//! Zipf traffic.
+//!
+//! * the controlled session achieves strictly lower mean imbalance than
+//!   the static-placement session, and wins on *net* step time — FFN
+//!   compute plus every second of charged migration downtime;
+//! * migration downtime is charged honestly (`ControlStats::downtime`
+//!   equals the `prep_extra` the plans carry);
+//! * controller runs are bit-deterministic end to end;
+//! * `Span::PlacementChange` trace spans reconcile exactly with
+//!   `ControlStats`, and a standalone detector+decider replay of the raw
+//!   load trace — no scheduling involved at all — reproduces the
+//!   balancer's decision stream span for span, which is the
+//!   worker-count-independence argument in executable form (decisions are
+//!   a pure function of the load trace, spec, and seed).
+
+use micromoe::balancer::{Balancer, MoeSession, StepInput};
+use micromoe::cluster::CostModel;
+use micromoe::control::{decide, ControlSpec, ControlledLppBalancer, LoadDetector};
+use micromoe::obs::{Span, TraceConfig, Tracer};
+use micromoe::placement::cayley::symmetric_placement;
+use micromoe::rng::Rng;
+use micromoe::scheduler::{LoadMatrix, SchedulerOptions};
+use micromoe::topology::Topology;
+use micromoe::workload::{DriftingWorkload, Workload};
+
+const EXPERTS: usize = 16;
+const GPUS: usize = 8;
+const TOKENS: u64 = 8192;
+const STEPS: usize = 96;
+const MIG_BYTES: u64 = 1 << 22;
+
+fn topo() -> Topology {
+    Topology::new(8, 4, 2, 4)
+}
+
+fn cspec() -> ControlSpec {
+    ControlSpec { interval: 8, dwell: 2, ..Default::default() }
+}
+
+/// Drifting Zipf trace: heavy skew (s=1.4) whose hot set rotates slowly.
+fn drift_trace(seed: u64) -> Vec<LoadMatrix> {
+    let mut wl = DriftingWorkload::new(EXPERTS, GPUS, TOKENS, 1.4, 32, seed);
+    (0..STEPS).map(|_| wl.next_batch()).collect()
+}
+
+fn controlled_session() -> MoeSession {
+    MoeSession::builder()
+        .topology(topo())
+        .experts(EXPERTS)
+        .policy_name("micromoe")
+        .layers(1)
+        .control(cspec())
+        .migration_cost(CostModel::h100_testbed(), MIG_BYTES)
+        .build()
+        .expect("controlled session builds")
+}
+
+fn static_session() -> MoeSession {
+    MoeSession::builder()
+        .topology(topo())
+        .experts(EXPERTS)
+        .policy_name("micromoe")
+        .layers(1)
+        .build()
+        .expect("static session builds")
+}
+
+/// max/mean GPU compute of a one-layer step.
+fn imbalance(gpu_compute: &[u64]) -> f64 {
+    let max = *gpu_compute.iter().max().unwrap();
+    let total: u64 = gpu_compute.iter().sum();
+    max as f64 * gpu_compute.len() as f64 / total as f64
+}
+
+/// The headline acceptance run: same seeded trace through both arms.
+/// The controller must beat static placement on mean imbalance AND on net
+/// step time = Σ ffn_time(max gpu load) + every charged downtime second.
+#[test]
+fn controller_beats_static_net_of_migration_downtime() {
+    let trace = drift_trace(0xA11CE);
+    let model = CostModel::h100_testbed();
+    let mut ctrl = controlled_session();
+    let mut stat = static_session();
+
+    let warmup = cspec().interval; // no decision can land before tick 1
+    let (mut imb_c, mut imb_s) = (0.0, 0.0);
+    let (mut time_c, mut time_s) = (0.0, 0.0);
+    let mut charged = 0.0;
+    for (i, lm) in trace.iter().enumerate() {
+        let loads = std::slice::from_ref(lm);
+        let oc = ctrl.step(loads);
+        let os = stat.step(loads);
+        for out in [&oc, &os] {
+            assert_eq!(
+                out.layers[0].gpu_compute.iter().sum::<u64>(),
+                lm.total(),
+                "step {i}: token conservation"
+            );
+        }
+        let (pc, ps) = (&oc.layers[0], &os.layers[0]);
+        // net step time: compute bottleneck + charged migration downtime
+        time_c += model.ffn_time(*pc.gpu_compute.iter().max().unwrap()) + pc.prep_extra;
+        time_s += model.ffn_time(*ps.gpu_compute.iter().max().unwrap()) + ps.prep_extra;
+        charged += pc.prep_extra;
+        assert_eq!(ps.prep_extra, 0.0, "static arm must never be charged downtime");
+        if i >= warmup {
+            imb_c += imbalance(&pc.gpu_compute);
+            imb_s += imbalance(&ps.gpu_compute);
+        }
+    }
+
+    let st = ctrl.stats();
+    assert!(st.control.decisions > 0, "drifting skew must trigger migrations: {:?}", st.control);
+    assert!(st.control.downtime > 0.0, "{:?}", st.control);
+    // honest accounting: every downtime second shows up as plan prep
+    assert!(
+        (charged - st.control.downtime).abs() <= 1e-12,
+        "charged {charged} != ControlStats downtime {}",
+        st.control.downtime
+    );
+    assert!(st.prep_seconds >= st.control.downtime - 1e-12, "prep must include downtime");
+
+    let n = (STEPS - warmup) as f64;
+    assert!(
+        imb_c / n < imb_s / n,
+        "controller imbalance {} must beat static {}",
+        imb_c / n,
+        imb_s / n
+    );
+    assert!(
+        time_c < time_s,
+        "controller net step time {time_c}s (incl. {charged}s downtime) must beat \
+         static {time_s}s"
+    );
+}
+
+/// Bit-determinism at the session level: identical trace, identical
+/// session → identical plans and identical control accounting, to the bit.
+#[test]
+fn controlled_sessions_are_bit_deterministic() {
+    let trace = drift_trace(0xD0_0D);
+    let run = || {
+        let mut s = controlled_session();
+        let mut computes = Vec::new();
+        for lm in &trace {
+            let out = s.step(std::slice::from_ref(lm));
+            computes.push(out.layers[0].gpu_compute.clone());
+        }
+        (computes, s.stats().control)
+    };
+    let (ca, sa) = run();
+    let (cb, sb) = run();
+    assert_eq!(ca, cb, "per-step GPU loads diverged between reruns");
+    assert_eq!(sa, sb, "control accounting diverged between reruns");
+    assert_eq!(sa.downtime.to_bits(), sb.downtime.to_bits());
+    assert_eq!(sa.predicted_gain.to_bits(), sb.predicted_gain.to_bits());
+    assert_eq!(sa.realized_gain.to_bits(), sb.realized_gain.to_bits());
+}
+
+/// Placement-change spans are the exact ledger of `ControlStats`, and a
+/// standalone detector+decider replay of the raw load trace reproduces
+/// them one for one — no scheduler state involved, proving the decision
+/// stream independent of how the fast loop runs.
+#[test]
+fn placement_spans_reconcile_with_stats_and_replay() {
+    let trace = drift_trace(0x5EED);
+    let spec = ControlSpec { bytes_per_expert: MIG_BYTES, ..cspec() };
+    let topo = topo();
+    let placement = symmetric_placement(&topo, EXPERTS);
+    let model = CostModel::h100_testbed();
+
+    let tracer = Tracer::new(TraceConfig::Wall);
+    let opts = SchedulerOptions { trace: tracer.clone(), ..Default::default() };
+    let mut b = ControlledLppBalancer::new(
+        placement.clone(),
+        topo.clone(),
+        opts,
+        1,
+        false,
+        spec.clone(),
+        model.clone(),
+        9,
+    );
+    for lm in &trace {
+        b.step(&StepInput { loads: std::slice::from_ref(lm) });
+    }
+    let st = b.stats().control;
+
+    let spans: Vec<(usize, usize, usize, u64, f64, f64)> = tracer
+        .events()
+        .into_iter()
+        .filter_map(|e| match e.span {
+            Span::PlacementChange { step, tick, moves, bytes, predicted_gain, downtime } => {
+                Some((step, tick, moves, bytes, predicted_gain, downtime))
+            }
+            _ => None,
+        })
+        .collect();
+
+    // spans ↔ stats, field by field
+    assert_eq!(spans.len() as u64, st.decisions, "one span per decision: {st:?}");
+    assert!(st.decisions > 0, "vacuous without decisions: {st:?}");
+    assert_eq!(spans.iter().map(|s| s.2 as u64).sum::<u64>(), st.moves);
+    assert_eq!(spans.iter().map(|s| s.3).sum::<u64>(), st.bytes);
+    let gain: f64 = spans.iter().map(|s| s.4).sum();
+    assert_eq!(gain.to_bits(), st.predicted_gain.to_bits(), "gain ledger");
+    let down: f64 = spans.iter().map(|s| s.5).sum();
+    assert_eq!(down.to_bits(), st.downtime.to_bits(), "downtime ledger");
+
+    // standalone replay: detector + decider on the raw loads, nothing else
+    let slot_budget =
+        (0..GPUS).map(|g| placement.slots_used(g)).max().unwrap() + spec.slot_headroom;
+    let mut det = LoadDetector::new(EXPERTS, &spec);
+    let mut current = placement;
+    let mut rng = Rng::new(0); // never consumed at 8 GPUs (exact density)
+    let mut si = 0usize;
+    let mut ticks = 0usize;
+    for (i, lm) in trace.iter().enumerate() {
+        det.observe(&lm.expert_loads());
+        let step = i + 1;
+        if step % spec.interval != 0 {
+            continue;
+        }
+        ticks += 1;
+        let Some(d) = decide(&current, &det, &topo, &model, &spec, slot_budget, &mut rng)
+        else {
+            continue;
+        };
+        let (s_step, s_tick, s_moves, s_bytes, s_gain, s_down) = spans[si];
+        assert_eq!(s_step, step, "replay decided at a different step");
+        assert_eq!(s_tick, ticks, "replay tick index");
+        assert_eq!(s_moves, d.moves.len(), "replay move count");
+        assert_eq!(s_bytes, d.bytes, "replay bytes");
+        assert_eq!(s_gain.to_bits(), d.predicted_gain.to_bits(), "replay gain");
+        assert_eq!(s_down.to_bits(), d.downtime.to_bits(), "replay downtime");
+        current = d.placement;
+        si += 1;
+    }
+    assert_eq!(si, spans.len(), "replay must account for every span");
+    // and the end states agree exactly
+    assert_eq!(b.placements()[0].replicas, current.replicas, "final placement");
+    let bal_ema: Vec<u64> = b.detector(0).ema().iter().map(|x| x.to_bits()).collect();
+    let rep_ema: Vec<u64> = det.ema().iter().map(|x| x.to_bits()).collect();
+    assert_eq!(bal_ema, rep_ema, "final detector EWMA");
+}

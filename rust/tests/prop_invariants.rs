@@ -171,6 +171,65 @@ fn prop_placement_generators_consistent() {
     });
 }
 
+/// `Placement::validate` accepts every generator's output and catches a
+/// random structural mutation of it (B.3 slot break, ghost occupant, or
+/// slotless replica).
+#[test]
+fn prop_validate_accepts_generators_rejects_mutations() {
+    forall("validate placements", 120, |rng, _| {
+        let p = match rng.below(3) {
+            0 => {
+                let g = [4, 8, 16][rng.below(3) as usize];
+                cayley_graph_placement(g, g * 2)
+            }
+            1 => random_small_placement(rng),
+            _ => {
+                let g = 4;
+                let e = 8;
+                let loads: Vec<f64> = (0..e).map(|_| rng.below(100) as f64 + 1.0).collect();
+                asymmetric_placement(g, &loads, 4, 10, rng)
+            }
+        };
+        p.validate().unwrap();
+
+        let mut broken = p.clone();
+        match rng.below(3) {
+            0 => {
+                // B.3 break: relocate one replica of an expert to a fresh slot
+                let e = rng.below(broken.num_experts as u64) as usize;
+                let s = broken.slot_of(e).unwrap();
+                let &g = broken.replicas[e].last().unwrap();
+                // only a break if the expert has >1 replica; otherwise
+                // moving its single slot keeps B.3 — force multi-replica
+                if broken.replicas[e].len() > 1 {
+                    broken.local_slots[g][s] = None;
+                    broken.local_slots[g].push(Some(e));
+                    assert!(broken.validate().is_err(), "moved slot must fail B.3");
+                }
+            }
+            1 => {
+                // ghost occupant: a slot holding an expert not placed there
+                let g = rng.below(broken.num_gpus as u64) as usize;
+                let e = (0..broken.num_experts).find(|&e| !broken.hosts(g, e));
+                if let Some(e) = e {
+                    broken.local_slots[g].push(Some(e));
+                    assert!(broken.validate().is_err(), "ghost occupant must fail");
+                }
+            }
+            _ => {
+                // slotless replica: list a GPU without giving it a slot
+                let e = rng.below(broken.num_experts as u64) as usize;
+                let extra = (0..broken.num_gpus).find(|&g| !broken.hosts(g, e));
+                if let Some(g) = extra {
+                    broken.replicas[e].push(g);
+                    broken.replicas[e].sort_unstable();
+                    assert!(broken.validate().is_err(), "slotless replica must fail");
+                }
+            }
+        }
+    });
+}
+
 /// Greedy replica counts: monotone in load (heavier experts never get
 /// fewer replicas) and always sum to the slot budget.
 #[test]
